@@ -1,0 +1,75 @@
+//! The paper's §6 future-work workload: LLM attention decode — a
+//! memory-bound matrix-vector workload with *no reuse*, where digital PIM
+//! finally wins. Compares tokens/s across the four systems for growing
+//! context lengths, and measures the real attention-decode artifact
+//! through PJRT.
+//!
+//! Run with: `cargo run --release --example attention_decode`
+
+use convpim::gpumodel::{GpuDtype, GpuSpec, Roofline};
+use convpim::pim::arch::PimArch;
+use convpim::pim::gates::GateSet;
+use convpim::pim::matpim::{scalar_costs, NumFmt};
+use convpim::pim::softfloat::Format;
+use convpim::runtime::Engine;
+use convpim::util::table::Table;
+use convpim::workloads::attention::{decode_workload, DecodeConfig};
+
+fn main() -> anyhow::Result<()> {
+    let gpu = Roofline::new(GpuSpec::a6000());
+    let arch = PimArch::paper(GateSet::MemristiveNor);
+    let fmt = NumFmt::Float(Format::FP32);
+    let c = scalar_costs(fmt, GateSet::MemristiveNor);
+    let mac_cycles = (c.mul_cycles + c.add_cycles) as f64;
+
+    println!("=== LLM decode (llama-7b-class, fp32): tokens/s per system ===\n");
+    let mut t = Table::new(&[
+        "context",
+        "GMACs/token",
+        "reuse FLOP/B",
+        "gpu exp tok/s",
+        "gpu theo tok/s",
+        "PIM tok/s",
+        "PIM wins exp GPU?",
+    ]);
+    for seq in [256u64, 1024, 4096, 16384] {
+        let w = decode_workload(DecodeConfig::llama7b(seq));
+        let exp = gpu.workload_flops(&w.roofline_layers(), GpuDtype::F32) / w.total_flops();
+        let theo = gpu.peak(GpuDtype::F32) / w.total_flops();
+        // PIM: weights/KV live in memory; every MAC is a vectored op at
+        // full row parallelism (same upper-bound model as the CNNs).
+        let pim = arch.total_rows() as f64 * arch.clock_hz / (w.total_macs() * mac_cycles);
+        t.row(vec![
+            seq.to_string(),
+            format!("{:.2}", w.total_macs() / 1e9),
+            format!("{:.2}", w.reuse()),
+            format!("{exp:.0}"),
+            format!("{theo:.0}"),
+            format!("{pim:.0}"),
+            (pim > exp).to_string(),
+        ]);
+    }
+    println!("{}", t.text());
+    println!(
+        "the paper's Figure 8 point: decode reuse (~0.5 FLOP/byte) pins the GPU to its memory\n\
+         roofline (~{:.1}% of peak), so even high-CC fp32 PIM arithmetic competes.\n",
+        100.0 / gpu.ridge_oi(GpuDtype::F32) * 0.5
+    );
+
+    match Engine::new() {
+        Ok(mut engine) => {
+            let exe = engine.load("attention_decode")?;
+            let inputs = exe.synth_inputs(3);
+            let run = exe.timed(&inputs, 5)?;
+            // 16 heads × 2048 cache × 64 dim × 2 matvecs × 2 FLOPs.
+            let flops = 16.0 * 2048.0 * 64.0 * 4.0;
+            println!(
+                "measured attention-decode artifact on XLA-CPU: {:.2} ms/token ({:.2} GFLOP/s — memory-bound here too)",
+                run.median_secs() * 1e3,
+                flops / run.median_secs() / 1e9
+            );
+        }
+        Err(e) => println!("(measured path skipped: {e:#})"),
+    }
+    Ok(())
+}

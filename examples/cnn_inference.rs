@@ -1,0 +1,76 @@
+//! CNN inference comparison (the paper's Figure 6 scenario) for one model
+//! across all four systems, plus a real measured forward pass through the
+//! PJRT runtime when artifacts are built.
+//!
+//! Run with: `cargo run --release --example cnn_inference [-- model]`
+//! where model ∈ {alexnet, googlenet, resnet50} (default resnet50).
+
+use convpim::gpumodel::{GpuDtype, GpuSpec, Roofline};
+use convpim::pim::arch::PimArch;
+use convpim::pim::gates::GateSet;
+use convpim::pim::matpim::{CnnPimModel, NumFmt};
+use convpim::pim::softfloat::Format;
+use convpim::runtime::Engine;
+use convpim::workloads::{models, LayerKind};
+
+fn main() -> anyhow::Result<()> {
+    let which = std::env::args().nth(1).unwrap_or_else(|| "resnet50".into());
+    let w = match which.as_str() {
+        "alexnet" => models::alexnet(),
+        "googlenet" => models::googlenet(),
+        "resnet50" | "resnet" => models::resnet50(),
+        other => anyhow::bail!("unknown model {other}"),
+    };
+
+    println!("=== {} ===", w.name);
+    println!(
+        "layers: {}   GMACs: {:.2}   params: {:.1}M   reuse: {:.1} FLOP/byte",
+        w.layers.len(),
+        w.total_macs() / 1e9,
+        w.total_params() / 1e6,
+        w.reuse()
+    );
+    let convs = w.layers.iter().filter(|l| l.kind == LayerKind::Conv).count();
+    println!("conv layers: {convs}\n", );
+
+    // Paper-scale systems.
+    let fmt = NumFmt::Float(Format::FP32);
+    let gpu = Roofline::new(GpuSpec::a6000());
+    let m_arch = PimArch::paper(GateSet::MemristiveNor);
+    let d_arch = PimArch::paper(GateSet::DramMaj);
+    let pim_m = CnnPimModel::new(fmt, GateSet::MemristiveNor, w.total_macs());
+    let pim_d = CnnPimModel::new(fmt, GateSet::DramMaj, w.total_macs());
+    let exp = gpu.workload_flops(&w.roofline_layers(), GpuDtype::F32) / w.total_flops();
+    let theo = gpu.peak(GpuDtype::F32) / w.total_flops();
+
+    println!("system               images/s    images/s/W");
+    println!("memristive PIM      {:>9.0}    {:>9.2}", pim_m.throughput(&m_arch), pim_m.throughput_per_watt(&m_arch));
+    println!("DRAM PIM            {:>9.3}    {:>9.5}", pim_d.throughput(&d_arch), pim_d.throughput_per_watt(&d_arch));
+    println!("A6000 experimental  {:>9.0}    {:>9.2}", exp, gpu.per_watt(exp));
+    println!("A6000 theoretical   {:>9.0}    {:>9.2}", theo, gpu.per_watt(theo));
+    println!(
+        "\npaper conclusion check: GPU exp beats memristive PIM on efficiency: {}",
+        gpu.per_watt(exp) > pim_m.throughput_per_watt(&m_arch)
+    );
+
+    // Measured micro-CNN (motif) through PJRT.
+    match Engine::new() {
+        Ok(mut engine) => {
+            let micro = match which.as_str() {
+                "alexnet" => "cnn_alexnet_fwd",
+                "googlenet" => "cnn_googlenet_fwd",
+                _ => "cnn_resnet_fwd",
+            };
+            let exe = engine.load(micro)?;
+            let inputs = exe.synth_inputs(1);
+            let t = exe.timed(&inputs, 3)?;
+            println!(
+                "\nmeasured micro-{} (64x64 motif, batch 8) on XLA-CPU: {:.1} img/s",
+                which,
+                8.0 / t.median_secs()
+            );
+        }
+        Err(e) => println!("\n(measured path skipped: {e:#}; run `make artifacts`)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,139 @@
+//! End-to-end driver: proves all three layers compose on a real workload.
+//!
+//! 1. loads the AOT artifacts (L2 JAX graphs + L1 Pallas kernels, lowered
+//!    once by `make artifacts`) through the PJRT runtime;
+//! 2. **trains** the micro-CNN for a few hundred steps through the
+//!    compiled train-step executable, logging the loss curve (the
+//!    training-systems validation workload);
+//! 3. cross-checks the Pallas crossbar kernel against the native Rust PIM
+//!    simulator bit-for-bit;
+//! 4. runs a bit-exact PIM arithmetic sweep;
+//! 5. regenerates every paper table/figure (analytic + measured) into
+//!    `results/`.
+//!
+//! Run with: `cargo run --release --example e2e_full_eval`
+//! (recorded in EXPERIMENTS.md §E2E).
+
+use convpim::coordinator::{self, report, Ctx};
+use convpim::pim::fixed::{self, FixedLayout, FixedOp};
+use convpim::pim::gates::GateSet;
+use convpim::pim::xbar::Crossbar;
+use convpim::runtime::{Engine, TensorData};
+use convpim::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    println!("=== ConvPIM end-to-end evaluation ===\n");
+
+    // ---- 1. runtime up ----------------------------------------------------
+    let mut engine = Engine::new()?;
+    println!(
+        "[1] PJRT platform `{}`, {} artifacts",
+        engine.platform(),
+        engine.manifest().artifacts.len()
+    );
+
+    // ---- 2. real training run through the AOT train step -------------------
+    let steps = std::env::var("E2E_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300usize);
+    let exe = engine.load("cnn_alexnet_train_step")?;
+    let mut inputs = exe.synth_inputs(99);
+    let n_params = inputs.len() - 2;
+    for t in inputs.iter_mut().take(n_params) {
+        if let TensorData::F32(v) = t {
+            for x in v.iter_mut() {
+                *x *= 0.1; // sane init scale
+            }
+        }
+    }
+    // Fixed synthetic batch (learnable task: memorize 8 labels).
+    println!("[2] training micro-CNN for {steps} steps through the compiled train step…");
+    let mut first = None;
+    let mut last = 0f32;
+    let train_t = std::time::Instant::now();
+    for step in 0..steps {
+        let out = exe.run(&inputs)?;
+        let loss = out.last().unwrap().as_f32()[0];
+        anyhow::ensure!(loss.is_finite(), "loss diverged at step {step}");
+        if first.is_none() {
+            first = Some(loss);
+        }
+        last = loss;
+        for (i, t) in out.into_iter().take(n_params).enumerate() {
+            inputs[i] = t;
+        }
+        if step % 50 == 0 || step == steps - 1 {
+            println!("    step {step:>4}  loss {loss:.4}");
+        }
+    }
+    let train_secs = train_t.elapsed().as_secs_f64();
+    let first = first.unwrap();
+    println!(
+        "    loss {first:.4} -> {last:.4} over {steps} steps ({:.1} steps/s); descended: {}",
+        steps as f64 / train_secs,
+        last < first
+    );
+    anyhow::ensure!(last < first, "training did not reduce the loss");
+
+    // ---- 3. cross-layer consistency: Pallas kernel vs native simulator -----
+    println!("[3] cross-checking the Pallas crossbar kernel vs the native simulator…");
+    let exe = engine.load("pim_fixed_add16")?;
+    let spec = &exe.spec.inputs[0];
+    let (words, width) = (spec.shape[0], spec.shape[1]);
+    let rows = words * 32;
+    let mut rng = Rng::new(5);
+    let u = rng.vec_bits(rows, 16);
+    let v = rng.vec_bits(rows, 16);
+    let mut state = vec![0u32; words * width];
+    for (r, (&uu, &vv)) in u.iter().zip(&v).enumerate() {
+        for k in 0..16 {
+            if (uu >> k) & 1 == 1 {
+                state[(r / 32) * width + k] |= 1 << (r % 32);
+            }
+            if (vv >> k) & 1 == 1 {
+                state[(r / 32) * width + 16 + k] |= 1 << (r % 32);
+            }
+        }
+    }
+    let out = exe.run(&[TensorData::U32(state)])?;
+    let packed = out[0].as_u32();
+    let prog = fixed::program(FixedOp::Add, 16, GateSet::MemristiveNor);
+    let lay = FixedLayout::new(FixedOp::Add, 16);
+    let mut xbar = Crossbar::new(rows, prog.width() as usize);
+    fixed::load_operands(&mut xbar, &lay, &u, &v);
+    xbar.execute(&prog);
+    let native = fixed::read_result(&xbar, &lay, rows);
+    for r in 0..rows {
+        let mut z = 0u64;
+        for k in 0..16 {
+            if (packed[(r / 32) * width + 32 + k] >> (r % 32)) & 1 == 1 {
+                z |= 1 << k;
+            }
+        }
+        anyhow::ensure!(z == native[r] && z == ((u[r] + v[r]) & 0xFFFF), "row {r}");
+    }
+    println!("    {} rows bit-identical across Pallas/XLA and the native simulator", rows);
+
+    // ---- 4 + 5. full evaluation -------------------------------------------
+    println!("[4] running the full experiment registry (analytic + measured)…");
+    let mut ctx = Ctx::new(true);
+    let out_dir = std::path::PathBuf::from(
+        std::env::var("E2E_OUT").unwrap_or_else(|_| "results".into()),
+    );
+    let mut results = Vec::new();
+    for id in coordinator::all_ids() {
+        let r = coordinator::run_experiment(id, &mut ctx)?;
+        println!("    {id}: {} table(s), {} note(s)", r.sections.len(), r.notes.len());
+        report::write_result(&out_dir, &r)?;
+        results.push(r);
+    }
+    report::write_report(&out_dir, &results)?;
+    println!(
+        "\nE2E complete in {:.1}s -> {}/REPORT.md",
+        t0.elapsed().as_secs_f64(),
+        out_dir.display()
+    );
+    Ok(())
+}

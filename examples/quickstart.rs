@@ -1,0 +1,83 @@
+//! Quickstart: compile a vectored arithmetic operation to PIM microcode,
+//! execute it bit-exactly on the simulated crossbar, and scale the cycle
+//! count to the paper's 48 GB architecture.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use convpim::pim::arch::PimArch;
+use convpim::pim::fixed::{self, FixedLayout, FixedOp};
+use convpim::pim::float::{self, FloatLayout};
+use convpim::pim::gates::GateSet;
+use convpim::pim::softfloat::Format;
+use convpim::pim::xbar::Crossbar;
+use convpim::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    println!("=== ConvPIM quickstart ===\n");
+
+    // 1. Fixed-point vectored addition: the paper's 233-TOPS headline op.
+    let set = GateSet::MemristiveNor;
+    let prog = fixed::program(FixedOp::Add, 32, set);
+    println!(
+        "fixed32 add: {} gates, {} cycles, {} columns",
+        prog.gates(),
+        prog.cycles(),
+        prog.width()
+    );
+
+    let lay = FixedLayout::new(FixedOp::Add, 32);
+    let rows = 1024;
+    let mut xbar = Crossbar::new(rows, prog.width() as usize);
+    let mut rng = Rng::new(42);
+    let u = rng.vec_bits(rows, 32);
+    let v = rng.vec_bits(rows, 32);
+    fixed::load_operands(&mut xbar, &lay, &u, &v);
+    xbar.execute(&prog);
+    let z = fixed::read_result(&xbar, &lay, rows);
+    let ok = (0..rows).all(|i| z[i] == (u[i].wrapping_add(v[i]) & 0xFFFF_FFFF));
+    println!("bit-exact on {rows} random rows: {ok}");
+    assert!(ok);
+
+    let arch = PimArch::paper(set);
+    println!(
+        "architecture scale (Table 1): {} crossbars, R = {:.3e} rows",
+        arch.num_crossbars(),
+        arch.total_rows() as f64
+    );
+    println!(
+        "  -> {:.1} TOPS, {:.1} TOPS/W   (paper: 233 TOPS)\n",
+        arch.throughput(&prog) / 1e12,
+        arch.throughput_per_watt(&prog) / 1e12
+    );
+
+    // 2. IEEE-754 fp32 addition: full RNE + subnormals, in gates alone.
+    let fprog = float::program(FixedOp::Add, Format::FP32, set);
+    println!(
+        "fp32 add: {} gates, {} cycles (paper-derived anchor ~4000 cycles)",
+        fprog.gates(),
+        fprog.cycles()
+    );
+    let flay = FloatLayout::new(Format::FP32);
+    let mut xbar = Crossbar::new(256, fprog.width() as usize);
+    let fu: Vec<u64> = (0..256).map(|_| rng.float_pattern(8, 23)).collect();
+    let fv: Vec<u64> = (0..256).map(|_| rng.float_pattern(8, 23)).collect();
+    float::load_operands(&mut xbar, &flay, &fu, &fv);
+    xbar.execute(&fprog);
+    let fz = float::read_result(&xbar, &flay, 256);
+    let mut exact = 0;
+    for i in 0..256 {
+        let expect = convpim::pim::softfloat::add(Format::FP32, fu[i], fv[i]);
+        if fz[i] == expect {
+            exact += 1;
+        }
+    }
+    println!("fp32 add bit-exact vs IEEE-754 oracle: {exact}/256");
+    assert_eq!(exact, 256);
+    println!(
+        "  -> {:.2} TOPS at architecture scale (paper: 33.6)\n",
+        arch.throughput(&fprog) / 1e12
+    );
+
+    println!("done; see `convpim run all` for the full figure reproduction.");
+    Ok(())
+}

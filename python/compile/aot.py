@@ -1,0 +1,83 @@
+"""AOT lowering: every L2 entry point -> artifacts/<name>.hlo.txt.
+
+Interchange format is **HLO text**, not serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Also writes artifacts/manifest.json describing each artifact's inputs
+(flattened, in call order) and outputs so the Rust runtime can size its
+literals without re-tracing anything.
+
+Python runs ONCE, here; the Rust binary is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def flat_specs(args):
+    """Flatten example-arg pytrees to a list of (shape, dtype) leaves."""
+    leaves = jax.tree_util.tree_leaves(args)
+    out = []
+    for leaf in leaves:
+        out.append({"shape": list(leaf.shape), "dtype": jnp.dtype(leaf.dtype).name})
+    return out
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output directory")
+    parser.add_argument(
+        "--only", default=None, help="comma-separated subset of entry names"
+    )
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    entries = model.entry_points()
+    subset = set(args.only.split(",")) if args.only else None
+    manifest = {"artifacts": []}
+    for name, (fn, example_args) in sorted(entries.items()):
+        if subset and name not in subset:
+            continue
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "path": f"{name}.hlo.txt",
+                "inputs": flat_specs(example_args),
+                "chars": len(text),
+            }
+        )
+        print(f"  lowered {name:<28} -> {path} ({len(text)} chars)", file=sys.stderr)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {args.out}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

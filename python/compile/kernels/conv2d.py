@@ -1,0 +1,141 @@
+"""Layer-1 Pallas kernel: MXU-tiled matmul used as the convolution engine.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's GPU
+baseline implements convolution with CUDA threadblock tiling in shared
+memory; the TPU rethink expresses convolution as im2col followed by an
+MXU-shaped tiled matmul, with ``BlockSpec`` describing the HBM→VMEM
+schedule. The L2 model (model.py) performs the im2col; this kernel is the
+compute hot-spot.
+
+Tile sizes default to 128×128×128 blocks (MXU-native); the grid walks
+(M/bm, N/bn, K/bk) with an accumulator initialized on the first K step —
+the standard Pallas matmul schedule. ``interpret=True`` for CPU PJRT.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, n_k: int):
+    """One (bm, bn) output tile; K is the innermost grid axis."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def pad_to(x: jnp.ndarray, m: int, axis: int) -> jnp.ndarray:
+    """Zero-pad `axis` of `x` up to a multiple of `m`."""
+    size = x.shape[axis]
+    rem = (-size) % m
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+def _matmul_raw(
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    bm: int,
+    bn: int,
+    bk: int,
+    interpret: bool,
+) -> jnp.ndarray:
+    """Tiled ``x @ y`` via Pallas; shapes need not be tile-aligned."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    xp = pad_to(pad_to(x, bm, 0), bk, 1)
+    yp = pad_to(pad_to(y, bk, 0), bn, 1)
+    mp, kp = xp.shape
+    _, np_ = yp.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=interpret,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _matmul_vjp(x, y, bm, bn, bk, interpret):
+    return _matmul_raw(x, y, bm, bn, bk, interpret)
+
+
+def _matmul_fwd(x, y, bm, bn, bk, interpret):
+    return _matmul_raw(x, y, bm, bn, bk, interpret), (x, y)
+
+
+def _matmul_bwd(bm, bn, bk, interpret, res, g):
+    # The backward pass of a matmul is two matmuls — routed through the
+    # same Pallas kernel so training steps stay on the L1 hot path
+    # (pallas_call has no JVP rule for gridded kernels; custom_vjp is the
+    # supported route).
+    x, y = res
+    dx = _matmul_raw(g, y.T, bm, bn, bk, interpret)
+    dy = _matmul_raw(x.T, g, bm, bn, bk, interpret)
+    return dx, dy
+
+
+_matmul_vjp.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def matmul(
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Differentiable tiled ``x @ y`` via the Pallas MXU kernel."""
+    return _matmul_vjp(x, y, bm, bn, bk, interpret)
+
+
+def conv2d(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    stride: int = 1,
+    padding: int = 0,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """NCHW convolution: im2col (L2-side transform) + the Pallas matmul.
+
+    x: (N, C, H, W); w: (O, C, kh, kw) -> (N, O, Ho, Wo).
+    """
+    n, c, h, wd = x.shape
+    o, c2, kh, kw = w.shape
+    assert c == c2
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        (kh, kw),
+        (stride, stride),
+        [(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )  # (N, C*kh*kw, Ho, Wo)
+    _, ckk, ho, wo = patches.shape
+    lhs = patches.transpose(0, 2, 3, 1).reshape(n * ho * wo, ckk)
+    rhs = w.reshape(o, ckk).T
+    out = matmul(lhs, rhs, interpret=interpret)
+    return out.reshape(n, ho, wo, o).transpose(0, 3, 1, 2)

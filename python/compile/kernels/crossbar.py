@@ -1,0 +1,273 @@
+"""Layer-1 Pallas kernel: the digital-PIM crossbar column-gate engine.
+
+The abstract PIM model (paper Figure 1(e)) is a binary matrix supporting
+column-parallel logic gates. Packed row-major into ``uint32`` words, a
+column gate becomes a lane-parallel bitwise op over a word vector — which
+is exactly the hardware-adaptation story from DESIGN.md: the crossbar's
+"one gate per row in parallel" maps onto the VPU's lane-parallel integer
+ops instead of CUDA warps.
+
+State layout: ``state[w, c]`` is word ``w`` (rows ``64·w̃``… packed 32 rows
+per word) of column ``c`` — shape ``(W, C) uint32``. A *program* is a
+static straight-line sequence of column gate instructions, unrolled at
+trace time so the whole arithmetic routine lowers into a single fused
+kernel.
+
+The kernel MUST be lowered with ``interpret=True`` on this testbed: real
+TPU lowering emits a Mosaic custom-call the CPU PJRT client cannot run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+
+@dataclasses.dataclass(frozen=True)
+class Instr:
+    """One column-parallel gate (mirrors rust/src/pim/isa.rs)."""
+
+    op: str  # 'nor2' | 'nor3' | 'not' | 'maj3' | 'copy' | 'set0' | 'set1'
+    out: int
+    a: int = 0
+    b: int = 0
+    c: int = 0
+
+
+def nor2(a: int, b: int, out: int) -> Instr:
+    return Instr("nor2", out, a, b)
+
+
+def nor3(a: int, b: int, c: int, out: int) -> Instr:
+    return Instr("nor3", out, a, b, c)
+
+
+def not_(a: int, out: int) -> Instr:
+    return Instr("not", out, a)
+
+
+def maj3(a: int, b: int, c: int, out: int) -> Instr:
+    return Instr("maj3", out, a, b, c)
+
+
+def set0(out: int) -> Instr:
+    return Instr("set0", out)
+
+
+def set1(out: int) -> Instr:
+    return Instr("set1", out)
+
+
+def program_width(program: Sequence[Instr]) -> int:
+    """Number of columns the program touches."""
+    w = 0
+    for i in program:
+        w = max(w, i.out + 1, i.a + 1, i.b + 1, i.c + 1)
+    return w
+
+
+def _apply(state: jnp.ndarray, instr: Instr) -> jnp.ndarray:
+    """Apply one instruction to the packed state (functional update)."""
+    if instr.op == "nor2":
+        col = ~(state[:, instr.a] | state[:, instr.b])
+    elif instr.op == "nor3":
+        col = ~(state[:, instr.a] | state[:, instr.b] | state[:, instr.c])
+    elif instr.op == "not":
+        col = ~state[:, instr.a]
+    elif instr.op == "maj3":
+        a, b, c = state[:, instr.a], state[:, instr.b], state[:, instr.c]
+        col = (a & b) | (c & (a | b))
+    elif instr.op == "copy":
+        col = state[:, instr.a]
+    elif instr.op == "set0":
+        col = jnp.zeros_like(state[:, 0])
+    elif instr.op == "set1":
+        col = jnp.full_like(state[:, 0], 0xFFFFFFFF)
+    else:  # pragma: no cover - defensive
+        raise ValueError(f"unknown op {instr.op}")
+    return state.at[:, instr.out].set(col)
+
+
+def make_crossbar_kernel(program: Sequence[Instr], interpret: bool = True):
+    """Build a pallas_call executing `program` over a packed crossbar state.
+
+    Returns a function ``(state uint32[W, C]) -> uint32[W, C]``.
+    """
+    program = tuple(program)
+
+    def kernel(x_ref, o_ref):
+        s = x_ref[...]
+        for instr in program:
+            s = _apply(s, instr)
+        o_ref[...] = s
+
+    def run(state: jnp.ndarray) -> jnp.ndarray:
+        return pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct(state.shape, jnp.uint32),
+            interpret=interpret,
+        )(state)
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# Microcode assembly (Python twin of rust/src/pim/fixed.rs for the kernels
+# we AOT-export; the layouts match FixedLayout: u@[0,n), v@[n,2n), z@[2n,3n)).
+# ---------------------------------------------------------------------------
+
+
+def full_adder_nor(a: int, b: int, c: int, sum_out: int, alloc) -> tuple[list[Instr], int]:
+    """The canonical 9-gate MAGIC full adder; returns (instrs, carry_col)."""
+    g1, g2, g3, g4, g5, g6, g7, co = (alloc() for _ in range(8))
+    instrs = [
+        nor2(a, b, g1),
+        nor2(a, g1, g2),
+        nor2(b, g1, g3),
+        nor2(g2, g3, g4),
+        nor2(g4, c, g5),
+        nor2(g4, g5, g6),
+        nor2(c, g5, g7),
+        nor2(g6, g7, sum_out),
+        nor2(g1, g5, co),
+    ]
+    return instrs, co
+
+
+def assemble_fixed_add(n: int) -> list[Instr]:
+    """Vectored ``z = u + v`` (wrapping) — 9·n NOR gates, same structure as
+    the Rust generator (paper §3's 9N anchor)."""
+    next_col = [3 * n]
+
+    def alloc() -> int:
+        c = next_col[0]
+        next_col[0] += 1
+        return c
+
+    zero = alloc()
+    prog: list[Instr] = [set0(zero)]
+    carry = zero
+    for i in range(n):
+        fa, carry = full_adder_nor(i, n + i, carry, 2 * n + i, alloc)
+        prog.extend(fa)
+    return prog
+
+
+def assemble_fixed_mul(n: int) -> list[Instr]:
+    """Vectored ``z = u · v`` with 2n-bit product (shift-and-add)."""
+    next_col = [4 * n]
+
+    def alloc() -> int:
+        c = next_col[0]
+        next_col[0] += 1
+        return c
+
+    prog: list[Instr] = []
+    u = list(range(n))
+    v = list(range(n, 2 * n))
+    z = list(range(2 * n, 4 * n))
+    nu = []
+    for j in range(n):
+        c = alloc()
+        prog.append(not_(u[j], c))
+        nu.append(c)
+    # iteration 0
+    nv0 = alloc()
+    prog.append(not_(v[0], nv0))
+    acc = []
+    for j in range(n):
+        pp = alloc() if j else z[0]
+        prog.append(nor2(nu[j], nv0, pp))
+        if j:
+            acc.append(pp)
+    top = alloc()
+    prog.append(set0(top))
+    acc.append(top)
+    zero = alloc()
+    prog.append(set0(zero))
+    for i in range(1, n):
+        nvi = alloc()
+        prog.append(not_(v[i], nvi))
+        pp = []
+        for j in range(n):
+            c = alloc()
+            prog.append(nor2(nu[j], nvi, c))
+            pp.append(c)
+        last = i == n - 1
+        carry = zero
+        nxt = []
+        for j in range(n):
+            if j == 0:
+                dst = z[i]
+            elif last:
+                dst = z[n + j - 1]
+            else:
+                dst = alloc()
+            fa, carry = full_adder_nor(pp[j], acc[j], carry, dst, alloc)
+            prog.extend(fa)
+            if j > 0 and not last:
+                nxt.append(dst)
+        if last:
+            # carry -> z[2n-1] (copy via double NOT)
+            t = alloc()
+            prog.append(not_(carry, t))
+            prog.append(not_(t, z[2 * n - 1]))
+        else:
+            nxt.append(carry)
+        acc = nxt
+    return prog
+
+
+# ---------------------------------------------------------------------------
+# Packing helpers (host side, numpy semantics via jnp).
+# ---------------------------------------------------------------------------
+
+
+def pack_field(values, base: int, bits: int, state):
+    """Write little-endian `bits`-wide `values` (one per row) into columns
+    [base, base+bits) of an unpacked boolean row matrix."""
+    import numpy as np
+
+    values = np.asarray(values, dtype=np.uint64)
+    for k in range(bits):
+        state[:, base + k] = (values >> np.uint64(k)) & np.uint64(1)
+    return state
+
+
+def pack_state(bits_matrix) -> jnp.ndarray:
+    """Pack a boolean (rows, cols) matrix into uint32 words (W, cols)."""
+    import numpy as np
+
+    rows, cols = bits_matrix.shape
+    w = (rows + 31) // 32
+    out = np.zeros((w, cols), dtype=np.uint32)
+    for r in range(rows):
+        out[r // 32, :] |= (bits_matrix[r, :].astype(np.uint32) & 1) << np.uint32(r % 32)
+    return jnp.asarray(out)
+
+
+def unpack_field(state_packed, base: int, bits: int, rows: int):
+    """Read back per-row little-endian values from packed state."""
+    import numpy as np
+
+    s = np.asarray(state_packed)
+    vals = np.zeros(rows, dtype=np.uint64)
+    for k in range(bits):
+        col = s[:, base + k]
+        for r in range(rows):
+            bit = (col[r // 32] >> np.uint32(r % 32)) & 1
+            vals[r] |= np.uint64(bit) << np.uint64(k)
+    return vals
+
+
+@functools.lru_cache(maxsize=None)
+def fixed_add_kernel(n: int, w_words: int):
+    """Cached jitted crossbar kernel for n-bit vectored addition."""
+    prog = assemble_fixed_add(n)
+    return make_crossbar_kernel(prog), program_width(prog)

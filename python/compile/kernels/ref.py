@@ -1,0 +1,64 @@
+"""Pure-jnp / numpy oracles for the Pallas kernels.
+
+These are the build-time correctness references: pytest compares every
+kernel against them (and, for the crossbar arithmetic, against plain
+integer arithmetic — the same bit-exact standard the Rust simulator is
+held to).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def matmul_ref(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Reference for kernels.conv2d.matmul."""
+    return jnp.dot(x, y, preferred_element_type=x.dtype)
+
+
+def conv2d_ref(
+    x: jnp.ndarray, w: jnp.ndarray, *, stride: int = 1, padding: int = 0
+) -> jnp.ndarray:
+    """Reference NCHW convolution via lax.conv_general_dilated."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        (stride, stride),
+        [(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def crossbar_step_ref(state: np.ndarray, instr) -> np.ndarray:
+    """Reference semantics of one column gate over *packed* uint32 state
+    (numpy mirror of kernels.crossbar._apply)."""
+    s = state.copy()
+    if instr.op == "nor2":
+        col = ~(s[:, instr.a] | s[:, instr.b])
+    elif instr.op == "nor3":
+        col = ~(s[:, instr.a] | s[:, instr.b] | s[:, instr.c])
+    elif instr.op == "not":
+        col = ~s[:, instr.a]
+    elif instr.op == "maj3":
+        a, b, c = s[:, instr.a], s[:, instr.b], s[:, instr.c]
+        col = (a & b) | (c & (a | b))
+    elif instr.op == "copy":
+        col = s[:, instr.a]
+    elif instr.op == "set0":
+        col = np.zeros_like(s[:, 0])
+    elif instr.op == "set1":
+        col = np.full_like(s[:, 0], 0xFFFFFFFF)
+    else:
+        raise ValueError(instr.op)
+    s[:, instr.out] = col
+    return s
+
+
+def run_program_ref(state: np.ndarray, program) -> np.ndarray:
+    """Execute a whole gate program with the numpy reference."""
+    s = np.asarray(state, dtype=np.uint32).copy()
+    for instr in program:
+        s = crossbar_step_ref(s, instr)
+    return s

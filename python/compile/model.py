@@ -1,0 +1,314 @@
+"""Layer-2 JAX compute graphs (build-time only; never on the request path).
+
+Defines every computation the Rust coordinator executes through PJRT:
+
+* three **micro-CNNs** carrying the architectural motifs of the paper's
+  benchmarks (AlexNet-style dense conv stack, GoogLeNet-style inception
+  block, ResNet-style residual bottlenecks) at 64×64×3 scale — the
+  *measured* substrate that validates the Figure 6/7 model orderings on
+  real executions (DESIGN.md §2 Substitutions);
+* a **training step** (cross-entropy + SGD) for the Figure 7 measured
+  series;
+* **batched matmuls** at several n for the Figure 5 measured series;
+* **element-wise add/mul** vectors for the Figure 3 measured series;
+* **attention decode** (matrix-vector against a KV cache) for the §6
+  discussion workload;
+* the **PIM crossbar kernel** executing a vectored fixed-16 addition —
+  the Layer-1 hot-spot exported through the same AOT path and
+  cross-checked against the native Rust simulator.
+
+All convolutions route through the Pallas matmul kernel
+(`kernels.conv2d`), so the L1 kernel lowers into the same HLO the Rust
+runtime loads.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv2d as k_conv
+from .kernels import crossbar as k_xbar
+
+# ---------------------------------------------------------------------------
+# Parameter initialization (deterministic: the AOT path bakes shapes only,
+# but tests and the e2e driver need real values).
+# ---------------------------------------------------------------------------
+
+
+def _conv_p(key, cout, cin, k):
+    w = jax.random.normal(key, (cout, cin, k, k), jnp.float32)
+    return w * jnp.sqrt(2.0 / (cin * k * k))
+
+
+def _fc_p(key, nin, nout):
+    w = jax.random.normal(key, (nin, nout), jnp.float32) * jnp.sqrt(2.0 / nin)
+    return w
+
+
+class MicroCnnParams(NamedTuple):
+    """Parameters of the AlexNet-motif micro CNN."""
+
+    c1: jnp.ndarray
+    c2: jnp.ndarray
+    c3: jnp.ndarray
+    fc1: jnp.ndarray
+    fc2: jnp.ndarray
+
+
+def micro_alexnet_init(key) -> MicroCnnParams:
+    ks = jax.random.split(key, 5)
+    return MicroCnnParams(
+        c1=_conv_p(ks[0], 32, 3, 5),
+        c2=_conv_p(ks[1], 64, 32, 3),
+        c3=_conv_p(ks[2], 64, 64, 3),
+        fc1=_fc_p(ks[3], 64 * 8 * 8, 256),
+        fc2=_fc_p(ks[4], 256, 10),
+    )
+
+
+def _pool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+    )
+
+
+def micro_alexnet_fwd(params: MicroCnnParams, x: jnp.ndarray) -> jnp.ndarray:
+    """Dense conv stack (high reuse — the AlexNet motif). x: (N,3,64,64)."""
+    h = jax.nn.relu(k_conv.conv2d(x, params.c1, stride=1, padding=2))
+    h = _pool2(h)  # 32x32
+    h = jax.nn.relu(k_conv.conv2d(h, params.c2, stride=1, padding=1))
+    h = _pool2(h)  # 16x16
+    h = jax.nn.relu(k_conv.conv2d(h, params.c3, stride=1, padding=1))
+    h = _pool2(h)  # 8x8
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(k_conv.matmul(h, params.fc1))
+    return k_conv.matmul(h, params.fc2)
+
+
+class MicroResNetParams(NamedTuple):
+    stem: jnp.ndarray
+    b1a: jnp.ndarray
+    b1b: jnp.ndarray
+    b2a: jnp.ndarray
+    b2b: jnp.ndarray
+    down2: jnp.ndarray
+    fc: jnp.ndarray
+
+
+def micro_resnet_init(key) -> MicroResNetParams:
+    ks = jax.random.split(key, 7)
+    return MicroResNetParams(
+        stem=_conv_p(ks[0], 32, 3, 3),
+        b1a=_conv_p(ks[1], 32, 32, 3),
+        b1b=_conv_p(ks[2], 32, 32, 3),
+        b2a=_conv_p(ks[3], 64, 32, 3),
+        b2b=_conv_p(ks[4], 64, 64, 3),
+        down2=_conv_p(ks[5], 64, 32, 1),
+        fc=_fc_p(ks[6], 64, 10),
+    )
+
+
+def micro_resnet_fwd(params: MicroResNetParams, x: jnp.ndarray) -> jnp.ndarray:
+    """Residual blocks with 1×1 projection (low-reuse residual adds —
+    the ResNet motif the paper blames for the larger exp/theo gap)."""
+    h = jax.nn.relu(k_conv.conv2d(x, params.stem, stride=2, padding=1))  # 32
+    # Block 1 (identity skip).
+    r = h
+    h = jax.nn.relu(k_conv.conv2d(h, params.b1a, stride=1, padding=1))
+    h = k_conv.conv2d(h, params.b1b, stride=1, padding=1)
+    h = jax.nn.relu(h + r)
+    # Block 2 (strided, projected skip).
+    r = k_conv.conv2d(h, params.down2, stride=2, padding=0)
+    h = jax.nn.relu(k_conv.conv2d(h, params.b2a, stride=2, padding=1))
+    h = k_conv.conv2d(h, params.b2b, stride=1, padding=1)
+    h = jax.nn.relu(h + r)  # (N,64,16,16)
+    h = jnp.mean(h, axis=(2, 3))
+    return k_conv.matmul(h, params.fc)
+
+
+class MicroInceptionParams(NamedTuple):
+    stem: jnp.ndarray
+    b1: jnp.ndarray
+    b2r: jnp.ndarray
+    b2: jnp.ndarray
+    b3r: jnp.ndarray
+    b3: jnp.ndarray
+    fc: jnp.ndarray
+
+
+def micro_googlenet_init(key) -> MicroInceptionParams:
+    ks = jax.random.split(key, 7)
+    return MicroInceptionParams(
+        stem=_conv_p(ks[0], 32, 3, 3),
+        b1=_conv_p(ks[1], 16, 32, 1),
+        b2r=_conv_p(ks[2], 16, 32, 1),
+        b2=_conv_p(ks[3], 32, 16, 3),
+        b3r=_conv_p(ks[4], 8, 32, 1),
+        b3=_conv_p(ks[5], 16, 8, 5),
+        fc=_fc_p(ks[6], 64, 10),
+    )
+
+
+def micro_googlenet_fwd(params: MicroInceptionParams, x: jnp.ndarray) -> jnp.ndarray:
+    """One inception module (parallel 1×1 / 3×3 / 5×5 branches with
+    concat — the GoogLeNet motif: many small low-reuse 1×1 convs)."""
+    h = jax.nn.relu(k_conv.conv2d(x, params.stem, stride=2, padding=1))  # 32
+    h = _pool2(h)  # 16
+    b1 = jax.nn.relu(k_conv.conv2d(h, params.b1, padding=0))
+    b2 = jax.nn.relu(k_conv.conv2d(h, params.b2r, padding=0))
+    b2 = jax.nn.relu(k_conv.conv2d(b2, params.b2, padding=1))
+    b3 = jax.nn.relu(k_conv.conv2d(h, params.b3r, padding=0))
+    b3 = jax.nn.relu(k_conv.conv2d(b3, params.b3, padding=2))
+    h = jnp.concatenate([b1, b2, b3], axis=1)  # 64 ch
+    h = jnp.mean(h, axis=(2, 3))
+    return k_conv.matmul(h, params.fc)
+
+
+MICRO_MODELS = {
+    "alexnet": (micro_alexnet_init, micro_alexnet_fwd),
+    "googlenet": (micro_googlenet_init, micro_googlenet_fwd),
+    "resnet": (micro_resnet_init, micro_resnet_fwd),
+}
+
+# ---------------------------------------------------------------------------
+# Training step (Figure 7 measured series).
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def make_train_step(fwd, lr: float = 0.01):
+    """SGD train step over any micro model; donated params for in-place
+    update in the lowered executable."""
+
+    def loss_fn(params, x, y):
+        return cross_entropy(fwd(params, x), y)
+
+    def step(params, x, y):
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+        new_params = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+        return new_params, loss
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Figure 3/5 measured substrates and the §6 decode workload.
+# ---------------------------------------------------------------------------
+
+
+def elementwise_add(u: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    return u + v
+
+
+def elementwise_mul(u: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    return u * v
+
+
+def batched_matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(B, n, n) × (B, n, n) through XLA's native batched dot."""
+    return jnp.einsum("bij,bjk->bik", a, b)
+
+
+def attention_decode(q: jnp.ndarray, keys: jnp.ndarray, values: jnp.ndarray) -> jnp.ndarray:
+    """Single-token decode attention: q (H, d), KV cache (H, S, d)."""
+    scores = jnp.einsum("hd,hsd->hs", q, keys) / jnp.sqrt(q.shape[-1] * 1.0)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hs,hsd->hd", probs, values)
+
+
+# ---------------------------------------------------------------------------
+# Layer-1 crossbar kernel entry point (AOT-exported).
+# ---------------------------------------------------------------------------
+
+PIM_ADD_BITS = 16
+PIM_ADD_ROWS = 256  # 8 uint32 words
+
+
+def pim_fixed_add16(state: jnp.ndarray) -> jnp.ndarray:
+    """Execute the 16-bit vectored PIM addition program on a packed
+    crossbar state (uint32 (8, width))."""
+    prog = k_xbar.assemble_fixed_add(PIM_ADD_BITS)
+    run = k_xbar.make_crossbar_kernel(prog, interpret=True)
+    return run(state)
+
+
+def pim_add16_width() -> int:
+    return k_xbar.program_width(k_xbar.assemble_fixed_add(PIM_ADD_BITS))
+
+
+# ---------------------------------------------------------------------------
+# AOT entry-point registry: name -> (jittable fn, example args).
+# ---------------------------------------------------------------------------
+
+
+def entry_points():
+    """Every computation exported to artifacts/ by aot.py."""
+    key = jax.random.PRNGKey(0)
+    entries = {}
+
+    # Micro CNN forward passes (batch 8).
+    for name, (init, fwd) in MICRO_MODELS.items():
+        params = init(key)
+        x = jax.ShapeDtypeStruct((8, 3, 64, 64), jnp.float32)
+        p_spec = jax.tree_util.tree_map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), params
+        )
+        entries[f"cnn_{name}_fwd"] = (
+            functools.partial(_fwd_tuple, fwd),
+            (p_spec, x),
+        )
+
+    # Training step for the AlexNet-motif model.
+    init, fwd = MICRO_MODELS["alexnet"]
+    params = init(key)
+    p_spec = jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), params
+    )
+    x = jax.ShapeDtypeStruct((8, 3, 64, 64), jnp.float32)
+    y = jax.ShapeDtypeStruct((8,), jnp.int32)
+    step = make_train_step(fwd)
+    entries["cnn_alexnet_train_step"] = (_train_tuple(step), (p_spec, x, y))
+
+    # Element-wise vectors (2^22 elements ≈ 16 MB per operand).
+    vec = jax.ShapeDtypeStruct((1 << 22,), jnp.float32)
+    entries["elementwise_add_f32"] = (lambda u, v: (elementwise_add(u, v),), (vec, vec))
+    entries["elementwise_mul_f32"] = (lambda u, v: (elementwise_mul(u, v),), (vec, vec))
+
+    # Batched matmuls for Figure 5 (batch shrinks as n grows: const FLOPs).
+    for n, batch in [(16, 512), (32, 256), (64, 64), (128, 16), (256, 4)]:
+        m = jax.ShapeDtypeStruct((batch, n, n), jnp.float32)
+        entries[f"matmul_n{n}"] = (lambda a, b: (batched_matmul(a, b),), (m, m))
+
+    # Attention decode (16 heads × 64 dim, 2048-token cache).
+    q = jax.ShapeDtypeStruct((16, 64), jnp.float32)
+    kv = jax.ShapeDtypeStruct((16, 2048, 64), jnp.float32)
+    entries["attention_decode"] = (
+        lambda q2, k2, v2: (attention_decode(q2, k2, v2),),
+        (q, kv, kv),
+    )
+
+    # The PIM crossbar kernel itself.
+    st = jax.ShapeDtypeStruct((PIM_ADD_ROWS // 32, pim_add16_width()), jnp.uint32)
+    entries["pim_fixed_add16"] = (lambda s: (pim_fixed_add16(s),), (st,))
+
+    return entries
+
+
+def _fwd_tuple(fwd, params, x):
+    return (fwd(params, x),)
+
+
+def _train_tuple(step):
+    def f(params, x, y):
+        new_params, loss = step(params, x, y)
+        return tuple(jax.tree_util.tree_leaves(new_params)) + (loss,)
+
+    return f

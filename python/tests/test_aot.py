@@ -1,0 +1,42 @@
+"""AOT pipeline test: artifacts lower to HLO text that the 0.5.1 parser
+convention requires (ENTRY present, tuple root), and the manifest is
+complete. Runs the real lowering for a fast subset."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def test_aot_subset(tmp_path):
+    env = dict(os.environ)
+    out = tmp_path / "artifacts"
+    r = subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "compile.aot",
+            "--out",
+            str(out),
+            "--only",
+            "elementwise_add_f32,pim_fixed_add16,matmul_n16",
+        ],
+        cwd=os.path.join(REPO, "python"),
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert r.returncode == 0, r.stderr
+    manifest = json.loads((out / "manifest.json").read_text())
+    names = {a["name"] for a in manifest["artifacts"]}
+    assert names == {"elementwise_add_f32", "pim_fixed_add16", "matmul_n16"}
+    for a in manifest["artifacts"]:
+        text = (out / a["path"]).read_text()
+        assert "ENTRY" in text, a["name"]
+        assert len(text) == a["chars"]
+        assert a["inputs"], a["name"]

@@ -1,0 +1,83 @@
+"""L1 conv/matmul kernel vs the pure-jnp oracle, with hypothesis sweeping
+shapes and strides."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d as k
+from compile.kernels import ref
+
+
+def test_matmul_tile_aligned():
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (256, 128), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (128, 256), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(k.matmul(a, b)), np.asarray(ref.matmul_ref(a, b)), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_matmul_ragged_shapes():
+    key = jax.random.PRNGKey(2)
+    a = jax.random.normal(key, (75, 53), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(3), (53, 91), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(k.matmul(a, b)), np.asarray(ref.matmul_ref(a, b)), rtol=1e-5, atol=1e-5
+    )
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.integers(1, 64),
+    kk=st.integers(1, 64),
+    n=st.integers(1, 64),
+    seed=st.integers(0, 100),
+)
+def test_matmul_hypothesis_shapes(m, kk, n, seed):
+    key = jax.random.PRNGKey(seed)
+    a = jax.random.normal(key, (m, kk), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(seed + 1), (kk, n), jnp.float32)
+    got = np.asarray(k.matmul(a, b, bm=32, bn=32, bk=32))
+    want = np.asarray(ref.matmul_ref(a, b))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("stride,padding", [(1, 0), (1, 1), (2, 1), (2, 3), (4, 2)])
+def test_conv2d_vs_lax(stride, padding):
+    key = jax.random.PRNGKey(4)
+    x = jax.random.normal(key, (2, 3, 16, 16), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(5), (8, 3, 3, 3), jnp.float32)
+    got = np.asarray(k.conv2d(x, w, stride=stride, padding=padding))
+    want = np.asarray(ref.conv2d_ref(x, w, stride=stride, padding=padding))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_kernel_sizes():
+    key = jax.random.PRNGKey(6)
+    for ksize, pad in [(1, 0), (5, 2), (7, 3)]:
+        x = jax.random.normal(key, (1, 4, 14, 14), jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(7), (6, 4, ksize, ksize), jnp.float32)
+        got = np.asarray(k.conv2d(x, w, stride=1, padding=pad))
+        want = np.asarray(ref.conv2d_ref(x, w, stride=1, padding=pad))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    c=st.integers(1, 8),
+    o=st.integers(1, 8),
+    hw=st.integers(6, 20),
+    ksize=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 50),
+)
+def test_conv2d_hypothesis(c, o, hw, ksize, stride, seed):
+    pad = ksize // 2
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, c, hw, hw), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(seed + 1), (o, c, ksize, ksize), jnp.float32)
+    got = np.asarray(k.conv2d(x, w, stride=stride, padding=pad))
+    want = np.asarray(ref.conv2d_ref(x, w, stride=stride, padding=pad))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)

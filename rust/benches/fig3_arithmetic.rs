@@ -1,0 +1,47 @@
+//! Figure 3 regeneration: vectored arithmetic throughput + energy
+//! efficiency for all four systems, plus a timed simulator run per routine
+//! (the bit-exact substrate behind the analytic numbers).
+
+use convpim::coordinator::{run_experiment, Ctx};
+use convpim::pim::fixed::{self, FixedLayout, FixedOp};
+use convpim::pim::float::{self, FloatLayout};
+use convpim::pim::gates::GateSet;
+use convpim::pim::softfloat::Format;
+use convpim::pim::xbar::Crossbar;
+use convpim::util::bench::{bench, header, report, BenchConfig};
+use convpim::util::rng::Rng;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    header("fig3: vectored arithmetic (paper-scale table)");
+    let mut ctx = Ctx::new(true);
+    let r = run_experiment("fig3", &mut ctx).unwrap();
+    println!("{}", r.text());
+
+    header("fig3: simulator element throughput (this testbed)");
+    let rows = 16_384;
+    let mut rng = Rng::new(3);
+    // fixed32 add/mul simulated end-to-end (load + execute + read).
+    for (name, op) in [("fixed32 add", FixedOp::Add), ("fixed32 mul", FixedOp::Mul)] {
+        let prog = fixed::program(op, 32, GateSet::MemristiveNor);
+        let lay = FixedLayout::new(op, 32);
+        let mut x = Crossbar::new(rows, prog.width() as usize);
+        let u = rng.vec_bits(rows, 32);
+        let v = rng.vec_bits(rows, 32);
+        fixed::load_operands(&mut x, &lay, &u, &v);
+        report(bench(&format!("sim {name}"), rows as f64, &cfg, || {
+            x.execute(&prog)
+        }));
+    }
+    for (name, op) in [("fp32 add", FixedOp::Add), ("fp32 mul", FixedOp::Mul)] {
+        let prog = float::program(op, Format::FP32, GateSet::MemristiveNor);
+        let lay = FloatLayout::new(Format::FP32);
+        let mut x = Crossbar::new(rows, prog.width() as usize);
+        let u: Vec<u64> = (0..rows).map(|_| rng.float_pattern(8, 23)).collect();
+        let v: Vec<u64> = (0..rows).map(|_| rng.float_pattern(8, 23)).collect();
+        float::load_operands(&mut x, &lay, &u, &v);
+        report(bench(&format!("sim {name}"), rows as f64, &cfg, || {
+            x.execute(&prog)
+        }));
+    }
+}

@@ -1,0 +1,41 @@
+//! Figure 4 regeneration: the compute-complexity sweep (gates/bit vs
+//! improvement over the memory-bound GPU) across the full arithmetic
+//! suite, timing the sweep generation itself.
+
+use convpim::coordinator::{run_experiment, Ctx};
+use convpim::gpumodel::{GpuSpec, Roofline};
+use convpim::metrics;
+use convpim::pim::arch::PimArch;
+use convpim::pim::fixed::FixedOp;
+use convpim::pim::gates::GateSet;
+use convpim::pim::matpim::NumFmt;
+use convpim::pim::softfloat::Format;
+use convpim::util::bench::{bench, header, report, BenchConfig};
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    header("fig4: compute complexity vs improvement");
+    let mut ctx = Ctx::analytic();
+    let r = run_experiment("fig4", &mut ctx).unwrap();
+    println!("{}", r.text());
+
+    header("sweep generation cost");
+    let arch = PimArch::paper(GateSet::MemristiveNor);
+    let gpu = Roofline::new(GpuSpec::a6000());
+    report(bench("cc_sweep (6 formats x 4 ops)", 24.0, &cfg, || {
+        let _ = metrics::cc_sweep(
+            GateSet::MemristiveNor,
+            &arch,
+            &gpu,
+            &[
+                NumFmt::Fixed(8),
+                NumFmt::Fixed(16),
+                NumFmt::Fixed(32),
+                NumFmt::Float(Format::FP16),
+                NumFmt::Float(Format::FP32),
+                NumFmt::Float(Format::FP64),
+            ],
+            &FixedOp::all(),
+        );
+    }));
+}

@@ -1,0 +1,28 @@
+//! Figure 5 regeneration: batched n×n matmul across systems (analytic
+//! series) plus measured XLA-CPU matmul executions and a bit-exact
+//! crossbar matmul run.
+
+use convpim::coordinator::{run_experiment, Ctx};
+use convpim::pim::gates::GateSet;
+use convpim::pim::matpim::{self, MatmulLayout};
+use convpim::util::bench::{bench, header, report, BenchConfig};
+use convpim::util::rng::Rng;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    header("fig5: batched matrix multiplication");
+    let mut ctx = Ctx::new(true);
+    let r = run_experiment("fig5", &mut ctx).unwrap();
+    println!("{}", r.text());
+
+    header("bit-exact crossbar matmul (simulator substrate)");
+    let lay = MatmulLayout::new(3, 8);
+    let prog = matpim::matmul_program(&lay, GateSet::MemristiveNor);
+    let mut rng = Rng::new(4);
+    let pairs = 32;
+    let a: Vec<Vec<u64>> = (0..pairs).map(|_| rng.vec_bits(9, 8)).collect();
+    let b: Vec<Vec<u64>> = (0..pairs).map(|_| rng.vec_bits(9, 8)).collect();
+    report(bench("3x3 fixed8 matmul batch=32", pairs as f64, &cfg, || {
+        let _ = matpim::run_matmul_batch(&lay, &prog, &a, &b);
+    }));
+}

@@ -1,0 +1,28 @@
+//! Figure 6 regeneration: CNN inference across systems (analytic) plus
+//! measured micro-CNN forwards through PJRT.
+
+use convpim::coordinator::{run_experiment, Ctx};
+use convpim::runtime::Engine;
+use convpim::util::bench::{bench, header, report, BenchConfig};
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    header("fig6: CNN inference");
+    let mut ctx = Ctx::new(true);
+    let r = run_experiment("fig6", &mut ctx).unwrap();
+    println!("{}", r.text());
+
+    header("measured micro-CNN forward (batch 8, XLA-CPU)");
+    if let Ok(mut engine) = Engine::new() {
+        for name in ["cnn_alexnet_fwd", "cnn_googlenet_fwd", "cnn_resnet_fwd"] {
+            let exe = engine.load(name).unwrap();
+            let inputs = exe.synth_inputs(6);
+            let _ = exe.run(&inputs).unwrap(); // compile+warm
+            report(bench(name, 8.0, &cfg, || {
+                let _ = exe.run(&inputs).unwrap();
+            }));
+        }
+    } else {
+        println!("(artifacts not built; analytic series only)");
+    }
+}

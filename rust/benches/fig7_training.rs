@@ -1,0 +1,26 @@
+//! Figure 7 regeneration: CNN training across systems (analytic) plus the
+//! measured train-step execution through PJRT.
+
+use convpim::coordinator::{run_experiment, Ctx};
+use convpim::runtime::Engine;
+use convpim::util::bench::{bench, header, report, BenchConfig};
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    header("fig7: CNN training");
+    let mut ctx = Ctx::new(true);
+    let r = run_experiment("fig7", &mut ctx).unwrap();
+    println!("{}", r.text());
+
+    header("measured micro-CNN train step (batch 8, XLA-CPU)");
+    if let Ok(mut engine) = Engine::new() {
+        let exe = engine.load("cnn_alexnet_train_step").unwrap();
+        let inputs = exe.synth_inputs(7);
+        let _ = exe.run(&inputs).unwrap();
+        report(bench("cnn_alexnet_train_step", 8.0, &cfg, || {
+            let _ = exe.run(&inputs).unwrap();
+        }));
+    } else {
+        println!("(artifacts not built; analytic series only)");
+    }
+}

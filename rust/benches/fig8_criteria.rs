@@ -1,0 +1,26 @@
+//! Figure 8 regeneration: the criteria quadrant table, plus the measured
+//! attention-decode artifact (the PIM-favorable counter-example).
+
+use convpim::coordinator::{run_experiment, Ctx};
+use convpim::runtime::Engine;
+use convpim::util::bench::{bench, header, report, BenchConfig};
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    header("fig8: PIM-vs-GPU criteria");
+    let mut ctx = Ctx::new(true);
+    let r = run_experiment("fig8", &mut ctx).unwrap();
+    println!("{}", r.text());
+
+    header("measured attention decode (16 heads, 2048 cache, XLA-CPU)");
+    if let Ok(mut engine) = Engine::new() {
+        let exe = engine.load("attention_decode").unwrap();
+        let inputs = exe.synth_inputs(8);
+        let _ = exe.run(&inputs).unwrap();
+        report(bench("attention_decode token", 1.0, &cfg, || {
+            let _ = exe.run(&inputs).unwrap();
+        }));
+    } else {
+        println!("(artifacts not built; analytic series only)");
+    }
+}

@@ -1,0 +1,59 @@
+//! Hot-path microbench: the crossbar column-gate engine (the simulator's
+//! inner loop and the §Perf optimization target). Reports simulated
+//! row-gates per second across crossbar heights and gate mixes.
+
+use convpim::pim::fixed::{self, FixedOp};
+use convpim::pim::float;
+use convpim::pim::gates::GateSet;
+use convpim::pim::isa::{Instr, Program};
+use convpim::pim::softfloat::Format;
+use convpim::pim::xbar::Crossbar;
+use convpim::util::bench::{bench, header, report, BenchConfig};
+use convpim::util::rng::Rng;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    header("hotpath: crossbar column-gate engine");
+
+    // Raw NOR storm: 1024 gates over random columns.
+    let mut rng = Rng::new(1);
+    for rows in [1024usize, 16384, 262_144] {
+        let cols = 64u32;
+        let mut prog = Program::new(GateSet::MemristiveNor);
+        for _ in 0..1024 {
+            let a = rng.below(cols as u64) as u32;
+            let mut b = rng.below(cols as u64) as u32;
+            let mut o = rng.below(cols as u64) as u32;
+            while b == a {
+                b = rng.below(cols as u64) as u32;
+            }
+            while o == a || o == b {
+                o = rng.below(cols as u64) as u32;
+            }
+            prog.push(Instr::Nor2 { a, b, out: o });
+        }
+        let mut x = Crossbar::new(rows, cols as usize);
+        let units = prog.gates() as f64 * rows as f64;
+        report(bench(
+            &format!("nor2_storm rows={rows}"),
+            units,
+            &cfg,
+            || x.execute(&prog),
+        ));
+    }
+
+    // Real programs: fixed32 add / fp32 add / fp32 mul.
+    for (name, prog) in [
+        ("fixed32_add", fixed::program(FixedOp::Add, 32, GateSet::MemristiveNor)),
+        ("fp32_add", float::program(FixedOp::Add, Format::FP32, GateSet::MemristiveNor)),
+        ("fp32_mul", float::program(FixedOp::Mul, Format::FP32, GateSet::MemristiveNor)),
+        ("fixed32_add_dram", fixed::program(FixedOp::Add, 32, GateSet::DramMaj)),
+    ] {
+        let rows = 65_536;
+        let mut x = Crossbar::new(rows, prog.width() as usize);
+        let units = prog.gates() as f64 * rows as f64;
+        report(bench(&format!("{name} rows={rows}"), units, &cfg, || {
+            x.execute(&prog)
+        }));
+    }
+}

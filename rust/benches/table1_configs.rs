@@ -1,0 +1,32 @@
+//! Table 1 regeneration bench: prints the configuration tables and times
+//! the microcode compilers (program generation is part of the toolchain's
+//! cost envelope).
+
+use convpim::coordinator::{run_experiment, Ctx};
+use convpim::pim::fixed::{self, FixedOp};
+use convpim::pim::float;
+use convpim::pim::gates::GateSet;
+use convpim::pim::softfloat::Format;
+use convpim::util::bench::{bench, header, report, BenchConfig};
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    header("table1: configurations");
+    let mut ctx = Ctx::analytic();
+    let r = run_experiment("table1", &mut ctx).unwrap();
+    println!("{}", r.text());
+
+    header("microcode compiler throughput (programs/s)");
+    report(bench("compile fixed32 add", 1.0, &cfg, || {
+        let _ = fixed::program(FixedOp::Add, 32, GateSet::MemristiveNor);
+    }));
+    report(bench("compile fixed32 mul", 1.0, &cfg, || {
+        let _ = fixed::program(FixedOp::Mul, 32, GateSet::MemristiveNor);
+    }));
+    report(bench("compile fp32 add", 1.0, &cfg, || {
+        let _ = float::program(FixedOp::Add, Format::FP32, GateSet::MemristiveNor);
+    }));
+    report(bench("compile fp64 div", 1.0, &cfg, || {
+        let _ = float::program(FixedOp::Div, Format::FP64, GateSet::MemristiveNor);
+    }));
+}

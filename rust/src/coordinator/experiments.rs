@@ -1,0 +1,781 @@
+//! The experiment implementations — one per paper table/figure plus the
+//! three sensitivity studies from the paper's code repository.
+
+use anyhow::Result;
+
+use super::{Ctx, ExperimentResult, Section};
+use crate::gpumodel::{GpuDtype, GpuSpec, Roofline};
+use crate::metrics;
+use crate::pim::arch::PimArch;
+use crate::pim::fixed::FixedOp;
+use crate::pim::gates::GateSet;
+use crate::pim::matpim::{CnnPimModel, MatmulModel, NumFmt};
+use crate::pim::softfloat::Format;
+use crate::util::json::Json;
+use crate::util::si;
+use crate::util::table::Table;
+use crate::workloads::attention::{decode_workload, DecodeConfig};
+use crate::workloads::Workload;
+
+fn tops(x: f64) -> String {
+    format!("{:.4}", x / 1e12)
+}
+
+fn eng3(x: f64) -> String {
+    si(x)
+}
+
+/// Measured median seconds for an artifact, if the engine is available.
+fn measured_secs(ctx: &mut Ctx, name: &str) -> Option<f64> {
+    let iters = ctx.iters();
+    let seed = ctx.seed;
+    let engine = ctx.engine.as_mut()?;
+    let exe = match engine.load(name) {
+        Ok(e) => e,
+        Err(err) => {
+            eprintln!("measured series: cannot load {name}: {err:#}");
+            return None;
+        }
+    };
+    let inputs = exe.synth_inputs(seed);
+    match exe.timed(&inputs, iters) {
+        Ok(t) => Some(t.median_secs()),
+        Err(err) => {
+            eprintln!("measured series: {name} failed: {err:#}");
+            None
+        }
+    }
+}
+
+fn na_or(x: Option<f64>, f: impl Fn(f64) -> String) -> String {
+    x.map(f).unwrap_or_else(|| "n/a".into())
+}
+
+// ---------------------------------------------------------------------------
+// Table 1
+// ---------------------------------------------------------------------------
+
+/// Table 1: the evaluation parameters of all four systems.
+pub fn table1(_ctx: &mut Ctx) -> Result<ExperimentResult> {
+    let mut gpu = Table::new(&["parameter", "A6000", "A100"]);
+    let (a, b) = (GpuSpec::a6000(), GpuSpec::a100());
+    gpu.row(vec!["cores".into(), a.cores.to_string(), b.cores.to_string()]);
+    gpu.row(vec![
+        "memory".into(),
+        format!("{} GB", a.mem_bytes >> 30),
+        format!("{} GB", b.mem_bytes >> 30),
+    ]);
+    gpu.row(vec![
+        "memory bandwidth".into(),
+        format!("{:.0} GB/s", a.mem_bw / 1e9),
+        format!("{:.0} GB/s", b.mem_bw / 1e9),
+    ]);
+    gpu.row(vec![
+        "clock".into(),
+        format!("{:.0} MHz", a.clock_hz / 1e6),
+        format!("{:.0} MHz", b.clock_hz / 1e6),
+    ]);
+    gpu.row(vec![
+        "max power".into(),
+        format!("{:.0} W", a.max_power_w),
+        format!("{:.0} W", b.max_power_w),
+    ]);
+
+    let mut pim = Table::new(&["parameter", "Memristive PIM", "DRAM PIM"]);
+    let (m, d) = (
+        PimArch::paper(GateSet::MemristiveNor),
+        PimArch::paper(GateSet::DramMaj),
+    );
+    pim.row(vec![
+        "crossbar".into(),
+        format!("{}x{}", m.rows, m.cols),
+        format!("{}x{}", d.rows, d.cols),
+    ]);
+    pim.row(vec![
+        "memory".into(),
+        format!("{} GB", m.mem_bytes >> 30),
+        format!("{} GB", d.mem_bytes >> 30),
+    ]);
+    pim.row(vec![
+        "gate energy".into(),
+        format!("{:.1} fJ", m.set.costs().gate_energy_j * 1e15),
+        format!("{:.0} fJ", d.set.costs().gate_energy_j * 1e15),
+    ]);
+    pim.row(vec![
+        "clock".into(),
+        format!("{:.0} MHz", m.clock_hz / 1e6),
+        format!("{:.1} MHz", d.clock_hz / 1e6),
+    ]);
+    pim.row(vec![
+        "max power".into(),
+        format!("{:.0} W", m.max_power_w),
+        format!("{:.0} W", d.max_power_w),
+    ]);
+    pim.row(vec![
+        "crossbars".into(),
+        m.num_crossbars().to_string(),
+        d.num_crossbars().to_string(),
+    ]);
+    pim.row(vec![
+        "row parallelism R".into(),
+        eng3(m.total_rows() as f64),
+        eng3(d.total_rows() as f64),
+    ]);
+
+    Ok(ExperimentResult {
+        id: "table1".into(),
+        title: "Evaluation parameters for GPU and PIM systems".into(),
+        sections: vec![
+            Section {
+                caption: "GPU configurations".into(),
+                table: gpu,
+            },
+            Section {
+                caption: "PIM configurations (derived quantities included)".into(),
+                table: pim,
+            },
+        ],
+        notes: vec![],
+        json: Json::obj(vec![(
+            "derived_total_rows",
+            Json::n(m.total_rows() as f64),
+        )]),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Figure 3
+// ---------------------------------------------------------------------------
+
+/// Figure 3: throughput and throughput/W for 32-bit fixed and FP add/mul
+/// across all four systems (plus the measured XLA-CPU testbed column).
+pub fn fig3(ctx: &mut Ctx) -> Result<ExperimentResult> {
+    fig3_for(ctx, GpuSpec::a6000(), NumFmt::Fixed(32), NumFmt::Float(Format::FP32), "fig3")
+}
+
+pub(crate) fn fig3_for(
+    ctx: &mut Ctx,
+    gpu_spec: GpuSpec,
+    fixed_fmt: NumFmt,
+    float_fmt: NumFmt,
+    id: &str,
+) -> Result<ExperimentResult> {
+    let gpu = Roofline::new(gpu_spec);
+    let m = PimArch::paper(GateSet::MemristiveNor);
+    let d = PimArch::paper(GateSet::DramMaj);
+    let gpu_dtype = if fixed_fmt.bits() <= 16 {
+        GpuDtype::F16
+    } else {
+        GpuDtype::F32
+    };
+
+    let mut t = Table::new(&[
+        "operation",
+        "memristive TOPS",
+        "dram TOPS",
+        "gpu exp TOPS",
+        "gpu theo TOPS",
+        "memristive TOPS/W",
+        "dram TOPS/W",
+        "gpu exp TOPS/W",
+        "gpu theo TOPS/W",
+    ]);
+    let mut json_rows = Vec::new();
+    let mut anchors = Vec::new();
+    for (fmt, op) in [
+        (fixed_fmt, FixedOp::Add),
+        (fixed_fmt, FixedOp::Mul),
+        (float_fmt, FixedOp::Add),
+        (float_fmt, FixedOp::Mul),
+    ] {
+        let pm = fmt.program(op, GateSet::MemristiveNor);
+        let pd = fmt.program(op, GateSet::DramMaj);
+        let mem = m.throughput(&pm);
+        let dram = d.throughput(&pd);
+        let exp = gpu.membound_ops(Roofline::elementwise_bytes(fmt.bits()));
+        let theo = gpu.peak(gpu_dtype);
+        t.row(vec![
+            format!("{} {}", fmt.name(), op.name()),
+            tops(mem),
+            tops(dram),
+            tops(exp),
+            tops(theo),
+            tops(mem / m.max_power_w),
+            tops(dram / d.max_power_w),
+            tops(exp / gpu.spec.max_power_w),
+            tops(theo / gpu.spec.max_power_w),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("op", Json::s(format!("{} {}", fmt.name(), op.name()))),
+            ("memristive", Json::n(mem)),
+            ("dram", Json::n(dram)),
+            ("gpu_exp", Json::n(exp)),
+            ("gpu_theo", Json::n(theo)),
+        ]));
+        anchors.push((fmt, op, mem, dram));
+    }
+
+    // Measured testbed column (element-wise f32 vectors through PJRT).
+    let mut measured = Table::new(&["operation", "testbed XLA-CPU ops/s"]);
+    for (name, artifact) in [("f32 add", "elementwise_add_f32"), ("f32 mul", "elementwise_mul_f32")] {
+        let secs = measured_secs(ctx, artifact);
+        measured.row(vec![
+            name.into(),
+            na_or(secs.map(|s| (1u64 << 22) as f64 / s), eng3),
+        ]);
+    }
+
+    let mut notes = vec![format!(
+        "paper anchors (memristive): fixed32 add 233 TOPS, fixed32 mul 7.4, fp32 add 33.6, fp32 mul 11.6; \
+         dram: 0.35 / 0.01 / 0.05 / 0.02; gpu exp 0.057; gpu theo 38.7"
+    )];
+    notes.push(
+        "re-derived microcode cycle counts reproduce fixed-point anchors exactly and FP anchors \
+         within ~2x (our circuits are not AritPIM's hand-optimized ones); see EXPERIMENTS.md F3"
+            .into(),
+    );
+
+    Ok(ExperimentResult {
+        id: id.into(),
+        title: format!(
+            "Vectored arithmetic throughput and energy efficiency ({} / {}, GPU {})",
+            fixed_fmt.name(),
+            float_fmt.name(),
+            gpu.spec.name
+        ),
+        sections: vec![
+            Section {
+                caption: "paper-scale systems".into(),
+                table: t,
+            },
+            Section {
+                caption: "measured on this testbed (validates the memory-bound regime only)"
+                    .into(),
+                table: measured,
+            },
+        ],
+        notes,
+        json: Json::obj(vec![("rows", Json::arr(json_rows))]),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Figure 4
+// ---------------------------------------------------------------------------
+
+/// Figure 4: compute complexity vs improvement over the memory-bound GPU.
+pub fn fig4(ctx: &mut Ctx) -> Result<ExperimentResult> {
+    let _ = ctx;
+    let arch = PimArch::paper(GateSet::MemristiveNor);
+    let gpu = Roofline::new(GpuSpec::a6000());
+    let formats = [
+        NumFmt::Fixed(8),
+        NumFmt::Fixed(16),
+        NumFmt::Fixed(32),
+        NumFmt::Float(Format::FP16),
+        NumFmt::Float(Format::FP32),
+        NumFmt::Float(Format::FP64),
+    ];
+    let ops = FixedOp::all();
+    let pts = metrics::cc_sweep(GateSet::MemristiveNor, &arch, &gpu, &formats, &ops);
+    let mut sorted = pts.clone();
+    sorted.sort_by(|a, b| a.cc.partial_cmp(&b.cc).unwrap());
+
+    let mut t = Table::new(&["operation", "CC (gates/bit)", "PIM TOPS", "exp GPU TOPS", "improvement"]);
+    let mut json_rows = Vec::new();
+    for p in &sorted {
+        t.row(vec![
+            format!("{} {}", p.fmt.name(), p.op.name()),
+            format!("{:.1}", p.cc),
+            tops(p.pim_ops),
+            tops(p.gpu_ops),
+            format!("{:.1}x", p.improvement()),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("op", Json::s(format!("{} {}", p.fmt.name(), p.op.name()))),
+            ("cc", Json::n(p.cc)),
+            ("improvement", Json::n(p.improvement())),
+        ]));
+    }
+
+    // Shape check: Spearman-style inverse relation on the sorted list.
+    let improvements: Vec<f64> = sorted.iter().map(|p| p.improvement()).collect();
+    let inversions = improvements
+        .windows(2)
+        .filter(|w| w[1] > w[0] * 1.05)
+        .count();
+    let notes = vec![
+        format!(
+            "inverse CC-improvement relationship: {} of {} adjacent pairs are non-inverted",
+            improvements.len() - 1 - inversions,
+            improvements.len() - 1
+        ),
+        "paper: 16- and 32-bit addition share CC=3 (latency linear in N); multiplication CC grows ~2.5N"
+            .into(),
+    ];
+
+    Ok(ExperimentResult {
+        id: "fig4".into(),
+        title: "Compute complexity vs improvement over memory-bound GPU".into(),
+        sections: vec![Section {
+            caption: "full arithmetic suite (memristive PIM vs experimental A6000)".into(),
+            table: t,
+        }],
+        notes,
+        json: Json::obj(vec![("points", Json::arr(json_rows))]),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Figure 5
+// ---------------------------------------------------------------------------
+
+/// Figure 5: batched n×n fp32 matrix multiplication across systems.
+pub fn fig5(ctx: &mut Ctx) -> Result<ExperimentResult> {
+    let gpu = Roofline::new(GpuSpec::a6000());
+    let m_arch = PimArch::paper(GateSet::MemristiveNor);
+    let d_arch = PimArch::paper(GateSet::DramMaj);
+    let fmt = NumFmt::Float(Format::FP32);
+
+    let mut t = Table::new(&[
+        "n",
+        "memristive mm/s",
+        "dram mm/s",
+        "gpu exp mm/s",
+        "gpu theo mm/s",
+        "memristive mm/s/W",
+        "gpu exp mm/s/W",
+    ]);
+    let mut json_rows = Vec::new();
+    let mut crossover: Option<u64> = None;
+    for n in [8u64, 16, 32, 64, 128, 256] {
+        let mm_m = MatmulModel::new(n, fmt, GateSet::MemristiveNor, m_arch.cols);
+        let mm_d = MatmulModel::new(n, fmt, GateSet::DramMaj, d_arch.cols);
+        let pim = mm_m.throughput(&m_arch);
+        let dram = mm_d.throughput(&d_arch);
+        let exp = gpu.matmul_throughput(n, GpuDtype::F32);
+        let theo = gpu.matmul_throughput_peak(n, GpuDtype::F32);
+        let pim_w = mm_m.throughput_per_watt(&m_arch);
+        let exp_w = gpu.per_watt(exp);
+        if crossover.is_none() && exp_w > pim_w {
+            crossover = Some(n);
+        }
+        t.row(vec![
+            n.to_string(),
+            eng3(pim),
+            eng3(dram),
+            eng3(exp),
+            eng3(theo),
+            eng3(pim_w),
+            eng3(exp_w),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("n", Json::i(n as i64)),
+            ("memristive", Json::n(pim)),
+            ("dram", Json::n(dram)),
+            ("gpu_exp", Json::n(exp)),
+            ("gpu_theo", Json::n(theo)),
+        ]));
+    }
+
+    // Measured testbed series: XLA-CPU batched matmuls. The validated
+    // *shape* is rising achieved FLOP/s with n (data reuse closing the
+    // memory-bound gap) — the same mechanism as the paper's Figure 5.
+    let mut measured = Table::new(&["n", "batch", "testbed matmul/s", "testbed GFLOP/s"]);
+    let mut meas_flops = Vec::new();
+    for (n, batch) in [(16u64, 512u64), (32, 256), (64, 64), (128, 16), (256, 4)] {
+        let secs = measured_secs(ctx, &format!("matmul_n{n}"));
+        let mmps = secs.map(|s| batch as f64 / s);
+        let gflops = mmps.map(|r| r * 2.0 * (n as f64).powi(3) / 1e9);
+        if let Some(g) = gflops {
+            meas_flops.push(g);
+        }
+        measured.row(vec![
+            n.to_string(),
+            batch.to_string(),
+            na_or(mmps, eng3),
+            na_or(gflops, |g| format!("{g:.2}")),
+        ]);
+    }
+
+    let mut notes = vec![format!(
+        "paper shape: exp/theo GPU gap shrinks as n grows; GPU efficiency overtakes PIM near n=128 \
+         (ours: crossover at n={})",
+        crossover.map(|n| n.to_string()).unwrap_or_else(|| ">256".into())
+    )];
+    if meas_flops.len() >= 2 {
+        let rising = meas_flops.windows(2).filter(|w| w[1] > w[0]).count();
+        notes.push(format!(
+            "measured XLA-CPU achieved FLOP/s rises with n in {}/{} steps (reuse closes the \
+             memory-bound gap on this testbed too)",
+            rising,
+            meas_flops.len() - 1
+        ));
+    }
+
+    Ok(ExperimentResult {
+        id: "fig5".into(),
+        title: "Batched n×n fp32 matrix multiplication".into(),
+        sections: vec![
+            Section {
+                caption: "paper-scale systems".into(),
+                table: t,
+            },
+            Section {
+                caption: "measured on this testbed".into(),
+                table: measured,
+            },
+        ],
+        notes,
+        json: Json::obj(vec![("rows", Json::arr(json_rows))]),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Figures 6 and 7
+// ---------------------------------------------------------------------------
+
+fn cnn_figure(
+    ctx: &mut Ctx,
+    id: &str,
+    title: &str,
+    training: bool,
+    gpu_spec: GpuSpec,
+    fmt: NumFmt,
+    gpu_dtype: GpuDtype,
+) -> Result<ExperimentResult> {
+    let gpu = Roofline::new(gpu_spec);
+    let m_arch = PimArch::paper(GateSet::MemristiveNor);
+    let d_arch = PimArch::paper(GateSet::DramMaj);
+
+    let mut t = Table::new(&[
+        "model",
+        "GMACs",
+        "memristive img/s",
+        "dram img/s",
+        "gpu exp img/s",
+        "gpu theo img/s",
+        "memristive img/s/W",
+        "gpu exp img/s/W",
+    ]);
+    let mut json_rows = Vec::new();
+    let mut gpu_beats_pim_eff = 0;
+    let mut models = 0;
+    for base in Workload::paper_models() {
+        let w = if training { base.training() } else { base };
+        let macs = w.total_macs();
+        let pim_m = CnnPimModel::new(fmt, GateSet::MemristiveNor, macs);
+        let pim_d = CnnPimModel::new(fmt, GateSet::DramMaj, macs);
+        let mem = pim_m.throughput(&m_arch);
+        let dram = pim_d.throughput(&d_arch);
+        let scale = if fmt.bits() == 16 { 0.5 } else { 1.0 }; // fp16 halves traffic
+        // Batch-64 roofline: the paper's PyTorch measurements run batched,
+        // so weights are amortized and the CNNs sit in the high-reuse
+        // regime that pins the experimental GPU near its compute roofline.
+        let layers: Vec<(f64, f64)> = w
+            .roofline_layers_batched(64.0)
+            .iter()
+            .map(|&(f, b)| (f, b * scale))
+            .collect();
+        let exp = gpu.workload_flops(&layers, gpu_dtype) / w.total_flops();
+        let theo = gpu.peak(gpu_dtype) / w.total_flops();
+        let mem_w = pim_m.throughput_per_watt(&m_arch);
+        let exp_w = gpu.per_watt(exp);
+        if exp_w > mem_w {
+            gpu_beats_pim_eff += 1;
+        }
+        models += 1;
+        t.row(vec![
+            w.name.clone(),
+            format!("{:.2}", macs / 1e9),
+            format!("{mem:.0}"),
+            format!("{dram:.3}"),
+            format!("{exp:.0}"),
+            format!("{theo:.0}"),
+            format!("{mem_w:.2}"),
+            format!("{exp_w:.2}"),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("model", Json::s(w.name.clone())),
+            ("macs", Json::n(macs)),
+            ("memristive", Json::n(mem)),
+            ("dram", Json::n(dram)),
+            ("gpu_exp", Json::n(exp)),
+            ("gpu_theo", Json::n(theo)),
+            ("memristive_per_w", Json::n(mem_w)),
+            ("gpu_exp_per_w", Json::n(exp_w)),
+        ]));
+    }
+
+    // Measured micro-CNN series through PJRT.
+    let mut measured = Table::new(&["micro model (64x64, motif)", "testbed img/s"]);
+    let arts: Vec<(&str, String)> = if training {
+        vec![("alexnet-motif train", "cnn_alexnet_train_step".to_string())]
+    } else {
+        ["alexnet", "googlenet", "resnet"]
+            .iter()
+            .map(|m| (*m, format!("cnn_{m}_fwd")))
+            .collect()
+    };
+    for (label, artifact) in arts {
+        let secs = measured_secs(ctx, &artifact);
+        measured.row(vec![
+            label.to_string(),
+            na_or(secs.map(|s| 8.0 / s), |x| format!("{x:.1}")),
+        ]);
+    }
+
+    let notes = vec![
+        format!(
+            "paper conclusion: digital PIM does not beat the experimental GPU on full-precision \
+             CNNs; here the GPU wins on energy efficiency for {gpu_beats_pim_eff}/{models} models"
+        ),
+        "exp GPU sits near its compute roofline because per-layer OI is high; residual adds and \
+         1x1 convolutions pull ResNet/GoogLeNet further from peak than AlexNet (paper §5)"
+            .into(),
+    ];
+
+    Ok(ExperimentResult {
+        id: id.into(),
+        title: title.into(),
+        sections: vec![
+            Section {
+                caption: "paper-scale systems (fp32 unless noted)".into(),
+                table: t,
+            },
+            Section {
+                caption: "measured micro-CNNs on this testbed (motif validation)".into(),
+                table: measured,
+            },
+        ],
+        notes,
+        json: Json::obj(vec![("rows", Json::arr(json_rows))]),
+    })
+}
+
+/// Figure 6: full-precision CNN inference.
+pub fn fig6(ctx: &mut Ctx) -> Result<ExperimentResult> {
+    cnn_figure(
+        ctx,
+        "fig6",
+        "Full-precision CNN inference throughput and energy efficiency",
+        false,
+        GpuSpec::a6000(),
+        NumFmt::Float(Format::FP32),
+        GpuDtype::F32,
+    )
+}
+
+/// Figure 7: full-precision CNN training.
+pub fn fig7(ctx: &mut Ctx) -> Result<ExperimentResult> {
+    cnn_figure(
+        ctx,
+        "fig7",
+        "Full-precision CNN training throughput and energy efficiency",
+        true,
+        GpuSpec::a6000(),
+        NumFmt::Float(Format::FP32),
+        GpuDtype::F32,
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Figure 8
+// ---------------------------------------------------------------------------
+
+/// Figure 8: the criteria summary — CC and reuse per workload with the
+/// PIM/GPU verdict.
+pub fn fig8(ctx: &mut Ctx) -> Result<ExperimentResult> {
+    let _ = ctx;
+    let fixed_add = NumFmt::Fixed(32).program(FixedOp::Add, GateSet::MemristiveNor);
+    let fp_mul = NumFmt::Float(Format::FP32).program(FixedOp::Mul, GateSet::MemristiveNor);
+    let cc_add = metrics::compute_complexity(&fixed_add, metrics::io_bits(FixedOp::Add, NumFmt::Fixed(32)));
+    let cc_mul = metrics::compute_complexity(&fp_mul, metrics::io_bits(FixedOp::Mul, NumFmt::Float(Format::FP32)));
+
+    let mut rows = vec![
+        metrics::classify("vectored fixed32 add", cc_add, 2.0 / 12.0),
+        metrics::classify("vectored fp32 mul", cc_mul, 2.0 / 12.0),
+    ];
+    let mm = 128.0;
+    rows.push(metrics::classify(
+        "batched matmul n=128 fp32",
+        cc_mul,
+        mm / 6.0, // OI of an n×n fp32 matmul = n/6
+    ));
+    let mut zoo = Workload::paper_models();
+    zoo.push(crate::workloads::models::vgg16());
+    zoo.push(crate::workloads::models::mobilenet_v1());
+    for w in zoo {
+        rows.push(metrics::classify(
+            &format!("{} inference fp32", w.name),
+            cc_mul,
+            w.reuse_batched(64.0),
+        ));
+    }
+    let dec = decode_workload(DecodeConfig::llama7b(2048));
+    rows.push(metrics::classify("LLM attention decode", cc_mul, dec.reuse()));
+
+    let mut t = Table::new(&["workload", "CC (gates/bit)", "reuse (FLOP/byte)", "verdict"]);
+    let mut json_rows = Vec::new();
+    for r in &rows {
+        t.row(vec![
+            r.workload.clone(),
+            format!("{:.1}", r.cc),
+            format!("{:.2}", r.reuse),
+            format!("{:?}", r.verdict),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("workload", Json::s(r.workload.clone())),
+            ("cc", Json::n(r.cc)),
+            ("reuse", Json::n(r.reuse)),
+            ("verdict", Json::s(format!("{:?}", r.verdict))),
+        ]));
+    }
+
+    Ok(ExperimentResult {
+        id: "fig8".into(),
+        title: "Criteria indicative of PIM vs traditional computing".into(),
+        sections: vec![Section {
+            caption: format!(
+                "thresholds: CC <= {} or reuse <= {} FLOP/byte favors PIM",
+                metrics::CC_THRESHOLD,
+                metrics::REUSE_THRESHOLD
+            ),
+            table: t,
+        }],
+        notes: vec![
+            "paper: CNNs combine high CC and high reuse (GPU side); attention decode is the \
+             counter-example the discussion highlights"
+                .into(),
+        ],
+        json: Json::obj(vec![("rows", Json::arr(json_rows))]),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Sensitivity studies
+// ---------------------------------------------------------------------------
+
+/// S1: GPU choice (A100 + extras re-run of the Fig 3/6 cores).
+pub fn sens_gpu(ctx: &mut Ctx) -> Result<ExperimentResult> {
+    let mut sections = Vec::new();
+    let fixed = NumFmt::Fixed(32);
+    let flt = NumFmt::Float(Format::FP32);
+    let m_arch = PimArch::paper(GateSet::MemristiveNor);
+    let add = flt.program(FixedOp::Add, GateSet::MemristiveNor);
+    let pim_fp_add = m_arch.throughput(&add);
+
+    let mut t = Table::new(&[
+        "gpu",
+        "exp elementwise TOPS",
+        "theo TOPS",
+        "PIM fp32-add improvement",
+        "ResNet-50 exp img/s",
+        "ResNet-50 theo img/s",
+    ]);
+    let resnet = crate::workloads::models::resnet50();
+    for spec in GpuSpec::all() {
+        let gpu = Roofline::new(spec);
+        let exp = gpu.membound_ops(Roofline::elementwise_bytes(32));
+        let theo = gpu.peak(GpuDtype::F32);
+        let exp_img = gpu.workload_flops(&resnet.roofline_layers_batched(64.0), GpuDtype::F32)
+            / resnet.total_flops();
+        let theo_img = theo / resnet.total_flops();
+        t.row(vec![
+            spec.name.into(),
+            tops(exp),
+            tops(theo),
+            format!("{:.0}x", pim_fp_add / exp),
+            format!("{exp_img:.0}"),
+            format!("{theo_img:.0}"),
+        ]);
+    }
+    sections.push(Section {
+        caption: "GPU sensitivity (fp32; PIM side unchanged)".into(),
+        table: t,
+    });
+    let _ = (ctx, fixed);
+
+    Ok(ExperimentResult {
+        id: "sens-gpu".into(),
+        title: "Sensitivity: GPU choice".into(),
+        sections,
+        notes: vec![
+            "paper (code repository): the A100's higher bandwidth shrinks the PIM improvement on \
+             memory-bound ops; trends unchanged"
+                .into(),
+        ],
+        json: Json::obj(vec![]),
+    })
+}
+
+/// S2: 16-bit floating-point quantization.
+pub fn sens_fp16(ctx: &mut Ctx) -> Result<ExperimentResult> {
+    let mut r = fig3_for(
+        ctx,
+        GpuSpec::a6000(),
+        NumFmt::Fixed(16),
+        NumFmt::Float(Format::FP16),
+        "sens-fp16",
+    )?;
+    let cnn = cnn_figure(
+        ctx,
+        "sens-fp16-cnn",
+        "CNN inference at fp16",
+        false,
+        GpuSpec::a6000(),
+        NumFmt::Float(Format::FP16),
+        GpuDtype::F16Tensor,
+    )?;
+    r.title = "Sensitivity: 16-bit precision".into();
+    r.sections.extend(cnn.sections);
+    r.notes = vec![
+        "fp16 lowers PIM gate counts (~4x for mul: 11-bit mantissa) but the GPU tensor cores gain \
+         4x too — the paper's conclusion is precision-stable"
+            .into(),
+    ];
+    Ok(r)
+}
+
+/// S3: PIM parallelism (crossbar dimension sweep).
+pub fn sens_dims(ctx: &mut Ctx) -> Result<ExperimentResult> {
+    let _ = ctx;
+    let fmt = NumFmt::Float(Format::FP32);
+    let add32 = NumFmt::Fixed(32).program(FixedOp::Add, GateSet::MemristiveNor);
+    let resnet = crate::workloads::models::resnet50();
+    let mut t = Table::new(&[
+        "crossbar (rows x cols)",
+        "total rows R",
+        "fixed32-add TOPS",
+        "ResNet-50 img/s",
+        "max power W",
+    ]);
+    let mut configs: Vec<(u64, u64)> = vec![(256, 1024), (1024, 1024), (4096, 1024), (65536, 1024)];
+    configs.push((1024, 512));
+    configs.push((1024, 2048));
+    for (rows, cols) in configs {
+        let arch = PimArch::with_dims(GateSet::MemristiveNor, rows, cols);
+        let cnn = CnnPimModel::new(fmt, GateSet::MemristiveNor, resnet.total_macs());
+        t.row(vec![
+            format!("{rows}x{cols}"),
+            eng3(arch.total_rows() as f64),
+            tops(arch.throughput(&add32)),
+            format!("{:.0}", cnn.throughput(&arch)),
+            format!("{:.0}", arch.max_power_w),
+        ]);
+    }
+    Ok(ExperimentResult {
+        id: "sens-dims".into(),
+        title: "Sensitivity: PIM parallelism (crossbar dimensions)".into(),
+        sections: vec![Section {
+            caption: "memristive technology, 48 GB memory held constant".into(),
+            table: t,
+        }],
+        notes: vec![
+            "R = mem_bits / cols is row-count invariant: taller crossbars do not add parallelism \
+             at fixed memory size; narrower columns do (but cap the row bit-field)"
+                .into(),
+        ],
+        json: Json::obj(vec![]),
+    })
+}

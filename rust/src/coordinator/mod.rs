@@ -1,0 +1,173 @@
+//! Experiment coordinator: the registry and runner that regenerate every
+//! table and figure of the paper.
+//!
+//! Each experiment (one per paper artifact, see DESIGN.md §4) combines
+//! three kinds of numbers:
+//!
+//! * **paper-scale analytic** — the PIM architecture model
+//!   ([`crate::pim::arch`]) and GPU rooflines ([`crate::gpumodel`]) at
+//!   Table 1 parameters; these are the figures the paper plots;
+//! * **measured (testbed)** — real executions of the AOT artifacts
+//!   through the PJRT runtime on this machine's CPU backend; these
+//!   validate *relative* behaviour (orderings, gap shapes) and are
+//!   labelled as testbed numbers, never mixed with paper-scale ones;
+//! * **bit-exact validation** — crossbar-simulator runs that gate the
+//!   analytic cycle counts behind real executions of the same microcode.
+//!
+//! The runner renders results as aligned text (console), markdown, CSV
+//! and JSON under `results/`.
+
+pub mod experiments;
+pub mod report;
+
+use anyhow::Result;
+
+use crate::runtime::Engine;
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// Shared context for experiment execution.
+pub struct Ctx {
+    /// PJRT engine when artifacts are available (measured series);
+    /// `None` runs the analytic/validation parts only.
+    pub engine: Option<Engine>,
+    /// Reduce measured iteration counts (CI mode).
+    pub fast: bool,
+    /// Random seed for synthesized measured inputs.
+    pub seed: u64,
+}
+
+impl Ctx {
+    /// Build a context, attaching the engine if artifacts exist.
+    pub fn new(fast: bool) -> Ctx {
+        let engine = match Engine::new() {
+            Ok(e) => Some(e),
+            Err(err) => {
+                eprintln!("note: measured series disabled ({err:#})");
+                None
+            }
+        };
+        Ctx {
+            engine,
+            fast,
+            seed: 0xC0FFEE,
+        }
+    }
+
+    /// Analytic-only context (no artifacts needed).
+    pub fn analytic() -> Ctx {
+        Ctx {
+            engine: None,
+            fast: true,
+            seed: 0xC0FFEE,
+        }
+    }
+
+    /// Measured iterations for a timed run.
+    pub fn iters(&self) -> usize {
+        if self.fast {
+            2
+        } else {
+            5
+        }
+    }
+}
+
+/// One table within an experiment result.
+pub struct Section {
+    pub caption: String,
+    pub table: Table,
+}
+
+/// The output of one experiment.
+pub struct ExperimentResult {
+    /// Registry id (`fig3`, `table1`, `sens-gpu`, …).
+    pub id: String,
+    /// Human title (matches the paper artifact).
+    pub title: String,
+    pub sections: Vec<Section>,
+    /// Free-form observations (shape checks, paper-delta notes).
+    pub notes: Vec<String>,
+    /// Machine-readable payload for results/<id>.json.
+    pub json: Json,
+}
+
+impl ExperimentResult {
+    /// Render for the console.
+    pub fn text(&self) -> String {
+        let mut out = format!("## {} — {}\n\n", self.id, self.title);
+        for s in &self.sections {
+            out.push_str(&format!("{}\n{}\n", s.caption, s.table.text()));
+        }
+        for n in &self.notes {
+            out.push_str(&format!("note: {n}\n"));
+        }
+        out
+    }
+
+    /// Render as markdown.
+    pub fn markdown(&self) -> String {
+        let mut out = format!("## {} — {}\n\n", self.id, self.title);
+        for s in &self.sections {
+            out.push_str(&format!("**{}**\n\n{}\n", s.caption, s.table.markdown()));
+        }
+        if !self.notes.is_empty() {
+            out.push_str("Notes:\n");
+            for n in &self.notes {
+                out.push_str(&format!("- {n}\n"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// All experiment ids, in paper order.
+pub fn all_ids() -> Vec<&'static str> {
+    vec![
+        "table1", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "sens-gpu", "sens-fp16",
+        "sens-dims",
+    ]
+}
+
+/// Run one experiment by id.
+pub fn run_experiment(id: &str, ctx: &mut Ctx) -> Result<ExperimentResult> {
+    match id {
+        "table1" => experiments::table1(ctx),
+        "fig3" => experiments::fig3(ctx),
+        "fig4" => experiments::fig4(ctx),
+        "fig5" => experiments::fig5(ctx),
+        "fig6" => experiments::fig6(ctx),
+        "fig7" => experiments::fig7(ctx),
+        "fig8" => experiments::fig8(ctx),
+        "sens-gpu" => experiments::sens_gpu(ctx),
+        "sens-fp16" => experiments::sens_fp16(ctx),
+        "sens-dims" => experiments::sens_dims(ctx),
+        other => anyhow::bail!(
+            "unknown experiment `{other}`; available: {}",
+            all_ids().join(", ")
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_registered_id_runs_analytically() {
+        let mut ctx = Ctx::analytic();
+        for id in all_ids() {
+            let r = run_experiment(id, &mut ctx).unwrap_or_else(|e| panic!("{id}: {e:#}"));
+            assert!(!r.sections.is_empty(), "{id} produced no tables");
+            assert!(!r.text().is_empty());
+            assert!(!r.markdown().is_empty());
+        }
+    }
+
+    #[test]
+    fn unknown_id_errors() {
+        let mut ctx = Ctx::analytic();
+        assert!(run_experiment("fig99", &mut ctx).is_err());
+    }
+}

@@ -1,0 +1,159 @@
+//! GPU datasheet database (Table 1 plus sensitivity-study devices).
+
+/// Numeric precision for GPU peak-throughput lookup.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GpuDtype {
+    /// IEEE fp32 on CUDA cores.
+    F32,
+    /// fp16 on CUDA cores (2× fp32 rate on these parts).
+    F16,
+    /// fp16 on tensor cores (matmul/conv only).
+    F16Tensor,
+}
+
+/// One GPU's datasheet parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// Streaming multiprocessors.
+    pub sms: u32,
+    /// CUDA cores (Table 1 "Number of Cores").
+    pub cores: u32,
+    /// Device memory, bytes.
+    pub mem_bytes: u64,
+    /// Memory bandwidth, bytes/s (Table 1).
+    pub mem_bw: f64,
+    /// Boost clock, Hz (Table 1 reports base; peaks use boost FLOPs).
+    pub clock_hz: f64,
+    /// Peak fp32 throughput, FLOP/s.
+    pub peak_f32: f64,
+    /// Peak fp16 (CUDA-core path), FLOP/s.
+    pub peak_f16: f64,
+    /// Peak fp16 tensor-core throughput, FLOP/s.
+    pub peak_f16_tensor: f64,
+    /// Max board power, W (Table 1 normalization).
+    pub max_power_w: f64,
+}
+
+impl GpuSpec {
+    /// NVIDIA RTX A6000 (the paper's workstation GPU; Table 1).
+    pub fn a6000() -> GpuSpec {
+        GpuSpec {
+            name: "A6000",
+            sms: 84,
+            cores: 10752,
+            mem_bytes: 48 * (1 << 30),
+            mem_bw: 768e9,
+            clock_hz: 1410e6,
+            peak_f32: 38.7e12,
+            peak_f16: 38.7e12,
+            peak_f16_tensor: 155e12,
+            max_power_w: 300.0,
+        }
+    }
+
+    /// NVIDIA A100 80GB (the paper's datacenter GPU; Table 1).
+    pub fn a100() -> GpuSpec {
+        GpuSpec {
+            name: "A100",
+            sms: 108,
+            cores: 6912,
+            mem_bytes: 80 * (1 << 30),
+            mem_bw: 1935e9,
+            clock_hz: 1065e6,
+            peak_f32: 19.5e12,
+            peak_f16: 78e12,
+            peak_f16_tensor: 312e12,
+            max_power_w: 300.0,
+        }
+    }
+
+    /// NVIDIA V100 (sensitivity extra).
+    pub fn v100() -> GpuSpec {
+        GpuSpec {
+            name: "V100",
+            sms: 80,
+            cores: 5120,
+            mem_bytes: 32 * (1 << 30),
+            mem_bw: 900e9,
+            clock_hz: 1380e6,
+            peak_f32: 15.7e12,
+            peak_f16: 31.4e12,
+            peak_f16_tensor: 125e12,
+            max_power_w: 300.0,
+        }
+    }
+
+    /// NVIDIA RTX 3090 (sensitivity extra).
+    pub fn rtx3090() -> GpuSpec {
+        GpuSpec {
+            name: "RTX3090",
+            sms: 82,
+            cores: 10496,
+            mem_bytes: 24 * (1 << 30),
+            mem_bw: 936e9,
+            clock_hz: 1695e6,
+            peak_f32: 35.6e12,
+            peak_f16: 35.6e12,
+            peak_f16_tensor: 142e12,
+            max_power_w: 350.0,
+        }
+    }
+
+    /// Datasheet peak for a precision.
+    pub fn peak(&self, dtype: GpuDtype) -> f64 {
+        match dtype {
+            GpuDtype::F32 => self.peak_f32,
+            GpuDtype::F16 => self.peak_f16,
+            GpuDtype::F16Tensor => self.peak_f16_tensor,
+        }
+    }
+
+    /// All specs, for sensitivity sweeps.
+    pub fn all() -> Vec<GpuSpec> {
+        vec![
+            GpuSpec::a6000(),
+            GpuSpec::a100(),
+            GpuSpec::v100(),
+            GpuSpec::rtx3090(),
+        ]
+    }
+
+    /// Look up by (case-insensitive) name.
+    pub fn by_name(name: &str) -> Option<GpuSpec> {
+        GpuSpec::all()
+            .into_iter()
+            .find(|s| s.name.eq_ignore_ascii_case(name))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_parameters() {
+        let a = GpuSpec::a6000();
+        assert_eq!(a.cores, 10752);
+        assert_eq!(a.mem_bytes, 48 * (1 << 30));
+        assert_eq!(a.mem_bw, 768e9);
+        assert_eq!(a.max_power_w, 300.0);
+        let b = GpuSpec::a100();
+        assert_eq!(b.cores, 6912);
+        assert_eq!(b.mem_bw, 1935e9);
+    }
+
+    #[test]
+    fn peak_consistency() {
+        // Peak fp32 ~ 2 FLOP × cores × boost clock (datasheet identity).
+        let a = GpuSpec::a6000();
+        let derived = 2.0 * a.cores as f64 * 1.8e9; // 1.8 GHz boost
+        assert!((a.peak_f32 / derived - 1.0).abs() < 0.02, "{derived:e}");
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(GpuSpec::by_name("a100").unwrap().name, "A100");
+        assert!(GpuSpec::by_name("h100").is_none());
+    }
+}

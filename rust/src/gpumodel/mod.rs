@@ -1,0 +1,24 @@
+//! GPU baseline models: datasheet database and rooflines.
+//!
+//! The paper compares digital PIM against two GPU numbers (§2.1):
+//!
+//! * **experimental** — measured PyTorch performance, which for
+//!   memory-bound vectored arithmetic sits at `>94%` of
+//!   `bandwidth / bytes-per-op` (§3) and for high-reuse kernels approaches
+//!   the compute roofline scaled by cache behaviour (§4–5);
+//! * **theoretical** — datasheet peak compute throughput.
+//!
+//! With no physical GPU on this testbed, this module reproduces both
+//! numbers analytically from the Table 1 datasheet parameters (see
+//! DESIGN.md §2 "Substitutions"): the *theoretical* number is the
+//! datasheet peak; the *experimental* number is the per-workload roofline
+//! `min(peak × launch_eff, OI × BW × bw_eff)`, which is precisely the
+//! quantity the paper's measurements empirically landed on. The measured
+//! XLA-CPU runs (see `runtime`) validate relative behaviour (model
+//! orderings, reuse-driven gaps) on real executions.
+
+pub mod datasheet;
+pub mod roofline;
+
+pub use datasheet::{GpuDtype, GpuSpec};
+pub use roofline::Roofline;

@@ -1,0 +1,65 @@
+//! # convpim
+//!
+//! A from-scratch reproduction of **"Performance Analysis of Digital
+//! Processing-in-Memory through a Case Study on Convolutional-Neural-Network
+//! Acceleration"** (Leitersdorf, Ronen, Kvatinsky, 2023 — *ConvPIM*).
+//!
+//! The crate rebuilds the paper's entire evaluation apparatus:
+//!
+//! * [`pim`] — a bit-exact digital processing-in-memory simulator: crossbar
+//!   arrays executing column-parallel logic gates (memristive stateful logic
+//!   and in-DRAM majority gates), plus microcode compilers for the AritPIM
+//!   bit-serial element-parallel arithmetic suite (fixed-point and IEEE-754
+//!   floating-point) and the MatPIM matrix-multiplication / convolution
+//!   schedules, and architecture-scale throughput/energy models.
+//! * [`gpumodel`] — GPU datasheet database and memory/compute roofline
+//!   models that reproduce the paper's "experimental" (memory-bound) and
+//!   "theoretical" (compute-bound) GPU baselines.
+//! * [`workloads`] — a CNN workload zoo (AlexNet, GoogLeNet, ResNet-50) with
+//!   per-layer FLOP/traffic/reuse analysis for inference and training, plus
+//!   the LLM attention-decode workload from the paper's discussion.
+//! * [`metrics`] — the paper's analysis metrics: compute complexity
+//!   (gates/bit), data reuse, throughput, and energy efficiency.
+//! * [`coordinator`] — the experiment registry and runner that regenerates
+//!   every table and figure of the paper, and the report generator.
+//! * [`runtime`] — the PJRT runtime that loads the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) and executes them from Rust; Python
+//!   never runs at experiment time.
+//! * [`util`] — support code (deterministic PRNG, JSON/CSV emitters, table
+//!   formatting, micro-benchmark harness, CLI parsing) hand-rolled because
+//!   the build environment's offline registry does not carry the usual
+//!   crates (clap/serde/criterion/rayon/proptest).
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use convpim::pim::{
+//!     arch::PimArch,
+//!     fixed::{self, FixedLayout, FixedOp},
+//!     gates::GateSet,
+//!     xbar::Crossbar,
+//! };
+//!
+//! // Compile a 32-bit fixed-point vector addition to memristive microcode.
+//! let prog = fixed::program(FixedOp::Add, 32, GateSet::MemristiveNor);
+//! // Execute it bit-exactly on a simulated crossbar (one element per row).
+//! let lay = FixedLayout::new(FixedOp::Add, 32);
+//! let mut xbar = Crossbar::new(1024, prog.width() as usize);
+//! fixed::load_operands(&mut xbar, &lay, &vec![3; 1024], &vec![4; 1024]);
+//! xbar.execute(&prog);
+//! assert!(fixed::read_result(&xbar, &lay, 1024).iter().all(|&z| z == 7));
+//! // Scale to the paper's 48 GB memory to get architecture throughput.
+//! let arch = PimArch::paper(GateSet::MemristiveNor);
+//! println!("memristive fixed32 add: {:.1} TOPS", arch.throughput(&prog) / 1e12);
+//! ```
+
+pub mod coordinator;
+pub mod gpumodel;
+pub mod metrics;
+pub mod pim;
+pub mod runtime;
+pub mod util;
+pub mod workloads;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

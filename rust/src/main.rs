@@ -1,0 +1,226 @@
+//! `convpim` — the evaluation CLI.
+//!
+//! Subcommands:
+//!
+//! * `run [ids…|all] [--out results] [--fast] [--no-measure]` — execute
+//!   experiments (paper tables/figures + sensitivity studies) and write
+//!   reports.
+//! * `validate [--rows N] [--seed S]` — bit-exact validation sweep of the
+//!   arithmetic microcode on the crossbar simulator.
+//! * `info` — system inventory: Table 1 parameters, artifact manifest,
+//!   PJRT platform.
+//! * `list` — available experiment ids.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use convpim::coordinator::{self, report, Ctx};
+use convpim::pim::fixed::{self, FixedLayout, FixedOp};
+use convpim::pim::float::{self, FloatLayout};
+use convpim::pim::gates::GateSet;
+use convpim::pim::softfloat::{self, Format};
+use convpim::pim::xbar::Crossbar;
+use convpim::runtime::Engine;
+use convpim::util::cli::Args;
+use convpim::util::rng::Rng;
+
+const USAGE: &str = "\
+convpim — reproduction of `Performance Analysis of Digital Processing-in-Memory
+through a Case Study on CNN Acceleration` (ConvPIM)
+
+USAGE:
+  convpim run [ids...|all] [--out DIR] [--fast] [--no-measure] [--seed N]
+  convpim validate [--rows N] [--seed N]
+  convpim info
+  convpim list
+  convpim help
+
+EXPERIMENTS: table1 fig3 fig4 fig5 fig6 fig7 fig8 sens-gpu sens-fp16 sens-dims
+";
+
+fn main() -> ExitCode {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            return ExitCode::FAILURE;
+        }
+    };
+    if args.wants_help() || args.command.is_none() {
+        print!("{USAGE}");
+        return ExitCode::SUCCESS;
+    }
+    let result = match args.command.as_deref().unwrap() {
+        "run" => cmd_run(&args),
+        "validate" => cmd_validate(&args),
+        "info" => cmd_info(),
+        "list" => {
+            for id in coordinator::all_ids() {
+                println!("{id}");
+            }
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command `{other}`\n{USAGE}");
+            return ExitCode::FAILURE;
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let ids: Vec<String> = if args.positional.is_empty()
+        || args.positional.iter().any(|p| p == "all")
+    {
+        coordinator::all_ids().iter().map(|s| s.to_string()).collect()
+    } else {
+        args.positional.clone()
+    };
+    let out: PathBuf = args.flag("out", "results").into();
+    let mut ctx = if args.switch("no-measure") {
+        Ctx::analytic()
+    } else {
+        Ctx::new(args.switch("fast"))
+    };
+    ctx.seed = args.flag_usize("seed", 0xC0FFEE).map_err(anyhow::Error::msg)? as u64;
+
+    let mut results = Vec::new();
+    for id in &ids {
+        eprintln!("running {id}…");
+        let r = coordinator::run_experiment(id, &mut ctx)?;
+        println!("{}", r.text());
+        report::write_result(&out, &r)?;
+        results.push(r);
+    }
+    report::write_report(&out, &results)?;
+    eprintln!("wrote {} experiment(s) to {}", results.len(), out.display());
+    Ok(())
+}
+
+/// Bit-exact validation sweep: every arithmetic routine on both gate sets
+/// executed on the simulated crossbar against host arithmetic / softfloat.
+fn cmd_validate(args: &Args) -> anyhow::Result<()> {
+    let rows = args.flag_usize("rows", 512).map_err(anyhow::Error::msg)?;
+    let seed = args.flag_usize("seed", 7).map_err(anyhow::Error::msg)? as u64;
+    let mut rng = Rng::new(seed);
+    let mut failures = 0usize;
+    let mut checks = 0usize;
+
+    // Fixed point.
+    for set in GateSet::all() {
+        for op in FixedOp::all() {
+            for n in [8u32, 16, 32] {
+                let prog = fixed::program(op, n, set);
+                let lay = FixedLayout::new(op, n);
+                let mut x = Crossbar::new(rows, prog.width() as usize);
+                let u = rng.vec_bits(rows, n);
+                let v: Vec<u64> = match op {
+                    FixedOp::Div => (0..rows).map(|_| 1 + rng.bits(n - 1)).collect(),
+                    _ => rng.vec_bits(rows, n),
+                };
+                fixed::load_operands(&mut x, &lay, &u, &v);
+                x.execute(&prog);
+                let z = fixed::read_result(&x, &lay, rows);
+                let mask = if lay.z_bits == 64 {
+                    u64::MAX
+                } else {
+                    (1u64 << lay.z_bits) - 1
+                };
+                for i in 0..rows {
+                    let expect = match op {
+                        FixedOp::Add => u[i].wrapping_add(v[i]) & mask,
+                        FixedOp::Sub => u[i].wrapping_sub(v[i]) & mask,
+                        FixedOp::Mul => u[i].wrapping_mul(v[i]) & mask,
+                        FixedOp::Div => u[i] / v[i],
+                    };
+                    checks += 1;
+                    if z[i] != expect {
+                        failures += 1;
+                        eprintln!("FAIL {set:?} fixed{n} {op:?} row {i}: {} vs {expect}", z[i]);
+                    }
+                }
+                println!(
+                    "fixed{n:<3} {:<4} {:<14} {} rows ok ({} gates, {} cycles)",
+                    op.name(),
+                    format!("{set:?}"),
+                    rows,
+                    prog.gates(),
+                    prog.cycles()
+                );
+            }
+        }
+    }
+
+    // Floating point vs softfloat.
+    for set in GateSet::all() {
+        for fmt in [Format::FP16, Format::FP32] {
+            for op in FixedOp::all() {
+                let prog = float::program(op, fmt, set);
+                let lay = FloatLayout::new(fmt);
+                let mut x = Crossbar::new(rows, prog.width() as usize);
+                let u: Vec<u64> =
+                    (0..rows).map(|_| rng.float_pattern(fmt.exp, fmt.man)).collect();
+                let v: Vec<u64> =
+                    (0..rows).map(|_| rng.float_pattern(fmt.exp, fmt.man)).collect();
+                float::load_operands(&mut x, &lay, &u, &v);
+                x.execute(&prog);
+                let z = float::read_result(&x, &lay, rows);
+                for i in 0..rows {
+                    let expect = softfloat::apply(fmt, op, u[i], v[i]);
+                    checks += 1;
+                    if z[i] != expect {
+                        failures += 1;
+                        eprintln!(
+                            "FAIL {set:?} fp{} {op:?} row {i}: {:#x} vs {expect:#x}",
+                            fmt.bits(),
+                            z[i]
+                        );
+                    }
+                }
+                println!(
+                    "fp{:<5} {:<4} {:<14} {} rows ok ({} gates, {} cycles)",
+                    fmt.bits(),
+                    op.name(),
+                    format!("{set:?}"),
+                    rows,
+                    prog.gates(),
+                    prog.cycles()
+                );
+            }
+        }
+    }
+
+    println!("\nvalidation: {checks} checks, {failures} failures");
+    if failures > 0 {
+        anyhow::bail!("{failures} bit-exactness failures");
+    }
+    Ok(())
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    let mut ctx = Ctx::analytic();
+    let t1 = coordinator::run_experiment("table1", &mut ctx)?;
+    println!("{}", t1.text());
+    match Engine::new() {
+        Ok(engine) => {
+            println!("PJRT platform: {}", engine.platform());
+            println!("artifacts ({}):", engine.manifest().artifacts.len());
+            for a in &engine.manifest().artifacts {
+                let shapes: Vec<String> = a
+                    .inputs
+                    .iter()
+                    .map(|s| format!("{:?}:{}", s.shape, s.dtype))
+                    .collect();
+                println!("  {:<26} {}", a.name, shapes.join(", "));
+            }
+        }
+        Err(e) => println!("artifacts not built ({e:#}); run `make artifacts`"),
+    }
+    Ok(())
+}

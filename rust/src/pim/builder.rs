@@ -1,0 +1,1110 @@
+//! Logic-synthesis EDSL over crossbar columns.
+//!
+//! The arithmetic compilers ([`crate::pim::fixed`], [`crate::pim::float`])
+//! build their microcode through this builder: it manages scratch-column
+//! allocation (with a free list, so long programs stay within the 1024
+//! physical columns of a crossbar), lazily materializes constant columns,
+//! and emits gate-set-appropriate realizations of the standard logic
+//! primitives — NOT/AND/OR/XOR/MUX, the 9-gate MAGIC full adder, the
+//! 5-op MAJ/NOT full adder, ripple adders/subtractors, saturating barrel
+//! shifters with sticky (jamming) collection, and left-normalizers with
+//! shift-count extraction.
+//!
+//! Conventions: multi-bit words are `Vec<Col>` in little-endian order
+//! (index 0 = LSB). Builder methods never free their *inputs*; they free
+//! any internal temporaries. Callers free words they no longer need via
+//! [`Builder::free_word`] to keep the live-column footprint small.
+
+use super::gates::GateSet;
+use super::isa::{Col, Instr, Program};
+
+/// Microcode builder for one gate set.
+pub struct Builder {
+    set: GateSet,
+    prog: Program,
+    next: Col,
+    free: Vec<Col>,
+    zero: Option<Col>,
+    one: Option<Col>,
+}
+
+impl Builder {
+    /// Create a builder whose first `reserved` columns are caller-managed
+    /// operand/result fields (never allocated as scratch).
+    pub fn new(set: GateSet, reserved: Col) -> Self {
+        Builder {
+            set,
+            prog: Program::new(set),
+            next: reserved,
+            free: Vec::new(),
+            zero: None,
+            one: None,
+        }
+    }
+
+    /// The target gate set.
+    pub fn set(&self) -> GateSet {
+        self.set
+    }
+
+    /// Finish and return the program.
+    pub fn finish(self) -> Program {
+        self.prog
+    }
+
+    /// Allocate a scratch column (contents undefined until written).
+    pub fn alloc(&mut self) -> Col {
+        if let Some(c) = self.free.pop() {
+            c
+        } else {
+            let c = self.next;
+            self.next += 1;
+            c
+        }
+    }
+
+    /// Allocate a word of `n` scratch columns.
+    pub fn alloc_word(&mut self, n: usize) -> Vec<Col> {
+        (0..n).map(|_| self.alloc()).collect()
+    }
+
+    /// Return a scratch column to the free list.
+    pub fn free(&mut self, c: Col) {
+        debug_assert!(!self.free.contains(&c), "double free of column {c}");
+        self.free.push(c);
+    }
+
+    /// Free every column of a word.
+    pub fn free_word(&mut self, w: &[Col]) {
+        for &c in w {
+            self.free(c);
+        }
+    }
+
+    /// Initialize an *owned* column to a constant (e.g. a rolling
+    /// accumulator seed). For shared constants prefer [`Builder::zero`] /
+    /// [`Builder::one`].
+    pub fn push_set(&mut self, col: Col, bit: bool) {
+        self.prog.push(Instr::Set { out: col, bit });
+    }
+
+    /// The constant-0 column (materialized once).
+    pub fn zero(&mut self) -> Col {
+        if let Some(z) = self.zero {
+            return z;
+        }
+        let z = self.alloc();
+        self.prog.push(Instr::Set { out: z, bit: false });
+        self.zero = Some(z);
+        z
+    }
+
+    /// The constant-1 column (materialized once).
+    pub fn one(&mut self) -> Col {
+        if let Some(o) = self.one {
+            return o;
+        }
+        let o = self.alloc();
+        self.prog.push(Instr::Set { out: o, bit: true });
+        self.one = Some(o);
+        o
+    }
+
+    /// A constant word of `n` bits holding `value` (shares the two
+    /// constant columns; no per-bit gates).
+    pub fn const_word(&mut self, n: usize, value: u64) -> Vec<Col> {
+        (0..n)
+            .map(|k| {
+                if (value >> k) & 1 == 1 {
+                    self.one()
+                } else {
+                    self.zero()
+                }
+            })
+            .collect()
+    }
+
+    // ---- bit primitives -------------------------------------------------
+
+    /// Emit `out = !(a | b)` into a fresh column.
+    fn raw_nor(&mut self, a: Col, b: Col) -> Col {
+        let out = self.alloc();
+        match self.set {
+            GateSet::MemristiveNor => self.prog.push(Instr::Nor2 { a, b, out }),
+            GateSet::DramMaj => {
+                // or = maj(a, b, 1), then negate.
+                let one = self.one();
+                let t = self.alloc();
+                self.prog.push(Instr::Maj3 { a, b, c: one, out: t });
+                self.prog.push(Instr::Not { a: t, out });
+                self.free(t);
+            }
+        }
+        out
+    }
+
+    /// `!a`.
+    pub fn not(&mut self, a: Col) -> Col {
+        let out = self.alloc();
+        self.prog.push(Instr::Not { a, out });
+        out
+    }
+
+    /// `!a` into an explicit destination column.
+    pub fn not_into(&mut self, a: Col, out: Col) {
+        self.prog.push(Instr::Not { a, out });
+    }
+
+    /// `!(a | b)`.
+    pub fn nor(&mut self, a: Col, b: Col) -> Col {
+        self.raw_nor(a, b)
+    }
+
+    /// `a | b`.
+    pub fn or(&mut self, a: Col, b: Col) -> Col {
+        match self.set {
+            GateSet::MemristiveNor => {
+                let t = self.raw_nor(a, b);
+                let out = self.not(t);
+                self.free(t);
+                out
+            }
+            GateSet::DramMaj => {
+                let one = self.one();
+                let out = self.alloc();
+                self.prog.push(Instr::Maj3 { a, b, c: one, out });
+                out
+            }
+        }
+    }
+
+    /// `a | b | c`.
+    pub fn or3(&mut self, a: Col, b: Col, c: Col) -> Col {
+        match self.set {
+            GateSet::MemristiveNor => {
+                let t = self.alloc();
+                self.prog.push(Instr::Nor3 { a, b, c, out: t });
+                let out = self.not(t);
+                self.free(t);
+                out
+            }
+            GateSet::DramMaj => {
+                let ab = self.or(a, b);
+                let out = self.or(ab, c);
+                self.free(ab);
+                out
+            }
+        }
+    }
+
+    /// `a & b`.
+    pub fn and(&mut self, a: Col, b: Col) -> Col {
+        match self.set {
+            GateSet::MemristiveNor => {
+                let na = self.not(a);
+                let nb = self.not(b);
+                let out = self.raw_nor(na, nb);
+                self.free(na);
+                self.free(nb);
+                out
+            }
+            GateSet::DramMaj => {
+                let zero = self.zero();
+                let out = self.alloc();
+                self.prog.push(Instr::Maj3 { a, b, c: zero, out });
+                out
+            }
+        }
+    }
+
+    /// `a & !b` (common in masking logic; saves one NOT on the NOR set).
+    pub fn and_not(&mut self, a: Col, b: Col) -> Col {
+        match self.set {
+            GateSet::MemristiveNor => {
+                let na = self.not(a);
+                let out = self.raw_nor(na, b);
+                self.free(na);
+                out
+            }
+            GateSet::DramMaj => {
+                let nb = self.not(b);
+                let out = self.and(a, nb);
+                self.free(nb);
+                out
+            }
+        }
+    }
+
+    /// `a ^ b` via the shared-NOR pattern (5 gates on the NOR set).
+    pub fn xor(&mut self, a: Col, b: Col) -> Col {
+        match self.set {
+            GateSet::MemristiveNor => {
+                let t1 = self.raw_nor(a, b);
+                let t2 = self.raw_nor(a, t1);
+                let t3 = self.raw_nor(b, t1);
+                let xnor = self.raw_nor(t2, t3);
+                let out = self.not(xnor);
+                self.free(t1);
+                self.free(t2);
+                self.free(t3);
+                self.free(xnor);
+                out
+            }
+            GateSet::DramMaj => {
+                // sum output of a MAJ full adder with carry-in 0:
+                // and = maj(a,b,0); or = maj(a,b,1); xor = or & !and.
+                let andv = self.and(a, b);
+                let orv = self.or(a, b);
+                let out = self.and_not(orv, andv);
+                self.free(andv);
+                self.free(orv);
+                out
+            }
+        }
+    }
+
+    /// `!(a ^ b)` (4 gates on the NOR set).
+    pub fn xnor(&mut self, a: Col, b: Col) -> Col {
+        match self.set {
+            GateSet::MemristiveNor => {
+                let t1 = self.raw_nor(a, b);
+                let t2 = self.raw_nor(a, t1);
+                let t3 = self.raw_nor(b, t1);
+                let out = self.raw_nor(t2, t3);
+                self.free(t1);
+                self.free(t2);
+                self.free(t3);
+                out
+            }
+            GateSet::DramMaj => {
+                let x = self.xor(a, b);
+                let out = self.not(x);
+                self.free(x);
+                out
+            }
+        }
+    }
+
+    /// Majority of three.
+    pub fn maj(&mut self, a: Col, b: Col, c: Col) -> Col {
+        match self.set {
+            GateSet::DramMaj => {
+                let out = self.alloc();
+                self.prog.push(Instr::Maj3 { a, b, c, out });
+                out
+            }
+            GateSet::MemristiveNor => {
+                // !maj = nor(nor(a,b), and-ish): maj = (a&b) | c&(a|b);
+                // use the full-adder carry construction: g1 = nor(a,b);
+                // g4 = xnor(a,b); g5 = nor(g4,c); cout = nor(g1,g5).
+                let g1 = self.raw_nor(a, b);
+                let g4 = self.xnor(a, b);
+                let g5 = self.raw_nor(g4, c);
+                let out = self.raw_nor(g1, g5);
+                self.free(g1);
+                self.free(g4);
+                self.free(g5);
+                out
+            }
+        }
+    }
+
+    /// `s ? a : b` given a precomputed `ns = !s` (3 gates on the NOR set:
+    /// `nor(nor(s,b), nor(ns,a))`).
+    pub fn mux_with_ns(&mut self, s: Col, ns: Col, a: Col, b: Col) -> Col {
+        match self.set {
+            GateSet::MemristiveNor => {
+                let t1 = self.raw_nor(s, b); // !s & !b
+                let t2 = self.raw_nor(ns, a); // s & !a
+                let out = self.raw_nor(t1, t2); // (s -> a) & (!s -> b)
+                self.free(t1);
+                self.free(t2);
+                out
+            }
+            GateSet::DramMaj => {
+                let sa = self.and(s, a);
+                let nsb = self.and(ns, b);
+                let out = self.or(sa, nsb);
+                self.free(sa);
+                self.free(nsb);
+                out
+            }
+        }
+    }
+
+    /// `s ? a : b` (computes `!s` internally).
+    pub fn mux(&mut self, s: Col, a: Col, b: Col) -> Col {
+        let ns = self.not(s);
+        let out = self.mux_with_ns(s, ns, a, b);
+        self.free(ns);
+        out
+    }
+
+    /// Word-level `s ? a : b`; words must have equal length.
+    pub fn mux_word(&mut self, s: Col, a: &[Col], b: &[Col]) -> Vec<Col> {
+        assert_eq!(a.len(), b.len());
+        let ns = self.not(s);
+        let out = a
+            .iter()
+            .zip(b)
+            .map(|(&ai, &bi)| self.mux_with_ns(s, ns, ai, bi))
+            .collect();
+        self.free(ns);
+        out
+    }
+
+    /// Full adder: `(sum, carry)`.
+    ///
+    /// NOR set: the canonical 9-gate MAGIC construction (the paper's 9·N
+    /// addition count). MAJ set: 3 MAJ + 2 NOT.
+    pub fn full_adder(&mut self, a: Col, b: Col, c: Col) -> (Col, Col) {
+        let mut sum_out = None;
+        let (s, co) = self.full_adder_impl(a, b, c, &mut sum_out);
+        debug_assert!(sum_out.is_none());
+        (s, co)
+    }
+
+    /// Full adder with the sum gate directed into column `sum`.
+    pub fn full_adder_into(&mut self, a: Col, b: Col, c: Col, sum: Col) -> Col {
+        let mut sum_out = Some(sum);
+        let (_, co) = self.full_adder_impl(a, b, c, &mut sum_out);
+        co
+    }
+
+    fn full_adder_impl(
+        &mut self,
+        a: Col,
+        b: Col,
+        c: Col,
+        sum_into: &mut Option<Col>,
+    ) -> (Col, Col) {
+        match self.set {
+            GateSet::MemristiveNor => {
+                let g1 = self.raw_nor(a, b);
+                let g2 = self.raw_nor(a, g1);
+                let g3 = self.raw_nor(b, g1);
+                let g4 = self.raw_nor(g2, g3); // xnor(a,b)
+                let g5 = self.raw_nor(g4, c);
+                let g6 = self.raw_nor(g4, g5);
+                let g7 = self.raw_nor(c, g5);
+                let sum = match sum_into.take() {
+                    Some(dst) => {
+                        self.prog.push(Instr::Nor2 { a: g6, b: g7, out: dst });
+                        dst
+                    }
+                    None => self.raw_nor(g6, g7),
+                };
+                let cout = self.raw_nor(g1, g5);
+                self.free(g1);
+                self.free(g2);
+                self.free(g3);
+                self.free(g4);
+                self.free(g5);
+                self.free(g6);
+                self.free(g7);
+                (sum, cout)
+            }
+            GateSet::DramMaj => {
+                let cout = self.maj(a, b, c);
+                let nc = self.not(c);
+                let x = self.maj(a, b, nc);
+                let ncout = self.not(cout);
+                let sum = match sum_into.take() {
+                    Some(dst) => {
+                        self.prog.push(Instr::Maj3 { a: x, b: ncout, c, out: dst });
+                        dst
+                    }
+                    None => self.maj(x, ncout, c),
+                };
+                self.free(nc);
+                self.free(x);
+                self.free(ncout);
+                (sum, cout)
+            }
+        }
+    }
+
+    // ---- word primitives ------------------------------------------------
+
+    /// Ripple-carry addition: `a + b + cin` → (sum word, carry out).
+    /// `sum_into`: optional destination columns for the sum bits (e.g. the
+    /// result field of an arithmetic layout, saving the final copy).
+    pub fn add_words(
+        &mut self,
+        a: &[Col],
+        b: &[Col],
+        cin: Option<Col>,
+        sum_into: Option<&[Col]>,
+    ) -> (Vec<Col>, Col) {
+        assert_eq!(a.len(), b.len());
+        if let Some(d) = sum_into {
+            assert_eq!(d.len(), a.len());
+        }
+        let mut carry = match cin {
+            Some(c) => c,
+            None => self.zero(),
+        };
+        // The initial carry is caller-owned (or the shared const); only
+        // intermediate carries produced here are freed.
+        let mut carry_owned = false;
+        let mut sum = Vec::with_capacity(a.len());
+        for i in 0..a.len() {
+            let (s, co) = match sum_into {
+                Some(dst) => {
+                    let co = self.full_adder_into(a[i], b[i], carry, dst[i]);
+                    (dst[i], co)
+                }
+                None => self.full_adder(a[i], b[i], carry),
+            };
+            if carry_owned {
+                self.free(carry);
+            }
+            carry_owned = true;
+            carry = co;
+            sum.push(s);
+        }
+        (sum, carry)
+    }
+
+    /// Two's-complement subtraction `a - b` → (difference, borrow-free
+    /// carry: carry==1 means `a >= b`).
+    pub fn sub_words(
+        &mut self,
+        a: &[Col],
+        b: &[Col],
+        diff_into: Option<&[Col]>,
+    ) -> (Vec<Col>, Col) {
+        let nb: Vec<Col> = b.iter().map(|&bi| self.not(bi)).collect();
+        let one = self.one();
+        let (diff, carry) = self.add_words(a, &nb, Some(one), diff_into);
+        self.free_word(&nb);
+        (diff, carry)
+    }
+
+    /// Two's-complement negation of a word (`!a + 1`).
+    pub fn neg_word(&mut self, a: &[Col]) -> Vec<Col> {
+        let na: Vec<Col> = a.iter().map(|&ai| self.not(ai)).collect();
+        let one = self.one();
+        let (out, c) = self.inc_word(&na, one, None);
+        self.free(c);
+        self.free_word(&na);
+        out
+    }
+
+    /// Increment-by-bit: `a + inc` where `inc` is a single column;
+    /// half-adder chain (4 NOR gates per bit: xor-lite).
+    pub fn inc_word(&mut self, a: &[Col], inc: Col, sum_into: Option<&[Col]>) -> (Vec<Col>, Col) {
+        let mut carry = inc;
+        let mut carry_owned = false;
+        let mut out = Vec::with_capacity(a.len());
+        for i in 0..a.len() {
+            let s = self.xor(a[i], carry);
+            let s = match sum_into {
+                Some(dst) => {
+                    // move into destination (1 extra gate via double-NOT
+                    // avoided: xor already allocated fresh; copy cheaply)
+                    self.copy_into(s, dst[i]);
+                    self.free(s);
+                    dst[i]
+                }
+                None => s,
+            };
+            let co = self.and(a[i], carry);
+            if carry_owned {
+                self.free(carry);
+            }
+            carry = co;
+            carry_owned = true;
+            out.push(s);
+        }
+        (out, carry)
+    }
+
+    /// Copy a column into an explicit destination (2 NOTs on NOR set, AAP
+    /// copy on DRAM).
+    pub fn copy_into(&mut self, src: Col, dst: Col) {
+        match self.set {
+            GateSet::MemristiveNor => {
+                let t = self.not(src);
+                self.prog.push(Instr::Not { a: t, out: dst });
+                self.free(t);
+            }
+            GateSet::DramMaj => {
+                self.prog.push(Instr::Copy { a: src, out: dst });
+            }
+        }
+    }
+
+    /// Unsigned multiplication `a × b` → full `a.len()+b.len()`-bit
+    /// product (shift-and-add with a rolling accumulator; on the NOR set
+    /// partial products cost one gate each via shared complements).
+    pub fn mul_words(&mut self, a: &[Col], b: &[Col]) -> Vec<Col> {
+        let n = a.len();
+        let m = b.len();
+        assert!(n > 0 && m > 0);
+        let mut out: Vec<Col> = Vec::with_capacity(n + m);
+        // Complement of `a` shared across partial products (NOR set only).
+        let na: Option<Vec<Col>> = match self.set {
+            GateSet::MemristiveNor => Some(a.iter().map(|&c| self.not(c)).collect()),
+            GateSet::DramMaj => None,
+        };
+        let pp_row = |bld: &mut Builder, bi: Col| -> Vec<Col> {
+            match &na {
+                Some(na) => {
+                    let nbi = bld.not(bi);
+                    let row = na.iter().map(|&naj| bld.nor(naj, nbi)).collect();
+                    bld.free(nbi);
+                    row
+                }
+                None => a.iter().map(|&aj| bld.and(aj, bi)).collect(),
+            }
+        };
+        // Accumulator: high n bits of the running sum.
+        let mut acc = pp_row(self, b[0]);
+        let o0 = self.alloc();
+        self.copy_into(acc[0], o0);
+        out.push(o0);
+        // Shift accumulator right: drop bit 0, push a zero top bit.
+        let acc0 = acc.remove(0);
+        self.free(acc0);
+        let top = self.alloc();
+        self.push_set(top, false);
+        acc.push(top);
+        for i in 1..m {
+            let pp = pp_row(self, b[i]);
+            let (sum, cout) = self.add_words(&acc, &pp, None, None);
+            self.free_word(&pp);
+            self.free_word(&acc);
+            // Bit 0 of the sum is the finalized product bit i.
+            out.push(sum[0]);
+            acc = sum[1..].to_vec();
+            acc.push(cout);
+        }
+        if let Some(na) = na {
+            self.free_word(&na);
+        }
+        out.extend_from_slice(&acc);
+        debug_assert_eq!(out.len(), n + m);
+        out
+    }
+
+    /// OR-reduce a word to a single column (NOR3 tree on the NOR set).
+    pub fn or_reduce(&mut self, w: &[Col]) -> Col {
+        assert!(!w.is_empty());
+        if w.len() == 1 {
+            // materialize a fresh column equal to w[0]
+            let out = self.alloc();
+            self.copy_into(w[0], out);
+            return out;
+        }
+        let mut level: Vec<Col> = Vec::new();
+        let mut owned: Vec<bool> = Vec::new();
+        for &c in w {
+            level.push(c);
+            owned.push(false);
+        }
+        while level.len() > 1 {
+            let mut next = Vec::new();
+            let mut next_owned = Vec::new();
+            let mut i = 0;
+            while i < level.len() {
+                if i + 2 < level.len() {
+                    let r = self.or3(level[i], level[i + 1], level[i + 2]);
+                    for k in i..i + 3 {
+                        if owned[k] {
+                            self.free(level[k]);
+                        }
+                    }
+                    next.push(r);
+                    next_owned.push(true);
+                    i += 3;
+                } else if i + 1 < level.len() {
+                    let r = self.or(level[i], level[i + 1]);
+                    for k in i..i + 2 {
+                        if owned[k] {
+                            self.free(level[k]);
+                        }
+                    }
+                    next.push(r);
+                    next_owned.push(true);
+                    i += 2;
+                } else {
+                    next.push(level[i]);
+                    next_owned.push(owned[i]);
+                    i += 1;
+                }
+            }
+            level = next;
+            owned = next_owned;
+        }
+        level[0]
+    }
+
+    /// AND-reduce a word to a single column.
+    pub fn and_reduce(&mut self, w: &[Col]) -> Col {
+        assert!(!w.is_empty());
+        // !(or of complements): complement each, or_reduce, negate.
+        let comps: Vec<Col> = w.iter().map(|&c| self.not(c)).collect();
+        let any = self.or_reduce(&comps);
+        let out = self.not(any);
+        self.free(any);
+        self.free_word(&comps);
+        out
+    }
+
+    /// `w == 0` as a column.
+    pub fn is_zero(&mut self, w: &[Col]) -> Col {
+        let any = self.or_reduce(w);
+        let out = self.not(any);
+        self.free(any);
+        out
+    }
+
+    /// Saturating variable right-shift with sticky (jam) collection.
+    ///
+    /// Shifts `val` right by `amt` (a word of shift-amount bits; amounts
+    /// ≥ 2^amt.len() must be pre-saturated by the caller via
+    /// [`Builder::saturate_amount`]). Returns the shifted word and a sticky
+    /// column that ORs every shifted-out bit — the "jamming" used for
+    /// IEEE-754 rounding.
+    pub fn barrel_shr_sticky(&mut self, val: &[Col], amt: &[Col]) -> (Vec<Col>, Col) {
+        let n = val.len();
+        let zero = self.zero();
+        let mut cur: Vec<Col> = val.to_vec();
+        let mut cur_owned = false;
+        let mut sticky = self.zero(); // running sticky (shared zero col!)
+        let mut sticky_owned = false;
+        for (k, &abit) in amt.iter().enumerate() {
+            let dist = 1usize << k;
+            // sticky contribution: abit & OR(cur[0..dist])
+            let dropped = &cur[..dist.min(n)];
+            let any_dropped = self.or_reduce(dropped);
+            let contrib = self.and(abit, any_dropped);
+            self.free(any_dropped);
+            let new_sticky = self.or(sticky, contrib);
+            if sticky_owned {
+                self.free(sticky);
+            }
+            self.free(contrib);
+            sticky = new_sticky;
+            sticky_owned = true;
+            // shifted word: out[i] = abit ? cur[i+dist] : cur[i]
+            let nabit = self.not(abit);
+            let mut next = Vec::with_capacity(n);
+            for i in 0..n {
+                let hi = if i + dist < n { cur[i + dist] } else { zero };
+                next.push(self.mux_with_ns(abit, nabit, hi, cur[i]));
+            }
+            self.free(nabit);
+            if cur_owned {
+                self.free_word(&cur);
+            }
+            cur = next;
+            cur_owned = true;
+        }
+        if !cur_owned {
+            // amt was empty; materialize an owned copy
+            let fresh: Vec<Col> = cur
+                .iter()
+                .map(|&c| {
+                    let out = self.alloc();
+                    self.copy_into(c, out);
+                    out
+                })
+                .collect();
+            cur = fresh;
+        }
+        if !sticky_owned {
+            let s = self.alloc();
+            self.copy_into(sticky, s);
+            sticky = s;
+        }
+        (cur, sticky)
+    }
+
+    /// Variable left-shift (zero fill), saturating like the right shift.
+    pub fn barrel_shl(&mut self, val: &[Col], amt: &[Col]) -> Vec<Col> {
+        let n = val.len();
+        let zero = self.zero();
+        let mut cur: Vec<Col> = val.to_vec();
+        let mut cur_owned = false;
+        for (k, &abit) in amt.iter().enumerate() {
+            let dist = 1usize << k;
+            let nabit = self.not(abit);
+            let mut next = Vec::with_capacity(n);
+            for i in 0..n {
+                let lo = if i >= dist { cur[i - dist] } else { zero };
+                next.push(self.mux_with_ns(abit, nabit, lo, cur[i]));
+            }
+            self.free(nabit);
+            if cur_owned {
+                self.free_word(&cur);
+            }
+            cur = next;
+            cur_owned = true;
+        }
+        if !cur_owned {
+            let fresh: Vec<Col> = cur
+                .iter()
+                .map(|&c| {
+                    let out = self.alloc();
+                    self.copy_into(c, out);
+                    out
+                })
+                .collect();
+            cur = fresh;
+        }
+        cur
+    }
+
+    /// Saturate a shift amount: returns `k`-bit amount whose bits are all
+    /// forced to 1 when any bit of `amt` above position `k-1` is set
+    /// (so shifting a ≤2^k-1-wide value flushes to zero/sticky).
+    pub fn saturate_amount(&mut self, amt: &[Col], k: usize) -> Vec<Col> {
+        assert!(k <= amt.len());
+        if k == amt.len() {
+            // no high bits; return an owned copy
+            return amt
+                .iter()
+                .map(|&c| {
+                    let out = self.alloc();
+                    self.copy_into(c, out);
+                    out
+                })
+                .collect();
+        }
+        let sat = self.or_reduce(&amt[k..]);
+        let out = amt[..k].iter().map(|&c| self.or(c, sat)).collect();
+        self.free(sat);
+        out
+    }
+
+    /// Normalize-left: shift `val` left so its MSB lands at the top
+    /// position, returning `(shifted, count)` where `count` is the
+    /// left-shift amount (leading-zero count), `ceil(log2(n+1))` bits.
+    /// A zero input yields an all-zero word and the saturated count.
+    pub fn normalize_left(&mut self, val: &[Col]) -> (Vec<Col>, Vec<Col>) {
+        let n = val.len();
+        let stages = usize::BITS as usize - (n - 1).leading_zeros() as usize; // ceil(log2 n)
+        let mut cur: Vec<Col> = val.to_vec();
+        let mut cur_owned = false;
+        let zero = self.zero();
+        let mut count: Vec<Col> = Vec::new(); // filled MSB-first, reversed at end
+        for s in (0..stages).rev() {
+            let dist = 1usize << s;
+            if dist >= n {
+                // A shift this large would only fire on an all-zero word
+                // prefix of length >= n; the count bit is then "top dist
+                // bits zero" but shifting is a no-op on content. Emit the
+                // count bit and skip the mux layer.
+                let top = &cur[n.saturating_sub(dist)..];
+                let any = self.or_reduce(top);
+                let cond = self.not(any);
+                self.free(any);
+                count.push(cond);
+                continue;
+            }
+            // cond = top `dist` bits are all zero
+            let top = &cur[n - dist..];
+            let any = self.or_reduce(top);
+            let cond = self.not(any);
+            self.free(any);
+            // if cond: shift left by dist
+            let ncond = self.not(cond);
+            let mut next = Vec::with_capacity(n);
+            for i in 0..n {
+                let lo = if i >= dist { cur[i - dist] } else { zero };
+                next.push(self.mux_with_ns(cond, ncond, lo, cur[i]));
+            }
+            self.free(ncond);
+            if cur_owned {
+                self.free_word(&cur);
+            }
+            cur = next;
+            cur_owned = true;
+            count.push(cond);
+        }
+        count.reverse(); // little-endian: bit k corresponds to shift 2^k
+        if !cur_owned {
+            let fresh: Vec<Col> = cur
+                .iter()
+                .map(|&c| {
+                    let out = self.alloc();
+                    self.copy_into(c, out);
+                    out
+                })
+                .collect();
+            cur = fresh;
+        }
+        (cur, count)
+    }
+
+    /// Current number of allocated (live + freed) scratch columns plus the
+    /// reserved prefix — i.e. the crossbar width this program needs so far.
+    pub fn width(&self) -> Col {
+        self.prog.width().max(self.next)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pim::xbar::Crossbar;
+    use crate::util::rng::Rng;
+
+    /// Evaluate a 1/2/3-input bit function over all input combinations on
+    /// both gate sets and compare with the host closure.
+    fn check_bitfn<F>(inputs: usize, build: impl Fn(&mut Builder, &[Col]) -> Col, host: F)
+    where
+        F: Fn(&[bool]) -> bool,
+    {
+        for set in GateSet::all() {
+            let mut b = Builder::new(set, inputs as Col);
+            let cols: Vec<Col> = (0..inputs as Col).collect();
+            let out = build(&mut b, &cols);
+            let prog = b.finish();
+            prog.validate_for(set).unwrap();
+            let combos = 1usize << inputs;
+            let mut x = Crossbar::new(combos, prog.width() as usize);
+            for r in 0..combos {
+                for (i, &c) in cols.iter().enumerate() {
+                    x.set(r, c, (r >> i) & 1 == 1);
+                }
+            }
+            x.execute(&prog);
+            for r in 0..combos {
+                let bits: Vec<bool> = (0..inputs).map(|i| (r >> i) & 1 == 1).collect();
+                assert_eq!(
+                    x.get(r, out),
+                    host(&bits),
+                    "set={set:?} inputs={bits:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bit_primitives() {
+        check_bitfn(1, |b, c| b.not(c[0]), |v| !v[0]);
+        check_bitfn(2, |b, c| b.nor(c[0], c[1]), |v| !(v[0] | v[1]));
+        check_bitfn(2, |b, c| b.or(c[0], c[1]), |v| v[0] | v[1]);
+        check_bitfn(2, |b, c| b.and(c[0], c[1]), |v| v[0] & v[1]);
+        check_bitfn(2, |b, c| b.and_not(c[0], c[1]), |v| v[0] & !v[1]);
+        check_bitfn(2, |b, c| b.xor(c[0], c[1]), |v| v[0] ^ v[1]);
+        check_bitfn(2, |b, c| b.xnor(c[0], c[1]), |v| !(v[0] ^ v[1]));
+        check_bitfn(3, |b, c| b.or3(c[0], c[1], c[2]), |v| v[0] | v[1] | v[2]);
+        check_bitfn(3, |b, c| b.maj(c[0], c[1], c[2]), |v| {
+            (v[0] & v[1]) | (v[2] & (v[0] | v[1]))
+        });
+        check_bitfn(3, |b, c| b.mux(c[0], c[1], c[2]), |v| {
+            if v[0] {
+                v[1]
+            } else {
+                v[2]
+            }
+        });
+    }
+
+    #[test]
+    fn full_adder_truth_table() {
+        check_bitfn(3, |b, c| b.full_adder(c[0], c[1], c[2]).0, |v| {
+            v[0] ^ v[1] ^ v[2]
+        });
+        check_bitfn(3, |b, c| b.full_adder(c[0], c[1], c[2]).1, |v| {
+            (v[0] & v[1]) | (v[2] & (v[0] | v[1]))
+        });
+    }
+
+    #[test]
+    fn magic_full_adder_is_nine_gates() {
+        let mut b = Builder::new(GateSet::MemristiveNor, 3);
+        let _ = b.full_adder(0, 1, 2);
+        let prog = b.finish();
+        assert_eq!(prog.gates(), 9, "canonical MAGIC FA gate count");
+    }
+
+    #[test]
+    fn dram_full_adder_is_five_ops() {
+        let mut b = Builder::new(GateSet::DramMaj, 3);
+        let _ = b.full_adder(0, 1, 2);
+        let prog = b.finish();
+        assert_eq!(prog.counts().maj3, 3);
+        assert_eq!(prog.counts().not, 2);
+    }
+
+    fn run_word_prog(
+        set: GateSet,
+        bits: u32,
+        build: impl Fn(&mut Builder, &[Col], &[Col]) -> Vec<Col>,
+        a_vals: &[u64],
+        b_vals: &[u64],
+    ) -> Vec<u64> {
+        let n = bits as usize;
+        let mut b = Builder::new(set, 2 * bits);
+        let aw: Vec<Col> = (0..bits).collect();
+        let bw: Vec<Col> = (bits..2 * bits).collect();
+        let out = build(&mut b, &aw, &bw);
+        let out_bits = out.len() as u32;
+        let prog = b.finish();
+        prog.validate_for(set).unwrap();
+        let rows = a_vals.len();
+        let mut x = Crossbar::new(rows, prog.width() as usize);
+        x.write_field(0, bits, a_vals);
+        x.write_field(bits, bits, b_vals);
+        x.execute(&prog);
+        // gather scattered output columns
+        (0..rows)
+            .map(|r| {
+                let mut v = 0u64;
+                for (k, &c) in out.iter().enumerate().take(out_bits as usize) {
+                    if x.get(r, c) {
+                        v |= 1 << k;
+                    }
+                }
+                let _ = n;
+                v
+            })
+            .collect()
+    }
+
+    #[test]
+    fn ripple_add_random() {
+        let mut rng = Rng::new(21);
+        let a = rng.vec_bits(96, 16);
+        let b = rng.vec_bits(96, 16);
+        for set in GateSet::all() {
+            let got = run_word_prog(
+                set,
+                16,
+                |bld, aw, bw| {
+                    let (s, c) = bld.add_words(aw, bw, None, None);
+                    let mut out = s;
+                    out.push(c);
+                    out
+                },
+                &a,
+                &b,
+            );
+            for i in 0..96 {
+                assert_eq!(got[i], a[i] + b[i], "set={set:?} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn sub_words_and_borrow() {
+        let mut rng = Rng::new(22);
+        let a = rng.vec_bits(64, 12);
+        let b = rng.vec_bits(64, 12);
+        for set in GateSet::all() {
+            let got = run_word_prog(
+                set,
+                12,
+                |bld, aw, bw| {
+                    let (d, c) = bld.sub_words(aw, bw, None);
+                    let mut out = d;
+                    out.push(c); // carry==1 <=> a >= b
+                    out
+                },
+                &a,
+                &b,
+            );
+            for i in 0..64 {
+                let diff = a[i].wrapping_sub(b[i]) & 0xFFF;
+                let geq = (a[i] >= b[i]) as u64;
+                assert_eq!(got[i], diff | (geq << 12), "set={set:?} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn barrel_shift_right_with_sticky() {
+        let mut rng = Rng::new(23);
+        let vals = rng.vec_bits(128, 16);
+        let amts: Vec<u64> = (0..128).map(|i| (i % 20) as u64).collect();
+        for set in GateSet::all() {
+            let n = 16u32;
+            let mut b = Builder::new(set, n + 5);
+            let vw: Vec<Col> = (0..n).collect();
+            let aw: Vec<Col> = (n..n + 5).collect();
+            let sat = b.saturate_amount(&aw, 5);
+            let (sh, sticky) = b.barrel_shr_sticky(&vw, &sat);
+            let prog = b.finish();
+            let mut x = Crossbar::new(128, prog.width() as usize);
+            x.write_field(0, n, &vals);
+            x.write_field(n, 5, &amts);
+            x.execute(&prog);
+            for r in 0..128 {
+                let amt = amts[r] as u32;
+                let expect = if amt >= 16 { 0 } else { vals[r] >> amt };
+                let dropped = if amt == 0 {
+                    0
+                } else if amt >= 16 {
+                    vals[r]
+                } else {
+                    vals[r] & ((1 << amt) - 1)
+                };
+                let mut got = 0u64;
+                for (k, &c) in sh.iter().enumerate() {
+                    if x.get(r, c) {
+                        got |= 1 << k;
+                    }
+                }
+                assert_eq!(got, expect, "set={set:?} r={r} amt={amt}");
+                assert_eq!(x.get(r, sticky), dropped != 0, "sticky set={set:?} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn normalize_left_counts() {
+        let vals: Vec<u64> = vec![0b1000_0000, 0b0000_0001, 0b0001_1010, 0, 0b0100_0000];
+        for set in GateSet::all() {
+            let n = 8u32;
+            let mut b = Builder::new(set, n);
+            let vw: Vec<Col> = (0..n).collect();
+            let (norm, count) = b.normalize_left(&vw);
+            let prog = b.finish();
+            let mut x = Crossbar::new(vals.len(), prog.width() as usize);
+            x.write_field(0, n, &vals);
+            x.execute(&prog);
+            for (r, &v) in vals.iter().enumerate() {
+                // Zero input saturates the count at 2^stages - 1 = 7.
+                let lz = if v == 0 { 7 } else { 7 - (63 - v.leading_zeros() as u64) };
+                let expect_norm = if v == 0 { 0 } else { (v << lz) & 0xFF };
+                let mut got = 0u64;
+                for (k, &c) in norm.iter().enumerate() {
+                    if x.get(r, c) {
+                        got |= 1 << k;
+                    }
+                }
+                let mut got_count = 0u64;
+                for (k, &c) in count.iter().enumerate() {
+                    if x.get(r, c) {
+                        got_count |= 1 << k;
+                    }
+                }
+                assert_eq!(got, expect_norm, "set={set:?} v={v:#b}");
+                assert_eq!(got_count, lz.min(8), "count set={set:?} v={v:#b}");
+            }
+        }
+    }
+
+    #[test]
+    fn or_and_reduce() {
+        check_bitfn(3, |b, c| b.or_reduce(c), |v| v.iter().any(|&x| x));
+        check_bitfn(3, |b, c| b.and_reduce(c), |v| v.iter().all(|&x| x));
+        check_bitfn(3, |b, c| b.is_zero(c), |v| v.iter().all(|&x| !x));
+    }
+
+    #[test]
+    fn column_reuse_keeps_width_small() {
+        // A long chain of freed temporaries must not grow the width.
+        let mut b = Builder::new(GateSet::MemristiveNor, 2);
+        for _ in 0..1000 {
+            let t = b.xor(0, 1);
+            b.free(t);
+        }
+        assert!(b.width() < 16, "width={}", b.width());
+    }
+}

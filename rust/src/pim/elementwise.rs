@@ -1,0 +1,341 @@
+//! Vectored element-wise operations beyond +−×÷: the activation-function
+//! and comparison microcode the paper's §5 CNN model needs ("element-wise
+//! operations for activation functions (e.g., ReLU)"), plus signed
+//! two's-complement multiplication — the remaining pieces of the AritPIM
+//! suite.
+//!
+//! Layouts follow [`crate::pim::fixed::FixedLayout`] conventions: unary
+//! ops read `u` at `[0, N)` and write `z` at `[N, 2N)`; binary ops use
+//! the standard three-field layout.
+
+use super::builder::Builder;
+use super::fixed::{FixedLayout, FixedOp};
+use super::gates::GateSet;
+use super::isa::{Col, Program};
+use super::softfloat::Format;
+
+/// Layout of a unary element-wise op: `u` at `[0, N)`, `z` at `[N, 2N)`.
+#[derive(Clone, Copy, Debug)]
+pub struct UnaryLayout {
+    pub n: u32,
+    pub u: Col,
+    pub z: Col,
+}
+
+impl UnaryLayout {
+    pub fn new(n: u32) -> Self {
+        UnaryLayout { n, u: 0, z: n }
+    }
+}
+
+/// Vectored fixed-point ReLU over signed two's-complement values:
+/// `z = u < 0 ? 0 : u` — one AND-NOT with the broadcast sign bit per bit.
+pub fn relu_fixed_program(n: u32, set: GateSet) -> Program {
+    let lay = UnaryLayout::new(n);
+    let mut b = Builder::new(set, 2 * n);
+    let sign = lay.u + n - 1;
+    let nsign = b.not(sign);
+    for k in 0..n {
+        // z_k = u_k & !sign — route the final gate into the z field.
+        let t = b.and(lay.u + k, nsign);
+        b.copy_into(t, lay.z + k);
+        b.free(t);
+    }
+    b.free(nsign);
+    b.finish()
+}
+
+/// Vectored IEEE-754 ReLU: `z = (u < 0 and not NaN) ? +0 : u`; NaN passes
+/// through (matches `f32::max(x, 0.0)` NaN-propagation used by frameworks
+/// is messier — we use the simple sign-mask semantics of `max(0, x)` with
+/// NaN -> NaN, which equals jax.nn.relu's `where(x > 0, x, 0)` for
+/// non-NaN inputs; NaN maps to 0 there, so we mirror *that*).
+pub fn relu_float_program(fmt: Format, set: GateSet) -> Program {
+    let n = fmt.bits();
+    let lay = UnaryLayout::new(n);
+    let mut b = Builder::new(set, 2 * n);
+    let man = fmt.man as usize;
+    let exp = fmt.exp as usize;
+    let sign = lay.u + n - 1;
+    // NaN detection: exponent all ones and mantissa nonzero.
+    let e: Vec<Col> = (0..exp).map(|k| lay.u + (man + k) as Col).collect();
+    let m: Vec<Col> = (0..man).map(|k| lay.u + k as Col).collect();
+    let e_ones = b.and_reduce(&e);
+    let m_nz = b.or_reduce(&m);
+    let is_nan = b.and(e_ones, m_nz);
+    b.free(e_ones);
+    b.free(m_nz);
+    // zero_out = sign & !nan  (negative finite/inf -> +0; NaN -> 0 per
+    // jax.nn.relu's where(x>0,x,0) which selects 0 on NaN compare-false).
+    let neg = b.and_not(sign, is_nan);
+    let nan_or_neg = b.or(neg, is_nan);
+    // For jax semantics both NaN and negative map to zero: keep = !(sign|nan).
+    let keep = b.not(nan_or_neg);
+    for k in 0..n {
+        let t = b.and(lay.u + k, keep);
+        b.copy_into(t, lay.z + k);
+        b.free(t);
+    }
+    b.free(neg);
+    b.free(nan_or_neg);
+    b.free(keep);
+    b.free(is_nan);
+    b.finish()
+}
+
+/// Vectored unsigned maximum `z = max(u, v)` (three-field layout):
+/// subtract-compare then mux.
+pub fn max_fixed_program(n: u32, set: GateSet) -> Program {
+    let lay = FixedLayout::new(FixedOp::Add, n);
+    let mut b = Builder::new(set, lay.reserved());
+    let u = lay.u_cols();
+    let v = lay.v_cols();
+    let (diff, geq) = b.sub_words(&u, &v, None); // carry==1 <=> u >= v
+    b.free_word(&diff);
+    let z = b.mux_word(geq, &u, &v);
+    for (k, &c) in z.iter().enumerate() {
+        b.copy_into(c, lay.z + k as Col);
+    }
+    b.free_word(&z);
+    b.free(geq);
+    b.finish()
+}
+
+/// Vectored unsigned comparison `z = (u < v) ? 1 : 0` (z is 1 bit wide,
+/// written to the first z column of the standard layout).
+pub fn lt_fixed_program(n: u32, set: GateSet) -> Program {
+    let lay = FixedLayout::new(FixedOp::Add, n);
+    let mut b = Builder::new(set, lay.reserved());
+    let u = lay.u_cols();
+    let v = lay.v_cols();
+    let (diff, geq) = b.sub_words(&u, &v, None);
+    b.free_word(&diff);
+    let lt = b.not(geq);
+    b.copy_into(lt, lay.z);
+    b.free(geq);
+    b.free(lt);
+    b.finish()
+}
+
+/// Vectored **signed** two's-complement multiplication with full 2N-bit
+/// product: sign-magnitude decompose → unsigned multiply → conditional
+/// negate (AritPIM's signed route).
+pub fn signed_mul_program(n: u32, set: GateSet) -> Program {
+    let lay = FixedLayout::new(FixedOp::Mul, n);
+    let mut b = Builder::new(set, lay.reserved());
+    let u = lay.u_cols();
+    let v = lay.v_cols();
+    let nn = n as usize;
+    let su = u[nn - 1];
+    let sv = v[nn - 1];
+    // |u| = su ? -u : u  (and same for v).
+    let neg_u = b.neg_word(&u);
+    let abs_u = b.mux_word(su, &neg_u, &u);
+    b.free_word(&neg_u);
+    let neg_v = b.neg_word(&v);
+    let abs_v = b.mux_word(sv, &neg_v, &v);
+    b.free_word(&neg_v);
+    // Unsigned product (2N bits).
+    let p = b.mul_words(&abs_u, &abs_v);
+    b.free_word(&abs_u);
+    b.free_word(&abs_v);
+    // Negate when signs differ.
+    let s = b.xor(su, sv);
+    let neg_p = b.neg_word(&p);
+    let z = b.mux_word(s, &neg_p, &p);
+    b.free_word(&neg_p);
+    b.free_word(&p);
+    b.free(s);
+    for (k, &c) in z.iter().enumerate() {
+        b.copy_into(c, lay.z + k as Col);
+    }
+    b.free_word(&z);
+    b.finish()
+}
+
+/// Vectored absolute value (signed): `z = |u|`.
+pub fn abs_fixed_program(n: u32, set: GateSet) -> Program {
+    let lay = UnaryLayout::new(n);
+    let mut b = Builder::new(set, 2 * n);
+    let u: Vec<Col> = (0..n).map(|k| lay.u + k).collect();
+    let sign = u[n as usize - 1];
+    let neg = b.neg_word(&u);
+    let z = b.mux_word(sign, &neg, &u);
+    b.free_word(&neg);
+    for (k, &c) in z.iter().enumerate() {
+        b.copy_into(c, lay.z + k as Col);
+    }
+    b.free_word(&z);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pim::fixed;
+    use crate::pim::xbar::Crossbar;
+    use crate::util::rng::Rng;
+
+    fn mask(n: u32) -> u64 {
+        if n == 64 {
+            u64::MAX
+        } else {
+            (1u64 << n) - 1
+        }
+    }
+
+    fn sext(v: u64, n: u32) -> i64 {
+        let m = mask(n);
+        let v = v & m;
+        if v >> (n - 1) & 1 == 1 {
+            (v | !m) as i64
+        } else {
+            v as i64
+        }
+    }
+
+    #[test]
+    fn relu_fixed_semantics() {
+        let mut rng = Rng::new(61);
+        for set in GateSet::all() {
+            let n = 16;
+            let prog = relu_fixed_program(n, set);
+            prog.validate_for(set).unwrap();
+            let lay = UnaryLayout::new(n);
+            let vals = rng.vec_bits(128, n);
+            let mut x = Crossbar::new(128, prog.width() as usize);
+            x.write_field(lay.u, n, &vals);
+            x.execute(&prog);
+            let z = x.read_field(lay.z, n, 128);
+            for i in 0..128 {
+                let expect = if sext(vals[i], n) < 0 { 0 } else { vals[i] };
+                assert_eq!(z[i], expect, "set={set:?} v={:#x}", vals[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn relu_float_matches_jax_semantics() {
+        let mut rng = Rng::new(62);
+        let fmt = Format::FP32;
+        let prog = relu_float_program(fmt, GateSet::MemristiveNor);
+        let lay = UnaryLayout::new(32);
+        let vals: Vec<u64> = (0..256).map(|_| rng.float_pattern(8, 23)).collect();
+        let mut x = Crossbar::new(256, prog.width() as usize);
+        x.write_field(lay.u, 32, &vals);
+        x.execute(&prog);
+        let z = x.read_field(lay.z, 32, 256);
+        for i in 0..256 {
+            let f = f32::from_bits(vals[i] as u32);
+            // jax.nn.relu = where(x > 0, x, 0): NaN and -x and ±0 -> +0.
+            let expect = if f > 0.0 { vals[i] } else { 0 };
+            assert_eq!(z[i], expect, "v={:#x} ({f})", vals[i]);
+        }
+    }
+
+    #[test]
+    fn max_and_lt() {
+        let mut rng = Rng::new(63);
+        for set in GateSet::all() {
+            let n = 12;
+            let u = rng.vec_bits(100, n);
+            let v = rng.vec_bits(100, n);
+            let lay = FixedLayout::new(FixedOp::Add, n);
+            // max
+            let prog = max_fixed_program(n, set);
+            let mut x = Crossbar::new(100, prog.width() as usize);
+            fixed::load_operands(&mut x, &lay, &u, &v);
+            x.execute(&prog);
+            let z = fixed::read_result(&x, &lay, 100);
+            for i in 0..100 {
+                assert_eq!(z[i], u[i].max(v[i]), "max set={set:?}");
+            }
+            // lt
+            let prog = lt_fixed_program(n, set);
+            let mut x = Crossbar::new(100, prog.width() as usize);
+            fixed::load_operands(&mut x, &lay, &u, &v);
+            x.execute(&prog);
+            let z = x.read_field(lay.z, 1, 100);
+            for i in 0..100 {
+                assert_eq!(z[i] == 1, u[i] < v[i], "lt set={set:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn signed_mul_bit_exact() {
+        let mut rng = Rng::new(64);
+        for set in GateSet::all() {
+            let n = 12;
+            let prog = signed_mul_program(n, set);
+            prog.validate_for(set).unwrap();
+            assert!(prog.width() <= 1024);
+            let lay = FixedLayout::new(FixedOp::Mul, n);
+            let u = rng.vec_bits(100, n);
+            let v = rng.vec_bits(100, n);
+            let mut x = Crossbar::new(100, prog.width() as usize);
+            fixed::load_operands(&mut x, &lay, &u, &v);
+            x.execute(&prog);
+            let z = fixed::read_result(&x, &lay, 100);
+            for i in 0..100 {
+                let expect =
+                    (sext(u[i], n) as i128 * sext(v[i], n) as i128) as u64 & mask(2 * n);
+                assert_eq!(
+                    z[i], expect,
+                    "set={set:?} {}*{}",
+                    sext(u[i], n),
+                    sext(v[i], n)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn signed_mul_edges() {
+        // most-negative × most-negative and ±1 edges.
+        let n = 8;
+        let prog = signed_mul_program(n, GateSet::MemristiveNor);
+        let lay = FixedLayout::new(FixedOp::Mul, n);
+        let u = vec![0x80u64, 0x80, 0xFF, 0x7F, 0];
+        let v = vec![0x80u64, 0x01, 0xFF, 0x7F, 0xFF];
+        let mut x = Crossbar::new(u.len(), prog.width() as usize);
+        fixed::load_operands(&mut x, &lay, &u, &v);
+        x.execute(&prog);
+        let z = fixed::read_result(&x, &lay, u.len());
+        // (-128)^2=16384; -128*1=-128; (-1)^2=1; 127^2=16129; 0*-1=0.
+        let expect: Vec<u64> = vec![
+            16384,
+            (-128i64 as u64) & 0xFFFF,
+            1,
+            16129,
+            0,
+        ];
+        assert_eq!(z, expect);
+    }
+
+    #[test]
+    fn abs_semantics() {
+        let mut rng = Rng::new(65);
+        let n = 16;
+        let prog = abs_fixed_program(n, GateSet::MemristiveNor);
+        let lay = UnaryLayout::new(n);
+        let vals = rng.vec_bits(100, n);
+        let mut x = Crossbar::new(100, prog.width() as usize);
+        x.write_field(lay.u, n, &vals);
+        x.execute(&prog);
+        let z = x.read_field(lay.z, n, 100);
+        for i in 0..100 {
+            let expect = sext(vals[i], n).unsigned_abs() & mask(n);
+            assert_eq!(z[i], expect, "v={:#x}", vals[i]);
+        }
+    }
+
+    #[test]
+    fn relu_is_cheap_vs_mac() {
+        // The paper's §5 justification for the MAC-only upper bound:
+        // activation functions are negligible next to the MACs.
+        let relu = relu_fixed_program(32, GateSet::MemristiveNor);
+        let mul = fixed::program(FixedOp::Mul, 32, GateSet::MemristiveNor);
+        assert!(relu.cycles() * 20 < mul.cycles());
+    }
+}

@@ -1,0 +1,485 @@
+//! AritPIM fixed-point arithmetic: bit-serial element-parallel microcode.
+//!
+//! Each generator compiles one vectored arithmetic operation — the same
+//! operation applied independently in every crossbar row (Figure 2 of the
+//! paper) — to a straight-line gate program. Operands and results live in
+//! bit-fields of the row: `u` at columns `[0, N)`, `v` at `[N, 2N)`, result
+//! `z` at `[2N, 2N + z_bits)` (and the division remainder after that).
+//!
+//! Gate-count anchors (paper §3): N-bit addition is `9N` NOR gates (the
+//! canonical MAGIC full adder, 2 cycles/gate ⇒ 576 cycles for N=32, which
+//! reproduces the 233 TOPS of Figure 3); multiplication is ≈`10N²` gates.
+//! Subtraction adds an operand-complement pass (`10N`); division is a
+//! restoring non-performing divider at ≈`16N²`.
+//!
+//! All semantics are **unsigned / two's-complement wrapping** (addition and
+//! subtraction are sign-agnostic; multiplication returns the full 2N-bit
+//! unsigned product; division is unsigned with the `v = 0` convention
+//! `q = 2^N - 1, r = u`, matching the hardware circuit's fixed behaviour —
+//! there is no trap path in a PIM array).
+
+use super::builder::Builder;
+use super::gates::GateSet;
+use super::isa::{Col, Program};
+use super::xbar::Crossbar;
+
+/// The four elementary vectored operations of the paper's Figure 3/4.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FixedOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+}
+
+impl FixedOp {
+    /// All ops, for sweeps.
+    pub fn all() -> [FixedOp; 4] {
+        [FixedOp::Add, FixedOp::Sub, FixedOp::Mul, FixedOp::Div]
+    }
+
+    /// Display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            FixedOp::Add => "add",
+            FixedOp::Sub => "sub",
+            FixedOp::Mul => "mul",
+            FixedOp::Div => "div",
+        }
+    }
+}
+
+/// Row bit-field layout of a compiled fixed-point operation.
+#[derive(Clone, Copy, Debug)]
+pub struct FixedLayout {
+    /// Operand width in bits.
+    pub n: u32,
+    /// First column of operand `u`.
+    pub u: Col,
+    /// First column of operand `v`.
+    pub v: Col,
+    /// First column of the result `z`.
+    pub z: Col,
+    /// Result width (`2N` for mul, else `N`).
+    pub z_bits: u32,
+    /// First column of the division remainder (div only).
+    pub rem: Option<Col>,
+}
+
+impl FixedLayout {
+    /// The standard layout for `op` at width `n`.
+    pub fn new(op: FixedOp, n: u32) -> Self {
+        let z_bits = if op == FixedOp::Mul { 2 * n } else { n };
+        FixedLayout {
+            n,
+            u: 0,
+            v: n,
+            z: 2 * n,
+            z_bits,
+            rem: if op == FixedOp::Div { Some(2 * n + z_bits) } else { None },
+        }
+    }
+
+    /// Total reserved (operand + result) columns.
+    pub fn reserved(&self) -> Col {
+        self.z + self.z_bits + if self.rem.is_some() { self.n } else { 0 }
+    }
+
+    /// Column indices of `u`.
+    pub fn u_cols(&self) -> Vec<Col> {
+        (self.u..self.u + self.n).collect()
+    }
+
+    /// Column indices of `v`.
+    pub fn v_cols(&self) -> Vec<Col> {
+        (self.v..self.v + self.n).collect()
+    }
+
+    /// Column indices of `z`.
+    pub fn z_cols(&self) -> Vec<Col> {
+        (self.z..self.z + self.z_bits).collect()
+    }
+}
+
+/// Compile `op` at width `n` for `set`.
+pub fn program(op: FixedOp, n: u32, set: GateSet) -> Program {
+    match op {
+        FixedOp::Add => add_program(n, set),
+        FixedOp::Sub => sub_program(n, set),
+        FixedOp::Mul => mul_program(n, set),
+        FixedOp::Div => div_program(n, set),
+    }
+}
+
+/// Vectored `z = u + v` (wrapping): the paper's 9N-gate ripple-carry adder.
+pub fn add_program(n: u32, set: GateSet) -> Program {
+    let lay = FixedLayout::new(FixedOp::Add, n);
+    let mut b = Builder::new(set, lay.reserved());
+    let u = lay.u_cols();
+    let v = lay.v_cols();
+    let z = lay.z_cols();
+    let (_, carry) = b.add_words(&u, &v, None, Some(&z));
+    b.free(carry);
+    b.finish()
+}
+
+/// Vectored `z = u - v` (wrapping two's complement).
+pub fn sub_program(n: u32, set: GateSet) -> Program {
+    let lay = FixedLayout::new(FixedOp::Sub, n);
+    let mut b = Builder::new(set, lay.reserved());
+    let u = lay.u_cols();
+    let v = lay.v_cols();
+    let z = lay.z_cols();
+    let (_, carry) = b.sub_words(&u, &v, Some(&z));
+    b.free(carry);
+    b.finish()
+}
+
+/// Vectored `z = u * v` with the full `2N`-bit product: shift-and-add with
+/// a rolling N-bit accumulator (≈10N² gates on the NOR set).
+pub fn mul_program(n: u32, set: GateSet) -> Program {
+    let lay = FixedLayout::new(FixedOp::Mul, n);
+    let mut b = Builder::new(set, lay.reserved());
+    let u = lay.u_cols();
+    let v = lay.v_cols();
+    let z = lay.z_cols();
+    let nn = n as usize;
+
+    // Partial-product helper: pp_j = u_j & v_i; on the NOR set uses the
+    // shared complement of u (precomputed once) and of v_i (once per
+    // iteration) so each AND is a single NOR gate.
+    let nu: Option<Vec<Col>> = match set {
+        GateSet::MemristiveNor => Some(u.iter().map(|&c| b.not(c)).collect()),
+        GateSet::DramMaj => None,
+    };
+    let gen_pp = |b: &mut Builder, nu: &Option<Vec<Col>>, vi: Col, j: usize, u: &[Col]| -> Col {
+        match nu {
+            Some(nu) => {
+                // and = nor(!u_j, !v_i); !v_i supplied by caller as `vi`.
+                b.nor(nu[j], vi)
+            }
+            None => b.and(u[j], vi),
+        }
+    };
+
+    // Iteration 0: product bit 0 and the initial accumulator. On the NOR
+    // set the per-iteration operand is the *complement* of v_i; on the
+    // DRAM set it is v_i itself (no copy needed).
+    let vi0 = match set {
+        GateSet::MemristiveNor => b.not(v[0]),
+        GateSet::DramMaj => v[0],
+    };
+    let mut acc: Vec<Col> = Vec::with_capacity(nn);
+    for j in 0..nn {
+        let pp = gen_pp(&mut b, &nu, vi0, j, &u);
+        if j == 0 {
+            b.copy_into(pp, z[0]);
+            b.free(pp);
+        } else {
+            acc.push(pp);
+        }
+    }
+    if set == GateSet::MemristiveNor {
+        b.free(vi0);
+    }
+    // Top accumulator bit is zero after iteration 0.
+    let top = b.alloc();
+    b.push_set(top, false);
+    acc.push(top);
+
+    // Iterations 1..n: acc(+n bits) += pp; finalized bit i goes to z[i].
+    for i in 1..nn {
+        let vi = match set {
+            GateSet::MemristiveNor => b.not(v[i]),
+            GateSet::DramMaj => v[i],
+        };
+        let pp: Vec<Col> = (0..nn).map(|j| gen_pp(&mut b, &nu, vi, j, &u)).collect();
+        if set == GateSet::MemristiveNor {
+            b.free(vi);
+        }
+        let last = i == nn - 1;
+        // Ripple chain over n bits; bit 0 of the sum is final.
+        let mut carry: Option<Col> = None;
+        let mut next_acc: Vec<Col> = Vec::with_capacity(nn);
+        for j in 0..nn {
+            let cin = match carry {
+                Some(c) => c,
+                None => b.zero(),
+            };
+            let dst = if j == 0 {
+                Some(z[i as usize])
+            } else if last {
+                Some(z[nn + j - 1])
+            } else {
+                None
+            };
+            let (s, co) = match dst {
+                Some(d) => {
+                    let co = b.full_adder_into(pp[j], acc[j], cin, d);
+                    (d, co)
+                }
+                None => b.full_adder(pp[j], acc[j], cin),
+            };
+            if let Some(c) = carry {
+                b.free(c);
+            }
+            carry = Some(co);
+            if j > 0 && !last {
+                next_acc.push(s);
+            }
+        }
+        let co = carry.unwrap();
+        if last {
+            b.copy_into(co, z[2 * nn - 1]);
+            b.free(co);
+        } else {
+            next_acc.push(co);
+        }
+        b.free_word(&pp);
+        b.free_word(&acc);
+        acc = next_acc;
+    }
+    if let Some(nu) = nu {
+        b.free_word(&nu);
+    }
+    b.finish()
+}
+
+/// Vectored unsigned `z = u / v`, remainder in the `rem` field (restoring
+/// division, MSB-first). Division by zero yields `z = 2^N - 1, rem = u`.
+pub fn div_program(n: u32, set: GateSet) -> Program {
+    let lay = FixedLayout::new(FixedOp::Div, n);
+    let mut b = Builder::new(set, lay.reserved());
+    let u = lay.u_cols();
+    let v = lay.v_cols();
+    let z = lay.z_cols();
+    let rem0 = lay.rem.unwrap();
+    let nn = n as usize;
+
+    // v extended by a zero top bit (borrowed constant column).
+    let mut v_ext = v.clone();
+    let zcol = b.zero();
+    v_ext.push(zcol);
+
+    // R = 0, n+1 bits owned.
+    let mut r: Vec<Col> = (0..nn).map(|_| {
+        let c = b.alloc();
+        b.push_set(c, false);
+        c
+    }).collect();
+
+    for i in (0..nn).rev() {
+        // R' = (R << 1) | u_i  — n+1 bits.
+        let lsb = b.alloc();
+        b.copy_into(u[i], lsb);
+        let mut r_sh = vec![lsb];
+        r_sh.extend_from_slice(&r); // r has n bits; r_sh has n+1
+        // diff = R' - v (carry==1 <=> R' >= v)
+        let (diff, geq) = b.sub_words(&r_sh, &v_ext, None);
+        b.copy_into(geq, z[i]);
+        // R = geq ? diff : R'  (keep low n bits; top bit provably 0)
+        let r_next_full = b.mux_word(geq, &diff, &r_sh);
+        b.free(geq);
+        b.free_word(&diff);
+        b.free_word(&r_sh);
+        let (keep, drop_top) = r_next_full.split_at(nn);
+        r = keep.to_vec();
+        for &c in drop_top {
+            b.free(c);
+        }
+    }
+    // Remainder out.
+    for (k, &c) in r.iter().enumerate() {
+        b.copy_into(c, rem0 + k as Col);
+    }
+    b.free_word(&r);
+    b.finish()
+}
+
+/// Load one `u` and `v` element per row into a crossbar laid out per `lay`.
+pub fn load_operands(xbar: &mut Crossbar, lay: &FixedLayout, u: &[u64], v: &[u64]) {
+    assert_eq!(u.len(), v.len());
+    xbar.write_field(lay.u, lay.n, u);
+    xbar.write_field(lay.v, lay.n, v);
+}
+
+/// Read back `count` results from the `z` field.
+pub fn read_result(xbar: &Crossbar, lay: &FixedLayout, count: usize) -> Vec<u64> {
+    xbar.read_field(lay.z, lay.z_bits, count)
+}
+
+/// Read back `count` division remainders.
+pub fn read_remainder(xbar: &Crossbar, lay: &FixedLayout, count: usize) -> Vec<u64> {
+    xbar.read_field(lay.rem.expect("layout has no remainder"), lay.n, count)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn run(op: FixedOp, n: u32, set: GateSet, u: &[u64], v: &[u64]) -> (Vec<u64>, Vec<u64>) {
+        let lay = FixedLayout::new(op, n);
+        let prog = program(op, n, set);
+        prog.validate_for(set).unwrap();
+        assert!(prog.width() <= 1024, "{op:?} n={n} width={}", prog.width());
+        let mut x = Crossbar::new(u.len(), prog.width() as usize);
+        load_operands(&mut x, &lay, u, v);
+        x.execute(&prog);
+        let z = read_result(&x, &lay, u.len());
+        let r = if op == FixedOp::Div {
+            read_remainder(&x, &lay, u.len())
+        } else {
+            Vec::new()
+        };
+        (z, r)
+    }
+
+    fn mask(n: u32) -> u64 {
+        if n == 64 {
+            u64::MAX
+        } else {
+            (1u64 << n) - 1
+        }
+    }
+
+    #[test]
+    fn add_bit_exact_all_widths() {
+        let mut rng = Rng::new(1);
+        for set in GateSet::all() {
+            for n in [8u32, 16, 32] {
+                let u = rng.vec_bits(128, n);
+                let v = rng.vec_bits(128, n);
+                let (z, _) = run(FixedOp::Add, n, set, &u, &v);
+                for i in 0..u.len() {
+                    assert_eq!(z[i], u[i].wrapping_add(v[i]) & mask(n), "set={set:?} n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn add_carry_chain_edge() {
+        // all-ones + 1 must wrap to zero through the full carry chain.
+        for set in GateSet::all() {
+            let (z, _) = run(FixedOp::Add, 32, set, &[u32::MAX as u64, 0, 7], &[1, 0, 9]);
+            assert_eq!(z, vec![0, 0, 16]);
+        }
+    }
+
+    #[test]
+    fn sub_bit_exact() {
+        let mut rng = Rng::new(2);
+        for set in GateSet::all() {
+            let n = 16;
+            let u = rng.vec_bits(100, n);
+            let v = rng.vec_bits(100, n);
+            let (z, _) = run(FixedOp::Sub, n, set, &u, &v);
+            for i in 0..u.len() {
+                assert_eq!(z[i], u[i].wrapping_sub(v[i]) & mask(n), "set={set:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn mul_bit_exact() {
+        let mut rng = Rng::new(3);
+        for set in GateSet::all() {
+            for n in [8u32, 16] {
+                let u = rng.vec_bits(96, n);
+                let v = rng.vec_bits(96, n);
+                let (z, _) = run(FixedOp::Mul, n, set, &u, &v);
+                for i in 0..u.len() {
+                    assert_eq!(z[i], u[i] * v[i], "set={set:?} n={n} {}*{}", u[i], v[i]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mul_32bit_full_product() {
+        let mut rng = Rng::new(4);
+        let u = rng.vec_bits(64, 32);
+        let v = rng.vec_bits(64, 32);
+        let (z, _) = run(FixedOp::Mul, 32, GateSet::MemristiveNor, &u, &v);
+        for i in 0..u.len() {
+            assert_eq!(z[i], u[i] * v[i]);
+        }
+    }
+
+    #[test]
+    fn mul_edges() {
+        for set in GateSet::all() {
+            let u = [0u64, 1, 0xFF, 0xFF, 0x80];
+            let v = [5u64, 0xFF, 0xFF, 0, 0x80];
+            let (z, _) = run(FixedOp::Mul, 8, set, &u, &v);
+            assert_eq!(z, vec![0, 0xFF, 0xFE01, 0, 0x4000]);
+        }
+    }
+
+    #[test]
+    fn div_bit_exact() {
+        let mut rng = Rng::new(5);
+        for set in GateSet::all() {
+            let n = 16;
+            let mut u = rng.vec_bits(96, n);
+            let mut v: Vec<u64> = (0..96).map(|_| 1 + rng.bits(n - 1)).collect();
+            u.push(12345);
+            v.push(1);
+            let (z, r) = run(FixedOp::Div, n, set, &u, &v);
+            for i in 0..u.len() {
+                assert_eq!(z[i], u[i] / v[i], "set={set:?} {}/{}", u[i], v[i]);
+                assert_eq!(r[i], u[i] % v[i], "set={set:?} {}%{}", u[i], v[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn div_by_zero_convention() {
+        for set in GateSet::all() {
+            let (z, r) = run(FixedOp::Div, 8, set, &[200, 0], &[0, 0]);
+            assert_eq!(z, vec![0xFF, 0xFF]);
+            assert_eq!(r, vec![200, 0]);
+        }
+    }
+
+    #[test]
+    fn paper_gate_count_anchors() {
+        // 9N NOR gates for addition (paper §3).
+        let p = add_program(32, GateSet::MemristiveNor);
+        assert_eq!(p.gates(), 9 * 32, "MAGIC ripple adder");
+        // 2 cycles per gate -> 576 cycles, the paper's 233-TOPS anchor.
+        assert_eq!(p.cycles(), 2 * 9 * 32 + 1 /* const-zero init */);
+        // Multiplication lands near 10N².
+        let p = mul_program(32, GateSet::MemristiveNor);
+        let gates = p.gates() as f64;
+        let ratio = gates / (32.0 * 32.0);
+        assert!((9.0..12.5).contains(&ratio), "mul gates/N^2 = {ratio}");
+        // DRAM addition ~ 18 cycles/bit (paper-derived ~575 for N=32).
+        let p = add_program(32, GateSet::DramMaj);
+        assert!((500..=700).contains(&p.cycles()), "dram add cycles={}", p.cycles());
+    }
+
+    #[test]
+    fn programs_fit_standard_crossbar() {
+        for set in GateSet::all() {
+            for op in FixedOp::all() {
+                for n in [8u32, 16, 32] {
+                    let p = program(op, n, set);
+                    assert!(
+                        p.width() <= 1024,
+                        "{op:?} n={n} set={set:?} width={}",
+                        p.width()
+                    );
+                }
+            }
+        }
+        // 64-bit add/sub also fit.
+        for set in GateSet::all() {
+            for op in [FixedOp::Add, FixedOp::Sub] {
+                let p = program(op, 64, set);
+                assert!(p.width() <= 1024);
+            }
+        }
+    }
+}

@@ -1,0 +1,758 @@
+//! AritPIM IEEE-754 floating-point microcode.
+//!
+//! Compiles vectored floating-point add/sub/mul/div — round-to-nearest-
+//! even, full subnormal support, canonical quiet NaNs — to column-parallel
+//! gate programs, for any [`Format`] (fp16/fp32/fp64) and either gate set.
+//! The generated circuits mirror the host-side oracle in
+//! [`crate::pim::softfloat`] *structurally* (same alignment/jamming/
+//! normalization/rounding decomposition), so the two agree bit-for-bit;
+//! the test suite and `rust/tests/property_arith.rs` enforce exactly that
+//! over random and adversarial operands.
+//!
+//! This is the capability FloatPIM first claimed and AritPIM repaired
+//! (paper §3): floating-point arithmetic without CAM hardware, as a pure
+//! sequence of bitwise column operations. The resulting gate counts are
+//! what make the paper's compute-complexity argument: an fp32 addition
+//! costs thousands of gates (vs 288 for fixed-32), which is why digital
+//! PIM loses its edge on high-reuse FP workloads (§5–6).
+//!
+//! Row layout: `u` at `[0, N)`, `v` at `[N, 2N)`, `z` at `[2N, 3N)` where
+//! `N = 1 + exp + man`.
+
+use super::builder::Builder;
+use super::fixed::FixedOp;
+use super::gates::GateSet;
+use super::isa::{Col, Program};
+use super::softfloat::Format;
+use super::xbar::Crossbar;
+
+/// Row bit-field layout of a compiled floating-point operation.
+#[derive(Clone, Copy, Debug)]
+pub struct FloatLayout {
+    pub fmt: Format,
+    pub u: Col,
+    pub v: Col,
+    pub z: Col,
+}
+
+impl FloatLayout {
+    /// Standard three-field layout.
+    pub fn new(fmt: Format) -> Self {
+        let n = fmt.bits();
+        FloatLayout {
+            fmt,
+            u: 0,
+            v: n,
+            z: 2 * n,
+        }
+    }
+
+    /// Reserved columns (operands + result).
+    pub fn reserved(&self) -> Col {
+        3 * self.fmt.bits()
+    }
+}
+
+/// One unpacked operand. Mixes borrowed input columns and owned scratch;
+/// unpack products stay live for the whole program (their footprint is
+/// small and the result-field width check still enforces ≤1024 columns).
+struct Unpacked {
+    s: Col,
+    /// Effective exponent: `max(e, 1)`, `exp` bits.
+    eeff: Vec<Col>,
+    /// Significand with hidden bit: `man+1` bits.
+    sig: Vec<Col>,
+    is_inf: Col,
+    is_nan: Col,
+    is_zero: Col,
+}
+
+fn unpack(b: &mut Builder, fmt: Format, base: Col) -> Unpacked {
+    let man = fmt.man as usize;
+    let exp = fmt.exp as usize;
+    let m: Vec<Col> = (0..man).map(|k| base + k as Col).collect();
+    let e: Vec<Col> = (0..exp).map(|k| base + (man + k) as Col).collect();
+    let s = base + (man + exp) as Col;
+    let nz_e = b.or_reduce(&e); // also the hidden bit
+    // eeff = e, with bit 0 forced when the exponent field is zero.
+    let n_nz_e = b.not(nz_e);
+    let e0_eff = b.or(e[0], n_nz_e);
+    b.free(n_nz_e);
+    let mut eeff = vec![e0_eff];
+    eeff.extend_from_slice(&e[1..]);
+    let mut sig = m.clone();
+    sig.push(nz_e); // hidden bit
+    let e_ones = b.and_reduce(&e);
+    let m_nz = b.or_reduce(&m);
+    let is_nan = b.and(e_ones, m_nz);
+    let is_inf = b.and_not(e_ones, m_nz);
+    let any = b.or(nz_e, m_nz);
+    let is_zero = b.not(any);
+    b.free(any);
+    b.free(e_ones);
+    b.free(m_nz);
+    Unpacked {
+        s,
+        eeff,
+        sig,
+        is_inf,
+        is_nan,
+        is_zero,
+    }
+}
+
+/// Shift-amount width for a value of `w` bits (`2^k - 1 >= w` so a
+/// saturated amount flushes the word entirely).
+fn amt_bits(w: usize) -> usize {
+    let mut k = 0;
+    while (1usize << k) - 1 < w {
+        k += 1;
+    }
+    k
+}
+
+/// Normalize + denormalize + round (RNE) + pack: the gate-level analogue
+/// of `softfloat::round_pack`.
+///
+/// Input: signed exponent `e` (`exp+2` bits two's complement) in the
+/// softfloat frame (value = f × 2^(e − bias − man − 3) once `f` is
+/// normalized with its MSB at `man+3`), and the significand word `f` (any
+/// width ≥ man+5; wider inputs, e.g. a full multiplier product, are
+/// right-shifted with jamming after left-normalization).
+///
+/// Returns the `exp+man` result-field columns (sign excluded), with
+/// overflow-to-infinity already applied.
+fn round_pack_gates(b: &mut Builder, fmt: Format, e: &[Col], f: &[Col]) -> Vec<Col> {
+    let man = fmt.man as usize;
+    let exp = fmt.exp as usize;
+    let ew = exp + 2;
+    assert_eq!(e.len(), ew);
+    let w_in = f.len();
+    assert!(w_in >= man + 5);
+
+    // 1. Left-normalize: MSB -> w_in - 1.
+    let (fnorm, cnt) = b.normalize_left(f);
+
+    // 2. Constant right shift down to the man+4-wide frame, jamming.
+    let shift = w_in - 1 - (man + 3);
+    let jam = b.or_reduce(&fnorm[..shift]);
+    let mut f2: Vec<Col> = fnorm[shift..].to_vec(); // man+4 bits, MSB at man+3
+    // fnorm's low `shift` bits are no longer referenced.
+    for &c in &fnorm[..shift] {
+        b.free(c);
+    }
+    let old0 = f2[0];
+    let b0 = b.or(f2[0], jam);
+    b.free(jam);
+    b.free(old0);
+    f2[0] = b0;
+
+    // 3. e' = e + (w_in - man - 4) - cnt   (ew-bit two's complement).
+    let off = (w_in - man - 4) as u64 & ((1u64 << ew) - 1);
+    let off_w = b.const_word(ew, off);
+    let (e_t, c0) = b.add_words(e, &off_w, None, None);
+    b.free(c0);
+    let zc = b.zero();
+    let mut cnt_ext = cnt.clone();
+    while cnt_ext.len() < ew {
+        cnt_ext.push(zc);
+    }
+    cnt_ext.truncate(ew);
+    let (e_p, c1) = b.sub_words(&e_t, &cnt_ext, None);
+    b.free(c1);
+    b.free_word(&e_t);
+    for &c in &cnt {
+        b.free(c);
+    }
+
+    // 4. Subnormal handling: if e' <= 0, shift right by 1 - e' (jamming)
+    //    and pack with exponent field 0.
+    let sign_e = e_p[ew - 1];
+    let e_zero = b.is_zero(&e_p);
+    let noz = b.or(sign_e, e_zero); // e' <= 0
+    b.free(e_zero);
+    let one_w = b.const_word(ew, 1);
+    let (dn, c2) = b.sub_words(&one_w, &e_p, None); // 1 - e'
+    b.free(c2);
+    // Mask to zero when e' > 0 (the wrapped value would otherwise shift).
+    let dn_m: Vec<Col> = dn.iter().map(|&d| b.and(d, noz)).collect();
+    b.free_word(&dn);
+    let k = amt_bits(man + 4);
+    let amt = b.saturate_amount(&dn_m, k);
+    b.free_word(&dn_m);
+    let (mut f3, sticky) = b.barrel_shr_sticky(&f2, &amt);
+    b.free_word(&amt);
+    b.free_word(&f2);
+    let old0 = f3[0];
+    let b0 = b.or(f3[0], sticky);
+    b.free(sticky);
+    b.free(old0);
+    f3[0] = b0;
+    // e_pack = noz ? 1 : e'
+    let one_w2 = b.const_word(ew, 1);
+    let e_pack = b.mux_word(noz, &one_w2, &e_p);
+    b.free_word(&e_p);
+    b.free(noz);
+
+    // 5. Round to nearest even: r_up = G & (L | R | S).
+    let (s_, r_, g_, l_) = (f3[0], f3[1], f3[2], f3[3]);
+    let lrs = b.or3(l_, r_, s_);
+    let r_up = b.and(g_, lrs);
+    b.free(lrs);
+
+    // 6. bits = ((e_pack - 1) << man) + mant_full + r_up over man+ew bits;
+    //    the mantissa carry rolls into the exponent field (softfloat's
+    //    packing trick: subnormal carry = smallest normal, exponent carry
+    //    past emax-1 = Inf, caught below).
+    let ones = b.const_word(ew, (1u64 << ew) - 1);
+    let (e_m1, c3) = b.add_words(&e_pack, &ones, None, None); // e_pack - 1
+    b.free(c3);
+    b.free_word(&e_pack);
+    let mant_full = &f3[3..]; // man+1 bits
+    let total = man + ew;
+    let mut a_w: Vec<Col> = mant_full.to_vec();
+    while a_w.len() < total {
+        a_w.push(zc);
+    }
+    let mut b_w: Vec<Col> = vec![zc; man];
+    b_w.extend_from_slice(&e_m1);
+    debug_assert_eq!(b_w.len(), total);
+    let (bits, c4) = b.add_words(&a_w, &b_w, Some(r_up), None);
+    b.free(c4);
+    b.free(r_up);
+    b.free_word(&f3);
+    b.free_word(&e_m1);
+
+    // 7. Overflow to Inf: exponent value >= emax (either carry bit set or
+    //    the exponent field all-ones).
+    let exp_field = &bits[man..man + exp];
+    let all_ones = b.and_reduce(exp_field);
+    let ovf = b.or3(bits[man + exp], bits[man + exp + 1], all_ones);
+    b.free(all_ones);
+    let inf_f = inf_field(b, fmt);
+    let out = b.mux_word(ovf, &inf_f, &bits[..man + exp]);
+    b.free(ovf);
+    b.free_word(&bits);
+    out
+}
+
+/// The `exp+man` field columns of ±Inf (constants).
+fn inf_field(b: &mut Builder, fmt: Format) -> Vec<Col> {
+    let mut w = b.const_word(fmt.man as usize, 0);
+    w.extend(b.const_word(fmt.exp as usize, (1u64 << fmt.exp) - 1));
+    w
+}
+
+/// The `exp+man` field columns of the canonical quiet NaN.
+fn qnan_field(b: &mut Builder, fmt: Format) -> Vec<Col> {
+    let man = fmt.man as usize;
+    let mut w = b.const_word(man, 1u64 << (man - 1));
+    w.extend(b.const_word(fmt.exp as usize, (1u64 << fmt.exp) - 1));
+    w
+}
+
+/// One level of the specials chain: `(sign, field) = cond ? (s_c, f_c) :
+/// (sign, field)`. Frees the incoming `sign`/`field`.
+fn select(
+    b: &mut Builder,
+    cond: Col,
+    s_c: Col,
+    f_c: &[Col],
+    sign: Col,
+    field: Vec<Col>,
+    sign_owned: bool,
+) -> (Col, Vec<Col>) {
+    let ns = b.mux(cond, s_c, sign);
+    let nf = b.mux_word(cond, f_c, &field);
+    if sign_owned {
+        b.free(sign);
+    }
+    b.free_word(&field);
+    (ns, nf)
+}
+
+/// Compile floating-point `op` for `fmt` on `set`.
+pub fn program(op: FixedOp, fmt: Format, set: GateSet) -> Program {
+    match op {
+        FixedOp::Add => add_sub_program(fmt, set, false),
+        FixedOp::Sub => add_sub_program(fmt, set, true),
+        FixedOp::Mul => mul_program(fmt, set),
+        FixedOp::Div => div_program(fmt, set),
+    }
+}
+
+/// Vectored IEEE-754 addition (subtraction flips `v`'s sign first).
+fn add_sub_program(fmt: Format, set: GateSet, negate_b: bool) -> Program {
+    let lay = FloatLayout::new(fmt);
+    let man = fmt.man as usize;
+    let exp = fmt.exp as usize;
+    let ew = exp + 2;
+    let w = man + 5;
+    let mut b = Builder::new(set, lay.reserved());
+
+    let a = unpack(&mut b, fmt, lay.u);
+    let bb = unpack(&mut b, fmt, lay.v);
+    let sb = if negate_b { b.not(bb.s) } else { bb.s };
+
+    // ---- ordering: x = larger magnitude (exponent, then significand) ----
+    let zc = b.zero();
+    let mut ea_ext = a.eeff.clone();
+    ea_ext.push(zc);
+    let mut eb_ext = bb.eeff.clone();
+    eb_ext.push(zc);
+    let (d, geq_e) = b.sub_words(&ea_ext, &eb_ext, None);
+    let d_zero = b.is_zero(&d);
+    let (dd, geq_sig) = b.sub_words(&a.sig, &bb.sig, None);
+    b.free_word(&dd);
+    let n_geq_e = b.not(geq_e);
+    let n_geq_sig = b.not(geq_sig);
+    let t = b.and(d_zero, n_geq_sig);
+    let swap = b.or(n_geq_e, t);
+    b.free(n_geq_e);
+    b.free(n_geq_sig);
+    b.free(t);
+    b.free(geq_sig);
+    b.free(geq_e);
+    b.free(d_zero);
+
+    let sx = b.mux(swap, sb, a.s);
+    let sig_x = b.mux_word(swap, &bb.sig, &a.sig);
+    let sig_y = b.mux_word(swap, &a.sig, &bb.sig);
+    let eeff_x = b.mux_word(swap, &bb.eeff, &a.eeff);
+    // |d| = swap ? -d : d
+    let nd = b.neg_word(&d);
+    let d_abs = b.mux_word(swap, &nd, &d);
+    b.free_word(&nd);
+    b.free_word(&d);
+    b.free(swap);
+
+    // ---- align -----------------------------------------------------------
+    let k = amt_bits(man + 4);
+    let amt = b.saturate_amount(&d_abs, k);
+    b.free_word(&d_abs);
+    // my3 = sig_y << 3, extended to w bits.
+    let mut my3: Vec<Col> = vec![zc, zc, zc];
+    my3.extend_from_slice(&sig_y);
+    my3.push(zc);
+    debug_assert_eq!(my3.len(), w);
+    let (mut my3s, sticky) = b.barrel_shr_sticky(&my3, &amt);
+    b.free_word(&amt);
+    b.free_word(&sig_y);
+    let old0 = my3s[0];
+    let j0 = b.or(my3s[0], sticky);
+    b.free(sticky);
+    b.free(old0);
+    my3s[0] = j0;
+
+    // ---- effective add/sub -------------------------------------------------
+    let eff_sub = b.xor(a.s, sb);
+    let addend: Vec<Col> = my3s.iter().map(|&c| b.xor(c, eff_sub)).collect();
+    b.free_word(&my3s);
+    let mut mx3: Vec<Col> = vec![zc, zc, zc];
+    mx3.extend_from_slice(&sig_x);
+    mx3.push(zc);
+    let (f, cout) = b.add_words(&mx3, &addend, Some(eff_sub), None);
+    b.free(cout); // 1 for effective subtraction (x >= y), 0 for addition
+    b.free_word(&addend);
+    b.free_word(&sig_x);
+    let f_zero = b.is_zero(&f); // exact cancellation -> +0
+
+    // ---- round & pack ------------------------------------------------------
+    let mut e_ext = eeff_x.clone();
+    while e_ext.len() < ew {
+        e_ext.push(zc);
+    }
+    let field = round_pack_gates(&mut b, fmt, &e_ext, &f);
+    b.free_word(&f);
+    b.free_word(&eeff_x);
+
+    // ---- specials chain (lowest priority first) ----------------------------
+    let nf = man + exp;
+    let zero_field = b.const_word(nf, 0);
+    let zero_c = b.zero();
+    let a_field: Vec<Col> = (0..nf as u32).map(|k2| lay.u + k2).collect();
+    let b_field: Vec<Col> = (0..nf as u32).map(|k2| lay.v + k2).collect();
+    // cancellation -> +0
+    let (sign, fieldv) = select(&mut b, f_zero, zero_c, &zero_field, sx, field, true);
+    b.free(f_zero);
+    // a zero -> b
+    let (sign, fieldv) = select(&mut b, a.is_zero, sb, &b_field, sign, fieldv, true);
+    // b zero -> a
+    let (sign, fieldv) = select(&mut b, bb.is_zero, a.s, &a_field, sign, fieldv, true);
+    // both zero -> (sa & sb, 0)
+    let both_zero = b.and(a.is_zero, bb.is_zero);
+    let szz = b.and(a.s, sb);
+    let (sign, fieldv) = select(&mut b, both_zero, szz, &zero_field, sign, fieldv, true);
+    b.free(both_zero);
+    b.free(szz);
+    // b inf -> (sb, Inf); a inf -> (sa, Inf)
+    let inf_f = inf_field(&mut b, fmt);
+    let (sign, fieldv) = select(&mut b, bb.is_inf, sb, &inf_f, sign, fieldv, true);
+    let (sign, fieldv) = select(&mut b, a.is_inf, a.s, &inf_f, sign, fieldv, true);
+    // NaN (either NaN, or Inf - Inf) -> canonical qNaN with sign 0
+    let both_inf = b.and(a.is_inf, bb.is_inf);
+    let inf_sub = b.and(both_inf, eff_sub);
+    b.free(both_inf);
+    let any_nan0 = b.or(a.is_nan, bb.is_nan);
+    let nan_case = b.or(any_nan0, inf_sub);
+    b.free(any_nan0);
+    b.free(inf_sub);
+    b.free(eff_sub);
+    let qnan_f = qnan_field(&mut b, fmt);
+    let (sign, fieldv) = select(&mut b, nan_case, zero_c, &qnan_f, sign, fieldv, true);
+    b.free(nan_case);
+
+    // ---- write result -------------------------------------------------------
+    for (i, &c) in fieldv.iter().enumerate() {
+        b.copy_into(c, lay.z + i as Col);
+    }
+    b.copy_into(sign, lay.z + nf as Col);
+    b.finish()
+}
+
+/// Vectored IEEE-754 multiplication.
+fn mul_program(fmt: Format, set: GateSet) -> Program {
+    let lay = FloatLayout::new(fmt);
+    let man = fmt.man as usize;
+    let exp = fmt.exp as usize;
+    let ew = exp + 2;
+    let mut b = Builder::new(set, lay.reserved());
+
+    let a = unpack(&mut b, fmt, lay.u);
+    let bb = unpack(&mut b, fmt, lay.v);
+    let s = b.xor(a.s, bb.s);
+
+    // Significand product: 2(man+1) bits (≥ man+5 for every format).
+    let p = b.mul_words(&a.sig, &bb.sig);
+
+    // e = eeff_a + eeff_b + (3 - bias - man), ew-bit two's complement.
+    let zc = b.zero();
+    let mut ea_ext = a.eeff.clone();
+    let mut eb_ext = bb.eeff.clone();
+    while ea_ext.len() < ew {
+        ea_ext.push(zc);
+    }
+    while eb_ext.len() < ew {
+        eb_ext.push(zc);
+    }
+    let (e_sum, c0) = b.add_words(&ea_ext, &eb_ext, None, None);
+    b.free(c0);
+    let off = (3i64 - fmt.bias() - man as i64) as u64 & ((1u64 << ew) - 1);
+    let off_w = b.const_word(ew, off);
+    let (e_raw, c1) = b.add_words(&e_sum, &off_w, None, None);
+    b.free(c1);
+    b.free_word(&e_sum);
+
+    let field = round_pack_gates(&mut b, fmt, &e_raw, &p);
+    b.free_word(&p);
+    b.free_word(&e_raw);
+
+    // ---- specials: computed <- zero <- inf <- NaN ---------------------------
+    let nf = man + exp;
+    let any_zero = b.or(a.is_zero, bb.is_zero);
+    let any_inf = b.or(a.is_inf, bb.is_inf);
+    let zero_field = b.const_word(nf, 0);
+    let (sign, fieldv) = select(&mut b, any_zero, s, &zero_field, s, field, false);
+    let inf_f = inf_field(&mut b, fmt);
+    let (sign, fieldv) = select(&mut b, any_inf, s, &inf_f, sign, fieldv, true);
+    let inf_times_zero = b.and(any_inf, any_zero);
+    let any_nan0 = b.or(a.is_nan, bb.is_nan);
+    let nan_case = b.or(any_nan0, inf_times_zero);
+    b.free(any_nan0);
+    b.free(inf_times_zero);
+    b.free(any_zero);
+    b.free(any_inf);
+    let qnan_f = qnan_field(&mut b, fmt);
+    let zero_c = b.zero();
+    let (sign, fieldv) = select(&mut b, nan_case, zero_c, &qnan_f, sign, fieldv, true);
+    b.free(nan_case);
+
+    for (i, &c) in fieldv.iter().enumerate() {
+        b.copy_into(c, lay.z + i as Col);
+    }
+    b.copy_into(sign, lay.z + nf as Col);
+    b.finish()
+}
+
+/// Vectored IEEE-754 division (restoring long division: man+5 quotient
+/// bits plus remainder jam — structurally identical to the oracle).
+fn div_program(fmt: Format, set: GateSet) -> Program {
+    let lay = FloatLayout::new(fmt);
+    let man = fmt.man as usize;
+    let exp = fmt.exp as usize;
+    let ew = exp + 2;
+    let mut b = Builder::new(set, lay.reserved());
+
+    let a = unpack(&mut b, fmt, lay.u);
+    let bb = unpack(&mut b, fmt, lay.v);
+    let s = b.xor(a.s, bb.s);
+    let zc = b.zero();
+
+    // Normalize significands (subnormal inputs carry leading zeros).
+    let (sa_n, ka) = b.normalize_left(&a.sig); // man+1 bits, MSB at man
+    let (sb_n, kb) = b.normalize_left(&bb.sig);
+
+    // e = (eeff_a - ka) - (eeff_b - kb) + (bias - 1).
+    let mut ea_ext = a.eeff.clone();
+    let mut eb_ext = bb.eeff.clone();
+    while ea_ext.len() < ew {
+        ea_ext.push(zc);
+    }
+    while eb_ext.len() < ew {
+        eb_ext.push(zc);
+    }
+    let mut ka_ext = ka.clone();
+    let mut kb_ext = kb.clone();
+    while ka_ext.len() < ew {
+        ka_ext.push(zc);
+    }
+    while kb_ext.len() < ew {
+        kb_ext.push(zc);
+    }
+    ka_ext.truncate(ew);
+    kb_ext.truncate(ew);
+    let (e1, c0) = b.sub_words(&ea_ext, &ka_ext, None);
+    b.free(c0);
+    let (e2, c1) = b.sub_words(&eb_ext, &kb_ext, None);
+    b.free(c1);
+    let (e3, c2) = b.sub_words(&e1, &e2, None);
+    b.free(c2);
+    b.free_word(&e1);
+    b.free_word(&e2);
+    for &c in ka.iter().chain(kb.iter()) {
+        b.free(c);
+    }
+    let off = (fmt.bias() - 1) as u64 & ((1u64 << ew) - 1);
+    let off_w = b.const_word(ew, off);
+    let (e_raw, c3) = b.add_words(&e3, &off_w, None, None);
+    b.free(c3);
+    b.free_word(&e3);
+
+    // Restoring division producing man+5 quotient bits (MSB first).
+    // R starts as sa_n >> 1, zero-extended to man+1 bits.
+    let mut r: Vec<Col> = sa_n[1..].to_vec(); // borrowed from sa_n
+    r.push(zc);
+    let mut d_ext: Vec<Col> = sb_n.clone();
+    d_ext.push(zc); // man+2 bits
+    let steps = man + 5;
+    let mut q: Vec<Col> = Vec::with_capacity(steps);
+    let mut r_owned = false;
+    for j in (0..steps).rev() {
+        let bit_in = if j == steps - 1 { sa_n[0] } else { zc };
+        let mut r_sh: Vec<Col> = vec![bit_in];
+        r_sh.extend_from_slice(&r); // man+2 bits
+        let (diff, geq) = b.sub_words(&r_sh, &d_ext, None);
+        q.push(geq);
+        let r_next = b.mux_word(geq, &diff, &r_sh);
+        b.free_word(&diff);
+        if r_owned {
+            for &c in &r_sh[1..] {
+                b.free(c);
+            }
+        }
+        // Keep low man+1 bits (top bit is provably 0 after restore).
+        let (keep, drop_top) = r_next.split_at(man + 1);
+        for &c in drop_top {
+            b.free(c);
+        }
+        r = keep.to_vec();
+        r_owned = true;
+    }
+    let rem_nz = b.or_reduce(&r);
+    if r_owned {
+        b.free_word(&r);
+    }
+    q.reverse(); // little-endian
+    let old0 = q[0];
+    let j0 = b.or(q[0], rem_nz);
+    b.free(rem_nz);
+    b.free(old0);
+    q[0] = j0;
+    b.free_word(&sa_n);
+    b.free_word(&sb_n);
+
+    let field = round_pack_gates(&mut b, fmt, &e_raw, &q);
+    b.free_word(&q);
+    b.free_word(&e_raw);
+
+    // ---- specials: computed <- a-zero/b-inf -> 0 <- b-zero/a-inf -> Inf
+    //      <- NaN/Inf÷Inf/0÷0 -> qNaN -----------------------------------------
+    let nf = man + exp;
+    let zero_field = b.const_word(nf, 0);
+    let (sign, fieldv) = select(&mut b, a.is_zero, s, &zero_field, s, field, false);
+    let (sign, fieldv) = select(&mut b, bb.is_inf, s, &zero_field, sign, fieldv, true);
+    let inf_f = inf_field(&mut b, fmt);
+    let (sign, fieldv) = select(&mut b, bb.is_zero, s, &inf_f, sign, fieldv, true);
+    let (sign, fieldv) = select(&mut b, a.is_inf, s, &inf_f, sign, fieldv, true);
+    let both_inf = b.and(a.is_inf, bb.is_inf);
+    let both_zero = b.and(a.is_zero, bb.is_zero);
+    let any_nan0 = b.or(a.is_nan, bb.is_nan);
+    let nan_case = b.or3(any_nan0, both_inf, both_zero);
+    b.free(any_nan0);
+    b.free(both_inf);
+    b.free(both_zero);
+    let qnan_f = qnan_field(&mut b, fmt);
+    let zero_c = b.zero();
+    let (sign, fieldv) = select(&mut b, nan_case, zero_c, &qnan_f, sign, fieldv, true);
+    b.free(nan_case);
+
+    for (i, &c) in fieldv.iter().enumerate() {
+        b.copy_into(c, lay.z + i as Col);
+    }
+    b.copy_into(sign, lay.z + nf as Col);
+    b.finish()
+}
+
+/// Load float operands (IEEE bit patterns) into a crossbar.
+pub fn load_operands(xbar: &mut Crossbar, lay: &FloatLayout, u: &[u64], v: &[u64]) {
+    assert_eq!(u.len(), v.len());
+    xbar.write_field(lay.u, lay.fmt.bits(), u);
+    xbar.write_field(lay.v, lay.fmt.bits(), v);
+}
+
+/// Read back result bit patterns.
+pub fn read_result(xbar: &Crossbar, lay: &FloatLayout, count: usize) -> Vec<u64> {
+    xbar.read_field(lay.z, lay.fmt.bits(), count)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pim::softfloat;
+    use crate::util::rng::Rng;
+
+    fn run_op(op: FixedOp, fmt: Format, set: GateSet, u: &[u64], v: &[u64]) -> Vec<u64> {
+        let lay = FloatLayout::new(fmt);
+        let prog = program(op, fmt, set);
+        prog.validate_for(set).unwrap();
+        assert!(
+            prog.width() <= 1024,
+            "{op:?} {fmt:?} {set:?} width={}",
+            prog.width()
+        );
+        let mut x = Crossbar::new(u.len(), prog.width() as usize);
+        load_operands(&mut x, &lay, u, v);
+        x.execute(&prog);
+        read_result(&x, &lay, u.len())
+    }
+
+    fn check_against_softfloat(op: FixedOp, fmt: Format, set: GateSet, n: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let mut u: Vec<u64> = (0..n).map(|_| rng.float_pattern(fmt.exp, fmt.man)).collect();
+        let mut v: Vec<u64> = (0..n).map(|_| rng.float_pattern(fmt.exp, fmt.man)).collect();
+        // Deterministic edge pairs appended to the random block.
+        let inf = fmt.inf(false);
+        let ninf = fmt.inf(true);
+        let one = fmt.from_f64(1.0);
+        for (a, b2) in [
+            (0, 0),
+            (inf, ninf),
+            (inf, inf),
+            (one, one),
+            (1, 1),
+            (1, 2),
+            (fmt.qnan(), one),
+            (one, 0),
+            (0, one),
+        ] {
+            u.push(a);
+            v.push(b2);
+        }
+        let got = run_op(op, fmt, set, &u, &v);
+        for i in 0..u.len() {
+            let expect = softfloat::apply(fmt, op, u[i], v[i]);
+            assert_eq!(
+                got[i], expect,
+                "{op:?} {fmt:?} {set:?} i={i} a={:#x} b={:#x} got={:#x} expect={:#x}",
+                u[i], v[i], got[i], expect
+            );
+        }
+    }
+
+    #[test]
+    fn fp32_add_matches_softfloat_nor() {
+        check_against_softfloat(FixedOp::Add, Format::FP32, GateSet::MemristiveNor, 600, 11);
+    }
+
+    #[test]
+    fn fp32_add_matches_softfloat_dram() {
+        check_against_softfloat(FixedOp::Add, Format::FP32, GateSet::DramMaj, 300, 12);
+    }
+
+    #[test]
+    fn fp32_sub_matches_softfloat() {
+        check_against_softfloat(FixedOp::Sub, Format::FP32, GateSet::MemristiveNor, 600, 13);
+    }
+
+    #[test]
+    fn fp32_mul_matches_softfloat() {
+        check_against_softfloat(FixedOp::Mul, Format::FP32, GateSet::MemristiveNor, 500, 14);
+        check_against_softfloat(FixedOp::Mul, Format::FP32, GateSet::DramMaj, 200, 15);
+    }
+
+    #[test]
+    fn fp32_div_matches_softfloat() {
+        check_against_softfloat(FixedOp::Div, Format::FP32, GateSet::MemristiveNor, 300, 16);
+    }
+
+    #[test]
+    fn fp16_all_ops_match_softfloat() {
+        for (op, seed) in [
+            (FixedOp::Add, 21),
+            (FixedOp::Sub, 22),
+            (FixedOp::Mul, 23),
+            (FixedOp::Div, 24),
+        ] {
+            check_against_softfloat(op, Format::FP16, GateSet::MemristiveNor, 800, seed);
+        }
+    }
+
+    #[test]
+    fn fp64_add_mul_match_softfloat() {
+        check_against_softfloat(FixedOp::Add, Format::FP64, GateSet::MemristiveNor, 200, 31);
+        check_against_softfloat(FixedOp::Mul, Format::FP64, GateSet::MemristiveNor, 100, 32);
+    }
+
+    #[test]
+    fn fp64_div_matches_softfloat() {
+        check_against_softfloat(FixedOp::Div, Format::FP64, GateSet::MemristiveNor, 60, 33);
+    }
+
+    #[test]
+    fn gate_count_neighbourhoods() {
+        // DESIGN.md §4 calibration: paper-derived fp32 add ≈ 2.0k gates,
+        // fp32 mul ≈ 5.8k. Re-derived circuits must land within ~2.5×.
+        let add = program(FixedOp::Add, Format::FP32, GateSet::MemristiveNor);
+        assert!(
+            (1_500..6_000).contains(&(add.gates() as i64)),
+            "fp32 add gates = {}",
+            add.gates()
+        );
+        let mul = program(FixedOp::Mul, Format::FP32, GateSet::MemristiveNor);
+        assert!(
+            (4_000..14_000).contains(&(mul.gates() as i64)),
+            "fp32 mul gates = {}",
+            mul.gates()
+        );
+        // FP32 mul is cheaper than fixed-32 mul (24-bit mantissa
+        // multiplier dominates) — the paper's Figure 3 observation.
+        let fmul = crate::pim::fixed::program(FixedOp::Mul, 32, GateSet::MemristiveNor);
+        assert!(mul.gates() < fmul.gates());
+    }
+
+    #[test]
+    fn all_programs_fit_standard_crossbar() {
+        for fmt in [Format::FP16, Format::FP32, Format::FP64] {
+            for set in GateSet::all() {
+                for op in FixedOp::all() {
+                    let p = program(op, fmt, set);
+                    assert!(
+                        p.width() <= 1024,
+                        "{op:?} {fmt:?} {set:?} width = {}",
+                        p.width()
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,281 @@
+//! Column-addressed gate microcode.
+//!
+//! A digital-PIM computation is a straight-line sequence of column-parallel
+//! gate operations on a crossbar (Figure 1(e) of the paper): each
+//! instruction names input column(s) and one output column, and executes
+//! the gate simultaneously in every row. Programs are generated once per
+//! (operation, bit-width, gate-set) by the compilers in [`crate::pim::fixed`],
+//! [`crate::pim::float`] and [`crate::pim::matpim`], then either *executed*
+//! bit-exactly on [`crate::pim::xbar::Crossbar`] (correctness) or *costed*
+//! through [`crate::pim::gates::GateSet`] (architecture-scale performance).
+
+use super::gates::GateSet;
+
+/// Index of a crossbar column.
+pub type Col = u32;
+
+/// One column-parallel gate operation.
+///
+/// The set is the union of the two physical gate sets; each [`GateSet`]
+/// restricts which opcodes its compiled programs may contain (checked by
+/// [`Program::validate_for`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Instr {
+    /// `out[r] = !(a[r] | b[r])` — memristive MAGIC two-input NOR.
+    Nor2 { a: Col, b: Col, out: Col },
+    /// `out[r] = !(a[r] | b[r] | c[r])` — MAGIC three-input NOR (one extra
+    /// input memristor on the same bitline; same two-cycle cost as NOR2).
+    Nor3 { a: Col, b: Col, c: Col, out: Col },
+    /// `out[r] = !a[r]` — single-input NOR (NOT); exists in both sets.
+    Not { a: Col, out: Col },
+    /// `out[r] = maj(a[r], b[r], c[r])` — in-DRAM triple-row-activation
+    /// majority.
+    Maj3 { a: Col, b: Col, c: Col, out: Col },
+    /// `out[r] = a[r]` — in-DRAM AAP row copy (memristive programs build
+    /// copies from two NOTs instead).
+    Copy { a: Col, out: Col },
+    /// `out[r] = bit` — column initialization (SET/RESET of a column, or a
+    /// reserved constant row pattern in DRAM).
+    Set { out: Col, bit: bool },
+}
+
+impl Instr {
+    /// The output column.
+    #[inline]
+    pub fn out(&self) -> Col {
+        match *self {
+            Instr::Nor2 { out, .. }
+            | Instr::Nor3 { out, .. }
+            | Instr::Not { out, .. }
+            | Instr::Maj3 { out, .. }
+            | Instr::Copy { out, .. }
+            | Instr::Set { out, .. } => out,
+        }
+    }
+
+    /// Input columns (0–3 of them).
+    pub fn inputs(&self) -> impl Iterator<Item = Col> {
+        let (v, n): ([Col; 3], usize) = match *self {
+            Instr::Nor2 { a, b, .. } => ([a, b, 0], 2),
+            Instr::Nor3 { a, b, c, .. } => ([a, b, c], 3),
+            Instr::Not { a, .. } | Instr::Copy { a, .. } => ([a, 0, 0], 1),
+            Instr::Maj3 { a, b, c, .. } => ([a, b, c], 3),
+            Instr::Set { .. } => ([0, 0, 0], 0),
+        };
+        v.into_iter().take(n)
+    }
+
+    /// True if this opcode is a *logic gate* (counted in the paper's
+    /// compute-complexity metric); `Set`/`Copy` are data movement.
+    #[inline]
+    pub fn is_gate(&self) -> bool {
+        matches!(
+            self,
+            Instr::Nor2 { .. } | Instr::Nor3 { .. } | Instr::Not { .. } | Instr::Maj3 { .. }
+        )
+    }
+}
+
+/// Aggregate opcode counts of a program.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OpCounts {
+    pub nor2: u64,
+    pub nor3: u64,
+    pub not: u64,
+    pub maj3: u64,
+    pub copy: u64,
+    pub set: u64,
+}
+
+impl OpCounts {
+    /// Total number of logic gates (paper's gate count).
+    pub fn gates(&self) -> u64 {
+        self.nor2 + self.nor3 + self.not + self.maj3
+    }
+
+    /// Total instructions including data movement.
+    pub fn total(&self) -> u64 {
+        self.gates() + self.copy + self.set
+    }
+}
+
+/// A compiled straight-line microcode program.
+#[derive(Clone, Debug, Default)]
+pub struct Program {
+    /// The gate set this program was compiled for.
+    pub gate_set: Option<GateSet>,
+    instrs: Vec<Instr>,
+    counts: OpCounts,
+    width: Col,
+}
+
+impl Program {
+    /// Empty program for a gate set.
+    pub fn new(gate_set: GateSet) -> Self {
+        Program {
+            gate_set: Some(gate_set),
+            ..Default::default()
+        }
+    }
+
+    /// Append an instruction.
+    #[inline]
+    pub fn push(&mut self, instr: Instr) {
+        match instr {
+            Instr::Nor2 { .. } => self.counts.nor2 += 1,
+            Instr::Nor3 { .. } => self.counts.nor3 += 1,
+            Instr::Not { .. } => self.counts.not += 1,
+            Instr::Maj3 { .. } => self.counts.maj3 += 1,
+            Instr::Copy { .. } => self.counts.copy += 1,
+            Instr::Set { .. } => self.counts.set += 1,
+        }
+        self.width = self.width.max(instr.out() + 1);
+        for c in instr.inputs() {
+            self.width = self.width.max(c + 1);
+        }
+        self.instrs.push(instr);
+    }
+
+    /// The instruction sequence.
+    #[inline]
+    pub fn instrs(&self) -> &[Instr] {
+        &self.instrs
+    }
+
+    /// Number of instructions.
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    /// True when the program is empty.
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+
+    /// Opcode statistics.
+    pub fn counts(&self) -> OpCounts {
+        self.counts
+    }
+
+    /// Number of logic gates (the paper's per-element gate count).
+    pub fn gates(&self) -> u64 {
+        self.counts.gates()
+    }
+
+    /// Minimum crossbar width (columns) needed to run this program.
+    pub fn width(&self) -> Col {
+        self.width
+    }
+
+    /// Latency in crossbar cycles under the program's gate-set cost model.
+    ///
+    /// This is the quantity the architecture model divides row-parallelism
+    /// by to obtain throughput (see `pim::arch`).
+    pub fn cycles(&self) -> u64 {
+        let gs = self
+            .gate_set
+            .expect("program has no gate set; use cycles_for");
+        self.cycles_for(gs)
+    }
+
+    /// Latency in cycles under an explicit cost model.
+    pub fn cycles_for(&self, gs: GateSet) -> u64 {
+        let c = gs.costs();
+        self.counts.nor2 * c.nor2
+            + self.counts.nor3 * c.nor2
+            + self.counts.not * c.not
+            + self.counts.maj3 * c.maj3
+            + self.counts.copy * c.copy
+            + self.counts.set * c.set
+    }
+
+    /// Energy in joules for `rows` active rows under the gate-set model:
+    /// every active row performs the gate, so a column instruction costs
+    /// `rows × per-gate energy`.
+    pub fn energy_j(&self, rows: u64) -> f64 {
+        let gs = self.gate_set.expect("program has no gate set");
+        let e = gs.costs();
+        let gate_like = self.counts.gates() as f64;
+        let move_like = (self.counts.copy + self.counts.set) as f64;
+        rows as f64 * (gate_like * e.gate_energy_j + move_like * e.move_energy_j)
+    }
+
+    /// Check that every opcode is legal for the target gate set.
+    pub fn validate_for(&self, gs: GateSet) -> Result<(), String> {
+        for (i, instr) in self.instrs.iter().enumerate() {
+            let ok = match instr {
+                Instr::Nor2 { .. } | Instr::Nor3 { .. } => gs == GateSet::MemristiveNor,
+                Instr::Maj3 { .. } | Instr::Copy { .. } => gs == GateSet::DramMaj,
+                Instr::Not { .. } | Instr::Set { .. } => true,
+            };
+            if !ok {
+                return Err(format!("instr {i} ({instr:?}) illegal for {gs:?}"));
+            }
+            // Structural hazard: stateful logic cannot read and write the
+            // same column in one gate.
+            if instr.inputs().any(|c| c == instr.out()) {
+                return Err(format!("instr {i} ({instr:?}) reads its own output"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Concatenate another program (used by matpim schedules).
+    pub fn extend(&mut self, other: &Program) {
+        for i in other.instrs() {
+            self.push(*i);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_and_width() {
+        let mut p = Program::new(GateSet::MemristiveNor);
+        p.push(Instr::Set { out: 9, bit: true });
+        p.push(Instr::Nor2 { a: 0, b: 1, out: 2 });
+        p.push(Instr::Not { a: 2, out: 3 });
+        assert_eq!(p.counts().nor2, 1);
+        assert_eq!(p.counts().set, 1);
+        assert_eq!(p.gates(), 2);
+        assert_eq!(p.width(), 10);
+        assert_eq!(p.len(), 3);
+    }
+
+    #[test]
+    fn memristive_cycles_charge_init() {
+        // MAGIC NOR: 1 init + 1 execute = 2 cycles per gate.
+        let mut p = Program::new(GateSet::MemristiveNor);
+        p.push(Instr::Nor2 { a: 0, b: 1, out: 2 });
+        assert_eq!(p.cycles(), 2);
+    }
+
+    #[test]
+    fn validate_rejects_cross_set_ops() {
+        let mut p = Program::new(GateSet::MemristiveNor);
+        p.push(Instr::Maj3 { a: 0, b: 1, c: 2, out: 3 });
+        assert!(p.validate_for(GateSet::MemristiveNor).is_err());
+        assert!(p.validate_for(GateSet::DramMaj).is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_in_place() {
+        let mut p = Program::new(GateSet::MemristiveNor);
+        p.push(Instr::Nor2 { a: 0, b: 2, out: 2 });
+        assert!(p.validate_for(GateSet::MemristiveNor).is_err());
+    }
+
+    #[test]
+    fn extend_accumulates() {
+        let mut a = Program::new(GateSet::DramMaj);
+        a.push(Instr::Maj3 { a: 0, b: 1, c: 2, out: 3 });
+        let mut b = Program::new(GateSet::DramMaj);
+        b.push(Instr::Not { a: 3, out: 4 });
+        a.extend(&b);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a.gates(), 2);
+    }
+}

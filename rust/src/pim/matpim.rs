@@ -1,0 +1,526 @@
+//! MatPIM: matrix multiplication and convolution on digital PIM.
+//!
+//! The paper's §4 builds matrix operations as *serial sequences of
+//! vectored arithmetic*: every step is one element-parallel scalar
+//! operation (from [`crate::pim::fixed`] / [`crate::pim::float`]) executed
+//! across all crossbar rows, plus broadcast data movement. This module
+//! provides
+//!
+//! * [`ScalarCosts`] — cached cycle/gate costs of the underlying scalar
+//!   add/mul for a numeric format and gate set;
+//! * [`MatmulModel`] — the Figure 5 schedule: batched `n×n` matrix
+//!   multiplication, `n²` broadcast+MAC steps over `n`-row instances, with
+//!   row-footprint spill across crossbars modeled;
+//! * [`CnnPimModel`] — the Figures 6/7 *upper bound* (paper §5): CNN
+//!   inference/training counted as pure MAC work at full row parallelism,
+//!   ignoring data movement — "an upper bound on the digital PIM
+//!   performance";
+//! * bit-exact **executable** kernels for validation: a row-local dot
+//!   product and a replicated-operand matrix multiply that run on the
+//!   simulated crossbar and are checked against host arithmetic.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use once_cell::sync::Lazy;
+
+use super::arch::PimArch;
+use super::builder::Builder;
+use super::fixed::FixedOp;
+use super::gates::GateSet;
+use super::isa::{Col, Program};
+use super::softfloat::Format;
+use super::xbar::Crossbar;
+use super::{fixed, float};
+
+/// Numeric format of a vectored operation: fixed-point width or an IEEE
+/// float format.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum NumFmt {
+    Fixed(u32),
+    Float(Format),
+}
+
+impl NumFmt {
+    /// Bit width of one element.
+    pub fn bits(self) -> u32 {
+        match self {
+            NumFmt::Fixed(n) => n,
+            NumFmt::Float(f) => f.bits(),
+        }
+    }
+
+    /// Short display name (e.g. `fixed32`, `fp32`).
+    pub fn name(self) -> String {
+        match self {
+            NumFmt::Fixed(n) => format!("fixed{n}"),
+            NumFmt::Float(f) => format!("fp{}", f.bits()),
+        }
+    }
+
+    /// Compile the scalar program for `op` in this format.
+    pub fn program(self, op: FixedOp, set: GateSet) -> Program {
+        match self {
+            NumFmt::Fixed(n) => fixed::program(op, n, set),
+            NumFmt::Float(f) => float::program(op, f, set),
+        }
+    }
+}
+
+/// Cycle and gate costs of the scalar add/mul a matrix schedule is built
+/// from.
+#[derive(Clone, Copy, Debug)]
+pub struct ScalarCosts {
+    pub add_cycles: u64,
+    pub mul_cycles: u64,
+    pub add_gates: u64,
+    pub mul_gates: u64,
+}
+
+static COSTS: Lazy<Mutex<HashMap<(NumFmt, GateSet), ScalarCosts>>> =
+    Lazy::new(|| Mutex::new(HashMap::new()));
+
+/// Scalar costs for `(fmt, set)`, compiled once and cached.
+pub fn scalar_costs(fmt: NumFmt, set: GateSet) -> ScalarCosts {
+    let mut cache = COSTS.lock().unwrap();
+    *cache.entry((fmt, set)).or_insert_with(|| {
+        let add = fmt.program(FixedOp::Add, set);
+        let mul = fmt.program(FixedOp::Mul, set);
+        ScalarCosts {
+            add_cycles: add.cycles(),
+            mul_cycles: mul.cycles(),
+            add_gates: add.gates(),
+            mul_gates: mul.gates(),
+        }
+    })
+}
+
+/// The Figure 5 batched matrix-multiplication schedule.
+///
+/// One matrix instance occupies `n` crossbar rows (row `i` holds row `i`
+/// of `A` and of the accumulating `C`); each of the `n²` steps broadcasts
+/// one `B` element and performs a vectored multiply + accumulate, so the
+/// schedule is `n² × (T_bcast + T_mul + T_add)` cycles, fully parallel
+/// across `R / (n × spill)` instances, where `spill` accounts for rows
+/// whose `A`/`C` fields exceed the crossbar width.
+#[derive(Clone, Copy, Debug)]
+pub struct MatmulModel {
+    pub n: u64,
+    pub fmt: NumFmt,
+    pub set: GateSet,
+    /// Total schedule latency in cycles for one batch.
+    pub cycles: u64,
+    /// Logic gates executed per row over the schedule.
+    pub row_gates: u64,
+    /// Crossbar rows occupied per matrix instance (n × spill).
+    pub rows_per_instance: u64,
+}
+
+impl MatmulModel {
+    /// Build the schedule model for `n×n` matrices of `fmt` on `set`
+    /// hardware with `cols`-wide crossbars.
+    pub fn new(n: u64, fmt: NumFmt, set: GateSet, cols: u64) -> Self {
+        let c = scalar_costs(fmt, set);
+        let bits = fmt.bits() as u64;
+        let costs = set.costs();
+        // Broadcast of one element: N bit-copies into the working field.
+        let bcast_cycles = bits * costs.copy;
+        let bcast_gates = match set {
+            GateSet::MemristiveNor => 2 * bits, // copy = two NOTs
+            GateSet::DramMaj => 0,              // AAP copy is not a logic gate
+        };
+        let steps = n * n;
+        let cycles = steps * (bcast_cycles + c.mul_cycles + c.add_cycles);
+        let row_gates = steps * (bcast_gates + c.mul_gates + c.add_gates);
+        // Row footprint: A row (n elems) + C row (n elems) + ~6 working
+        // registers; spill splits an instance across crossbars.
+        let footprint = (2 * n + 6) * bits;
+        let spill = footprint.div_ceil(cols);
+        MatmulModel {
+            n,
+            fmt,
+            set,
+            cycles,
+            row_gates,
+            rows_per_instance: n * spill,
+        }
+    }
+
+    /// Matrix multiplications per second at architecture scale.
+    pub fn throughput(&self, arch: &PimArch) -> f64 {
+        let instances = arch.total_rows() as f64 / self.rows_per_instance as f64;
+        instances * arch.clock_hz / self.cycles as f64
+    }
+
+    /// Energy per matrix multiplication, joules.
+    pub fn energy_per_matmul(&self, arch: &PimArch) -> f64 {
+        let _ = arch;
+        self.rows_per_instance as f64
+            * self.row_gates as f64
+            * self.set.costs().gate_energy_j
+    }
+
+    /// Matmuls per second per watt (paper's efficiency metric).
+    pub fn throughput_per_watt(&self, arch: &PimArch) -> f64 {
+        self.throughput(arch) / arch.max_power_w
+    }
+
+    /// FLOPs in one `n×n` matmul (2n³: multiply + add).
+    pub fn flops(&self) -> f64 {
+        2.0 * (self.n as f64).powi(3)
+    }
+}
+
+/// The Figures 6/7 upper-bound CNN model: the network is `macs`
+/// multiply-accumulates, executed at full row parallelism with no data-
+/// movement charge (paper §5: "thereby providing an upper bound on the
+/// digital PIM performance").
+#[derive(Clone, Copy, Debug)]
+pub struct CnnPimModel {
+    pub fmt: NumFmt,
+    pub set: GateSet,
+    /// Multiply-accumulates per inference (or per training step).
+    pub macs: f64,
+}
+
+impl CnnPimModel {
+    pub fn new(fmt: NumFmt, set: GateSet, macs: f64) -> Self {
+        CnnPimModel { fmt, set, macs }
+    }
+
+    /// Cycles of one MAC (vectored mul + add).
+    pub fn mac_cycles(&self) -> u64 {
+        let c = scalar_costs(self.fmt, self.set);
+        c.mul_cycles + c.add_cycles
+    }
+
+    /// Images (inferences / training samples) per second.
+    pub fn throughput(&self, arch: &PimArch) -> f64 {
+        // R MACs proceed in parallel; a full image needs macs/R vectored
+        // steps of mac_cycles each.
+        arch.total_rows() as f64 * arch.clock_hz / (self.macs * self.mac_cycles() as f64)
+    }
+
+    /// Energy per image, joules.
+    pub fn energy_per_image(&self) -> f64 {
+        let c = scalar_costs(self.fmt, self.set);
+        self.macs * (c.mul_gates + c.add_gates) as f64 * self.set.costs().gate_energy_j
+    }
+
+    /// Images per second per watt.
+    pub fn throughput_per_watt(&self, arch: &PimArch) -> f64 {
+        self.throughput(arch) / arch.max_power_w
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bit-exact executable kernels (validation of the schedule semantics).
+// ---------------------------------------------------------------------------
+
+/// Layout of the executable row-local dot product: fields `a[0..l)`,
+/// `b[0..l)`, then the `n`-bit result `z` (wrapping fixed-point).
+#[derive(Clone, Copy, Debug)]
+pub struct DotLayout {
+    pub l: usize,
+    pub bits: u32,
+    pub a: Col,
+    pub b: Col,
+    pub z: Col,
+}
+
+impl DotLayout {
+    pub fn new(l: usize, bits: u32) -> Self {
+        let lb = l as Col * bits;
+        DotLayout {
+            l,
+            bits,
+            a: 0,
+            b: lb,
+            z: 2 * lb,
+        }
+    }
+
+    pub fn reserved(&self) -> Col {
+        2 * self.l as Col * self.bits + self.bits
+    }
+}
+
+/// Compile a row-local dot product `z = Σ_k a_k · b_k (mod 2^bits)` — the
+/// MAC kernel every MatPIM schedule is a sequence of.
+pub fn dot_program(lay: &DotLayout, set: GateSet) -> Program {
+    let mut b = Builder::new(set, lay.reserved());
+    let bits = lay.bits as usize;
+    let mut acc: Option<Vec<Col>> = None;
+    for k2 in 0..lay.l {
+        let a_w: Vec<Col> = (0..bits)
+            .map(|j| lay.a + (k2 * bits + j) as Col)
+            .collect();
+        let b_w: Vec<Col> = (0..bits)
+            .map(|j| lay.b + (k2 * bits + j) as Col)
+            .collect();
+        let prod = b.mul_words(&a_w, &b_w); // 2·bits
+        let prod_lo = &prod[..bits];
+        acc = Some(match acc {
+            None => prod_lo.to_vec(),
+            Some(old) => {
+                let (sum, c) = b.add_words(&old, prod_lo, None, None);
+                b.free(c);
+                b.free_word(&old);
+                sum
+            }
+        });
+        // High product bits are dead (wrapping semantics).
+        for &c in &prod[bits..] {
+            b.free(c);
+        }
+        if k2 > 0 {
+            // prod_lo was consumed into acc only by value; free originals
+            // when they are not the live acc (k2==0 keeps them).
+            for &c in prod_lo {
+                b.free(c);
+            }
+        }
+    }
+    let acc = acc.expect("empty dot product");
+    for (j, &c) in acc.iter().enumerate() {
+        b.copy_into(c, lay.z + j as Col);
+    }
+    b.free_word(&acc);
+    b.finish()
+}
+
+/// Layout of the executable replicated-operand matmul row: `A` row
+/// (`n` elements), the full `B` matrix (`n²`, row-major: `B[k][j]` at
+/// index `k·n + j`), and the `C` row (`n` elements). One crossbar row
+/// computes one row of one `C = A×B`.
+#[derive(Clone, Copy, Debug)]
+pub struct MatmulLayout {
+    pub n: usize,
+    pub bits: u32,
+    pub a: Col,
+    pub b: Col,
+    pub c: Col,
+}
+
+impl MatmulLayout {
+    pub fn new(n: usize, bits: u32) -> Self {
+        let nb = n as Col * bits;
+        MatmulLayout {
+            n,
+            bits,
+            a: 0,
+            b: nb,
+            c: nb + (n * n) as Col * bits,
+        }
+    }
+
+    pub fn reserved(&self) -> Col {
+        self.c + self.n as Col * self.bits
+    }
+}
+
+/// Compile the row-parallel matmul: `C[i][j] = Σ_k A[i][k]·B[k][j]`, all
+/// operands row-local (B replicated per row — the executable stand-in for
+/// MatPIM's broadcast; the *cost* of broadcast is modeled in
+/// [`MatmulModel`], the *semantics* are validated here).
+pub fn matmul_program(lay: &MatmulLayout, set: GateSet) -> Program {
+    let mut b = Builder::new(set, lay.reserved());
+    let bits = lay.bits as usize;
+    let n = lay.n;
+    for j in 0..n {
+        let mut acc: Option<Vec<Col>> = None;
+        for k2 in 0..n {
+            let a_w: Vec<Col> = (0..bits)
+                .map(|t| lay.a + (k2 * bits + t) as Col)
+                .collect();
+            let b_w: Vec<Col> = (0..bits)
+                .map(|t| lay.b + ((k2 * n + j) * bits + t) as Col)
+                .collect();
+            let prod = b.mul_words(&a_w, &b_w);
+            let prod_lo = &prod[..bits];
+            acc = Some(match acc {
+                None => prod_lo.to_vec(),
+                Some(old) => {
+                    let (sum, c) = b.add_words(&old, prod_lo, None, None);
+                    b.free(c);
+                    b.free_word(&old);
+                    for &cc in prod_lo {
+                        b.free(cc);
+                    }
+                    sum
+                }
+            });
+            for &c in &prod[bits..] {
+                b.free(c);
+            }
+        }
+        let acc = acc.unwrap();
+        for (t, &c) in acc.iter().enumerate() {
+            b.copy_into(c, lay.c + (j * bits + t) as Col);
+        }
+        b.free_word(&acc);
+    }
+    b.finish()
+}
+
+/// Execute the replicated matmul for a batch of matrix pairs and read back
+/// the products (host-order: row-major `n×n` per pair, values mod 2^bits).
+pub fn run_matmul_batch(
+    lay: &MatmulLayout,
+    prog: &Program,
+    a: &[Vec<u64>],
+    bm: &[Vec<u64>],
+) -> Vec<Vec<u64>> {
+    assert_eq!(a.len(), bm.len());
+    let n = lay.n;
+    let rows = a.len() * n;
+    let mut x = Crossbar::new(rows, prog.width() as usize);
+    for (p, (am, bmat)) in a.iter().zip(bm).enumerate() {
+        for i in 0..n {
+            let row = p * n + i;
+            for k2 in 0..n {
+                x.write_value(row, lay.a + (k2 * lay.bits as usize) as Col, lay.bits, am[i * n + k2]);
+            }
+            for t in 0..n * n {
+                x.write_value(row, lay.b + (t * lay.bits as usize) as Col, lay.bits, bmat[t]);
+            }
+        }
+    }
+    x.execute(prog);
+    let mut out = Vec::with_capacity(a.len());
+    for p in 0..a.len() {
+        let mut c = vec![0u64; n * n];
+        for i in 0..n {
+            let row = p * n + i;
+            for j in 0..n {
+                c[i * n + j] = x.read_value(row, lay.c + (j * lay.bits as usize) as Col, lay.bits);
+            }
+        }
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dot_product_bit_exact() {
+        let mut rng = Rng::new(41);
+        for set in GateSet::all() {
+            let lay = DotLayout::new(4, 8);
+            let prog = dot_program(&lay, set);
+            prog.validate_for(set).unwrap();
+            assert!(prog.width() <= 1024);
+            let rows = 64;
+            let mut x = Crossbar::new(rows, prog.width() as usize);
+            let mut expect = Vec::new();
+            for r in 0..rows {
+                let a: Vec<u64> = (0..4).map(|_| rng.bits(8)).collect();
+                let b: Vec<u64> = (0..4).map(|_| rng.bits(8)).collect();
+                for k2 in 0..4 {
+                    x.write_value(r, lay.a + (k2 * 8) as Col, 8, a[k2]);
+                    x.write_value(r, lay.b + (k2 * 8) as Col, 8, b[k2]);
+                }
+                let dot: u64 = a.iter().zip(&b).map(|(x2, y)| x2 * y).sum::<u64>() & 0xFF;
+                expect.push(dot);
+            }
+            x.execute(&prog);
+            for (r, &e) in expect.iter().enumerate() {
+                assert_eq!(x.read_value(r, lay.z, 8), e, "set={set:?} row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_3x3_bit_exact() {
+        let mut rng = Rng::new(42);
+        let lay = MatmulLayout::new(3, 8);
+        let prog = matmul_program(&lay, GateSet::MemristiveNor);
+        assert!(prog.width() <= 1024, "width={}", prog.width());
+        let pairs = 8;
+        let a: Vec<Vec<u64>> = (0..pairs).map(|_| rng.vec_bits(9, 8)).collect();
+        let bm: Vec<Vec<u64>> = (0..pairs).map(|_| rng.vec_bits(9, 8)).collect();
+        let got = run_matmul_batch(&lay, &prog, &a, &bm);
+        for p in 0..pairs {
+            for i in 0..3 {
+                for j in 0..3 {
+                    let mut acc = 0u64;
+                    for k2 in 0..3 {
+                        acc = acc.wrapping_add(a[p][i * 3 + k2] * bm[p][k2 * 3 + j]);
+                    }
+                    assert_eq!(got[p][i * 3 + j], acc & 0xFF, "pair {p} ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_dram_2x2() {
+        let mut rng = Rng::new(43);
+        let lay = MatmulLayout::new(2, 8);
+        let prog = matmul_program(&lay, GateSet::DramMaj);
+        prog.validate_for(GateSet::DramMaj).unwrap();
+        let a = vec![rng.vec_bits(4, 8)];
+        let bm = vec![rng.vec_bits(4, 8)];
+        let got = run_matmul_batch(&lay, &prog, &a, &bm);
+        for i in 0..2 {
+            for j in 0..2 {
+                let acc: u64 = (0..2).map(|k2| a[0][i * 2 + k2] * bm[0][k2 * 2 + j]).sum();
+                assert_eq!(got[0][i * 2 + j], acc & 0xFF);
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_model_scales_as_n_squared_steps() {
+        let fmt = NumFmt::Float(Format::FP32);
+        let m32 = MatmulModel::new(32, fmt, GateSet::MemristiveNor, 1024);
+        let m64 = MatmulModel::new(64, fmt, GateSet::MemristiveNor, 1024);
+        // 4× steps per schedule.
+        assert_eq!(m64.cycles, 4 * m32.cycles);
+        // Throughput ratio = (cycles ratio) × (rows-per-instance ratio):
+        // 4× cycles and a spill-quantized row ratio (96 -> 320 rows).
+        let arch = PimArch::paper(GateSet::MemristiveNor);
+        let ratio = m32.throughput(&arch) / m64.throughput(&arch);
+        let expect = 4.0 * m64.rows_per_instance as f64 / m32.rows_per_instance as f64;
+        assert!(
+            (ratio - expect).abs() / expect < 1e-9,
+            "ratio={ratio} expect={expect}"
+        );
+        assert!((8.0..16.0).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn matmul_energy_consistent_with_power() {
+        // throughput × energy/matmul must not exceed max power (modulo
+        // the 2-cycles-per-gate duty factor).
+        let arch = PimArch::paper(GateSet::MemristiveNor);
+        let m = MatmulModel::new(128, NumFmt::Float(Format::FP32), GateSet::MemristiveNor, 1024);
+        let p = m.throughput(&arch) * m.energy_per_matmul(&arch);
+        assert!(p > 0.1 * arch.max_power_w && p <= arch.max_power_w, "power={p}");
+    }
+
+    #[test]
+    fn cnn_model_anchor() {
+        // AlexNet ≈ 0.7 GMACs; memristive fp32 should land within the
+        // same decade as the paper's Figure 6 (hundreds of images/s).
+        let arch = PimArch::paper(GateSet::MemristiveNor);
+        let m = CnnPimModel::new(NumFmt::Float(Format::FP32), GateSet::MemristiveNor, 0.7e9);
+        let ips = m.throughput(&arch);
+        assert!((1e2..1e4).contains(&ips), "alexnet-like images/s = {ips}");
+    }
+
+    #[test]
+    fn scalar_costs_cached_and_sane() {
+        let c1 = scalar_costs(NumFmt::Fixed(32), GateSet::MemristiveNor);
+        let c2 = scalar_costs(NumFmt::Fixed(32), GateSet::MemristiveNor);
+        assert_eq!(c1.add_cycles, c2.add_cycles);
+        assert_eq!(c1.add_cycles, 2 * 9 * 32 + 1);
+        let f = scalar_costs(NumFmt::Float(Format::FP32), GateSet::MemristiveNor);
+        assert!(f.add_cycles > c1.add_cycles, "fp add dearer than fixed");
+        assert!(f.mul_cycles < scalar_costs(NumFmt::Fixed(32), GateSet::MemristiveNor).mul_cycles);
+    }
+}

@@ -1,0 +1,46 @@
+//! Digital processing-in-memory substrate.
+//!
+//! This module is the paper's experimental apparatus rebuilt from scratch:
+//! a bit-exact simulator of the abstract digital-PIM model of Figure 1(e)
+//! — crossbar arrays supporting column-parallel logic gates in O(1) time —
+//! together with the microcode compilers that realize the AritPIM
+//! bit-serial element-parallel arithmetic suite and the MatPIM matrix
+//! algorithms on that model, and the architecture-scale performance/energy
+//! models that turn microcode cycle counts into the paper's TOPS and
+//! TOPS/W numbers.
+//!
+//! Layering (bottom-up):
+//!
+//! * [`isa`] — column-addressed gate microcode (`Instr`, `Program`).
+//! * [`gates`] — the two physical gate sets and their per-gate cycle and
+//!   energy cost models: memristive stateful logic (MAGIC-style NOR, with
+//!   the output-initialization cycle) and in-DRAM (SIMDRAM-style MAJ/NOT).
+//! * [`xbar`] — the bit-packed crossbar state and the column-parallel
+//!   execution engine (the simulator's hot path).
+//! * [`builder`] — a logic-synthesis EDSL over columns (full adders, barrel
+//!   shifters, leading-zero counters, muxes) used by all compilers.
+//! * [`fixed`] — AritPIM fixed-point add/sub/mul/div program generators.
+//! * [`softfloat`] — a host-side, bit-exact IEEE-754 reference
+//!   implementation generic over (exponent, mantissa) widths: the oracle
+//!   the in-memory float microcode is validated against.
+//! * [`float`] — AritPIM IEEE-754 add/sub/mul/div program generators
+//!   (fp16/fp32/fp64) with round-to-nearest-even and subnormal support.
+//! * [`matpim`] — MatPIM matrix-multiplication and 2D-convolution
+//!   schedules expressed as sequences of vectored arithmetic.
+//! * [`arch`] — memory-scale architecture model (48 GB of crossbars):
+//!   throughput, power, and energy-per-operation.
+
+pub mod arch;
+pub mod builder;
+pub mod elementwise;
+pub mod fixed;
+pub mod float;
+pub mod gates;
+pub mod isa;
+pub mod matpim;
+pub mod softfloat;
+pub mod xbar;
+
+pub use gates::GateSet;
+pub use isa::{Col, Instr, Program};
+pub use xbar::Crossbar;

@@ -1,0 +1,516 @@
+//! Host-side bit-exact IEEE-754 reference ("softfloat") generic over
+//! (exponent, mantissa) widths.
+//!
+//! This is the oracle the in-memory floating-point microcode
+//! ([`crate::pim::float`]) is validated against. Its own correctness is
+//! established by exhaustive-style randomized comparison with the native
+//! `f32`/`f64` hardware arithmetic (which is IEEE-754 round-to-nearest-even
+//! on every platform Rust targets); the generic implementation then serves
+//! as the reference for fp16, where no native type exists.
+//!
+//! Semantics: round-to-nearest-even, full subnormal support, and
+//! *canonical* quiet-NaN results (sign 0, mantissa MSB set) — the same
+//! convention the gate-level microcode produces, so results compare as
+//! exact bit patterns (tests treat any-NaN == any-NaN when comparing
+//! against native hardware, which propagates payloads).
+
+/// A binary floating-point format: 1 sign bit, `exp` exponent bits,
+/// `man` mantissa bits (total ≤ 64).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Format {
+    pub exp: u32,
+    pub man: u32,
+}
+
+impl Format {
+    /// IEEE binary16.
+    pub const FP16: Format = Format { exp: 5, man: 10 };
+    /// IEEE binary32.
+    pub const FP32: Format = Format { exp: 8, man: 23 };
+    /// IEEE binary64.
+    pub const FP64: Format = Format { exp: 11, man: 52 };
+
+    /// Total bits.
+    pub fn bits(self) -> u32 {
+        1 + self.exp + self.man
+    }
+
+    /// Exponent bias.
+    pub fn bias(self) -> i64 {
+        (1i64 << (self.exp - 1)) - 1
+    }
+
+    /// All-ones exponent field value (Inf/NaN).
+    pub fn emax_field(self) -> u64 {
+        (1u64 << self.exp) - 1
+    }
+
+    fn man_mask(self) -> u64 {
+        (1u64 << self.man) - 1
+    }
+
+    fn sign_bit(self) -> u64 {
+        1u64 << (self.exp + self.man)
+    }
+
+    /// Canonical quiet NaN (sign 0, quiet bit set).
+    pub fn qnan(self) -> u64 {
+        (self.emax_field() << self.man) | (1u64 << (self.man - 1))
+    }
+
+    /// ±Infinity.
+    pub fn inf(self, sign: bool) -> u64 {
+        (sign as u64) * self.sign_bit() | (self.emax_field() << self.man)
+    }
+
+    /// ±0.
+    pub fn zero(self, sign: bool) -> u64 {
+        (sign as u64) * self.sign_bit()
+    }
+
+    /// Classification helpers.
+    pub fn is_nan(self, x: u64) -> bool {
+        (x >> self.man) & self.emax_field() == self.emax_field() && x & self.man_mask() != 0
+    }
+
+    pub fn is_inf(self, x: u64) -> bool {
+        (x >> self.man) & self.emax_field() == self.emax_field() && x & self.man_mask() == 0
+    }
+
+    pub fn is_zero(self, x: u64) -> bool {
+        x & !self.sign_bit() == 0
+    }
+
+    fn unpack(self, x: u64) -> (bool, u64, u64) {
+        let s = x & self.sign_bit() != 0;
+        let e = (x >> self.man) & self.emax_field();
+        let m = x & self.man_mask();
+        (s, e, m)
+    }
+
+    /// Effective exponent (subnormals share the minimum exponent) and
+    /// significand with the hidden bit applied.
+    fn sig(self, e: u64, m: u64) -> (i64, u64) {
+        if e == 0 {
+            (1, m)
+        } else {
+            (e as i64, m | (1u64 << self.man))
+        }
+    }
+
+    /// Convert an `f64` to this format's bits (RNE; used by tests and by
+    /// workload generators for fp16).
+    pub fn from_f64(self, v: f64) -> u64 {
+        let b = v.to_bits();
+        if self == Format::FP64 {
+            return b;
+        }
+        if v.is_nan() {
+            return self.qnan();
+        }
+        let s = b >> 63 != 0;
+        if v.is_infinite() {
+            return self.inf(s);
+        }
+        if v == 0.0 {
+            return self.zero(s);
+        }
+        let e64 = ((b >> 52) & 0x7FF) as i64;
+        let m64 = b & ((1u64 << 52) - 1);
+        // value = sig * 2^(eeff - 1023 - 52), sig has hidden at bit 52.
+        let (eeff, sig) = if e64 == 0 { (1, m64) } else { (e64, m64 | (1 << 52)) };
+        // Convert to target scale: f at man+3 frame.
+        let e_t = eeff - 1023 + self.bias();
+        // f = sig << 3 in the 52-mantissa frame; round_pack re-normalizes.
+        round_pack(self, s, e_t + (self.man as i64 + 3) - (52 + 3), (sig as u128) << 3)
+        // note: exponent adjusted so sig's frame (hidden at 52+3 after <<3)
+        // maps to the target frame (hidden at man+3).
+    }
+
+    /// Convert this format's bits to an `f64` (exact for exp ≤ 11,
+    /// man ≤ 52 — true for all supported formats).
+    pub fn to_f64(self, x: u64) -> f64 {
+        if self == Format::FP64 {
+            return f64::from_bits(x);
+        }
+        let (s, e, m) = self.unpack(x);
+        if e == self.emax_field() {
+            if m != 0 {
+                return f64::NAN;
+            }
+            return if s { f64::NEG_INFINITY } else { f64::INFINITY };
+        }
+        if e == 0 && m == 0 {
+            return if s { -0.0 } else { 0.0 };
+        }
+        let (eeff, sig) = self.sig(e, m);
+        let mag = sig as f64 * ((eeff - self.bias() - self.man as i64) as f64).exp2();
+        if s {
+            -mag
+        } else {
+            mag
+        }
+    }
+}
+
+/// `x >> d` with the sticky (jam) bit ORed into bit 0.
+fn shift_right_jam(x: u64, d: i64) -> u64 {
+    if d <= 0 {
+        return x;
+    }
+    if d >= 64 {
+        return (x != 0) as u64;
+    }
+    let dropped = x & ((1u64 << d) - 1);
+    (x >> d) | (dropped != 0) as u64
+}
+
+/// Normalize, denormalize, round (RNE), and pack.
+///
+/// Input value is `(-1)^s × f × 2^(e - bias - man - 3)`, i.e. `f` carries
+/// the significand with 3 guard bits below the ULP and a jammed sticky in
+/// bit 0. `f` must be nonzero.
+fn round_pack(fmt: Format, s: bool, mut e: i64, mut f: u128) -> u64 {
+    debug_assert!(f != 0);
+    let target = (fmt.man + 3) as i64;
+    let msb = 127 - f.leading_zeros() as i64;
+    if msb > target {
+        let d = msb - target;
+        let dropped = f & ((1u128 << d) - 1);
+        f = (f >> d) | (dropped != 0) as u128;
+        e += d;
+    } else if msb < target {
+        let d = target - msb;
+        f <<= d;
+        e -= d;
+    }
+    // Subnormal: shift down so the result packs with exponent field 0.
+    if e <= 0 {
+        let d = 1 - e;
+        if d >= 127 {
+            f = 1; // pure sticky
+        } else {
+            let dropped = f & ((1u128 << d) - 1);
+            f = (f >> d) | (dropped != 0) as u128;
+        }
+        e = 1;
+    }
+    let l = (f >> 3) & 1;
+    let g = (f >> 2) & 1;
+    let r = (f >> 1) & 1;
+    let st = f & 1;
+    let round_up = g & (l | r | st);
+    let mant = (f >> 3) + round_up;
+    // Pack with the carry-rolls-into-exponent trick: subnormal carry
+    // becomes the smallest normal; normal mantissa carry increments the
+    // exponent; increment past emax-1 becomes Inf below.
+    let bits = (((e - 1) as u128) << fmt.man) + mant;
+    if (bits >> fmt.man) as u64 >= fmt.emax_field() {
+        return fmt.inf(s);
+    }
+    (s as u64) * fmt.sign_bit() | bits as u64
+}
+
+/// IEEE-754 addition.
+pub fn add(fmt: Format, a: u64, b: u64) -> u64 {
+    let (sa, ea, ma) = fmt.unpack(a);
+    let (sb, eb, mb) = fmt.unpack(b);
+    if fmt.is_nan(a) || fmt.is_nan(b) {
+        return fmt.qnan();
+    }
+    match (fmt.is_inf(a), fmt.is_inf(b)) {
+        (true, true) if sa != sb => return fmt.qnan(),
+        (true, _) => return fmt.inf(sa),
+        (_, true) => return fmt.inf(sb),
+        _ => {}
+    }
+    if fmt.is_zero(a) && fmt.is_zero(b) {
+        return fmt.zero(sa && sb); // -0 + -0 = -0, else +0
+    }
+    if fmt.is_zero(a) {
+        return b;
+    }
+    if fmt.is_zero(b) {
+        return a;
+    }
+    let (ea, siga) = fmt.sig(ea, ma);
+    let (eb, sigb) = fmt.sig(eb, mb);
+    // Order so x is the larger magnitude (exponent, then significand).
+    let (sx, ex, sigx, sy, ey, sigy) =
+        if (ea, siga) >= (eb, sigb) {
+            (sa, ea, siga, sb, eb, sigb)
+        } else {
+            (sb, eb, sigb, sa, ea, siga)
+        };
+    let mx3 = sigx << 3;
+    let my3 = shift_right_jam(sigy << 3, ex - ey);
+    if sx == sy {
+        round_pack(fmt, sx, ex, (mx3 + my3) as u128)
+    } else {
+        let f = mx3 - my3;
+        if f == 0 {
+            return fmt.zero(false); // exact cancellation -> +0 under RNE
+        }
+        round_pack(fmt, sx, ex, f as u128)
+    }
+}
+
+/// IEEE-754 subtraction (`a - b` = `a + (-b)`).
+pub fn sub(fmt: Format, a: u64, b: u64) -> u64 {
+    add(fmt, a, b ^ fmt.sign_bit())
+}
+
+/// IEEE-754 multiplication.
+pub fn mul(fmt: Format, a: u64, b: u64) -> u64 {
+    let (sa, ea, ma) = fmt.unpack(a);
+    let (sb, eb, mb) = fmt.unpack(b);
+    let s = sa ^ sb;
+    if fmt.is_nan(a) || fmt.is_nan(b) {
+        return fmt.qnan();
+    }
+    if fmt.is_inf(a) || fmt.is_inf(b) {
+        if fmt.is_zero(a) || fmt.is_zero(b) {
+            return fmt.qnan(); // Inf × 0
+        }
+        return fmt.inf(s);
+    }
+    if fmt.is_zero(a) || fmt.is_zero(b) {
+        return fmt.zero(s);
+    }
+    let (ea, siga) = fmt.sig(ea, ma);
+    let (eb, sigb) = fmt.sig(eb, mb);
+    let f = siga as u128 * sigb as u128; // exact, ≤ 2^(2·man+2)
+    let e = ea + eb - fmt.bias() + 3 - fmt.man as i64;
+    round_pack(fmt, s, e, f)
+}
+
+/// IEEE-754 division.
+pub fn div(fmt: Format, a: u64, b: u64) -> u64 {
+    let (sa, ea, ma) = fmt.unpack(a);
+    let (sb, eb, mb) = fmt.unpack(b);
+    let s = sa ^ sb;
+    if fmt.is_nan(a) || fmt.is_nan(b) {
+        return fmt.qnan();
+    }
+    match (fmt.is_inf(a), fmt.is_inf(b)) {
+        (true, true) => return fmt.qnan(),
+        (true, false) => return fmt.inf(s),
+        (false, true) => return fmt.zero(s),
+        _ => {}
+    }
+    match (fmt.is_zero(a), fmt.is_zero(b)) {
+        (true, true) => return fmt.qnan(),
+        (false, true) => return fmt.inf(s), // x/0 (IEEE: raises divide-by-zero, value ±Inf)
+        (true, false) => return fmt.zero(s),
+        _ => {}
+    }
+    let (ea, siga) = fmt.sig(ea, ma);
+    let (eb, sigb) = fmt.sig(eb, mb);
+    // Normalize both significands so the hidden position is exact
+    // (subnormal inputs have leading zeros).
+    let ka = (fmt.man + 1) as i64 - (64 - siga.leading_zeros() as i64);
+    let kb = (fmt.man + 1) as i64 - (64 - sigb.leading_zeros() as i64);
+    let siga_n = siga << ka;
+    let sigb_n = sigb << kb;
+    let e = (ea - ka) - (eb - kb) + fmt.bias() - 1;
+    let num = (siga_n as u128) << (fmt.man + 4);
+    let q = num / sigb_n as u128;
+    let rem = num % sigb_n as u128;
+    round_pack(fmt, s, e, q | (rem != 0) as u128)
+}
+
+/// Dispatch by op name (used by sweeps/benches).
+pub fn apply(fmt: Format, op: crate::pim::fixed::FixedOp, a: u64, b: u64) -> u64 {
+    use crate::pim::fixed::FixedOp::*;
+    match op {
+        Add => add(fmt, a, b),
+        Sub => sub(fmt, a, b),
+        Mul => mul(fmt, a, b),
+        Div => div(fmt, a, b),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Compare against native hardware arithmetic, treating any-NaN as
+    /// equal to any-NaN (hardware propagates payloads; we canonicalize).
+    fn check_f32(op: fn(Format, u64, u64) -> u64, host: fn(f32, f32) -> f32, n: usize, seed: u64) {
+        let fmt = Format::FP32;
+        let mut rng = Rng::new(seed);
+        for i in 0..n {
+            let a = rng.float_pattern(8, 23) as u32;
+            let b = rng.float_pattern(8, 23) as u32;
+            let got = op(fmt, a as u64, b as u64) as u32;
+            let expect = host(f32::from_bits(a), f32::from_bits(b)).to_bits();
+            let ok = got == expect
+                || (fmt.is_nan(got as u64) && f32::from_bits(expect).is_nan());
+            assert!(
+                ok,
+                "i={i} a={a:#010x} b={b:#010x} got={got:#010x} expect={expect:#010x}"
+            );
+        }
+    }
+
+    fn check_f64(op: fn(Format, u64, u64) -> u64, host: fn(f64, f64) -> f64, n: usize, seed: u64) {
+        let fmt = Format::FP64;
+        let mut rng = Rng::new(seed);
+        for i in 0..n {
+            let a = rng.float_pattern(11, 52);
+            let b = rng.float_pattern(11, 52);
+            let got = op(fmt, a, b);
+            let expect = host(f64::from_bits(a), f64::from_bits(b)).to_bits();
+            let ok = got == expect || (fmt.is_nan(got) && f64::from_bits(expect).is_nan());
+            assert!(
+                ok,
+                "i={i} a={a:#018x} b={b:#018x} got={got:#018x} expect={expect:#018x}"
+            );
+        }
+    }
+
+    #[test]
+    fn add_matches_native_f32() {
+        check_f32(add, |x, y| x + y, 40_000, 101);
+    }
+
+    #[test]
+    fn sub_matches_native_f32() {
+        check_f32(sub, |x, y| x - y, 40_000, 102);
+    }
+
+    #[test]
+    fn mul_matches_native_f32() {
+        check_f32(mul, |x, y| x * y, 40_000, 103);
+    }
+
+    #[test]
+    fn div_matches_native_f32() {
+        check_f32(div, |x, y| x / y, 40_000, 104);
+    }
+
+    #[test]
+    fn add_matches_native_f64() {
+        check_f64(add, |x, y| x + y, 20_000, 201);
+    }
+
+    #[test]
+    fn mul_matches_native_f64() {
+        check_f64(mul, |x, y| x * y, 20_000, 202);
+    }
+
+    #[test]
+    fn div_matches_native_f64() {
+        check_f64(div, |x, y| x / y, 20_000, 203);
+    }
+
+    #[test]
+    fn signed_zero_rules() {
+        let f = Format::FP32;
+        let pz = f.zero(false);
+        let nz = f.zero(true);
+        assert_eq!(add(f, nz, nz), nz);
+        assert_eq!(add(f, pz, nz), pz);
+        // exact cancellation -> +0
+        let one = f.from_f64(1.0);
+        let mone = f.from_f64(-1.0);
+        assert_eq!(add(f, one, mone), pz);
+        // -1 * 0 = -0
+        assert_eq!(mul(f, mone, pz), nz);
+    }
+
+    #[test]
+    fn special_values() {
+        let f = Format::FP32;
+        let inf = f.inf(false);
+        let ninf = f.inf(true);
+        assert!(f.is_nan(add(f, inf, ninf)));
+        assert!(f.is_nan(mul(f, inf, f.zero(false))));
+        assert!(f.is_nan(div(f, inf, inf)));
+        assert!(f.is_nan(div(f, f.zero(false), f.zero(true))));
+        assert_eq!(div(f, f.from_f64(1.0), f.zero(false)), inf);
+        assert_eq!(div(f, f.from_f64(-1.0), f.zero(false)), ninf);
+    }
+
+    #[test]
+    fn subnormal_paths() {
+        let f = Format::FP32;
+        let min_sub = 1u64; // smallest positive subnormal
+        // min_sub + min_sub = 2 * min_sub (exact)
+        assert_eq!(add(f, min_sub, min_sub), 2);
+        // smallest normal / 2 = largest subnormal region (exact halving)
+        let min_norm = 1u64 << 23;
+        let half = f.from_f64(0.5);
+        assert_eq!(mul(f, min_norm, half), 1u64 << 22);
+        // gradual underflow to zero: min_sub * 0.5 -> ties-to-even -> 0
+        assert_eq!(mul(f, min_sub, half), 0);
+        // 3 * min_sub * 0.5 rounds to 2 * min_sub (tie -> even)
+        assert_eq!(mul(f, 3, half), 2);
+    }
+
+    #[test]
+    fn overflow_to_inf() {
+        let f = Format::FP32;
+        let max = f32::MAX.to_bits() as u64;
+        assert_eq!(add(f, max, max), f.inf(false));
+        assert_eq!(mul(f, max, max), f.inf(false));
+    }
+
+    #[test]
+    fn fp16_spot_values() {
+        let f = Format::FP16;
+        let one = f.from_f64(1.0);
+        assert_eq!(one, 0x3C00);
+        let two = add(f, one, one);
+        assert_eq!(two, 0x4000);
+        // 1/3 in fp16 = 0x3555 (RNE)
+        let three = f.from_f64(3.0);
+        assert_eq!(div(f, one, three), 0x3555);
+        // 65504 is fp16 max; 65504 + 65504 overflows
+        let max = f.from_f64(65504.0);
+        assert_eq!(max, 0x7BFF);
+        assert_eq!(add(f, max, max), f.inf(false));
+        // 2048 + 1 = 2048 in fp16 (1 below half ulp)
+        let v2048 = f.from_f64(2048.0);
+        assert_eq!(add(f, v2048, one), v2048);
+    }
+
+    #[test]
+    fn fp16_matches_f64_path_through_conversion() {
+        // For fp16, doing the op in f64 and converting with one rounding
+        // is exact for add/sub/mul (double rounding cannot occur: f64 has
+        // > 2*man+2 digits). Validate the generic impl that way.
+        let f = Format::FP16;
+        let mut rng = Rng::new(77);
+        for _ in 0..20_000 {
+            let a = rng.float_pattern(5, 10);
+            let b = rng.float_pattern(5, 10);
+            let (fa, fb) = (f.to_f64(a), f.to_f64(b));
+            for (got, host) in [
+                (add(f, a, b), fa + fb),
+                (sub(f, a, b), fa - fb),
+                (mul(f, a, b), fa * fb),
+            ] {
+                let expect = f.from_f64(host);
+                let ok = got == expect || (f.is_nan(got) && host.is_nan());
+                assert!(ok, "a={a:#06x} b={b:#06x} got={got:#06x} expect={expect:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn from_to_f64_roundtrip_fp32() {
+        let mut rng = Rng::new(88);
+        let f = Format::FP32;
+        for _ in 0..10_000 {
+            let x = rng.float_pattern(8, 23) as u32;
+            let v = f32::from_bits(x);
+            if v.is_nan() {
+                continue;
+            }
+            assert_eq!(f.to_f64(x as u64), v as f64);
+            assert_eq!(f.from_f64(v as f64) as u32, x);
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! Artifact manifest: what `python/compile/aot.py` produced.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Shape + dtype of one (flattened) input tensor.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Bytes per element.
+    pub fn element_size(&self) -> usize {
+        match self.dtype.as_str() {
+            "float64" | "int64" | "uint64" => 8,
+            "float32" | "int32" | "uint32" => 4,
+            "float16" | "bfloat16" | "int16" | "uint16" => 2,
+            "int8" | "uint8" | "bool" => 1,
+            other => panic!("unknown dtype {other}"),
+        }
+    }
+}
+
+/// One AOT artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// Path to the HLO text, relative to the manifest's directory.
+    pub path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+}
+
+/// The parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load from `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        let doc = Json::parse(&text).ok_or_else(|| anyhow!("malformed {path:?}"))?;
+        let arts = doc
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing `artifacts`"))?;
+        let mut artifacts = Vec::new();
+        for a in arts {
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let rel = a
+                .get("path")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact {name} missing path"))?;
+            let mut inputs = Vec::new();
+            for spec in a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact {name} missing inputs"))?
+            {
+                let shape = spec
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("input missing shape"))?
+                    .iter()
+                    .map(|v| v.as_f64().unwrap_or(0.0) as usize)
+                    .collect();
+                let dtype = spec
+                    .get("dtype")
+                    .and_then(Json::as_str)
+                    .unwrap_or("float32")
+                    .to_string();
+                inputs.push(TensorSpec { shape, dtype });
+            }
+            artifacts.push(ArtifactSpec {
+                name,
+                path: rel.into(),
+                inputs,
+            });
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    /// Find an artifact by name.
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("artifact `{name}` not in manifest"))
+    }
+
+    /// Absolute path of an artifact's HLO text.
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.path)
+    }
+
+    /// The default artifacts directory: `$CONVPIM_ARTIFACTS` or
+    /// `./artifacts` relative to the current directory / crate root.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(dir) = std::env::var("CONVPIM_ARTIFACTS") {
+            return dir.into();
+        }
+        let cwd = PathBuf::from("artifacts");
+        if cwd.join("manifest.json").exists() {
+            return cwd;
+        }
+        // Fall back to the crate root (useful under `cargo test`).
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_shape() {
+        let dir = std::env::temp_dir().join("convpim_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts": [{"name": "x", "path": "x.hlo.txt",
+                "inputs": [{"shape": [2, 3], "dtype": "float32"}], "chars": 1}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.get("x").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![2, 3]);
+        assert_eq!(a.inputs[0].elements(), 6);
+        assert_eq!(a.inputs[0].element_size(), 4);
+        assert!(m.get("missing").is_err());
+    }
+}

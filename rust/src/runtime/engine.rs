@@ -1,0 +1,213 @@
+//! PJRT execution engine.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifact::{ArtifactSpec, Manifest, TensorSpec};
+use crate::util::stats::Summary;
+
+/// Typed host tensor data for engine I/O.
+#[derive(Clone, Debug)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+impl TensorData {
+    /// Element count.
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+            TensorData::U32(v) => v.len(),
+        }
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Borrow as f32 (panics on type mismatch — engine outputs are typed
+    /// by the artifact).
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            TensorData::F32(v) => v,
+            other => panic!("expected f32 tensor, got {other:?}"),
+        }
+    }
+
+    /// Borrow as u32.
+    pub fn as_u32(&self) -> &[u32] {
+        match self {
+            TensorData::U32(v) => v,
+            other => panic!("expected u32 tensor, got {other:?}"),
+        }
+    }
+
+    fn to_literal(&self, spec: &TensorSpec) -> Result<xla::Literal> {
+        if self.len() != spec.elements() {
+            return Err(anyhow!(
+                "input has {} elements, spec {:?} wants {}",
+                self.len(),
+                spec.shape,
+                spec.elements()
+            ));
+        }
+        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            TensorData::F32(v) => xla::Literal::vec1(v.as_slice()),
+            TensorData::I32(v) => xla::Literal::vec1(v.as_slice()),
+            TensorData::U32(v) => xla::Literal::vec1(v.as_slice()),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<TensorData> {
+        let shape = lit.array_shape()?;
+        Ok(match shape.ty() {
+            xla::ElementType::F32 => TensorData::F32(lit.to_vec::<f32>()?),
+            xla::ElementType::S32 => TensorData::I32(lit.to_vec::<i32>()?),
+            xla::ElementType::U32 => TensorData::U32(lit.to_vec::<u32>()?),
+            other => return Err(anyhow!("unsupported output element type {other:?}")),
+        })
+    }
+}
+
+/// One compiled artifact, ready to execute.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Timing result of a repeated execution.
+#[derive(Clone, Debug)]
+pub struct TimedRun {
+    pub name: String,
+    pub secs: Summary,
+}
+
+impl TimedRun {
+    /// Median wall-clock seconds per execution.
+    pub fn median_secs(&self) -> f64 {
+        self.secs.median
+    }
+}
+
+impl Executable {
+    /// Execute with typed inputs; returns the flattened tuple outputs.
+    pub fn run(&self, inputs: &[TensorData]) -> Result<Vec<TensorData>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(anyhow!(
+                "{} expects {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(&self.spec.inputs)
+            .map(|(t, s)| t.to_literal(s))
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True.
+        let parts = result.to_tuple()?;
+        parts.iter().map(TensorData::from_literal).collect()
+    }
+
+    /// Execute `iters` times and record wall-clock per run (first run
+    /// excluded as warmup).
+    pub fn timed(&self, inputs: &[TensorData], iters: usize) -> Result<TimedRun> {
+        let _ = self.run(inputs)?; // warmup
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters.max(1) {
+            let t = Instant::now();
+            let _ = self.run(inputs)?;
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        Ok(TimedRun {
+            name: self.spec.name.clone(),
+            secs: Summary::of(&samples),
+        })
+    }
+
+    /// Synthesize deterministic inputs matching the artifact's specs
+    /// (uniform [-1, 1) floats, small ints, random bits) — used by the
+    /// measured benchmark series where values don't matter.
+    pub fn synth_inputs(&self, seed: u64) -> Vec<TensorData> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        self.spec
+            .inputs
+            .iter()
+            .map(|s| {
+                let n = s.elements();
+                match s.dtype.as_str() {
+                    "int32" => TensorData::I32((0..n).map(|_| rng.below(10) as i32).collect()),
+                    "uint32" => TensorData::U32((0..n).map(|_| rng.next_u32()).collect()),
+                    _ => TensorData::F32(
+                        (0..n).map(|_| rng.f32_range(-1.0, 1.0)).collect(),
+                    ),
+                }
+            })
+            .collect()
+    }
+}
+
+/// The PJRT CPU engine with an executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, Executable>,
+}
+
+impl Engine {
+    /// Create an engine over the default artifacts directory.
+    pub fn new() -> Result<Engine> {
+        Engine::with_dir(Manifest::default_dir())
+    }
+
+    /// Create an engine over an explicit artifacts directory.
+    pub fn with_dir(dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// The manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (e.g. "cpu" / "Host").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (compile-and-cache) an artifact by name.
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(name) {
+            let spec = self.manifest.get(name)?.clone();
+            let path = self.manifest.hlo_path(&spec);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parsing {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            self.cache.insert(name.to_string(), Executable { spec, exe });
+        }
+        Ok(&self.cache[name])
+    }
+}

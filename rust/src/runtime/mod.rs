@@ -1,0 +1,16 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! Python runs once at build time (`make artifacts`); this module makes
+//! the Rust binary self-contained afterwards: it reads
+//! `artifacts/manifest.json`, loads each `*.hlo.txt` (HLO **text** — the
+//! 0.5.1-safe interchange, see `python/compile/aot.py`), compiles it on
+//! the PJRT CPU client, and executes it with typed literals. The
+//! coordinator uses it for the *measured* experiment series (Fig 3/5/6/7
+//! testbed-scale numbers) and for the cross-layer consistency check
+//! (the Pallas crossbar kernel vs the native simulator, bit for bit).
+
+pub mod artifact;
+pub mod engine;
+
+pub use artifact::{ArtifactSpec, Manifest, TensorSpec};
+pub use engine::{Engine, Executable, TensorData, TimedRun};

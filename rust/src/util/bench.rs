@@ -1,0 +1,137 @@
+//! Micro-benchmark harness used by every `cargo bench` target.
+//!
+//! `criterion` is unavailable in the offline registry, so the bench
+//! binaries (declared with `harness = false`) use this module: a warmup
+//! phase, a fixed-duration measurement loop, and a median-of-batches
+//! report with ops/sec derivation. Deterministic and quiet enough for CI.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// Configuration for a measurement run.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    /// Wall-clock spent warming up before measurement.
+    pub warmup: Duration,
+    /// Target wall-clock for the measurement phase.
+    pub measure: Duration,
+    /// Maximum number of timed batches.
+    pub max_batches: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            max_batches: 50,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// A faster profile for CI / smoke runs (set `CONVPIM_BENCH_FAST=1`).
+    pub fn from_env() -> Self {
+        if std::env::var("CONVPIM_BENCH_FAST").is_ok() {
+            BenchConfig {
+                warmup: Duration::from_millis(20),
+                measure: Duration::from_millis(100),
+                max_batches: 10,
+            }
+        } else {
+            BenchConfig::default()
+        }
+    }
+}
+
+/// Result of one benchmark: batch timings plus derived throughput.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Work units per batch (e.g. simulated row-gates), for ops/sec.
+    pub units_per_batch: f64,
+    pub per_batch_secs: Summary,
+}
+
+impl BenchResult {
+    /// Work units per second based on the median batch time.
+    pub fn units_per_sec(&self) -> f64 {
+        self.units_per_batch / self.per_batch_secs.median
+    }
+
+    /// One human-readable line.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>12.3} ms/iter   {:>14} units/s   (n={}, spread {:.1}%)",
+            self.name,
+            self.per_batch_secs.median * 1e3,
+            crate::util::si(self.units_per_sec()),
+            self.per_batch_secs.n,
+            self.per_batch_secs.rel_spread() * 100.0
+        )
+    }
+}
+
+/// Run `f` under the harness. `units` is the number of work units one call
+/// of `f` performs (used only for throughput derivation).
+pub fn bench<F: FnMut()>(name: &str, units: f64, cfg: &BenchConfig, mut f: F) -> BenchResult {
+    // Warmup.
+    let start = Instant::now();
+    while start.elapsed() < cfg.warmup {
+        f();
+    }
+    // Measure.
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < cfg.measure && samples.len() < cfg.max_batches {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    if samples.is_empty() {
+        // Guarantee at least one sample for pathological configs.
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        units_per_batch: units,
+        per_batch_secs: Summary::of(&samples),
+    }
+}
+
+/// Standard bench-binary preamble: print a header once.
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Print one result line and return it (for composition in bench mains).
+pub fn report(result: BenchResult) -> BenchResult {
+    println!("{}", result.line());
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let cfg = BenchConfig {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(10),
+            max_batches: 5,
+        };
+        let mut acc = 0u64;
+        let r = bench("spin", 1000.0, &cfg, || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i);
+            }
+        });
+        assert!(r.per_batch_secs.n >= 1);
+        assert!(r.units_per_sec() > 0.0);
+        assert!(acc > 0 || acc == 0); // keep acc live
+    }
+}

@@ -1,0 +1,142 @@
+//! A small subcommand + flag parser for the `convpim` binary.
+//!
+//! Supports the shapes the launcher needs: `convpim <command> [positional..]
+//! [--flag value] [--switch]`. Unknown flags are errors; `--help` is
+//! handled by the caller via [`Args::wants_help`].
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// First non-flag token (the subcommand), if any.
+    pub command: Option<String>,
+    /// Remaining non-flag tokens in order.
+    pub positional: Vec<String>,
+    /// `--key value` pairs and bare `--switch`es (value = "true").
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("stray `--`".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false)
+                    && !is_switch(name)
+                {
+                    let v = it.next().unwrap();
+                    args.flags.insert(name.to_string(), v);
+                } else {
+                    args.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// String flag with default.
+    pub fn flag<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.flags.get(name).map(String::as_str).unwrap_or(default)
+    }
+
+    /// Optional string flag.
+    pub fn flag_opt(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    /// Numeric flag with default; errors on malformed values.
+    pub fn flag_num(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("flag --{name} expects a number, got `{v}`")),
+        }
+    }
+
+    /// Integer flag with default.
+    pub fn flag_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("flag --{name} expects an integer, got `{v}`")),
+        }
+    }
+
+    /// Boolean switch (`--verbose` or `--verbose=true`).
+    pub fn switch(&self, name: &str) -> bool {
+        matches!(self.flags.get(name).map(String::as_str), Some("true") | Some("1"))
+    }
+
+    /// True if `--help`/`-h`-style help was requested.
+    pub fn wants_help(&self) -> bool {
+        self.switch("help") || self.command.as_deref() == Some("help")
+    }
+}
+
+/// Flags that never take a value even when followed by a bare token.
+fn is_switch(name: &str) -> bool {
+    matches!(name, "help" | "verbose" | "quiet" | "fast" | "markdown" | "csv" | "json")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Args {
+        Args::parse(tokens.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_positional() {
+        let a = parse(&["run", "fig3", "fig4"]);
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["fig3", "fig4"]);
+    }
+
+    #[test]
+    fn flag_value_forms() {
+        let a = parse(&["run", "--out", "results", "--seed=7", "--verbose"]);
+        assert_eq!(a.flag("out", "x"), "results");
+        assert_eq!(a.flag_usize("seed", 0).unwrap(), 7);
+        assert!(a.switch("verbose"));
+    }
+
+    #[test]
+    fn switch_does_not_swallow_positional() {
+        let a = parse(&["run", "--verbose", "fig5"]);
+        assert!(a.switch("verbose"));
+        assert_eq!(a.positional, vec!["fig5"]);
+    }
+
+    #[test]
+    fn malformed_number_errors() {
+        let a = parse(&["run", "--seed", "abc"]);
+        assert!(a.flag_usize("seed", 0).is_err());
+    }
+
+    #[test]
+    fn help_detection() {
+        assert!(parse(&["help"]).wants_help());
+        assert!(parse(&["run", "--help"]).wants_help());
+        assert!(!parse(&["run"]).wants_help());
+    }
+}

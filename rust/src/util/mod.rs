@@ -1,0 +1,78 @@
+//! Support utilities hand-rolled for the offline build environment.
+//!
+//! The image's cargo registry does not carry `clap`, `serde`, `criterion`,
+//! `rand`, `rayon` or `proptest`, so this module provides the minimal,
+//! well-tested equivalents the rest of the crate needs:
+//!
+//! * [`rng`] — deterministic xorshift/splitmix PRNG for property tests and
+//!   workload generation.
+//! * [`json`] — a tiny JSON document builder (emit-only) for results files.
+//! * [`table`] — fixed-width text table rendering for reports and benches.
+//! * [`bench`] — a micro-benchmark harness (warmup + timed iterations with
+//!   median/min/mean) used by every `cargo bench` target.
+//! * [`cli`] — a small subcommand/flag parser for the `convpim` binary.
+//! * [`stats`] — summary statistics shared by bench and report code.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// Format a quantity in engineering notation with an SI suffix
+/// (e.g. `1.34e14 -> "134.1 T"`); used across reports and benches.
+pub fn si(value: f64) -> String {
+    let (scaled, suffix) = si_parts(value);
+    format!("{scaled:.3} {suffix}")
+}
+
+/// Split a value into an SI-scaled magnitude and suffix.
+pub fn si_parts(value: f64) -> (f64, &'static str) {
+    let abs = value.abs();
+    if abs >= 1e15 {
+        (value / 1e15, "P")
+    } else if abs >= 1e12 {
+        (value / 1e12, "T")
+    } else if abs >= 1e9 {
+        (value / 1e9, "G")
+    } else if abs >= 1e6 {
+        (value / 1e6, "M")
+    } else if abs >= 1e3 {
+        (value / 1e3, "k")
+    } else if abs >= 1.0 || abs == 0.0 {
+        (value, "")
+    } else if abs >= 1e-3 {
+        (value * 1e3, "m")
+    } else if abs >= 1e-6 {
+        (value * 1e6, "u")
+    } else if abs >= 1e-9 {
+        (value * 1e9, "n")
+    } else if abs >= 1e-12 {
+        (value * 1e12, "p")
+    } else {
+        (value * 1e15, "f")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn si_scales_teraops() {
+        assert_eq!(si(233.0e12), "233.000 T");
+    }
+
+    #[test]
+    fn si_scales_small() {
+        let (v, s) = si_parts(6.4e-15);
+        assert!((v - 6.4).abs() < 1e-9);
+        assert_eq!(s, "f");
+    }
+
+    #[test]
+    fn si_zero() {
+        assert_eq!(si(0.0), "0.000 ");
+    }
+}

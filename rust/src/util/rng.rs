@@ -1,0 +1,212 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! A splitmix64-seeded xoshiro256** generator: fast, well-distributed, and
+//! fully reproducible across runs (seeds are fixed in tests/benches). Used
+//! for property-test vector generation, adversarial float patterns, and
+//! synthetic workload inputs.
+
+/// xoshiro256** PRNG with splitmix64 seeding.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed via splitmix64 expansion.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Rng {
+            s: [next(), next(), next(), next()],
+        }
+    }
+
+    /// Next raw 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Next 32-bit value.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform value in `[0, bound)`; `bound` must be nonzero.
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        // Lemire's multiply-shift rejection-free approximation is fine for
+        // test-vector generation; bias is < 2^-32 for our bounds.
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    /// Uniform usize in `[0, bound)`.
+    #[inline]
+    pub fn index(&mut self, bound: usize) -> usize {
+        self.below(bound as u64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    #[inline]
+    pub fn f32_range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (self.f64() as f32) * (hi - lo)
+    }
+
+    /// A value masked to `bits` low bits (bits in 1..=64).
+    #[inline]
+    pub fn bits(&mut self, bits: u32) -> u64 {
+        debug_assert!(bits >= 1 && bits <= 64);
+        if bits == 64 {
+            self.next_u64()
+        } else {
+            self.next_u64() & ((1u64 << bits) - 1)
+        }
+    }
+
+    /// Boolean with probability 1/2.
+    #[inline]
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    /// Fill a vector with `n` values masked to `bits` bits.
+    pub fn vec_bits(&mut self, n: usize, bits: u32) -> Vec<u64> {
+        (0..n).map(|_| self.bits(bits)).collect()
+    }
+
+    /// Adversarial floating-point bit patterns for an (exp, man) format:
+    /// zeros, subnormals, ±Inf, NaNs, boundary exponents, rounding ties —
+    /// weighted alongside uniformly random bit patterns.
+    pub fn float_pattern(&mut self, exp_bits: u32, man_bits: u32) -> u64 {
+        let total = 1 + exp_bits + man_bits;
+        let exp_mask = (1u64 << exp_bits) - 1;
+        let man_mask = if man_bits == 64 {
+            u64::MAX
+        } else {
+            (1u64 << man_bits) - 1
+        };
+        let sign = (self.next_u64() & 1) << (total - 1);
+        match self.below(10) {
+            0 => sign,                                     // ±0
+            1 => sign | (self.bits(man_bits.max(1)) & man_mask), // subnormal
+            2 => sign | (exp_mask << man_bits),            // ±Inf
+            3 => sign | (exp_mask << man_bits) | (self.bits(man_bits.max(1)) & man_mask).max(1), // NaN
+            4 => sign | (1u64 << man_bits),                // smallest normal
+            5 => sign | (((exp_mask - 1) << man_bits) | man_mask), // largest normal
+            6 => {
+                // Rounding-tie bait: mantissa ending in 100..0 patterns.
+                let e = 1 + self.below(exp_mask - 1);
+                sign | (e << man_bits) | (1u64 << self.below(man_bits as u64))
+            }
+            7 => {
+                // Near-equal exponents to stress cancellation paths.
+                let e = exp_mask / 2 + self.below(3);
+                sign | (e << man_bits) | (self.bits(man_bits.max(1)) & man_mask)
+            }
+            _ => self.bits(total.min(64)),                 // fully random
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn below_respects_bound() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = Rng::new(9);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn bits_masked() {
+        let mut r = Rng::new(3);
+        for _ in 0..1000 {
+            assert!(r.bits(12) < (1 << 12));
+        }
+        // 64-bit path must not shift-overflow.
+        let _ = r.bits(64);
+    }
+
+    #[test]
+    fn float_patterns_cover_specials() {
+        let mut r = Rng::new(5);
+        let (mut zeros, mut infs, mut nans) = (0, 0, 0);
+        for _ in 0..5000 {
+            let bits = r.float_pattern(8, 23) as u32;
+            let f = f32::from_bits(bits);
+            if f == 0.0 {
+                zeros += 1;
+            } else if f.is_infinite() {
+                infs += 1;
+            } else if f.is_nan() {
+                nans += 1;
+            }
+        }
+        assert!(zeros > 100 && infs > 100 && nans > 100);
+    }
+
+    #[test]
+    fn rough_uniformity() {
+        let mut r = Rng::new(11);
+        let mut buckets = [0u32; 16];
+        for _ in 0..160_000 {
+            buckets[(r.next_u64() >> 60) as usize] += 1;
+        }
+        for &b in &buckets {
+            assert!((8_000..12_000).contains(&b), "bucket {b}");
+        }
+    }
+}

@@ -1,0 +1,142 @@
+//! LLM attention-decode workload (paper §6 discussion).
+//!
+//! The paper closes by pointing at the decode phase of transformer
+//! inference as the archetypal PIM-friendly workload: attention against
+//! the KV cache is a matrix-*vector* product — `O(seq·d)` operations on
+//! `O(seq·d)` data, i.e. **no reuse** for the matrix — so a GPU is pinned
+//! to its memory roofline while digital PIM operates in place. This module
+//! builds that workload in the same [`LayerCost`] terms as the CNNs so the
+//! Figure 8 criteria analysis and the `attention_decode` example can
+//! compare all four systems on it.
+
+use super::{LayerCost, LayerKind, Workload};
+
+/// Configuration of a decoder-only transformer during single-token decode.
+#[derive(Clone, Copy, Debug)]
+pub struct DecodeConfig {
+    /// Model (hidden) dimension.
+    pub d_model: u64,
+    /// Number of transformer layers.
+    pub n_layers: u64,
+    /// Current context length (KV-cache rows).
+    pub seq_len: u64,
+    /// FFN expansion factor (4 in the classic architecture).
+    pub ffn_mult: u64,
+}
+
+impl DecodeConfig {
+    /// A GPT-2-XL-ish configuration (1.5B params).
+    pub fn gpt2_xl(seq_len: u64) -> Self {
+        DecodeConfig {
+            d_model: 1600,
+            n_layers: 48,
+            seq_len,
+            ffn_mult: 4,
+        }
+    }
+
+    /// A ~7B-parameter configuration.
+    pub fn llama7b(seq_len: u64) -> Self {
+        DecodeConfig {
+            d_model: 4096,
+            n_layers: 32,
+            seq_len,
+            ffn_mult: 4, // (11008/4096 ≈ 2.7 gated ≈ 4 effective matvecs)
+        }
+    }
+}
+
+/// Build the per-token decode workload: for each layer, QKV/out
+/// projections and FFN matvecs (weights streamed, zero reuse) plus the
+/// two KV-cache attention matvecs (`q·Kᵀ` and `p·V`).
+pub fn decode_workload(cfg: DecodeConfig) -> Workload {
+    let d = cfg.d_model as f64;
+    let s = cfg.seq_len as f64;
+    let mut layers = Vec::new();
+    for l in 0..cfg.n_layers {
+        // Projections: 4 d×d matvecs (Q, K, V, out).
+        let proj_macs = 4.0 * d * d;
+        layers.push(LayerCost {
+            name: format!("l{l}.proj"),
+            kind: LayerKind::Linear,
+            flops: 2.0 * proj_macs,
+            macs: proj_macs,
+            bytes: 4.0 * (4.0 * d * d + 8.0 * d), // weights + in/out vectors
+            weight_bytes: 16.0 * d * d,
+            params: 4.0 * d * d,
+        });
+        // Attention over the KV cache: q·Kᵀ (s×d) and p·V (s×d).
+        let attn_macs = 2.0 * s * d;
+        layers.push(LayerCost {
+            name: format!("l{l}.attn"),
+            kind: LayerKind::Linear,
+            flops: 2.0 * attn_macs,
+            macs: attn_macs,
+            // KV cache is per-request state, not shared weights: it does
+            // not amortize across a batch of different requests.
+            bytes: 4.0 * (2.0 * s * d + 2.0 * s + 2.0 * d),
+            weight_bytes: 0.0,
+            params: 0.0,
+        });
+        // FFN: two d×(mult·d) matvecs.
+        let ffn_macs = 2.0 * d * (cfg.ffn_mult as f64 * d);
+        layers.push(LayerCost {
+            name: format!("l{l}.ffn"),
+            kind: LayerKind::Linear,
+            flops: 2.0 * ffn_macs,
+            macs: ffn_macs,
+            bytes: 4.0 * (2.0 * cfg.ffn_mult as f64 * d * d + 2.0 * d * (1.0 + cfg.ffn_mult as f64)),
+            weight_bytes: 8.0 * cfg.ffn_mult as f64 * d * d,
+            params: 2.0 * cfg.ffn_mult as f64 * d * d,
+        });
+    }
+    Workload {
+        name: format!(
+            "decode-d{}-L{}-s{}",
+            cfg.d_model, cfg.n_layers, cfg.seq_len
+        ),
+        layers,
+        input: (1, 1, cfg.d_model as u32),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_has_no_reuse() {
+        // OI of every decode layer must sit near the matvec bound of
+        // ~0.5 FLOP/byte (fp32): far below any CNN conv layer.
+        let w = decode_workload(DecodeConfig::gpt2_xl(1024));
+        for l in &w.layers {
+            assert!(l.oi() < 1.0, "{}: OI = {}", l.name, l.oi());
+        }
+        let cnn = crate::workloads::models::alexnet();
+        let conv_oi = cnn.layers[0].oi();
+        assert!(conv_oi > 20.0 * w.reuse());
+    }
+
+    #[test]
+    fn param_count_sanity() {
+        // GPT-2 XL ≈ 1.5B params; projections+FFN dominate.
+        let w = decode_workload(DecodeConfig::gpt2_xl(1));
+        let b = w.total_params() / 1e9;
+        assert!((1.2..1.8).contains(&b), "params = {b}B");
+    }
+
+    #[test]
+    fn attention_macs_scale_with_context() {
+        let short = decode_workload(DecodeConfig::llama7b(128));
+        let long = decode_workload(DecodeConfig::llama7b(4096));
+        assert!(long.total_macs() > short.total_macs());
+        let attn = |w: &Workload| -> f64 {
+            w.layers
+                .iter()
+                .filter(|l| l.name.ends_with(".attn"))
+                .map(|l| l.macs)
+                .sum()
+        };
+        assert!((attn(&long) / attn(&short) - 32.0).abs() < 0.01);
+    }
+}

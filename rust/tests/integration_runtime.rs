@@ -1,0 +1,176 @@
+//! Integration tests over the PJRT runtime: load real AOT artifacts,
+//! execute them, and check numerics — including the cross-layer
+//! consistency check between the Pallas crossbar kernel (via XLA) and the
+//! native Rust PIM simulator.
+//!
+//! Requires `make artifacts` to have run (skipped gracefully otherwise,
+//! but `make test` guarantees the ordering).
+
+use convpim::pim::fixed::{self, FixedLayout, FixedOp};
+use convpim::pim::gates::GateSet;
+use convpim::pim::xbar::Crossbar;
+use convpim::runtime::{Engine, TensorData};
+use convpim::util::rng::Rng;
+
+fn engine_or_skip() -> Option<Engine> {
+    match Engine::new() {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("skipping runtime integration test: {err:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn elementwise_add_matches_host() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let exe = engine.load("elementwise_add_f32").unwrap();
+    let n = exe.spec.inputs[0].elements();
+    let mut rng = Rng::new(7);
+    let u: Vec<f32> = (0..n).map(|_| rng.f32_range(-100.0, 100.0)).collect();
+    let v: Vec<f32> = (0..n).map(|_| rng.f32_range(-100.0, 100.0)).collect();
+    let out = exe
+        .run(&[TensorData::F32(u.clone()), TensorData::F32(v.clone())])
+        .unwrap();
+    let z = out[0].as_f32();
+    assert_eq!(z.len(), n);
+    for i in (0..n).step_by(1009) {
+        assert_eq!(z[i], u[i] + v[i], "i={i}");
+    }
+}
+
+#[test]
+fn matmul_artifact_matches_host() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let exe = engine.load("matmul_n16").unwrap();
+    let spec = &exe.spec.inputs[0];
+    let (b, n) = (spec.shape[0], spec.shape[1]);
+    let mut rng = Rng::new(8);
+    let a: Vec<f32> = (0..b * n * n).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+    let bb: Vec<f32> = (0..b * n * n).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+    let out = exe
+        .run(&[TensorData::F32(a.clone()), TensorData::F32(bb.clone())])
+        .unwrap();
+    let c = out[0].as_f32();
+    // Spot-check a few entries against host matmul.
+    for &(p, i, j) in &[(0usize, 0usize, 0usize), (b - 1, n - 1, n - 1), (b / 2, 3, 7)] {
+        let mut acc = 0f32;
+        for k in 0..n {
+            acc += a[p * n * n + i * n + k] * bb[p * n * n + k * n + j];
+        }
+        let got = c[p * n * n + i * n + j];
+        assert!((got - acc).abs() <= 1e-4 * (1.0 + acc.abs()), "got={got} want={acc}");
+    }
+}
+
+/// Pack per-row values into the Python kernel's uint32 row-major state
+/// (word w of column c holds rows [32w, 32w+32)).
+fn pack_u32_state(rows: usize, width: usize, fields: &[(usize, u32, &[u64])]) -> Vec<u32> {
+    let words = rows / 32;
+    let mut state = vec![0u32; words * width];
+    for &(base, bits, values) in fields {
+        for (r, &v) in values.iter().enumerate() {
+            for k in 0..bits {
+                if (v >> k) & 1 == 1 {
+                    let col = base + k as usize;
+                    state[(r / 32) * width + col] |= 1 << (r % 32);
+                }
+            }
+        }
+    }
+    state
+}
+
+fn unpack_u32_field(state: &[u32], width: usize, rows: usize, base: usize, bits: u32) -> Vec<u64> {
+    (0..rows)
+        .map(|r| {
+            let mut v = 0u64;
+            for k in 0..bits {
+                let col = base + k as usize;
+                if (state[(r / 32) * width + col] >> (r % 32)) & 1 == 1 {
+                    v |= 1 << k;
+                }
+            }
+            v
+        })
+        .collect()
+}
+
+#[test]
+fn pallas_crossbar_kernel_matches_native_simulator() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let exe = engine.load("pim_fixed_add16").unwrap();
+    let spec = &exe.spec.inputs[0];
+    let (words, width) = (spec.shape[0], spec.shape[1]);
+    let rows = words * 32;
+    let mut rng = Rng::new(9);
+    let u = rng.vec_bits(rows, 16);
+    let v = rng.vec_bits(rows, 16);
+
+    // Through the AOT path: JAX/Pallas kernel -> HLO -> PJRT execute.
+    let state = pack_u32_state(rows, width, &[(0, 16, &u), (16, 16, &v)]);
+    let out = exe.run(&[TensorData::U32(state)]).unwrap();
+    let z_pallas = unpack_u32_field(out[0].as_u32(), width, rows, 32, 16);
+
+    // Through the native simulator: Rust microcode on the bit-packed
+    // crossbar.
+    let prog = fixed::program(FixedOp::Add, 16, GateSet::MemristiveNor);
+    let lay = FixedLayout::new(FixedOp::Add, 16);
+    let mut xbar = Crossbar::new(rows, prog.width() as usize);
+    fixed::load_operands(&mut xbar, &lay, &u, &v);
+    xbar.execute(&prog);
+    let z_native = fixed::read_result(&xbar, &lay, rows);
+
+    // Both must equal host arithmetic — and therefore each other.
+    for i in 0..rows {
+        let expect = (u[i] + v[i]) & 0xFFFF;
+        assert_eq!(z_pallas[i], expect, "pallas i={i}");
+        assert_eq!(z_native[i], expect, "native i={i}");
+    }
+}
+
+#[test]
+fn cnn_forward_produces_finite_logits() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    for name in ["cnn_alexnet_fwd", "cnn_googlenet_fwd", "cnn_resnet_fwd"] {
+        let exe = engine.load(name).unwrap();
+        let inputs = exe.synth_inputs(11);
+        let out = exe.run(&inputs).unwrap();
+        let logits = out.last().unwrap().as_f32();
+        assert_eq!(logits.len(), 8 * 10, "{name}");
+        assert!(logits.iter().all(|x| x.is_finite()), "{name}");
+    }
+}
+
+#[test]
+fn train_step_descends_through_pjrt() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let exe = engine.load("cnn_alexnet_train_step").unwrap();
+    let mut inputs = exe.synth_inputs(13);
+    // Scale parameter tensors down (synth uniform is too hot for a 5-layer
+    // net); inputs layout: 5 param tensors, then x, then labels.
+    let n_params = inputs.len() - 2;
+    for t in inputs.iter_mut().take(n_params) {
+        if let TensorData::F32(v) = t {
+            for x in v.iter_mut() {
+                *x *= 0.1;
+            }
+        }
+    }
+    let mut losses = Vec::new();
+    for _ in 0..4 {
+        let out = exe.run(&inputs).unwrap();
+        // Outputs: new params (n_params tensors) then the scalar loss.
+        let loss = out.last().unwrap().as_f32()[0];
+        assert!(loss.is_finite());
+        losses.push(loss);
+        for (i, t) in out.into_iter().take(n_params).enumerate() {
+            inputs[i] = t;
+        }
+    }
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "loss did not descend through PJRT: {losses:?}"
+    );
+}

@@ -1,0 +1,175 @@
+//! Property-based tests over the PIM arithmetic microcode (hand-rolled
+//! generators — `proptest` is not in the offline registry). Each property
+//! runs across many random seeds and both gate sets.
+
+use convpim::pim::fixed::{self, FixedLayout, FixedOp};
+use convpim::pim::float::{self, FloatLayout};
+use convpim::pim::gates::GateSet;
+use convpim::pim::softfloat::{self, Format};
+use convpim::pim::xbar::Crossbar;
+use convpim::util::rng::Rng;
+
+fn run_fixed(op: FixedOp, n: u32, set: GateSet, u: &[u64], v: &[u64]) -> Vec<u64> {
+    let prog = fixed::program(op, n, set);
+    let lay = FixedLayout::new(op, n);
+    let mut x = Crossbar::new(u.len(), prog.width() as usize);
+    fixed::load_operands(&mut x, &lay, u, v);
+    x.execute(&prog);
+    fixed::read_result(&x, &lay, u.len())
+}
+
+fn run_float(op: FixedOp, fmt: Format, set: GateSet, u: &[u64], v: &[u64]) -> Vec<u64> {
+    let prog = float::program(op, fmt, set);
+    let lay = FloatLayout::new(fmt);
+    let mut x = Crossbar::new(u.len(), prog.width() as usize);
+    float::load_operands(&mut x, &lay, u, v);
+    x.execute(&prog);
+    float::read_result(&x, &lay, u.len())
+}
+
+/// Property: add/sub round-trip — `(u + v) - v == u` (wrapping).
+#[test]
+fn prop_add_sub_roundtrip() {
+    for (seed, set) in [(1u64, GateSet::MemristiveNor), (2, GateSet::DramMaj)] {
+        let mut rng = Rng::new(seed);
+        let n = 16;
+        let u = rng.vec_bits(200, n);
+        let v = rng.vec_bits(200, n);
+        let sum = run_fixed(FixedOp::Add, n, set, &u, &v);
+        let back = run_fixed(FixedOp::Sub, n, set, &sum, &v);
+        assert_eq!(back, u, "set={set:?}");
+    }
+}
+
+/// Property: multiplication is commutative.
+#[test]
+fn prop_mul_commutative() {
+    let mut rng = Rng::new(3);
+    let u = rng.vec_bits(150, 12);
+    let v = rng.vec_bits(150, 12);
+    let uv = run_fixed(FixedOp::Mul, 12, GateSet::MemristiveNor, &u, &v);
+    let vu = run_fixed(FixedOp::Mul, 12, GateSet::MemristiveNor, &v, &u);
+    assert_eq!(uv, vu);
+}
+
+/// Property: multiplicative identities — `u * 1 == u`, `u * 0 == 0`.
+#[test]
+fn prop_mul_identities() {
+    let mut rng = Rng::new(4);
+    let u = rng.vec_bits(100, 16);
+    let ones = vec![1u64; 100];
+    let zeros = vec![0u64; 100];
+    assert_eq!(run_fixed(FixedOp::Mul, 16, GateSet::MemristiveNor, &u, &ones), u);
+    assert_eq!(
+        run_fixed(FixedOp::Mul, 16, GateSet::MemristiveNor, &u, &zeros),
+        zeros
+    );
+}
+
+/// Property: division recomposition — `q*v + r == u` and `r < v`.
+#[test]
+fn prop_div_recomposition() {
+    let mut rng = Rng::new(5);
+    let n = 16;
+    let u = rng.vec_bits(150, n);
+    let v: Vec<u64> = (0..150).map(|_| 1 + rng.bits(n - 1)).collect();
+    let prog = fixed::program(FixedOp::Div, n, GateSet::MemristiveNor);
+    let lay = FixedLayout::new(FixedOp::Div, n);
+    let mut x = Crossbar::new(u.len(), prog.width() as usize);
+    fixed::load_operands(&mut x, &lay, &u, &v);
+    x.execute(&prog);
+    let q = fixed::read_result(&x, &lay, u.len());
+    let r = fixed::read_remainder(&x, &lay, u.len());
+    for i in 0..u.len() {
+        assert_eq!(q[i] * v[i] + r[i], u[i], "i={i}");
+        assert!(r[i] < v[i], "i={i}");
+    }
+}
+
+/// Property: scratch columns never corrupt operand fields (`u`, `v` are
+/// read-only to the microcode).
+#[test]
+fn prop_operands_preserved() {
+    let mut rng = Rng::new(6);
+    for op in FixedOp::all() {
+        let n = 16;
+        let prog = fixed::program(op, n, GateSet::MemristiveNor);
+        let lay = FixedLayout::new(op, n);
+        let mut x = Crossbar::new(64, prog.width() as usize);
+        let u = rng.vec_bits(64, n);
+        let v: Vec<u64> = (0..64).map(|_| 1 + rng.bits(n - 1)).collect();
+        fixed::load_operands(&mut x, &lay, &u, &v);
+        x.execute(&prog);
+        assert_eq!(x.read_field(lay.u, n, 64), u, "{op:?} clobbered u");
+        assert_eq!(x.read_field(lay.v, n, 64), v, "{op:?} clobbered v");
+    }
+}
+
+/// Property: fp add is commutative bit-for-bit (canonical NaNs make this
+/// exact even for special values).
+#[test]
+fn prop_fp_add_commutative() {
+    let mut rng = Rng::new(7);
+    let fmt = Format::FP32;
+    let u: Vec<u64> = (0..300).map(|_| rng.float_pattern(8, 23)).collect();
+    let v: Vec<u64> = (0..300).map(|_| rng.float_pattern(8, 23)).collect();
+    let uv = run_float(FixedOp::Add, fmt, GateSet::MemristiveNor, &u, &v);
+    let vu = run_float(FixedOp::Add, fmt, GateSet::MemristiveNor, &v, &u);
+    assert_eq!(uv, vu);
+}
+
+/// Property: fp identities — `x + (+0) == x` (for non-NaN x), `x * 1 == x`.
+#[test]
+fn prop_fp_identities() {
+    let mut rng = Rng::new(8);
+    let fmt = Format::FP32;
+    // Exclude NaN (canonicalized) and -0 (IEEE: -0 + +0 = +0).
+    let u: Vec<u64> = (0..200)
+        .map(|_| {
+            let mut x = rng.float_pattern(8, 23);
+            while fmt.is_nan(x) || fmt.is_zero(x) {
+                x = rng.float_pattern(8, 23);
+            }
+            x
+        })
+        .collect();
+    let zeros = vec![0u64; u.len()];
+    let got = run_float(FixedOp::Add, fmt, GateSet::MemristiveNor, &u, &zeros);
+    assert_eq!(got, u, "x + 0 must be x");
+    let ones = vec![fmt.from_f64(1.0); u.len()];
+    let got = run_float(FixedOp::Mul, fmt, GateSet::MemristiveNor, &u, &ones);
+    // x * 1 == x except -0*1 = -0 (still equal) — exact bit identity.
+    assert_eq!(got, u, "x * 1 must be x");
+}
+
+/// Property: fp results are never "garbage" — every output is either a
+/// valid finite value matching the oracle, or the canonical Inf/NaN.
+#[test]
+fn prop_fp_matches_oracle_fuzz() {
+    let mut rng = Rng::new(9);
+    for fmt in [Format::FP16, Format::FP32] {
+        for op in FixedOp::all() {
+            let u: Vec<u64> = (0..150).map(|_| rng.float_pattern(fmt.exp, fmt.man)).collect();
+            let v: Vec<u64> = (0..150).map(|_| rng.float_pattern(fmt.exp, fmt.man)).collect();
+            let got = run_float(op, fmt, GateSet::MemristiveNor, &u, &v);
+            for i in 0..u.len() {
+                let expect = softfloat::apply(fmt, op, u[i], v[i]);
+                assert_eq!(
+                    got[i], expect,
+                    "{fmt:?} {op:?} a={:#x} b={:#x}",
+                    u[i], v[i]
+                );
+            }
+        }
+    }
+}
+
+/// Property: the simulator's gate accounting matches the program's static
+/// counts (row_gates = gates × rows after execution).
+#[test]
+fn prop_gate_accounting() {
+    let prog = fixed::program(FixedOp::Add, 32, GateSet::MemristiveNor);
+    let mut x = Crossbar::new(100, prog.width() as usize);
+    x.execute(&prog);
+    assert_eq!(x.row_gates(), prog.gates() * 100);
+}
