@@ -1,38 +1,53 @@
 //! Hot-path microbench: the crossbar column-gate engine (the simulator's
 //! inner loop and the §Perf optimization target). Reports simulated
-//! row-gates per second across crossbar heights and gate mixes.
+//! row-gates per second across crossbar heights and gate mixes, plus the
+//! two headline ratios of the bit-sliced engine rewrite:
+//!
+//! * **packed vs scalar** — the bit-sliced engine against the retained
+//!   per-row/per-bit `bool` oracle (`pim::oracle::ScalarCrossbar`), same
+//!   program, same rows. Packing alone is worth ~64× (one `u64` word op
+//!   simulates 64 row-gates); the acceptance bar is ≥ 10×.
+//! * **threaded vs serial** — `execute` (sharded across the thread pool)
+//!   against `execute_serial` on a tall crossbar.
 
 use convpim::pim::fixed::{self, FixedOp};
 use convpim::pim::float;
 use convpim::pim::gates::GateSet;
 use convpim::pim::isa::{Instr, Program};
+use convpim::pim::oracle::ScalarCrossbar;
 use convpim::pim::softfloat::Format;
 use convpim::pim::xbar::Crossbar;
 use convpim::util::bench::{bench, header, report, BenchConfig};
+use convpim::util::pool::Pool;
 use convpim::util::rng::Rng;
+
+/// A random `gates`-instruction NOR-storm program over `cols` columns.
+fn nor_storm(rng: &mut Rng, cols: u32, gates: usize) -> Program {
+    let mut prog = Program::new(GateSet::MemristiveNor);
+    for _ in 0..gates {
+        let a = rng.below(cols as u64) as u32;
+        let mut b = rng.below(cols as u64) as u32;
+        let mut o = rng.below(cols as u64) as u32;
+        while b == a {
+            b = rng.below(cols as u64) as u32;
+        }
+        while o == a || o == b {
+            o = rng.below(cols as u64) as u32;
+        }
+        prog.push(Instr::Nor2 { a, b, out: o });
+    }
+    prog
+}
 
 fn main() {
     let cfg = BenchConfig::from_env();
     header("hotpath: crossbar column-gate engine");
-
-    // Raw NOR storm: 1024 gates over random columns.
     let mut rng = Rng::new(1);
+
+    // Raw NOR storm across crossbar heights (auto-dispatched engine).
     for rows in [1024usize, 16384, 262_144] {
-        let cols = 64u32;
-        let mut prog = Program::new(GateSet::MemristiveNor);
-        for _ in 0..1024 {
-            let a = rng.below(cols as u64) as u32;
-            let mut b = rng.below(cols as u64) as u32;
-            let mut o = rng.below(cols as u64) as u32;
-            while b == a {
-                b = rng.below(cols as u64) as u32;
-            }
-            while o == a || o == b {
-                o = rng.below(cols as u64) as u32;
-            }
-            prog.push(Instr::Nor2 { a, b, out: o });
-        }
-        let mut x = Crossbar::new(rows, cols as usize);
+        let prog = nor_storm(&mut rng, 64, 1024);
+        let mut x = Crossbar::new(rows, 64);
         let units = prog.gates() as f64 * rows as f64;
         report(bench(
             &format!("nor2_storm rows={rows}"),
@@ -56,4 +71,55 @@ fn main() {
             x.execute(&prog)
         }));
     }
+
+    // Bit-sliced engine vs the scalar reference oracle (acceptance: ≥10×).
+    header("bit-sliced engine vs scalar reference oracle");
+    let rows = 4096;
+    let prog = nor_storm(&mut rng, 64, 1024);
+    let units = prog.gates() as f64 * rows as f64;
+    let mut packed = Crossbar::new(rows, 64);
+    let mut scalar = ScalarCrossbar::new(rows, 64);
+    let rp = report(bench(
+        &format!("packed(serial) nor2_storm rows={rows}"),
+        units,
+        &cfg,
+        || packed.execute_serial(&prog),
+    ));
+    let rs = report(bench(
+        &format!("scalar-oracle  nor2_storm rows={rows}"),
+        units,
+        &cfg,
+        || scalar.execute(&prog),
+    ));
+    let speedup = rs.per_batch_secs.median / rp.per_batch_secs.median;
+    println!(
+        "bit-sliced speedup over scalar reference: {speedup:.1}x \
+         (acceptance bar: >= 10x)"
+    );
+
+    // Thread-pool sharding vs the serial path on a tall crossbar.
+    header(&format!(
+        "sharded execute vs serial (pool: {} threads)",
+        Pool::global().threads()
+    ));
+    let rows = 1 << 20;
+    let prog = nor_storm(&mut rng, 64, 1024);
+    let units = prog.gates() as f64 * rows as f64;
+    let mut x = Crossbar::new(rows, 64);
+    let rser = report(bench(
+        &format!("serial   nor2_storm rows={rows}"),
+        units,
+        &cfg,
+        || x.execute_serial(&prog),
+    ));
+    let rpar = report(bench(
+        &format!("sharded  nor2_storm rows={rows}"),
+        units,
+        &cfg,
+        || x.execute(&prog),
+    ));
+    println!(
+        "thread-pool speedup over serial: {:.2}x",
+        rser.per_batch_secs.median / rpar.per_batch_secs.median
+    );
 }

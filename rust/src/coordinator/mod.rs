@@ -40,13 +40,36 @@ pub struct Ctx {
 impl Ctx {
     /// Build a context, attaching the engine if artifacts exist.
     pub fn new(fast: bool) -> Ctx {
+        Ctx::with_engine(
+            match Engine::new() {
+                Ok(e) => Some(e),
+                Err(err) => {
+                    eprintln!("note: measured series disabled ({err:#})");
+                    None
+                }
+            },
+            fast,
+        )
+    }
+
+    /// Like [`Ctx::new`], but prints the measured-series availability note
+    /// at most once per process — used by the parallel runner, where every
+    /// worker builds its own context and the per-context note of
+    /// [`Ctx::new`] would repeat for each experiment.
+    pub fn new_quiet(fast: bool) -> Ctx {
         let engine = match Engine::new() {
             Ok(e) => Some(e),
             Err(err) => {
-                eprintln!("note: measured series disabled ({err:#})");
+                static NOTE: std::sync::Once = std::sync::Once::new();
+                NOTE.call_once(|| eprintln!("note: measured series disabled ({err:#})"));
                 None
             }
         };
+        Ctx::with_engine(engine, fast)
+    }
+
+    /// The single construction point both public constructors share.
+    fn with_engine(engine: Option<Engine>, fast: bool) -> Ctx {
         Ctx {
             engine,
             fast,
@@ -130,6 +153,43 @@ pub fn all_ids() -> Vec<&'static str> {
     ]
 }
 
+/// Run a batch of experiments concurrently on a thread pool.
+///
+/// Each experiment gets a fresh context from `mk_ctx` (contexts are not
+/// shared across threads; the measured-series engine, when present, is
+/// per-worker state, so pjrt builds pay engine startup once per experiment
+/// here — prefer a serial run for measured series). Results come back in
+/// input order, one per id, so reporting stays deterministic regardless of
+/// scheduling. Experiments are independent by construction — they only
+/// read the static models — and the bit-exact validation layers underneath
+/// are themselves bit-identical across thread counts (see
+/// [`crate::pim::xbar`]), so the analytic report content of a concurrent
+/// run is byte-identical to a serial one. Wall-clock *measured* numbers
+/// (pjrt builds) are the exception: concurrent execution contends for
+/// cores and skews timings.
+pub fn run_many(
+    ids: &[String],
+    mk_ctx: &(dyn Fn() -> Ctx + Sync),
+    pool: &crate::util::pool::Pool,
+) -> Vec<Result<ExperimentResult>> {
+    let mut slots: Vec<Option<Result<ExperimentResult>>> = ids.iter().map(|_| None).collect();
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = slots
+        .iter_mut()
+        .zip(ids)
+        .map(|(slot, id)| {
+            Box::new(move || {
+                let mut ctx = mk_ctx();
+                *slot = Some(run_experiment(id, &mut ctx));
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    pool.run(tasks);
+    slots
+        .into_iter()
+        .map(|slot| slot.expect("pool.run completed every task"))
+        .collect()
+}
+
 /// Run one experiment by id.
 pub fn run_experiment(id: &str, ctx: &mut Ctx) -> Result<ExperimentResult> {
     match id {
@@ -169,5 +229,23 @@ mod tests {
     fn unknown_id_errors() {
         let mut ctx = Ctx::analytic();
         assert!(run_experiment("fig99", &mut ctx).is_err());
+    }
+
+    #[test]
+    fn run_many_is_ordered_and_deterministic() {
+        let ids: Vec<String> = all_ids().iter().map(|s| s.to_string()).collect();
+        let pool = crate::util::pool::Pool::new(4);
+        let results = run_many(&ids, &Ctx::analytic, &pool);
+        assert_eq!(results.len(), ids.len());
+        for (id, r) in ids.iter().zip(&results) {
+            let r = r.as_ref().unwrap_or_else(|e| panic!("{id}: {e:#}"));
+            assert_eq!(&r.id, id, "results must come back in input order");
+        }
+        // A concurrent run renders byte-identically to a serial rerun.
+        let mut ctx = Ctx::analytic();
+        let serial = run_experiment("fig4", &mut ctx).unwrap();
+        let idx = ids.iter().position(|i| i == "fig4").unwrap();
+        let parallel = results[idx].as_ref().unwrap();
+        assert_eq!(serial.markdown(), parallel.markdown());
     }
 }

@@ -11,7 +11,13 @@
 //!   and in-DRAM majority gates), plus microcode compilers for the AritPIM
 //!   bit-serial element-parallel arithmetic suite (fixed-point and IEEE-754
 //!   floating-point) and the MatPIM matrix-multiplication / convolution
-//!   schedules, and architecture-scale throughput/energy models.
+//!   schedules, and architecture-scale throughput/energy models. The
+//!   execution core is **bit-sliced**: each column is packed into `u64`
+//!   row-words, so one column-parallel gate costs one word op per 64 rows,
+//!   and tall executions shard their row-words across a hand-rolled thread
+//!   pool ([`util::pool`]). A retained scalar oracle ([`pim::oracle`])
+//!   proves the packed engine bit-identical to the naive per-row/per-bit
+//!   semantics.
 //! * [`gpumodel`] — GPU datasheet database and memory/compute roofline
 //!   models that reproduce the paper's "experimental" (memory-bound) and
 //!   "theoretical" (compute-bound) GPU baselines.
@@ -24,7 +30,9 @@
 //!   every table and figure of the paper, and the report generator.
 //! * [`runtime`] — the PJRT runtime that loads the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) and executes them from Rust; Python
-//!   never runs at experiment time.
+//!   never runs at experiment time. Needs the `pjrt` cargo feature (and
+//!   the external `xla` crate); without it a same-API stub reports the
+//!   measured series as unavailable and everything degrades to analytic.
 //! * [`util`] — support code (deterministic PRNG, JSON/CSV emitters, table
 //!   formatting, micro-benchmark harness, CLI parsing) hand-rolled because
 //!   the build environment's offline registry does not carry the usual
@@ -37,17 +45,28 @@
 //!     arch::PimArch,
 //!     fixed::{self, FixedLayout, FixedOp},
 //!     gates::GateSet,
+//!     oracle::ScalarCrossbar,
 //!     xbar::Crossbar,
 //! };
 //!
 //! // Compile a 32-bit fixed-point vector addition to memristive microcode.
 //! let prog = fixed::program(FixedOp::Add, 32, GateSet::MemristiveNor);
 //! // Execute it bit-exactly on a simulated crossbar (one element per row).
+//! // The engine is bit-sliced — packed u64 row-words, sharded across a
+//! // thread pool when tall — and bit-identical to the scalar reference.
 //! let lay = FixedLayout::new(FixedOp::Add, 32);
 //! let mut xbar = Crossbar::new(1024, prog.width() as usize);
 //! fixed::load_operands(&mut xbar, &lay, &vec![3; 1024], &vec![4; 1024]);
 //! xbar.execute(&prog);
 //! assert!(fixed::read_result(&xbar, &lay, 1024).iter().all(|&z| z == 7));
+//!
+//! // Cross-check against the retained per-row/per-bit oracle.
+//! let mut oracle = ScalarCrossbar::new(1024, prog.width() as usize);
+//! oracle.write_field(lay.u, 32, &vec![3; 1024]);
+//! oracle.write_field(lay.v, 32, &vec![4; 1024]);
+//! oracle.execute(&prog);
+//! assert!(oracle.agrees_with(&xbar));
+//!
 //! // Scale to the paper's 48 GB memory to get architecture throughput.
 //! let arch = PimArch::paper(GateSet::MemristiveNor);
 //! println!("memristive fixed32 add: {:.1} TOPS", arch.throughput(&prog) / 1e12);

@@ -22,6 +22,7 @@ use convpim::pim::softfloat::{self, Format};
 use convpim::pim::xbar::Crossbar;
 use convpim::runtime::Engine;
 use convpim::util::cli::Args;
+use convpim::util::pool::Pool;
 use convpim::util::rng::Rng;
 
 const USAGE: &str = "\
@@ -29,11 +30,18 @@ convpim — reproduction of `Performance Analysis of Digital Processing-in-Memor
 through a Case Study on CNN Acceleration` (ConvPIM)
 
 USAGE:
-  convpim run [ids...|all] [--out DIR] [--fast] [--no-measure] [--seed N]
+  convpim run [ids...|all] [--out DIR] [--fast] [--no-measure] [--seed N] [--jobs N]
   convpim validate [--rows N] [--seed N]
   convpim info
   convpim list
   convpim help
+
+Experiments run concurrently on a thread pool by default. --jobs 1 runs
+experiments one at a time (crossbar executions may still shard across the
+pool); set CONVPIM_THREADS=1 to make the whole process serial. Analytic
+and bit-exact output is identical in every mode; wall-clock *measured*
+series (pjrt builds with artifacts) are timing-sensitive — use
+CONVPIM_THREADS=1 when measuring.
 
 EXPERIMENTS: table1 fig3 fig4 fig5 fig6 fig7 fig8 sens-gpu sens-fp16 sens-dims
 ";
@@ -83,24 +91,76 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         args.positional.clone()
     };
     let out: PathBuf = args.flag("out", "results").into();
-    let mut ctx = if args.switch("no-measure") {
-        Ctx::analytic()
+    let seed = args.flag_usize("seed", 0xC0FFEE).map_err(anyhow::Error::msg)? as u64;
+    let analytic = args.switch("no-measure");
+    let fast = args.switch("fast");
+    // --jobs 0 (the default) sizes to the global pool; --jobs 1 runs
+    // experiments one at a time; --jobs N uses N pool workers (capped by
+    // CONVPIM_THREADS via the global pool size; the submitting thread also
+    // helps drain the queue, see util::pool).
+    let jobs = args.flag_usize("jobs", 0).map_err(anyhow::Error::msg)?;
+    let jobs = if jobs == 0 {
+        Pool::global().threads().min(ids.len())
     } else {
-        Ctx::new(args.switch("fast"))
+        jobs.min(Pool::global().threads()).min(ids.len())
     };
-    ctx.seed = args.flag_usize("seed", 0xC0FFEE).map_err(anyhow::Error::msg)? as u64;
 
     let mut results = Vec::new();
-    for id in &ids {
-        eprintln!("running {id}…");
-        let r = coordinator::run_experiment(id, &mut ctx)?;
-        println!("{}", r.text());
-        report::write_result(&out, &r)?;
-        results.push(r);
+    let mut first_err: Option<anyhow::Error> = None;
+    if jobs > 1 && ids.len() > 1 {
+        eprintln!("running {} experiment(s) on {jobs} worker(s)…", ids.len());
+        let mk_ctx = move || {
+            let mut ctx = if analytic {
+                Ctx::analytic()
+            } else {
+                Ctx::new_quiet(fast)
+            };
+            ctx.seed = seed;
+            ctx
+        };
+        let dedicated;
+        let pool = if jobs == Pool::global().threads().min(ids.len()) {
+            Pool::global()
+        } else {
+            dedicated = Pool::new(jobs);
+            &dedicated
+        };
+        // Unlike the serial path (which fails fast), every experiment has
+        // already run by the time results come back — so write everything
+        // that succeeded before reporting the first failure, instead of
+        // discarding computed work.
+        for (id, r) in ids.iter().zip(coordinator::run_many(&ids, &mk_ctx, pool)) {
+            match r {
+                Ok(r) => {
+                    println!("{}", r.text());
+                    report::write_result(&out, &r)?;
+                    results.push(r);
+                }
+                Err(e) => {
+                    eprintln!("error: {id}: {e:#}");
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+    } else {
+        let mut ctx = if analytic { Ctx::analytic() } else { Ctx::new(fast) };
+        ctx.seed = seed;
+        for id in &ids {
+            eprintln!("running {id}…");
+            let r = coordinator::run_experiment(id, &mut ctx)?;
+            println!("{}", r.text());
+            report::write_result(&out, &r)?;
+            results.push(r);
+        }
     }
     report::write_report(&out, &results)?;
     eprintln!("wrote {} experiment(s) to {}", results.len(), out.display());
-    Ok(())
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
 }
 
 /// Bit-exact validation sweep: every arithmetic routine on both gate sets

@@ -20,9 +20,7 @@
 //!   simulated crossbar and are checked against host arithmetic.
 
 use std::collections::HashMap;
-use std::sync::Mutex;
-
-use once_cell::sync::Lazy;
+use std::sync::{Mutex, OnceLock};
 
 use super::arch::PimArch;
 use super::builder::Builder;
@@ -77,12 +75,13 @@ pub struct ScalarCosts {
     pub mul_gates: u64,
 }
 
-static COSTS: Lazy<Mutex<HashMap<(NumFmt, GateSet), ScalarCosts>>> =
-    Lazy::new(|| Mutex::new(HashMap::new()));
+// `once_cell` is not in the offline registry; `std::sync::OnceLock` covers
+// the lazy-static pattern since Rust 1.70.
+static COSTS: OnceLock<Mutex<HashMap<(NumFmt, GateSet), ScalarCosts>>> = OnceLock::new();
 
 /// Scalar costs for `(fmt, set)`, compiled once and cached.
 pub fn scalar_costs(fmt: NumFmt, set: GateSet) -> ScalarCosts {
-    let mut cache = COSTS.lock().unwrap();
+    let mut cache = COSTS.get_or_init(|| Mutex::new(HashMap::new())).lock().unwrap();
     *cache.entry((fmt, set)).or_insert_with(|| {
         let add = fmt.program(FixedOp::Add, set);
         let mul = fmt.program(FixedOp::Mul, set);

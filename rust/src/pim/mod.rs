@@ -15,8 +15,11 @@
 //! * [`gates`] — the two physical gate sets and their per-gate cycle and
 //!   energy cost models: memristive stateful logic (MAGIC-style NOR, with
 //!   the output-initialization cycle) and in-DRAM (SIMDRAM-style MAJ/NOT).
-//! * [`xbar`] — the bit-packed crossbar state and the column-parallel
-//!   execution engine (the simulator's hot path).
+//! * [`xbar`] — the bit-sliced crossbar state and the column-parallel
+//!   execution engine (the simulator's hot path): packed `u64` row-words,
+//!   sharded across the [`crate::util::pool`] thread pool.
+//! * [`oracle`] — the retained scalar reference: a per-row, per-bit `bool`
+//!   crossbar the packed engine is proven bit-identical against.
 //! * [`builder`] — a logic-synthesis EDSL over columns (full adders, barrel
 //!   shifters, leading-zero counters, muxes) used by all compilers.
 //! * [`fixed`] — AritPIM fixed-point add/sub/mul/div program generators.
@@ -38,6 +41,7 @@ pub mod float;
 pub mod gates;
 pub mod isa;
 pub mod matpim;
+pub mod oracle;
 pub mod softfloat;
 pub mod xbar;
 

@@ -1,0 +1,400 @@
+//! The scalar reference oracle: a per-row, per-bit `bool` crossbar.
+//!
+//! [`ScalarCrossbar`] executes gate programs the obvious way — one `bool`
+//! per cell, one gate evaluation per row per instruction — with no packing,
+//! no blocking and no threads. It exists purely as the trusted baseline the
+//! bit-sliced engine ([`crate::pim::xbar::Crossbar`]) is proven against:
+//! the equivalence tests below run the fixed-point, floating-point and
+//! matmul microcode suites on both engines and require bit-identical
+//! state. The `hotpath_gates` bench measures the packed engine's speedup
+//! over this oracle (≥ 64× from packing alone, before threading).
+//!
+//! ```
+//! use convpim::pim::gates::GateSet;
+//! use convpim::pim::isa::{Instr, Program};
+//! use convpim::pim::oracle::ScalarCrossbar;
+//! use convpim::pim::xbar::Crossbar;
+//!
+//! let mut prog = Program::new(GateSet::MemristiveNor);
+//! prog.push(Instr::Nor2 { a: 0, b: 1, out: 2 });
+//! prog.push(Instr::Not { a: 2, out: 3 });
+//!
+//! let mut packed = Crossbar::new(100, 4);
+//! let mut oracle = ScalarCrossbar::new(100, 4);
+//! for r in 0..100 {
+//!     packed.set(r, 0, r % 2 == 0);
+//!     oracle.set(r, 0, r % 2 == 0);
+//! }
+//! packed.execute(&prog);
+//! oracle.execute(&prog);
+//! assert!(oracle.agrees_with(&packed));
+//! ```
+
+use super::isa::{Col, Instr, Program};
+use super::xbar::Crossbar;
+
+/// A crossbar simulated one `bool` per cell, row-major.
+///
+/// The layout is deliberately *different* from the packed engine's
+/// (row-major bools vs column-major bit-packed words) so agreement between
+/// the two is evidence about semantics, not about shared storage code.
+#[derive(Clone, Debug)]
+pub struct ScalarCrossbar {
+    rows: usize,
+    cols: usize,
+    data: Vec<bool>,
+    row_gates: u64,
+}
+
+impl ScalarCrossbar {
+    /// Create a zeroed crossbar.
+    pub fn new(rows: usize, cols: usize) -> Self {
+        assert!(rows > 0 && cols > 0);
+        ScalarCrossbar {
+            rows,
+            cols,
+            data: vec![false; rows * cols],
+            row_gates: 0,
+        }
+    }
+
+    /// Number of rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Row-gates executed so far (rows × gate instructions).
+    pub fn row_gates(&self) -> u64 {
+        self.row_gates
+    }
+
+    #[inline]
+    fn idx(&self, row: usize, col: Col) -> usize {
+        debug_assert!(row < self.rows && (col as usize) < self.cols);
+        row * self.cols + col as usize
+    }
+
+    /// Read one bit.
+    pub fn get(&self, row: usize, col: Col) -> bool {
+        self.data[self.idx(row, col)]
+    }
+
+    /// Write one bit (host data-load path, not a PIM operation).
+    pub fn set(&mut self, row: usize, col: Col, bit: bool) {
+        let i = self.idx(row, col);
+        self.data[i] = bit;
+    }
+
+    /// Load an N-bit value into columns `[base, base+bits)` of `row`,
+    /// little-endian — mirrors [`Crossbar::write_value`].
+    pub fn write_value(&mut self, row: usize, base: Col, bits: u32, value: u64) {
+        for k in 0..bits {
+            self.set(row, base + k, (value >> k) & 1 == 1);
+        }
+    }
+
+    /// Read an N-bit little-endian value from columns `[base, base+bits)`.
+    pub fn read_value(&self, row: usize, base: Col, bits: u32) -> u64 {
+        let mut v = 0u64;
+        for k in 0..bits {
+            if self.get(row, base + k) {
+                v |= 1 << k;
+            }
+        }
+        v
+    }
+
+    /// Bulk-load one value per row into a bit-field — mirrors
+    /// [`Crossbar::write_field`], including its zeroing of the remaining
+    /// rows of a partially-filled final 64-row block.
+    pub fn write_field(&mut self, base: Col, bits: u32, values: &[u64]) {
+        assert!(values.len() <= self.rows);
+        for (block, chunk) in values.chunks(64).enumerate() {
+            let lo = block * 64;
+            let hi = (lo + 64).min(self.rows);
+            for k in 0..bits {
+                for r in lo..hi {
+                    let bit = chunk
+                        .get(r - lo)
+                        .map(|&v| (v >> k) & 1 == 1)
+                        .unwrap_or(false);
+                    self.set(r, base + k, bit);
+                }
+            }
+        }
+    }
+
+    /// Bulk-read `n` per-row values from a bit-field.
+    pub fn read_field(&self, base: Col, bits: u32, n: usize) -> Vec<u64> {
+        assert!(n <= self.rows);
+        (0..n).map(|r| self.read_value(r, base, bits)).collect()
+    }
+
+    /// Execute one instruction: the per-row, per-bit `bool` loop.
+    pub fn step(&mut self, instr: Instr) {
+        let out = instr.out();
+        for r in 0..self.rows {
+            let v = match instr {
+                Instr::Nor2 { a, b, .. } => !(self.get(r, a) | self.get(r, b)),
+                Instr::Nor3 { a, b, c, .. } => {
+                    !(self.get(r, a) | self.get(r, b) | self.get(r, c))
+                }
+                Instr::Not { a, .. } => !self.get(r, a),
+                Instr::Maj3 { a, b, c, .. } => {
+                    let (x, y, z) = (self.get(r, a), self.get(r, b), self.get(r, c));
+                    (x & y) | (z & (x | y))
+                }
+                Instr::Copy { a, .. } => self.get(r, a),
+                Instr::Set { bit, .. } => bit,
+            };
+            self.set(r, out, v);
+        }
+        if instr.is_gate() {
+            self.row_gates += self.rows as u64;
+        }
+    }
+
+    /// Execute a whole program, instruction by instruction (each via
+    /// [`ScalarCrossbar::step`], which also accounts row-gates).
+    pub fn execute(&mut self, prog: &Program) {
+        assert!(
+            prog.width() as usize <= self.cols,
+            "program needs {} columns, crossbar has {}",
+            prog.width(),
+            self.cols
+        );
+        for &instr in prog.instrs() {
+            self.step(instr);
+        }
+    }
+
+    /// True when every addressable bit of `packed` equals this oracle's.
+    ///
+    /// Compares through the public bit accessors, so packing padding
+    /// (unaddressable bits past `rows` in the last word of each packed
+    /// column) is excluded by construction.
+    pub fn agrees_with(&self, packed: &Crossbar) -> bool {
+        if self.rows != packed.rows() || self.cols != packed.cols() {
+            return false;
+        }
+        for col in 0..self.cols as Col {
+            for row in 0..self.rows {
+                if self.get(row, col) != packed.get(row, col) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pim::elementwise;
+    use crate::pim::fixed::{self, FixedLayout, FixedOp};
+    use crate::pim::float::{self, FloatLayout};
+    use crate::pim::gates::GateSet;
+    use crate::pim::matpim::{self, MatmulLayout};
+    use crate::pim::softfloat::Format;
+    use crate::util::rng::Rng;
+
+    /// Execute `prog` on both engines from identical operand fields and
+    /// require full bit-identity of the final state.
+    fn assert_engines_agree(
+        prog: &Program,
+        rows: usize,
+        fields: &[(Col, u32, Vec<u64>)],
+    ) {
+        let cols = fields
+            .iter()
+            .map(|(base, bits, _)| base + bits)
+            .max()
+            .unwrap_or(0)
+            .max(prog.width()) as usize;
+        let mut packed = Crossbar::new(rows, cols);
+        let mut oracle = ScalarCrossbar::new(rows, cols);
+        for (base, bits, values) in fields {
+            packed.write_field(*base, *bits, values);
+            oracle.write_field(*base, *bits, values);
+        }
+        assert!(
+            oracle.agrees_with(&packed),
+            "engines disagree after operand load"
+        );
+        packed.execute(prog);
+        oracle.execute(prog);
+        assert!(
+            oracle.agrees_with(&packed),
+            "engines disagree after execution"
+        );
+        assert_eq!(oracle.row_gates(), packed.row_gates(), "gate accounting");
+    }
+
+    #[test]
+    fn fixed_suite_bit_identical() {
+        let mut rng = Rng::new(101);
+        let rows = 100; // not a multiple of 64
+        for set in GateSet::all() {
+            for op in FixedOp::all() {
+                for n in [8u32, 16] {
+                    let prog = fixed::program(op, n, set);
+                    let lay = FixedLayout::new(op, n);
+                    let u = rng.vec_bits(rows, n);
+                    let v: Vec<u64> = match op {
+                        FixedOp::Div => (0..rows).map(|_| 1 + rng.bits(n - 1)).collect(),
+                        _ => rng.vec_bits(rows, n),
+                    };
+                    assert_engines_agree(
+                        &prog,
+                        rows,
+                        &[(lay.u, n, u), (lay.v, n, v)],
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn float_suite_bit_identical() {
+        let mut rng = Rng::new(102);
+        let rows = 72;
+        let fmt = Format::FP16;
+        for set in GateSet::all() {
+            for op in [FixedOp::Add, FixedOp::Mul] {
+                let prog = float::program(op, fmt, set);
+                let lay = FloatLayout::new(fmt);
+                let n = fmt.bits();
+                let u: Vec<u64> =
+                    (0..rows).map(|_| rng.float_pattern(fmt.exp, fmt.man)).collect();
+                let v: Vec<u64> =
+                    (0..rows).map(|_| rng.float_pattern(fmt.exp, fmt.man)).collect();
+                assert_engines_agree(&prog, rows, &[(lay.u, n, u), (lay.v, n, v)]);
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_suite_bit_identical() {
+        let mut rng = Rng::new(103);
+        let lay = MatmulLayout::new(3, 8);
+        let prog = matpim::matmul_program(&lay, GateSet::MemristiveNor);
+        let rows = 9;
+        let mut packed = Crossbar::new(rows, prog.width() as usize);
+        let mut oracle = ScalarCrossbar::new(rows, prog.width() as usize);
+        for r in 0..rows {
+            for k in 0..3 {
+                let a = rng.bits(8);
+                packed.write_value(r, lay.a + (k * 8) as Col, 8, a);
+                oracle.write_value(r, lay.a + (k * 8) as Col, 8, a);
+            }
+            for t in 0..9 {
+                let b = rng.bits(8);
+                packed.write_value(r, lay.b + (t * 8) as Col, 8, b);
+                oracle.write_value(r, lay.b + (t * 8) as Col, 8, b);
+            }
+        }
+        packed.execute(&prog);
+        oracle.execute(&prog);
+        assert!(oracle.agrees_with(&packed));
+    }
+
+    #[test]
+    fn elementwise_relu_bit_identical() {
+        let mut rng = Rng::new(104);
+        let rows = 130;
+        for set in GateSet::all() {
+            let prog = elementwise::relu_fixed_program(16, set);
+            let vals = rng.vec_bits(rows, 16);
+            assert_engines_agree(&prog, rows, &[(0, 16, vals)]);
+        }
+    }
+
+    /// A random column distinct from the excluded ones.
+    fn distinct(rng: &mut Rng, cols: u32, exclude: &[Col]) -> Col {
+        loop {
+            let c = rng.below(cols as u64) as Col;
+            if !exclude.contains(&c) {
+                return c;
+            }
+        }
+    }
+
+    #[test]
+    fn random_programs_bit_identical() {
+        // Adversarial: random gate soup over random columns, including Set
+        // and Copy data movement, on a non-word-aligned row count.
+        let mut rng = Rng::new(105);
+        for _trial in 0..4 {
+            let cols = 24u32;
+            let mut prog = Program::new(GateSet::MemristiveNor);
+            for _ in 0..400 {
+                let instr = match rng.below(6) {
+                    0 => {
+                        let o = distinct(&mut rng, cols, &[]);
+                        let a = distinct(&mut rng, cols, &[o]);
+                        let b = distinct(&mut rng, cols, &[o, a]);
+                        Instr::Nor2 { a, b, out: o }
+                    }
+                    1 => {
+                        let o = distinct(&mut rng, cols, &[]);
+                        let a = distinct(&mut rng, cols, &[o]);
+                        let b = distinct(&mut rng, cols, &[o, a]);
+                        let c = distinct(&mut rng, cols, &[o, a, b]);
+                        Instr::Nor3 { a, b, c, out: o }
+                    }
+                    2 => {
+                        let o = distinct(&mut rng, cols, &[]);
+                        let a = distinct(&mut rng, cols, &[o]);
+                        Instr::Not { a, out: o }
+                    }
+                    3 => {
+                        let o = distinct(&mut rng, cols, &[]);
+                        let a = distinct(&mut rng, cols, &[o]);
+                        let b = distinct(&mut rng, cols, &[o, a]);
+                        let c = distinct(&mut rng, cols, &[o, a, b]);
+                        Instr::Maj3 { a, b, c, out: o }
+                    }
+                    4 => {
+                        let o = distinct(&mut rng, cols, &[]);
+                        let a = distinct(&mut rng, cols, &[o]);
+                        Instr::Copy { a, out: o }
+                    }
+                    _ => {
+                        let o = distinct(&mut rng, cols, &[]);
+                        Instr::Set {
+                            out: o,
+                            bit: rng.bool(),
+                        }
+                    }
+                };
+                prog.push(instr);
+            }
+            let rows = 150;
+            let seed_vals = rng.vec_bits(rows, 24);
+            assert_engines_agree(&prog, rows, &[(0, 24, seed_vals)]);
+        }
+    }
+
+    #[test]
+    fn field_roundtrip_matches_packed_semantics() {
+        // write_field on a partial final block zeroes the same rows the
+        // packed engine zeroes.
+        let mut packed = Crossbar::new(100, 10);
+        let mut oracle = ScalarCrossbar::new(100, 10);
+        for r in 0..100 {
+            packed.set(r, 3, true);
+            oracle.set(r, 3, true);
+        }
+        let vals: Vec<u64> = (0..70).map(|v| v as u64 & 0xFF).collect();
+        packed.write_field(0, 8, &vals);
+        oracle.write_field(0, 8, &vals);
+        assert!(oracle.agrees_with(&packed));
+        assert_eq!(oracle.read_field(0, 8, 70), vals);
+    }
+}

@@ -1,13 +1,100 @@
 //! Bit-packed crossbar state and the column-parallel execution engine.
 //!
 //! The crossbar is an `rows × cols` binary matrix. Storage is
-//! **column-major and bit-packed**: column `j` is `ceil(rows/64)`
+//! **column-major and bit-sliced**: column `j` is `ceil(rows/64)`
 //! consecutive `u64` words, so one column-parallel gate (the O(1)
 //! operation of the abstract PIM model) becomes a short loop of word-wise
-//! bit operations — `rows` simulated row-gates per `words_per_col` CPU ops.
-//! This loop is the simulator's hot path and the target of the §Perf pass.
+//! bit operations — 64 simulated row-gates per CPU word op
+//! (SIMD-within-a-register). This loop is the simulator's hot path and
+//! the target of the §Perf pass.
+//!
+//! On top of the packing, [`Crossbar::execute`] shards the packed
+//! row-words across the process-wide [`Pool`]: every gate instruction is
+//! row-local, so worker `k` can run the *whole program* over its own
+//! disjoint word range `[w0, w1)` of every column with no synchronization
+//! until the end-of-program barrier. Results are bit-identical to the
+//! serial path ([`Crossbar::execute_serial`]) and to the per-row/per-bit
+//! reference oracle in [`crate::pim::oracle`], regardless of thread count.
 
 use super::isa::{Col, Instr, Program};
+use crate::util::pool::Pool;
+
+/// Minimum packed words a shard must own to be worth dispatching
+/// (64 words = 4096 rows).
+const MIN_SHARD_WORDS: usize = 64;
+
+/// Minimum total word-operations (row-words × instructions) before
+/// `execute` shards across the pool; below this, dispatch overhead wins.
+const PAR_MIN_WORD_OPS: usize = 1 << 20;
+
+/// Raw base pointer of the packed column storage, sendable to workers.
+///
+/// Safety of `Send`: shards hand each worker a *disjoint* word range of
+/// every column (see [`Crossbar::execute_sharded`]), so no two threads
+/// ever touch the same word.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut u64);
+unsafe impl Send for SendPtr {}
+
+/// Execute one instruction over the word range `[w0, w1)` of every column,
+/// addressing the packed storage through a raw base pointer so sharded
+/// workers can run without borrowing the `Crossbar`.
+///
+/// # Safety
+///
+/// * `base` must point to a live column-major allocation covering every
+///   column index named by `instr` at `wpc` words per column;
+/// * `w0 <= w1 <= wpc`;
+/// * the output column of `instr` must differ from its input columns
+///   (enforced by `Program::validate_for`, debug-asserted by callers);
+/// * no other thread may concurrently access word indices `[w0, w1)` of
+///   any column.
+#[inline]
+unsafe fn apply_range(base: *mut u64, wpc: usize, instr: Instr, w0: usize, w1: usize) {
+    let len = w1 - w0;
+    let cin = |c: Col| -> *const u64 { unsafe { base.add(c as usize * wpc + w0) } };
+    let cout = |c: Col| -> *mut u64 { unsafe { base.add(c as usize * wpc + w0) } };
+    match instr {
+        Instr::Nor2 { a, b, out } => {
+            let (a, b, o) = (cin(a), cin(b), cout(out));
+            for i in 0..len {
+                *o.add(i) = !(*a.add(i) | *b.add(i));
+            }
+        }
+        Instr::Nor3 { a, b, c, out } => {
+            let (a, b, c, o) = (cin(a), cin(b), cin(c), cout(out));
+            for i in 0..len {
+                *o.add(i) = !(*a.add(i) | *b.add(i) | *c.add(i));
+            }
+        }
+        Instr::Not { a, out } => {
+            let (a, o) = (cin(a), cout(out));
+            for i in 0..len {
+                *o.add(i) = !*a.add(i);
+            }
+        }
+        Instr::Maj3 { a, b, c, out } => {
+            let (a, b, c, o) = (cin(a), cin(b), cin(c), cout(out));
+            for i in 0..len {
+                let (x, y, z) = (*a.add(i), *b.add(i), *c.add(i));
+                *o.add(i) = (x & y) | (z & (x | y));
+            }
+        }
+        Instr::Copy { a, out } => {
+            let (a, o) = (cin(a), cout(out));
+            for i in 0..len {
+                *o.add(i) = *a.add(i);
+            }
+        }
+        Instr::Set { out, bit } => {
+            let o = cout(out);
+            let word = if bit { u64::MAX } else { 0 };
+            for i in 0..len {
+                *o.add(i) = word;
+            }
+        }
+    }
+}
 
 /// A simulated crossbar array.
 #[derive(Clone, Debug)]
@@ -140,32 +227,6 @@ impl Crossbar {
         out
     }
 
-    /// Borrow one input column as a raw slice (no allocation; §Perf: the
-    /// original helper built a `Vec` of slices *per instruction*, which
-    /// dominated short-column programs).
-    #[inline(always)]
-    fn col_in(&self, c: Col) -> &[u64] {
-        let c = c as usize;
-        debug_assert!(c < self.cols);
-        // SAFETY: in-bounds (debug-asserted; columns validated at program
-        // construction) and only aliased immutably.
-        unsafe { std::slice::from_raw_parts(self.data.as_ptr().add(c * self.wpc), self.wpc) }
-    }
-
-    /// Borrow the output column mutably.
-    ///
-    /// SAFETY contract: `out` must differ from every input column of the
-    /// executing instruction (enforced by `Program::validate_for` and
-    /// debug-asserted in `step`).
-    #[inline(always)]
-    fn col_out(&mut self, out: Col) -> &mut [u64] {
-        let o = out as usize;
-        debug_assert!(o < self.cols);
-        unsafe {
-            std::slice::from_raw_parts_mut(self.data.as_mut_ptr().add(o * self.wpc), self.wpc)
-        }
-    }
-
     /// Execute one instruction (column-parallel across all rows).
     #[inline]
     pub fn step(&mut self, instr: Instr) {
@@ -175,152 +236,90 @@ impl Crossbar {
         }
     }
 
-    /// Full-width single-instruction execution (§Perf: kept separate from
-    /// the blocked `step_range` because constant-zero offsets still cost
-    /// ~2x on short columns — LLVM unrolls the fixed-bound loops here).
+    /// Full-width single-instruction execution: the whole column in one
+    /// range (`apply_range` is `#[inline]`, so the constant-zero offset
+    /// folds away at this call site).
     #[inline]
     fn step_full(&mut self, instr: Instr) {
-        match instr {
-            Instr::Nor2 { a, b, out } => {
-                debug_assert!(a != out && b != out);
-                let (a, b) = (self.col_in(a).as_ptr(), self.col_in(b).as_ptr());
-                let o = self.col_out(out);
-                for (i, oi) in o.iter_mut().enumerate() {
-                    // SAFETY: i < wpc; inputs are wpc-word columns.
-                    *oi = unsafe { !(*a.add(i) | *b.add(i)) };
-                }
-            }
-            Instr::Nor3 { a, b, c, out } => {
-                debug_assert!(a != out && b != out && c != out);
-                let (a, b, c) = (
-                    self.col_in(a).as_ptr(),
-                    self.col_in(b).as_ptr(),
-                    self.col_in(c).as_ptr(),
-                );
-                let o = self.col_out(out);
-                for (i, oi) in o.iter_mut().enumerate() {
-                    *oi = unsafe { !(*a.add(i) | *b.add(i) | *c.add(i)) };
-                }
-            }
-            Instr::Not { a, out } => {
-                debug_assert!(a != out);
-                let a = self.col_in(a).as_ptr();
-                let o = self.col_out(out);
-                for (i, oi) in o.iter_mut().enumerate() {
-                    *oi = unsafe { !*a.add(i) };
-                }
-            }
-            Instr::Maj3 { a, b, c, out } => {
-                debug_assert!(a != out && b != out && c != out);
-                let (a, b, c) = (
-                    self.col_in(a).as_ptr(),
-                    self.col_in(b).as_ptr(),
-                    self.col_in(c).as_ptr(),
-                );
-                let o = self.col_out(out);
-                for (i, oi) in o.iter_mut().enumerate() {
-                    let (x, y, z) = unsafe { (*a.add(i), *b.add(i), *c.add(i)) };
-                    *oi = (x & y) | (z & (x | y));
-                }
-            }
-            Instr::Copy { a, out } => {
-                debug_assert!(a != out);
-                let a = self.col_in(a).as_ptr();
-                let o = self.col_out(out);
-                for (i, oi) in o.iter_mut().enumerate() {
-                    *oi = unsafe { *a.add(i) };
-                }
-            }
-            Instr::Set { out, bit } => {
-                self.col_out(out).fill(if bit { u64::MAX } else { 0 });
-            }
-        }
+        self.step_range(instr, 0, self.wpc);
     }
 
     /// Execute one instruction over the word range `[w0, w1)` of every
     /// column (the cache-blocked inner loop; no gate accounting here).
     #[inline]
     fn step_range(&mut self, instr: Instr, w0: usize, w1: usize) {
-        match instr {
-            Instr::Nor2 { a, b, out } => {
-                debug_assert!(a != out && b != out);
-                // SAFETY: offsets < wpc; columns are wpc words long.
-                let (a, b) = unsafe {
-                    (self.col_in(a).as_ptr().add(w0), self.col_in(b).as_ptr().add(w0))
-                };
-                let o = &mut self.col_out(out)[w0..w1];
-                for (i, oi) in o.iter_mut().enumerate() {
-                    *oi = unsafe { !(*a.add(i) | *b.add(i)) };
-                }
-            }
-            Instr::Nor3 { a, b, c, out } => {
-                debug_assert!(a != out && b != out && c != out);
-                let (a, b, c) = unsafe {
-                    (
-                        self.col_in(a).as_ptr().add(w0),
-                        self.col_in(b).as_ptr().add(w0),
-                        self.col_in(c).as_ptr().add(w0),
-                    )
-                };
-                let o = &mut self.col_out(out)[w0..w1];
-                for (i, oi) in o.iter_mut().enumerate() {
-                    *oi = unsafe { !(*a.add(i) | *b.add(i) | *c.add(i)) };
-                }
-            }
-            Instr::Not { a, out } => {
-                debug_assert!(a != out);
-                let a = unsafe { self.col_in(a).as_ptr().add(w0) };
-                let o = &mut self.col_out(out)[w0..w1];
-                for (i, oi) in o.iter_mut().enumerate() {
-                    *oi = unsafe { !*a.add(i) };
-                }
-            }
-            Instr::Maj3 { a, b, c, out } => {
-                debug_assert!(a != out && b != out && c != out);
-                let (a, b, c) = unsafe {
-                    (
-                        self.col_in(a).as_ptr().add(w0),
-                        self.col_in(b).as_ptr().add(w0),
-                        self.col_in(c).as_ptr().add(w0),
-                    )
-                };
-                let o = &mut self.col_out(out)[w0..w1];
-                for (i, oi) in o.iter_mut().enumerate() {
-                    let (x, y, z) = unsafe { (*a.add(i), *b.add(i), *c.add(i)) };
-                    *oi = (x & y) | (z & (x | y));
-                }
-            }
-            Instr::Copy { a, out } => {
-                debug_assert!(a != out);
-                let a = unsafe { self.col_in(a).as_ptr().add(w0) };
-                let o = &mut self.col_out(out)[w0..w1];
-                for (i, oi) in o.iter_mut().enumerate() {
-                    *oi = unsafe { *a.add(i) };
-                }
-            }
-            Instr::Set { out, bit } => {
-                self.col_out(out)[w0..w1].fill(if bit { u64::MAX } else { 0 });
-            }
-        }
+        debug_assert!(!instr.inputs().any(|c| c == instr.out()));
+        debug_assert!(w0 <= w1 && w1 <= self.wpc);
+        // SAFETY: range and columns validated above / by the program; the
+        // &mut receiver guarantees exclusive access to the storage.
+        unsafe { apply_range(self.data.as_mut_ptr(), self.wpc, instr, w0, w1) }
     }
 
-    /// Execute a whole program, cache-blocked over row words.
-    ///
-    /// §Perf: for tall crossbars the working set of a program (width ×
-    /// rows/8 bytes) exceeds cache; running the *whole program* on one
-    /// block of rows before advancing keeps every touched column word
-    /// resident (all gate ops are row-local, so blocking is semantics-
-    /// preserving). Block size targets ~`BLOCK_BYTES` of live columns.
-    pub fn execute(&mut self, prog: &Program) {
+    /// Cache block size: the per-shard working set targeted by the
+    /// row-word blocking (~L2-resident live columns).
+    const BLOCK_BYTES: usize = 256 * 1024;
+
+    /// Words per block for a program of `width` live columns.
+    #[inline]
+    fn words_per_block(prog: &Program) -> usize {
+        let width = (prog.width() as usize).max(1);
+        (Self::BLOCK_BYTES / (8 * width)).max(8)
+    }
+
+    #[inline]
+    fn check_width(&self, prog: &Program) {
         assert!(
             prog.width() as usize <= self.cols,
             "program needs {} columns, crossbar has {}",
             prog.width(),
             self.cols
         );
-        const BLOCK_BYTES: usize = 256 * 1024; // ~L2-resident working set
-        let width = (prog.width() as usize).max(1);
-        let wpb = (BLOCK_BYTES / (8 * width)).max(8);
+    }
+
+    /// Execute a whole program.
+    ///
+    /// Dispatch: large executions (see `should_shard`) shard their packed
+    /// row-words across the process-wide thread pool; small ones run the
+    /// serial cache-blocked loop. Both paths produce bit-identical state —
+    /// every instruction is row-local, so partitioning rows (words) is
+    /// semantics-preserving. Set `CONVPIM_THREADS=1` to force serial
+    /// execution globally.
+    pub fn execute(&mut self, prog: &Program) {
+        self.check_width(prog);
+        let pool = Pool::global();
+        if self.should_shard(prog, pool) {
+            self.execute_sharded(prog, pool);
+        } else {
+            self.execute_blocked(prog);
+        }
+        self.row_gates += prog.gates() * self.rows as u64;
+    }
+
+    /// Execute a whole program on the calling thread only (the reference
+    /// execution path; `execute` is bit-identical to it by construction
+    /// and by the `sharded_execute_matches_serial` test).
+    pub fn execute_serial(&mut self, prog: &Program) {
+        self.check_width(prog);
+        self.execute_blocked(prog);
+        self.row_gates += prog.gates() * self.rows as u64;
+    }
+
+    /// True when sharding the execution across the pool is worthwhile.
+    fn should_shard(&self, prog: &Program, pool: &Pool) -> bool {
+        pool.threads() > 1
+            && self.wpc >= 2 * MIN_SHARD_WORDS
+            && self.wpc.saturating_mul(prog.len()) >= PAR_MIN_WORD_OPS
+    }
+
+    /// The serial path: whole program per cache block of row words.
+    ///
+    /// §Perf: for tall crossbars the working set of a program (width ×
+    /// rows/8 bytes) exceeds cache; running the *whole program* on one
+    /// block of rows before advancing keeps every touched column word
+    /// resident (all gate ops are row-local, so blocking is semantics-
+    /// preserving). Block size targets ~`BLOCK_BYTES` of live columns.
+    fn execute_blocked(&mut self, prog: &Program) {
+        let wpb = Self::words_per_block(prog);
         if self.wpc <= wpb {
             for &instr in prog.instrs() {
                 self.step_full(instr);
@@ -335,7 +334,51 @@ impl Crossbar {
                 w0 = w1;
             }
         }
-        self.row_gates += prog.gates() * self.rows as u64;
+    }
+
+    /// The parallel path: contiguous word-range shards, one pool task per
+    /// shard, each running the whole program (cache-blocked) over its own
+    /// range. No gate accounting here (done by `execute`).
+    fn execute_sharded(&mut self, prog: &Program, pool: &Pool) {
+        // Same structural-hazard check every other execution path carries
+        // (apply_range's safety contract: out differs from every input).
+        debug_assert!(prog
+            .instrs()
+            .iter()
+            .all(|i| !i.inputs().any(|c| c == i.out())));
+        let wpb = Self::words_per_block(prog);
+        let shards = pool.threads().min(self.wpc / MIN_SHARD_WORDS).max(1);
+        let per = self.wpc.div_ceil(shards);
+        let wpc = self.wpc;
+        let instrs = prog.instrs();
+        let base = SendPtr(self.data.as_mut_ptr());
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..shards)
+            .filter_map(|s| {
+                let w0 = s * per;
+                let w1 = ((s + 1) * per).min(wpc);
+                if w0 >= w1 {
+                    return None;
+                }
+                Some(Box::new(move || {
+                    let mut b0 = w0;
+                    while b0 < w1 {
+                        let b1 = (b0 + wpb).min(w1);
+                        for &instr in instrs {
+                            // SAFETY: shard word-ranges are disjoint across
+                            // tasks; every instruction is row-local, so a
+                            // task only touches its own `[b0, b1)` words of
+                            // each column; columns were validated by
+                            // `check_width` and program construction; the
+                            // storage outlives `pool.run` (completion
+                            // barrier below).
+                            unsafe { apply_range(base.0, wpc, instr, b0, b1) };
+                        }
+                        b0 = b1;
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>)
+            })
+            .collect();
+        pool.run(tasks);
     }
 }
 
@@ -428,6 +471,49 @@ mod tests {
         let mut x = Crossbar::new(64, 2);
         x.execute(&p);
         assert!(x.get(13, 1));
+    }
+
+    #[test]
+    fn sharded_execute_matches_serial() {
+        // A program and crossbar big enough to shard meaningfully.
+        let mut rng = Rng::new(77);
+        let cols = 40u32;
+        let mut prog = Program::new(GateSet::MemristiveNor);
+        for i in 0..2400u32 {
+            if i % 97 == 0 {
+                prog.push(Instr::Set {
+                    out: rng.below(cols as u64) as u32,
+                    bit: rng.bool(),
+                });
+                continue;
+            }
+            let a = rng.below(cols as u64) as u32;
+            let mut b = rng.below(cols as u64) as u32;
+            while b == a {
+                b = rng.below(cols as u64) as u32;
+            }
+            let mut o = rng.below(cols as u64) as u32;
+            while o == a || o == b {
+                o = rng.below(cols as u64) as u32;
+            }
+            prog.push(Instr::Nor2 { a, b, out: o });
+        }
+        let rows = 64 * 1024 + 17; // tall, and not word-aligned
+        let mut reference = Crossbar::new(rows, cols as usize);
+        let seed_vals = rng.vec_bits(rows, 32);
+        reference.write_field(0, 32, &seed_vals);
+        let mut sharded = reference.clone();
+        reference.execute_serial(&prog);
+        let pool = Pool::new(4);
+        sharded.execute_sharded(&prog, &pool);
+        assert_eq!(reference.data, sharded.data, "bit-identical across threads");
+
+        // The public entry point agrees too, whichever path it picks.
+        let mut auto = Crossbar::new(rows, cols as usize);
+        auto.write_field(0, 32, &seed_vals);
+        auto.execute(&prog);
+        assert_eq!(reference.data, auto.data);
+        assert_eq!(reference.row_gates(), auto.row_gates());
     }
 
     #[test]

@@ -1,0 +1,168 @@
+//! Stub PJRT engine for builds without the `pjrt` feature.
+//!
+//! Mirrors the public API of [`engine`](../engine.rs) exactly — same types,
+//! same signatures — but [`Engine::new`] always fails with an explanatory
+//! error, so the coordinator, examples and integration tests take their
+//! graceful "artifacts unavailable" paths. This keeps the crate buildable
+//! in the offline environment (the real engine needs the external `xla`
+//! crate) without `cfg` noise at any call site.
+
+use anyhow::{anyhow, Result};
+
+use super::artifact::{ArtifactSpec, Manifest};
+use crate::util::stats::Summary;
+
+const UNAVAILABLE: &str =
+    "convpim was built without the `pjrt` feature; measured series unavailable \
+     (analytic models still run)";
+
+/// Typed host tensor data for engine I/O.
+#[derive(Clone, Debug)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+impl TensorData {
+    /// Element count.
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+            TensorData::U32(v) => v.len(),
+        }
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Borrow as f32 (panics on type mismatch — engine outputs are typed
+    /// by the artifact).
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            TensorData::F32(v) => v,
+            other => panic!("expected f32 tensor, got {other:?}"),
+        }
+    }
+
+    /// Borrow as u32.
+    pub fn as_u32(&self) -> &[u32] {
+        match self {
+            TensorData::U32(v) => v,
+            other => panic!("expected u32 tensor, got {other:?}"),
+        }
+    }
+}
+
+/// One compiled artifact, ready to execute. Never constructed by the stub.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    _unconstructible: (),
+}
+
+/// Timing result of a repeated execution.
+#[derive(Clone, Debug)]
+pub struct TimedRun {
+    pub name: String,
+    pub secs: Summary,
+}
+
+impl TimedRun {
+    /// Median wall-clock seconds per execution.
+    pub fn median_secs(&self) -> f64 {
+        self.secs.median
+    }
+}
+
+impl Executable {
+    /// Execute with typed inputs; always fails in the stub.
+    pub fn run(&self, _inputs: &[TensorData]) -> Result<Vec<TensorData>> {
+        Err(anyhow!("{UNAVAILABLE}"))
+    }
+
+    /// Execute repeatedly with timing; always fails in the stub.
+    pub fn timed(&self, _inputs: &[TensorData], _iters: usize) -> Result<TimedRun> {
+        Err(anyhow!("{UNAVAILABLE}"))
+    }
+
+    /// Synthesize deterministic inputs matching the artifact's specs
+    /// (identical to the real engine's implementation).
+    pub fn synth_inputs(&self, seed: u64) -> Vec<TensorData> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        self.spec
+            .inputs
+            .iter()
+            .map(|s| {
+                let n = s.elements();
+                match s.dtype.as_str() {
+                    "int32" => TensorData::I32((0..n).map(|_| rng.below(10) as i32).collect()),
+                    "uint32" => TensorData::U32((0..n).map(|_| rng.next_u32()).collect()),
+                    _ => TensorData::F32((0..n).map(|_| rng.f32_range(-1.0, 1.0)).collect()),
+                }
+            })
+            .collect()
+    }
+}
+
+/// The stub engine. [`Engine::new`] always fails, so values of this type
+/// never exist at runtime; the struct and its methods only keep call sites
+/// type-checking identically to the real engine.
+pub struct Engine {
+    manifest: Manifest,
+}
+
+impl Engine {
+    /// Always fails: the `pjrt` feature (and the `xla` crate) is required
+    /// for measured execution.
+    pub fn new() -> Result<Engine> {
+        Err(anyhow!("{UNAVAILABLE}"))
+    }
+
+    /// Always fails (see [`Engine::new`]).
+    pub fn with_dir(_dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        Err(anyhow!("{UNAVAILABLE}"))
+    }
+
+    /// The manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name.
+    pub fn platform(&self) -> String {
+        "unavailable (pjrt feature disabled)".to_string()
+    }
+
+    /// Load an artifact by name; always fails in the stub.
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        Err(anyhow!(
+            "cannot load artifact `{name}`: {UNAVAILABLE}"
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_engine_reports_unavailable() {
+        let err = Engine::new().err().expect("stub must fail");
+        assert!(format!("{err}").contains("pjrt"));
+        let err = Engine::with_dir("artifacts").err().expect("stub must fail");
+        assert!(format!("{err}").contains("pjrt"));
+    }
+
+    #[test]
+    fn tensor_data_accessors() {
+        let t = TensorData::F32(vec![1.0, 2.0]);
+        assert_eq!(t.len(), 2);
+        assert!(!t.is_empty());
+        assert_eq!(t.as_f32(), &[1.0, 2.0]);
+        let u = TensorData::U32(vec![7]);
+        assert_eq!(u.as_u32(), &[7]);
+    }
+}

@@ -10,6 +10,15 @@
 //! (the Pallas crossbar kernel vs the native simulator, bit for bit).
 
 pub mod artifact;
+
+// The real engine needs the external `xla` crate (PJRT bindings), which the
+// offline registry does not carry. Without the `pjrt` feature a stub with
+// the identical API compiles instead: `Engine::new()` reports that measured
+// execution is unavailable and every caller degrades to the analytic path.
+#[cfg(feature = "pjrt")]
+pub mod engine;
+#[cfg(not(feature = "pjrt"))]
+#[path = "engine_stub.rs"]
 pub mod engine;
 
 pub use artifact::{ArtifactSpec, Manifest, TensorSpec};

@@ -94,7 +94,10 @@ impl Args {
 
 /// Flags that never take a value even when followed by a bare token.
 fn is_switch(name: &str) -> bool {
-    matches!(name, "help" | "verbose" | "quiet" | "fast" | "markdown" | "csv" | "json")
+    matches!(
+        name,
+        "help" | "verbose" | "quiet" | "fast" | "markdown" | "csv" | "json" | "no-measure"
+    )
 }
 
 #[cfg(test)]
@@ -125,6 +128,15 @@ mod tests {
         let a = parse(&["run", "--verbose", "fig5"]);
         assert!(a.switch("verbose"));
         assert_eq!(a.positional, vec!["fig5"]);
+    }
+
+    #[test]
+    fn no_measure_does_not_swallow_positional() {
+        // Regression: `--no-measure` is a switch, so an experiment id after
+        // it must stay positional instead of becoming the flag's value.
+        let a = parse(&["run", "--no-measure", "fig3"]);
+        assert!(a.switch("no-measure"));
+        assert_eq!(a.positional, vec!["fig3"]);
     }
 
     #[test]

@@ -11,11 +11,14 @@
 //! * [`bench`] — a micro-benchmark harness (warmup + timed iterations with
 //!   median/min/mean) used by every `cargo bench` target.
 //! * [`cli`] — a small subcommand/flag parser for the `convpim` binary.
+//! * [`pool`] — a hand-rolled thread pool (no `rayon`) backing the sharded
+//!   crossbar engine and the parallel experiment runner.
 //! * [`stats`] — summary statistics shared by bench and report code.
 
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod rng;
 pub mod stats;
 pub mod table;

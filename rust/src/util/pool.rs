@@ -1,0 +1,328 @@
+//! A hand-rolled thread pool (the offline registry has no `rayon`).
+//!
+//! The pool backs the two parallel layers of the simulator:
+//!
+//! * [`crate::pim::xbar::Crossbar::execute`] shards packed row-words of a
+//!   crossbar across workers (data parallelism inside one experiment);
+//! * [`crate::coordinator::run_many`] runs independent experiments
+//!   concurrently (task parallelism across experiments).
+//!
+//! Design: a fixed set of worker threads popping boxed jobs from one
+//! shared FIFO. [`Pool::run`] submits a batch of borrowed closures and
+//! blocks until *that batch* completes; while blocked, the submitting
+//! thread **helps** by popping queued jobs itself. Caller-helping makes
+//! nested `run` calls deadlock-free (an experiment running on the pool can
+//! itself shard crossbar work onto the same pool), which is why this is a
+//! completion-barrier API rather than a future-returning one.
+//!
+//! Scoped borrows: jobs may capture non-`'static` references. Soundness
+//! follows from the barrier — `run` does not return until every job of the
+//! batch has finished, so no job outlives the borrows it captured (the
+//! same argument as `std::thread::scope`).
+//!
+//! ```
+//! use convpim::util::pool::Pool;
+//!
+//! let pool = Pool::new(2);
+//! let mut out = vec![0usize; 8];
+//! let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = out
+//!     .iter_mut()
+//!     .enumerate()
+//!     .map(|(i, slot)| Box::new(move || *slot = i * i) as Box<dyn FnOnce() + Send + '_>)
+//!     .collect();
+//! pool.run(tasks);
+//! assert_eq!(out[7], 49);
+//! ```
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Duration;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    /// Signalled when a job is pushed or shutdown begins.
+    job_ready: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// Completion state of one `run` batch.
+struct Batch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    /// First panic payload from a job of this batch, re-raised by `run`.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send + 'static>>>,
+}
+
+/// A fixed-size worker pool executing boxed jobs from a shared queue.
+pub struct Pool {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    threads: usize,
+}
+
+impl Pool {
+    /// Spawn a pool with `threads` workers (clamped to at least 1).
+    pub fn new(threads: usize) -> Pool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            job_ready: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let workers = (0..threads)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("convpim-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        Pool {
+            shared,
+            workers,
+            threads,
+        }
+    }
+
+    /// The process-wide pool. Sized by `CONVPIM_THREADS` when set (a value
+    /// of `1` disables parallelism), otherwise by the machine's available
+    /// parallelism.
+    pub fn global() -> &'static Pool {
+        static GLOBAL: OnceLock<Pool> = OnceLock::new();
+        GLOBAL.get_or_init(|| {
+            let threads = std::env::var("CONVPIM_THREADS")
+                .ok()
+                .and_then(|v| v.parse::<usize>().ok())
+                .unwrap_or_else(|| {
+                    std::thread::available_parallelism()
+                        .map(|n| n.get())
+                        .unwrap_or(1)
+                });
+            Pool::new(threads)
+        })
+    }
+
+    /// Number of worker threads.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Execute a batch of jobs and block until all of them have finished.
+    ///
+    /// The calling thread participates: while waiting it pops and runs
+    /// queued jobs (its own batch's or any other), so `run` may be called
+    /// from inside a pool job without deadlocking. Panics if any job of
+    /// the batch panicked (after the whole batch has drained).
+    pub fn run<'env>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        if tasks.is_empty() {
+            return;
+        }
+        let batch = Arc::new(Batch {
+            remaining: Mutex::new(tasks.len()),
+            done: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        for task in tasks {
+            // SAFETY: `run` blocks below until `remaining` reaches zero,
+            // i.e. until this job has executed (or the process aborts), so
+            // the closure never outlives the `'env` borrows it captures.
+            // This is the completion-barrier argument of std::thread::scope.
+            let task: Box<dyn FnOnce() + Send + 'static> = unsafe { std::mem::transmute(task) };
+            let batch = Arc::clone(&batch);
+            let job: Job = Box::new(move || {
+                if let Err(payload) =
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(task))
+                {
+                    let mut slot = batch.panic.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(payload);
+                    }
+                }
+                let mut remaining = batch.remaining.lock().unwrap();
+                *remaining -= 1;
+                if *remaining == 0 {
+                    batch.done.notify_all();
+                }
+            });
+            {
+                let mut queue = self.shared.queue.lock().unwrap();
+                queue.push_back(job);
+            }
+            self.shared.job_ready.notify_one();
+        }
+
+        // Help until the batch drains. The timed wait only bounds how long
+        // we go without re-checking the queue for help opportunities; batch
+        // completion itself is signalled via `done`.
+        loop {
+            if *batch.remaining.lock().unwrap() == 0 {
+                break;
+            }
+            // Help from the *back* of the queue: the newest jobs are most
+            // likely this batch's own (just pushed above), so a thread
+            // waiting on a small batch of short shard tasks preferentially
+            // drains those instead of inlining a long job queued earlier
+            // by an unrelated batch. Workers drain FIFO from the front.
+            let job = self.shared.queue.lock().unwrap().pop_back();
+            match job {
+                Some(job) => job(),
+                None => {
+                    let remaining = batch.remaining.lock().unwrap();
+                    if *remaining == 0 {
+                        break;
+                    }
+                    let _unused = batch
+                        .done
+                        .wait_timeout(remaining, Duration::from_millis(1))
+                        .unwrap();
+                }
+            }
+        }
+        // Re-raise the first job panic with its original payload, so the
+        // caller sees the real assertion message, not a generic one.
+        let payload = batch.panic.lock().unwrap().take();
+        if let Some(payload) = payload {
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.job_ready.notify_all();
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut queue = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = queue.pop_front() {
+                    break Some(job);
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    break None;
+                }
+                queue = shared.job_ready.wait(queue).unwrap();
+            }
+        };
+        match job {
+            Some(job) => job(),
+            None => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn boxed<'env, F: FnOnce() + Send + 'env>(f: F) -> Box<dyn FnOnce() + Send + 'env> {
+        Box::new(f)
+    }
+
+    #[test]
+    fn runs_all_tasks_with_borrows() {
+        let pool = Pool::new(4);
+        let mut out = vec![0u64; 100];
+        let tasks: Vec<_> = out
+            .iter_mut()
+            .enumerate()
+            .map(|(i, slot)| boxed(move || *slot = i as u64 + 1))
+            .collect();
+        pool.run(tasks);
+        assert!(out.iter().enumerate().all(|(i, &v)| v == i as u64 + 1));
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let pool = Pool::new(1);
+        pool.run(Vec::new());
+    }
+
+    #[test]
+    fn single_thread_pool_still_completes() {
+        let pool = Pool::new(1);
+        let counter = AtomicUsize::new(0);
+        let tasks: Vec<_> = (0..16)
+            .map(|_| boxed(|| {
+                counter.fetch_add(1, Ordering::SeqCst);
+            }))
+            .collect();
+        pool.run(tasks);
+        assert_eq!(counter.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn nested_run_does_not_deadlock() {
+        // Outer tasks saturate every worker, then each submits an inner
+        // batch to the same pool; caller-helping must drain them.
+        let pool = Arc::new(Pool::new(2));
+        let total = Arc::new(AtomicUsize::new(0));
+        let tasks: Vec<_> = (0..4)
+            .map(|_| {
+                let pool = Arc::clone(&pool);
+                let total = Arc::clone(&total);
+                boxed(move || {
+                    let inner: Vec<_> = (0..8)
+                        .map(|_| {
+                            let total = Arc::clone(&total);
+                            boxed(move || {
+                                total.fetch_add(1, Ordering::SeqCst);
+                            })
+                        })
+                        .collect();
+                    pool.run(inner);
+                })
+            })
+            .collect();
+        pool.run(tasks);
+        assert_eq!(total.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "inner failure")]
+    fn propagates_task_panics() {
+        let pool = Pool::new(2);
+        let tasks: Vec<_> = (0..4)
+            .map(|i| boxed(move || {
+                if i == 2 {
+                    panic!("inner failure");
+                }
+            }))
+            .collect();
+        pool.run(tasks);
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_sized() {
+        let a = Pool::global();
+        let b = Pool::global();
+        assert!(std::ptr::eq(a, b));
+        assert!(a.threads() >= 1);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = Pool::new(3);
+        let counter = AtomicUsize::new(0);
+        let tasks: Vec<_> = (0..9)
+            .map(|_| boxed(|| {
+                counter.fetch_add(1, Ordering::SeqCst);
+            }))
+            .collect();
+        pool.run(tasks);
+        drop(pool);
+        assert_eq!(counter.load(Ordering::SeqCst), 9);
+    }
+}
