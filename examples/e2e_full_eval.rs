@@ -12,7 +12,7 @@
 //!    `results/`.
 //!
 //! Run with: `cargo run --release --example e2e_full_eval`
-//! (recorded in EXPERIMENTS.md §E2E).
+//! (recorded in docs/EXPERIMENTS.md §E2E).
 
 use convpim::coordinator::{self, report, Ctx};
 use convpim::pim::fixed::{self, FixedLayout, FixedOp};

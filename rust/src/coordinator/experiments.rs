@@ -9,8 +9,9 @@ use crate::metrics;
 use crate::pim::arch::PimArch;
 use crate::pim::fixed::FixedOp;
 use crate::pim::gates::GateSet;
-use crate::pim::matpim::{CnnPimModel, MatmulModel, NumFmt};
+use crate::pim::matpim::{CnnPimModel, NumFmt};
 use crate::pim::softfloat::Format;
+use crate::sweep::{Campaign, PointResult};
 use crate::util::json::Json;
 use crate::util::si;
 use crate::util::table::Table;
@@ -49,6 +50,32 @@ fn measured_secs(ctx: &mut Ctx, name: &str) -> Option<f64> {
 
 fn na_or(x: Option<f64>, f: impl Fn(f64) -> String) -> String {
     x.map(f).unwrap_or_else(|| "n/a".into())
+}
+
+/// Evaluate a builtin sweep campaign into its point results, failing fast
+/// on the first broken point (campaigns here are small and analytic).
+fn sweep_results(campaign: &Campaign) -> Result<Vec<PointResult>> {
+    campaign.points().iter().map(|p| p.eval()).collect()
+}
+
+/// Pick one cell of an evaluated campaign grid. Panics if the cell is
+/// missing — for builtin campaigns that is an internal invariant, not an
+/// input condition.
+fn sweep_cell<'a>(
+    results: &'a [PointResult],
+    arch: &str,
+    format: &str,
+    workload: &str,
+    gpu_mode: &str,
+) -> &'a PointResult {
+    results
+        .iter()
+        .find(|r| {
+            r.arch == arch && r.format == format && r.workload == workload && r.gpu_mode == gpu_mode
+        })
+        .unwrap_or_else(|| {
+            panic!("builtin campaign is missing cell ({arch}, {format}, {workload}, {gpu_mode})")
+        })
 }
 
 // ---------------------------------------------------------------------------
@@ -231,7 +258,7 @@ pub(crate) fn fig3_for(
     )];
     notes.push(
         "re-derived microcode cycle counts reproduce fixed-point anchors exactly and FP anchors \
-         within ~2x (our circuits are not AritPIM's hand-optimized ones); see EXPERIMENTS.md F3"
+         within ~2x (our circuits are not AritPIM's hand-optimized ones); see docs/EXPERIMENTS.md §F3"
             .into(),
     );
 
@@ -264,36 +291,34 @@ pub(crate) fn fig3_for(
 // ---------------------------------------------------------------------------
 
 /// Figure 4: compute complexity vs improvement over the memory-bound GPU.
+///
+/// Delegates to the sweep engine: the figure *is* the builtin `fig4`
+/// campaign (formats × ops, memristive PIM vs the experimental A6000)
+/// rendered as one table — `convpim sweep fig4` streams the same points
+/// as CSV/JSONL (docs/EXPERIMENTS.md §F4). Both paths evaluate cells
+/// through [`metrics::cc_point`], so the numbers are identical by
+/// construction.
 pub fn fig4(ctx: &mut Ctx) -> Result<ExperimentResult> {
     let _ = ctx;
-    let arch = PimArch::paper(GateSet::MemristiveNor);
-    let gpu = Roofline::new(GpuSpec::a6000());
-    let formats = [
-        NumFmt::Fixed(8),
-        NumFmt::Fixed(16),
-        NumFmt::Fixed(32),
-        NumFmt::Float(Format::FP16),
-        NumFmt::Float(Format::FP32),
-        NumFmt::Float(Format::FP64),
-    ];
-    let ops = FixedOp::all();
-    let pts = metrics::cc_sweep(GateSet::MemristiveNor, &arch, &gpu, &formats, &ops);
-    let mut sorted = pts.clone();
+    let campaign = Campaign::builtin("fig4").expect("builtin fig4 exists");
+    let mut sorted = sweep_results(&campaign)?;
     sorted.sort_by(|a, b| a.cc.partial_cmp(&b.cc).unwrap());
 
     let mut t = Table::new(&["operation", "CC (gates/bit)", "PIM TOPS", "exp GPU TOPS", "improvement"]);
     let mut json_rows = Vec::new();
     for p in &sorted {
+        let op = format!("{} {}", p.format, p.workload.trim_start_matches("elementwise-"));
+        let cc = p.cc.expect("elementwise points carry CC");
         t.row(vec![
-            format!("{} {}", p.fmt.name(), p.op.name()),
-            format!("{:.1}", p.cc),
-            tops(p.pim_ops),
-            tops(p.gpu_ops),
+            op.clone(),
+            format!("{cc:.1}"),
+            tops(p.pim),
+            tops(p.gpu_tp),
             format!("{:.1}x", p.improvement()),
         ]);
         json_rows.push(Json::obj(vec![
-            ("op", Json::s(format!("{} {}", p.fmt.name(), p.op.name()))),
-            ("cc", Json::n(p.cc)),
+            ("op", Json::s(op)),
+            ("cc", Json::n(cc)),
             ("improvement", Json::n(p.improvement())),
         ]));
     }
@@ -311,6 +336,9 @@ pub fn fig4(ctx: &mut Ctx) -> Result<ExperimentResult> {
             improvements.len() - 1
         ),
         "paper: 16- and 32-bit addition share CC=3 (latency linear in N); multiplication CC grows ~2.5N"
+            .into(),
+        "generated by the sweep engine (campaign `fig4`): `convpim sweep fig4` streams these \
+         points as CSV/JSONL with result caching — docs/EXPERIMENTS.md §F4"
             .into(),
     ];
 
@@ -331,11 +359,14 @@ pub fn fig4(ctx: &mut Ctx) -> Result<ExperimentResult> {
 // ---------------------------------------------------------------------------
 
 /// Figure 5: batched n×n fp32 matrix multiplication across systems.
+///
+/// The paper-scale table delegates to the sweep engine (builtin `fig5`
+/// campaign: n × {memristive, dram} × {experimental, theoretical A6000});
+/// the measured testbed series below still runs through `ctx`. See
+/// docs/EXPERIMENTS.md §F5.
 pub fn fig5(ctx: &mut Ctx) -> Result<ExperimentResult> {
-    let gpu = Roofline::new(GpuSpec::a6000());
-    let m_arch = PimArch::paper(GateSet::MemristiveNor);
-    let d_arch = PimArch::paper(GateSet::DramMaj);
-    let fmt = NumFmt::Float(Format::FP32);
+    let campaign = Campaign::builtin("fig5").expect("builtin fig5 exists");
+    let results = sweep_results(&campaign)?;
 
     let mut t = Table::new(&[
         "n",
@@ -348,33 +379,34 @@ pub fn fig5(ctx: &mut Ctx) -> Result<ExperimentResult> {
     ]);
     let mut json_rows = Vec::new();
     let mut crossover: Option<u64> = None;
-    for n in [8u64, 16, 32, 64, 128, 256] {
-        let mm_m = MatmulModel::new(n, fmt, GateSet::MemristiveNor, m_arch.cols);
-        let mm_d = MatmulModel::new(n, fmt, GateSet::DramMaj, d_arch.cols);
-        let pim = mm_m.throughput(&m_arch);
-        let dram = mm_d.throughput(&d_arch);
-        let exp = gpu.matmul_throughput(n, GpuDtype::F32);
-        let theo = gpu.matmul_throughput_peak(n, GpuDtype::F32);
-        let pim_w = mm_m.throughput_per_watt(&m_arch);
-        let exp_w = gpu.per_watt(exp);
+    // The n-list lives in one place: the campaign's workload axis.
+    for w in &campaign.workloads {
+        let crate::sweep::WorkloadSpec::Matmul(n) = *w else {
+            continue; // builtin fig5 is matmul-only
+        };
+        let wl = w.name();
+        let mem = sweep_cell(&results, "memristive", "fp32", &wl, "experimental");
+        let dram = sweep_cell(&results, "dram", "fp32", &wl, "experimental");
+        let theo = sweep_cell(&results, "memristive", "fp32", &wl, "theoretical");
+        let (pim, exp, pim_w, exp_w) = (mem.pim, mem.gpu_tp, mem.pim_per_watt, mem.gpu_per_watt);
         if crossover.is_none() && exp_w > pim_w {
             crossover = Some(n);
         }
         t.row(vec![
             n.to_string(),
             eng3(pim),
-            eng3(dram),
+            eng3(dram.pim),
             eng3(exp),
-            eng3(theo),
+            eng3(theo.gpu_tp),
             eng3(pim_w),
             eng3(exp_w),
         ]);
         json_rows.push(Json::obj(vec![
             ("n", Json::i(n as i64)),
             ("memristive", Json::n(pim)),
-            ("dram", Json::n(dram)),
+            ("dram", Json::n(dram.pim)),
             ("gpu_exp", Json::n(exp)),
-            ("gpu_theo", Json::n(theo)),
+            ("gpu_theo", Json::n(theo.gpu_tp)),
         ]));
     }
 
@@ -738,11 +770,15 @@ pub fn sens_fp16(ctx: &mut Ctx) -> Result<ExperimentResult> {
 }
 
 /// S3: PIM parallelism (crossbar dimension sweep).
+///
+/// Delegates to the sweep engine: the builtin `sens-dims` campaign puts
+/// six crossbar geometries on the architecture axis and picks the
+/// (fixed32 elementwise-add, fp32 ResNet-50) cells of the grid. See
+/// docs/EXPERIMENTS.md §S3.
 pub fn sens_dims(ctx: &mut Ctx) -> Result<ExperimentResult> {
     let _ = ctx;
-    let fmt = NumFmt::Float(Format::FP32);
-    let add32 = NumFmt::Fixed(32).program(FixedOp::Add, GateSet::MemristiveNor);
-    let resnet = crate::workloads::models::resnet50();
+    let campaign = Campaign::builtin("sens-dims").expect("builtin sens-dims exists");
+    let results = sweep_results(&campaign)?;
     let mut t = Table::new(&[
         "crossbar (rows x cols)",
         "total rows R",
@@ -750,17 +786,17 @@ pub fn sens_dims(ctx: &mut Ctx) -> Result<ExperimentResult> {
         "ResNet-50 img/s",
         "max power W",
     ]);
-    let mut configs: Vec<(u64, u64)> = vec![(256, 1024), (1024, 1024), (4096, 1024), (65536, 1024)];
-    configs.push((1024, 512));
-    configs.push((1024, 2048));
-    for (rows, cols) in configs {
-        let arch = PimArch::with_dims(GateSet::MemristiveNor, rows, cols);
-        let cnn = CnnPimModel::new(fmt, GateSet::MemristiveNor, resnet.total_macs());
+    for spec in &campaign.archs {
+        let (rows, cols) = spec.dims.expect("sens-dims archs carry explicit dims");
+        let name = spec.name();
+        let add = sweep_cell(&results, &name, "fixed32", "elementwise-add", "experimental");
+        let cnn = sweep_cell(&results, &name, "fp32", "cnn-resnet50", "experimental");
+        let arch = spec.arch();
         t.row(vec![
             format!("{rows}x{cols}"),
             eng3(arch.total_rows() as f64),
-            tops(arch.throughput(&add32)),
-            format!("{:.0}", cnn.throughput(&arch)),
+            tops(add.pim),
+            format!("{:.0}", cnn.pim),
             format!("{:.0}", arch.max_power_w),
         ]);
     }
@@ -774,6 +810,9 @@ pub fn sens_dims(ctx: &mut Ctx) -> Result<ExperimentResult> {
         notes: vec![
             "R = mem_bits / cols is row-count invariant: taller crossbars do not add parallelism \
              at fixed memory size; narrower columns do (but cap the row bit-field)"
+                .into(),
+            "generated by the sweep engine (campaign `sens-dims`); `convpim sweep sens-dims` \
+             streams the full grid — docs/EXPERIMENTS.md §S3"
                 .into(),
         ],
         json: Json::obj(vec![]),

@@ -232,6 +232,21 @@ mod tests {
     }
 
     #[test]
+    fn run_many_failure_preserves_completed_results() {
+        // Regression for the PR 1 fix: a failing experiment in a parallel
+        // batch must yield an Err in *its own slot* while every other
+        // experiment's completed result is still returned, in input order.
+        let ids: Vec<String> = vec!["fig4".into(), "fig99-injected".into(), "table1".into()];
+        let pool = crate::util::pool::Pool::new(2);
+        let results = run_many(&ids, &Ctx::analytic, &pool);
+        assert_eq!(results.len(), 3);
+        assert_eq!(results[0].as_ref().unwrap().id, "fig4");
+        let err = results[1].as_ref().err().expect("unknown id must fail");
+        assert!(format!("{err:#}").contains("fig99-injected"));
+        assert_eq!(results[2].as_ref().unwrap().id, "table1");
+    }
+
+    #[test]
     fn run_many_is_ordered_and_deterministic() {
         let ids: Vec<String> = all_ids().iter().map(|s| s.to_string()).collect();
         let pool = crate::util::pool::Pool::new(4);

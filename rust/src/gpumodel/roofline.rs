@@ -16,7 +16,7 @@ pub struct Roofline {
     /// Small-kernel launch/occupancy efficiency knee for batched matmul
     /// (elements); eff(n) = n²/(n² + knee). Calibrated so the Figure 5
     /// exp-vs-theoretical gap matches the paper's shape (large at n=32,
-    /// small at n=128). See EXPERIMENTS.md F5 for the measured-XLA
+    /// small at n=128). See docs/EXPERIMENTS.md §F5 for the measured-XLA
     /// cross-check of this shape.
     pub launch_knee: f64,
 }

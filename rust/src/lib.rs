@@ -28,6 +28,11 @@
 //!   (gates/bit), data reuse, throughput, and energy efficiency.
 //! * [`coordinator`] — the experiment registry and runner that regenerates
 //!   every table and figure of the paper, and the report generator.
+//! * [`sweep`] — the declarative sweep-campaign engine: grids over
+//!   (architecture × format × workload × GPU baseline) expanded into
+//!   work-lists, executed concurrently with deterministic ordering, a
+//!   content-addressed on-disk result cache, and streaming CSV/JSONL
+//!   reporters. The `fig4`/`fig5`/`sens-dims` experiments delegate to it.
 //! * [`runtime`] — the PJRT runtime that loads the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) and executes them from Rust; Python
 //!   never runs at experiment time. Needs the `pjrt` cargo feature (and
@@ -77,6 +82,7 @@ pub mod gpumodel;
 pub mod metrics;
 pub mod pim;
 pub mod runtime;
+pub mod sweep;
 pub mod util;
 pub mod workloads;
 

@@ -5,15 +5,20 @@
 //! * `run [ids…|all] [--out results] [--fast] [--no-measure]` — execute
 //!   experiments (paper tables/figures + sensitivity studies) and write
 //!   reports.
+//! * `sweep <campaign.json|builtin>` — expand a declarative sweep
+//!   campaign (builtin `fig4`/`fig5`/`sens-dims` or a JSON grid file)
+//!   into points, execute them concurrently with content-addressed
+//!   result caching, and stream table/CSV/JSONL output.
 //! * `validate [--rows N] [--seed S]` — bit-exact validation sweep of the
 //!   arithmetic microcode on the crossbar simulator.
 //! * `info` — system inventory: Table 1 parameters, artifact manifest,
 //!   PJRT platform.
-//! * `list` — available experiment ids.
+//! * `list` — available experiment ids and builtin sweep campaigns.
 
 use std::path::PathBuf;
 use std::process::ExitCode;
 
+use anyhow::Context as _;
 use convpim::coordinator::{self, report, Ctx};
 use convpim::pim::fixed::{self, FixedLayout, FixedOp};
 use convpim::pim::float::{self, FloatLayout};
@@ -21,6 +26,7 @@ use convpim::pim::gates::GateSet;
 use convpim::pim::softfloat::{self, Format};
 use convpim::pim::xbar::Crossbar;
 use convpim::runtime::Engine;
+use convpim::sweep::{self, Campaign, OutputFormat, ResultCache, Streamer};
 use convpim::util::cli::Args;
 use convpim::util::pool::Pool;
 use convpim::util::rng::Rng;
@@ -31,6 +37,8 @@ through a Case Study on CNN Acceleration` (ConvPIM)
 
 USAGE:
   convpim run [ids...|all] [--out DIR] [--fast] [--no-measure] [--seed N] [--jobs N]
+  convpim sweep <campaign.json|builtin> [--jobs N] [--format table|csv|jsonl]
+                [--no-cache] [--cache-dir DIR] [--out FILE]
   convpim validate [--rows N] [--seed N]
   convpim info
   convpim list
@@ -43,7 +51,15 @@ and bit-exact output is identical in every mode; wall-clock *measured*
 series (pjrt builds with artifacts) are timing-sensitive — use
 CONVPIM_THREADS=1 when measuring.
 
+`sweep` expands a declarative campaign — a grid over PIM architectures,
+number formats, workloads and GPU baselines — into points and executes
+them concurrently with deterministic, input-ordered streaming output.
+Results are cached content-addressed under --cache-dir (default
+target/sweep-cache), so an unchanged re-run recomputes nothing; --no-cache
+bypasses the cache. Campaign JSON schema: docs/EXPERIMENTS.md SWEEP.
+
 EXPERIMENTS: table1 fig3 fig4 fig5 fig6 fig7 fig8 sens-gpu sens-fp16 sens-dims
+SWEEP CAMPAIGNS (builtin): fig4 fig5 sens-dims
 ";
 
 fn main() -> ExitCode {
@@ -60,11 +76,15 @@ fn main() -> ExitCode {
     }
     let result = match args.command.as_deref().unwrap() {
         "run" => cmd_run(&args),
+        "sweep" => cmd_sweep(&args),
         "validate" => cmd_validate(&args),
         "info" => cmd_info(),
         "list" => {
             for id in coordinator::all_ids() {
                 println!("{id}");
+            }
+            for name in Campaign::builtin_names() {
+                println!("sweep:{name}");
             }
             Ok(())
         }
@@ -157,6 +177,122 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     }
     report::write_report(&out, &results)?;
     eprintln!("wrote {} experiment(s) to {}", results.len(), out.display());
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+/// Expand a campaign (builtin name or JSON file) and execute it with
+/// caching and streaming output.
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    let Some(spec) = args.positional.first() else {
+        anyhow::bail!(
+            "sweep needs a campaign: a builtin name ({}) or a path to a campaign .json \
+             (schema: docs/EXPERIMENTS.md SWEEP)",
+            Campaign::builtin_names().join(", ")
+        );
+    };
+    let campaign = match Campaign::builtin(spec) {
+        Some(c) => c,
+        None => {
+            let text = std::fs::read_to_string(spec).with_context(|| {
+                format!(
+                    "reading campaign `{spec}` (not a builtin; builtins: {})",
+                    Campaign::builtin_names().join(", ")
+                )
+            })?;
+            Campaign::from_json_text(&text)
+                .map_err(|e| e.context(format!("parsing campaign file `{spec}`")))?
+        }
+    };
+    let format = OutputFormat::parse(args.flag("format", "table")).map_err(anyhow::Error::msg)?;
+    let jobs = args.flag_usize("jobs", 0).map_err(anyhow::Error::msg)?;
+    let jobs = if jobs == 0 {
+        Pool::global().threads()
+    } else {
+        jobs
+    };
+    let cache = if args.switch("no-cache") {
+        None
+    } else {
+        Some(ResultCache::new(args.flag("cache-dir", "target/sweep-cache")))
+    };
+
+    let points = campaign.points();
+    eprintln!(
+        "sweep `{}`: {} point(s) on {} worker(s){}…",
+        campaign.name,
+        points.len(),
+        jobs.max(1).min(points.len().max(1)),
+        if cache.is_some() { "" } else { " (cache disabled)" }
+    );
+    let sink: Box<dyn std::io::Write + Send> = match args.flag_opt("out") {
+        Some(path) => Box::new(std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("creating {path}"))?,
+        )),
+        None => Box::new(std::io::stdout()),
+    };
+    let mut streamer = Streamer::new(format, sink)?;
+    let t0 = std::time::Instant::now();
+    // An output I/O error (broken pipe from `| head`, full disk on --out)
+    // must not panic inside a pool worker holding the emit lock: record
+    // the first error and return `false` so the engine cancels the
+    // points that have not started yet, then settle up after the run.
+    let mut write_err: Option<std::io::Error> = None;
+    let outcome = sweep::run_points(&points, jobs, cache.as_ref(), &mut |_, r| {
+        if write_err.is_none() {
+            if let Err(e) = streamer.emit(r) {
+                write_err = Some(e);
+            }
+        }
+        write_err.is_none()
+    });
+    // A closed downstream pipe is a normal way to stop a stream; any
+    // other write error is fatal. Real evaluation failures are still
+    // reported below in both cases.
+    let pipe_closed = matches!(
+        &write_err,
+        Some(e) if e.kind() == std::io::ErrorKind::BrokenPipe
+    );
+    if let Some(e) = write_err {
+        if !pipe_closed {
+            return Err(anyhow::Error::from(e).context("writing sweep output"));
+        }
+    } else if let Err(e) = streamer.finish() {
+        if e.kind() != std::io::ErrorKind::BrokenPipe {
+            return Err(anyhow::Error::from(e).context("writing sweep output"));
+        }
+    }
+    if !pipe_closed {
+        eprintln!(
+            "sweep `{}`: {} point(s) — {} cache hit(s), {} computed, {} failed, {} canceled — in {:.2}s",
+            campaign.name,
+            points.len(),
+            outcome.hits,
+            outcome.computed,
+            outcome.failures(),
+            outcome.canceled(),
+            t0.elapsed().as_secs_f64()
+        );
+    }
+
+    // A failed point never discards completed ones: everything that
+    // succeeded has already been streamed; report failures afterwards
+    // (skipping cancellation markers — those are a consequence of the
+    // sink closing, not failures of the campaign).
+    let mut first_err: Option<anyhow::Error> = None;
+    for (p, r) in points.iter().zip(outcome.results) {
+        if let Err(e) = r {
+            if sweep::is_canceled(&e) {
+                continue;
+            }
+            eprintln!("error: {}: {e:#}", p.label());
+            if first_err.is_none() {
+                first_err = Some(e);
+            }
+        }
+    }
     match first_err {
         Some(e) => Err(e),
         None => Ok(()),

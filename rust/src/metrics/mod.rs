@@ -54,6 +54,31 @@ impl CcPoint {
     }
 }
 
+/// Evaluate a single Figure 4 data point: compile the routine, derive its
+/// CC, and compare architecture-scale PIM throughput against the
+/// memory-bound GPU. This is the shared cell evaluator — both
+/// [`cc_sweep`] and the sweep engine's elementwise points
+/// ([`crate::sweep`]) go through it, which is what guarantees
+/// `convpim sweep fig4` reproduces the registry numbers exactly.
+pub fn cc_point(
+    set: GateSet,
+    arch: &PimArch,
+    gpu: &Roofline,
+    fmt: NumFmt,
+    op: FixedOp,
+) -> CcPoint {
+    let prog = fmt.program(op, set);
+    let io = io_bits(op, fmt);
+    CcPoint {
+        op,
+        fmt,
+        cc: compute_complexity(&prog, io),
+        pim_ops: arch.throughput(&prog),
+        // GPU memory traffic: I/O bits in bytes.
+        gpu_ops: gpu.membound_ops(io as f64 / 8.0),
+    }
+}
+
 /// Build the Figure 4 sweep for one gate set across formats and ops.
 pub fn cc_sweep(
     set: GateSet,
@@ -65,19 +90,7 @@ pub fn cc_sweep(
     let mut out = Vec::new();
     for &fmt in formats {
         for &op in ops {
-            let prog = fmt.program(op, set);
-            let io = io_bits(op, fmt);
-            let cc = compute_complexity(&prog, io);
-            let pim_ops = arch.throughput(&prog);
-            // GPU memory traffic: I/O bits in bytes.
-            let gpu_ops = gpu.membound_ops(io as f64 / 8.0);
-            out.push(CcPoint {
-                op,
-                fmt,
-                cc,
-                pim_ops,
-                gpu_ops,
-            });
+            out.push(cc_point(set, arch, gpu, fmt, op));
         }
     }
     out

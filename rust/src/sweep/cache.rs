@@ -1,0 +1,182 @@
+//! Content-addressed result cache for sweep points.
+//!
+//! The cache key is a 64-bit FNV-1a hash of the point's canonical
+//! configuration JSON ([`SweepPoint::config_json`]); each entry is one
+//! JSON file under the cache directory (default `target/sweep-cache/`)
+//! holding both the config and the result. Loads verify the stored
+//! config against the requested one, so a hash collision (or a manually
+//! edited file) degrades to a recompute instead of serving the wrong
+//! numbers. Results are pure functions of their config at a fixed
+//! [`CONFIG_SCHEMA`](super::point::CONFIG_SCHEMA) — bump that constant
+//! when model semantics change so old entries miss.
+//!
+//! Key derivation is deterministic and content-addressed:
+//!
+//! ```
+//! use convpim::sweep::{Campaign, ResultCache};
+//! let points = Campaign::builtin("fig4").unwrap().points();
+//! let k0 = ResultCache::key(&points[0].config_json());
+//! // Same config → same key; different config → different key.
+//! assert_eq!(k0, ResultCache::key(&points[0].config_json()));
+//! assert_ne!(k0, ResultCache::key(&points[1].config_json()));
+//! assert_eq!(k0.len(), 16); // 64-bit hex
+//! ```
+//!
+//! [`SweepPoint::config_json`]: super::SweepPoint::config_json
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use anyhow::{Context as _, Result};
+
+use super::point::PointResult;
+use crate::util::json::Json;
+
+/// 64-bit FNV-1a over a byte string (the offline registry carries no
+/// hashing crates; FNV-1a is tiny and good enough for content addressing
+/// with a stored-config equality guard behind it).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// A directory of `<key>.json` files, one per evaluated sweep point.
+#[derive(Clone, Debug)]
+pub struct ResultCache {
+    dir: PathBuf,
+}
+
+impl ResultCache {
+    /// Open (without creating) a cache rooted at `dir`. The directory is
+    /// created lazily on the first [`ResultCache::store`].
+    pub fn new(dir: impl Into<PathBuf>) -> ResultCache {
+        ResultCache { dir: dir.into() }
+    }
+
+    /// The cache directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Derive the cache key for a canonical config document: the FNV-1a
+    /// hash of its compact serialization, as 16 hex digits.
+    pub fn key(config: &Json) -> String {
+        format!("{:016x}", fnv1a64(config.compact().as_bytes()))
+    }
+
+    fn path_for(&self, config: &Json) -> PathBuf {
+        self.dir.join(format!("{}.json", Self::key(config)))
+    }
+
+    /// Look up a stored result for `config`. Returns `None` on a miss, an
+    /// unparsable entry, or a stored config that does not match (hash
+    /// collision / stale schema) — all of which mean "recompute".
+    pub fn load(&self, config: &Json) -> Option<PointResult> {
+        let text = fs::read_to_string(self.path_for(config)).ok()?;
+        let doc = Json::parse(&text)?;
+        if doc.get("config")? != config {
+            return None;
+        }
+        PointResult::from_json(doc.get("result")?)
+    }
+
+    /// Persist a result under its config's key. Writes to a temporary
+    /// sibling and renames, so concurrent readers never observe a torn
+    /// entry.
+    pub fn store(&self, config: &Json, result: &PointResult) -> Result<()> {
+        fs::create_dir_all(&self.dir)
+            .with_context(|| format!("creating sweep cache dir {:?}", self.dir))?;
+        let entry = Json::obj(vec![
+            ("config", config.clone()),
+            ("result", result.to_json()),
+        ]);
+        let path = self.path_for(config);
+        // Unique-enough temp name: pid + a process-wide counter, so two
+        // threads storing the same key never share a temp file.
+        static SEQ: AtomicUsize = AtomicUsize::new(0);
+        let tmp = path.with_extension(format!(
+            "tmp.{}.{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        fs::write(&tmp, entry.pretty()).with_context(|| format!("writing {tmp:?}"))?;
+        fs::rename(&tmp, &path).with_context(|| format!("publishing {path:?}"))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::Campaign;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "convpim_cache_test_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn fnv_known_vectors() {
+        // Standard FNV-1a test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn store_load_round_trip() {
+        let dir = temp_dir("roundtrip");
+        let cache = ResultCache::new(&dir);
+        let points = Campaign::builtin("fig4").unwrap().points();
+        let p = &points[0];
+        let config = p.config_json();
+        assert!(cache.load(&config).is_none(), "empty cache must miss");
+        let r = p.eval().unwrap();
+        cache.store(&config, &r).unwrap();
+        assert_eq!(cache.load(&config).unwrap(), r);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mismatched_config_is_a_miss() {
+        let dir = temp_dir("mismatch");
+        let cache = ResultCache::new(&dir);
+        let pts = Campaign::builtin("fig4").unwrap().points();
+        let (a, b) = (pts[0].config_json(), pts[1].config_json());
+        let r = pts[0].eval().unwrap();
+        cache.store(&a, &r).unwrap();
+        // Forge a collision: copy a's entry onto b's key. The stored
+        // config no longer matches the request, so load must miss.
+        fs::copy(
+            dir.join(format!("{}.json", ResultCache::key(&a))),
+            dir.join(format!("{}.json", ResultCache::key(&b))),
+        )
+        .unwrap();
+        assert!(cache.load(&b).is_none());
+        assert!(cache.load(&a).is_some());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_entry_is_a_miss() {
+        let dir = temp_dir("corrupt");
+        let cache = ResultCache::new(&dir);
+        let points = Campaign::builtin("fig4").unwrap().points();
+        let p = &points[0];
+        let config = p.config_json();
+        cache.store(&config, &p.eval().unwrap()).unwrap();
+        let path = dir.join(format!("{}.json", ResultCache::key(&config)));
+        fs::write(&path, "{ not json").unwrap();
+        assert!(cache.load(&config).is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,675 @@
+//! The declarative [`Campaign`] type: a grid over evaluation axes.
+//!
+//! A campaign names one value set per axis — PIM architecture, number
+//! format, workload, GPU baseline — and [`Campaign::points`] expands the
+//! cross product into a deterministic work-list of
+//! [`SweepPoint`](super::SweepPoint)s. Campaigns are either built in
+//! ([`Campaign::builtin`]: the paper figures as degenerate grids) or
+//! parsed from a JSON file ([`Campaign::from_json_text`]):
+//!
+//! ```
+//! use convpim::sweep::Campaign;
+//! let c = Campaign::from_json_text(r#"{
+//!   "name": "mini",
+//!   "archs": [{"set": "memristive"}],
+//!   "formats": ["fixed8"],
+//!   "workloads": [{"kind": "elementwise", "op": "add"}],
+//!   "gpus": [{"gpu": "a6000", "mode": "experimental"}]
+//! }"#).unwrap();
+//! assert_eq!(c.points().len(), 1);
+//! ```
+
+use anyhow::Result;
+
+use super::point::SweepPoint;
+use crate::gpumodel::GpuSpec;
+use crate::pim::arch::PimArch;
+use crate::pim::fixed::FixedOp;
+use crate::pim::gates::GateSet;
+use crate::pim::matpim::NumFmt;
+use crate::pim::softfloat::Format;
+use crate::util::json::Json;
+use crate::workloads::{models, Workload};
+
+/// One value of the PIM-architecture axis: a gate set at either the
+/// paper's Table 1 crossbar dimensions (`dims: None`) or explicit ones
+/// (the S3 sensitivity knob).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ArchSpec {
+    /// Technology / gate set.
+    pub set: GateSet,
+    /// Explicit `(rows, cols)` crossbar dimensions; `None` = Table 1.
+    pub dims: Option<(u64, u64)>,
+}
+
+impl ArchSpec {
+    /// The Table 1 configuration of a gate set.
+    pub fn paper(set: GateSet) -> ArchSpec {
+        ArchSpec { set, dims: None }
+    }
+
+    /// Explicit crossbar dimensions (sensitivity study S3).
+    pub fn with_dims(set: GateSet, rows: u64, cols: u64) -> ArchSpec {
+        ArchSpec {
+            set,
+            dims: Some((rows, cols)),
+        }
+    }
+
+    /// Instantiate the architecture model.
+    pub fn arch(&self) -> PimArch {
+        match self.dims {
+            None => PimArch::paper(self.set),
+            Some((rows, cols)) => PimArch::with_dims(self.set, rows, cols),
+        }
+    }
+
+    /// Short technology name (`memristive` / `dram`).
+    pub fn set_name(set: GateSet) -> &'static str {
+        match set {
+            GateSet::MemristiveNor => "memristive",
+            GateSet::DramMaj => "dram",
+        }
+    }
+
+    /// Display / lookup name: the technology, plus `@RxC` when explicit
+    /// dimensions override Table 1.
+    pub fn name(&self) -> String {
+        match self.dims {
+            None => Self::set_name(self.set).to_string(),
+            Some((r, c)) => format!("{}@{r}x{c}", Self::set_name(self.set)),
+        }
+    }
+
+    /// Canonical JSON form (the shape [`Campaign::from_json_text`] reads).
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![("set", Json::s(Self::set_name(self.set)))];
+        if let Some((r, c)) = self.dims {
+            pairs.push(("rows", Json::i(r as i64)));
+            pairs.push(("cols", Json::i(c as i64)));
+        }
+        Json::obj(pairs)
+    }
+
+    fn from_json(j: &Json) -> Result<ArchSpec> {
+        let set = match j.get("set").and_then(Json::as_str) {
+            Some("memristive") => GateSet::MemristiveNor,
+            Some("dram") => GateSet::DramMaj,
+            other => anyhow::bail!(
+                "arch `set` must be `memristive` or `dram`, got {other:?}"
+            ),
+        };
+        let rows = j.get("rows").map(|v| {
+            v.as_u64()
+                .ok_or_else(|| anyhow::anyhow!("arch `rows` must be a positive integer"))
+        });
+        let cols = j.get("cols").map(|v| {
+            v.as_u64()
+                .ok_or_else(|| anyhow::anyhow!("arch `cols` must be a positive integer"))
+        });
+        let dims = match (rows, cols) {
+            (None, None) => None,
+            (Some(r), Some(c)) => {
+                let (r, c) = (r?, c?);
+                anyhow::ensure!(
+                    r > 0 && c > 0,
+                    "arch dims must be positive (got {r}x{c})"
+                );
+                Some((r, c))
+            }
+            _ => anyhow::bail!("arch dims need both `rows` and `cols` (or neither)"),
+        };
+        Ok(ArchSpec { set, dims })
+    }
+}
+
+/// Which GPU roofline a point compares against.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GpuMode {
+    /// Memory/launch-limited roofline (the paper's measured baseline).
+    Experimental,
+    /// Datasheet compute peak.
+    Theoretical,
+}
+
+impl GpuMode {
+    /// Display / JSON name.
+    pub fn name(self) -> &'static str {
+        match self {
+            GpuMode::Experimental => "experimental",
+            GpuMode::Theoretical => "theoretical",
+        }
+    }
+}
+
+/// One value of the GPU-baseline axis: a device and a roofline mode.
+#[derive(Clone, Copy, Debug)]
+pub struct GpuBaseline {
+    /// Datasheet parameters (A6000, A100, …).
+    pub gpu: GpuSpec,
+    /// Experimental (memory-bound) or theoretical (compute peak).
+    pub mode: GpuMode,
+}
+
+impl GpuBaseline {
+    /// Canonical JSON form.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("gpu", Json::s(self.gpu.name.to_ascii_lowercase())),
+            ("mode", Json::s(self.mode.name())),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<GpuBaseline> {
+        let name = j
+            .get("gpu")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("gpu baseline needs a `gpu` name"))?;
+        let gpu = GpuSpec::by_name(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown gpu `{name}`; available: {}",
+                GpuSpec::all()
+                    .iter()
+                    .map(|s| s.name.to_ascii_lowercase())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        })?;
+        let mode = match j.get("mode").and_then(Json::as_str) {
+            Some("experimental") | Some("exp") | None => GpuMode::Experimental,
+            Some("theoretical") | Some("theo") => GpuMode::Theoretical,
+            Some(other) => anyhow::bail!(
+                "gpu `mode` must be `experimental` or `theoretical`, got `{other}`"
+            ),
+        };
+        Ok(GpuBaseline { gpu, mode })
+    }
+}
+
+/// The CNN zoo entries a campaign can sweep over.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CnnModel {
+    AlexNet,
+    GoogLeNet,
+    ResNet50,
+    Vgg16,
+    MobileNetV1,
+}
+
+impl CnnModel {
+    /// All five models, in paper-then-extras order.
+    pub fn all() -> [CnnModel; 5] {
+        [
+            CnnModel::AlexNet,
+            CnnModel::GoogLeNet,
+            CnnModel::ResNet50,
+            CnnModel::Vgg16,
+            CnnModel::MobileNetV1,
+        ]
+    }
+
+    /// JSON / display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            CnnModel::AlexNet => "alexnet",
+            CnnModel::GoogLeNet => "googlenet",
+            CnnModel::ResNet50 => "resnet50",
+            CnnModel::Vgg16 => "vgg16",
+            CnnModel::MobileNetV1 => "mobilenet_v1",
+        }
+    }
+
+    /// Build the per-layer workload.
+    pub fn workload(self) -> Workload {
+        match self {
+            CnnModel::AlexNet => models::alexnet(),
+            CnnModel::GoogLeNet => models::googlenet(),
+            CnnModel::ResNet50 => models::resnet50(),
+            CnnModel::Vgg16 => models::vgg16(),
+            CnnModel::MobileNetV1 => models::mobilenet_v1(),
+        }
+    }
+
+    fn from_name(name: &str) -> Option<CnnModel> {
+        CnnModel::all().into_iter().find(|m| m.name() == name)
+    }
+}
+
+/// One value of the workload axis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkloadSpec {
+    /// Vectored scalar arithmetic (the Fig. 3/4 workload).
+    Elementwise(FixedOp),
+    /// Batched `n×n` matrix multiplication (Fig. 5).
+    Matmul(u64),
+    /// CNN inference (`training: false`, Fig. 6) or training (Fig. 7).
+    Cnn {
+        model: CnnModel,
+        training: bool,
+    },
+    /// LLM attention decode at context length `seq` (§6 discussion).
+    Decode {
+        seq: u64,
+    },
+}
+
+impl WorkloadSpec {
+    /// Display / lookup name (`elementwise-add`, `matmul-n64`,
+    /// `cnn-resnet50`, `cnn-resnet50-train`, `decode-s2048`).
+    pub fn name(&self) -> String {
+        match *self {
+            WorkloadSpec::Elementwise(op) => format!("elementwise-{}", op.name()),
+            WorkloadSpec::Matmul(n) => format!("matmul-n{n}"),
+            WorkloadSpec::Cnn { model, training } => format!(
+                "cnn-{}{}",
+                model.name(),
+                if training { "-train" } else { "" }
+            ),
+            WorkloadSpec::Decode { seq } => format!("decode-s{seq}"),
+        }
+    }
+
+    /// Unit of the point's throughput numbers.
+    pub fn unit(&self) -> &'static str {
+        match self {
+            WorkloadSpec::Elementwise(_) => "ops/s",
+            WorkloadSpec::Matmul(_) => "matmul/s",
+            WorkloadSpec::Cnn { .. } => "img/s",
+            WorkloadSpec::Decode { .. } => "tok/s",
+        }
+    }
+
+    /// Canonical JSON form.
+    pub fn to_json(&self) -> Json {
+        match *self {
+            WorkloadSpec::Elementwise(op) => Json::obj(vec![
+                ("kind", Json::s("elementwise")),
+                ("op", Json::s(op.name())),
+            ]),
+            WorkloadSpec::Matmul(n) => Json::obj(vec![
+                ("kind", Json::s("matmul")),
+                ("n", Json::i(n as i64)),
+            ]),
+            WorkloadSpec::Cnn { model, training } => Json::obj(vec![
+                ("kind", Json::s("cnn")),
+                ("model", Json::s(model.name())),
+                ("training", Json::Bool(training)),
+            ]),
+            WorkloadSpec::Decode { seq } => Json::obj(vec![
+                ("kind", Json::s("attention-decode")),
+                ("seq", Json::i(seq as i64)),
+            ]),
+        }
+    }
+
+    fn from_json(j: &Json) -> Result<WorkloadSpec> {
+        match j.get("kind").and_then(Json::as_str) {
+            Some("elementwise") => {
+                let op = j.get("op").and_then(Json::as_str).unwrap_or("add");
+                let op = FixedOp::all()
+                    .into_iter()
+                    .find(|o| o.name() == op)
+                    .ok_or_else(|| anyhow::anyhow!("unknown elementwise op `{op}`"))?;
+                Ok(WorkloadSpec::Elementwise(op))
+            }
+            Some("matmul") => {
+                let n = j
+                    .get("n")
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| anyhow::anyhow!("matmul workload needs a positive `n`"))?;
+                Ok(WorkloadSpec::Matmul(n))
+            }
+            Some("cnn") => {
+                let name = j
+                    .get("model")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("cnn workload needs a `model`"))?;
+                let model = CnnModel::from_name(name).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown cnn model `{name}`; available: {}",
+                        CnnModel::all()
+                            .iter()
+                            .map(|m| m.name())
+                            .collect::<Vec<_>>()
+                            .join(", ")
+                    )
+                })?;
+                let training = j
+                    .get("training")
+                    .and_then(Json::as_bool)
+                    .unwrap_or(false);
+                Ok(WorkloadSpec::Cnn { model, training })
+            }
+            Some("attention-decode") | Some("decode") => {
+                let seq = j.get("seq").and_then(Json::as_u64).unwrap_or(2048);
+                Ok(WorkloadSpec::Decode { seq })
+            }
+            other => anyhow::bail!(
+                "workload `kind` must be elementwise|matmul|cnn|attention-decode, got {other:?}"
+            ),
+        }
+    }
+}
+
+/// Parse a number-format name (`fixed8`, `fixed16`, `fixed32`, `fp16`,
+/// `fp32`, `fp64` — the inverse of [`NumFmt::name`]).
+pub fn fmt_from_name(name: &str) -> Option<NumFmt> {
+    match name {
+        "fp16" => Some(NumFmt::Float(Format::FP16)),
+        "fp32" => Some(NumFmt::Float(Format::FP32)),
+        "fp64" => Some(NumFmt::Float(Format::FP64)),
+        _ => {
+            let n: u32 = name.strip_prefix("fixed")?.parse().ok()?;
+            if matches!(n, 8 | 16 | 32) {
+                Some(NumFmt::Fixed(n))
+            } else {
+                None
+            }
+        }
+    }
+}
+
+/// A declarative sweep campaign: the cross product of its four axes.
+///
+/// Expansion order is fixed — `archs` outermost, then `formats`, then
+/// `workloads`, then `gpus` — so a campaign always produces the same
+/// work-list in the same order regardless of how it is executed.
+#[derive(Clone, Debug)]
+pub struct Campaign {
+    /// Display name (builtin id or the JSON `name` field).
+    pub name: String,
+    /// PIM-architecture axis.
+    pub archs: Vec<ArchSpec>,
+    /// Number-format axis.
+    pub formats: Vec<NumFmt>,
+    /// Workload axis.
+    pub workloads: Vec<WorkloadSpec>,
+    /// GPU-baseline axis.
+    pub gpus: Vec<GpuBaseline>,
+}
+
+impl Campaign {
+    /// Number of points the grid expands to.
+    pub fn len(&self) -> usize {
+        self.archs.len() * self.formats.len() * self.workloads.len() * self.gpus.len()
+    }
+
+    /// True when any axis is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Expand the grid into the deterministic work-list.
+    pub fn points(&self) -> Vec<SweepPoint> {
+        let mut out = Vec::with_capacity(self.len());
+        for &arch in &self.archs {
+            for &fmt in &self.formats {
+                for &workload in &self.workloads {
+                    for &gpu in &self.gpus {
+                        out.push(SweepPoint {
+                            index: out.len(),
+                            arch,
+                            fmt,
+                            workload,
+                            gpu,
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Parse a campaign from JSON text (see the module example and
+    /// `docs/EXPERIMENTS.md` §SWEEP for the schema).
+    pub fn from_json_text(text: &str) -> Result<Campaign> {
+        fn req_arr<'a>(doc: &'a Json, key: &str) -> Result<&'a [Json]> {
+            doc.get(key)
+                .and_then(Json::as_arr)
+                .filter(|a| !a.is_empty())
+                .ok_or_else(|| anyhow::anyhow!("campaign needs a non-empty `{key}` array"))
+        }
+        let doc = Json::parse(text)
+            .ok_or_else(|| anyhow::anyhow!("campaign file is not valid JSON"))?;
+        let name = doc
+            .get("name")
+            .and_then(Json::as_str)
+            .unwrap_or("custom")
+            .to_string();
+        let archs = req_arr(&doc, "archs")?
+            .iter()
+            .map(ArchSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let formats = req_arr(&doc, "formats")?
+            .iter()
+            .map(|f| {
+                let name = f
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("formats must be strings"))?;
+                fmt_from_name(name).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown format `{name}` (use fixed8|fixed16|fixed32|fp16|fp32|fp64)"
+                    )
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let workloads = req_arr(&doc, "workloads")?
+            .iter()
+            .map(WorkloadSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let gpus = req_arr(&doc, "gpus")?
+            .iter()
+            .map(GpuBaseline::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Campaign {
+            name,
+            archs,
+            formats,
+            workloads,
+            gpus,
+        })
+    }
+
+    /// Canonical JSON form of the whole campaign (round-trips through
+    /// [`Campaign::from_json_text`]).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::s(self.name.clone())),
+            (
+                "archs",
+                Json::arr(self.archs.iter().map(ArchSpec::to_json).collect()),
+            ),
+            (
+                "formats",
+                Json::arr(self.formats.iter().map(|f| Json::s(f.name())).collect()),
+            ),
+            (
+                "workloads",
+                Json::arr(self.workloads.iter().map(WorkloadSpec::to_json).collect()),
+            ),
+            (
+                "gpus",
+                Json::arr(self.gpus.iter().map(GpuBaseline::to_json).collect()),
+            ),
+        ])
+    }
+
+    /// The builtin campaigns: the paper's sweep figures as degenerate
+    /// grids. `fig4` (formats × ops vs the memory-bound A6000), `fig5`
+    /// (matmul dimension sweep across both PIM technologies and both GPU
+    /// baselines) and `sens-dims` / `s3` (crossbar-dimension sensitivity).
+    pub fn builtin(name: &str) -> Option<Campaign> {
+        match name {
+            "fig4" => Some(Campaign {
+                name: "fig4".into(),
+                archs: vec![ArchSpec::paper(GateSet::MemristiveNor)],
+                formats: vec![
+                    NumFmt::Fixed(8),
+                    NumFmt::Fixed(16),
+                    NumFmt::Fixed(32),
+                    NumFmt::Float(Format::FP16),
+                    NumFmt::Float(Format::FP32),
+                    NumFmt::Float(Format::FP64),
+                ],
+                workloads: FixedOp::all()
+                    .into_iter()
+                    .map(WorkloadSpec::Elementwise)
+                    .collect(),
+                gpus: vec![GpuBaseline {
+                    gpu: GpuSpec::a6000(),
+                    mode: GpuMode::Experimental,
+                }],
+            }),
+            "fig5" => Some(Campaign {
+                name: "fig5".into(),
+                archs: vec![
+                    ArchSpec::paper(GateSet::MemristiveNor),
+                    ArchSpec::paper(GateSet::DramMaj),
+                ],
+                formats: vec![NumFmt::Float(Format::FP32)],
+                workloads: [8u64, 16, 32, 64, 128, 256]
+                    .into_iter()
+                    .map(WorkloadSpec::Matmul)
+                    .collect(),
+                gpus: vec![
+                    GpuBaseline {
+                        gpu: GpuSpec::a6000(),
+                        mode: GpuMode::Experimental,
+                    },
+                    GpuBaseline {
+                        gpu: GpuSpec::a6000(),
+                        mode: GpuMode::Theoretical,
+                    },
+                ],
+            }),
+            "sens-dims" | "s3" => Some(Campaign {
+                name: "sens-dims".into(),
+                archs: [
+                    (256u64, 1024u64),
+                    (1024, 1024),
+                    (4096, 1024),
+                    (65536, 1024),
+                    (1024, 512),
+                    (1024, 2048),
+                ]
+                .into_iter()
+                .map(|(r, c)| ArchSpec::with_dims(GateSet::MemristiveNor, r, c))
+                .collect(),
+                formats: vec![NumFmt::Fixed(32), NumFmt::Float(Format::FP32)],
+                workloads: vec![
+                    WorkloadSpec::Elementwise(FixedOp::Add),
+                    WorkloadSpec::Cnn {
+                        model: CnnModel::ResNet50,
+                        training: false,
+                    },
+                ],
+                gpus: vec![GpuBaseline {
+                    gpu: GpuSpec::a6000(),
+                    mode: GpuMode::Experimental,
+                }],
+            }),
+            _ => None,
+        }
+    }
+
+    /// Names accepted by [`Campaign::builtin`].
+    pub fn builtin_names() -> &'static [&'static str] {
+        &["fig4", "fig5", "sens-dims"]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_fig4_is_formats_by_ops() {
+        let c = Campaign::builtin("fig4").unwrap();
+        assert_eq!(c.len(), 6 * 4);
+        let pts = c.points();
+        assert_eq!(pts.len(), 24);
+        // Expansion is format-major, op-minor — the registry cc_sweep order.
+        assert_eq!(pts[0].workload.name(), "elementwise-add");
+        assert_eq!(pts[0].fmt.name(), "fixed8");
+        assert_eq!(pts[4].fmt.name(), "fixed16");
+        assert!(pts.iter().enumerate().all(|(i, p)| p.index == i));
+    }
+
+    #[test]
+    fn builtin_fig5_covers_both_archs_and_modes() {
+        let c = Campaign::builtin("fig5").unwrap();
+        assert_eq!(c.points().len(), 2 * 1 * 6 * 2);
+    }
+
+    #[test]
+    fn builtin_unknown_is_none() {
+        assert!(Campaign::builtin("fig99").is_none());
+        assert!(Campaign::builtin("s3").is_some());
+    }
+
+    #[test]
+    fn campaign_json_round_trips() {
+        let c = Campaign::builtin("sens-dims").unwrap();
+        let text = c.to_json().pretty();
+        let back = Campaign::from_json_text(&text).unwrap();
+        assert_eq!(back.name, c.name);
+        assert_eq!(back.len(), c.len());
+        let (a, b) = (c.points(), back.points());
+        assert!(a
+            .iter()
+            .zip(&b)
+            .all(|(x, y)| x.config_json() == y.config_json()));
+    }
+
+    #[test]
+    fn parse_rejects_bad_axes() {
+        assert!(Campaign::from_json_text("not json").is_err());
+        // Empty axis.
+        assert!(Campaign::from_json_text(
+            r#"{"archs": [], "formats": ["fp32"],
+                "workloads": [{"kind": "matmul", "n": 8}],
+                "gpus": [{"gpu": "a6000"}]}"#
+        )
+        .is_err());
+        // Unknown format.
+        assert!(Campaign::from_json_text(
+            r#"{"archs": [{"set": "dram"}], "formats": ["fixed7"],
+                "workloads": [{"kind": "matmul", "n": 8}],
+                "gpus": [{"gpu": "a6000"}]}"#
+        )
+        .is_err());
+        // Unknown gpu.
+        assert!(Campaign::from_json_text(
+            r#"{"archs": [{"set": "dram"}], "formats": ["fp32"],
+                "workloads": [{"kind": "matmul", "n": 8}],
+                "gpus": [{"gpu": "h100"}]}"#
+        )
+        .is_err());
+        // Zero crossbar dims (would divide by zero at eval time).
+        assert!(Campaign::from_json_text(
+            r#"{"archs": [{"set": "memristive", "rows": 0, "cols": 1024}],
+                "formats": ["fp32"],
+                "workloads": [{"kind": "matmul", "n": 8}],
+                "gpus": [{"gpu": "a6000"}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn fmt_names_invert() {
+        for name in ["fixed8", "fixed16", "fixed32", "fp16", "fp32", "fp64"] {
+            assert_eq!(fmt_from_name(name).unwrap().name(), name);
+        }
+        assert!(fmt_from_name("fp8").is_none());
+        assert!(fmt_from_name("int32").is_none());
+    }
+
+    #[test]
+    fn arch_names() {
+        assert_eq!(ArchSpec::paper(GateSet::DramMaj).name(), "dram");
+        assert_eq!(
+            ArchSpec::with_dims(GateSet::MemristiveNor, 1024, 512).name(),
+            "memristive@1024x512"
+        );
+    }
+}

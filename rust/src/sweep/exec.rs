@@ -1,0 +1,278 @@
+//! Concurrent campaign execution with deterministic, input-ordered
+//! streaming.
+//!
+//! [`run_points`] fans a campaign's work-list out over the hand-rolled
+//! thread pool ([`crate::util::pool`]) the same way
+//! [`crate::coordinator::run_many`] runs experiments: every point owns a
+//! result slot, scheduling order never affects output order. Streaming is
+//! layered on top: as points complete, the contiguous *prefix* of
+//! finished slots is flushed to the caller's sink in input order, so a
+//! thousand-point campaign emits rows while it runs — and the emitted
+//! byte stream is identical at any `--jobs` level (asserted by the
+//! `sweep_campaign` integration tests).
+//!
+//! A failed point never discards completed ones (the same contract the
+//! parallel experiment runner has): its slot records the error, every
+//! other slot still carries its result, and the summary counts are exact.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use super::cache::ResultCache;
+use super::point::{PointResult, SweepPoint};
+use crate::util::pool::Pool;
+
+/// Error message marking a point that was *skipped* because the output
+/// sink asked to stop (e.g. a broken pipe) — not a real evaluation
+/// failure. [`SweepOutcome::failures`] excludes these;
+/// [`SweepOutcome::canceled`] counts them. Test with [`is_canceled`],
+/// which survives added `.context(..)` wrapping.
+pub const CANCELED: &str = "canceled: output sink closed";
+
+/// True when an error is the cancellation marker (the vendored `anyhow`
+/// stand-in has no `downcast_ref`, so cancellation is identified by the
+/// sentinel message anywhere in the context chain).
+pub fn is_canceled(e: &anyhow::Error) -> bool {
+    e.chain().any(|m| m == CANCELED)
+}
+
+/// What a campaign run produced.
+pub struct SweepOutcome {
+    /// One entry per point, in campaign (input) order.
+    pub results: Vec<Result<PointResult>>,
+    /// Points served from the result cache.
+    pub hits: usize,
+    /// Points actually evaluated (and, with a cache, stored).
+    pub computed: usize,
+}
+
+impl SweepOutcome {
+    /// Number of genuinely failed points (excludes [`CANCELED`] skips).
+    pub fn failures(&self) -> usize {
+        self.results
+            .iter()
+            .filter(|r| matches!(r, Err(e) if !is_canceled(e)))
+            .count()
+    }
+
+    /// Number of points skipped because the sink requested a stop.
+    pub fn canceled(&self) -> usize {
+        self.results
+            .iter()
+            .filter(|r| matches!(r, Err(e) if is_canceled(e)))
+            .count()
+    }
+}
+
+/// Evaluate one point, going through the cache when one is attached. A
+/// cache *store* failure (unwritable directory, full disk) never
+/// discards the computed result — the cache degrades to
+/// recompute-next-time, with a once-per-process warning.
+fn eval_one(
+    point: &SweepPoint,
+    cache: Option<&ResultCache>,
+    hits: &AtomicUsize,
+    computed: &AtomicUsize,
+) -> Result<PointResult> {
+    let config = point.config_json();
+    if let Some(cache) = cache {
+        if let Some(result) = cache.load(&config) {
+            hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(result);
+        }
+    }
+    let result = point.eval()?;
+    computed.fetch_add(1, Ordering::Relaxed);
+    if let Some(cache) = cache {
+        if let Err(err) = cache.store(&config, &result) {
+            static WARN: std::sync::Once = std::sync::Once::new();
+            WARN.call_once(|| {
+                eprintln!("warning: sweep cache store failed ({err:#}); continuing uncached");
+            });
+        }
+    }
+    Ok(result)
+}
+
+/// In-order streaming state shared by the workers of one run.
+struct EmitState<'s> {
+    /// Next input index to flush.
+    next: usize,
+    /// One slot per point; `Some` once that point finished.
+    slots: Vec<Option<Result<PointResult>>>,
+    /// Caller's sink: `(input index, result)`; returns `false` to cancel
+    /// the remaining points (a dead pipe should not keep the CPUs busy).
+    sink: &'s mut (dyn FnMut(usize, &PointResult) -> bool + Send),
+    /// Set once the sink returned `false`; points not yet started are
+    /// then skipped with a [`CANCELED`] marker instead of evaluated.
+    stop: bool,
+}
+
+impl EmitState<'_> {
+    /// Flush the contiguous finished prefix (errors occupy their slot but
+    /// emit nothing — the caller reports them from the outcome).
+    fn flush(&mut self) {
+        while self.next < self.slots.len() {
+            match &self.slots[self.next] {
+                Some(Ok(result)) => {
+                    if !self.stop && !(self.sink)(self.next, result) {
+                        self.stop = true;
+                    }
+                }
+                Some(Err(_)) => {}
+                None => break,
+            }
+            self.next += 1;
+        }
+    }
+}
+
+/// Run a work-list of points on `jobs` workers, streaming successful
+/// results to `on_result` in input order.
+///
+/// `on_result` returns whether to *continue*: returning `false` (e.g.
+/// the output pipe died) cancels points that have not started yet —
+/// their slots record a [`CANCELED`] error instead of burning CPU.
+/// `jobs <= 1` executes serially on the calling thread. With a cache,
+/// previously stored points are served without evaluation; `hits` +
+/// `computed` + failures + canceled always totals `points.len()`. The
+/// emitted stream and the returned results are byte-for-byte independent
+/// of `jobs` because evaluation is pure and emission is prefix-ordered.
+pub fn run_points(
+    points: &[SweepPoint],
+    jobs: usize,
+    cache: Option<&ResultCache>,
+    on_result: &mut (dyn FnMut(usize, &PointResult) -> bool + Send),
+) -> SweepOutcome {
+    let hits = AtomicUsize::new(0);
+    let computed = AtomicUsize::new(0);
+    let jobs = jobs.max(1).min(points.len().max(1));
+
+    if jobs <= 1 {
+        let mut results = Vec::with_capacity(points.len());
+        let mut stop = false;
+        for (i, point) in points.iter().enumerate() {
+            let r = if stop {
+                Err(anyhow::Error::msg(CANCELED))
+            } else {
+                eval_one(point, cache, &hits, &computed)
+            };
+            if let Ok(result) = &r {
+                if !stop && !on_result(i, result) {
+                    stop = true;
+                }
+            }
+            results.push(r);
+        }
+        return SweepOutcome {
+            results,
+            hits: hits.into_inner(),
+            computed: computed.into_inner(),
+        };
+    }
+
+    let emit = Mutex::new(EmitState {
+        next: 0,
+        slots: points.iter().map(|_| None).collect(),
+        sink: on_result,
+        stop: false,
+    });
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = points
+        .iter()
+        .enumerate()
+        .map(|(i, point)| {
+            let (emit, hits, computed) = (&emit, &hits, &computed);
+            Box::new(move || {
+                let r = if emit.lock().unwrap().stop {
+                    Err(anyhow::Error::msg(CANCELED))
+                } else {
+                    eval_one(point, cache, hits, computed)
+                };
+                let mut state = emit.lock().unwrap();
+                state.slots[i] = Some(r);
+                state.flush();
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+
+    let dedicated;
+    let pool = if jobs == Pool::global().threads() {
+        Pool::global()
+    } else {
+        dedicated = Pool::new(jobs);
+        &dedicated
+    };
+    pool.run(tasks);
+
+    let state = emit.into_inner().unwrap();
+    debug_assert_eq!(state.next, state.slots.len(), "prefix flush must drain");
+    SweepOutcome {
+        results: state
+            .slots
+            .into_iter()
+            .map(|slot| slot.expect("pool.run completed every task"))
+            .collect(),
+        hits: hits.into_inner(),
+        computed: computed.into_inner(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::Campaign;
+
+    #[test]
+    fn serial_and_parallel_emit_identically() {
+        let points = Campaign::builtin("fig5").unwrap().points();
+        let collect = |jobs: usize| {
+            let mut seen: Vec<(usize, String)> = Vec::new();
+            let outcome = run_points(&points, jobs, None, &mut |i, r| {
+                seen.push((i, r.label.clone()));
+                true
+            });
+            assert_eq!(outcome.failures(), 0);
+            assert_eq!(outcome.canceled(), 0);
+            assert_eq!(outcome.computed, points.len());
+            assert_eq!(outcome.hits, 0);
+            seen
+        };
+        let serial = collect(1);
+        assert_eq!(serial.len(), points.len());
+        assert!(serial.iter().enumerate().all(|(i, (j, _))| i == *j));
+        assert_eq!(serial, collect(4));
+    }
+
+    #[test]
+    fn results_match_direct_eval() {
+        let points = Campaign::builtin("fig4").unwrap().points();
+        let outcome = run_points(&points, 3, None, &mut |_, _| true);
+        for (p, r) in points.iter().zip(&outcome.results) {
+            let direct = p.eval().unwrap();
+            assert_eq!(r.as_ref().unwrap(), &direct);
+        }
+    }
+
+    #[test]
+    fn sink_false_cancels_remaining_points() {
+        // A dead output (e.g. broken pipe) must stop evaluation instead
+        // of computing a thousand points nobody will read.
+        let points = Campaign::builtin("fig4").unwrap().points();
+        let mut emitted = 0usize;
+        let outcome = run_points(&points, 1, None, &mut |_, _| {
+            emitted += 1;
+            emitted < 3
+        });
+        assert_eq!(emitted, 3);
+        assert_eq!(outcome.computed, 3);
+        assert_eq!(outcome.failures(), 0);
+        assert_eq!(outcome.canceled(), points.len() - 3);
+        // Canceled slots are marked with the sentinel, in order.
+        assert!(outcome.results[..3].iter().all(|r| r.is_ok()));
+        assert!(outcome.results[3..]
+            .iter()
+            .all(|r| matches!(r, Err(e) if is_canceled(e))));
+    }
+}

@@ -1,0 +1,56 @@
+//! Declarative sweep-campaign engine with content-addressed result
+//! caching.
+//!
+//! The paper's evaluation is fundamentally a family of *sweeps* — CC vs.
+//! improvement across formats and ops (Fig. 4), matmul dimension sweeps
+//! (Fig. 5), crossbar-dimension sensitivity (S3). This subsystem makes
+//! that the primitive instead of hand-coded experiments:
+//!
+//! * [`Campaign`] — a declarative grid over four axes (PIM architecture,
+//!   number format, workload, GPU baseline), built in
+//!   ([`Campaign::builtin`]) or parsed from JSON
+//!   ([`Campaign::from_json_text`]);
+//! * [`SweepPoint`] — one cell of the grid, evaluated analytically by
+//!   [`SweepPoint::eval`] into a flat [`PointResult`] record;
+//! * [`ResultCache`] — a content-addressed on-disk cache (FNV-1a key of
+//!   the point's canonical config JSON, default directory
+//!   `target/sweep-cache/`), so re-running a campaign recomputes only
+//!   changed points;
+//! * [`run_points`] — pooled execution with deterministic input-ordered
+//!   streaming into the CSV/JSONL/table reporters ([`Streamer`]).
+//!
+//! The `convpim sweep` subcommand wires this up end to end, and the
+//! `fig4` / `fig5` / `sens-dims` registry experiments delegate to it (see
+//! `docs/EXPERIMENTS.md` §SWEEP).
+//!
+//! ```
+//! use convpim::sweep::{self, Campaign};
+//!
+//! // The Fig. 4 sweep as a degenerate campaign: one architecture, one
+//! // GPU baseline, formats × ops.
+//! let fig4 = Campaign::builtin("fig4").unwrap();
+//! let points = fig4.points();
+//! assert_eq!(points.len(), 24);
+//!
+//! // Execute with streaming (no cache here); order is input order at
+//! // any worker count. The sink returns `true` to keep going.
+//! let mut labels = Vec::new();
+//! let outcome = sweep::run_points(&points, 2, None, &mut |i, r| {
+//!     labels.push((i, r.improvement()));
+//!     true
+//! });
+//! assert_eq!(outcome.computed, 24);
+//! assert_eq!(labels.first().map(|l| l.0), Some(0));
+//! ```
+
+pub mod cache;
+pub mod campaign;
+pub mod exec;
+pub mod point;
+pub mod report;
+
+pub use cache::ResultCache;
+pub use campaign::{ArchSpec, Campaign, CnnModel, GpuBaseline, GpuMode, WorkloadSpec};
+pub use exec::{is_canceled, run_points, SweepOutcome, CANCELED};
+pub use point::{PointResult, SweepPoint};
+pub use report::{OutputFormat, Streamer};

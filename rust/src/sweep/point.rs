@@ -1,0 +1,348 @@
+//! One cell of a campaign grid ([`SweepPoint`]) and its evaluated record
+//! ([`PointResult`]).
+//!
+//! A point is pure configuration: evaluating it ([`SweepPoint::eval`])
+//! runs the *analytic* models only — microcode compilation, the
+//! architecture-scale PIM model and the GPU roofline — never the measured
+//! PJRT series, so a point's result is a deterministic function of its
+//! [`SweepPoint::config_json`]. That is what makes the content-addressed
+//! result cache ([`super::ResultCache`]) sound.
+
+use anyhow::Result;
+
+use super::campaign::{ArchSpec, GpuBaseline, GpuMode, WorkloadSpec};
+use crate::gpumodel::{GpuDtype, Roofline};
+use crate::metrics;
+use crate::pim::matpim::{CnnPimModel, MatmulModel, NumFmt};
+use crate::util::json::Json;
+use crate::workloads::attention::{decode_workload, DecodeConfig};
+
+/// One point of a sweep campaign: a fully specified (architecture,
+/// format, workload, GPU baseline) combination.
+///
+/// ```
+/// use convpim::sweep::Campaign;
+/// let points = Campaign::builtin("fig4").unwrap().points();
+/// let r = points[0].eval().unwrap(); // fixed8 add, memristive vs exp. A6000
+/// assert_eq!(r.unit, "ops/s");
+/// assert!(r.improvement() > 100.0); // low-CC ops are PIM's best case
+/// ```
+#[derive(Clone, Copy, Debug)]
+pub struct SweepPoint {
+    /// Position in the campaign's expansion order (not part of the cache
+    /// identity — reordering a campaign must still hit).
+    pub index: usize,
+    /// PIM architecture.
+    pub arch: ArchSpec,
+    /// Number format.
+    pub fmt: NumFmt,
+    /// Workload.
+    pub workload: WorkloadSpec,
+    /// GPU baseline.
+    pub gpu: GpuBaseline,
+}
+
+/// Schema version folded into every point's cache identity. Bump it when
+/// the meaning of a stored result changes (new fields, recalibrated
+/// models) so stale cache entries miss instead of parsing wrong.
+pub const CONFIG_SCHEMA: i64 = 1;
+
+impl SweepPoint {
+    /// The canonical configuration document — the cache-key input. Two
+    /// points with equal `config_json` are the same experiment by
+    /// definition and may share a cached result.
+    pub fn config_json(&self) -> Json {
+        Json::obj(vec![
+            ("v", Json::i(CONFIG_SCHEMA)),
+            ("arch", self.arch.to_json()),
+            ("format", Json::s(self.fmt.name())),
+            ("workload", self.workload.to_json()),
+            ("gpu", self.gpu.to_json()),
+        ])
+    }
+
+    /// Human-readable one-line label.
+    pub fn label(&self) -> String {
+        format!(
+            "{} {} on {} vs {}/{}",
+            self.workload.name(),
+            self.fmt.name(),
+            self.arch.name(),
+            self.gpu.gpu.name,
+            self.gpu.mode.name()
+        )
+    }
+
+    /// GPU precision used for this point's roofline lookups: half rates
+    /// for ≤16-bit formats (tensor cores for the matmul-shaped CNN work,
+    /// the CUDA-core path otherwise), fp32 rates above.
+    fn gpu_dtype(&self) -> GpuDtype {
+        let half = self.fmt.bits() <= 16;
+        match self.workload {
+            WorkloadSpec::Cnn { .. } if half => GpuDtype::F16Tensor,
+            _ if half => GpuDtype::F16,
+            _ => GpuDtype::F32,
+        }
+    }
+
+    /// Evaluate the point through the analytic models.
+    pub fn eval(&self) -> Result<PointResult> {
+        // Guard before PimArch::with_dims: a zero dimension would divide
+        // by zero in the row-parallelism derivation (a panic would take
+        // down the whole batch instead of failing this one point).
+        if let Some((r, c)) = self.arch.dims {
+            anyhow::ensure!(
+                r > 0 && c > 0,
+                "crossbar dims must be positive (got {r}x{c})"
+            );
+        }
+        let arch = self.arch.arch();
+        let rl = Roofline::new(self.gpu.gpu);
+        let dtype = self.gpu_dtype();
+        let (cc, pim, gpu_tp, pim_per_watt) = match self.workload {
+            WorkloadSpec::Elementwise(op) => {
+                // Shared with the registry's Fig. 4 path (metrics::cc_sweep)
+                // so the sweep engine reproduces those numbers bit-for-bit.
+                let p = metrics::cc_point(self.arch.set, &arch, &rl, self.fmt, op);
+                let gpu_tp = match self.gpu.mode {
+                    GpuMode::Experimental => p.gpu_ops,
+                    GpuMode::Theoretical => rl.peak(dtype),
+                };
+                (
+                    Some(p.cc),
+                    p.pim_ops,
+                    gpu_tp,
+                    p.pim_ops / arch.max_power_w,
+                )
+            }
+            WorkloadSpec::Matmul(n) => {
+                anyhow::ensure!(n > 0, "matmul dimension must be positive");
+                let mm = MatmulModel::new(n, self.fmt, self.arch.set, arch.cols);
+                let gpu_tp = match self.gpu.mode {
+                    GpuMode::Experimental => rl.matmul_throughput(n, dtype),
+                    GpuMode::Theoretical => rl.matmul_throughput_peak(n, dtype),
+                };
+                (
+                    None,
+                    mm.throughput(&arch),
+                    gpu_tp,
+                    mm.throughput_per_watt(&arch),
+                )
+            }
+            WorkloadSpec::Cnn { model, training } => {
+                let base = model.workload();
+                let w = if training { base.training() } else { base };
+                let macs = w.total_macs();
+                let pim_model = CnnPimModel::new(self.fmt, self.arch.set, macs);
+                // Batch-64 roofline with traffic scaled by element width —
+                // the Fig. 6/7 experimental-GPU model (fp32 scale = 1).
+                let scale = self.fmt.bits() as f64 / 32.0;
+                let layers: Vec<(f64, f64)> = w
+                    .roofline_layers_batched(64.0)
+                    .iter()
+                    .map(|&(f, b)| (f, b * scale))
+                    .collect();
+                let gpu_tp = match self.gpu.mode {
+                    GpuMode::Experimental => {
+                        rl.workload_flops(&layers, dtype) / w.total_flops()
+                    }
+                    GpuMode::Theoretical => rl.peak(dtype) / w.total_flops(),
+                };
+                (
+                    None,
+                    pim_model.throughput(&arch),
+                    gpu_tp,
+                    pim_model.throughput_per_watt(&arch),
+                )
+            }
+            WorkloadSpec::Decode { seq } => {
+                anyhow::ensure!(seq > 0, "decode context length must be positive");
+                let w = decode_workload(DecodeConfig::llama7b(seq));
+                let pim_model = CnnPimModel::new(self.fmt, self.arch.set, w.total_macs());
+                // Per-token decode is unbatched matvec work: batch-1
+                // roofline, no tensor cores.
+                let gpu_tp = match self.gpu.mode {
+                    GpuMode::Experimental => {
+                        rl.workload_flops(&w.roofline_layers(), dtype) / w.total_flops()
+                    }
+                    GpuMode::Theoretical => rl.peak(dtype) / w.total_flops(),
+                };
+                (
+                    None,
+                    pim_model.throughput(&arch),
+                    gpu_tp,
+                    pim_model.throughput_per_watt(&arch),
+                )
+            }
+        };
+        Ok(PointResult {
+            label: self.label(),
+            arch: self.arch.name(),
+            rows: arch.rows,
+            cols: arch.cols,
+            format: self.fmt.name(),
+            workload: self.workload.name(),
+            gpu: self.gpu.gpu.name.to_string(),
+            gpu_mode: self.gpu.mode.name().to_string(),
+            unit: self.workload.unit().to_string(),
+            cc,
+            pim,
+            gpu_tp,
+            pim_per_watt,
+            gpu_per_watt: rl.per_watt(gpu_tp),
+        })
+    }
+}
+
+/// The evaluated record of one sweep point — a flat row with a fixed
+/// schema, so heterogeneous campaigns still stream into one CSV.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PointResult {
+    /// The point's label ([`SweepPoint::label`]).
+    pub label: String,
+    /// Architecture name (e.g. `memristive`, `memristive@1024x512`).
+    pub arch: String,
+    /// Crossbar rows of the evaluated architecture.
+    pub rows: u64,
+    /// Crossbar columns.
+    pub cols: u64,
+    /// Number-format name (`fixed32`, `fp16`, …).
+    pub format: String,
+    /// Workload name (`elementwise-add`, `matmul-n64`, …).
+    pub workload: String,
+    /// GPU name (`A6000`, …).
+    pub gpu: String,
+    /// GPU roofline mode (`experimental` / `theoretical`).
+    pub gpu_mode: String,
+    /// Unit of the two throughput numbers.
+    pub unit: String,
+    /// Compute complexity in gates/bit (elementwise points only).
+    pub cc: Option<f64>,
+    /// PIM throughput in `unit`.
+    pub pim: f64,
+    /// GPU-baseline throughput in `unit`.
+    pub gpu_tp: f64,
+    /// PIM throughput per watt.
+    pub pim_per_watt: f64,
+    /// GPU throughput per watt.
+    pub gpu_per_watt: f64,
+}
+
+impl PointResult {
+    /// PIM-over-GPU improvement factor (the Fig. 4 y-axis).
+    pub fn improvement(&self) -> f64 {
+        self.pim / self.gpu_tp
+    }
+
+    /// Machine-readable JSON record (one JSONL line per point).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("point", Json::s(self.label.clone())),
+            ("arch", Json::s(self.arch.clone())),
+            ("rows", Json::i(self.rows as i64)),
+            ("cols", Json::i(self.cols as i64)),
+            ("format", Json::s(self.format.clone())),
+            ("workload", Json::s(self.workload.clone())),
+            ("gpu", Json::s(self.gpu.clone())),
+            ("gpu_mode", Json::s(self.gpu_mode.clone())),
+            ("unit", Json::s(self.unit.clone())),
+            ("cc", self.cc.map(Json::n).unwrap_or(Json::Null)),
+            ("pim_throughput", Json::n(self.pim)),
+            ("gpu_throughput", Json::n(self.gpu_tp)),
+            ("improvement", Json::n(self.improvement())),
+            ("pim_per_watt", Json::n(self.pim_per_watt)),
+            ("gpu_per_watt", Json::n(self.gpu_per_watt)),
+        ])
+    }
+
+    /// Rebuild a result from its [`PointResult::to_json`] form (cache
+    /// loads). Round-trips exactly: the JSON writer prints floats with
+    /// shortest-round-trip formatting. Returns `None` on missing or
+    /// mistyped fields.
+    pub fn from_json(j: &Json) -> Option<PointResult> {
+        let s = |key: &str| Some(j.get(key)?.as_str()?.to_string());
+        let f = |key: &str| j.get(key)?.as_f64();
+        let cc = match j.get("cc") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(v.as_f64()?),
+        };
+        Some(PointResult {
+            label: s("point")?,
+            arch: s("arch")?,
+            rows: j.get("rows")?.as_u64()?,
+            cols: j.get("cols")?.as_u64()?,
+            format: s("format")?,
+            workload: s("workload")?,
+            gpu: s("gpu")?,
+            gpu_mode: s("gpu_mode")?,
+            unit: s("unit")?,
+            cc,
+            pim: f("pim_throughput")?,
+            gpu_tp: f("gpu_throughput")?,
+            pim_per_watt: f("pim_per_watt")?,
+            gpu_per_watt: f("gpu_per_watt")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::Campaign;
+
+    #[test]
+    fn config_json_is_stable_and_index_free() {
+        let pts = Campaign::builtin("fig4").unwrap().points();
+        // Same content at a different index → same config.
+        let mut moved = pts[3];
+        moved.index = 17;
+        assert_eq!(moved.config_json(), pts[3].config_json());
+        // Different content → different config.
+        assert_ne!(pts[0].config_json(), pts[1].config_json());
+        // Deterministic serialization.
+        assert_eq!(
+            pts[0].config_json().compact(),
+            pts[0].config_json().compact()
+        );
+    }
+
+    #[test]
+    fn result_json_round_trips_exactly() {
+        for p in Campaign::builtin("fig5").unwrap().points().iter().take(4) {
+            let r = p.eval().unwrap();
+            let back = PointResult::from_json(&Json::parse(&r.to_json().compact()).unwrap())
+                .unwrap();
+            assert_eq!(back, r);
+        }
+    }
+
+    #[test]
+    fn elementwise_carries_cc_others_do_not() {
+        let fig4 = Campaign::builtin("fig4").unwrap().points();
+        assert!(fig4[0].eval().unwrap().cc.is_some());
+        let fig5 = Campaign::builtin("fig5").unwrap().points();
+        assert!(fig5[0].eval().unwrap().cc.is_none());
+    }
+
+    #[test]
+    fn zero_dims_error_instead_of_panicking() {
+        use crate::pim::gates::GateSet;
+        use crate::sweep::ArchSpec;
+        let mut p = Campaign::builtin("fig4").unwrap().points()[0];
+        p.arch = ArchSpec::with_dims(GateSet::MemristiveNor, 0, 1024);
+        let err = p.eval().err().expect("zero rows must fail, not panic");
+        assert!(format!("{err}").contains("positive"));
+    }
+
+    #[test]
+    fn theoretical_baseline_is_at_least_experimental() {
+        let pts = Campaign::builtin("fig5").unwrap().points();
+        // Points come in (experimental, theoretical) pairs per grid cell.
+        for pair in pts.chunks(2) {
+            let e = pair[0].eval().unwrap();
+            let t = pair[1].eval().unwrap();
+            assert_eq!(e.workload, t.workload);
+            assert!(t.gpu_tp >= e.gpu_tp, "{}: theo < exp", e.label);
+        }
+    }
+}

@@ -1,0 +1,215 @@
+//! Streaming sweep reporters: CSV and JSONL rows are written (and
+//! flushed) as each point completes, so campaigns with thousands of
+//! points emit results incrementally instead of buffering; the aligned
+//! `table` format necessarily buffers and renders at the end.
+//!
+//! Every format shares one flat row schema ([`CSV_HEADER`]) regardless of
+//! workload kind — inapplicable cells (e.g. `cc` for a matmul point) are
+//! empty/`null` — so heterogeneous campaigns still produce one
+//! machine-readable stream. All numeric cells go through the JSON
+//! writer's shortest-round-trip float formatting, which is what makes
+//! output byte-identical across `--jobs` levels and across cache
+//! hit/recompute runs.
+
+use std::io::{self, Write};
+
+use super::point::PointResult;
+use crate::util::json::Json;
+use crate::util::si;
+use crate::util::table::Table;
+
+/// Output format of `convpim sweep`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OutputFormat {
+    /// Aligned text table (buffered; human consumption).
+    Table,
+    /// One CSV row per point, streamed; header first.
+    Csv,
+    /// One compact JSON object per line, streamed.
+    Jsonl,
+}
+
+impl OutputFormat {
+    /// Parse a `--format` value.
+    pub fn parse(name: &str) -> Result<OutputFormat, String> {
+        match name {
+            "table" => Ok(OutputFormat::Table),
+            "csv" => Ok(OutputFormat::Csv),
+            "jsonl" => Ok(OutputFormat::Jsonl),
+            other => Err(format!(
+                "unknown sweep output format `{other}` (use table|csv|jsonl)"
+            )),
+        }
+    }
+}
+
+/// Column order of the CSV stream (and the field set of every JSONL row).
+pub const CSV_HEADER: &str = "point,arch,rows,cols,format,workload,gpu,gpu_mode,unit,\
+cc,pim_throughput,gpu_throughput,improvement,pim_per_watt,gpu_per_watt";
+
+/// Deterministic numeric cell: the JSON writer's float formatting
+/// (integers without a fraction, shortest-round-trip otherwise).
+fn num(x: f64) -> String {
+    Json::n(x).compact()
+}
+
+/// Render one result as a CSV row matching [`CSV_HEADER`]. None of the
+/// label fields can contain commas or quotes by construction, so no
+/// quoting is needed.
+pub fn csv_row(r: &PointResult) -> String {
+    format!(
+        "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+        r.label,
+        r.arch,
+        r.rows,
+        r.cols,
+        r.format,
+        r.workload,
+        r.gpu,
+        r.gpu_mode,
+        r.unit,
+        r.cc.map(num).unwrap_or_default(),
+        num(r.pim),
+        num(r.gpu_tp),
+        num(r.improvement()),
+        num(r.pim_per_watt),
+        num(r.gpu_per_watt),
+    )
+}
+
+/// Render one result as a compact JSONL line (no trailing newline).
+pub fn jsonl_row(r: &PointResult) -> String {
+    r.to_json().compact()
+}
+
+/// Render buffered results as the human-readable table.
+pub fn render_table(results: &[PointResult]) -> Table {
+    let mut t = Table::new(&[
+        "point",
+        "unit",
+        "CC",
+        "PIM",
+        "GPU",
+        "improvement",
+        "PIM/W",
+        "GPU/W",
+    ]);
+    for r in results {
+        t.row(vec![
+            r.label.clone(),
+            r.unit.clone(),
+            r.cc.map(|c| format!("{c:.1}")).unwrap_or_default(),
+            si(r.pim),
+            si(r.gpu_tp),
+            format!("{:.2}x", r.improvement()),
+            si(r.pim_per_watt),
+            si(r.gpu_per_watt),
+        ]);
+    }
+    t
+}
+
+/// An incremental writer for one campaign run: construct, feed each
+/// result via [`Streamer::emit`] (in order — `run_points` guarantees
+/// that), then [`Streamer::finish`] to recover the underlying writer.
+pub struct Streamer<W: Write> {
+    format: OutputFormat,
+    w: W,
+    /// Buffered rows (table format only).
+    buffered: Vec<PointResult>,
+}
+
+impl<W: Write> Streamer<W> {
+    /// Wrap a writer; the CSV header is written immediately so even an
+    /// empty campaign produces a well-formed stream.
+    pub fn new(format: OutputFormat, mut w: W) -> io::Result<Streamer<W>> {
+        if format == OutputFormat::Csv {
+            writeln!(w, "{CSV_HEADER}")?;
+        }
+        Ok(Streamer {
+            format,
+            w,
+            buffered: Vec::new(),
+        })
+    }
+
+    /// Write (streaming formats) or buffer (table) one result. Streamed
+    /// lines are flushed eagerly so a consumer sees progress live.
+    pub fn emit(&mut self, r: &PointResult) -> io::Result<()> {
+        match self.format {
+            OutputFormat::Table => {
+                self.buffered.push(r.clone());
+                Ok(())
+            }
+            OutputFormat::Csv => {
+                writeln!(self.w, "{}", csv_row(r))?;
+                self.w.flush()
+            }
+            OutputFormat::Jsonl => {
+                writeln!(self.w, "{}", jsonl_row(r))?;
+                self.w.flush()
+            }
+        }
+    }
+
+    /// Finish the stream (renders the table for the buffered format) and
+    /// return the writer.
+    pub fn finish(mut self) -> io::Result<W> {
+        if self.format == OutputFormat::Table {
+            write!(self.w, "{}", render_table(&self.buffered).text())?;
+        }
+        self.w.flush()?;
+        Ok(self.w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::Campaign;
+
+    fn sample() -> PointResult {
+        Campaign::builtin("fig4").unwrap().points()[0].eval().unwrap()
+    }
+
+    #[test]
+    fn csv_row_matches_header_arity() {
+        let row = csv_row(&sample());
+        assert_eq!(
+            row.split(',').count(),
+            CSV_HEADER.split(',').count(),
+            "row: {row}"
+        );
+        assert!(!row.contains('"'), "cells must not need quoting");
+    }
+
+    #[test]
+    fn jsonl_rows_parse_back() {
+        let line = jsonl_row(&sample());
+        assert!(!line.contains('\n'));
+        let parsed = Json::parse(&line).unwrap();
+        assert!(parsed.get("improvement").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn streamer_csv_headers_even_when_empty() {
+        let s = Streamer::new(OutputFormat::Csv, Vec::new()).unwrap();
+        let out = String::from_utf8(s.finish().unwrap()).unwrap();
+        assert_eq!(out.trim_end(), CSV_HEADER);
+    }
+
+    #[test]
+    fn streamer_table_buffers_until_finish() {
+        let mut s = Streamer::new(OutputFormat::Table, Vec::new()).unwrap();
+        s.emit(&sample()).unwrap();
+        let out = String::from_utf8(s.finish().unwrap()).unwrap();
+        assert!(out.contains("improvement"));
+        assert!(out.contains("elementwise-add"));
+    }
+
+    #[test]
+    fn format_parse() {
+        assert_eq!(OutputFormat::parse("csv").unwrap(), OutputFormat::Csv);
+        assert!(OutputFormat::parse("yaml").is_err());
+    }
+}

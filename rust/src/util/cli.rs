@@ -97,6 +97,7 @@ fn is_switch(name: &str) -> bool {
     matches!(
         name,
         "help" | "verbose" | "quiet" | "fast" | "markdown" | "csv" | "json" | "no-measure"
+            | "no-cache"
     )
 }
 
@@ -137,6 +138,15 @@ mod tests {
         let a = parse(&["run", "--no-measure", "fig3"]);
         assert!(a.switch("no-measure"));
         assert_eq!(a.positional, vec!["fig3"]);
+    }
+
+    #[test]
+    fn no_cache_does_not_swallow_positional() {
+        // Same regression class as --no-measure: `sweep --no-cache fig4`
+        // must keep the campaign name positional.
+        let a = parse(&["sweep", "--no-cache", "fig4"]);
+        assert!(a.switch("no-cache"));
+        assert_eq!(a.positional, vec!["fig4"]);
     }
 
     #[test]

@@ -69,6 +69,23 @@ impl Json {
         }
     }
 
+    /// Get a non-negative integer (a number with no fractional part that
+    /// fits `u64` exactly).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) if n.fract() == 0.0 && *n >= 0.0 && *n < 9e15 => Some(*n as u64),
+            _ => None,
+        }
+    }
+
+    /// Get a boolean.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     /// Get an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
@@ -406,5 +423,24 @@ mod tests {
     #[test]
     fn nonfinite_becomes_null() {
         assert_eq!(Json::n(f64::INFINITY).compact(), "null");
+    }
+
+    #[test]
+    fn typed_accessors() {
+        assert_eq!(Json::i(1024).as_u64(), Some(1024));
+        assert_eq!(Json::n(1.5).as_u64(), None);
+        assert_eq!(Json::n(-1.0).as_u64(), None);
+        assert_eq!(Json::Bool(true).as_bool(), Some(true));
+        assert_eq!(Json::i(1).as_bool(), None);
+    }
+
+    #[test]
+    fn float_round_trip_is_exact() {
+        // The writer's shortest-round-trip formatting is what makes
+        // cached sweep results byte-identical to recomputed ones.
+        for &x in &[0.1, 1.0 / 3.0, 2.33e14, 1.34e17, 6.4e-15] {
+            let text = Json::n(x).compact();
+            assert_eq!(Json::parse(&text).unwrap().as_f64(), Some(x), "{text}");
+        }
     }
 }

@@ -1,0 +1,208 @@
+//! Integration tests for the sweep-campaign engine: registry equivalence
+//! (the acceptance bar: `sweep fig4` == the Fig. 4 registry numbers),
+//! cache hit/miss behavior, and byte-identical streamed output across
+//! worker counts and across cache/recompute runs.
+
+use std::fs;
+use std::path::PathBuf;
+
+use convpim::coordinator::{self, Ctx};
+use convpim::gpumodel::{GpuSpec, Roofline};
+use convpim::metrics;
+use convpim::pim::arch::PimArch;
+use convpim::pim::fixed::FixedOp;
+use convpim::pim::gates::GateSet;
+use convpim::pim::matpim::NumFmt;
+use convpim::pim::softfloat::Format;
+use convpim::sweep::{
+    run_points, Campaign, OutputFormat, PointResult, ResultCache, Streamer,
+};
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "convpim_sweep_it_{tag}_{}",
+        std::process::id()
+    ));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A small heterogeneous campaign touching every workload kind (cheap
+/// formats only, so the test stays fast).
+fn mixed_campaign() -> Campaign {
+    Campaign::from_json_text(
+        r#"{
+          "name": "mixed",
+          "archs": [{"set": "memristive"}],
+          "formats": ["fixed16"],
+          "workloads": [
+            {"kind": "elementwise", "op": "add"},
+            {"kind": "matmul", "n": 8},
+            {"kind": "cnn", "model": "alexnet", "training": false},
+            {"kind": "attention-decode", "seq": 128}
+          ],
+          "gpus": [{"gpu": "a6000", "mode": "experimental"}]
+        }"#,
+    )
+    .unwrap()
+}
+
+/// Render a campaign's stream at a given worker count / cache setting.
+fn render(
+    campaign: &Campaign,
+    format: OutputFormat,
+    jobs: usize,
+    cache: Option<&ResultCache>,
+) -> (String, usize, usize) {
+    let points = campaign.points();
+    let mut streamer = Streamer::new(format, Vec::new()).unwrap();
+    let outcome = run_points(&points, jobs, cache, &mut |_, r| {
+        streamer.emit(r).unwrap();
+        true
+    });
+    assert_eq!(outcome.failures(), 0);
+    let bytes = streamer.finish().unwrap();
+    (
+        String::from_utf8(bytes).unwrap(),
+        outcome.hits,
+        outcome.computed,
+    )
+}
+
+#[test]
+fn sweep_fig4_reproduces_registry_numbers_exactly() {
+    // The acceptance bar: the sweep engine's fig4 campaign must produce
+    // the same values as the registry's Fig. 4 path. Both go through
+    // metrics::cc_point, so equality is exact, not approximate.
+    let points = Campaign::builtin("fig4").unwrap().points();
+    let results: Vec<PointResult> = points.iter().map(|p| p.eval().unwrap()).collect();
+
+    let arch = PimArch::paper(GateSet::MemristiveNor);
+    let gpu = Roofline::new(GpuSpec::a6000());
+    let formats = [
+        NumFmt::Fixed(8),
+        NumFmt::Fixed(16),
+        NumFmt::Fixed(32),
+        NumFmt::Float(Format::FP16),
+        NumFmt::Float(Format::FP32),
+        NumFmt::Float(Format::FP64),
+    ];
+    let expect = metrics::cc_sweep(
+        GateSet::MemristiveNor,
+        &arch,
+        &gpu,
+        &formats,
+        &FixedOp::all(),
+    );
+
+    assert_eq!(results.len(), expect.len());
+    for (r, e) in results.iter().zip(&expect) {
+        assert_eq!(r.format, e.fmt.name());
+        assert_eq!(r.workload, format!("elementwise-{}", e.op.name()));
+        assert_eq!(r.cc, Some(e.cc), "{}", r.label);
+        assert_eq!(r.pim, e.pim_ops, "{}", r.label);
+        assert_eq!(r.gpu_tp, e.gpu_ops, "{}", r.label);
+        assert_eq!(r.improvement(), e.improvement(), "{}", r.label);
+    }
+}
+
+#[test]
+fn fig4_experiment_table_matches_sweep_engine() {
+    // The ported registry experiment delegates to the same campaign; its
+    // JSON payload must carry the sweep's improvement values.
+    let mut ctx = Ctx::analytic();
+    let exp = coordinator::run_experiment("fig4", &mut ctx).unwrap();
+    let rows = exp.json.get("points").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 24);
+
+    let mut results: Vec<PointResult> = Campaign::builtin("fig4")
+        .unwrap()
+        .points()
+        .iter()
+        .map(|p| p.eval().unwrap())
+        .collect();
+    results.sort_by(|a, b| a.cc.partial_cmp(&b.cc).unwrap());
+    for (row, r) in rows.iter().zip(&results) {
+        assert_eq!(
+            row.get("improvement").unwrap().as_f64().unwrap(),
+            r.improvement()
+        );
+        assert_eq!(row.get("cc").unwrap().as_f64(), r.cc);
+    }
+}
+
+#[test]
+fn second_run_of_unchanged_campaign_computes_zero_points() {
+    let dir = temp_dir("hits");
+    let cache = ResultCache::new(&dir);
+    let campaign = mixed_campaign();
+    let n = campaign.points().len();
+
+    let (csv1, hits1, computed1) = render(&campaign, OutputFormat::Csv, 1, Some(&cache));
+    assert_eq!((hits1, computed1), (0, n), "cold cache must compute all");
+
+    let (csv2, hits2, computed2) = render(&campaign, OutputFormat::Csv, 1, Some(&cache));
+    assert_eq!(
+        (hits2, computed2),
+        (n, 0),
+        "an unchanged campaign re-run must execute zero points"
+    );
+    // Cache-served output is byte-identical to the computed run.
+    assert_eq!(csv1, csv2);
+
+    // A changed point misses while unchanged ones still hit.
+    let mut changed = campaign.clone();
+    changed.workloads.push(convpim::sweep::WorkloadSpec::Matmul(16));
+    let points = changed.points();
+    let outcome = run_points(&points, 1, Some(&cache), &mut |_, _| true);
+    assert_eq!(outcome.failures(), 0);
+    assert_eq!(outcome.hits, n);
+    assert_eq!(outcome.computed, 1);
+
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn streamed_output_is_byte_identical_across_jobs() {
+    let campaign = Campaign::builtin("fig5").unwrap();
+    let (csv1, _, _) = render(&campaign, OutputFormat::Csv, 1, None);
+    let (csv8, _, _) = render(&campaign, OutputFormat::Csv, 8, None);
+    assert_eq!(csv1, csv8, "CSV must not depend on worker count");
+    assert_eq!(csv1.lines().count(), campaign.len() + 1, "header + one row per point");
+
+    let (jl1, _, _) = render(&campaign, OutputFormat::Jsonl, 1, None);
+    let (jl8, _, _) = render(&campaign, OutputFormat::Jsonl, 8, None);
+    assert_eq!(jl1, jl8, "JSONL must not depend on worker count");
+    assert_eq!(jl1.lines().count(), campaign.len());
+}
+
+#[test]
+fn cache_hits_preserve_byte_identical_output_across_jobs() {
+    // The full acceptance chain: cold run at --jobs 8, warm run at
+    // --jobs 1 — different scheduling, different cache states, same bytes.
+    let dir = temp_dir("warmcold");
+    let cache = ResultCache::new(&dir);
+    let campaign = mixed_campaign();
+    let (cold, _, computed) = render(&campaign, OutputFormat::Jsonl, 8, Some(&cache));
+    assert_eq!(computed, campaign.len());
+    let (warm, hits, _) = render(&campaign, OutputFormat::Jsonl, 1, Some(&cache));
+    assert_eq!(hits, campaign.len());
+    assert_eq!(cold, warm);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn deterministic_point_ordering_under_parallel_execution() {
+    let points = Campaign::builtin("sens-dims").unwrap().points();
+    let mut emitted: Vec<usize> = Vec::new();
+    let outcome = run_points(&points, 4, None, &mut |i, _| {
+        emitted.push(i);
+        true
+    });
+    assert_eq!(outcome.failures(), 0);
+    assert_eq!(emitted, (0..points.len()).collect::<Vec<_>>());
+    // Results vector is in input order too.
+    for (p, r) in points.iter().zip(&outcome.results) {
+        assert_eq!(r.as_ref().unwrap().label, p.label());
+    }
+}
