@@ -7,6 +7,7 @@ use super::{Ctx, ExperimentResult, Section};
 use crate::gpumodel::{GpuDtype, GpuSpec, Roofline};
 use crate::metrics;
 use crate::pim::arch::PimArch;
+use crate::pim::conv;
 use crate::pim::fixed::FixedOp;
 use crate::pim::gates::GateSet;
 use crate::pim::matpim::{CnnPimModel, NumFmt};
@@ -767,6 +768,127 @@ pub fn sens_fp16(ctx: &mut Ctx) -> Result<ExperimentResult> {
             .into(),
     ];
     Ok(r)
+}
+
+// ---------------------------------------------------------------------------
+// Executed convolution cross-validation
+// ---------------------------------------------------------------------------
+
+/// `conv-exec`: one down-scaled model-zoo conv layer *executed* on the
+/// crossbar simulator via im2col ([`crate::pim::conv`]) and compared cell
+/// by cell against the analytic [`CnnPimModel`] prediction. This is the
+/// validation layer beneath Figures 6/7: the analytic per-MAC latency the
+/// figures are built from is reproduced exactly by real microcode
+/// execution, and the executed output is bit-identical to a host
+/// reference. The experiment *fails* (instead of merely noting) on any
+/// deviation.
+///
+/// Fast contexts run the cheap fixed8 cells on both gate sets; full runs
+/// add the fp32 cell on the memristive set (the Figure 6 configuration).
+pub fn conv_exec(ctx: &mut Ctx) -> Result<ExperimentResult> {
+    let workload = crate::workloads::models::alexnet();
+    let (layer, full) = workload
+        .find_conv("conv2")
+        .expect("alexnet has a second conv layer");
+    let scale = 16;
+    let spec = full.scaled(scale);
+
+    let mut cells: Vec<(GateSet, NumFmt)> = vec![
+        (GateSet::MemristiveNor, NumFmt::Fixed(8)),
+        (GateSet::DramMaj, NumFmt::Fixed(8)),
+    ];
+    if !ctx.fast {
+        cells.push((GateSet::MemristiveNor, NumFmt::Float(Format::FP32)));
+    }
+
+    let mut t = Table::new(&[
+        "set",
+        "format",
+        "MACs",
+        "cyc/MAC measured",
+        "cyc/MAC analytic",
+        "gates/MAC measured",
+        "gates/MAC analytic",
+        "move cyc/MAC",
+        "xbars/row",
+        "bit-exact",
+    ]);
+    let mut json_rows = Vec::new();
+    for &(set, fmt) in &cells {
+        let arch = PimArch::paper(set);
+        let (input, weights) = conv::seeded_operands(&spec, fmt, ctx.seed);
+        let run = conv::execute_conv(&spec, fmt, set, &input, &weights, arch.rows as usize)?;
+        let reference = conv::reference_conv(&spec, fmt, &input, &weights);
+        let check = metrics::conv_exec_check(&run, &reference);
+        anyhow::ensure!(
+            check.passes(),
+            "executed conv deviates from the analytic model: {} \
+             (measured {} vs analytic {} cycles/MAC, bit_exact={})",
+            check.label,
+            check.measured_mac_cycles,
+            check.analytic_mac_cycles,
+            check.bit_exact
+        );
+        t.row(vec![
+            format!("{set:?}"),
+            fmt.name(),
+            run.macs.to_string(),
+            check.measured_mac_cycles.to_string(),
+            check.analytic_mac_cycles.to_string(),
+            check.measured_mac_gates.to_string(),
+            check.analytic_mac_gates.to_string(),
+            format!("{:.1}", check.move_cycles_per_mac),
+            run.crossbar_span(arch.cols).to_string(),
+            check.bit_exact.to_string(),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("set", Json::s(format!("{set:?}"))),
+            ("format", Json::s(fmt.name())),
+            ("macs", Json::i(run.macs as i64)),
+            ("mac_cycles_measured", Json::i(check.measured_mac_cycles as i64)),
+            ("mac_cycles_analytic", Json::i(check.analytic_mac_cycles as i64)),
+            ("mac_gates_measured", Json::i(check.measured_mac_gates as i64)),
+            ("mac_gates_analytic", Json::i(check.analytic_mac_gates as i64)),
+            ("move_cycles_per_mac", Json::n(check.move_cycles_per_mac)),
+            ("move_gates_per_mac", Json::n(run.move_gates_per_mac())),
+            ("total_gates_per_mac", Json::n(run.total_gates_per_mac())),
+            ("program_width", Json::i(check.program_width as i64)),
+            ("crossbar_span", Json::i(run.crossbar_span(arch.cols) as i64)),
+            ("bit_exact", Json::Bool(check.bit_exact)),
+        ]));
+    }
+
+    Ok(ExperimentResult {
+        id: "conv-exec".into(),
+        title: format!(
+            "Executed convolution vs analytic model ({} {} /{scale} -> {})",
+            workload.name,
+            layer.name,
+            spec.label()
+        ),
+        sections: vec![Section {
+            caption: "im2col execution on the crossbar simulator (seeded operands, \
+                      bit-exact vs host reference)"
+                .into(),
+            table: t,
+        }],
+        notes: vec![
+            "measured == analytic per-MAC cost is enforced, not observed: the conv schedule \
+             embeds the standard scalar mul/add microcode via column relocation (pim/conv.rs), \
+             so Fig. 6/7's per-MAC latencies are backed by executed gates"
+                .into(),
+            "`move cyc/MAC` quantifies the operand-staging cost the paper's upper-bound model \
+             deliberately ignores (§5)"
+                .into(),
+            "`xbars/row` is how many physical crossbars one row's bit-fields span at the \
+             architecture's column width — wide layouts (fp32, large K·K·Cin) are \
+             multi-crossbar rows, the analogue of MatPIM's row-footprint spill"
+                .into(),
+            "full runs add the fp32/memristive cell; fast mode executes the fixed8 cells only"
+                .into(),
+        ],
+        json: Json::obj(vec![("cells", Json::arr(json_rows))]),
+    })
 }
 
 /// S3: PIM parallelism (crossbar dimension sweep).

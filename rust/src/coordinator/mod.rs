@@ -145,11 +145,12 @@ impl ExperimentResult {
     }
 }
 
-/// All experiment ids, in paper order.
+/// All experiment ids, in paper order (the trailing `conv-exec` is the
+/// executed-convolution cross-validation added on top of the paper set).
 pub fn all_ids() -> Vec<&'static str> {
     vec![
         "table1", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "sens-gpu", "sens-fp16",
-        "sens-dims",
+        "sens-dims", "conv-exec",
     ]
 }
 
@@ -203,6 +204,7 @@ pub fn run_experiment(id: &str, ctx: &mut Ctx) -> Result<ExperimentResult> {
         "sens-gpu" => experiments::sens_gpu(ctx),
         "sens-fp16" => experiments::sens_fp16(ctx),
         "sens-dims" => experiments::sens_dims(ctx),
+        "conv-exec" => experiments::conv_exec(ctx),
         other => anyhow::bail!(
             "unknown experiment `{other}`; available: {}",
             all_ids().join(", ")

@@ -10,8 +10,11 @@
 //!   arrays executing column-parallel logic gates (memristive stateful logic
 //!   and in-DRAM majority gates), plus microcode compilers for the AritPIM
 //!   bit-serial element-parallel arithmetic suite (fixed-point and IEEE-754
-//!   floating-point) and the MatPIM matrix-multiplication / convolution
-//!   schedules, and architecture-scale throughput/energy models. The
+//!   floating-point), the MatPIM matrix-multiplication / convolution
+//!   schedules, an *executed* im2col conv engine ([`pim::conv`]: model-zoo
+//!   layers run bit-exactly with per-MAC costs tied to the analytic CNN
+//!   model by construction), and architecture-scale throughput/energy
+//!   models. The
 //!   execution core is **bit-sliced**: each column is packed into `u64`
 //!   row-words, so one column-parallel gate costs one word op per 64 rows,
 //!   and tall executions shard their row-words across a hand-rolled thread

@@ -14,10 +14,11 @@
 
 use crate::gpumodel::Roofline;
 use crate::pim::arch::PimArch;
+use crate::pim::conv::ConvRun;
 use crate::pim::fixed::FixedOp;
 use crate::pim::gates::GateSet;
 use crate::pim::isa::Program;
-use crate::pim::matpim::NumFmt;
+use crate::pim::matpim::{CnnPimModel, NumFmt};
 
 /// Compute complexity of a compiled routine: gates per I/O bit.
 pub fn compute_complexity(prog: &Program, io_bits: u64) -> f64 {
@@ -128,6 +129,89 @@ pub const CC_THRESHOLD: f64 = 10.0;
 /// the paper's Figure 5 crossover).
 pub const REUSE_THRESHOLD: f64 = 20.0;
 
+/// Measured-vs-analytic cross-check of one *executed* conv layer.
+///
+/// The executed engine ([`crate::pim::conv`]) reports what the simulator
+/// actually did; [`CnnPimModel`] predicts what the paper's upper-bound
+/// model charges for the same `(format, gate set)`. This record puts the
+/// two side by side — the per-MAC compute latency and gate count must
+/// agree *exactly* (they are tied by construction: the conv schedule
+/// embeds the standard scalar mul/add programs via column relocation),
+/// and the output must be bit-identical to the host reference. Movement
+/// overhead, which the analytic model deliberately ignores, is reported
+/// but not matched.
+#[derive(Clone, Debug)]
+pub struct ConvExecCheck {
+    /// `(shape, format, set)` label for reports.
+    pub label: String,
+    /// Analytic per-MAC latency: [`CnnPimModel::mac_cycles`].
+    pub analytic_mac_cycles: u64,
+    /// Measured per-MAC compute latency from execution.
+    pub measured_mac_cycles: u64,
+    /// Analytic per-MAC gates: [`CnnPimModel::mac_gates`].
+    pub analytic_mac_gates: u64,
+    /// Measured per-MAC compute gates from execution.
+    pub measured_mac_gates: u64,
+    /// Measured data-movement cycles per MAC (analytic model: 0).
+    pub move_cycles_per_mac: f64,
+    /// Rows of the largest executed tile (measured row parallelism).
+    pub rows_used: usize,
+    /// Crossbar rows available (architecture crossbar height).
+    pub xbar_rows: usize,
+    /// Columns one row of the schedule occupies — compare against the
+    /// architecture's crossbar width via [`ConvRun::crossbar_span`]
+    /// (wide layouts span several physical crossbars per row).
+    ///
+    /// [`ConvRun::crossbar_span`]: crate::pim::conv::ConvRun::crossbar_span
+    pub program_width: u32,
+    /// Total MACs executed.
+    pub macs: u64,
+    /// Executed output is bit-identical to the host reference.
+    pub bit_exact: bool,
+}
+
+impl ConvExecCheck {
+    /// Measured per-MAC latency equals the analytic prediction exactly.
+    pub fn latency_matches(&self) -> bool {
+        self.measured_mac_cycles == self.analytic_mac_cycles
+    }
+
+    /// Measured per-MAC compute gates equal the analytic prediction.
+    pub fn gates_match(&self) -> bool {
+        self.measured_mac_gates == self.analytic_mac_gates
+    }
+
+    /// The full acceptance predicate: bit-exact output and exact
+    /// latency/gate agreement.
+    pub fn passes(&self) -> bool {
+        self.bit_exact && self.latency_matches() && self.gates_match()
+    }
+}
+
+/// Compare an executed conv layer against the analytic CNN model and the
+/// host reference output.
+pub fn conv_exec_check(run: &ConvRun, reference: &[u64]) -> ConvExecCheck {
+    let model = CnnPimModel::new(run.fmt, run.set, run.macs as f64);
+    ConvExecCheck {
+        label: format!(
+            "{} {} on {}",
+            run.spec.label(),
+            run.fmt.name(),
+            run.set.name()
+        ),
+        analytic_mac_cycles: model.mac_cycles(),
+        measured_mac_cycles: run.mac_cycles,
+        analytic_mac_gates: model.mac_gates(),
+        measured_mac_gates: run.mac_gates,
+        move_cycles_per_mac: run.move_cycles_per_mac(),
+        rows_used: run.max_tile_rows,
+        xbar_rows: run.xbar_rows,
+        program_width: run.program_width,
+        macs: run.macs,
+        bit_exact: run.output == reference,
+    }
+}
+
 /// Classify a workload by the Figure 8 criteria.
 pub fn classify(workload: &str, cc: f64, reuse: f64) -> Criteria {
     let verdict = if cc <= CC_THRESHOLD || reuse <= REUSE_THRESHOLD {
@@ -222,6 +306,29 @@ mod tests {
             "improvement = {}",
             add32.improvement()
         );
+    }
+
+    #[test]
+    fn conv_exec_check_ties_execution_to_model() {
+        use crate::pim::conv;
+        use crate::util::rng::Rng;
+        use crate::workloads::ConvSpec;
+        let spec = ConvSpec { cin: 2, cout: 2, h: 3, w: 3, k: 3, stride: 1, pad: 1 };
+        let fmt = NumFmt::Fixed(8);
+        let mut rng = Rng::new(71);
+        let input = rng.vec_bits((spec.cin * spec.h * spec.w) as usize, 8);
+        let weights = rng.vec_bits(spec.cout as usize * spec.patch_len(), 8);
+        for set in GateSet::all() {
+            let run = conv::execute_conv(&spec, fmt, set, &input, &weights, 1024).unwrap();
+            let reference = conv::reference_conv(&spec, fmt, &input, &weights);
+            let check = conv_exec_check(&run, &reference);
+            assert!(check.passes(), "{check:?}");
+            assert!(check.move_cycles_per_mac > 0.0, "movement must be visible");
+            // A corrupted output must fail the bit-exactness arm.
+            let mut bad = reference.clone();
+            bad[0] ^= 1;
+            assert!(!conv_exec_check(&run, &bad).passes());
+        }
     }
 
     #[test]

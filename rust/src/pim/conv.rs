@@ -1,0 +1,703 @@
+//! Executed 2D convolution on the crossbar via im2col.
+//!
+//! Everything before this module *models* convolution (MAC counts fed into
+//! [`CnnPimModel`]); this module *executes* it, bit-exactly, on the
+//! simulated crossbar — closing the loop between the paper's analytic
+//! Figures 6/7 numbers and the microcode they are derived from.
+//!
+//! ## The im2col mapping
+//!
+//! One crossbar row computes one output spatial position of one output
+//! channel (the bit-serial element-parallel discipline of AritPIM/MatPIM):
+//!
+//! * the row's **patch field** `A` holds the position's im2col patch —
+//!   the `L = K × K × Cin` input elements the output depends on — one
+//!   `N`-bit little-endian bit-field per element;
+//! * the **weight field** `W` holds the output channel's `L` weights,
+//!   bit-sliced into the same column layout and *replicated* down all rows
+//!   (a host broadcast, the analogue of MatPIM's broadcast step);
+//! * the MAC schedule then runs `L` reduction steps. Each step stages one
+//!   `(A[t], W[t])` pair into the operand fields of an embedded copy of
+//!   the **standard scalar multiply program** ([`fixed`] / [`float`]),
+//!   executes it, stages the product and the rolling accumulator into an
+//!   embedded copy of the **standard scalar add program**, executes that,
+//!   and writes the sum back to the `acc` field. In-place accumulation,
+//!   K×K×Cin deep.
+//!
+//! Embedding uses [`Program::extend_relocated`] — a pure column rename —
+//! so each MAC step costs *exactly* `mul.cycles() + add.cycles()` compute
+//! cycles and `mul.gates() + add.gates()` compute gates: the same numbers
+//! [`CnnPimModel`] charges per MAC. That is the cross-validation contract:
+//! the measured per-MAC latency of an executed layer equals the analytic
+//! per-MAC latency **by construction**, and the output is bit-identical to
+//! a host-side reference ([`reference_conv`]). Data movement (operand
+//! staging, accumulator writeback) is tracked separately — it is the part
+//! the paper's upper-bound model deliberately ignores, and reporting it
+//! alongside quantifies what that idealization hides.
+//!
+//! Outputs larger than one crossbar are split into (channel × row-range)
+//! tiles ([`crate::pim::tile`]) and executed concurrently on the
+//! process-wide thread pool, one [`Crossbar`] instance per tile.
+//!
+//! ```
+//! use convpim::pim::conv::{execute_conv, reference_conv};
+//! use convpim::pim::gates::GateSet;
+//! use convpim::pim::matpim::{scalar_costs, NumFmt};
+//! use convpim::workloads::ConvSpec;
+//!
+//! // A tiny 2-channel 3x3 layer in 8-bit fixed point.
+//! let spec = ConvSpec { cin: 2, cout: 2, h: 3, w: 3, k: 3, stride: 1, pad: 1 };
+//! let input: Vec<u64> = (0..18u64).map(|i| (i * 7 + 3) % 256).collect();
+//! let weights: Vec<u64> = (0..36u64).map(|i| (i * 5 + 1) % 256).collect();
+//! let fmt = NumFmt::Fixed(8);
+//! let run = execute_conv(&spec, fmt, GateSet::MemristiveNor, &input, &weights, 1024).unwrap();
+//! // Bit-identical to the nested-loop host reference…
+//! assert_eq!(run.output, reference_conv(&spec, fmt, &input, &weights));
+//! // …and the executed per-MAC latency equals the analytic model's exactly.
+//! let c = scalar_costs(fmt, GateSet::MemristiveNor);
+//! assert_eq!(run.mac_cycles, c.mul_cycles + c.add_cycles);
+//! ```
+//!
+//! [`CnnPimModel`]: crate::pim::matpim::CnnPimModel
+//! [`Crossbar`]: crate::pim::xbar::Crossbar
+//! [`fixed`]: crate::pim::fixed
+//! [`float`]: crate::pim::float
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::Result;
+
+use super::fixed::FixedOp;
+use super::gates::GateSet;
+use super::isa::{Col, Instr, Program};
+use super::matpim::NumFmt;
+use super::softfloat;
+use super::tile::Tiling;
+use super::xbar::Crossbar;
+use crate::util::pool::Pool;
+use crate::util::rng::Rng;
+use crate::workloads::ConvSpec;
+
+/// Column layout of the im2col MAC schedule (one crossbar row = one
+/// output element).
+#[derive(Clone, Copy, Debug)]
+pub struct ConvLayout {
+    /// Element width in bits.
+    pub bits: u32,
+    /// Patch length `L = K × K × Cin`.
+    pub l: usize,
+    /// First column of the patch field `A` (`L` elements).
+    pub a: Col,
+    /// First column of the weight field `W` (`L` elements, replicated
+    /// down the rows).
+    pub w: Col,
+    /// First column of the `N`-bit accumulator / output field.
+    pub acc: Col,
+    /// Dedicated scratch column for 2-NOT copies (NOR set).
+    pub tmp: Col,
+    /// Base column of the embedded scalar multiply program (its operand
+    /// fields sit at `mul_base + [0, N)` and `mul_base + [N, 2N)`, its
+    /// product at `mul_base + [2N, ..)` — the standard layout, relocated).
+    pub mul_base: Col,
+    /// Base column of the embedded scalar add program.
+    pub add_base: Col,
+    /// Total crossbar width the schedule needs.
+    pub width: Col,
+}
+
+impl ConvLayout {
+    fn new(bits: u32, l: usize, mul_width: Col, add_width: Col) -> ConvLayout {
+        let ln = l as Col * bits;
+        let a = 0;
+        let w = ln;
+        let acc = 2 * ln;
+        let tmp = acc + bits;
+        let mul_base = tmp + 1;
+        let add_base = mul_base + mul_width;
+        ConvLayout {
+            bits,
+            l,
+            a,
+            w,
+            acc,
+            tmp,
+            mul_base,
+            add_base,
+            width: add_base + add_width,
+        }
+    }
+
+    /// Column of bit `j` of patch element `t`.
+    #[inline]
+    pub fn a_col(&self, t: usize, j: u32) -> Col {
+        self.a + t as Col * self.bits + j
+    }
+
+    /// Column of bit `j` of weight element `t`.
+    #[inline]
+    pub fn w_col(&self, t: usize, j: u32) -> Col {
+        self.w + t as Col * self.bits + j
+    }
+}
+
+/// A compiled MAC schedule for one (format, patch length, gate set), with
+/// its compute-vs-movement cost split.
+///
+/// The schedule is channel-independent: the same program runs for every
+/// output channel and every tile — only the loaded fields differ.
+#[derive(Clone, Debug)]
+pub struct ConvProgram {
+    /// The straight-line microcode (all `L` MAC steps).
+    pub prog: Program,
+    /// Field layout the loader must follow.
+    pub lay: ConvLayout,
+    /// Compute cycles of one MAC — exactly the standard scalar programs'
+    /// `mul.cycles() + add.cycles()`, i.e. [`CnnPimModel::mac_cycles`].
+    ///
+    /// [`CnnPimModel::mac_cycles`]: crate::pim::matpim::CnnPimModel::mac_cycles
+    pub mac_cycles: u64,
+    /// Compute gates of one MAC (`mul.gates() + add.gates()`).
+    pub mac_gates: u64,
+    /// Data-movement cycles of the whole row schedule (operand staging,
+    /// accumulator writeback, accumulator init) — the overhead the
+    /// analytic upper bound ignores.
+    pub move_cycles: u64,
+    /// Data-movement gates of the whole row schedule (2-NOT copies count
+    /// as gates on the NOR set; AAP copies on DRAM do not).
+    pub move_gates: u64,
+}
+
+impl ConvProgram {
+    /// Total cycles of the row schedule (`L` MACs + movement).
+    pub fn row_cycles(&self) -> u64 {
+        self.lay.l as u64 * self.mac_cycles + self.move_cycles
+    }
+}
+
+/// Copy one column into another through the layout's scratch column:
+/// two NOTs on the NOR set (stateful logic has no native copy), one AAP
+/// `Copy` on DRAM.
+fn emit_move(prog: &mut Program, set: GateSet, tmp: Col, src: Col, dst: Col) {
+    debug_assert!(src != dst && src != tmp && dst != tmp);
+    match set {
+        GateSet::MemristiveNor => {
+            prog.push(Instr::Not { a: src, out: tmp });
+            prog.push(Instr::Not { a: tmp, out: dst });
+        }
+        GateSet::DramMaj => {
+            prog.push(Instr::Copy { a: src, out: dst });
+        }
+    }
+}
+
+/// Compile the im2col MAC schedule for a patch of `l` elements in `fmt`
+/// on `set`.
+///
+/// Panics on unsupported formats (fixed widths above 32 bits) or `l == 0`;
+/// [`execute_conv`] validates before calling.
+pub fn conv_program(fmt: NumFmt, l: usize, set: GateSet) -> ConvProgram {
+    assert!(l > 0, "empty patch");
+    if let NumFmt::Fixed(n) = fmt {
+        assert!((1..=32).contains(&n), "fixed width {n} unsupported");
+    }
+    let n = fmt.bits();
+    let mul = fmt.program(FixedOp::Mul, set);
+    let add = fmt.program(FixedOp::Add, set);
+    let lay = ConvLayout::new(n, l, mul.width(), add.width());
+    // Both compilers use the same reserved prefix: operand `u` at +0,
+    // operand `v` at +N, result `z` at +2N (fixed mul's z is 2N wide; its
+    // low N bits are the wrapping product).
+    let (op_u, op_v, op_z) = (0 as Col, n, 2 * n);
+
+    let mut prog = Program::new(set);
+    // acc := 0 (+0.0 for floats: the all-zero bit pattern).
+    for j in 0..n {
+        prog.push(Instr::Set { out: lay.acc + j, bit: false });
+    }
+    for t in 0..l {
+        // Stage the operand pair into the multiplier's fields.
+        for j in 0..n {
+            emit_move(&mut prog, set, lay.tmp, lay.a_col(t, j), lay.mul_base + op_u + j);
+            emit_move(&mut prog, set, lay.tmp, lay.w_col(t, j), lay.mul_base + op_v + j);
+        }
+        prog.extend_relocated(&mul, lay.mul_base);
+        // Stage (product, acc) into the adder's fields. The low N product
+        // bits are the wrapping fixed product / the whole float result.
+        for j in 0..n {
+            emit_move(&mut prog, set, lay.tmp, lay.mul_base + op_z + j, lay.add_base + op_u + j);
+            emit_move(&mut prog, set, lay.tmp, lay.acc + j, lay.add_base + op_v + j);
+        }
+        prog.extend_relocated(&add, lay.add_base);
+        // acc := sum.
+        for j in 0..n {
+            emit_move(&mut prog, set, lay.tmp, lay.add_base + op_z + j, lay.acc + j);
+        }
+    }
+    debug_assert!(prog.validate_for(set).is_ok());
+    debug_assert!(prog.width() <= lay.width);
+
+    let mac_cycles = mul.cycles() + add.cycles();
+    let mac_gates = mul.gates() + add.gates();
+    let compute_cycles = l as u64 * mac_cycles;
+    let compute_gates = l as u64 * mac_gates;
+    ConvProgram {
+        move_cycles: prog.cycles() - compute_cycles,
+        move_gates: prog.gates() - compute_gates,
+        prog,
+        lay,
+        mac_cycles,
+        mac_gates,
+    }
+}
+
+/// im2col gather: patch element `t` of flattened output position `pos`,
+/// zero for padding. Reduction order is channel-major:
+/// `t = (c·K + ky)·K + kx`.
+fn patch_value(spec: &ConvSpec, input: &[u64], wo: u32, pos: usize, t: usize) -> u64 {
+    let k = spec.k as usize;
+    let c = t / (k * k);
+    let ky = (t / k) % k;
+    let kx = t % k;
+    let oh = pos / wo as usize;
+    let ow = pos % wo as usize;
+    let iy = (oh * spec.stride as usize + ky) as i64 - spec.pad as i64;
+    let ix = (ow * spec.stride as usize + kx) as i64 - spec.pad as i64;
+    if iy < 0 || ix < 0 || iy >= spec.h as i64 || ix >= spec.w as i64 {
+        return 0;
+    }
+    input[(c * spec.h as usize + iy as usize) * spec.w as usize + ix as usize]
+}
+
+/// The record of one executed conv layer: bit patterns out, plus the
+/// measured quantities the metrics hook compares against the analytic
+/// model ([`crate::metrics::conv_exec_check`]).
+#[derive(Clone, Debug)]
+pub struct ConvRun {
+    /// The (possibly down-scaled) shape that was executed.
+    pub spec: ConvSpec,
+    /// Number format.
+    pub fmt: NumFmt,
+    /// Gate set.
+    pub set: GateSet,
+    /// Output bit patterns, flattened `[cout][ho][wo]`.
+    pub output: Vec<u64>,
+    /// Measured compute cycles per MAC (constant across MACs by
+    /// construction — see [`ConvProgram::mac_cycles`]).
+    pub mac_cycles: u64,
+    /// Measured compute gates per MAC.
+    pub mac_gates: u64,
+    /// Data-movement cycles per row schedule (`L` MACs' worth).
+    pub move_cycles_per_row: u64,
+    /// Data-movement gates per row schedule.
+    pub move_gates_per_row: u64,
+    /// Instructions in the compiled tile program.
+    pub program_len: usize,
+    /// Crossbar width the tile program needs.
+    pub program_width: u32,
+    /// Total crossbar cycles of one tile execution.
+    pub tile_cycles: u64,
+    /// Number of tiles (crossbar instances) the output was sharded into.
+    pub tiles: usize,
+    /// Rows of the largest tile — the measured row parallelism.
+    pub max_tile_rows: usize,
+    /// Rows available per crossbar (the architecture's crossbar height).
+    pub xbar_rows: usize,
+    /// Total multiply-accumulates executed.
+    pub macs: u64,
+    /// Row-gates the simulator actually executed, summed over tiles
+    /// (compute + movement; equals `program.gates() × Σ tile rows`).
+    pub executed_row_gates: u64,
+}
+
+impl ConvRun {
+    /// Average data-movement cycles per MAC (the overhead the analytic
+    /// upper bound ignores).
+    pub fn move_cycles_per_mac(&self) -> f64 {
+        self.move_cycles_per_row as f64 / (self.spec.patch_len() as f64)
+    }
+
+    /// Average data-movement gates per MAC.
+    pub fn move_gates_per_mac(&self) -> f64 {
+        self.move_gates_per_row as f64 / (self.spec.patch_len() as f64)
+    }
+
+    /// Measured total gates per MAC including movement.
+    pub fn total_gates_per_mac(&self) -> f64 {
+        self.executed_row_gates as f64 / self.macs as f64
+    }
+
+    /// How many physical crossbars of `cols` columns one row of this
+    /// schedule spans.
+    ///
+    /// The simulator executes the full-width row directly (its crossbar is
+    /// as wide as the program needs); on the modeled hardware a row whose
+    /// bit-fields exceed one crossbar's width spills across that many
+    /// adjacent crossbars — the same row-footprint spill
+    /// [`MatmulModel`](crate::pim::matpim::MatmulModel) charges. Reported
+    /// by `exec-conv` and the `conv-exec` experiment so wide layouts (e.g.
+    /// fp32 with large K·K·Cin) are visibly multi-crossbar instead of
+    /// silently assuming a 1024-wide array.
+    pub fn crossbar_span(&self, cols: u64) -> u64 {
+        assert!(cols > 0);
+        (self.program_width as u64).div_ceil(cols)
+    }
+}
+
+/// Deterministic seeded operands for executing `spec` in `fmt`: raw
+/// N-bit patterns for fixed point, small finite values for floats (the
+/// MAC-chain property is the interesting one; NaN/Inf propagation is
+/// covered by the arithmetic suites). Returns `(input, weights)` in the
+/// lengths [`execute_conv`] expects.
+///
+/// Every caller that cross-validates (CLI, sweep points, the registry
+/// experiment, the example) must generate operands through this one
+/// function so "bit-exact vs reference" always refers to the same data.
+pub fn seeded_operands(spec: &ConvSpec, fmt: NumFmt, seed: u64) -> (Vec<u64>, Vec<u64>) {
+    let mut rng = Rng::new(seed);
+    let n_in = (spec.cin * spec.h * spec.w) as usize;
+    let n_w = spec.cout as usize * spec.patch_len();
+    match fmt {
+        NumFmt::Fixed(nb) => (rng.vec_bits(n_in, nb), rng.vec_bits(n_w, nb)),
+        NumFmt::Float(f) => (
+            (0..n_in).map(|_| f.from_f64(rng.f64() * 4.0 - 2.0)).collect(),
+            (0..n_w).map(|_| f.from_f64(rng.f64() * 4.0 - 2.0)).collect(),
+        ),
+    }
+}
+
+/// Execute a conv layer bit-exactly on the simulated crossbar.
+///
+/// `input` is `cin × h × w` bit patterns (row-major `[c][y][x]`),
+/// `weights` is `cout × K × K × cin` patterns ordered `[co][c][ky][kx]`
+/// (the patch order). `xbar_rows` is the crossbar height tiles must fit
+/// (e.g. `PimArch::rows`). Tiles execute concurrently on the global pool;
+/// the result is deterministic and thread-count independent (execution is
+/// row-local, see [`crate::pim::xbar`]).
+pub fn execute_conv(
+    spec: &ConvSpec,
+    fmt: NumFmt,
+    set: GateSet,
+    input: &[u64],
+    weights: &[u64],
+    xbar_rows: usize,
+) -> Result<ConvRun> {
+    anyhow::ensure!(spec.is_valid(), "invalid conv shape {spec:?}");
+    if let NumFmt::Fixed(n) = fmt {
+        anyhow::ensure!(
+            (1..=32).contains(&n),
+            "fixed width {n} not executable (1..=32)"
+        );
+    }
+    anyhow::ensure!(xbar_rows > 0, "crossbar must have rows");
+    let l = spec.patch_len();
+    anyhow::ensure!(
+        input.len() == (spec.cin * spec.h * spec.w) as usize,
+        "input length {} != cin*h*w = {}",
+        input.len(),
+        spec.cin * spec.h * spec.w
+    );
+    anyhow::ensure!(
+        weights.len() == spec.cout as usize * l,
+        "weights length {} != cout*K*K*cin = {}",
+        weights.len(),
+        spec.cout as usize * l
+    );
+
+    let cp = conv_program(fmt, l, set);
+    let n = cp.lay.bits;
+    let (_, wo) = spec.out_dims();
+    let positions = spec.positions();
+    let tiling = Tiling::plan(positions, spec.cout, xbar_rows);
+
+    let mut output = vec![0u64; positions * spec.cout as usize];
+    let executed_gates = AtomicU64::new(0);
+    {
+        let mut rest: &mut [u64] = &mut output;
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
+            Vec::with_capacity(tiling.tiles.len());
+        for tile in &tiling.tiles {
+            let (chunk, tail) = rest.split_at_mut(tile.rows);
+            rest = tail;
+            let tile = *tile;
+            let (cp, gates) = (&cp, &executed_gates);
+            tasks.push(Box::new(move || {
+                let mut x = Crossbar::new(tile.rows, cp.lay.width as usize);
+                // Patch field: one im2col element per column group, one
+                // output position per row.
+                let mut vals = vec![0u64; tile.rows];
+                for t in 0..l {
+                    for (r, v) in vals.iter_mut().enumerate() {
+                        *v = patch_value(spec, input, wo, tile.pos0 + r, t);
+                    }
+                    x.write_field(cp.lay.a_col(t, 0), n, &vals);
+                }
+                // Weight field: the tile's channel, broadcast to all rows.
+                for t in 0..l {
+                    let wv = weights[tile.channel as usize * l + t];
+                    vals.iter_mut().for_each(|v| *v = wv);
+                    x.write_field(cp.lay.w_col(t, 0), n, &vals);
+                }
+                x.execute(&cp.prog);
+                gates.fetch_add(x.row_gates(), Ordering::Relaxed);
+                chunk.copy_from_slice(&x.read_field(cp.lay.acc, n, tile.rows));
+            }));
+        }
+        Pool::global().run(tasks);
+    }
+
+    Ok(ConvRun {
+        spec: *spec,
+        fmt,
+        set,
+        output,
+        mac_cycles: cp.mac_cycles,
+        mac_gates: cp.mac_gates,
+        move_cycles_per_row: cp.move_cycles,
+        move_gates_per_row: cp.move_gates,
+        program_len: cp.prog.len(),
+        program_width: cp.lay.width,
+        tile_cycles: cp.prog.cycles(),
+        tiles: tiling.len(),
+        max_tile_rows: tiling.max_rows(),
+        xbar_rows,
+        macs: spec.macs(),
+        executed_row_gates: executed_gates.into_inner(),
+    })
+}
+
+/// The plain nested-loop host reference the crossbar execution must match
+/// bit-for-bit: wrapping modulo-2^N arithmetic for fixed point, the
+/// [`softfloat`] oracle applied in the *same* reduction order
+/// (`acc = acc + A[t]·W[t]`, `t` channel-major, `acc` starting at +0)
+/// for floats.
+pub fn reference_conv(spec: &ConvSpec, fmt: NumFmt, input: &[u64], weights: &[u64]) -> Vec<u64> {
+    let l = spec.patch_len();
+    let (_, wo) = spec.out_dims();
+    let positions = spec.positions();
+    let mut out = Vec::with_capacity(positions * spec.cout as usize);
+    for co in 0..spec.cout as usize {
+        for pos in 0..positions {
+            let mut acc = 0u64;
+            for t in 0..l {
+                let a = patch_value(spec, input, wo, pos, t);
+                let b = weights[co * l + t];
+                acc = match fmt {
+                    NumFmt::Fixed(n) => {
+                        let mask = if n == 64 { u64::MAX } else { (1u64 << n) - 1 };
+                        acc.wrapping_add(a.wrapping_mul(b) & mask) & mask
+                    }
+                    NumFmt::Float(f) => {
+                        let p = softfloat::apply(f, FixedOp::Mul, a, b);
+                        softfloat::apply(f, FixedOp::Add, acc, p)
+                    }
+                };
+            }
+            out.push(acc);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pim::matpim::scalar_costs;
+    use crate::pim::softfloat::Format;
+    use crate::util::rng::Rng;
+
+    fn rand_fixed(rng: &mut Rng, len: usize, bits: u32) -> Vec<u64> {
+        rng.vec_bits(len, bits)
+    }
+
+    #[test]
+    fn fixed8_small_layer_bit_exact_both_sets() {
+        let mut rng = Rng::new(61);
+        let spec = ConvSpec { cin: 2, cout: 3, h: 4, w: 5, k: 3, stride: 1, pad: 1 };
+        let input = rand_fixed(&mut rng, (spec.cin * spec.h * spec.w) as usize, 8);
+        let weights = rand_fixed(&mut rng, spec.cout as usize * spec.patch_len(), 8);
+        let fmt = NumFmt::Fixed(8);
+        let expect = reference_conv(&spec, fmt, &input, &weights);
+        for set in GateSet::all() {
+            let run = execute_conv(&spec, fmt, set, &input, &weights, 1024).unwrap();
+            assert_eq!(run.output, expect, "set={set:?}");
+            // Measured per-MAC compute latency equals the analytic model's.
+            let c = scalar_costs(fmt, set);
+            assert_eq!(run.mac_cycles, c.mul_cycles + c.add_cycles, "set={set:?}");
+            assert_eq!(run.mac_gates, c.mul_gates + c.add_gates, "set={set:?}");
+            assert_eq!(run.macs, spec.macs());
+        }
+    }
+
+    #[test]
+    fn strided_padded_and_1x1_shapes() {
+        let mut rng = Rng::new(62);
+        let fmt = NumFmt::Fixed(16);
+        for spec in [
+            ConvSpec { cin: 3, cout: 2, h: 7, w: 7, k: 3, stride: 2, pad: 0 },
+            ConvSpec { cin: 4, cout: 2, h: 5, w: 5, k: 1, stride: 1, pad: 0 },
+            ConvSpec { cin: 1, cout: 1, h: 5, w: 4, k: 5, stride: 1, pad: 2 },
+        ] {
+            let input = rand_fixed(&mut rng, (spec.cin * spec.h * spec.w) as usize, 16);
+            let weights = rand_fixed(&mut rng, spec.cout as usize * spec.patch_len(), 16);
+            let run =
+                execute_conv(&spec, fmt, GateSet::MemristiveNor, &input, &weights, 1024).unwrap();
+            assert_eq!(
+                run.output,
+                reference_conv(&spec, fmt, &input, &weights),
+                "{spec:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn fp32_layer_matches_softfloat_reference() {
+        let mut rng = Rng::new(63);
+        let spec = ConvSpec { cin: 2, cout: 2, h: 3, w: 3, k: 3, stride: 1, pad: 1 };
+        let fmt = NumFmt::Float(Format::FP32);
+        let f = Format::FP32;
+        let gen = |rng: &mut Rng, len: usize| -> Vec<u64> {
+            (0..len).map(|_| f.from_f64(rng.f64() * 4.0 - 2.0)).collect()
+        };
+        let input = gen(&mut rng, (spec.cin * spec.h * spec.w) as usize);
+        let weights = gen(&mut rng, spec.cout as usize * spec.patch_len());
+        let expect = reference_conv(&spec, fmt, &input, &weights);
+        let run =
+            execute_conv(&spec, fmt, GateSet::MemristiveNor, &input, &weights, 1024).unwrap();
+        assert_eq!(run.output, expect);
+        let c = scalar_costs(fmt, GateSet::MemristiveNor);
+        assert_eq!(run.mac_cycles, c.mul_cycles + c.add_cycles);
+    }
+
+    #[test]
+    fn tiling_across_crossbars_is_seamless() {
+        // Force multi-tile execution with a tiny crossbar height and check
+        // against the single-tile result and the reference.
+        let mut rng = Rng::new(64);
+        let spec = ConvSpec { cin: 1, cout: 2, h: 8, w: 8, k: 3, stride: 1, pad: 1 };
+        let fmt = NumFmt::Fixed(8);
+        let input = rand_fixed(&mut rng, 64, 8);
+        let weights = rand_fixed(&mut rng, 2 * 9, 8);
+        let whole =
+            execute_conv(&spec, fmt, GateSet::MemristiveNor, &input, &weights, 1024).unwrap();
+        let tiled = execute_conv(&spec, fmt, GateSet::MemristiveNor, &input, &weights, 7).unwrap();
+        assert_eq!(whole.output, tiled.output);
+        assert_eq!(whole.output, reference_conv(&spec, fmt, &input, &weights));
+        assert_eq!(whole.tiles, 2); // one tile per channel
+        assert_eq!(tiled.tiles, 2 * 64usize.div_ceil(7));
+        assert_eq!(tiled.max_tile_rows, 7);
+    }
+
+    #[test]
+    fn cost_split_is_exhaustive_and_gates_account() {
+        // compute + movement = total, and the crossbar's executed row-gate
+        // counter agrees with the program's static count.
+        let spec = ConvSpec { cin: 2, cout: 1, h: 3, w: 3, k: 3, stride: 1, pad: 1 };
+        let l = spec.patch_len();
+        for set in GateSet::all() {
+            let cp = conv_program(NumFmt::Fixed(8), l, set);
+            assert_eq!(
+                cp.prog.cycles(),
+                l as u64 * cp.mac_cycles + cp.move_cycles,
+                "{set:?}"
+            );
+            assert_eq!(
+                cp.prog.gates(),
+                l as u64 * cp.mac_gates + cp.move_gates,
+                "{set:?}"
+            );
+            cp.prog.validate_for(set).unwrap();
+            let mut rng = Rng::new(65);
+            let input = rng.vec_bits(18, 8);
+            let weights = rng.vec_bits(l, 8);
+            let run = execute_conv(&spec, NumFmt::Fixed(8), set, &input, &weights, 64).unwrap();
+            assert_eq!(
+                run.executed_row_gates,
+                cp.prog.gates() * spec.positions() as u64,
+                "{set:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn operand_fields_survive_execution() {
+        // The schedule must not clobber the patch or weight fields (the
+        // accumulator is the only mutated reserved field).
+        let spec = ConvSpec { cin: 1, cout: 1, h: 3, w: 3, k: 3, stride: 1, pad: 1 };
+        let l = spec.patch_len();
+        let cp = conv_program(NumFmt::Fixed(8), l, GateSet::MemristiveNor);
+        let mut rng = Rng::new(66);
+        let mut x = Crossbar::new(9, cp.lay.width as usize);
+        let patches: Vec<Vec<u64>> = (0..l).map(|_| rng.vec_bits(9, 8)).collect();
+        let weights = rng.vec_bits(l, 8);
+        for (t, p) in patches.iter().enumerate() {
+            x.write_field(cp.lay.a_col(t, 0), 8, p);
+            x.write_field(cp.lay.w_col(t, 0), 8, &vec![weights[t]; 9]);
+        }
+        x.execute(&cp.prog);
+        for (t, p) in patches.iter().enumerate() {
+            assert_eq!(&x.read_field(cp.lay.a_col(t, 0), 8, 9), p, "A[{t}] clobbered");
+            assert_eq!(
+                x.read_field(cp.lay.w_col(t, 0), 8, 9),
+                vec![weights[t]; 9],
+                "W[{t}] clobbered"
+            );
+        }
+    }
+
+    #[test]
+    fn seeded_operands_shapes_and_determinism() {
+        let spec = ConvSpec { cin: 2, cout: 3, h: 4, w: 5, k: 3, stride: 1, pad: 1 };
+        for fmt in [NumFmt::Fixed(8), NumFmt::Float(Format::FP32)] {
+            let (i1, w1) = seeded_operands(&spec, fmt, 9);
+            assert_eq!(i1.len(), (spec.cin * spec.h * spec.w) as usize);
+            assert_eq!(w1.len(), spec.cout as usize * spec.patch_len());
+            // Same seed → same data; different seed → different data.
+            assert_eq!(seeded_operands(&spec, fmt, 9), (i1.clone(), w1));
+            assert_ne!(seeded_operands(&spec, fmt, 10).0, i1);
+        }
+        // Fixed operands respect the field width.
+        let (i8, _) = seeded_operands(&spec, NumFmt::Fixed(8), 9);
+        assert!(i8.iter().all(|&v| v < 256));
+    }
+
+    #[test]
+    fn crossbar_span_reflects_program_width() {
+        let spec = ConvSpec { cin: 2, cout: 1, h: 3, w: 3, k: 3, stride: 1, pad: 1 };
+        let (input, weights) = seeded_operands(&spec, NumFmt::Fixed(8), 1);
+        let run = execute_conv(
+            &spec,
+            NumFmt::Fixed(8),
+            GateSet::MemristiveNor,
+            &input,
+            &weights,
+            1024,
+        )
+        .unwrap();
+        assert_eq!(
+            run.crossbar_span(1024),
+            (run.program_width as u64).div_ceil(1024)
+        );
+        // A and W fields alone are 2·L·N columns, so a width smaller than
+        // that must span more than one crossbar.
+        let two_fields = 2 * spec.patch_len() as u64 * 8;
+        assert!(run.program_width as u64 >= two_fields);
+        assert!(run.crossbar_span(two_fields / 2) >= 2);
+        assert_eq!(run.crossbar_span(u64::from(run.program_width)), 1);
+    }
+
+    #[test]
+    fn rejects_malformed_inputs() {
+        let spec = ConvSpec { cin: 1, cout: 1, h: 3, w: 3, k: 3, stride: 1, pad: 1 };
+        let fmt = NumFmt::Fixed(8);
+        let bad = ConvSpec { k: 9, pad: 0, ..spec };
+        assert!(execute_conv(&bad, fmt, GateSet::MemristiveNor, &[0; 9], &[0; 81], 64).is_err());
+        // Wrong operand lengths.
+        assert!(execute_conv(&spec, fmt, GateSet::MemristiveNor, &[0; 8], &[0; 9], 64).is_err());
+        assert!(execute_conv(&spec, fmt, GateSet::MemristiveNor, &[0; 9], &[0; 8], 64).is_err());
+        // Unsupported fixed width.
+        assert!(
+            execute_conv(&spec, NumFmt::Fixed(64), GateSet::MemristiveNor, &[0; 9], &[0; 9], 64)
+                .is_err()
+        );
+    }
+}

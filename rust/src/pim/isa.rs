@@ -74,6 +74,47 @@ impl Instr {
             Instr::Nor2 { .. } | Instr::Nor3 { .. } | Instr::Not { .. } | Instr::Maj3 { .. }
         )
     }
+
+    /// The same instruction with every column index shifted by `base`.
+    ///
+    /// Column translation preserves semantics, opcode counts and cycle
+    /// costs exactly — it is how a compiled scalar program (whose layout
+    /// starts at column 0) is embedded at an arbitrary offset inside a
+    /// larger program (see [`Program::extend_relocated`]).
+    #[inline]
+    pub fn relocated(self, base: Col) -> Instr {
+        match self {
+            Instr::Nor2 { a, b, out } => Instr::Nor2 {
+                a: a + base,
+                b: b + base,
+                out: out + base,
+            },
+            Instr::Nor3 { a, b, c, out } => Instr::Nor3 {
+                a: a + base,
+                b: b + base,
+                c: c + base,
+                out: out + base,
+            },
+            Instr::Not { a, out } => Instr::Not {
+                a: a + base,
+                out: out + base,
+            },
+            Instr::Maj3 { a, b, c, out } => Instr::Maj3 {
+                a: a + base,
+                b: b + base,
+                c: c + base,
+                out: out + base,
+            },
+            Instr::Copy { a, out } => Instr::Copy {
+                a: a + base,
+                out: out + base,
+            },
+            Instr::Set { out, bit } => Instr::Set {
+                out: out + base,
+                bit,
+            },
+        }
+    }
 }
 
 /// Aggregate opcode counts of a program.
@@ -226,6 +267,20 @@ impl Program {
             self.push(*i);
         }
     }
+
+    /// Concatenate another program with every column shifted by `base`.
+    ///
+    /// The embedded copy contributes exactly `other.gates()` gates and
+    /// `other.cycles()` cycles — relocation is a pure column rename. The
+    /// conv engine ([`crate::pim::conv`]) uses this to execute the
+    /// *standard* scalar mul/add microcode inside a larger MAC schedule, so
+    /// its measured per-MAC latency equals the analytic model's by
+    /// construction.
+    pub fn extend_relocated(&mut self, other: &Program, base: Col) {
+        for i in other.instrs() {
+            self.push(i.relocated(base));
+        }
+    }
 }
 
 #[cfg(test)]
@@ -266,6 +321,25 @@ mod tests {
         let mut p = Program::new(GateSet::MemristiveNor);
         p.push(Instr::Nor2 { a: 0, b: 2, out: 2 });
         assert!(p.validate_for(GateSet::MemristiveNor).is_err());
+    }
+
+    #[test]
+    fn extend_relocated_shifts_columns_and_preserves_costs() {
+        let mut inner = Program::new(GateSet::MemristiveNor);
+        inner.push(Instr::Set { out: 0, bit: true });
+        inner.push(Instr::Nor2 { a: 0, b: 1, out: 2 });
+        inner.push(Instr::Not { a: 2, out: 3 });
+        let mut outer = Program::new(GateSet::MemristiveNor);
+        outer.extend_relocated(&inner, 10);
+        assert_eq!(outer.gates(), inner.gates());
+        assert_eq!(outer.cycles(), inner.cycles());
+        assert_eq!(outer.counts(), inner.counts());
+        assert_eq!(outer.width(), inner.width() + 10);
+        assert_eq!(
+            outer.instrs()[1],
+            Instr::Nor2 { a: 10, b: 11, out: 12 }
+        );
+        outer.validate_for(GateSet::MemristiveNor).unwrap();
     }
 
     #[test]

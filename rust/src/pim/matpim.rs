@@ -193,6 +193,14 @@ impl CnnPimModel {
         c.mul_cycles + c.add_cycles
     }
 
+    /// Logic gates of one MAC (vectored mul + add) — the per-MAC gate
+    /// count the executed conv engine ([`crate::pim::conv`]) must
+    /// reproduce exactly.
+    pub fn mac_gates(&self) -> u64 {
+        let c = scalar_costs(self.fmt, self.set);
+        c.mul_gates + c.add_gates
+    }
+
     /// Images (inferences / training samples) per second.
     pub fn throughput(&self, arch: &PimArch) -> f64 {
         // R MACs proceed in parallel; a full image needs macs/R vectored

@@ -30,11 +30,16 @@
 //!   (fp16/fp32/fp64) with round-to-nearest-even and subnormal support.
 //! * [`matpim`] — MatPIM matrix-multiplication and 2D-convolution
 //!   schedules expressed as sequences of vectored arithmetic.
+//! * [`tile`] — output tiling of a conv layer across crossbar instances.
+//! * [`conv`] — the *executed* im2col convolution engine: model-zoo conv
+//!   layers run bit-exactly on the crossbar, with per-MAC costs tied to
+//!   the analytic [`matpim::CnnPimModel`] by construction.
 //! * [`arch`] — memory-scale architecture model (48 GB of crossbars):
 //!   throughput, power, and energy-per-operation.
 
 pub mod arch;
 pub mod builder;
+pub mod conv;
 pub mod elementwise;
 pub mod fixed;
 pub mod float;
@@ -43,6 +48,7 @@ pub mod isa;
 pub mod matpim;
 pub mod oracle;
 pub mod softfloat;
+pub mod tile;
 pub mod xbar;
 
 pub use gates::GateSet;

@@ -305,6 +305,51 @@ mod tests {
     }
 
     #[test]
+    fn conv_suite_bit_identical() {
+        // The im2col conv MAC schedules through the scalar oracle: packed
+        // engine and per-row/per-bit oracle must agree on the new program
+        // family too (the differential suite previously covered only
+        // fixed/float/matmul/elementwise).
+        use crate::pim::conv;
+        use crate::pim::matpim::NumFmt;
+        let mut rng = Rng::new(106);
+        let rows = 20; // not a multiple of 64
+        for set in GateSet::all() {
+            let l = 6;
+            let cp = conv::conv_program(NumFmt::Fixed(8), l, set);
+            cp.prog.validate_for(set).unwrap();
+            let mut fields: Vec<(Col, u32, Vec<u64>)> = Vec::new();
+            for t in 0..l {
+                // Per-row patches, replicated weights — the loader's shape.
+                fields.push((cp.lay.a_col(t, 0), 8, rng.vec_bits(rows, 8)));
+                fields.push((cp.lay.w_col(t, 0), 8, vec![rng.bits(8); rows]));
+            }
+            assert_engines_agree(&cp.prog, rows, &fields);
+        }
+    }
+
+    #[test]
+    fn conv_fp16_bit_identical() {
+        // One float conv schedule through the oracle (fp16 keeps the
+        // per-bool instruction count tractable).
+        use crate::pim::conv;
+        use crate::pim::matpim::NumFmt;
+        use crate::pim::softfloat::Format;
+        let mut rng = Rng::new(107);
+        let rows = 10;
+        let l = 3;
+        let cp = conv::conv_program(NumFmt::Float(Format::FP16), l, GateSet::MemristiveNor);
+        let n = Format::FP16.bits();
+        let mut fields: Vec<(Col, u32, Vec<u64>)> = Vec::new();
+        for t in 0..l {
+            let patches: Vec<u64> = (0..rows).map(|_| rng.float_pattern(5, 10)).collect();
+            fields.push((cp.lay.a_col(t, 0), n, patches));
+            fields.push((cp.lay.w_col(t, 0), n, vec![rng.float_pattern(5, 10); rows]));
+        }
+        assert_engines_agree(&cp.prog, rows, &fields);
+    }
+
+    #[test]
     fn elementwise_relu_bit_identical() {
         let mut rng = Rng::new(104);
         let rows = 130;

@@ -1,0 +1,124 @@
+//! Output tiling of a conv layer across crossbar instances.
+//!
+//! The im2col mapping ([`crate::pim::conv`]) gives every output spatial
+//! position its own crossbar row and every output channel its own weight
+//! broadcast, so the natural unit of crossbar work is a **tile**: one
+//! output channel × one contiguous range of output positions that fits the
+//! crossbar's row count. A layer whose output exceeds one crossbar is
+//! simply a list of tiles, each executed on its own [`Crossbar`] instance
+//! — independently, so the conv executor fans tiles out over the
+//! process-wide thread pool ([`crate::util::pool`]).
+//!
+//! [`Crossbar`]: crate::pim::xbar::Crossbar
+
+/// One unit of crossbar work: `rows` output positions of one output
+/// channel, starting at flattened position `pos0`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Tile {
+    /// Output channel index.
+    pub channel: u32,
+    /// First flattened output position (`oh * wo + ow`).
+    pub pos0: usize,
+    /// Number of positions (crossbar rows) in this tile.
+    pub rows: usize,
+}
+
+/// The tile decomposition of one conv layer's output.
+#[derive(Clone, Debug)]
+pub struct Tiling {
+    /// Rows available per crossbar instance.
+    pub xbar_rows: usize,
+    /// Output positions per channel.
+    pub positions: usize,
+    /// Output channels.
+    pub channels: u32,
+    /// Channel-major, position-ordered tiles covering every output
+    /// element exactly once.
+    pub tiles: Vec<Tile>,
+}
+
+impl Tiling {
+    /// Plan the tile list: channel-major, each channel's positions split
+    /// into contiguous chunks of at most `xbar_rows`.
+    ///
+    /// The order matters downstream: flattened output index
+    /// `channel × positions + pos` is monotone over the tile list, so the
+    /// executor can hand each tile a disjoint contiguous output slice.
+    pub fn plan(positions: usize, channels: u32, xbar_rows: usize) -> Tiling {
+        assert!(positions > 0 && channels > 0 && xbar_rows > 0);
+        let mut tiles = Vec::new();
+        for channel in 0..channels {
+            let mut pos0 = 0;
+            while pos0 < positions {
+                let rows = (positions - pos0).min(xbar_rows);
+                tiles.push(Tile { channel, pos0, rows });
+                pos0 += rows;
+            }
+        }
+        Tiling {
+            xbar_rows,
+            positions,
+            channels,
+            tiles,
+        }
+    }
+
+    /// Number of tiles (crossbar instances needed).
+    pub fn len(&self) -> usize {
+        self.tiles.len()
+    }
+
+    /// True when there are no tiles (never, for a valid plan).
+    pub fn is_empty(&self) -> bool {
+        self.tiles.is_empty()
+    }
+
+    /// Rows of the largest tile — the row-parallelism one crossbar
+    /// actually exploits for this layer.
+    pub fn max_rows(&self) -> usize {
+        self.tiles.iter().map(|t| t.rows).max().unwrap_or(0)
+    }
+
+    /// Fraction of crossbar rows the average tile occupies.
+    pub fn row_utilization(&self) -> f64 {
+        let used: usize = self.tiles.iter().map(|t| t.rows).sum();
+        used as f64 / (self.tiles.len() * self.xbar_rows) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_tile_when_everything_fits() {
+        let t = Tiling::plan(9, 1, 1024);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.tiles[0], Tile { channel: 0, pos0: 0, rows: 9 });
+        assert_eq!(t.max_rows(), 9);
+    }
+
+    #[test]
+    fn splits_positions_and_channels() {
+        let t = Tiling::plan(100, 3, 32);
+        // ceil(100/32) = 4 row-chunks per channel.
+        assert_eq!(t.len(), 12);
+        assert_eq!(t.max_rows(), 32);
+        // Every (channel, position) covered exactly once, in flattened
+        // output order.
+        let mut next = 0usize;
+        for tile in &t.tiles {
+            assert_eq!(tile.channel as usize * 100 + tile.pos0, next);
+            assert!(tile.rows <= 32 && tile.rows > 0);
+            next += tile.rows;
+        }
+        assert_eq!(next, 300);
+    }
+
+    #[test]
+    fn utilization_reflects_ragged_last_tile() {
+        let t = Tiling::plan(48, 1, 32);
+        assert_eq!(t.len(), 2);
+        assert!((t.row_utilization() - 48.0 / 64.0).abs() < 1e-12);
+    }
+}

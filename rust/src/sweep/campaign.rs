@@ -230,7 +230,9 @@ impl CnnModel {
         }
     }
 
-    fn from_name(name: &str) -> Option<CnnModel> {
+    /// Inverse of [`CnnModel::name`] (used by JSON parsing and the
+    /// `exec-conv` CLI's `model:layer` selector).
+    pub fn from_name(name: &str) -> Option<CnnModel> {
         CnnModel::all().into_iter().find(|m| m.name() == name)
     }
 }
@@ -251,6 +253,18 @@ pub enum WorkloadSpec {
     Decode {
         seq: u64,
     },
+    /// One model-zoo conv layer *executed* bit-exactly on the crossbar
+    /// simulator at a down-scaled shape, cross-validated against the
+    /// analytic CNN model (see [`crate::pim::conv`]). `conv` is the
+    /// 1-based index into the model's dense conv layers; `scale` divides
+    /// channels and spatial dims before execution. Evaluation *fails* if
+    /// the executed output is not bit-identical to the host reference or
+    /// the executed per-MAC latency deviates from the analytic one.
+    ConvExec {
+        model: CnnModel,
+        conv: u32,
+        scale: u32,
+    },
 }
 
 impl WorkloadSpec {
@@ -266,6 +280,9 @@ impl WorkloadSpec {
                 if training { "-train" } else { "" }
             ),
             WorkloadSpec::Decode { seq } => format!("decode-s{seq}"),
+            WorkloadSpec::ConvExec { model, conv, scale } => {
+                format!("conv-exec-{}-c{conv}-s{scale}", model.name())
+            }
         }
     }
 
@@ -276,6 +293,7 @@ impl WorkloadSpec {
             WorkloadSpec::Matmul(_) => "matmul/s",
             WorkloadSpec::Cnn { .. } => "img/s",
             WorkloadSpec::Decode { .. } => "tok/s",
+            WorkloadSpec::ConvExec { .. } => "mac/s",
         }
     }
 
@@ -298,6 +316,12 @@ impl WorkloadSpec {
             WorkloadSpec::Decode { seq } => Json::obj(vec![
                 ("kind", Json::s("attention-decode")),
                 ("seq", Json::i(seq as i64)),
+            ]),
+            WorkloadSpec::ConvExec { model, conv, scale } => Json::obj(vec![
+                ("kind", Json::s("conv-exec")),
+                ("model", Json::s(model.name())),
+                ("conv", Json::i(conv as i64)),
+                ("scale", Json::i(scale as i64)),
             ]),
         }
     }
@@ -344,8 +368,46 @@ impl WorkloadSpec {
                 let seq = j.get("seq").and_then(Json::as_u64).unwrap_or(2048);
                 Ok(WorkloadSpec::Decode { seq })
             }
+            Some("conv-exec") => {
+                let name = j
+                    .get("model")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("conv-exec workload needs a `model`"))?;
+                let model = CnnModel::from_name(name).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown cnn model `{name}`; available: {}",
+                        CnnModel::all()
+                            .iter()
+                            .map(|m| m.name())
+                            .collect::<Vec<_>>()
+                            .join(", ")
+                    )
+                })?;
+                let conv = j
+                    .get("conv")
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| anyhow::anyhow!("conv-exec needs a 1-based `conv` index"))?;
+                let conv = u32::try_from(conv)
+                    .ok()
+                    .filter(|&c| c >= 1)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("conv-exec `conv` index must be in 1..=u32::MAX, got {conv}")
+                    })?;
+                let scale = j.get("scale").and_then(Json::as_u64).unwrap_or(16);
+                // Reject 0 explicitly: ConvSpec::scaled clamps 0 to 1, so a
+                // truncated/zero scale would silently execute the layer at
+                // full size (hundreds of millions of simulated MACs).
+                let scale = u32::try_from(scale)
+                    .ok()
+                    .filter(|&s| s >= 1)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("conv-exec `scale` must be in 1..=u32::MAX, got {scale}")
+                    })?;
+                Ok(WorkloadSpec::ConvExec { model, conv, scale })
+            }
             other => anyhow::bail!(
-                "workload `kind` must be elementwise|matmul|cnn|attention-decode, got {other:?}"
+                "workload `kind` must be elementwise|matmul|cnn|attention-decode|conv-exec, \
+                 got {other:?}"
             ),
         }
     }
@@ -568,13 +630,30 @@ impl Campaign {
                     mode: GpuMode::Experimental,
                 }],
             }),
+            "conv-exec" => Some(Campaign {
+                name: "conv-exec".into(),
+                archs: vec![
+                    ArchSpec::paper(GateSet::MemristiveNor),
+                    ArchSpec::paper(GateSet::DramMaj),
+                ],
+                formats: vec![NumFmt::Fixed(8), NumFmt::Float(Format::FP32)],
+                workloads: vec![WorkloadSpec::ConvExec {
+                    model: CnnModel::AlexNet,
+                    conv: 2,
+                    scale: 16,
+                }],
+                gpus: vec![GpuBaseline {
+                    gpu: GpuSpec::a6000(),
+                    mode: GpuMode::Experimental,
+                }],
+            }),
             _ => None,
         }
     }
 
     /// Names accepted by [`Campaign::builtin`].
     pub fn builtin_names() -> &'static [&'static str] {
-        &["fig4", "fig5", "sens-dims"]
+        &["fig4", "fig5", "sens-dims", "conv-exec"]
     }
 }
 
@@ -609,16 +688,59 @@ mod tests {
 
     #[test]
     fn campaign_json_round_trips() {
-        let c = Campaign::builtin("sens-dims").unwrap();
-        let text = c.to_json().pretty();
-        let back = Campaign::from_json_text(&text).unwrap();
-        assert_eq!(back.name, c.name);
-        assert_eq!(back.len(), c.len());
-        let (a, b) = (c.points(), back.points());
-        assert!(a
-            .iter()
-            .zip(&b)
-            .all(|(x, y)| x.config_json() == y.config_json()));
+        for name in ["sens-dims", "conv-exec"] {
+            let c = Campaign::builtin(name).unwrap();
+            let text = c.to_json().pretty();
+            let back = Campaign::from_json_text(&text).unwrap();
+            assert_eq!(back.name, c.name);
+            assert_eq!(back.len(), c.len());
+            let (a, b) = (c.points(), back.points());
+            assert!(a
+                .iter()
+                .zip(&b)
+                .all(|(x, y)| x.config_json() == y.config_json()));
+        }
+    }
+
+    #[test]
+    fn conv_exec_workload_parses_and_validates() {
+        let c = Campaign::from_json_text(
+            r#"{"archs": [{"set": "memristive"}], "formats": ["fixed8"],
+                "workloads": [{"kind": "conv-exec", "model": "alexnet", "conv": 2, "scale": 8}],
+                "gpus": [{"gpu": "a6000"}]}"#,
+        )
+        .unwrap();
+        assert_eq!(c.points()[0].workload.name(), "conv-exec-alexnet-c2-s8");
+        assert_eq!(c.points()[0].workload.unit(), "mac/s");
+        // Missing conv index and zero-based index are rejected.
+        assert!(Campaign::from_json_text(
+            r#"{"archs": [{"set": "memristive"}], "formats": ["fixed8"],
+                "workloads": [{"kind": "conv-exec", "model": "alexnet"}],
+                "gpus": [{"gpu": "a6000"}]}"#
+        )
+        .is_err());
+        assert!(Campaign::from_json_text(
+            r#"{"archs": [{"set": "memristive"}], "formats": ["fixed8"],
+                "workloads": [{"kind": "conv-exec", "model": "alexnet", "conv": 0}],
+                "gpus": [{"gpu": "a6000"}]}"#
+        )
+        .is_err());
+        // Values past u32 must error, not truncate (4294967296 would wrap
+        // `scale` to 0 → full-size execution; 4294967298 would wrap `conv`
+        // to a different layer).
+        assert!(Campaign::from_json_text(
+            r#"{"archs": [{"set": "memristive"}], "formats": ["fixed8"],
+                "workloads": [{"kind": "conv-exec", "model": "alexnet", "conv": 2,
+                               "scale": 4294967296}],
+                "gpus": [{"gpu": "a6000"}]}"#
+        )
+        .is_err());
+        assert!(Campaign::from_json_text(
+            r#"{"archs": [{"set": "memristive"}], "formats": ["fixed8"],
+                "workloads": [{"kind": "conv-exec", "model": "alexnet", "conv": 4294967298}],
+                "gpus": [{"gpu": "a6000"}]}"#
+        )
+        .is_err());
     }
 
     #[test]

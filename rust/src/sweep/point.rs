@@ -2,17 +2,20 @@
 //! ([`PointResult`]).
 //!
 //! A point is pure configuration: evaluating it ([`SweepPoint::eval`])
-//! runs the *analytic* models only — microcode compilation, the
-//! architecture-scale PIM model and the GPU roofline — never the measured
-//! PJRT series, so a point's result is a deterministic function of its
-//! [`SweepPoint::config_json`]. That is what makes the content-addressed
-//! result cache ([`super::ResultCache`]) sound.
+//! runs the *analytic* models — microcode compilation, the
+//! architecture-scale PIM model and the GPU roofline — plus, for
+//! `conv-exec` points, a deterministic seeded *bit-exact execution* on the
+//! crossbar simulator. Neither involves wall-clock measurement (never the
+//! measured PJRT series), so a point's result is a deterministic function
+//! of its [`SweepPoint::config_json`]. That is what makes the
+//! content-addressed result cache ([`super::ResultCache`]) sound.
 
 use anyhow::Result;
 
 use super::campaign::{ArchSpec, GpuBaseline, GpuMode, WorkloadSpec};
 use crate::gpumodel::{GpuDtype, Roofline};
 use crate::metrics;
+use crate::pim::conv;
 use crate::pim::matpim::{CnnPimModel, MatmulModel, NumFmt};
 use crate::util::json::Json;
 use crate::workloads::attention::{decode_workload, DecodeConfig};
@@ -47,6 +50,11 @@ pub struct SweepPoint {
 /// models) so stale cache entries miss instead of parsing wrong.
 pub const CONFIG_SCHEMA: i64 = 1;
 
+/// Fixed operand seed for `conv-exec` points: the executed result must be
+/// a pure function of the point's config (cache soundness), so the seed
+/// is a constant, not an input.
+const CONV_EXEC_SEED: u64 = 0xC0DE_C04E;
+
 impl SweepPoint {
     /// The canonical configuration document — the cache-key input. Two
     /// points with equal `config_json` are the same experiment by
@@ -79,7 +87,9 @@ impl SweepPoint {
     fn gpu_dtype(&self) -> GpuDtype {
         let half = self.fmt.bits() <= 16;
         match self.workload {
-            WorkloadSpec::Cnn { .. } if half => GpuDtype::F16Tensor,
+            WorkloadSpec::Cnn { .. } | WorkloadSpec::ConvExec { .. } if half => {
+                GpuDtype::F16Tensor
+            }
             _ if half => GpuDtype::F16,
             _ => GpuDtype::F32,
         }
@@ -154,6 +164,55 @@ impl SweepPoint {
                     gpu_tp,
                     pim_model.throughput_per_watt(&arch),
                 )
+            }
+            WorkloadSpec::ConvExec { model, conv, scale } => {
+                let w = model.workload();
+                let convs = w.conv_layers();
+                anyhow::ensure!(
+                    conv >= 1 && (conv as usize) <= convs.len(),
+                    "{} has {} executable conv layers; `conv` index {conv} is out of range",
+                    w.name,
+                    convs.len()
+                );
+                let (layer, full) = convs[conv as usize - 1];
+                let spec = full.scaled(scale);
+                // Deterministic seeded operands: the executed result must
+                // stay a pure function of the point's config (cache
+                // soundness), so the seed is a fixed constant.
+                let (input, weights) = conv::seeded_operands(&spec, self.fmt, CONV_EXEC_SEED);
+                let run = conv::execute_conv(
+                    &spec,
+                    self.fmt,
+                    self.arch.set,
+                    &input,
+                    &weights,
+                    arch.rows as usize,
+                )?;
+                let reference = conv::reference_conv(&spec, self.fmt, &input, &weights);
+                let check = metrics::conv_exec_check(&run, &reference);
+                anyhow::ensure!(
+                    check.passes(),
+                    "executed conv deviates from the analytic model / host reference: {} \
+                     (measured {} vs analytic {} cycles/MAC, bit_exact={})",
+                    check.label,
+                    check.measured_mac_cycles,
+                    check.analytic_mac_cycles,
+                    check.bit_exact
+                );
+                // Validated: report the architecture-scale MAC throughput
+                // (one MAC per row per mac_cycles) against the layer's
+                // batch-64 GPU roofline (FLOPs → MACs via /2) — the same
+                // batching formula the Cnn points use, via
+                // LayerCost::roofline_batched.
+                let pim = arch.throughput_ops(check.analytic_mac_cycles);
+                let traffic_scale = self.fmt.bits() as f64 / 32.0;
+                let (flops, bytes) = layer.roofline_batched(64.0);
+                let pair = (flops, bytes * traffic_scale);
+                let gpu_tp = match self.gpu.mode {
+                    GpuMode::Experimental => rl.workload_flops(&[pair], dtype) / 2.0,
+                    GpuMode::Theoretical => rl.peak(dtype) / 2.0,
+                };
+                (None, pim, gpu_tp, pim / arch.max_power_w)
             }
             WorkloadSpec::Decode { seq } => {
                 anyhow::ensure!(seq > 0, "decode context length must be positive");
@@ -332,6 +391,36 @@ mod tests {
         p.arch = ArchSpec::with_dims(GateSet::MemristiveNor, 0, 1024);
         let err = p.eval().err().expect("zero rows must fail, not panic");
         assert!(format!("{err}").contains("positive"));
+    }
+
+    #[test]
+    fn conv_exec_point_validates_execution() {
+        // The cheap (fixed8, memristive) cell of the builtin conv-exec
+        // campaign: evaluation executes the scaled layer on the simulator
+        // and only returns Ok if measured == analytic and output is
+        // bit-exact.
+        let pts = Campaign::builtin("conv-exec").unwrap().points();
+        let p = pts
+            .iter()
+            .find(|p| p.fmt.name() == "fixed8" && p.arch.name() == "memristive")
+            .unwrap();
+        let r = p.eval().unwrap();
+        assert_eq!(r.unit, "mac/s");
+        assert!(r.pim > 0.0 && r.gpu_tp > 0.0);
+        assert!(r.cc.is_none());
+    }
+
+    #[test]
+    fn conv_exec_out_of_range_layer_errors() {
+        use crate::sweep::{CnnModel, WorkloadSpec};
+        let mut p = Campaign::builtin("conv-exec").unwrap().points()[0];
+        p.workload = WorkloadSpec::ConvExec {
+            model: CnnModel::AlexNet,
+            conv: 99,
+            scale: 16,
+        };
+        let err = p.eval().err().expect("layer index 99 must fail");
+        assert!(format!("{err}").contains("out of range"));
     }
 
     #[test]

@@ -64,6 +64,7 @@ pub fn decode_workload(cfg: DecodeConfig) -> Workload {
             bytes: 4.0 * (4.0 * d * d + 8.0 * d), // weights + in/out vectors
             weight_bytes: 16.0 * d * d,
             params: 4.0 * d * d,
+            conv: None,
         });
         // Attention over the KV cache: q·Kᵀ (s×d) and p·V (s×d).
         let attn_macs = 2.0 * s * d;
@@ -77,6 +78,7 @@ pub fn decode_workload(cfg: DecodeConfig) -> Workload {
             bytes: 4.0 * (2.0 * s * d + 2.0 * s + 2.0 * d),
             weight_bytes: 0.0,
             params: 0.0,
+            conv: None,
         });
         // FFN: two d×(mult·d) matvecs.
         let ffn_macs = 2.0 * d * (cfg.ffn_mult as f64 * d);
@@ -88,6 +90,7 @@ pub fn decode_workload(cfg: DecodeConfig) -> Workload {
             bytes: 4.0 * (2.0 * cfg.ffn_mult as f64 * d * d + 2.0 * d * (1.0 + cfg.ffn_mult as f64)),
             weight_bytes: 8.0 * cfg.ffn_mult as f64 * d * d,
             params: 2.0 * cfg.ffn_mult as f64 * d * d,
+            conv: None,
         });
     }
     Workload {

@@ -31,6 +31,95 @@ pub enum LayerKind {
     Norm,
 }
 
+/// Full geometry of one dense 2D convolution layer — the executable
+/// counterpart of a `LayerKind::Conv` [`LayerCost`].
+///
+/// `LayerCost` carries only aggregate costs (MACs, traffic); `ConvSpec`
+/// keeps the shape so the same layer can also be *executed* bit-exactly
+/// on the crossbar simulator ([`crate::pim::conv`]). [`NetBuilder::conv`]
+/// records it on every dense conv layer it emits; grouped/depthwise
+/// convolutions (emitted manually, e.g. MobileNet) carry `None`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvSpec {
+    /// Input channels.
+    pub cin: u32,
+    /// Output channels.
+    pub cout: u32,
+    /// Input height.
+    pub h: u32,
+    /// Input width.
+    pub w: u32,
+    /// Square kernel size.
+    pub k: u32,
+    /// Stride (both dimensions).
+    pub stride: u32,
+    /// Zero padding (both dimensions).
+    pub pad: u32,
+}
+
+impl ConvSpec {
+    /// Output spatial dimensions `(ho, wo)`.
+    ///
+    /// Panics if the padded input is smaller than the kernel; use
+    /// [`ConvSpec::is_valid`] to pre-check untrusted shapes.
+    pub fn out_dims(&self) -> (u32, u32) {
+        assert!(self.is_valid(), "invalid conv shape {self:?}");
+        let o = |d: u32| (d + 2 * self.pad - self.k) / self.stride + 1;
+        (o(self.h), o(self.w))
+    }
+
+    /// True when the shape is well-formed (positive dims, kernel fits the
+    /// padded input).
+    pub fn is_valid(&self) -> bool {
+        self.cin > 0
+            && self.cout > 0
+            && self.k > 0
+            && self.stride > 0
+            && self.h + 2 * self.pad >= self.k
+            && self.w + 2 * self.pad >= self.k
+    }
+
+    /// im2col patch length: `K × K × Cin` reduction elements per output.
+    pub fn patch_len(&self) -> usize {
+        (self.k * self.k * self.cin) as usize
+    }
+
+    /// Number of output spatial positions `ho × wo`.
+    pub fn positions(&self) -> usize {
+        let (ho, wo) = self.out_dims();
+        ho as usize * wo as usize
+    }
+
+    /// Total multiply-accumulates of the layer.
+    pub fn macs(&self) -> u64 {
+        self.patch_len() as u64 * self.positions() as u64 * self.cout as u64
+    }
+
+    /// Down-scale channels and spatial dims by an integer factor (each
+    /// clamped so the shape stays valid), keeping kernel/stride/padding.
+    /// This is how a real model-zoo layer becomes small enough to execute
+    /// bit-exactly on the simulator in seconds.
+    pub fn scaled(&self, scale: u32) -> ConvSpec {
+        let scale = scale.max(1);
+        let min_sp = self.k.saturating_sub(2 * self.pad).max(1);
+        ConvSpec {
+            cin: (self.cin / scale).max(1),
+            cout: (self.cout / scale).max(1),
+            h: (self.h / scale).max(min_sp),
+            w: (self.w / scale).max(min_sp),
+            ..*self
+        }
+    }
+
+    /// One-line shape label, e.g. `3x224x224 -> 64 k11 s4 p2`.
+    pub fn label(&self) -> String {
+        format!(
+            "{}x{}x{} -> {} k{} s{} p{}",
+            self.cin, self.h, self.w, self.cout, self.k, self.stride, self.pad
+        )
+    }
+}
+
 /// One concrete layer instance with its costs.
 #[derive(Clone, Debug)]
 pub struct LayerCost {
@@ -46,12 +135,24 @@ pub struct LayerCost {
     pub weight_bytes: f64,
     /// Learnable parameters.
     pub params: f64,
+    /// Executable geometry for dense `Conv` layers (see [`ConvSpec`]).
+    pub conv: Option<ConvSpec>,
 }
 
 impl LayerCost {
     /// Operational intensity, FLOP/byte.
     pub fn oi(&self) -> f64 {
         self.flops / self.bytes.max(1.0)
+    }
+
+    /// This layer's `(flops, bytes)` roofline pair at batch `b`:
+    /// activation traffic scales with the batch, weight traffic is
+    /// amortized (read once per batch). The single source of the batching
+    /// formula — [`Workload::roofline_layers_batched`] and the sweep
+    /// engine's conv-exec GPU baseline both go through it.
+    pub fn roofline_batched(&self, b: f64) -> (f64, f64) {
+        let act = self.bytes - self.weight_bytes;
+        (self.flops * b, act * b + self.weight_bytes)
     }
 }
 
@@ -102,13 +203,7 @@ impl Workload {
     /// per batch) — the regime the paper's PyTorch measurements run in,
     /// and the reason CNN inference counts as a *high-reuse* workload.
     pub fn roofline_layers_batched(&self, b: f64) -> Vec<(f64, f64)> {
-        self.layers
-            .iter()
-            .map(|l| {
-                let act = l.bytes - l.weight_bytes;
-                (l.flops * b, act * b + l.weight_bytes)
-            })
-            .collect()
+        self.layers.iter().map(|l| l.roofline_batched(b)).collect()
     }
 
     /// Aggregate reuse (FLOP/byte) at batch `b`.
@@ -133,6 +228,7 @@ impl Workload {
                 bytes: 2.0 * l.bytes,
                 weight_bytes: 2.0 * l.weight_bytes,
                 params: 0.0,
+                conv: None,
             });
         }
         let params = self.total_params();
@@ -145,12 +241,39 @@ impl Workload {
             bytes: 12.0 * params,
             weight_bytes: 12.0 * params,
             params: 0.0,
+            conv: None,
         });
         Workload {
             name: format!("{}-train", self.name),
             layers,
             input: self.input,
         }
+    }
+
+    /// The executable dense conv layers of the network, in order:
+    /// `(layer, spec)` for every `LayerKind::Conv` layer that carries a
+    /// [`ConvSpec`].
+    pub fn conv_layers(&self) -> Vec<(&LayerCost, ConvSpec)> {
+        self.layers
+            .iter()
+            .filter(|l| l.kind == LayerKind::Conv)
+            .filter_map(|l| l.conv.map(|c| (l, c)))
+            .collect()
+    }
+
+    /// Find an executable conv layer by selector: `convN` (1-based index
+    /// into [`Workload::conv_layers`]), an exact layer name, or a layer
+    /// name prefix (`c2` matches `c2.conv5x5`).
+    pub fn find_conv(&self, sel: &str) -> Option<(&LayerCost, ConvSpec)> {
+        let convs = self.conv_layers();
+        if let Some(n) = sel.strip_prefix("conv").and_then(|s| s.parse::<usize>().ok()) {
+            return (n >= 1).then(|| convs.get(n - 1).copied()).flatten();
+        }
+        convs
+            .iter()
+            .find(|(l, _)| l.name == sel)
+            .or_else(|| convs.iter().find(|(l, _)| l.name.starts_with(sel)))
+            .copied()
     }
 
     /// The three paper models.
@@ -211,6 +334,15 @@ impl NetBuilder {
             bytes: in_bytes + 4.0 * params + out_bytes,
             weight_bytes: 4.0 * params,
             params,
+            conv: Some(ConvSpec {
+                cin: self.c,
+                cout,
+                h: self.h,
+                w: self.w,
+                k,
+                stride: s,
+                pad: p,
+            }),
         });
         self.c = cout;
         self.h = ho;
@@ -231,6 +363,7 @@ impl NetBuilder {
             bytes: 4.0 * (in_f + params + out_f as f64),
             weight_bytes: 4.0 * params,
             params,
+            conv: None,
         });
         self.c = out_f;
         self.h = 1;
@@ -249,6 +382,7 @@ impl NetBuilder {
             bytes: 8.0 * n,
             weight_bytes: 0.0,
             params: 0.0,
+            conv: None,
         });
         self
     }
@@ -264,6 +398,7 @@ impl NetBuilder {
             bytes: 8.0 * n + 16.0 * self.c as f64,
             weight_bytes: 16.0 * self.c as f64,
             params: 2.0 * self.c as f64,
+            conv: None,
         });
         self
     }
@@ -279,6 +414,7 @@ impl NetBuilder {
             bytes: 8.0 * n,
             weight_bytes: 0.0,
             params: 0.0,
+            conv: None,
         });
         self
     }
@@ -296,6 +432,7 @@ impl NetBuilder {
             bytes: 4.0 * (self.c * self.h * self.w) as f64 + 4.0 * n,
             weight_bytes: 0.0,
             params: 0.0,
+            conv: None,
         });
         self.h = ho;
         self.w = wo;
@@ -319,6 +456,7 @@ impl NetBuilder {
             bytes: 12.0 * n,
             weight_bytes: 0.0,
             params: 0.0,
+            conv: None,
         });
         self
     }
@@ -346,6 +484,52 @@ impl NetBuilder {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn conv_spec_recorded_and_consistent_with_macs() {
+        // Every dense conv layer carries a spec whose executable MAC count
+        // equals the analytic (bias-free) MAC count of the layer.
+        let m = models::alexnet();
+        let convs = m.conv_layers();
+        assert_eq!(convs.len(), 5);
+        for (l, spec) in &convs {
+            assert!(spec.is_valid(), "{}", l.name);
+            assert_eq!(spec.macs() as f64, l.macs, "{}", l.name);
+        }
+        // conv2 of AlexNet: 64x27x27 -> 192, k5 s1 p2.
+        let (_, c2) = convs[1];
+        assert_eq!(
+            c2,
+            ConvSpec { cin: 64, cout: 192, h: 27, w: 27, k: 5, stride: 1, pad: 2 }
+        );
+    }
+
+    #[test]
+    fn conv_spec_scaling_stays_valid() {
+        let spec = ConvSpec { cin: 64, cout: 192, h: 27, w: 27, k: 5, stride: 1, pad: 2 };
+        let s = spec.scaled(16);
+        assert!(s.is_valid());
+        assert_eq!((s.cin, s.cout), (4, 12));
+        // Extreme scales clamp to the smallest valid spatial size.
+        let conv1 = ConvSpec { cin: 3, cout: 64, h: 224, w: 224, k: 11, stride: 4, pad: 2 };
+        let tiny = conv1.scaled(1000);
+        assert!(tiny.is_valid(), "{tiny:?}");
+        assert_eq!(tiny.out_dims().0, 1);
+    }
+
+    #[test]
+    fn find_conv_selectors() {
+        let m = models::alexnet();
+        // Index form.
+        let (l, _) = m.find_conv("conv2").unwrap();
+        assert_eq!(l.name, "c2.conv5x5");
+        // Exact name and prefix forms.
+        assert_eq!(m.find_conv("c2.conv5x5").unwrap().0.name, "c2.conv5x5");
+        assert_eq!(m.find_conv("c2").unwrap().0.name, "c2.conv5x5");
+        assert!(m.find_conv("conv0").is_none());
+        assert!(m.find_conv("conv99").is_none());
+        assert!(m.find_conv("nope").is_none());
+    }
 
     #[test]
     fn conv_shape_math() {

@@ -261,6 +261,9 @@ pub fn mobilenet_v1() -> Workload {
                 bytes: in_bytes + 4.0 * params + out_bytes,
                 weight_bytes: 4.0 * params,
                 params,
+                // Depthwise (grouped) conv: not expressible as a dense
+                // ConvSpec, so it is not crossbar-executable via im2col.
+                conv: None,
             }],
             c,
             ho,

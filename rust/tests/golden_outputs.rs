@@ -1,0 +1,97 @@
+//! Golden snapshot tests for the paper's headline outputs: the `fig4` and
+//! `fig5` registry tables and the corresponding sweep-engine CSV streams.
+//!
+//! Both are *deterministic* renderings of the analytic models (shortest-
+//! round-trip float formatting, fixed expansion order), so refactors to
+//! `metrics/`, `sweep/` or the experiment code can be checked against
+//! byte-for-byte snapshots under `tests/golden/` — a silent drift of the
+//! headline numbers now fails instead of slipping through.
+//!
+//! Bless protocol (see `tests/golden/README.md`):
+//! * `CONVPIM_BLESS=1 cargo test --test golden_outputs` regenerates every
+//!   snapshot in place; commit the diff if the change is intentional.
+//! * A *missing* snapshot is seeded on first run (and the test passes) so
+//!   a fresh checkout can bootstrap; committed snapshots are compared
+//!   strictly. CI additionally fails if committed snapshots are modified
+//!   by the run (`git diff --exit-code tests/golden`).
+
+use std::fs;
+use std::path::PathBuf;
+
+use convpim::coordinator::{run_experiment, Ctx};
+use convpim::sweep::{run_points, Campaign, OutputFormat, Streamer};
+
+fn golden_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden")
+        .join(name)
+}
+
+fn blessing() -> bool {
+    std::env::var("CONVPIM_BLESS").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
+
+/// Compare `actual` against the committed snapshot, or (re)write it when
+/// blessing / bootstrapping.
+fn golden_check(name: &str, actual: &str) {
+    let path = golden_path(name);
+    if blessing() || !path.exists() {
+        fs::create_dir_all(path.parent().unwrap()).unwrap();
+        fs::write(&path, actual).unwrap_or_else(|e| panic!("writing {path:?}: {e}"));
+        if !blessing() {
+            eprintln!("golden: seeded missing snapshot {name}; commit it to lock the bytes in");
+        }
+        return;
+    }
+    let expected = fs::read_to_string(&path).unwrap_or_else(|e| panic!("reading {path:?}: {e}"));
+    assert!(
+        expected == actual,
+        "{name} drifted from the committed snapshot.\n\
+         If this change is intentional, regenerate with \
+         `CONVPIM_BLESS=1 cargo test --test golden_outputs` and commit the diff.\n\
+         --- expected ---\n{expected}\n--- actual ---\n{actual}"
+    );
+}
+
+/// The registry rendering of an experiment (analytic context: fully
+/// deterministic, no measured series).
+fn experiment_text(id: &str) -> String {
+    let mut ctx = Ctx::analytic();
+    run_experiment(id, &mut ctx)
+        .unwrap_or_else(|e| panic!("{id}: {e:#}"))
+        .text()
+}
+
+/// The sweep engine's CSV stream for a builtin campaign (serial, no
+/// cache — the bytes are jobs- and cache-independent by construction,
+/// which `sweep_campaign.rs` asserts separately).
+fn campaign_csv(name: &str) -> String {
+    let points = Campaign::builtin(name).unwrap().points();
+    let mut streamer = Streamer::new(OutputFormat::Csv, Vec::new()).unwrap();
+    let outcome = run_points(&points, 1, None, &mut |_, r| {
+        streamer.emit(r).unwrap();
+        true
+    });
+    assert_eq!(outcome.failures(), 0);
+    String::from_utf8(streamer.finish().unwrap()).unwrap()
+}
+
+#[test]
+fn golden_fig4_table() {
+    golden_check("fig4_table.txt", &experiment_text("fig4"));
+}
+
+#[test]
+fn golden_fig5_table() {
+    golden_check("fig5_table.txt", &experiment_text("fig5"));
+}
+
+#[test]
+fn golden_fig4_csv() {
+    golden_check("fig4.csv", &campaign_csv("fig4"));
+}
+
+#[test]
+fn golden_fig5_csv() {
+    golden_check("fig5.csv", &campaign_csv("fig5"));
+}

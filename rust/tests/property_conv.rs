@@ -1,0 +1,235 @@
+//! Property tests for the executed im2col conv engine: for seeded-random
+//! conv shapes (K ∈ {1,3,5,7}, stride 1–2, Cin/Cout 1–8, both gate sets),
+//! the crossbar-executed output is **bit-identical** to an independent
+//! plain nested-loop host reference, in both fixed-point and
+//! softfloat-fp32 arithmetic — and the executed per-MAC compute latency
+//! equals the analytic CNN model's exactly.
+//!
+//! The heavy sweeps are `#[ignore]`d under debug builds (the simulator
+//! executes hundreds of thousands of gate instructions per shape); CI
+//! runs them via `cargo test --release`, where the whole file takes
+//! seconds. A small smoke subset always runs.
+
+use convpim::pim::conv::{conv_program, execute_conv};
+use convpim::pim::gates::GateSet;
+use convpim::pim::matpim::{scalar_costs, NumFmt};
+use convpim::pim::softfloat::{self, Format};
+use convpim::pim::xbar::Crossbar;
+use convpim::util::rng::Rng;
+use convpim::workloads::ConvSpec;
+
+/// The *independent* reference: a plain six-deep nested loop, written
+/// directly against the conv definition (not the library's im2col
+/// helpers). Wrapping modulo-2^bits fixed-point arithmetic.
+fn host_conv_fixed(spec: &ConvSpec, bits: u32, input: &[u64], weights: &[u64]) -> Vec<u64> {
+    let mask = (1u64 << bits) - 1;
+    let (ho, wo) = spec.out_dims();
+    let (cin, h, w, k) = (
+        spec.cin as usize,
+        spec.h as usize,
+        spec.w as usize,
+        spec.k as usize,
+    );
+    let mut out = Vec::new();
+    for co in 0..spec.cout as usize {
+        for oh in 0..ho as usize {
+            for ow in 0..wo as usize {
+                let mut acc = 0u64;
+                for c in 0..cin {
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            let iy = (oh * spec.stride as usize + ky) as i64 - spec.pad as i64;
+                            let ix = (ow * spec.stride as usize + kx) as i64 - spec.pad as i64;
+                            let a = if iy < 0 || ix < 0 || iy >= h as i64 || ix >= w as i64 {
+                                0
+                            } else {
+                                input[(c * h + iy as usize) * w + ix as usize]
+                            };
+                            let b = weights[((co * cin + c) * k + ky) * k + kx];
+                            acc = acc.wrapping_add(a.wrapping_mul(b) & mask) & mask;
+                        }
+                    }
+                }
+                out.push(acc);
+            }
+        }
+    }
+    out
+}
+
+/// Same nested loop in softfloat arithmetic, accumulating in the engine's
+/// reduction order (channel-major patch, `acc` starting at +0).
+fn host_conv_float(spec: &ConvSpec, fmt: Format, input: &[u64], weights: &[u64]) -> Vec<u64> {
+    use convpim::pim::fixed::FixedOp;
+    let (ho, wo) = spec.out_dims();
+    let (cin, h, w, k) = (
+        spec.cin as usize,
+        spec.h as usize,
+        spec.w as usize,
+        spec.k as usize,
+    );
+    let mut out = Vec::new();
+    for co in 0..spec.cout as usize {
+        for oh in 0..ho as usize {
+            for ow in 0..wo as usize {
+                let mut acc = 0u64;
+                for c in 0..cin {
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            let iy = (oh * spec.stride as usize + ky) as i64 - spec.pad as i64;
+                            let ix = (ow * spec.stride as usize + kx) as i64 - spec.pad as i64;
+                            let a = if iy < 0 || ix < 0 || iy >= h as i64 || ix >= w as i64 {
+                                0
+                            } else {
+                                input[(c * h + iy as usize) * w + ix as usize]
+                            };
+                            let b = weights[((co * cin + c) * k + ky) * k + kx];
+                            let p = softfloat::apply(fmt, FixedOp::Mul, a, b);
+                            acc = softfloat::apply(fmt, FixedOp::Add, acc, p);
+                        }
+                    }
+                }
+                out.push(acc);
+            }
+        }
+    }
+    out
+}
+
+/// Draw a random valid shape: K ∈ {1,3,5,7}, stride 1–2, Cin/Cout 1–8,
+/// small spatial dims so one shape executes in milliseconds.
+fn random_shape(rng: &mut Rng) -> ConvSpec {
+    let k = [1u32, 3, 5, 7][rng.index(4)];
+    let pad = rng.index(3) as u32;
+    let min_sp = k.saturating_sub(2 * pad).max(1);
+    let spec = ConvSpec {
+        cin: 1 + rng.index(8) as u32,
+        cout: 1 + rng.index(8) as u32,
+        h: min_sp + rng.index(4) as u32,
+        w: min_sp + rng.index(4) as u32,
+        k,
+        stride: 1 + rng.index(2) as u32,
+        pad,
+    };
+    assert!(spec.is_valid(), "{spec:?}");
+    spec
+}
+
+fn check_fixed(spec: &ConvSpec, bits: u32, set: GateSet, rng: &mut Rng) {
+    let input = rng.vec_bits((spec.cin * spec.h * spec.w) as usize, bits);
+    let weights = rng.vec_bits(spec.cout as usize * spec.patch_len(), bits);
+    let fmt = NumFmt::Fixed(bits);
+    let run = execute_conv(spec, fmt, set, &input, &weights, 1024).unwrap();
+    assert_eq!(
+        run.output,
+        host_conv_fixed(spec, bits, &input, &weights),
+        "fixed{bits} {set:?} {spec:?}"
+    );
+    let c = scalar_costs(fmt, set);
+    assert_eq!(run.mac_cycles, c.mul_cycles + c.add_cycles, "{set:?} {spec:?}");
+    assert_eq!(run.mac_gates, c.mul_gates + c.add_gates, "{set:?} {spec:?}");
+}
+
+fn check_fp32(spec: &ConvSpec, set: GateSet, rng: &mut Rng) {
+    let f = Format::FP32;
+    // Finite operands (NaN/Inf propagation is covered by the arithmetic
+    // suites; here the interesting property is the MAC chain).
+    let gen = |rng: &mut Rng, len: usize| -> Vec<u64> {
+        (0..len).map(|_| f.from_f64(rng.f64() * 16.0 - 8.0)).collect()
+    };
+    let input = gen(rng, (spec.cin * spec.h * spec.w) as usize);
+    let weights = gen(rng, spec.cout as usize * spec.patch_len());
+    let fmt = NumFmt::Float(f);
+    let run = execute_conv(spec, fmt, set, &input, &weights, 1024).unwrap();
+    assert_eq!(
+        run.output,
+        host_conv_float(spec, f, &input, &weights),
+        "fp32 {set:?} {spec:?}"
+    );
+    let c = scalar_costs(fmt, set);
+    assert_eq!(run.mac_cycles, c.mul_cycles + c.add_cycles, "{set:?} {spec:?}");
+}
+
+/// Smoke subset that always runs, debug builds included.
+#[test]
+fn prop_conv_smoke() {
+    let mut rng = Rng::new(0xC0);
+    let spec = ConvSpec { cin: 2, cout: 2, h: 4, w: 4, k: 3, stride: 1, pad: 1 };
+    for set in GateSet::all() {
+        check_fixed(&spec, 8, set, &mut rng);
+    }
+    let small = ConvSpec { cin: 1, cout: 1, h: 3, w: 3, k: 3, stride: 1, pad: 1 };
+    check_fp32(&small, GateSet::MemristiveNor, &mut rng);
+}
+
+/// ~50 seeded-random shapes, fixed-point, both gate sets each.
+#[test]
+#[cfg_attr(debug_assertions, ignore = "slow in debug; run with --release")]
+fn prop_conv_fixed_random_shapes_bit_exact() {
+    let mut rng = Rng::new(0xC1);
+    for i in 0..50 {
+        let spec = random_shape(&mut rng);
+        // 8-bit everywhere; sprinkle 16-bit on the cheaper shapes.
+        let bits = if spec.patch_len() <= 80 && i % 3 == 0 { 16 } else { 8 };
+        for set in GateSet::all() {
+            check_fixed(&spec, bits, set, &mut rng);
+        }
+    }
+}
+
+/// softfloat-fp32 MAC chains on the smaller random shapes, alternating
+/// gate sets (fp32 microcode is ~10× the fixed8 gate count).
+#[test]
+#[cfg_attr(debug_assertions, ignore = "slow in debug; run with --release")]
+fn prop_conv_fp32_random_shapes_bit_exact() {
+    let mut rng = Rng::new(0xC2);
+    let mut done = 0;
+    let mut i = 0;
+    while done < 12 {
+        i += 1;
+        let mut spec = random_shape(&mut rng);
+        spec.cout = spec.cout.min(3);
+        if spec.patch_len() > 60 || spec.positions() > 40 {
+            continue;
+        }
+        let set = if i % 2 == 0 {
+            GateSet::MemristiveNor
+        } else {
+            GateSet::DramMaj
+        };
+        check_fp32(&spec, set, &mut rng);
+        done += 1;
+    }
+}
+
+/// The packed `execute` (auto serial/sharded dispatch) and the reference
+/// `execute_serial` produce bit-identical state on conv microcode — the
+/// same guarantee the arithmetic suites already have, extended to the
+/// new program family on a crossbar tall enough to trigger sharding.
+#[test]
+#[cfg_attr(debug_assertions, ignore = "slow in debug; run with --release")]
+fn prop_conv_packed_execute_matches_serial() {
+    let mut rng = Rng::new(0xC3);
+    let l = 24;
+    let bits = 8;
+    let cp = conv_program(NumFmt::Fixed(bits), l, GateSet::MemristiveNor);
+    // Tall and not word-aligned: 10k+ rows → 160+ packed words per column,
+    // enough for `execute` to take the sharded path.
+    let rows = 64 * 160 + 9;
+    let mut serial = Crossbar::new(rows, cp.lay.width as usize);
+    for t in 0..l {
+        serial.write_field(cp.lay.a_col(t, 0), bits, &rng.vec_bits(rows, bits));
+        serial.write_field(cp.lay.w_col(t, 0), bits, &vec![rng.bits(bits); rows]);
+    }
+    let mut sharded = serial.clone();
+    serial.execute_serial(&cp.prog);
+    sharded.execute(&cp.prog);
+    for col in 0..cp.lay.width {
+        assert_eq!(
+            serial.read_field(col, 1, rows),
+            sharded.read_field(col, 1, rows),
+            "column {col} diverged"
+        );
+    }
+    assert_eq!(serial.row_gates(), sharded.row_gates());
+}

@@ -1,0 +1,163 @@
+//! Negative-path tests for the sweep result cache: corrupted and
+//! truncated entries must degrade to recompute (with the entry healed on
+//! the way out), never to an error or wrong numbers — and `--no-cache`
+//! must never touch the cache directory at all.
+
+use std::fs;
+use std::path::PathBuf;
+use std::process::Command;
+
+use convpim::sweep::{run_points, Campaign, OutputFormat, ResultCache, Streamer};
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "convpim_cache_neg_{tag}_{}",
+        std::process::id()
+    ));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A cheap three-point campaign (fixed-point elementwise + tiny matmul).
+fn mini_campaign() -> Campaign {
+    Campaign::from_json_text(
+        r#"{
+          "name": "mini-neg",
+          "archs": [{"set": "memristive"}],
+          "formats": ["fixed8"],
+          "workloads": [
+            {"kind": "elementwise", "op": "add"},
+            {"kind": "elementwise", "op": "mul"},
+            {"kind": "matmul", "n": 8}
+          ],
+          "gpus": [{"gpu": "a6000", "mode": "experimental"}]
+        }"#,
+    )
+    .unwrap()
+}
+
+fn render_csv(campaign: &Campaign, cache: Option<&ResultCache>) -> (String, usize, usize) {
+    let points = campaign.points();
+    let mut streamer = Streamer::new(OutputFormat::Csv, Vec::new()).unwrap();
+    let outcome = run_points(&points, 1, cache, &mut |_, r| {
+        streamer.emit(r).unwrap();
+        true
+    });
+    assert_eq!(outcome.failures(), 0, "no point may fail");
+    (
+        String::from_utf8(streamer.finish().unwrap()).unwrap(),
+        outcome.hits,
+        outcome.computed,
+    )
+}
+
+#[test]
+fn corrupt_and_truncated_entries_degrade_to_recompute() {
+    let dir = temp_dir("corrupt");
+    let cache = ResultCache::new(&dir);
+    let campaign = mini_campaign();
+    let points = campaign.points();
+    let n = points.len();
+
+    // Cold run populates every entry.
+    let (csv_cold, hits, computed) = render_csv(&campaign, Some(&cache));
+    assert_eq!((hits, computed), (0, n));
+
+    // Vandalize two entries: one is outright garbage, one is a truncated
+    // prefix of valid JSON (torn write / disk-full survivor).
+    let entry_path = |i: usize| {
+        dir.join(format!(
+            "{}.json",
+            ResultCache::key(&points[i].config_json())
+        ))
+    };
+    fs::write(entry_path(0), "{ this is not json").unwrap();
+    let valid = fs::read_to_string(entry_path(1)).unwrap();
+    fs::write(entry_path(1), &valid[..valid.len() / 2]).unwrap();
+
+    // Warm run: the two broken entries miss and recompute, the intact one
+    // hits; nothing errors and the stream is byte-identical to cold.
+    let (csv_warm, hits, computed) = render_csv(&campaign, Some(&cache));
+    assert_eq!((hits, computed), (n - 2, 2));
+    assert_eq!(csv_cold, csv_warm, "recompute must reproduce cached bytes");
+
+    // Recompute healed both entries: they load cleanly now.
+    assert!(cache.load(&points[0].config_json()).is_some());
+    assert!(cache.load(&points[1].config_json()).is_some());
+    let (_, hits, computed) = render_csv(&campaign, Some(&cache));
+    assert_eq!((hits, computed), (n, 0));
+
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn deleted_entry_recomputes_silently() {
+    let dir = temp_dir("deleted");
+    let cache = ResultCache::new(&dir);
+    let campaign = mini_campaign();
+    let points = campaign.points();
+    render_csv(&campaign, Some(&cache));
+    fs::remove_file(dir.join(format!(
+        "{}.json",
+        ResultCache::key(&points[2].config_json())
+    )))
+    .unwrap();
+    let (_, hits, computed) = render_csv(&campaign, Some(&cache));
+    assert_eq!((hits, computed), (points.len() - 1, 1));
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// `convpim sweep … --no-cache --cache-dir DIR` must never create or
+/// touch DIR (end-to-end through the real binary: this covers the CLI
+/// wiring, not just the library default).
+#[test]
+fn no_cache_cli_never_touches_cache_dir() {
+    let dir = temp_dir("nocache");
+    let out = Command::new(env!("CARGO_BIN_EXE_convpim"))
+        .args([
+            "sweep",
+            "fig4",
+            "--no-cache",
+            "--cache-dir",
+            dir.to_str().unwrap(),
+            "--format",
+            "csv",
+            "--jobs",
+            "2",
+        ])
+        .output()
+        .expect("running convpim");
+    assert!(
+        out.status.success(),
+        "sweep failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.starts_with("point,"), "CSV header expected");
+    assert!(
+        !dir.exists(),
+        "--no-cache must not create the cache directory"
+    );
+
+    // Contrast: the same command without --no-cache does create it.
+    let out = Command::new(env!("CARGO_BIN_EXE_convpim"))
+        .args([
+            "sweep",
+            "fig4",
+            "--cache-dir",
+            dir.to_str().unwrap(),
+            "--format",
+            "csv",
+            "--jobs",
+            "2",
+        ])
+        .output()
+        .expect("running convpim");
+    assert!(out.status.success());
+    assert!(dir.exists(), "caching run must populate the cache directory");
+    assert!(
+        fs::read_dir(&dir).unwrap().count() > 0,
+        "cache directory must hold entries"
+    );
+    let _ = fs::remove_dir_all(&dir);
+}
