@@ -97,6 +97,7 @@ impl Ctx {
 }
 
 /// One table within an experiment result.
+#[derive(Clone)]
 pub struct Section {
     pub caption: String,
     pub table: Table,

@@ -33,9 +33,18 @@
 //!   every table and figure of the paper, and the report generator.
 //! * [`sweep`] — the declarative sweep-campaign engine: grids over
 //!   (architecture × format × workload × GPU baseline) expanded into
-//!   work-lists, executed concurrently with deterministic ordering, a
-//!   content-addressed on-disk result cache, and streaming CSV/JSONL
-//!   reporters. The `fig4`/`fig5`/`sens-dims` experiments delegate to it.
+//!   work-lists, executed concurrently with deterministic ordering, and
+//!   streaming CSV/JSONL reporters. The `fig4`/`fig5`/`sens-dims`
+//!   experiments delegate to it.
+//! * [`service`] — the unified evaluation service: one typed
+//!   [`EvalRequest`](service::EvalRequest) /
+//!   [`EvalResponse`](service::EvalResponse) layer with a canonical JSON
+//!   wire form behind *every* CLI subcommand, a generalized
+//!   content-addressed result cache shared by experiments, sweep points
+//!   and conv executions, and the `convpim serve` JSONL daemon
+//!   ([`service::serve`](mod@service::serve)): pipelined requests
+//!   answered in input order while executing concurrently on one warm
+//!   cache and one pool.
 //! * [`runtime`] — the PJRT runtime that loads the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) and executes them from Rust; Python
 //!   never runs at experiment time. Needs the `pjrt` cargo feature (and
@@ -85,6 +94,7 @@ pub mod gpumodel;
 pub mod metrics;
 pub mod pim;
 pub mod runtime;
+pub mod service;
 pub mod sweep;
 pub mod util;
 pub mod workloads;

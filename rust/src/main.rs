@@ -1,6 +1,11 @@
 //! `convpim` — the evaluation CLI.
 //!
-//! Subcommands:
+//! Every subcommand is a thin adapter over the unified evaluation
+//! service ([`convpim::service`]): it builds a typed
+//! [`EvalRequest`], submits it to an [`EvalService`], and prints the
+//! [`EvalResponse`](convpim::service::EvalResponse)'s exact stdout bytes
+//! — so the CLI surface and the daemon/library surface are one code
+//! path. Subcommands:
 //!
 //! * `run [ids…|all] [--out results] [--fast] [--no-measure]` — execute
 //!   experiments (paper tables/figures + sensitivity studies) and write
@@ -15,6 +20,9 @@
 //!   model.
 //! * `validate [--rows N] [--seed S]` — bit-exact validation sweep of the
 //!   arithmetic microcode on the crossbar simulator.
+//! * `serve [--jobs N]` — long-running JSONL daemon: one request per
+//!   stdin line, responses streamed in input order while executing
+//!   concurrently on one warm cache (see `docs/EXPERIMENTS.md` SERVE).
 //! * `info` — system inventory: Table 1 parameters, artifact manifest,
 //!   PJRT platform.
 //! * `list` — available experiment ids and builtin sweep campaigns.
@@ -23,52 +31,51 @@ use std::path::PathBuf;
 use std::process::ExitCode;
 
 use anyhow::Context as _;
-use convpim::coordinator::{self, report, Ctx};
-use convpim::metrics;
-use convpim::pim::arch::PimArch;
-use convpim::pim::conv;
-use convpim::pim::fixed::{self, FixedLayout, FixedOp};
-use convpim::pim::float::{self, FloatLayout};
-use convpim::pim::gates::GateSet;
-use convpim::pim::matpim::NumFmt;
-use convpim::pim::softfloat::{self, Format};
-use convpim::pim::xbar::Crossbar;
-use convpim::runtime::Engine;
+use convpim::coordinator::report;
+use convpim::service::{
+    self, resolve_jobs, ConvExecSpec, EvalRequest, EvalResponse, EvalService, ResultCache, SetSel,
+};
 use convpim::sweep::campaign::fmt_from_name;
-use convpim::sweep::{self, Campaign, CnnModel, OutputFormat, ResultCache, Streamer};
+use convpim::sweep::{Campaign, OutputFormat, Streamer};
 use convpim::util::cli::Args;
-use convpim::util::pool::Pool;
-use convpim::util::rng::Rng;
-use convpim::util::table::Table;
 
 const USAGE: &str = "\
-convpim — reproduction of `Performance Analysis of Digital Processing-in-Memory
-through a Case Study on CNN Acceleration` (ConvPIM)
+convpim — reproduction of `ConvPIM: Evaluating Digital Processing-in-Memory
+through Convolutional Neural Network Acceleration`
 
 USAGE:
   convpim run [ids...|all] [--out DIR] [--fast] [--no-measure] [--seed N] [--jobs N]
+              [--no-cache] [--cache-dir DIR]
   convpim sweep <campaign.json|builtin> [--jobs N] [--format table|csv|jsonl]
                 [--no-cache] [--cache-dir DIR] [--out FILE]
   convpim exec-conv --layer MODEL:SEL [--scale N] [--fmt FMT] [--set memristive|dram|both]
-                    [--seed N] [--rows N]
+                    [--seed N] [--rows N] [--no-cache] [--cache-dir DIR]
   convpim validate [--rows N] [--seed N]
+  convpim serve [--jobs N] [--no-cache] [--cache-dir DIR]
   convpim info
   convpim list
   convpim help
 
-Experiments run concurrently on a thread pool by default. --jobs 1 runs
-experiments one at a time (crossbar executions may still shard across the
-pool); set CONVPIM_THREADS=1 to make the whole process serial. Analytic
-and bit-exact output is identical in every mode; wall-clock *measured*
-series (pjrt builds with artifacts) are timing-sensitive — use
-CONVPIM_THREADS=1 when measuring.
+Everything goes through one evaluation service: a subcommand builds a
+typed request, the service evaluates it (concurrently on a thread pool,
+with a content-addressed result cache), and the subcommand prints the
+response. Deterministic results — analytic experiments, sweep points,
+seeded conv executions — are cached under --cache-dir (default
+target/sweep-cache, shared by run/sweep/exec-conv/serve), so an
+unchanged re-run recomputes nothing; --no-cache bypasses the cache.
+
+Experiments run concurrently on a thread pool by default. --jobs 0 (the
+default) sizes to the pool, explicit values are clamped to the pool and
+to the amount of work; set CONVPIM_THREADS=1 to make the whole process
+serial. Analytic and bit-exact output is identical in every mode;
+wall-clock *measured* series (pjrt builds with artifacts) are
+timing-sensitive — use CONVPIM_THREADS=1 when measuring. Measured
+results are never cached.
 
 `sweep` expands a declarative campaign — a grid over PIM architectures,
 number formats, workloads and GPU baselines — into points and executes
 them concurrently with deterministic, input-ordered streaming output.
-Results are cached content-addressed under --cache-dir (default
-target/sweep-cache), so an unchanged re-run recomputes nothing; --no-cache
-bypasses the cache. Campaign JSON schema: docs/EXPERIMENTS.md SWEEP.
+Campaign JSON schema: docs/EXPERIMENTS.md SWEEP.
 
 `exec-conv` executes one model-zoo conv layer on the crossbar simulator
 (down-scaled by --scale, default 8) via the im2col mapping and compares
@@ -78,6 +85,12 @@ zoo models (alexnet, googlenet, resnet50, vgg16); SEL is `convN` (the
 N-th conv layer), a layer name, or a name prefix. FMT is fixed8|fixed16|
 fixed32|fp16|fp32|fp64 (default: fixed8 and fp32). Exits nonzero if any
 executed cell deviates from the model. See docs/EXPERIMENTS.md CONV.
+
+`serve` reads one request JSON per stdin line and answers one response
+JSON per stdout line, in input order, while executing concurrently —
+pipelined clients share one warm cache and one pool. A malformed line
+gets a structured error response; EOF exits 0. Wire schema:
+docs/EXPERIMENTS.md SERVE.
 
 EXPERIMENTS: table1 fig3 fig4 fig5 fig6 fig7 fig8 sens-gpu sens-fp16 sens-dims conv-exec
 SWEEP CAMPAIGNS (builtin): fig4 fig5 sens-dims conv-exec
@@ -100,16 +113,9 @@ fn main() -> ExitCode {
         "sweep" => cmd_sweep(&args),
         "exec-conv" => cmd_exec_conv(&args),
         "validate" => cmd_validate(&args),
+        "serve" => cmd_serve(&args),
         "info" => cmd_info(),
-        "list" => {
-            for id in coordinator::all_ids() {
-                println!("{id}");
-            }
-            for name in Campaign::builtin_names() {
-                println!("sweep:{name}");
-            }
-            Ok(())
-        }
+        "list" => cmd_list(),
         other => {
             eprintln!("unknown command `{other}`\n{USAGE}");
             return ExitCode::FAILURE;
@@ -124,11 +130,38 @@ fn main() -> ExitCode {
     }
 }
 
+/// Build the evaluation service from the shared `--jobs` / `--no-cache` /
+/// `--cache-dir` flags (one resolution rule for `run`, `sweep`,
+/// `exec-conv` and `serve`).
+fn service_from(args: &Args) -> anyhow::Result<EvalService> {
+    let cache = if args.switch("no-cache") {
+        None
+    } else {
+        Some(ResultCache::new(
+            args.flag("cache-dir", service::DEFAULT_CACHE_DIR),
+        ))
+    };
+    let jobs = args.flag_usize("jobs", 0).map_err(anyhow::Error::msg)?;
+    Ok(EvalService::new().with_cache(cache).with_jobs(jobs))
+}
+
+/// Turn a failed response into the error the CLI reports (the service
+/// stores the `{e:#}`-formatted chain, so the rendering matches the
+/// pre-service output).
+fn response_error(resp: &EvalResponse) -> anyhow::Error {
+    anyhow::Error::msg(
+        resp.meta
+            .error
+            .clone()
+            .unwrap_or_else(|| "evaluation failed".into()),
+    )
+}
+
 fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let ids: Vec<String> = if args.positional.is_empty()
         || args.positional.iter().any(|p| p == "all")
     {
-        coordinator::all_ids().iter().map(|s| s.to_string()).collect()
+        convpim::coordinator::all_ids().iter().map(|s| s.to_string()).collect()
     } else {
         args.positional.clone()
     };
@@ -136,63 +169,53 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let seed = args.flag_usize("seed", 0xC0FFEE).map_err(anyhow::Error::msg)? as u64;
     let analytic = args.switch("no-measure");
     let fast = args.switch("fast");
-    // --jobs 0 (the default) sizes to the global pool; --jobs 1 runs
-    // experiments one at a time; --jobs N uses N pool workers (capped by
-    // CONVPIM_THREADS via the global pool size; the submitting thread also
-    // helps drain the queue, see util::pool).
-    let jobs = args.flag_usize("jobs", 0).map_err(anyhow::Error::msg)?;
-    let jobs = if jobs == 0 {
-        Pool::global().threads().min(ids.len())
-    } else {
-        jobs.min(Pool::global().threads()).min(ids.len())
-    };
+    let service = service_from(args)?;
+    let jobs = resolve_jobs(service.jobs(), Some(ids.len()));
+    let reqs: Vec<EvalRequest> = ids
+        .iter()
+        .map(|id| EvalRequest::Experiment {
+            id: id.clone(),
+            fast,
+            analytic,
+            seed,
+        })
+        .collect();
 
     let mut results = Vec::new();
     let mut first_err: Option<anyhow::Error> = None;
     if jobs > 1 && ids.len() > 1 {
         eprintln!("running {} experiment(s) on {jobs} worker(s)…", ids.len());
-        let mk_ctx = move || {
-            let mut ctx = if analytic {
-                Ctx::analytic()
-            } else {
-                Ctx::new_quiet(fast)
-            };
-            ctx.seed = seed;
-            ctx
-        };
-        let dedicated;
-        let pool = if jobs == Pool::global().threads().min(ids.len()) {
-            Pool::global()
-        } else {
-            dedicated = Pool::new(jobs);
-            &dedicated
-        };
         // Unlike the serial path (which fails fast), every experiment has
         // already run by the time results come back — so write everything
         // that succeeded before reporting the first failure, instead of
         // discarding computed work.
-        for (id, r) in ids.iter().zip(coordinator::run_many(&ids, &mk_ctx, pool)) {
-            match r {
-                Ok(r) => {
-                    println!("{}", r.text());
-                    report::write_result(&out, &r)?;
-                    results.push(r);
-                }
-                Err(e) => {
-                    eprintln!("error: {id}: {e:#}");
-                    if first_err.is_none() {
-                        first_err = Some(e);
-                    }
+        for (id, resp) in ids.iter().zip(service.submit_batch(&reqs)) {
+            if resp.meta.ok {
+                print!("{}", resp.stdout);
+                let r = resp
+                    .to_experiment_result()
+                    .expect("ok experiment responses reconstruct");
+                report::write_result(&out, &r)?;
+                results.push(r);
+            } else {
+                let e = response_error(&resp);
+                eprintln!("error: {id}: {e:#}");
+                if first_err.is_none() {
+                    first_err = Some(e);
                 }
             }
         }
     } else {
-        let mut ctx = if analytic { Ctx::analytic() } else { Ctx::new(fast) };
-        ctx.seed = seed;
-        for id in &ids {
+        for (id, req) in ids.iter().zip(&reqs) {
             eprintln!("running {id}…");
-            let r = coordinator::run_experiment(id, &mut ctx)?;
-            println!("{}", r.text());
+            let resp = service.submit(req);
+            if !resp.meta.ok {
+                return Err(response_error(&resp));
+            }
+            print!("{}", resp.stdout);
+            let r = resp
+                .to_experiment_result()
+                .expect("ok experiment responses reconstruct");
             report::write_result(&out, &r)?;
             results.push(r);
         }
@@ -205,8 +228,8 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     }
 }
 
-/// Expand a campaign (builtin name or JSON file) and execute it with
-/// caching and streaming output.
+/// Expand a campaign (builtin name or JSON file) and execute it through
+/// the service with caching and streaming output.
 fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     let Some(spec) = args.positional.first() else {
         anyhow::bail!(
@@ -229,25 +252,15 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         }
     };
     let format = OutputFormat::parse(args.flag("format", "table")).map_err(anyhow::Error::msg)?;
-    let jobs = args.flag_usize("jobs", 0).map_err(anyhow::Error::msg)?;
-    let jobs = if jobs == 0 {
-        Pool::global().threads()
-    } else {
-        jobs
-    };
-    let cache = if args.switch("no-cache") {
-        None
-    } else {
-        Some(ResultCache::new(args.flag("cache-dir", "target/sweep-cache")))
-    };
+    let service = service_from(args)?;
 
     let points = campaign.points();
     eprintln!(
         "sweep `{}`: {} point(s) on {} worker(s){}…",
         campaign.name,
         points.len(),
-        jobs.max(1).min(points.len().max(1)),
-        if cache.is_some() { "" } else { " (cache disabled)" }
+        resolve_jobs(service.jobs(), Some(points.len())),
+        if service.cache().is_some() { "" } else { " (cache disabled)" }
     );
     let sink: Box<dyn std::io::Write + Send> = match args.flag_opt("out") {
         Some(path) => Box::new(std::io::BufWriter::new(
@@ -262,7 +275,7 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     // the first error and return `false` so the engine cancels the
     // points that have not started yet, then settle up after the run.
     let mut write_err: Option<std::io::Error> = None;
-    let outcome = sweep::run_points(&points, jobs, cache.as_ref(), &mut |_, r| {
+    let outcome = service.run_campaign(&points, &mut |_, r| {
         if write_err.is_none() {
             if let Err(e) = streamer.emit(r) {
                 write_err = Some(e);
@@ -306,7 +319,7 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     let mut first_err: Option<anyhow::Error> = None;
     for (p, r) in points.iter().zip(outcome.results) {
         if let Err(e) = r {
-            if sweep::is_canceled(&e) {
+            if convpim::sweep::is_canceled(&e) {
                 continue;
             }
             eprintln!("error: {}: {e:#}", p.label());
@@ -324,37 +337,9 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
 /// Execute one down-scaled model-zoo conv layer on the crossbar and
 /// cross-check measured per-MAC cost against the analytic CNN model.
 fn cmd_exec_conv(args: &Args) -> anyhow::Result<()> {
-    let sel = args.flag_opt("layer").ok_or_else(|| {
+    let layer = args.flag_opt("layer").ok_or_else(|| {
         anyhow::Error::msg("exec-conv needs --layer MODEL:SEL (e.g. --layer alexnet:conv2)")
     })?;
-    let (model_name, layer_sel) = sel.split_once(':').ok_or_else(|| {
-        anyhow::Error::msg(format!("--layer expects MODEL:SEL, got `{sel}`"))
-    })?;
-    let model = CnnModel::from_name(model_name).ok_or_else(|| {
-        anyhow::Error::msg(format!(
-            "unknown model `{model_name}`; available: {}",
-            CnnModel::all()
-                .iter()
-                .map(|m| m.name())
-                .collect::<Vec<_>>()
-                .join(", ")
-        ))
-    })?;
-    let workload = model.workload();
-    let (layer, full) = workload.find_conv(layer_sel).ok_or_else(|| {
-        anyhow::Error::msg(format!(
-            "no conv layer `{layer_sel}` in {}; executable conv layers: {}",
-            workload.name,
-            workload
-                .conv_layers()
-                .iter()
-                .enumerate()
-                .map(|(i, (l, _))| format!("conv{} ({})", i + 1, l.name))
-                .collect::<Vec<_>>()
-                .join(", ")
-        ))
-    })?;
-
     let scale = args.flag_usize("scale", 8).map_err(anyhow::Error::msg)?;
     // ConvSpec::scaled clamps 0 to 1 (full-size execution — effectively a
     // hang on a real layer), so reject it here; also refuse silent u32
@@ -366,101 +351,46 @@ fn cmd_exec_conv(args: &Args) -> anyhow::Result<()> {
             anyhow::Error::msg(format!("--scale must be in 1..=u32::MAX, got {scale}"))
         })?;
     let seed = args.flag_usize("seed", 0xC0DE).map_err(anyhow::Error::msg)? as u64;
-    let rows_override = args.flag_usize("rows", 0).map_err(anyhow::Error::msg)?;
-    let sets: Vec<GateSet> = match args.flag("set", "both") {
-        "both" => GateSet::all().to_vec(),
-        "memristive" => vec![GateSet::MemristiveNor],
-        "dram" => vec![GateSet::DramMaj],
-        other => anyhow::bail!("--set must be memristive|dram|both, got `{other}`"),
-    };
-    let fmts: Vec<NumFmt> = match args.flag_opt("fmt") {
-        None => vec![NumFmt::Fixed(8), NumFmt::Float(Format::FP32)],
-        Some(name) => vec![fmt_from_name(name).ok_or_else(|| {
+    let rows = args.flag_usize("rows", 0).map_err(anyhow::Error::msg)?;
+    let set_name = args.flag("set", "both");
+    let set = SetSel::from_name(set_name).ok_or_else(|| {
+        anyhow::Error::msg(format!(
+            "--set must be memristive|dram|both, got `{set_name}`"
+        ))
+    })?;
+    let fmt = match args.flag_opt("fmt") {
+        None => None,
+        Some(name) => Some(fmt_from_name(name).ok_or_else(|| {
             anyhow::Error::msg(format!(
                 "unknown format `{name}` (use fixed8|fixed16|fixed32|fp16|fp32|fp64)"
             ))
-        })?],
+        })?),
     };
 
-    let spec = full.scaled(scale);
-    eprintln!(
-        "executing {} {} down-scaled /{scale}: {} ({} positions, {} MACs)…",
-        workload.name,
-        layer.name,
-        spec.label(),
-        spec.positions(),
-        spec.macs()
-    );
-
-    let mut t = Table::new(&[
-        "set",
-        "format",
-        "MACs",
-        "cyc/MAC meas",
-        "cyc/MAC model",
-        "gates/MAC meas",
-        "gates/MAC model",
-        "move cyc/MAC",
-        "rows used",
-        "tiles",
-        "xbars/row",
-        "bit-exact",
-        "match",
-    ]);
-    let mut failures = 0usize;
-    for &set in &sets {
-        for &fmt in &fmts {
-            let arch = PimArch::paper(set);
-            let xbar_rows = if rows_override > 0 {
-                rows_override
-            } else {
-                arch.rows as usize
-            };
-            let (input, weights) = conv::seeded_operands(&spec, fmt, seed);
-            let run = conv::execute_conv(&spec, fmt, set, &input, &weights, xbar_rows)?;
-            let reference = conv::reference_conv(&spec, fmt, &input, &weights);
-            let check = metrics::conv_exec_check(&run, &reference);
-            if !check.passes() {
-                failures += 1;
-            }
-            eprintln!(
-                "  {:?}/{}: tile program {} instr, {} columns, {} cycles",
-                set,
-                fmt.name(),
-                run.program_len,
-                run.program_width,
-                run.tile_cycles
-            );
-            t.row(vec![
-                format!("{set:?}"),
-                fmt.name(),
-                run.macs.to_string(),
-                check.measured_mac_cycles.to_string(),
-                check.analytic_mac_cycles.to_string(),
-                check.measured_mac_gates.to_string(),
-                check.analytic_mac_gates.to_string(),
-                format!("{:.1}", check.move_cycles_per_mac),
-                format!("{}/{}", check.rows_used, check.xbar_rows),
-                run.tiles.to_string(),
-                run.crossbar_span(arch.cols).to_string(),
-                check.bit_exact.to_string(),
-                if check.passes() { "yes".into() } else { "NO".into() },
-            ]);
-        }
+    let service = service_from(args)?;
+    let resp = service.submit(&EvalRequest::ConvExec(ConvExecSpec {
+        layer: layer.to_string(),
+        scale,
+        fmt,
+        set,
+        seed,
+        rows,
+    }));
+    // A replayed verdict must never look like a fresh execution: say so
+    // loudly (stderr, so stdout stays byte-identical to a computed run).
+    if resp.meta.cache == convpim::service::CacheStatus::Hit {
+        eprintln!(
+            "exec-conv: verdict served from the result cache (no execution this run); \
+             pass --no-cache to re-execute, e.g. after engine changes"
+        );
     }
-    println!("{}", t.text());
-    println!(
-        "cyc/MAC and gates/MAC compare the *executed* microcode against the analytic \
-         CnnPimModel prediction for the same (format, gate set); `move cyc/MAC` is the \
-         operand-staging overhead the paper's upper-bound model ignores, and `xbars/row` \
-         is how many physical crossbars one row's bit-fields span at the architecture's \
-         column width (wide fp32 patches are multi-crossbar, like MatPIM's row spill). \
-         Outputs are verified bit-identical to a host nested-loop reference."
-    );
-    if failures > 0 {
-        anyhow::bail!("{failures} executed cell(s) deviate from the analytic model");
+    // On a deviation the table still prints (that is the diagnostic)
+    // before the nonzero exit.
+    print!("{}", resp.stdout);
+    match resp.meta.ok {
+        true => Ok(()),
+        false => Err(response_error(&resp)),
     }
-    Ok(())
 }
 
 /// Bit-exact validation sweep: every arithmetic routine on both gate sets
@@ -468,119 +398,47 @@ fn cmd_exec_conv(args: &Args) -> anyhow::Result<()> {
 fn cmd_validate(args: &Args) -> anyhow::Result<()> {
     let rows = args.flag_usize("rows", 512).map_err(anyhow::Error::msg)?;
     let seed = args.flag_usize("seed", 7).map_err(anyhow::Error::msg)? as u64;
-    let mut rng = Rng::new(seed);
-    let mut failures = 0usize;
-    let mut checks = 0usize;
-
-    // Fixed point.
-    for set in GateSet::all() {
-        for op in FixedOp::all() {
-            for n in [8u32, 16, 32] {
-                let prog = fixed::program(op, n, set);
-                let lay = FixedLayout::new(op, n);
-                let mut x = Crossbar::new(rows, prog.width() as usize);
-                let u = rng.vec_bits(rows, n);
-                let v: Vec<u64> = match op {
-                    FixedOp::Div => (0..rows).map(|_| 1 + rng.bits(n - 1)).collect(),
-                    _ => rng.vec_bits(rows, n),
-                };
-                fixed::load_operands(&mut x, &lay, &u, &v);
-                x.execute(&prog);
-                let z = fixed::read_result(&x, &lay, rows);
-                let mask = if lay.z_bits == 64 {
-                    u64::MAX
-                } else {
-                    (1u64 << lay.z_bits) - 1
-                };
-                for i in 0..rows {
-                    let expect = match op {
-                        FixedOp::Add => u[i].wrapping_add(v[i]) & mask,
-                        FixedOp::Sub => u[i].wrapping_sub(v[i]) & mask,
-                        FixedOp::Mul => u[i].wrapping_mul(v[i]) & mask,
-                        FixedOp::Div => u[i] / v[i],
-                    };
-                    checks += 1;
-                    if z[i] != expect {
-                        failures += 1;
-                        eprintln!("FAIL {set:?} fixed{n} {op:?} row {i}: {} vs {expect}", z[i]);
-                    }
-                }
-                println!(
-                    "fixed{n:<3} {:<4} {:<14} {} rows ok ({} gates, {} cycles)",
-                    op.name(),
-                    format!("{set:?}"),
-                    rows,
-                    prog.gates(),
-                    prog.cycles()
-                );
-            }
-        }
+    // Validation is a purity check of the engine itself, so the CLI
+    // always runs it for real rather than replaying a cached verdict.
+    // (`exec-conv` *is* cached by default — its verdict is re-executed by
+    // every sweep/registry conv-exec point and by CI on each source
+    // change, and `--no-cache` forces re-execution — whereas `validate`
+    // is the tool you reach for precisely when you suspect the engine,
+    // when a cached PASS would be worthless.)
+    let service = EvalService::new().with_cache(None);
+    let resp = service.submit(&EvalRequest::Validate { rows, seed });
+    print!("{}", resp.stdout);
+    match resp.meta.ok {
+        true => Ok(()),
+        false => Err(response_error(&resp)),
     }
+}
 
-    // Floating point vs softfloat.
-    for set in GateSet::all() {
-        for fmt in [Format::FP16, Format::FP32] {
-            for op in FixedOp::all() {
-                let prog = float::program(op, fmt, set);
-                let lay = FloatLayout::new(fmt);
-                let mut x = Crossbar::new(rows, prog.width() as usize);
-                let u: Vec<u64> =
-                    (0..rows).map(|_| rng.float_pattern(fmt.exp, fmt.man)).collect();
-                let v: Vec<u64> =
-                    (0..rows).map(|_| rng.float_pattern(fmt.exp, fmt.man)).collect();
-                float::load_operands(&mut x, &lay, &u, &v);
-                x.execute(&prog);
-                let z = float::read_result(&x, &lay, rows);
-                for i in 0..rows {
-                    let expect = softfloat::apply(fmt, op, u[i], v[i]);
-                    checks += 1;
-                    if z[i] != expect {
-                        failures += 1;
-                        eprintln!(
-                            "FAIL {set:?} fp{} {op:?} row {i}: {:#x} vs {expect:#x}",
-                            fmt.bits(),
-                            z[i]
-                        );
-                    }
-                }
-                println!(
-                    "fp{:<5} {:<4} {:<14} {} rows ok ({} gates, {} cycles)",
-                    fmt.bits(),
-                    op.name(),
-                    format!("{set:?}"),
-                    rows,
-                    prog.gates(),
-                    prog.cycles()
-                );
-            }
-        }
-    }
-
-    println!("\nvalidation: {checks} checks, {failures} failures");
-    if failures > 0 {
-        anyhow::bail!("{failures} bit-exactness failures");
-    }
+/// Long-running JSONL daemon over stdin/stdout.
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let service = service_from(args)?;
+    let stdin = std::io::stdin();
+    let summary =
+        convpim::service::serve(&service, stdin.lock(), std::io::stdout(), service.jobs())?;
+    eprintln!(
+        "serve: {} request(s) — {} ok, {} error(s), {} cache hit(s)",
+        summary.requests, summary.ok, summary.errors, summary.cache_hits
+    );
     Ok(())
 }
 
 fn cmd_info() -> anyhow::Result<()> {
-    let mut ctx = Ctx::analytic();
-    let t1 = coordinator::run_experiment("table1", &mut ctx)?;
-    println!("{}", t1.text());
-    match Engine::new() {
-        Ok(engine) => {
-            println!("PJRT platform: {}", engine.platform());
-            println!("artifacts ({}):", engine.manifest().artifacts.len());
-            for a in &engine.manifest().artifacts {
-                let shapes: Vec<String> = a
-                    .inputs
-                    .iter()
-                    .map(|s| format!("{:?}:{}", s.shape, s.dtype))
-                    .collect();
-                println!("  {:<26} {}", a.name, shapes.join(", "));
-            }
-        }
-        Err(e) => println!("artifacts not built ({e:#}); run `make artifacts`"),
+    let service = EvalService::new().with_cache(None);
+    let resp = service.submit(&EvalRequest::Info);
+    print!("{}", resp.stdout);
+    match resp.meta.ok {
+        true => Ok(()),
+        false => Err(response_error(&resp)),
     }
+}
+
+fn cmd_list() -> anyhow::Result<()> {
+    let service = EvalService::new().with_cache(None);
+    print!("{}", service.submit(&EvalRequest::List).stdout);
     Ok(())
 }

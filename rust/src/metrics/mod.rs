@@ -186,6 +186,26 @@ impl ConvExecCheck {
     pub fn passes(&self) -> bool {
         self.bit_exact && self.latency_matches() && self.gates_match()
     }
+
+    /// Machine-readable record (one cell of the evaluation service's
+    /// `conv-exec` response payload).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("label", Json::s(self.label.clone())),
+            ("analytic_mac_cycles", Json::i(self.analytic_mac_cycles as i64)),
+            ("measured_mac_cycles", Json::i(self.measured_mac_cycles as i64)),
+            ("analytic_mac_gates", Json::i(self.analytic_mac_gates as i64)),
+            ("measured_mac_gates", Json::i(self.measured_mac_gates as i64)),
+            ("move_cycles_per_mac", Json::n(self.move_cycles_per_mac)),
+            ("rows_used", Json::i(self.rows_used as i64)),
+            ("xbar_rows", Json::i(self.xbar_rows as i64)),
+            ("program_width", Json::i(self.program_width as i64)),
+            ("macs", Json::i(self.macs as i64)),
+            ("bit_exact", Json::Bool(self.bit_exact)),
+            ("passes", Json::Bool(self.passes())),
+        ])
+    }
 }
 
 /// Compare an executed conv layer against the analytic CNN model and the

@@ -1,19 +1,23 @@
-//! Content-addressed result cache for sweep points.
+//! Content-addressed result cache for the evaluation service.
 //!
-//! The cache key is a 64-bit FNV-1a hash of the point's canonical
-//! configuration JSON ([`SweepPoint::config_json`]); each entry is one
-//! JSON file under the cache directory (default `target/sweep-cache/`)
-//! holding both the config and the result. Loads verify the stored
-//! config against the requested one, so a hash collision (or a manually
-//! edited file) degrades to a recompute instead of serving the wrong
-//! numbers. Results are pure functions of their config at a fixed
-//! [`CONFIG_SCHEMA`](super::point::CONFIG_SCHEMA) — bump that constant
-//! when model semantics change so old entries miss.
+//! Promoted from the sweep engine (PR 2) to the service layer: every
+//! *pure* evaluation — a sweep point, an analytic registry experiment, a
+//! seeded conv execution — is cached the same way. The cache key is a
+//! 64-bit FNV-1a hash of the request's canonical configuration JSON
+//! (which embeds a schema version, see
+//! [`point::CONFIG_SCHEMA`](crate::sweep::point::CONFIG_SCHEMA) for sweep
+//! points and [`request::REQUEST_SCHEMA`](crate::service::request::REQUEST_SCHEMA)
+//! for service requests); each entry is one JSON file under the cache
+//! directory (default `target/sweep-cache/`) holding both the config and
+//! an arbitrary JSON result payload. Loads verify the stored config
+//! against the requested one, so a hash collision (or a manually edited
+//! file) degrades to a recompute instead of serving the wrong numbers.
 //!
 //! Key derivation is deterministic and content-addressed:
 //!
 //! ```
-//! use convpim::sweep::{Campaign, ResultCache};
+//! use convpim::service::cache::ResultCache;
+//! use convpim::sweep::Campaign;
 //! let points = Campaign::builtin("fig4").unwrap().points();
 //! let k0 = ResultCache::key(&points[0].config_json());
 //! // Same config → same key; different config → different key.
@@ -21,8 +25,6 @@
 //! assert_ne!(k0, ResultCache::key(&points[1].config_json()));
 //! assert_eq!(k0.len(), 16); // 64-bit hex
 //! ```
-//!
-//! [`SweepPoint::config_json`]: super::SweepPoint::config_json
 
 use std::fs;
 use std::path::{Path, PathBuf};
@@ -30,7 +32,6 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 
 use anyhow::{Context as _, Result};
 
-use super::point::PointResult;
 use crate::util::json::Json;
 
 /// 64-bit FNV-1a over a byte string (the offline registry carries no
@@ -45,7 +46,7 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
     h
 }
 
-/// A directory of `<key>.json` files, one per evaluated sweep point.
+/// A directory of `<key>.json` files, one per cached evaluation.
 #[derive(Clone, Debug)]
 pub struct ResultCache {
     dir: PathBuf,
@@ -73,27 +74,28 @@ impl ResultCache {
         self.dir.join(format!("{}.json", Self::key(config)))
     }
 
-    /// Look up a stored result for `config`. Returns `None` on a miss, an
-    /// unparsable entry, or a stored config that does not match (hash
-    /// collision / stale schema) — all of which mean "recompute".
-    pub fn load(&self, config: &Json) -> Option<PointResult> {
+    /// Look up the stored result payload for `config`. Returns `None` on
+    /// a miss, an unparsable entry, or a stored config that does not
+    /// match (hash collision / stale schema) — all of which mean
+    /// "recompute".
+    pub fn load(&self, config: &Json) -> Option<Json> {
         let text = fs::read_to_string(self.path_for(config)).ok()?;
         let doc = Json::parse(&text)?;
         if doc.get("config")? != config {
             return None;
         }
-        PointResult::from_json(doc.get("result")?)
+        doc.get("result").cloned()
     }
 
-    /// Persist a result under its config's key. Writes to a temporary
-    /// sibling and renames, so concurrent readers never observe a torn
-    /// entry.
-    pub fn store(&self, config: &Json, result: &PointResult) -> Result<()> {
+    /// Persist a result payload under its config's key. Writes to a
+    /// temporary sibling and renames, so concurrent readers never observe
+    /// a torn entry.
+    pub fn store(&self, config: &Json, result: &Json) -> Result<()> {
         fs::create_dir_all(&self.dir)
-            .with_context(|| format!("creating sweep cache dir {:?}", self.dir))?;
+            .with_context(|| format!("creating result cache dir {:?}", self.dir))?;
         let entry = Json::obj(vec![
             ("config", config.clone()),
-            ("result", result.to_json()),
+            ("result", result.clone()),
         ]);
         let path = self.path_for(config);
         // Unique-enough temp name: pid + a process-wide counter, so two
@@ -113,7 +115,7 @@ impl ResultCache {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sweep::Campaign;
+    use crate::sweep::{Campaign, PointResult};
 
     fn temp_dir(tag: &str) -> PathBuf {
         let dir = std::env::temp_dir().join(format!(
@@ -141,8 +143,9 @@ mod tests {
         let config = p.config_json();
         assert!(cache.load(&config).is_none(), "empty cache must miss");
         let r = p.eval().unwrap();
-        cache.store(&config, &r).unwrap();
-        assert_eq!(cache.load(&config).unwrap(), r);
+        cache.store(&config, &r.to_json()).unwrap();
+        let loaded = PointResult::from_json(&cache.load(&config).unwrap()).unwrap();
+        assert_eq!(loaded, r);
         let _ = fs::remove_dir_all(&dir);
     }
 
@@ -153,7 +156,7 @@ mod tests {
         let pts = Campaign::builtin("fig4").unwrap().points();
         let (a, b) = (pts[0].config_json(), pts[1].config_json());
         let r = pts[0].eval().unwrap();
-        cache.store(&a, &r).unwrap();
+        cache.store(&a, &r.to_json()).unwrap();
         // Forge a collision: copy a's entry onto b's key. The stored
         // config no longer matches the request, so load must miss.
         fs::copy(
@@ -173,10 +176,26 @@ mod tests {
         let points = Campaign::builtin("fig4").unwrap().points();
         let p = &points[0];
         let config = p.config_json();
-        cache.store(&config, &p.eval().unwrap()).unwrap();
+        cache.store(&config, &p.eval().unwrap().to_json()).unwrap();
         let path = dir.join(format!("{}.json", ResultCache::key(&config)));
         fs::write(&path, "{ not json").unwrap();
         assert!(cache.load(&config).is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn arbitrary_json_payloads_round_trip() {
+        // The service layer stores whole rendered responses, not just
+        // sweep rows — the cache must be payload-agnostic.
+        let dir = temp_dir("generic");
+        let cache = ResultCache::new(&dir);
+        let config = Json::obj(vec![("v", Json::i(1)), ("kind", Json::s("demo"))]);
+        let payload = Json::obj(vec![
+            ("tables", Json::arr(vec![Json::s("t")])),
+            ("x", Json::n(0.1)),
+        ]);
+        cache.store(&config, &payload).unwrap();
+        assert_eq!(cache.load(&config), Some(payload));
         let _ = fs::remove_dir_all(&dir);
     }
 }

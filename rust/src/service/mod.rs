@@ -1,0 +1,998 @@
+//! The unified evaluation service: one typed Request/Response layer
+//! behind every way convpim evaluates a configuration.
+//!
+//! The paper's evaluation is one conceptual operation — "evaluate a
+//! (PIM architecture, number format, workload) configuration and compare
+//! it to a GPU baseline" — but the repo historically exposed it through
+//! three disjoint code paths (`coordinator::run_many`,
+//! `sweep::run_points`, ad-hoc `exec-conv`/`validate` logic in
+//! `main.rs`), each with its own concurrency, caching and reporting
+//! wiring. This module folds them behind a single facade:
+//!
+//! * [`EvalRequest`] — the typed request enum with a canonical JSON wire
+//!   form ([`request`]);
+//! * [`EvalResponse`] — the structured result: tables + notes + machine
+//!   payload + exact CLI stdout bytes + timing/cache metadata
+//!   ([`response`]);
+//! * [`ResultCache`] — the content-addressed cache, promoted from the
+//!   sweep engine and generalized to arbitrary JSON payloads
+//!   ([`cache`]): experiment and conv-exec responses are cached exactly
+//!   like sweep points, in the same directory, keyed by a schema-versioned
+//!   canonical config;
+//! * [`EvalService`] — the facade owning the cache handle and the
+//!   worker-count policy; evaluation fans out on the process-wide thread
+//!   pool ([`crate::util::pool`]);
+//! * [`serve`](mod@serve) — the `convpim serve` JSONL daemon: one
+//!   request per stdin line, responses streamed in input order while
+//!   executing concurrently.
+//!
+//! Every CLI subcommand is a thin adapter over this module: it builds an
+//! [`EvalRequest`], submits it, and prints [`EvalResponse::stdout`]
+//! verbatim — byte-identical to the pre-service output (asserted by
+//! `tests/service_equivalence.rs`).
+//!
+//! ```
+//! use convpim::service::{EvalRequest, EvalService};
+//!
+//! // An analytic experiment through the service (no cache, for the
+//! // doctest's sake; the CLI default caches under target/sweep-cache).
+//! let service = EvalService::new().with_cache(None);
+//! let resp = service.submit(&EvalRequest::Experiment {
+//!     id: "table1".into(),
+//!     fast: true,
+//!     analytic: true,
+//!     seed: 0xC0FFEE,
+//! });
+//! assert!(resp.meta.ok);
+//! assert!(resp.stdout.contains("table1"));
+//! assert!(!resp.sections.is_empty());
+//! ```
+
+pub mod cache;
+pub mod request;
+pub mod response;
+pub mod serve;
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+pub use cache::ResultCache;
+pub use request::{CampaignRef, ConvExecSpec, EvalRequest, SetSel, REQUEST_SCHEMA};
+pub use response::{CacheStatus, EvalMeta, EvalResponse};
+pub use serve::{serve, ServeSummary};
+
+use crate::coordinator::{run_experiment, Ctx, Section};
+use crate::metrics;
+use crate::pim::arch::PimArch;
+use crate::pim::conv;
+use crate::pim::fixed::{self, FixedLayout, FixedOp};
+use crate::pim::float::{self, FloatLayout};
+use crate::pim::gates::GateSet;
+use crate::pim::matpim::NumFmt;
+use crate::pim::softfloat::{self, Format};
+use crate::pim::xbar::Crossbar;
+use crate::runtime::Engine;
+use crate::sweep::{self, Campaign, CnnModel, PointResult, SweepOutcome, SweepPoint};
+use crate::util::json::Json;
+use crate::util::pool::Pool;
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+use response::{error_response, error_text};
+
+/// Default cache directory, shared by `run`, `sweep`, `exec-conv` and
+/// `serve` (kept at the historical sweep location so pre-service caches
+/// stay warm).
+pub const DEFAULT_CACHE_DIR: &str = "target/sweep-cache";
+
+/// Resolve a `--jobs` request to an effective worker count: `0` means
+/// "size to the global pool", explicit values are clamped to the global
+/// pool size (the pool is the process-wide parallelism budget,
+/// `CONVPIM_THREADS` caps it), and — when the amount of work is known —
+/// to the number of work items; at least 1. One shared rule for `run`,
+/// `sweep` and `serve`, replacing the subtly divergent copies the
+/// subcommands used to carry.
+///
+/// ```
+/// use convpim::service::resolve_jobs;
+/// use convpim::util::pool::Pool;
+/// let pool = Pool::global().threads();
+/// assert_eq!(resolve_jobs(0, None), pool);
+/// assert_eq!(resolve_jobs(1, Some(100)), 1);
+/// assert_eq!(resolve_jobs(usize::MAX, Some(3)), pool.min(3));
+/// assert_eq!(resolve_jobs(2, Some(0)), 1);
+/// ```
+pub fn resolve_jobs(requested: usize, work: Option<usize>) -> usize {
+    let pool = Pool::global().threads();
+    let jobs = if requested == 0 {
+        pool
+    } else {
+        requested.min(pool)
+    };
+    match work {
+        Some(n) => jobs.min(n).max(1),
+        None => jobs.max(1),
+    }
+}
+
+/// The evaluation-service facade: owns the cache handle and the
+/// worker-count policy, and turns [`EvalRequest`]s into
+/// [`EvalResponse`]s. Cheap to construct; safe to share across threads
+/// (`&EvalService` submissions may run concurrently — the serve daemon
+/// does exactly that).
+#[derive(Debug)]
+pub struct EvalService {
+    cache: Option<ResultCache>,
+    /// Requested worker count for multi-item requests (0 = auto).
+    jobs: usize,
+}
+
+impl Default for EvalService {
+    fn default() -> EvalService {
+        EvalService::new()
+    }
+}
+
+impl EvalService {
+    /// A service with the default cache directory and automatic worker
+    /// sizing.
+    pub fn new() -> EvalService {
+        EvalService {
+            cache: Some(ResultCache::new(DEFAULT_CACHE_DIR)),
+            jobs: 0,
+        }
+    }
+
+    /// Replace the cache handle (`None` disables caching).
+    pub fn with_cache(mut self, cache: Option<ResultCache>) -> EvalService {
+        self.cache = cache;
+        self
+    }
+
+    /// Set the requested worker count (0 = size to the global pool).
+    pub fn with_jobs(mut self, jobs: usize) -> EvalService {
+        self.jobs = jobs;
+        self
+    }
+
+    /// The attached cache, if any.
+    pub fn cache(&self) -> Option<&ResultCache> {
+        self.cache.as_ref()
+    }
+
+    /// The requested worker count (0 = auto).
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    /// Evaluate one request. Never panics on bad input and never returns
+    /// a transport-level error: evaluation failures come back as a
+    /// response with `meta.ok == false` and the `{e:#}`-formatted error
+    /// text, so daemon clients always get one response per request.
+    pub fn submit(&self, req: &EvalRequest) -> EvalResponse {
+        let t0 = Instant::now();
+        let mut resp = match req {
+            EvalRequest::Experiment {
+                id,
+                fast,
+                analytic,
+                seed,
+            } => self.handle_experiment(req, id, *fast, *analytic, *seed),
+            EvalRequest::SweepPoint { config } => self.handle_sweep_point(config),
+            EvalRequest::Campaign { campaign } => self.handle_campaign(campaign),
+            EvalRequest::ConvExec(spec) => self.handle_conv_exec(req, spec),
+            EvalRequest::Validate { rows, seed } => self.handle_validate(req, *rows, *seed),
+            EvalRequest::Info => self.handle_info(),
+            EvalRequest::List => self.handle_list(),
+        };
+        resp.meta.elapsed_ms = t0.elapsed().as_secs_f64() * 1e3;
+        resp
+    }
+
+    /// Evaluate a batch of requests concurrently on the thread pool,
+    /// returning responses in input order (the `run_many` discipline:
+    /// one slot per request, scheduling never reorders results).
+    pub fn submit_batch(&self, reqs: &[EvalRequest]) -> Vec<EvalResponse> {
+        let jobs = resolve_jobs(self.jobs, Some(reqs.len()));
+        if jobs <= 1 || reqs.len() <= 1 {
+            return reqs.iter().map(|r| self.submit(r)).collect();
+        }
+        let mut slots: Vec<Option<EvalResponse>> = reqs.iter().map(|_| None).collect();
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = slots
+            .iter_mut()
+            .zip(reqs)
+            .map(|(slot, req)| {
+                Box::new(move || {
+                    *slot = Some(self.submit(req));
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        let dedicated;
+        let pool = if jobs == Pool::global().threads().min(reqs.len()) {
+            Pool::global()
+        } else {
+            dedicated = Pool::new(jobs);
+            &dedicated
+        };
+        pool.run(tasks);
+        slots
+            .into_iter()
+            .map(|slot| slot.expect("pool.run completed every task"))
+            .collect()
+    }
+
+    /// Stream a campaign work-list through the service: pooled execution
+    /// with the attached cache and input-ordered contiguous-prefix
+    /// emission (see [`sweep::run_points`]). The `convpim sweep` adapter
+    /// and the campaign request handler both go through here, so they
+    /// share one cache and one ordering discipline.
+    pub fn run_campaign(
+        &self,
+        points: &[SweepPoint],
+        on_result: &mut (dyn FnMut(usize, &PointResult) -> bool + Send),
+    ) -> SweepOutcome {
+        let jobs = resolve_jobs(self.jobs, Some(points.len()));
+        sweep::run_points(points, jobs, self.cache.as_ref(), on_result)
+    }
+
+    /// Try the response cache for a deterministic request; `config` is
+    /// the request's canonical cache identity.
+    fn load_response(&self, config: &Json) -> Option<EvalResponse> {
+        let stored = self.cache.as_ref()?.load(config)?;
+        let meta = EvalMeta {
+            cache: CacheStatus::Hit,
+            ..EvalMeta::computed()
+        };
+        EvalResponse::from_cache_json(&stored, meta)
+    }
+
+    /// Store a successful deterministic response; a store failure
+    /// degrades to recompute-next-time with a once-per-process warning
+    /// (same contract as the sweep cache).
+    fn store_response(&self, config: &Json, resp: &EvalResponse) {
+        let Some(cache) = self.cache.as_ref() else {
+            return;
+        };
+        if let Err(err) = cache.store(config, &resp.to_cache_json()) {
+            static WARN: std::sync::Once = std::sync::Once::new();
+            WARN.call_once(|| {
+                eprintln!("warning: result cache store failed ({err:#}); continuing uncached");
+            });
+        }
+    }
+
+    /// The cache status a computed cacheable response should carry.
+    fn computed_status(&self) -> CacheStatus {
+        if self.cache.is_some() {
+            CacheStatus::Computed
+        } else {
+            CacheStatus::Disabled
+        }
+    }
+
+    fn handle_experiment(
+        &self,
+        req: &EvalRequest,
+        id: &str,
+        fast: bool,
+        analytic: bool,
+        seed: u64,
+    ) -> EvalResponse {
+        // The context decides cacheability: only engine-free (analytic /
+        // stub-runtime) results are pure functions of (id, fast, seed) —
+        // measured series are wall-clock-dependent and never cached.
+        //
+        // Measured contexts reuse one PJRT engine per worker thread (the
+        // thread-local slot below), so a serial `run all` on a pjrt
+        // build pays engine startup once — like the pre-service serial
+        // runner — and a parallel run pays it once per worker instead of
+        // once per experiment. On the default stub runtime the probe is
+        // a cheap failed manifest read either way.
+        thread_local! {
+            static ENGINE_SLOT: std::cell::RefCell<Option<Engine>> =
+                std::cell::RefCell::new(None);
+        }
+        let engine = if analytic {
+            None
+        } else {
+            ENGINE_SLOT
+                .with(|slot| slot.borrow_mut().take())
+                .or_else(|| match Engine::new() {
+                    Ok(e) => Some(e),
+                    Err(err) => {
+                        static NOTE: std::sync::Once = std::sync::Once::new();
+                        NOTE.call_once(|| {
+                            eprintln!("note: measured series disabled ({err:#})");
+                        });
+                        None
+                    }
+                })
+        };
+        let mut ctx = Ctx {
+            engine,
+            // The analytic context always runs fast (Ctx::analytic).
+            fast: fast || analytic,
+            seed,
+        };
+        let cacheable = ctx.engine.is_none();
+        let config = req.cache_config();
+        if cacheable {
+            if let Some(cfg) = &config {
+                if let Some(resp) = self.load_response(cfg) {
+                    return resp;
+                }
+            }
+        }
+        let result = run_experiment(id, &mut ctx);
+        if !analytic {
+            // Return the engine (if any) for the next request on this
+            // thread; never overwrite a stashed engine with None from an
+            // analytic request (handled by the branch above).
+            ENGINE_SLOT.with(|slot| *slot.borrow_mut() = ctx.engine.take());
+        }
+        match result {
+            Ok(r) => {
+                let mut resp = EvalResponse::from_experiment(&r);
+                resp.meta.cache = if cacheable {
+                    self.computed_status()
+                } else {
+                    CacheStatus::Uncacheable
+                };
+                if cacheable {
+                    if let Some(cfg) = &config {
+                        self.store_response(cfg, &resp);
+                    }
+                }
+                resp
+            }
+            Err(e) => error_response("experiment", id, &e),
+        }
+    }
+
+    fn handle_sweep_point(&self, config: &Json) -> EvalResponse {
+        let point = match SweepPoint::from_config_json(config) {
+            Ok(p) => p,
+            Err(e) => return error_response("sweep-point", "", &e),
+        };
+        let label = point.label();
+        match sweep::eval_point_cached(&point, self.cache.as_ref()) {
+            Ok((result, hit)) => {
+                let table = sweep::report::render_table(std::slice::from_ref(&result));
+                EvalResponse {
+                    kind: "sweep-point".into(),
+                    id: label.clone(),
+                    title: label,
+                    stdout: table.text(),
+                    sections: vec![Section {
+                        caption: String::new(),
+                        table,
+                    }],
+                    notes: Vec::new(),
+                    payload: result.to_json(),
+                    meta: EvalMeta {
+                        cache: if hit {
+                            CacheStatus::Hit
+                        } else {
+                            self.computed_status()
+                        },
+                        ..EvalMeta::computed()
+                    },
+                }
+            }
+            Err(e) => error_response("sweep-point", label, &e),
+        }
+    }
+
+    fn handle_campaign(&self, campaign: &CampaignRef) -> EvalResponse {
+        let campaign = match campaign {
+            CampaignRef::Builtin(name) => match Campaign::builtin(name) {
+                Some(c) => c,
+                None => {
+                    return EvalResponse::error(
+                        "campaign",
+                        name.clone(),
+                        format!(
+                            "unknown builtin campaign `{name}`; builtins: {}",
+                            Campaign::builtin_names().join(", ")
+                        ),
+                    )
+                }
+            },
+            CampaignRef::Inline(spec) => match Campaign::from_json_text(&spec.compact()) {
+                Ok(c) => c,
+                Err(e) => return error_response("campaign", "custom", &e),
+            },
+        };
+        let points = campaign.points();
+        let mut rows: Vec<PointResult> = Vec::with_capacity(points.len());
+        let outcome = self.run_campaign(&points, &mut |_, r| {
+            rows.push(r.clone());
+            true
+        });
+        let mut error = None;
+        for (p, r) in points.iter().zip(&outcome.results) {
+            if let Err(e) = r {
+                if !sweep::is_canceled(e) {
+                    error = Some(format!("{}: {}", p.label(), error_text(e)));
+                    break;
+                }
+            }
+        }
+        let table = sweep::report::render_table(&rows);
+        EvalResponse {
+            kind: "campaign".into(),
+            id: campaign.name.clone(),
+            title: format!("sweep campaign {}", campaign.name),
+            stdout: table.text(),
+            sections: vec![Section {
+                caption: String::new(),
+                table,
+            }],
+            notes: Vec::new(),
+            payload: Json::obj(vec![
+                ("campaign", campaign.to_json()),
+                (
+                    "points",
+                    Json::arr(rows.iter().map(PointResult::to_json).collect()),
+                ),
+            ]),
+            meta: EvalMeta {
+                ok: error.is_none(),
+                error,
+                // Campaigns cache per point; the response itself is not a
+                // cache unit. Hit/computed counts surface the per-point
+                // disposition instead.
+                cache: CacheStatus::Uncacheable,
+                hits: outcome.hits,
+                computed: outcome.computed,
+                elapsed_ms: 0.0,
+            },
+        }
+    }
+
+    fn handle_conv_exec(&self, req: &EvalRequest, spec: &ConvExecSpec) -> EvalResponse {
+        let config = req.cache_config();
+        if let Some(cfg) = &config {
+            if let Some(resp) = self.load_response(cfg) {
+                return resp;
+            }
+        }
+        match self.eval_conv_exec(spec) {
+            Ok(resp) => {
+                if resp.meta.ok {
+                    if let Some(cfg) = &config {
+                        self.store_response(cfg, &resp);
+                    }
+                }
+                resp
+            }
+            Err(e) => error_response("conv-exec", spec.layer.clone(), &e),
+        }
+    }
+
+    /// The executed-convolution evaluation (previously inline in the
+    /// `exec-conv` subcommand): run the selected layer for every
+    /// requested (gate set, format) cell, cross-check measured vs
+    /// analytic per-MAC cost, and render the CLI table.
+    fn eval_conv_exec(&self, spec: &ConvExecSpec) -> Result<EvalResponse> {
+        let (model_name, layer_sel) = spec.layer.split_once(':').ok_or_else(|| {
+            anyhow::anyhow!("conv-exec layer expects MODEL:SEL, got `{}`", spec.layer)
+        })?;
+        let model = CnnModel::from_name(model_name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown model `{model_name}`; available: {}",
+                CnnModel::all()
+                    .iter()
+                    .map(|m| m.name())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        })?;
+        let workload = model.workload();
+        let (layer, full) = workload.find_conv(layer_sel).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no conv layer `{layer_sel}` in {}; executable conv layers: {}",
+                workload.name,
+                workload
+                    .conv_layers()
+                    .iter()
+                    .enumerate()
+                    .map(|(i, (l, _))| format!("conv{} ({})", i + 1, l.name))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        })?;
+        let sets: Vec<GateSet> = spec.set.sets();
+        let fmts: Vec<NumFmt> = match spec.fmt {
+            None => vec![NumFmt::Fixed(8), NumFmt::Float(Format::FP32)],
+            Some(fmt) => vec![fmt],
+        };
+
+        let scaled = full.scaled(spec.scale);
+        eprintln!(
+            "executing {} {} down-scaled /{}: {} ({} positions, {} MACs)…",
+            workload.name,
+            layer.name,
+            spec.scale,
+            scaled.label(),
+            scaled.positions(),
+            scaled.macs()
+        );
+
+        let mut t = Table::new(&[
+            "set",
+            "format",
+            "MACs",
+            "cyc/MAC meas",
+            "cyc/MAC model",
+            "gates/MAC meas",
+            "gates/MAC model",
+            "move cyc/MAC",
+            "rows used",
+            "tiles",
+            "xbars/row",
+            "bit-exact",
+            "match",
+        ]);
+        let mut cells = Vec::new();
+        let mut failures = 0usize;
+        for &set in &sets {
+            for &fmt in &fmts {
+                let arch = PimArch::paper(set);
+                let xbar_rows = if spec.rows > 0 {
+                    spec.rows
+                } else {
+                    arch.rows as usize
+                };
+                let (input, weights) = conv::seeded_operands(&scaled, fmt, spec.seed);
+                let run = conv::execute_conv(&scaled, fmt, set, &input, &weights, xbar_rows)?;
+                let reference = conv::reference_conv(&scaled, fmt, &input, &weights);
+                let check = metrics::conv_exec_check(&run, &reference);
+                if !check.passes() {
+                    failures += 1;
+                }
+                eprintln!(
+                    "  {:?}/{}: tile program {} instr, {} columns, {} cycles",
+                    set,
+                    fmt.name(),
+                    run.program_len,
+                    run.program_width,
+                    run.tile_cycles
+                );
+                t.row(vec![
+                    format!("{set:?}"),
+                    fmt.name(),
+                    run.macs.to_string(),
+                    check.measured_mac_cycles.to_string(),
+                    check.analytic_mac_cycles.to_string(),
+                    check.measured_mac_gates.to_string(),
+                    check.analytic_mac_gates.to_string(),
+                    format!("{:.1}", check.move_cycles_per_mac),
+                    format!("{}/{}", check.rows_used, check.xbar_rows),
+                    run.tiles.to_string(),
+                    run.crossbar_span(arch.cols).to_string(),
+                    check.bit_exact.to_string(),
+                    if check.passes() { "yes".into() } else { "NO".into() },
+                ]);
+                let mut cell = check.to_json();
+                if let Json::Obj(m) = &mut cell {
+                    m.insert("tiles".into(), Json::i(run.tiles as i64));
+                    m.insert(
+                        "xbars_per_row".into(),
+                        Json::i(run.crossbar_span(arch.cols) as i64),
+                    );
+                }
+                cells.push(cell);
+            }
+        }
+        let note = "cyc/MAC and gates/MAC compare the *executed* microcode against the analytic \
+             CnnPimModel prediction for the same (format, gate set); `move cyc/MAC` is the \
+             operand-staging overhead the paper's upper-bound model ignores, and `xbars/row` \
+             is how many physical crossbars one row's bit-fields span at the architecture's \
+             column width (wide fp32 patches are multi-crossbar, like MatPIM's row spill). \
+             Outputs are verified bit-identical to a host nested-loop reference.";
+        let error = (failures > 0)
+            .then(|| format!("{failures} executed cell(s) deviate from the analytic model"));
+        Ok(EvalResponse {
+            kind: "conv-exec".into(),
+            id: spec.layer.clone(),
+            title: format!("executed conv layer {} /{}", spec.layer, spec.scale),
+            // The exact pre-service `exec-conv` stdout: the table, then
+            // the explanation paragraph, each via println!.
+            stdout: format!("{}\n{note}\n", t.text()),
+            sections: vec![Section {
+                caption: String::new(),
+                table: t,
+            }],
+            notes: vec![note.to_string()],
+            payload: Json::obj(vec![
+                ("layer", Json::s(spec.layer.clone())),
+                ("spec", Json::s(scaled.label())),
+                ("scale", Json::i(spec.scale as i64)),
+                ("seed", Json::i(spec.seed as i64)),
+                ("macs", Json::i(scaled.macs() as i64)),
+                ("cells", Json::arr(cells)),
+                ("failures", Json::i(failures as i64)),
+            ]),
+            meta: EvalMeta {
+                ok: failures == 0,
+                error,
+                cache: self.computed_status(),
+                hits: 0,
+                computed: 0,
+                elapsed_ms: 0.0,
+            },
+        })
+    }
+
+    fn handle_validate(&self, req: &EvalRequest, rows: usize, seed: u64) -> EvalResponse {
+        let config = req.cache_config();
+        if let Some(cfg) = &config {
+            if let Some(resp) = self.load_response(cfg) {
+                return resp;
+            }
+        }
+        let resp = self.eval_validate(rows, seed);
+        if resp.meta.ok {
+            if let Some(cfg) = &config {
+                self.store_response(cfg, &resp);
+            }
+        }
+        resp
+    }
+
+    /// The bit-exact validation sweep (previously inline in the
+    /// `validate` subcommand): every arithmetic routine on both gate sets
+    /// executed on the simulated crossbar against host arithmetic /
+    /// softfloat, with the exact historical stdout rendering.
+    fn eval_validate(&self, rows: usize, seed: u64) -> EvalResponse {
+        let mut rng = Rng::new(seed);
+        let mut failures = 0usize;
+        let mut checks = 0usize;
+        let mut out = String::new();
+        let mut notes = Vec::new();
+
+        // Fixed point.
+        for set in GateSet::all() {
+            for op in FixedOp::all() {
+                for n in [8u32, 16, 32] {
+                    let prog = fixed::program(op, n, set);
+                    let lay = FixedLayout::new(op, n);
+                    let mut x = Crossbar::new(rows, prog.width() as usize);
+                    let u = rng.vec_bits(rows, n);
+                    let v: Vec<u64> = match op {
+                        FixedOp::Div => (0..rows).map(|_| 1 + rng.bits(n - 1)).collect(),
+                        _ => rng.vec_bits(rows, n),
+                    };
+                    fixed::load_operands(&mut x, &lay, &u, &v);
+                    x.execute(&prog);
+                    let z = fixed::read_result(&x, &lay, rows);
+                    let mask = if lay.z_bits == 64 {
+                        u64::MAX
+                    } else {
+                        (1u64 << lay.z_bits) - 1
+                    };
+                    for i in 0..rows {
+                        let expect = match op {
+                            FixedOp::Add => u[i].wrapping_add(v[i]) & mask,
+                            FixedOp::Sub => u[i].wrapping_sub(v[i]) & mask,
+                            FixedOp::Mul => u[i].wrapping_mul(v[i]) & mask,
+                            FixedOp::Div => u[i] / v[i],
+                        };
+                        checks += 1;
+                        if z[i] != expect {
+                            failures += 1;
+                            let line =
+                                format!("FAIL {set:?} fixed{n} {op:?} row {i}: {} vs {expect}", z[i]);
+                            eprintln!("{line}");
+                            notes.push(line);
+                        }
+                    }
+                    out.push_str(&format!(
+                        "fixed{n:<3} {:<4} {:<14} {} rows ok ({} gates, {} cycles)\n",
+                        op.name(),
+                        format!("{set:?}"),
+                        rows,
+                        prog.gates(),
+                        prog.cycles()
+                    ));
+                }
+            }
+        }
+
+        // Floating point vs softfloat.
+        for set in GateSet::all() {
+            for fmt in [Format::FP16, Format::FP32] {
+                for op in FixedOp::all() {
+                    let prog = float::program(op, fmt, set);
+                    let lay = FloatLayout::new(fmt);
+                    let mut x = Crossbar::new(rows, prog.width() as usize);
+                    let u: Vec<u64> =
+                        (0..rows).map(|_| rng.float_pattern(fmt.exp, fmt.man)).collect();
+                    let v: Vec<u64> =
+                        (0..rows).map(|_| rng.float_pattern(fmt.exp, fmt.man)).collect();
+                    float::load_operands(&mut x, &lay, &u, &v);
+                    x.execute(&prog);
+                    let z = float::read_result(&x, &lay, rows);
+                    for i in 0..rows {
+                        let expect = softfloat::apply(fmt, op, u[i], v[i]);
+                        checks += 1;
+                        if z[i] != expect {
+                            failures += 1;
+                            let line = format!(
+                                "FAIL {set:?} fp{} {op:?} row {i}: {:#x} vs {expect:#x}",
+                                fmt.bits(),
+                                z[i]
+                            );
+                            eprintln!("{line}");
+                            notes.push(line);
+                        }
+                    }
+                    out.push_str(&format!(
+                        "fp{:<5} {:<4} {:<14} {} rows ok ({} gates, {} cycles)\n",
+                        fmt.bits(),
+                        op.name(),
+                        format!("{set:?}"),
+                        rows,
+                        prog.gates(),
+                        prog.cycles()
+                    ));
+                }
+            }
+        }
+
+        let summary = format!("validation: {checks} checks, {failures} failures");
+        out.push_str(&format!("\n{summary}\n"));
+        notes.push(summary);
+        EvalResponse {
+            kind: "validate".into(),
+            id: "validate".into(),
+            title: "bit-exact validation sweep".into(),
+            stdout: out,
+            sections: Vec::new(),
+            notes,
+            payload: Json::obj(vec![
+                ("rows", Json::i(rows as i64)),
+                ("seed", Json::i(seed as i64)),
+                ("checks", Json::i(checks as i64)),
+                ("failures", Json::i(failures as i64)),
+            ]),
+            meta: EvalMeta {
+                ok: failures == 0,
+                error: (failures > 0).then(|| format!("{failures} bit-exactness failures")),
+                cache: self.computed_status(),
+                hits: 0,
+                computed: 0,
+                elapsed_ms: 0.0,
+            },
+        }
+    }
+
+    fn handle_info(&self) -> EvalResponse {
+        let mut ctx = Ctx::analytic();
+        let t1 = match run_experiment("table1", &mut ctx) {
+            Ok(r) => r,
+            Err(e) => return error_response("info", "info", &e),
+        };
+        let mut out = format!("{}\n", t1.text());
+        let mut notes = Vec::new();
+        match Engine::new() {
+            Ok(engine) => {
+                notes.push(format!("PJRT platform: {}", engine.platform()));
+                notes.push(format!(
+                    "artifacts ({}):",
+                    engine.manifest().artifacts.len()
+                ));
+                for a in &engine.manifest().artifacts {
+                    let shapes: Vec<String> = a
+                        .inputs
+                        .iter()
+                        .map(|s| format!("{:?}:{}", s.shape, s.dtype))
+                        .collect();
+                    notes.push(format!("  {:<26} {}", a.name, shapes.join(", ")));
+                }
+            }
+            Err(e) => notes.push(format!("artifacts not built ({e:#}); run `make artifacts`")),
+        }
+        for n in &notes {
+            out.push_str(n);
+            out.push('\n');
+        }
+        EvalResponse {
+            kind: "info".into(),
+            id: "info".into(),
+            title: "system inventory".into(),
+            stdout: out,
+            sections: t1.sections.clone(),
+            notes,
+            payload: t1.json.clone(),
+            meta: EvalMeta {
+                cache: CacheStatus::Uncacheable,
+                ..EvalMeta::computed()
+            },
+        }
+    }
+
+    fn handle_list(&self) -> EvalResponse {
+        let experiments: Vec<&str> = crate::coordinator::all_ids();
+        let campaigns = Campaign::builtin_names();
+        let mut out = String::new();
+        for id in &experiments {
+            out.push_str(id);
+            out.push('\n');
+        }
+        for name in campaigns {
+            out.push_str(&format!("sweep:{name}\n"));
+        }
+        EvalResponse {
+            kind: "list".into(),
+            id: "list".into(),
+            title: "available experiments and campaigns".into(),
+            stdout: out,
+            sections: Vec::new(),
+            notes: Vec::new(),
+            payload: Json::obj(vec![
+                (
+                    "experiments",
+                    Json::arr(experiments.iter().map(|s| Json::s(*s)).collect()),
+                ),
+                (
+                    "campaigns",
+                    Json::arr(campaigns.iter().map(|s| Json::s(*s)).collect()),
+                ),
+            ]),
+            meta: EvalMeta {
+                cache: CacheStatus::Uncacheable,
+                ..EvalMeta::computed()
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_cache(tag: &str) -> ResultCache {
+        let dir = std::env::temp_dir().join(format!(
+            "convpim_service_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        ResultCache::new(dir)
+    }
+
+    fn analytic(id: &str) -> EvalRequest {
+        EvalRequest::Experiment {
+            id: id.into(),
+            fast: true,
+            analytic: true,
+            seed: request::DEFAULT_RUN_SEED,
+        }
+    }
+
+    #[test]
+    fn experiment_caches_and_replays_byte_identically() {
+        let cache = temp_cache("exp");
+        let dir = cache.dir().to_path_buf();
+        let service = EvalService::new().with_cache(Some(cache));
+        let cold = service.submit(&analytic("fig4"));
+        assert!(cold.meta.ok, "{:?}", cold.meta.error);
+        assert_eq!(cold.meta.cache, CacheStatus::Computed);
+        let warm = service.submit(&analytic("fig4"));
+        assert_eq!(warm.meta.cache, CacheStatus::Hit);
+        assert_eq!(warm.stdout, cold.stdout, "cache replay must be byte-identical");
+        assert_eq!(warm.payload, cold.payload);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unknown_experiment_yields_error_response() {
+        let service = EvalService::new().with_cache(None);
+        let resp = service.submit(&analytic("fig99"));
+        assert!(!resp.meta.ok);
+        assert!(resp.meta.error.as_deref().unwrap().contains("fig99"));
+    }
+
+    #[test]
+    fn sweep_point_request_shares_cache_with_campaign_runs() {
+        let cache = temp_cache("pt");
+        let dir = cache.dir().to_path_buf();
+        let service = EvalService::new().with_cache(Some(cache));
+        let config = Campaign::builtin("fig4").unwrap().points()[0].config_json();
+        let req = EvalRequest::SweepPoint {
+            config: config.clone(),
+        };
+        let cold = service.submit(&req);
+        assert!(cold.meta.ok, "{:?}", cold.meta.error);
+        assert_eq!(cold.meta.cache, CacheStatus::Computed);
+        // A campaign run over the same grid hits the entry the point
+        // request stored — one cache, shared both ways.
+        let points = Campaign::builtin("fig4").unwrap().points();
+        let outcome = service.run_campaign(&points, &mut |_, _| true);
+        assert_eq!(outcome.hits, 1);
+        assert_eq!(outcome.computed, points.len() - 1);
+        let warm = service.submit(&req);
+        assert_eq!(warm.meta.cache, CacheStatus::Hit);
+        assert_eq!(warm.payload, cold.payload);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn campaign_request_reports_per_point_cache_counts() {
+        let cache = temp_cache("camp");
+        let dir = cache.dir().to_path_buf();
+        let service = EvalService::new().with_cache(Some(cache));
+        let req = EvalRequest::Campaign {
+            campaign: CampaignRef::Builtin("fig4".into()),
+        };
+        let cold = service.submit(&req);
+        assert!(cold.meta.ok, "{:?}", cold.meta.error);
+        assert_eq!((cold.meta.hits, cold.meta.computed), (0, 24));
+        let warm = service.submit(&req);
+        assert_eq!((warm.meta.hits, warm.meta.computed), (24, 0));
+        assert_eq!(warm.stdout, cold.stdout);
+        assert_eq!(
+            warm.payload.get("points").unwrap().as_arr().unwrap().len(),
+            24
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn campaign_errors_on_unknown_builtin() {
+        let service = EvalService::new().with_cache(None);
+        let resp = service.submit(&EvalRequest::Campaign {
+            campaign: CampaignRef::Builtin("fig99".into()),
+        });
+        assert!(!resp.meta.ok);
+        assert!(resp.meta.error.as_deref().unwrap().contains("fig99"));
+    }
+
+    #[test]
+    fn info_and_list_always_answer() {
+        let service = EvalService::new().with_cache(None);
+        let info = service.submit(&EvalRequest::Info);
+        assert!(info.meta.ok);
+        assert!(info.stdout.contains("table1"));
+        let list = service.submit(&EvalRequest::List);
+        assert!(list.meta.ok);
+        assert!(list.stdout.contains("fig4"));
+        assert!(list.stdout.contains("sweep:fig5"));
+    }
+
+    #[test]
+    fn submit_batch_preserves_input_order() {
+        let service = EvalService::new().with_cache(None);
+        let reqs: Vec<EvalRequest> =
+            ["table1", "fig3", "fig4", "fig5"].iter().map(|id| analytic(id)).collect();
+        let responses = service.submit_batch(&reqs);
+        assert_eq!(responses.len(), reqs.len());
+        for (req, resp) in reqs.iter().zip(&responses) {
+            assert!(resp.meta.ok, "{}: {:?}", req.label(), resp.meta.error);
+            match req {
+                EvalRequest::Experiment { id, .. } => assert_eq!(&resp.id, id),
+                _ => unreachable!(),
+            }
+        }
+        // Batch responses match individual submissions byte-for-byte.
+        let solo = service.submit(&reqs[2]);
+        assert_eq!(solo.stdout, responses[2].stdout);
+    }
+
+    #[test]
+    fn validate_small_sweep_passes_and_caches() {
+        let cache = temp_cache("val");
+        let dir = cache.dir().to_path_buf();
+        let service = EvalService::new().with_cache(Some(cache));
+        let req = EvalRequest::Validate { rows: 8, seed: 7 };
+        let cold = service.submit(&req);
+        assert!(cold.meta.ok, "{:?}", cold.meta.error);
+        assert!(cold.stdout.contains("validation:"));
+        assert!(cold.stdout.contains("0 failures"));
+        let warm = service.submit(&req);
+        assert_eq!(warm.meta.cache, CacheStatus::Hit);
+        assert_eq!(warm.stdout, cold.stdout);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

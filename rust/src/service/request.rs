@@ -1,0 +1,584 @@
+//! The typed request side of the evaluation service: [`EvalRequest`].
+//!
+//! Every way of asking convpim for numbers — a registry experiment, a
+//! single sweep point, a whole campaign, an executed conv layer, the
+//! bit-exact validation sweep, inventory queries — is one variant of one
+//! enum with one canonical JSON wire form. The CLI subcommands build
+//! requests from flags; `convpim serve` parses one request per stdin
+//! line; tests build them directly. [`EvalRequest::cache_config`] derives
+//! the content-addressed cache identity for the deterministic kinds, so
+//! a request evaluated anywhere (CLI, daemon, library) lands on the same
+//! cache entry.
+//!
+//! Wire schema (one JSON object; `kind` selects the variant):
+//!
+//! ```json
+//! {"kind": "experiment", "id": "fig4", "analytic": true, "fast": false, "seed": 12648430}
+//! {"kind": "sweep-point", "config": { ...SweepPoint::config_json()... }}
+//! {"kind": "campaign", "name": "fig5"}
+//! {"kind": "campaign", "spec": { ...Campaign::to_json()... }}
+//! {"kind": "conv-exec", "layer": "alexnet:conv2", "scale": 8, "fmt": "fixed8",
+//!  "set": "both", "seed": 49374, "rows": 0}
+//! {"kind": "validate", "rows": 512, "seed": 7}
+//! {"kind": "info"}
+//! {"kind": "list"}
+//! ```
+//!
+//! All fields except the discriminating ones are optional and default to
+//! the CLI defaults, so `{"kind": "experiment", "id": "fig4"}` is a
+//! complete request.
+
+use anyhow::Result;
+
+use crate::pim::matpim::NumFmt;
+use crate::sweep::campaign::fmt_from_name;
+use crate::util::json::Json;
+
+/// Schema version folded into every *service-level* cache identity
+/// (experiment / conv-exec / validate responses). Sweep points keep their
+/// own [`CONFIG_SCHEMA`](crate::sweep::point::CONFIG_SCHEMA) so service
+/// requests hit the entries `convpim sweep` stores. Bump when the meaning
+/// of a cached response changes (new columns, recalibrated models) so
+/// stale entries miss instead of parsing wrong.
+pub const REQUEST_SCHEMA: i64 = 1;
+
+/// Default experiment seed (the CLI `run --seed` default).
+pub const DEFAULT_RUN_SEED: u64 = 0xC0FFEE;
+/// Default conv-exec operand seed (the CLI `exec-conv --seed` default).
+pub const DEFAULT_CONV_SEED: u64 = 0xC0DE;
+/// Default validation sweep seed (the CLI `validate --seed` default).
+pub const DEFAULT_VALIDATE_SEED: u64 = 7;
+/// Default validation sweep rows (the CLI `validate --rows` default).
+pub const DEFAULT_VALIDATE_ROWS: usize = 512;
+
+/// Which gate sets a conv-exec request executes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SetSel {
+    /// Memristive stateful logic and in-DRAM majority (the default).
+    Both,
+    /// Memristive only.
+    Memristive,
+    /// DRAM only.
+    Dram,
+}
+
+impl SetSel {
+    /// Wire / CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            SetSel::Both => "both",
+            SetSel::Memristive => "memristive",
+            SetSel::Dram => "dram",
+        }
+    }
+
+    /// Inverse of [`SetSel::name`].
+    pub fn from_name(name: &str) -> Option<SetSel> {
+        match name {
+            "both" => Some(SetSel::Both),
+            "memristive" => Some(SetSel::Memristive),
+            "dram" => Some(SetSel::Dram),
+            _ => None,
+        }
+    }
+
+    /// The gate sets to execute, in report order.
+    pub fn sets(self) -> Vec<crate::pim::gates::GateSet> {
+        use crate::pim::gates::GateSet;
+        match self {
+            SetSel::Both => GateSet::all().to_vec(),
+            SetSel::Memristive => vec![GateSet::MemristiveNor],
+            SetSel::Dram => vec![GateSet::DramMaj],
+        }
+    }
+}
+
+/// Fully specified executed-convolution request (the `exec-conv` CLI
+/// surface as data).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConvExecSpec {
+    /// `MODEL:SEL` layer selector (e.g. `alexnet:conv2`).
+    pub layer: String,
+    /// Down-scale divisor applied to channels and spatial dims (≥ 1).
+    pub scale: u32,
+    /// Number format; `None` executes the default fixed8 + fp32 pair.
+    pub fmt: Option<NumFmt>,
+    /// Gate sets to execute.
+    pub set: SetSel,
+    /// Operand seed.
+    pub seed: u64,
+    /// Crossbar row override; 0 uses the architecture's row count.
+    pub rows: usize,
+}
+
+impl ConvExecSpec {
+    /// The CLI-default request for a layer selector.
+    pub fn new(layer: impl Into<String>) -> ConvExecSpec {
+        ConvExecSpec {
+            layer: layer.into(),
+            scale: 8,
+            fmt: None,
+            set: SetSel::Both,
+            seed: DEFAULT_CONV_SEED,
+            rows: 0,
+        }
+    }
+}
+
+/// How a campaign request names its campaign.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CampaignRef {
+    /// A builtin campaign name (`fig4`, `fig5`, `sens-dims`, `conv-exec`).
+    Builtin(String),
+    /// An inline campaign document ([`Campaign::to_json`] shape).
+    ///
+    /// [`Campaign::to_json`]: crate::sweep::Campaign::to_json
+    Inline(Json),
+}
+
+/// One evaluation request — the single entry point of the service layer.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EvalRequest {
+    /// Run one registry experiment (`table1`, `fig3`…`fig8`, `sens-*`,
+    /// `conv-exec`).
+    Experiment {
+        /// Registry id.
+        id: String,
+        /// Reduce measured iteration counts / heavy analytic cells.
+        fast: bool,
+        /// Force the analytic context (never attach the PJRT engine).
+        analytic: bool,
+        /// Seed for synthesized inputs.
+        seed: u64,
+    },
+    /// Evaluate one sweep point from its canonical config document.
+    SweepPoint {
+        /// [`SweepPoint::config_json`] document.
+        ///
+        /// [`SweepPoint::config_json`]: crate::sweep::SweepPoint::config_json
+        config: Json,
+    },
+    /// Expand and evaluate a whole campaign.
+    Campaign {
+        /// Builtin name or inline spec.
+        campaign: CampaignRef,
+    },
+    /// Execute one model-zoo conv layer bit-exactly and cross-check it
+    /// against the analytic CNN model.
+    ConvExec(ConvExecSpec),
+    /// Bit-exact validation sweep of the arithmetic microcode.
+    Validate {
+        /// Crossbar rows (vector elements) per check.
+        rows: usize,
+        /// Operand seed.
+        seed: u64,
+    },
+    /// System inventory (Table 1 + artifact manifest + PJRT platform).
+    Info,
+    /// Available experiment ids and builtin campaigns.
+    List,
+}
+
+impl EvalRequest {
+    /// The wire discriminator of this request.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            EvalRequest::Experiment { .. } => "experiment",
+            EvalRequest::SweepPoint { .. } => "sweep-point",
+            EvalRequest::Campaign { .. } => "campaign",
+            EvalRequest::ConvExec(_) => "conv-exec",
+            EvalRequest::Validate { .. } => "validate",
+            EvalRequest::Info => "info",
+            EvalRequest::List => "list",
+        }
+    }
+
+    /// Short human label for logs and error messages.
+    pub fn label(&self) -> String {
+        match self {
+            EvalRequest::Experiment { id, .. } => format!("experiment {id}"),
+            EvalRequest::SweepPoint { .. } => "sweep-point".into(),
+            EvalRequest::Campaign { campaign } => match campaign {
+                CampaignRef::Builtin(name) => format!("campaign {name}"),
+                CampaignRef::Inline(spec) => format!(
+                    "campaign {}",
+                    spec.get("name").and_then(Json::as_str).unwrap_or("custom")
+                ),
+            },
+            EvalRequest::ConvExec(spec) => format!("conv-exec {}", spec.layer),
+            EvalRequest::Validate { .. } => "validate".into(),
+            EvalRequest::Info => "info".into(),
+            EvalRequest::List => "list".into(),
+        }
+    }
+
+    /// Canonical JSON wire form (the shape [`EvalRequest::from_json`]
+    /// reads; one line of the `convpim serve` protocol).
+    pub fn to_json(&self) -> Json {
+        match self {
+            EvalRequest::Experiment {
+                id,
+                fast,
+                analytic,
+                seed,
+            } => Json::obj(vec![
+                ("kind", Json::s("experiment")),
+                ("id", Json::s(id.clone())),
+                ("fast", Json::Bool(*fast)),
+                ("analytic", Json::Bool(*analytic)),
+                ("seed", Json::i(*seed as i64)),
+            ]),
+            EvalRequest::SweepPoint { config } => Json::obj(vec![
+                ("kind", Json::s("sweep-point")),
+                ("config", config.clone()),
+            ]),
+            EvalRequest::Campaign { campaign } => match campaign {
+                CampaignRef::Builtin(name) => Json::obj(vec![
+                    ("kind", Json::s("campaign")),
+                    ("name", Json::s(name.clone())),
+                ]),
+                CampaignRef::Inline(spec) => Json::obj(vec![
+                    ("kind", Json::s("campaign")),
+                    ("spec", spec.clone()),
+                ]),
+            },
+            EvalRequest::ConvExec(spec) => Json::obj(vec![
+                ("kind", Json::s("conv-exec")),
+                ("layer", Json::s(spec.layer.clone())),
+                ("scale", Json::i(spec.scale as i64)),
+                (
+                    "fmt",
+                    spec.fmt.map(|f| Json::s(f.name())).unwrap_or(Json::Null),
+                ),
+                ("set", Json::s(spec.set.name())),
+                ("seed", Json::i(spec.seed as i64)),
+                ("rows", Json::i(spec.rows as i64)),
+            ]),
+            EvalRequest::Validate { rows, seed } => Json::obj(vec![
+                ("kind", Json::s("validate")),
+                ("rows", Json::i(*rows as i64)),
+                ("seed", Json::i(*seed as i64)),
+            ]),
+            EvalRequest::Info => Json::obj(vec![("kind", Json::s("info"))]),
+            EvalRequest::List => Json::obj(vec![("kind", Json::s("list"))]),
+        }
+    }
+
+    /// Parse a request from its wire form. Unspecified optional fields
+    /// take the CLI defaults. Seeds and sizes must be non-negative
+    /// integers below 2^53 (the JSON number model).
+    pub fn from_json(doc: &Json) -> Result<EvalRequest> {
+        let kind = doc
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("request needs a string `kind`"))?;
+        let u64_field = |key: &str, default: u64| -> Result<u64> {
+            match doc.get(key) {
+                None | Some(Json::Null) => Ok(default),
+                Some(v) => v.as_u64().ok_or_else(|| {
+                    anyhow::anyhow!("request `{key}` must be a non-negative integer")
+                }),
+            }
+        };
+        let bool_field = |key: &str, default: bool| -> Result<bool> {
+            match doc.get(key) {
+                None | Some(Json::Null) => Ok(default),
+                Some(v) => v
+                    .as_bool()
+                    .ok_or_else(|| anyhow::anyhow!("request `{key}` must be a boolean")),
+            }
+        };
+        match kind {
+            "experiment" => Ok(EvalRequest::Experiment {
+                id: doc
+                    .get("id")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("experiment request needs an `id`"))?
+                    .to_string(),
+                fast: bool_field("fast", false)?,
+                analytic: bool_field("analytic", false)?,
+                seed: u64_field("seed", DEFAULT_RUN_SEED)?,
+            }),
+            "sweep-point" => Ok(EvalRequest::SweepPoint {
+                config: doc
+                    .get("config")
+                    .cloned()
+                    .ok_or_else(|| anyhow::anyhow!("sweep-point request needs a `config`"))?,
+            }),
+            "campaign" => match (doc.get("name"), doc.get("spec")) {
+                (Some(name), None) => Ok(EvalRequest::Campaign {
+                    campaign: CampaignRef::Builtin(
+                        name.as_str()
+                            .ok_or_else(|| {
+                                anyhow::anyhow!("campaign `name` must be a string")
+                            })?
+                            .to_string(),
+                    ),
+                }),
+                (None, Some(spec)) => Ok(EvalRequest::Campaign {
+                    campaign: CampaignRef::Inline(spec.clone()),
+                }),
+                _ => anyhow::bail!(
+                    "campaign request needs exactly one of `name` (builtin) or `spec` (inline)"
+                ),
+            },
+            "conv-exec" => {
+                let layer = doc
+                    .get("layer")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("conv-exec request needs a `layer` (MODEL:SEL)")
+                    })?
+                    .to_string();
+                let scale = u64_field("scale", 8)?;
+                let scale = u32::try_from(scale)
+                    .ok()
+                    .filter(|&s| s >= 1)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("conv-exec `scale` must be in 1..=u32::MAX, got {scale}")
+                    })?;
+                let fmt = match doc.get("fmt") {
+                    None | Some(Json::Null) => None,
+                    Some(v) => {
+                        let name = v.as_str().ok_or_else(|| {
+                            anyhow::anyhow!("conv-exec `fmt` must be a format name")
+                        })?;
+                        Some(fmt_from_name(name).ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "unknown format `{name}` (use fixed8|fixed16|fixed32|fp16|fp32|fp64)"
+                            )
+                        })?)
+                    }
+                };
+                let set = match doc.get("set") {
+                    None | Some(Json::Null) => SetSel::Both,
+                    Some(v) => {
+                        let name = v.as_str().unwrap_or("?");
+                        SetSel::from_name(name).ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "conv-exec `set` must be memristive|dram|both, got `{name}`"
+                            )
+                        })?
+                    }
+                };
+                Ok(EvalRequest::ConvExec(ConvExecSpec {
+                    layer,
+                    scale,
+                    fmt,
+                    set,
+                    seed: u64_field("seed", DEFAULT_CONV_SEED)?,
+                    rows: u64_field("rows", 0)? as usize,
+                }))
+            }
+            "validate" => Ok(EvalRequest::Validate {
+                rows: u64_field("rows", DEFAULT_VALIDATE_ROWS as u64)? as usize,
+                seed: u64_field("seed", DEFAULT_VALIDATE_SEED)?,
+            }),
+            "info" => Ok(EvalRequest::Info),
+            "list" => Ok(EvalRequest::List),
+            other => anyhow::bail!(
+                "unknown request kind `{other}` (use experiment|sweep-point|campaign|\
+                 conv-exec|validate|info|list)"
+            ),
+        }
+    }
+
+    /// The canonical cache-identity document of this request, or `None`
+    /// for kinds that are not response-cached:
+    ///
+    /// * `sweep-point` and `campaign` cache *per point* under the sweep
+    ///   point's own config (shared with `convpim sweep` runs), not at
+    ///   the response level;
+    /// * `info` depends on the machine (PJRT platform, artifacts) and
+    ///   `list` is trivial;
+    /// * requests whose seed/rows exceed 2^53 — the JSON number model
+    ///   cannot represent them exactly, so two distinct seeds could
+    ///   collide onto one stored config and replay each other's results;
+    ///   such requests run uncached instead (the wire parser already
+    ///   rejects them, but CLI-built requests bypass it).
+    ///
+    /// For `experiment`, the identity folds in the *effective* fast flag
+    /// (an analytic context always runs fast) and the seed; whether the
+    /// response may actually be cached additionally requires the measured
+    /// engine to be absent — the service checks that at evaluation time.
+    pub fn cache_config(&self) -> Option<Json> {
+        // Exact-integer guard for the JSON number model.
+        let exact = |v: u64| -> Option<Json> {
+            (v < (1u64 << 53)).then(|| Json::i(v as i64))
+        };
+        match self {
+            EvalRequest::Experiment {
+                id,
+                fast,
+                analytic,
+                seed,
+            } => Some(Json::obj(vec![
+                ("v", Json::i(REQUEST_SCHEMA)),
+                ("kind", Json::s("experiment")),
+                ("id", Json::s(id.clone())),
+                ("fast", Json::Bool(*fast || *analytic)),
+                ("seed", exact(*seed)?),
+            ])),
+            EvalRequest::ConvExec(spec) => Some(Json::obj(vec![
+                ("v", Json::i(REQUEST_SCHEMA)),
+                ("kind", Json::s("conv-exec")),
+                ("layer", Json::s(spec.layer.clone())),
+                ("scale", Json::i(spec.scale as i64)),
+                (
+                    "fmt",
+                    spec.fmt.map(|f| Json::s(f.name())).unwrap_or(Json::Null),
+                ),
+                ("set", Json::s(spec.set.name())),
+                ("seed", exact(spec.seed)?),
+                ("rows", exact(spec.rows as u64)?),
+            ])),
+            EvalRequest::Validate { rows, seed } => Some(Json::obj(vec![
+                ("v", Json::i(REQUEST_SCHEMA)),
+                ("kind", Json::s("validate")),
+                ("rows", exact(*rows as u64)?),
+                ("seed", exact(*seed)?),
+            ])),
+            EvalRequest::SweepPoint { .. }
+            | EvalRequest::Campaign { .. }
+            | EvalRequest::Info
+            | EvalRequest::List => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::Campaign;
+
+    #[test]
+    fn wire_round_trips_every_kind() {
+        let reqs = vec![
+            EvalRequest::Experiment {
+                id: "fig4".into(),
+                fast: true,
+                analytic: true,
+                seed: 7,
+            },
+            EvalRequest::SweepPoint {
+                config: Campaign::builtin("fig4").unwrap().points()[0].config_json(),
+            },
+            EvalRequest::Campaign {
+                campaign: CampaignRef::Builtin("fig5".into()),
+            },
+            EvalRequest::Campaign {
+                campaign: CampaignRef::Inline(
+                    Campaign::builtin("sens-dims").unwrap().to_json(),
+                ),
+            },
+            EvalRequest::ConvExec(ConvExecSpec::new("alexnet:conv2")),
+            EvalRequest::Validate { rows: 64, seed: 3 },
+            EvalRequest::Info,
+            EvalRequest::List,
+        ];
+        for req in reqs {
+            let wire = req.to_json().compact();
+            let back = EvalRequest::from_json(&Json::parse(&wire).unwrap())
+                .unwrap_or_else(|e| panic!("{wire}: {e:#}"));
+            assert_eq!(back, req, "{wire}");
+            assert_eq!(back.kind(), req.kind());
+        }
+    }
+
+    #[test]
+    fn minimal_requests_take_cli_defaults() {
+        let req = EvalRequest::from_json(
+            &Json::parse(r#"{"kind": "experiment", "id": "fig4"}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(
+            req,
+            EvalRequest::Experiment {
+                id: "fig4".into(),
+                fast: false,
+                analytic: false,
+                seed: DEFAULT_RUN_SEED,
+            }
+        );
+        let req = EvalRequest::from_json(
+            &Json::parse(r#"{"kind": "conv-exec", "layer": "alexnet:conv2"}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(req, EvalRequest::ConvExec(ConvExecSpec::new("alexnet:conv2")));
+        let req =
+            EvalRequest::from_json(&Json::parse(r#"{"kind": "validate"}"#).unwrap()).unwrap();
+        assert_eq!(
+            req,
+            EvalRequest::Validate {
+                rows: DEFAULT_VALIDATE_ROWS,
+                seed: DEFAULT_VALIDATE_SEED,
+            }
+        );
+    }
+
+    #[test]
+    fn malformed_requests_error() {
+        let bad = [
+            r#"{}"#,
+            r#"{"kind": "warp-drive"}"#,
+            r#"{"kind": "experiment"}"#,
+            r#"{"kind": "sweep-point"}"#,
+            r#"{"kind": "campaign"}"#,
+            r#"{"kind": "campaign", "name": "fig4", "spec": {}}"#,
+            r#"{"kind": "conv-exec"}"#,
+            r#"{"kind": "conv-exec", "layer": "alexnet:conv2", "scale": 0}"#,
+            r#"{"kind": "conv-exec", "layer": "alexnet:conv2", "fmt": "fp8"}"#,
+            r#"{"kind": "conv-exec", "layer": "alexnet:conv2", "set": "cmos"}"#,
+            r#"{"kind": "experiment", "id": "fig4", "seed": -1}"#,
+            r#"{"kind": "experiment", "id": "fig4", "fast": "yes"}"#,
+        ];
+        for text in bad {
+            let doc = Json::parse(text).unwrap();
+            assert!(EvalRequest::from_json(&doc).is_err(), "{text}");
+        }
+    }
+
+    #[test]
+    fn cache_config_discipline() {
+        // Cached kinds carry the schema version; per-point / machine
+        // dependent kinds are not response-cached.
+        let exp = EvalRequest::Experiment {
+            id: "fig4".into(),
+            fast: false,
+            analytic: true,
+            seed: 1,
+        };
+        let cfg = exp.cache_config().unwrap();
+        assert_eq!(cfg.get("v").unwrap().as_u64(), Some(REQUEST_SCHEMA as u64));
+        // The analytic context always runs fast, so `analytic` folds into
+        // the effective `fast` bit and both spellings share an entry.
+        let also_fast = EvalRequest::Experiment {
+            id: "fig4".into(),
+            fast: true,
+            analytic: true,
+            seed: 1,
+        };
+        assert_eq!(exp.cache_config(), also_fast.cache_config());
+        assert!(EvalRequest::Info.cache_config().is_none());
+        assert!(EvalRequest::List.cache_config().is_none());
+        // Seeds past 2^53 are not exactly representable in the JSON
+        // number model: distinct seeds would collide onto one cache key,
+        // so such requests are uncacheable rather than wrong.
+        let mut spec = ConvExecSpec::new("alexnet:conv2");
+        spec.seed = (1u64 << 53) + 1;
+        assert!(EvalRequest::ConvExec(spec).cache_config().is_none());
+        assert!(EvalRequest::Experiment {
+            id: "fig4".into(),
+            fast: false,
+            analytic: true,
+            seed: u64::MAX,
+        }
+        .cache_config()
+        .is_none());
+        assert!(EvalRequest::Campaign {
+            campaign: CampaignRef::Builtin("fig4".into())
+        }
+        .cache_config()
+        .is_none());
+    }
+}

@@ -1,0 +1,328 @@
+//! The typed response side of the evaluation service: [`EvalResponse`].
+//!
+//! Every request kind produces the same structured envelope: rendered
+//! tables with captions, free-form notes, a machine-readable JSON
+//! payload, the exact CLI stdout bytes, and execution metadata (ok flag,
+//! error text, cache disposition, per-campaign hit/computed counts,
+//! elapsed wall-clock). The CLI adapters print
+//! [`EvalResponse::stdout`] verbatim — that is what makes the redesigned
+//! subcommands byte-identical to the pre-service ones — while `convpim
+//! serve` ships [`EvalResponse::to_json`] as one JSONL line.
+//!
+//! Responses of deterministic requests round-trip through the result
+//! cache: [`EvalResponse::to_cache_json`] strips the per-invocation
+//! metadata, [`EvalResponse::from_cache_json`] restores the response with
+//! fresh metadata, and because every content field is either a string or
+//! goes through the shortest-round-trip float formatting of
+//! [`Json`], a cache-served response renders byte-identically to the
+//! computed one.
+
+use crate::coordinator::{ExperimentResult, Section};
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// Where a response came from, cache-wise.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheStatus {
+    /// Served from the content-addressed result cache.
+    Hit,
+    /// Evaluated this invocation (and stored, when a cache is attached).
+    Computed,
+    /// A cacheable request, but the service runs without a cache.
+    Disabled,
+    /// This request kind is never response-cached (campaigns cache per
+    /// point; `info`/`list` are machine-dependent/trivial).
+    Uncacheable,
+}
+
+impl CacheStatus {
+    /// Wire name.
+    pub fn name(self) -> &'static str {
+        match self {
+            CacheStatus::Hit => "hit",
+            CacheStatus::Computed => "computed",
+            CacheStatus::Disabled => "disabled",
+            CacheStatus::Uncacheable => "uncacheable",
+        }
+    }
+}
+
+/// Execution metadata attached to every response.
+#[derive(Clone, Debug)]
+pub struct EvalMeta {
+    /// The request evaluated successfully (all cells passed, no errors).
+    pub ok: bool,
+    /// Error text (`{e:#}`-formatted context chain) when `ok` is false.
+    pub error: Option<String>,
+    /// Cache disposition of this response.
+    pub cache: CacheStatus,
+    /// Campaign-level cache hits (campaign responses; 0 otherwise).
+    pub hits: usize,
+    /// Campaign-level computed points (campaign responses; 0 otherwise).
+    pub computed: usize,
+    /// Wall-clock milliseconds spent serving the request.
+    pub elapsed_ms: f64,
+}
+
+impl EvalMeta {
+    /// Metadata for a freshly computed, successful response.
+    pub fn computed() -> EvalMeta {
+        EvalMeta {
+            ok: true,
+            error: None,
+            cache: CacheStatus::Computed,
+            hits: 0,
+            computed: 0,
+            elapsed_ms: 0.0,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ok", Json::Bool(self.ok)),
+            (
+                "error",
+                self.error
+                    .as_ref()
+                    .map(|e| Json::s(e.clone()))
+                    .unwrap_or(Json::Null),
+            ),
+            ("cache", Json::s(self.cache.name())),
+            ("hits", Json::i(self.hits as i64)),
+            ("computed", Json::i(self.computed as i64)),
+            ("elapsed_ms", Json::n(self.elapsed_ms)),
+        ])
+    }
+}
+
+/// The structured result of one [`EvalRequest`] evaluation.
+///
+/// [`EvalRequest`]: crate::service::EvalRequest
+#[derive(Clone, Debug)]
+pub struct EvalResponse {
+    /// Echo of the request kind (`experiment`, `campaign`, …; `error`
+    /// for unparsable serve lines).
+    pub kind: String,
+    /// Primary identifier: experiment id, campaign name, layer selector.
+    pub id: String,
+    /// Human title.
+    pub title: String,
+    /// Exact CLI stdout bytes for this response (print with `print!`).
+    pub stdout: String,
+    /// Rendered tables ([`Section`]: caption + table; captions may
+    /// be empty for single-table responses).
+    pub sections: Vec<Section>,
+    /// Free-form observations.
+    pub notes: Vec<String>,
+    /// Machine-readable payload (experiment JSON, campaign rows, …).
+    pub payload: Json,
+    /// Execution metadata (never cached; always per-invocation).
+    pub meta: EvalMeta,
+}
+
+impl EvalResponse {
+    /// A failed response carrying only an error.
+    pub fn error(kind: impl Into<String>, id: impl Into<String>, error: String) -> EvalResponse {
+        EvalResponse {
+            kind: kind.into(),
+            id: id.into(),
+            title: String::new(),
+            stdout: String::new(),
+            sections: Vec::new(),
+            notes: Vec::new(),
+            payload: Json::Null,
+            meta: EvalMeta {
+                ok: false,
+                error: Some(error),
+                cache: CacheStatus::Uncacheable,
+                hits: 0,
+                computed: 0,
+                elapsed_ms: 0.0,
+            },
+        }
+    }
+
+    /// Wrap a registry [`ExperimentResult`]: sections, notes and payload
+    /// are carried over and `stdout` is the exact `convpim run`
+    /// rendering (`ExperimentResult::text()` plus the trailing newline
+    /// `println!` appends).
+    pub fn from_experiment(r: &ExperimentResult) -> EvalResponse {
+        EvalResponse {
+            kind: "experiment".into(),
+            id: r.id.clone(),
+            title: r.title.clone(),
+            stdout: format!("{}\n", r.text()),
+            sections: r.sections.clone(),
+            notes: r.notes.clone(),
+            payload: r.json.clone(),
+            meta: EvalMeta::computed(),
+        }
+    }
+
+    /// Reconstruct the registry-shaped result (for `results/` report
+    /// writing). Only meaningful for `experiment` responses; other kinds
+    /// return `None`.
+    pub fn to_experiment_result(&self) -> Option<ExperimentResult> {
+        if self.kind != "experiment" {
+            return None;
+        }
+        Some(ExperimentResult {
+            id: self.id.clone(),
+            title: self.title.clone(),
+            sections: self.sections.clone(),
+            notes: self.notes.clone(),
+            json: self.payload.clone(),
+        })
+    }
+
+    /// Full wire form (one `convpim serve` response line, minus the
+    /// `seq` the daemon adds).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::s(self.kind.clone())),
+            ("id", Json::s(self.id.clone())),
+            ("title", Json::s(self.title.clone())),
+            ("stdout", Json::s(self.stdout.clone())),
+            (
+                "sections",
+                Json::arr(
+                    self.sections
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("caption", Json::s(s.caption.clone())),
+                                ("table", s.table.to_json()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "notes",
+                Json::arr(self.notes.iter().map(|n| Json::s(n.clone())).collect()),
+            ),
+            ("payload", self.payload.clone()),
+            ("meta", self.meta.to_json()),
+        ])
+    }
+
+    /// The cacheable subset: everything except `meta` (which is
+    /// per-invocation by definition).
+    pub fn to_cache_json(&self) -> Json {
+        let mut doc = self.to_json();
+        if let Json::Obj(m) = &mut doc {
+            m.remove("meta");
+        }
+        doc
+    }
+
+    /// Restore a response from a cache entry written by
+    /// [`EvalResponse::to_cache_json`], attaching fresh metadata. Returns
+    /// `None` on missing/mistyped fields (a stale entry layout degrades
+    /// to recompute).
+    pub fn from_cache_json(doc: &Json, meta: EvalMeta) -> Option<EvalResponse> {
+        let s = |key: &str| Some(doc.get(key)?.as_str()?.to_string());
+        let sections = doc
+            .get("sections")?
+            .as_arr()?
+            .iter()
+            .map(|j| {
+                Some(Section {
+                    caption: j.get("caption")?.as_str()?.to_string(),
+                    table: Table::from_json(j.get("table")?)?,
+                })
+            })
+            .collect::<Option<Vec<_>>>()?;
+        let notes = doc
+            .get("notes")?
+            .as_arr()?
+            .iter()
+            .map(|n| n.as_str().map(str::to_string))
+            .collect::<Option<Vec<_>>>()?;
+        Some(EvalResponse {
+            kind: s("kind")?,
+            id: s("id")?,
+            title: s("title")?,
+            stdout: s("stdout")?,
+            sections,
+            notes,
+            payload: doc.get("payload")?.clone(),
+            meta,
+        })
+    }
+}
+
+/// Shorthand used by the service handlers: format an error the way the
+/// CLI reports anyhow chains (`{e:#}`).
+pub fn error_text(e: &anyhow::Error) -> String {
+    format!("{e:#}")
+}
+
+/// Build an error [`EvalResponse`] from an anyhow error.
+pub fn error_response(
+    kind: impl Into<String>,
+    id: impl Into<String>,
+    e: &anyhow::Error,
+) -> EvalResponse {
+    EvalResponse::error(kind, id, error_text(e))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{run_experiment, Ctx};
+
+    #[test]
+    fn experiment_response_round_trips_through_cache_json() {
+        let mut ctx = Ctx::analytic();
+        let r = run_experiment("table1", &mut ctx).unwrap();
+        let resp = EvalResponse::from_experiment(&r);
+        assert_eq!(resp.stdout, format!("{}\n", r.text()));
+
+        let entry = resp.to_cache_json();
+        assert!(entry.get("meta").is_none(), "meta must not be cached");
+        let back = EvalResponse::from_cache_json(
+            &Json::parse(&entry.compact()).unwrap(),
+            EvalMeta::computed(),
+        )
+        .unwrap();
+        assert_eq!(back.stdout, resp.stdout, "cache round trip must be exact");
+        assert_eq!(back.payload, resp.payload);
+        assert_eq!(back.notes, resp.notes);
+        assert_eq!(back.sections.len(), resp.sections.len());
+        for (a, b) in back.sections.iter().zip(&resp.sections) {
+            assert_eq!(a.caption, b.caption);
+            assert_eq!(a.table, b.table);
+        }
+
+        // The reconstructed registry result renders identically too.
+        let rebuilt = back.to_experiment_result().unwrap();
+        assert_eq!(rebuilt.text(), r.text());
+        assert_eq!(rebuilt.markdown(), r.markdown());
+    }
+
+    #[test]
+    fn error_response_shape() {
+        let resp = EvalResponse::error("experiment", "fig99", "no such figure".into());
+        assert!(!resp.meta.ok);
+        assert_eq!(resp.meta.error.as_deref(), Some("no such figure"));
+        let wire = resp.to_json();
+        assert_eq!(
+            wire.get("meta").unwrap().get("ok").unwrap().as_bool(),
+            Some(false)
+        );
+        assert_eq!(
+            wire.get("meta").unwrap().get("cache").unwrap().as_str(),
+            Some("uncacheable")
+        );
+    }
+
+    #[test]
+    fn stale_cache_layout_degrades_to_none() {
+        assert!(EvalResponse::from_cache_json(
+            &Json::parse(r#"{"kind": "experiment"}"#).unwrap(),
+            EvalMeta::computed()
+        )
+        .is_none());
+    }
+}

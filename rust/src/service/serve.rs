@@ -1,0 +1,332 @@
+//! `convpim serve` — a long-running JSONL evaluation daemon over the
+//! service layer.
+//!
+//! Protocol: one [`EvalRequest`] JSON document per stdin line; one JSON
+//! response per line on stdout, **in input order**, each the
+//! [`EvalResponse::to_json`] envelope plus a `seq` field echoing the
+//! 0-based request index. Blank lines are ignored. A malformed line
+//! produces a structured error response (`meta.ok == false`) in its slot
+//! — the daemon never exits on bad input. EOF on stdin drains the
+//! in-flight work and exits 0.
+//!
+//! Concurrency reuses the sweep engine's ordering discipline
+//! ([`crate::sweep::exec`]): requests execute concurrently on `jobs`
+//! workers, every request owns a slot, and the contiguous *prefix* of
+//! finished slots is flushed as it completes — so many pipelined clients
+//! share one warm cache and one pool while each still sees its answers
+//! in the order it asked. Responses are flushed per line, so a client
+//! that pipelines N requests starts reading answers while later ones are
+//! still executing.
+//!
+//! If stdout closes (client went away), already-read requests are
+//! drained with cheap cancellation markers and nothing further is
+//! evaluated — a dead pipe must not keep the CPUs busy. The process
+//! itself still ends at stdin EOF: in a shell pipeline the consumer's
+//! death tears the whole pipe down (the producer gets SIGPIPE and
+//! closes our stdin), but a client that closes its read end while
+//! deliberately holding stdin open keeps an idle daemon around until it
+//! finishes.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{BufRead, Write};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+
+use anyhow::Result;
+
+use super::{resolve_jobs, CacheStatus, EvalRequest, EvalResponse, EvalService};
+use crate::util::json::Json;
+
+/// What one serve session did (reported on stderr at exit).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServeSummary {
+    /// Request lines received (blank lines excluded).
+    pub requests: usize,
+    /// Responses with `meta.ok == true`.
+    pub ok: usize,
+    /// Error responses (evaluation failures and unparsable lines).
+    pub errors: usize,
+    /// Responses served from the result cache.
+    pub cache_hits: usize,
+}
+
+/// Reader/worker hand-off: a bounded queue of `(seq, line)` pairs.
+struct Queue {
+    pending: VecDeque<(usize, String)>,
+    /// Reader reached EOF (or aborted): workers drain and exit.
+    closed: bool,
+}
+
+/// In-order response emission: slot per request, contiguous-prefix flush
+/// (the sweep engine's discipline, adapted to an unbounded stream).
+struct Emit<W> {
+    /// Next seq to write.
+    next: usize,
+    /// Finished slots not yet flushed.
+    done: BTreeMap<usize, Json>,
+    out: W,
+    /// Output died (broken pipe): drop further responses.
+    dead: bool,
+}
+
+impl<W: Write> Emit<W> {
+    fn flush_prefix(&mut self, stop: &AtomicBool) {
+        while let Some(doc) = self.done.remove(&self.next) {
+            self.next += 1;
+            if self.dead {
+                continue;
+            }
+            let line = doc.compact();
+            if writeln!(self.out, "{line}").and_then(|_| self.out.flush()).is_err() {
+                // A closed client is a normal way to end a session: stop
+                // evaluating what nobody will read, keep draining slots.
+                self.dead = true;
+                stop.store(true, Ordering::SeqCst);
+            }
+        }
+    }
+}
+
+/// Evaluate one request line (or explain why it cannot be evaluated).
+fn process(service: &EvalService, line: &str, canceled: bool) -> EvalResponse {
+    if canceled {
+        return EvalResponse::error("error", "", "canceled: output closed".into());
+    }
+    let Some(doc) = Json::parse(line) else {
+        return EvalResponse::error("error", "", "request line is not valid JSON".into());
+    };
+    match EvalRequest::from_json(&doc) {
+        Ok(req) => service.submit(&req),
+        Err(e) => EvalResponse::error("error", "", format!("{e:#}")),
+    }
+}
+
+/// Run the daemon loop: read requests from `input`, answer on `output`,
+/// executing up to `jobs` requests concurrently (0 = size to the global
+/// pool). Returns when `input` reaches EOF and all accepted requests are
+/// answered. Only transport-level *read* failures return `Err`;
+/// evaluation failures and unparsable lines are per-request error
+/// responses.
+pub fn serve<R: BufRead, W: Write + Send>(
+    service: &EvalService,
+    input: R,
+    output: W,
+    jobs: usize,
+) -> Result<ServeSummary> {
+    let jobs = resolve_jobs(jobs, None);
+    // Bounded read-ahead: enough to keep every worker fed and a warm
+    // backlog, without slurping an unbounded request stream into memory.
+    let capacity = jobs * 32;
+
+    let queue = Mutex::new(Queue {
+        pending: VecDeque::new(),
+        closed: false,
+    });
+    let turn = Condvar::new();
+    let emit = Mutex::new(Emit {
+        next: 0,
+        done: BTreeMap::new(),
+        out: output,
+        dead: false,
+    });
+    let stop = AtomicBool::new(false);
+    let (n_ok, n_err, n_hit) = (
+        AtomicUsize::new(0),
+        AtomicUsize::new(0),
+        AtomicUsize::new(0),
+    );
+
+    let mut requests = 0usize;
+    let mut read_err: Option<std::io::Error> = None;
+
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            scope.spawn(|| loop {
+                let item = {
+                    let mut q = queue.lock().unwrap();
+                    loop {
+                        if let Some(item) = q.pending.pop_front() {
+                            // Wake the reader (capacity freed) and
+                            // fellow workers.
+                            turn.notify_all();
+                            break Some(item);
+                        }
+                        if q.closed {
+                            break None;
+                        }
+                        q = turn.wait(q).unwrap();
+                    }
+                };
+                let Some((seq, line)) = item else { return };
+                let resp = process(service, &line, stop.load(Ordering::SeqCst));
+                if resp.meta.ok {
+                    n_ok.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    n_err.fetch_add(1, Ordering::Relaxed);
+                }
+                if resp.meta.cache == CacheStatus::Hit {
+                    n_hit.fetch_add(1, Ordering::Relaxed);
+                }
+                let mut doc = resp.to_json();
+                if let Json::Obj(m) = &mut doc {
+                    m.insert("seq".into(), Json::i(seq as i64));
+                }
+                let mut e = emit.lock().unwrap();
+                e.done.insert(seq, doc);
+                e.flush_prefix(&stop);
+            });
+        }
+
+        // The reader runs on the caller's thread inside the scope.
+        for line in input.lines() {
+            if stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let line = match line {
+                Ok(line) => line,
+                Err(e) => {
+                    read_err = Some(e);
+                    break;
+                }
+            };
+            if line.trim().is_empty() {
+                continue;
+            }
+            let mut q = queue.lock().unwrap();
+            while q.pending.len() >= capacity && !stop.load(Ordering::SeqCst) {
+                q = turn.wait(q).unwrap();
+            }
+            q.pending.push_back((requests, line));
+            requests += 1;
+            turn.notify_all();
+        }
+        let mut q = queue.lock().unwrap();
+        q.closed = true;
+        turn.notify_all();
+    });
+
+    if let Some(e) = read_err {
+        return Err(anyhow::Error::from(e).context("reading serve requests"));
+    }
+    debug_assert_eq!(
+        emit.lock().unwrap().next,
+        requests,
+        "prefix flush must drain every accepted request"
+    );
+    Ok(ServeSummary {
+        requests,
+        ok: n_ok.load(Ordering::Relaxed),
+        errors: n_err.load(Ordering::Relaxed),
+        cache_hits: n_hit.load(Ordering::Relaxed),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::ResultCache;
+    use crate::sweep::Campaign;
+    use std::io::Cursor;
+
+    fn service_with(cache: Option<ResultCache>) -> EvalService {
+        EvalService::new().with_cache(cache)
+    }
+
+    fn run_lines(service: &EvalService, lines: &str, jobs: usize) -> (Vec<Json>, ServeSummary) {
+        let mut out: Vec<u8> = Vec::new();
+        let summary = serve(service, Cursor::new(lines.as_bytes()), &mut out, jobs).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let docs = text
+            .lines()
+            .map(|l| Json::parse(l).unwrap_or_else(|| panic!("bad response line: {l}")))
+            .collect();
+        (docs, summary)
+    }
+
+    #[test]
+    fn responses_come_back_in_input_order_with_seq() {
+        let service = service_with(None);
+        // A slow-ish campaign first, cheap requests after: order must
+        // still be input order.
+        let lines = "\
+            {\"kind\": \"campaign\", \"name\": \"fig4\"}\n\
+            {\"kind\": \"list\"}\n\
+            {\"kind\": \"experiment\", \"id\": \"table1\", \"analytic\": true}\n\
+            {\"kind\": \"list\"}\n";
+        let (docs, summary) = run_lines(&service, lines, 4);
+        assert_eq!(docs.len(), 4);
+        assert_eq!(summary.requests, 4);
+        assert_eq!(summary.ok, 4);
+        assert_eq!(summary.errors, 0);
+        for (i, doc) in docs.iter().enumerate() {
+            assert_eq!(doc.get("seq").unwrap().as_u64(), Some(i as u64));
+        }
+        assert_eq!(docs[0].get("kind").unwrap().as_str(), Some("campaign"));
+        assert_eq!(docs[2].get("id").unwrap().as_str(), Some("table1"));
+    }
+
+    #[test]
+    fn malformed_lines_yield_error_responses_not_exits() {
+        let service = service_with(None);
+        let lines = "\
+            {\"kind\": \"list\"}\n\
+            this is not json\n\
+            {\"kind\": \"warp-drive\"}\n\
+            \n\
+            {\"kind\": \"list\"}\n";
+        let (docs, summary) = run_lines(&service, lines, 2);
+        // The blank line is skipped; the two bad lines still get slots.
+        assert_eq!(docs.len(), 4);
+        assert_eq!(summary.requests, 4);
+        assert_eq!(summary.ok, 2);
+        assert_eq!(summary.errors, 2);
+        let meta_ok =
+            |d: &Json| d.get("meta").unwrap().get("ok").unwrap().as_bool().unwrap();
+        assert!(meta_ok(&docs[0]));
+        assert!(!meta_ok(&docs[1]));
+        assert!(!meta_ok(&docs[2]));
+        assert!(meta_ok(&docs[3]));
+        assert!(docs[1]
+            .get("meta")
+            .unwrap()
+            .get("error")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("not valid JSON"));
+    }
+
+    #[test]
+    fn duplicate_requests_hit_the_shared_cache_serially() {
+        let dir = std::env::temp_dir().join(format!(
+            "convpim_serve_test_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let service = service_with(Some(ResultCache::new(&dir)));
+        let config = Campaign::builtin("fig4").unwrap().points()[0]
+            .config_json()
+            .compact();
+        let line = format!("{{\"kind\": \"sweep-point\", \"config\": {config}}}\n");
+        // --jobs 1 serializes, so the second identical request must hit.
+        let (docs, summary) = run_lines(&service, &format!("{line}{line}"), 1);
+        assert_eq!(docs.len(), 2);
+        assert_eq!(summary.cache_hits, 1);
+        let cache_of = |d: &Json| {
+            d.get("meta").unwrap().get("cache").unwrap().as_str().unwrap().to_string()
+        };
+        assert_eq!(cache_of(&docs[0]), "computed");
+        assert_eq!(cache_of(&docs[1]), "hit");
+        // Identical content either way.
+        assert_eq!(docs[0].get("payload"), docs[1].get("payload"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_input_is_an_empty_session() {
+        let service = service_with(None);
+        let (docs, summary) = run_lines(&service, "", 3);
+        assert!(docs.is_empty());
+        assert_eq!(summary, ServeSummary::default());
+    }
+}

@@ -91,7 +91,7 @@ impl ArchSpec {
         Json::obj(pairs)
     }
 
-    fn from_json(j: &Json) -> Result<ArchSpec> {
+    pub(crate) fn from_json(j: &Json) -> Result<ArchSpec> {
         let set = match j.get("set").and_then(Json::as_str) {
             Some("memristive") => GateSet::MemristiveNor,
             Some("dram") => GateSet::DramMaj,
@@ -160,7 +160,7 @@ impl GpuBaseline {
         ])
     }
 
-    fn from_json(j: &Json) -> Result<GpuBaseline> {
+    pub(crate) fn from_json(j: &Json) -> Result<GpuBaseline> {
         let name = j
             .get("gpu")
             .and_then(Json::as_str)
@@ -326,7 +326,7 @@ impl WorkloadSpec {
         }
     }
 
-    fn from_json(j: &Json) -> Result<WorkloadSpec> {
+    pub(crate) fn from_json(j: &Json) -> Result<WorkloadSpec> {
         match j.get("kind").and_then(Json::as_str) {
             Some("elementwise") => {
                 let op = j.get("op").and_then(Json::as_str).unwrap_or("add");

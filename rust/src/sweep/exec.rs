@@ -20,8 +20,8 @@ use std::sync::Mutex;
 
 use anyhow::Result;
 
-use super::cache::ResultCache;
 use super::point::{PointResult, SweepPoint};
+use crate::service::cache::ResultCache;
 use crate::util::pool::Pool;
 
 /// Error message marking a point that was *skipped* because the output
@@ -66,32 +66,52 @@ impl SweepOutcome {
     }
 }
 
-/// Evaluate one point, going through the cache when one is attached. A
-/// cache *store* failure (unwritable directory, full disk) never
-/// discards the computed result — the cache degrades to
-/// recompute-next-time, with a once-per-process warning.
+/// Evaluate one point, going through the service result cache when one
+/// is attached. Returns the result plus whether it was served from the
+/// cache (`true` = hit, `false` = computed). A cache *store* failure
+/// (unwritable directory, full disk) never discards the computed result —
+/// the cache degrades to recompute-next-time, with a once-per-process
+/// warning. This is the one cached-point evaluation path: `run_points`
+/// uses it for campaigns and the evaluation service uses it for
+/// single-point requests, so both populate (and hit) identical entries.
+pub fn eval_point_cached(
+    point: &SweepPoint,
+    cache: Option<&ResultCache>,
+) -> Result<(PointResult, bool)> {
+    let config = point.config_json();
+    if let Some(cache) = cache {
+        if let Some(stored) = cache.load(&config) {
+            // An entry whose payload no longer parses as a PointResult
+            // (stale layout) degrades to recompute, like any corruption.
+            if let Some(result) = PointResult::from_json(&stored) {
+                return Ok((result, true));
+            }
+        }
+    }
+    let result = point.eval()?;
+    if let Some(cache) = cache {
+        if let Err(err) = cache.store(&config, &result.to_json()) {
+            static WARN: std::sync::Once = std::sync::Once::new();
+            WARN.call_once(|| {
+                eprintln!("warning: sweep cache store failed ({err:#}); continuing uncached");
+            });
+        }
+    }
+    Ok((result, false))
+}
+
+/// [`eval_point_cached`] plus the run-level hit/computed accounting.
 fn eval_one(
     point: &SweepPoint,
     cache: Option<&ResultCache>,
     hits: &AtomicUsize,
     computed: &AtomicUsize,
 ) -> Result<PointResult> {
-    let config = point.config_json();
-    if let Some(cache) = cache {
-        if let Some(result) = cache.load(&config) {
-            hits.fetch_add(1, Ordering::Relaxed);
-            return Ok(result);
-        }
-    }
-    let result = point.eval()?;
-    computed.fetch_add(1, Ordering::Relaxed);
-    if let Some(cache) = cache {
-        if let Err(err) = cache.store(&config, &result) {
-            static WARN: std::sync::Once = std::sync::Once::new();
-            WARN.call_once(|| {
-                eprintln!("warning: sweep cache store failed ({err:#}); continuing uncached");
-            });
-        }
+    let (result, hit) = eval_point_cached(point, cache)?;
+    if hit {
+        hits.fetch_add(1, Ordering::Relaxed);
+    } else {
+        computed.fetch_add(1, Ordering::Relaxed);
     }
     Ok(result)
 }

@@ -12,10 +12,12 @@
 //!   ([`Campaign::from_json_text`]);
 //! * [`SweepPoint`] — one cell of the grid, evaluated analytically by
 //!   [`SweepPoint::eval`] into a flat [`PointResult`] record;
-//! * [`ResultCache`] — a content-addressed on-disk cache (FNV-1a key of
-//!   the point's canonical config JSON, default directory
-//!   `target/sweep-cache/`), so re-running a campaign recomputes only
-//!   changed points;
+//! * [`ResultCache`] — the service layer's content-addressed on-disk
+//!   cache ([`crate::service::cache`], FNV-1a key of the point's
+//!   canonical config JSON, default directory `target/sweep-cache/`), so
+//!   re-running a campaign recomputes only changed points; experiment and
+//!   conv-exec responses share the same cache (and directory) since the
+//!   service redesign;
 //! * [`run_points`] — pooled execution with deterministic input-ordered
 //!   streaming into the CSV/JSONL/table reporters ([`Streamer`]).
 //!
@@ -43,14 +45,15 @@
 //! assert_eq!(labels.first().map(|l| l.0), Some(0));
 //! ```
 
-pub mod cache;
 pub mod campaign;
 pub mod exec;
 pub mod point;
 pub mod report;
 
-pub use cache::ResultCache;
+// The cache lives in the service layer since the evaluation-service
+// redesign; re-exported here because sweep callers predate the move.
+pub use crate::service::cache::ResultCache;
 pub use campaign::{ArchSpec, Campaign, CnnModel, GpuBaseline, GpuMode, WorkloadSpec};
-pub use exec::{is_canceled, run_points, SweepOutcome, CANCELED};
+pub use exec::{eval_point_cached, is_canceled, run_points, SweepOutcome, CANCELED};
 pub use point::{PointResult, SweepPoint};
 pub use report::{OutputFormat, Streamer};

@@ -69,6 +69,53 @@ impl SweepPoint {
         ])
     }
 
+    /// Parse a point back from its canonical [`SweepPoint::config_json`]
+    /// document (the `sweep-point` service-request payload). The schema
+    /// version must match [`CONFIG_SCHEMA`]; the reconstructed point's
+    /// `config_json` is identical to the input, so a point submitted over
+    /// the wire hits exactly the cache entries a `sweep` run stored.
+    pub fn from_config_json(config: &Json) -> Result<SweepPoint> {
+        let v = config
+            .get("v")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow::anyhow!("sweep-point config needs a schema version `v`"))?;
+        anyhow::ensure!(
+            v == CONFIG_SCHEMA as u64,
+            "sweep-point config schema v{v} != supported v{CONFIG_SCHEMA}"
+        );
+        let arch = ArchSpec::from_json(
+            config
+                .get("arch")
+                .ok_or_else(|| anyhow::anyhow!("sweep-point config needs an `arch`"))?,
+        )?;
+        let fmt_name = config
+            .get("format")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("sweep-point config needs a `format`"))?;
+        let fmt = super::campaign::fmt_from_name(fmt_name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown format `{fmt_name}` (use fixed8|fixed16|fixed32|fp16|fp32|fp64)"
+            )
+        })?;
+        let workload = WorkloadSpec::from_json(
+            config
+                .get("workload")
+                .ok_or_else(|| anyhow::anyhow!("sweep-point config needs a `workload`"))?,
+        )?;
+        let gpu = GpuBaseline::from_json(
+            config
+                .get("gpu")
+                .ok_or_else(|| anyhow::anyhow!("sweep-point config needs a `gpu`"))?,
+        )?;
+        Ok(SweepPoint {
+            index: 0,
+            arch,
+            fmt,
+            workload,
+            gpu,
+        })
+    }
+
     /// Human-readable one-line label.
     pub fn label(&self) -> String {
         format!(
@@ -363,6 +410,28 @@ mod tests {
             pts[0].config_json().compact(),
             pts[0].config_json().compact()
         );
+    }
+
+    #[test]
+    fn config_json_round_trips_through_from_config_json() {
+        // Every builtin point can be reconstructed from its canonical
+        // config — the service's `sweep-point` requests depend on the
+        // reconstruction hitting the same cache keys.
+        for name in ["fig4", "fig5", "sens-dims", "conv-exec"] {
+            for p in Campaign::builtin(name).unwrap().points() {
+                let config = p.config_json();
+                let back = SweepPoint::from_config_json(&config).unwrap();
+                assert_eq!(back.config_json(), config, "{}", p.label());
+                assert_eq!(back.label(), p.label());
+            }
+        }
+        // Wrong schema version and missing axes are rejected.
+        let mut doc = Campaign::builtin("fig4").unwrap().points()[0].config_json();
+        if let Json::Obj(m) = &mut doc {
+            m.insert("v".into(), Json::i(999));
+        }
+        assert!(SweepPoint::from_config_json(&doc).is_err());
+        assert!(SweepPoint::from_config_json(&Json::parse("{}").unwrap()).is_err());
     }
 
     #[test]

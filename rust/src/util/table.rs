@@ -1,7 +1,9 @@
 //! Fixed-width text + markdown table rendering for reports and benches.
 
+use crate::util::json::Json;
+
 /// A simple column-aligned table builder.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct Table {
     header: Vec<String>,
     rows: Vec<Vec<String>>,
@@ -95,6 +97,42 @@ impl Table {
         out
     }
 
+    /// Serialize as a JSON object (`{"header": [...], "rows": [[...]]}`).
+    /// Cells are strings, so the round trip through [`Table::from_json`]
+    /// is exact — cached service responses re-render byte-identically.
+    pub fn to_json(&self) -> Json {
+        let arr = |cells: &[String]| {
+            Json::arr(cells.iter().map(|c| Json::s(c.clone())).collect())
+        };
+        Json::obj(vec![
+            ("header", arr(self.header.as_slice())),
+            (
+                "rows",
+                Json::arr(self.rows.iter().map(|r| arr(r.as_slice())).collect()),
+            ),
+        ])
+    }
+
+    /// Rebuild a table from its [`Table::to_json`] form. Returns `None` on
+    /// missing/mistyped fields or a row whose arity disagrees with the
+    /// header.
+    pub fn from_json(j: &Json) -> Option<Table> {
+        let strings = |v: &Json| -> Option<Vec<String>> {
+            v.as_arr()?
+                .iter()
+                .map(|c| c.as_str().map(str::to_string))
+                .collect()
+        };
+        let header = strings(j.get("header")?)?;
+        let rows = j
+            .get("rows")?
+            .as_arr()?
+            .iter()
+            .map(|r| strings(r).filter(|cells| cells.len() == header.len()))
+            .collect::<Option<Vec<_>>>()?;
+        Some(Table { header, rows })
+    }
+
     /// Render as CSV (naive quoting: cells with commas get quoted).
     pub fn csv(&self) -> String {
         let quote = |c: &str| {
@@ -159,5 +197,25 @@ mod tests {
     #[should_panic]
     fn arity_mismatch_panics() {
         Table::new(&["a", "b"]).row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn json_round_trip_is_exact() {
+        let t = sample();
+        let back = Table::from_json(&t.to_json()).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(back.text(), t.text());
+        assert_eq!(back.markdown(), t.markdown());
+        assert_eq!(back.csv(), t.csv());
+    }
+
+    #[test]
+    fn from_json_rejects_ragged_rows() {
+        let j = Json::parse(r#"{"header": ["a", "b"], "rows": [["1"]]}"#).unwrap();
+        assert!(Table::from_json(&j).is_none());
+        assert!(Table::from_json(&Json::parse("{}").unwrap()).is_none());
+        // Numeric cells are mistyped (cells are strings by contract).
+        let j = Json::parse(r#"{"header": ["a"], "rows": [[1]]}"#).unwrap();
+        assert!(Table::from_json(&j).is_none());
     }
 }

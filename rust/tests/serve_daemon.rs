@@ -1,0 +1,199 @@
+//! End-to-end tests of `convpim serve` through the real binary: a
+//! pipelined JSONL session over stdin/stdout, answered in input order
+//! while executing concurrently, sharing the result cache with prior
+//! `sweep` runs, and never exiting on malformed input.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+
+use convpim::sweep::Campaign;
+use convpim::util::json::Json;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_convpim"))
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "convpim_serve_it_{tag}_{}",
+        std::process::id()
+    ));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Run one serve session: feed `input` lines, close stdin, collect the
+/// parsed response documents.
+fn serve_session(cache_dir: &PathBuf, jobs: &str, input: &str) -> Vec<Json> {
+    let mut child = bin()
+        .args(["serve", "--jobs", jobs, "--cache-dir"])
+        .arg(cache_dir)
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawning convpim serve");
+    child
+        .stdin
+        .take()
+        .unwrap()
+        .write_all(input.as_bytes())
+        .expect("writing requests");
+    // stdin drops here → EOF; the daemon drains in-flight work and exits.
+    let out = child.wait_with_output().expect("waiting for serve");
+    assert!(
+        out.status.success(),
+        "serve must exit 0 on stdin EOF (stderr: {})",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8(out.stdout)
+        .unwrap()
+        .lines()
+        .map(|l| Json::parse(l).unwrap_or_else(|| panic!("response is not JSON: {l}")))
+        .collect()
+}
+
+fn meta_str<'j>(doc: &'j Json, key: &str) -> &'j str {
+    doc.get("meta").unwrap().get(key).and_then(Json::as_str).unwrap_or("")
+}
+
+fn meta_ok(doc: &Json) -> bool {
+    doc.get("meta").unwrap().get("ok").unwrap().as_bool().unwrap()
+}
+
+/// The acceptance scenario: a `sweep` run warms the cache, then one
+/// serve session answers ≥ 8 pipelined requests — sweep points (cache
+/// hits), an experiment, a whole campaign, inventory queries and one
+/// malformed line — in input order, with hits recorded in response
+/// metadata and exit code 0.
+#[test]
+fn pipelined_session_in_order_with_shared_cache_and_errors() {
+    let dir = temp_dir("pipeline");
+
+    // Warm the cache through the sweep CLI (cache sharing across
+    // entry points is the point of the promoted service cache).
+    let warm = bin()
+        .args(["sweep", "fig4", "--format", "csv", "--jobs", "2", "--cache-dir"])
+        .arg(&dir)
+        .output()
+        .expect("running sweep");
+    assert!(
+        warm.status.success(),
+        "sweep failed: {}",
+        String::from_utf8_lossy(&warm.stderr)
+    );
+
+    let points = Campaign::builtin("fig4").unwrap().points();
+    let sweep_point = |i: usize| {
+        format!(
+            "{{\"kind\": \"sweep-point\", \"config\": {}}}",
+            points[i].config_json().compact()
+        )
+    };
+    let lines = [
+        "{\"kind\": \"list\"}".to_string(),
+        sweep_point(0),
+        sweep_point(1),
+        "this is not json".to_string(),
+        "{\"kind\": \"experiment\", \"id\": \"table1\", \"analytic\": true}".to_string(),
+        sweep_point(2),
+        "{\"kind\": \"campaign\", \"name\": \"fig4\"}".to_string(),
+        "{\"kind\": \"list\"}".to_string(),
+        sweep_point(3),
+        "{\"kind\": \"info\"}".to_string(),
+    ];
+    assert!(lines.len() >= 8, "acceptance demands ≥ 8 pipelined requests");
+    let docs = serve_session(&dir, "4", &(lines.join("\n") + "\n"));
+
+    // One response per request, in input order (seq 0..n).
+    assert_eq!(docs.len(), lines.len());
+    for (i, doc) in docs.iter().enumerate() {
+        assert_eq!(
+            doc.get("seq").unwrap().as_u64(),
+            Some(i as u64),
+            "responses must stream in input order"
+        );
+    }
+
+    // Kinds echo the requests.
+    let kinds: Vec<&str> = docs
+        .iter()
+        .map(|d| d.get("kind").unwrap().as_str().unwrap())
+        .collect();
+    assert_eq!(
+        kinds,
+        vec![
+            "list",
+            "sweep-point",
+            "sweep-point",
+            "error",
+            "experiment",
+            "sweep-point",
+            "campaign",
+            "list",
+            "sweep-point",
+            "info"
+        ]
+    );
+
+    // The malformed line got a structured error response, not an exit.
+    assert!(!meta_ok(&docs[3]));
+    assert!(meta_str(&docs[3], "error").contains("not valid JSON"));
+
+    // Everything else succeeded.
+    for (i, doc) in docs.iter().enumerate() {
+        if i != 3 {
+            assert!(meta_ok(doc), "request {i} failed: {}", meta_str(doc, "error"));
+        }
+    }
+
+    // The sweep warmed the cache: every sweep-point request is a
+    // metadata-recorded hit, and the campaign request hit all 24 points.
+    for i in [1usize, 2, 5, 8] {
+        assert_eq!(meta_str(&docs[i], "cache"), "hit", "request {i} missed");
+    }
+    let campaign_meta = docs[6].get("meta").unwrap();
+    assert_eq!(campaign_meta.get("hits").unwrap().as_u64(), Some(24));
+    assert_eq!(campaign_meta.get("computed").unwrap().as_u64(), Some(0));
+
+    // A sweep-point response carries the row payload the sweep engine
+    // would have streamed.
+    let payload = docs[1].get("payload").unwrap();
+    assert!(payload.get("improvement").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(
+        payload.get("point").unwrap().as_str(),
+        Some(points[0].label().as_str())
+    );
+
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// A fresh daemon with `--jobs 1` serializes execution, so a duplicate
+/// request hits the entry its predecessor stored within the same
+/// session.
+#[test]
+fn within_session_cache_hit_under_serial_jobs() {
+    let dir = temp_dir("serial");
+    let points = Campaign::builtin("fig4").unwrap().points();
+    let line = format!(
+        "{{\"kind\": \"sweep-point\", \"config\": {}}}\n",
+        points[0].config_json().compact()
+    );
+    let docs = serve_session(&dir, "1", &format!("{line}{line}"));
+    assert_eq!(docs.len(), 2);
+    assert_eq!(meta_str(&docs[0], "cache"), "computed");
+    assert_eq!(meta_str(&docs[1], "cache"), "hit");
+    assert_eq!(docs[0].get("payload"), docs[1].get("payload"));
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// EOF before any request is a clean empty session.
+#[test]
+fn immediate_eof_exits_cleanly() {
+    let dir = temp_dir("eof");
+    let docs = serve_session(&dir, "2", "");
+    assert!(docs.is_empty());
+    let _ = fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,225 @@
+//! CLI-vs-service equivalence: the acceptance bar of the service
+//! redesign. Every subcommand is now a thin adapter over
+//! `convpim::service`, and these tests pin the contract that made the
+//! refactor safe — `convpim run fig4`, `convpim sweep fig4 --format csv`
+//! and `convpim exec-conv --layer alexnet:conv2 --scale 8` produce
+//! **byte-identical stdout** to the pre-service code paths (the registry
+//! runner and the sweep engine, which still exist underneath), cold or
+//! warm cache alike.
+
+use std::fs;
+use std::path::PathBuf;
+use std::process::Command;
+
+use convpim::coordinator::{run_experiment, Ctx};
+use convpim::service::{CacheStatus, ConvExecSpec, EvalRequest, EvalService, ResultCache, SetSel};
+use convpim::sweep::{run_points, Campaign, OutputFormat, Streamer};
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_convpim"))
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "convpim_svc_eq_{tag}_{}",
+        std::process::id()
+    ));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+fn stdout_of(out: std::process::Output) -> String {
+    assert!(
+        out.status.success(),
+        "command failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8(out.stdout).unwrap()
+}
+
+/// `convpim run fig4 --no-measure`: the registry text, through the
+/// service, through the CLI — all byte-identical; a cache-served rerun
+/// too.
+#[test]
+fn run_fig4_stdout_is_byte_identical_through_the_service() {
+    // The pre-service path: the registry runner's console rendering plus
+    // the trailing newline `println!` used to append.
+    let mut ctx = Ctx::analytic();
+    let expected = format!("{}\n", run_experiment("fig4", &mut ctx).unwrap().text());
+
+    // Library/service path.
+    let service = EvalService::new().with_cache(None);
+    let resp = service.submit(&EvalRequest::Experiment {
+        id: "fig4".into(),
+        fast: false,
+        analytic: true,
+        seed: 0xC0FFEE,
+    });
+    assert!(resp.meta.ok, "{:?}", resp.meta.error);
+    assert_eq!(resp.stdout, expected, "service stdout != registry text");
+
+    // CLI path, cold (no cache).
+    let out_dir = temp_dir("run_out");
+    let cli = stdout_of(
+        bin()
+            .args(["run", "fig4", "--no-measure", "--no-cache", "--out"])
+            .arg(&out_dir)
+            .output()
+            .expect("running convpim"),
+    );
+    assert_eq!(cli, expected, "CLI stdout != registry text");
+
+    // CLI path, cold then warm cache: both byte-identical.
+    let cache_dir = temp_dir("run_cache");
+    for pass in ["cold", "warm"] {
+        let cli = stdout_of(
+            bin()
+                .args(["run", "fig4", "--no-measure", "--cache-dir"])
+                .arg(&cache_dir)
+                .args(["--out"])
+                .arg(&out_dir)
+                .output()
+                .expect("running convpim"),
+        );
+        assert_eq!(cli, expected, "{pass} cached CLI stdout drifted");
+    }
+    assert!(cache_dir.exists(), "run must populate the shared cache");
+    // The run wrote the usual report files from the response.
+    assert!(out_dir.join("fig4.md").exists());
+    assert!(out_dir.join("fig4.json").exists());
+    assert!(out_dir.join("REPORT.md").exists());
+    let _ = fs::remove_dir_all(&out_dir);
+    let _ = fs::remove_dir_all(&cache_dir);
+}
+
+/// `convpim sweep fig4 --format csv`: the sweep engine's stream and the
+/// CLI's stdout are the same bytes, at any jobs level, cold or warm.
+#[test]
+fn sweep_fig4_csv_is_byte_identical_through_the_service() {
+    // The pre-service path: the sweep engine streamed serially.
+    let points = Campaign::builtin("fig4").unwrap().points();
+    let mut streamer = Streamer::new(OutputFormat::Csv, Vec::new()).unwrap();
+    let outcome = run_points(&points, 1, None, &mut |_, r| {
+        streamer.emit(r).unwrap();
+        true
+    });
+    assert_eq!(outcome.failures(), 0);
+    let expected = String::from_utf8(streamer.finish().unwrap()).unwrap();
+
+    let cli = stdout_of(
+        bin()
+            .args(["sweep", "fig4", "--format", "csv", "--no-cache", "--jobs", "4"])
+            .output()
+            .expect("running convpim"),
+    );
+    assert_eq!(cli, expected, "CLI CSV != engine stream");
+
+    let cache_dir = temp_dir("sweep_cache");
+    for pass in ["cold", "warm"] {
+        let cli = stdout_of(
+            bin()
+                .args(["sweep", "fig4", "--format", "csv", "--jobs", "2", "--cache-dir"])
+                .arg(&cache_dir)
+                .output()
+                .expect("running convpim"),
+        );
+        assert_eq!(cli, expected, "{pass} cached CLI CSV drifted");
+    }
+    let _ = fs::remove_dir_all(&cache_dir);
+}
+
+/// A cheap executed-conv cell (fixed8, memristive, /16): service cold,
+/// service warm and CLI stdout all byte-identical.
+#[test]
+fn exec_conv_cheap_cell_matches_service_cold_and_warm() {
+    let spec = ConvExecSpec {
+        layer: "alexnet:conv2".into(),
+        scale: 16,
+        fmt: Some(convpim::pim::matpim::NumFmt::Fixed(8)),
+        set: SetSel::Memristive,
+        seed: 0xC0DE,
+        rows: 0,
+    };
+    let cache_dir = temp_dir("conv_cache");
+    let service =
+        EvalService::new().with_cache(Some(ResultCache::new(&cache_dir)));
+    let cold = service.submit(&EvalRequest::ConvExec(spec.clone()));
+    assert!(cold.meta.ok, "{:?}", cold.meta.error);
+    assert_eq!(cold.meta.cache, CacheStatus::Computed);
+    let warm = service.submit(&EvalRequest::ConvExec(spec));
+    assert_eq!(warm.meta.cache, CacheStatus::Hit);
+    assert_eq!(warm.stdout, cold.stdout);
+
+    let cli = stdout_of(
+        bin()
+            .args([
+                "exec-conv",
+                "--layer",
+                "alexnet:conv2",
+                "--scale",
+                "16",
+                "--fmt",
+                "fixed8",
+                "--set",
+                "memristive",
+                "--cache-dir",
+            ])
+            .arg(&cache_dir)
+            .output()
+            .expect("running convpim"),
+    );
+    assert_eq!(cli, cold.stdout, "CLI stdout != service stdout");
+    let _ = fs::remove_dir_all(&cache_dir);
+}
+
+/// The full acceptance command — `exec-conv --layer alexnet:conv2
+/// --scale 8` (both gate sets, fixed8 + fp32) — byte-identical between
+/// CLI and service. Heavy (fp32 conv execution), so release-only like
+/// the conv property suite.
+#[test]
+#[cfg_attr(debug_assertions, ignore)]
+fn exec_conv_acceptance_command_matches_service() {
+    let service = EvalService::new().with_cache(None);
+    let resp = service.submit(&EvalRequest::ConvExec(ConvExecSpec::new("alexnet:conv2")));
+    assert!(resp.meta.ok, "{:?}", resp.meta.error);
+    let cli = stdout_of(
+        bin()
+            .args(["exec-conv", "--layer", "alexnet:conv2", "--scale", "8", "--no-cache"])
+            .output()
+            .expect("running convpim"),
+    );
+    assert_eq!(cli, resp.stdout);
+}
+
+/// `convpim validate`: the service renders the historical validate
+/// output and the CLI prints it verbatim.
+#[test]
+fn validate_small_sweep_matches_service() {
+    let service = EvalService::new().with_cache(None);
+    let resp = service.submit(&EvalRequest::Validate { rows: 4, seed: 7 });
+    assert!(resp.meta.ok);
+    let cli = stdout_of(
+        bin()
+            .args(["validate", "--rows", "4", "--seed", "7"])
+            .output()
+            .expect("running convpim"),
+    );
+    assert_eq!(cli, resp.stdout);
+    assert!(cli.ends_with("0 failures\n"));
+}
+
+/// `convpim list` comes from the service too and still lists every
+/// registry id and builtin campaign.
+#[test]
+fn list_matches_service() {
+    let service = EvalService::new().with_cache(None);
+    let resp = service.submit(&EvalRequest::List);
+    let cli = stdout_of(bin().args(["list"]).output().expect("running convpim"));
+    assert_eq!(cli, resp.stdout);
+    for id in convpim::coordinator::all_ids() {
+        assert!(cli.lines().any(|l| l == id), "missing {id}");
+    }
+    for name in Campaign::builtin_names() {
+        assert!(cli.lines().any(|l| l == format!("sweep:{name}")), "missing sweep:{name}");
+    }
+}
