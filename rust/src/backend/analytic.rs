@@ -1,0 +1,243 @@
+//! [`AnalyticPim`]: the paper's architecture-scale digital-PIM model as
+//! a [`Backend`].
+//!
+//! Wraps [`PimArch`] plus the compiled microcode costs: elementwise ops
+//! compile their scalar program directly, matmul goes through the MatPIM
+//! schedule ([`MatmulModel`]), CNN inference/training and attention
+//! decode through the MAC upper bound ([`CnnPimModel`]), and `conv-exec`
+//! workloads are *predicted* analytically (`throughput_ops(mac_cycles)`)
+//! — the executed counterpart lives in
+//! [`ExecutedCrossbar`](super::ExecutedCrossbar), and the two agree
+//! exactly by construction.
+//!
+//! Every arithmetic expression here is the one the sweep engine's
+//! pre-backend `SweepPoint::eval` match arms computed, in the same
+//! order — that is what keeps `run fig4` / `sweep fig4` byte-identical
+//! through the adapter rework (asserted by `tests/backend_parity.rs`).
+
+use anyhow::Result;
+
+use super::{Backend, Estimate};
+use crate::metrics;
+use crate::pim::arch::PimArch;
+use crate::pim::matpim::{CnnPimModel, MatmulModel, NumFmt};
+use crate::sweep::campaign::{ArchSpec, WorkloadSpec};
+use crate::util::json::Json;
+use crate::workloads::attention::{decode_workload, DecodeConfig};
+
+/// The analytic digital-PIM backend (`pim:SET[@RxC]`).
+#[derive(Clone, Debug)]
+pub struct AnalyticPim {
+    arch: PimArch,
+    id: String,
+}
+
+impl AnalyticPim {
+    /// Wrap an architecture axis value. The spec's dimensions must be
+    /// positive (callers validate: [`super::parse`] and the campaign
+    /// parsers reject zero dims, and `SweepPoint::eval` guards before
+    /// constructing).
+    pub fn new(spec: ArchSpec) -> AnalyticPim {
+        AnalyticPim {
+            arch: spec.arch(),
+            id: format!("pim:{}", spec.name()),
+        }
+    }
+
+    /// Wrap an already-built [`PimArch`] (the [`metrics::cc_point`]
+    /// adapter path, which historically took the arch directly).
+    pub fn from_arch(arch: PimArch) -> AnalyticPim {
+        let (pr, pc) = arch.set.crossbar_dims();
+        let base = ArchSpec::set_name(arch.set);
+        let id = if (arch.rows, arch.cols) == (pr, pc) {
+            format!("pim:{base}")
+        } else {
+            format!("pim:{base}@{}x{}", arch.rows, arch.cols)
+        };
+        AnalyticPim { arch, id }
+    }
+
+    /// The wrapped architecture model.
+    pub fn arch(&self) -> &PimArch {
+        &self.arch
+    }
+}
+
+impl Backend for AnalyticPim {
+    fn id(&self) -> String {
+        self.id.clone()
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "analytic digital-PIM model: {:?} gates, {}x{} crossbars, {} GB, {:.0} MHz",
+            self.arch.set,
+            self.arch.rows,
+            self.arch.cols,
+            self.arch.mem_bytes >> 30,
+            self.arch.clock_hz / 1e6
+        )
+    }
+
+    fn supports(&self, _workload: &WorkloadSpec) -> bool {
+        // Every workload kind has an analytic PIM cost model; conv-exec
+        // is predicted from the same per-MAC costs the executed backend
+        // measures.
+        true
+    }
+
+    fn evaluate(&self, workload: &WorkloadSpec, fmt: NumFmt) -> Result<Estimate> {
+        let arch = &self.arch;
+        let (throughput, per_watt, cc, notes) = match *workload {
+            WorkloadSpec::Elementwise(op) => {
+                let prog = fmt.program(op, arch.set);
+                let io = metrics::io_bits(op, fmt);
+                let cc = metrics::compute_complexity(&prog, io);
+                let tp = arch.throughput(&prog);
+                (
+                    tp,
+                    tp / arch.max_power_w,
+                    Some(cc),
+                    Json::obj(vec![
+                        ("gates", Json::i(prog.gates() as i64)),
+                        ("cycles", Json::i(prog.cycles() as i64)),
+                        ("io_bits", Json::i(io as i64)),
+                    ]),
+                )
+            }
+            WorkloadSpec::Matmul(n) => {
+                anyhow::ensure!(n > 0, "matmul dimension must be positive");
+                let mm = MatmulModel::new(n, fmt, arch.set, arch.cols);
+                (
+                    mm.throughput(arch),
+                    mm.throughput_per_watt(arch),
+                    None,
+                    Json::obj(vec![
+                        ("schedule_cycles", Json::i(mm.cycles as i64)),
+                        ("rows_per_instance", Json::i(mm.rows_per_instance as i64)),
+                    ]),
+                )
+            }
+            WorkloadSpec::Cnn { model, training } => {
+                let base = model.workload();
+                let w = if training { base.training() } else { base };
+                let macs = w.total_macs();
+                let pim_model = CnnPimModel::new(fmt, arch.set, macs);
+                (
+                    pim_model.throughput(arch),
+                    pim_model.throughput_per_watt(arch),
+                    None,
+                    Json::obj(vec![
+                        ("macs", Json::n(macs)),
+                        ("mac_cycles", Json::i(pim_model.mac_cycles() as i64)),
+                    ]),
+                )
+            }
+            WorkloadSpec::ConvExec { model, conv, scale } => {
+                let (_, spec) = super::conv_exec_layer(model, conv, scale)?;
+                let pim_model = CnnPimModel::new(fmt, arch.set, spec.macs() as f64);
+                // The analytic *prediction* for the executed layer: one
+                // MAC per row per mac_cycles at architecture scale — the
+                // very number ExecutedCrossbar reproduces by measurement.
+                let tp = arch.throughput_ops(pim_model.mac_cycles());
+                (
+                    tp,
+                    tp / arch.max_power_w,
+                    None,
+                    Json::obj(vec![
+                        ("layer", Json::s(spec.label())),
+                        ("macs", Json::i(spec.macs() as i64)),
+                        ("mac_cycles", Json::i(pim_model.mac_cycles() as i64)),
+                        ("mac_gates", Json::i(pim_model.mac_gates() as i64)),
+                        ("executed", Json::Bool(false)),
+                    ]),
+                )
+            }
+            WorkloadSpec::Decode { seq } => {
+                anyhow::ensure!(seq > 0, "decode context length must be positive");
+                let w = decode_workload(DecodeConfig::llama7b(seq));
+                let pim_model = CnnPimModel::new(fmt, arch.set, w.total_macs());
+                (
+                    pim_model.throughput(arch),
+                    pim_model.throughput_per_watt(arch),
+                    None,
+                    Json::obj(vec![
+                        ("macs", Json::n(w.total_macs())),
+                        ("mac_cycles", Json::i(pim_model.mac_cycles() as i64)),
+                    ]),
+                )
+            }
+        };
+        Ok(Estimate {
+            backend: self.id.clone(),
+            workload: workload.name(),
+            format: fmt.name(),
+            unit: workload.unit().to_string(),
+            throughput,
+            per_watt,
+            power_w: arch.max_power_w,
+            cc,
+            // The analytic PIM model computes in place and deliberately
+            // charges no data movement (the paper's §5 upper bound).
+            bytes_per_unit: None,
+            notes,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pim::fixed::FixedOp;
+    use crate::pim::gates::GateSet;
+    use crate::sweep::campaign::CnnModel;
+
+    #[test]
+    fn elementwise_matches_the_arch_model_directly() {
+        let b = AnalyticPim::new(ArchSpec::paper(GateSet::MemristiveNor));
+        let fmt = NumFmt::Fixed(32);
+        let e = b
+            .evaluate(&WorkloadSpec::Elementwise(FixedOp::Add), fmt)
+            .unwrap();
+        let arch = PimArch::paper(GateSet::MemristiveNor);
+        let prog = fmt.program(FixedOp::Add, GateSet::MemristiveNor);
+        assert_eq!(e.throughput, arch.throughput(&prog));
+        assert_eq!(e.per_watt, e.throughput / arch.max_power_w);
+        let cc = e.cc.expect("elementwise estimates carry CC");
+        assert!((cc - 3.0).abs() < 0.01, "cc={cc}");
+        assert_eq!(e.unit, "ops/s");
+    }
+
+    #[test]
+    fn conv_exec_prediction_and_bounds() {
+        let b = AnalyticPim::new(ArchSpec::paper(GateSet::MemristiveNor));
+        let w = WorkloadSpec::ConvExec {
+            model: CnnModel::AlexNet,
+            conv: 2,
+            scale: 16,
+        };
+        let e = b.evaluate(&w, NumFmt::Fixed(8)).unwrap();
+        assert_eq!(e.unit, "mac/s");
+        assert!(e.throughput > 0.0);
+        assert_eq!(e.notes.get("executed").unwrap().as_bool(), Some(false));
+        let bad = WorkloadSpec::ConvExec {
+            model: CnnModel::AlexNet,
+            conv: 99,
+            scale: 16,
+        };
+        let err = b.evaluate(&bad, NumFmt::Fixed(8)).err().unwrap();
+        assert!(format!("{err}").contains("out of range"));
+    }
+
+    #[test]
+    fn from_arch_names_paper_and_custom_dims() {
+        assert_eq!(
+            AnalyticPim::from_arch(PimArch::paper(GateSet::DramMaj)).id(),
+            "pim:dram"
+        );
+        assert_eq!(
+            AnalyticPim::from_arch(PimArch::with_dims(GateSet::MemristiveNor, 1024, 512)).id(),
+            "pim:memristive@1024x512"
+        );
+    }
+}

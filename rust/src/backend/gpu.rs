@@ -1,0 +1,286 @@
+//! [`GpuRoofline`]: the datasheet × roofline GPU baselines as a
+//! [`Backend`].
+//!
+//! One instance is a `(device, roofline mode, precision)` triple:
+//! *experimental* mode is the memory/launch-limited roofline the paper's
+//! measurements empirically landed on, *theoretical* mode is the
+//! datasheet compute peak. The precision defaults to `auto` — derived
+//! from the workload and number format exactly the way the sweep
+//! engine's pre-backend `gpu_dtype` did (≤16-bit formats use tensor
+//! cores for the matmul-shaped CNN work and the CUDA fp16 path
+//! otherwise) — so the adapter rework keeps every GPU column
+//! byte-identical.
+
+use anyhow::Result;
+
+use super::{Backend, Estimate};
+use crate::gpumodel::{GpuDtype, GpuSpec, Roofline};
+use crate::metrics;
+use crate::pim::matpim::NumFmt;
+use crate::sweep::campaign::{GpuMode, WorkloadSpec};
+use crate::util::json::Json;
+use crate::workloads::attention::{decode_workload, DecodeConfig};
+
+/// Display / id name of a [`GpuDtype`].
+fn dtype_name(d: GpuDtype) -> &'static str {
+    match d {
+        GpuDtype::F32 => "fp32",
+        GpuDtype::F16 => "fp16",
+        GpuDtype::F16Tensor => "fp16-tensor",
+    }
+}
+
+/// The GPU roofline backend (`gpu:NAME[:MODE[:DTYPE]]`).
+#[derive(Clone, Debug)]
+pub struct GpuRoofline {
+    rl: Roofline,
+    mode: GpuMode,
+    /// Explicit precision override; `None` derives per workload/format.
+    dtype: Option<GpuDtype>,
+    id: String,
+}
+
+impl GpuRoofline {
+    /// Wrap a datasheet spec with the default empirical roofline factors.
+    pub fn new(spec: GpuSpec, mode: GpuMode, dtype: Option<GpuDtype>) -> GpuRoofline {
+        GpuRoofline::from_roofline(Roofline::new(spec), mode, dtype)
+    }
+
+    /// Wrap an existing roofline (custom efficiency factors flow
+    /// through — the [`metrics::cc_point`] adapter path).
+    pub fn from_roofline(rl: Roofline, mode: GpuMode, dtype: Option<GpuDtype>) -> GpuRoofline {
+        let mut id = format!("gpu:{}:{}", rl.spec.name.to_ascii_lowercase(), mode.name());
+        if let Some(d) = dtype {
+            id.push(':');
+            id.push_str(dtype_name(d));
+        }
+        GpuRoofline { rl, mode, dtype, id }
+    }
+
+    /// The precision a workload/format pair uses when no explicit dtype
+    /// is set: half rates for ≤16-bit formats (tensor cores for the
+    /// matmul-shaped CNN work, the CUDA-core path otherwise), fp32 rates
+    /// above — the sweep engine's historical rule.
+    pub fn derived_dtype(workload: &WorkloadSpec, fmt: NumFmt) -> GpuDtype {
+        let half = fmt.bits() <= 16;
+        match workload {
+            WorkloadSpec::Cnn { .. } | WorkloadSpec::ConvExec { .. } if half => {
+                GpuDtype::F16Tensor
+            }
+            _ if half => GpuDtype::F16,
+            _ => GpuDtype::F32,
+        }
+    }
+}
+
+impl Backend for GpuRoofline {
+    fn id(&self) -> String {
+        self.id.clone()
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "{} {} roofline ({}): {:.1} TFLOP/s fp32 peak, {:.0} GB/s",
+            self.rl.spec.name,
+            self.mode.name(),
+            match self.dtype {
+                None => "auto precision",
+                Some(d) => dtype_name(d),
+            },
+            self.rl.spec.peak_f32 / 1e12,
+            self.rl.spec.mem_bw / 1e9
+        )
+    }
+
+    fn supports(&self, _workload: &WorkloadSpec) -> bool {
+        true
+    }
+
+    fn evaluate(&self, workload: &WorkloadSpec, fmt: NumFmt) -> Result<Estimate> {
+        let rl = &self.rl;
+        let dtype = self.dtype.unwrap_or_else(|| Self::derived_dtype(workload, fmt));
+        let (throughput, bytes_per_unit, notes) = match *workload {
+            WorkloadSpec::Elementwise(op) => {
+                let io = metrics::io_bits(op, fmt);
+                let bytes = io as f64 / 8.0;
+                let tp = match self.mode {
+                    GpuMode::Experimental => rl.membound_ops(bytes),
+                    GpuMode::Theoretical => rl.peak(dtype),
+                };
+                (
+                    tp,
+                    Some(bytes),
+                    Json::obj(vec![
+                        ("dtype", Json::s(dtype_name(dtype))),
+                        ("effective_bw", Json::n(rl.eff_bw())),
+                    ]),
+                )
+            }
+            WorkloadSpec::Matmul(n) => {
+                anyhow::ensure!(n > 0, "matmul dimension must be positive");
+                let tp = match self.mode {
+                    GpuMode::Experimental => rl.matmul_throughput(n, dtype),
+                    GpuMode::Theoretical => rl.matmul_throughput_peak(n, dtype),
+                };
+                let bytes = 3.0 * (n * n) as f64 * Roofline::element_bytes(dtype);
+                (
+                    tp,
+                    Some(bytes),
+                    Json::obj(vec![
+                        ("dtype", Json::s(dtype_name(dtype))),
+                        ("flops_per_matmul", Json::n(2.0 * (n as f64).powi(3))),
+                    ]),
+                )
+            }
+            WorkloadSpec::Cnn { model, training } => {
+                let base = model.workload();
+                let w = if training { base.training() } else { base };
+                // Batch-64 roofline with traffic scaled by element width —
+                // the Fig. 6/7 experimental-GPU model (fp32 scale = 1).
+                let scale = fmt.bits() as f64 / 32.0;
+                let layers: Vec<(f64, f64)> = w
+                    .roofline_layers_batched(64.0)
+                    .iter()
+                    .map(|&(f, b)| (f, b * scale))
+                    .collect();
+                let tp = match self.mode {
+                    GpuMode::Experimental => rl.workload_flops(&layers, dtype) / w.total_flops(),
+                    GpuMode::Theoretical => rl.peak(dtype) / w.total_flops(),
+                };
+                let batch_bytes: f64 = layers.iter().map(|l| l.1).sum();
+                (
+                    tp,
+                    Some(batch_bytes / 64.0),
+                    Json::obj(vec![
+                        ("dtype", Json::s(dtype_name(dtype))),
+                        ("batch", Json::i(64)),
+                        ("total_flops", Json::n(w.total_flops())),
+                    ]),
+                )
+            }
+            // The GPU baseline charges the *full* layer regardless of the
+            // PIM side's down-scale factor (the historical sweep rule).
+            WorkloadSpec::ConvExec { model, conv, scale } => {
+                let (layer, _) = super::conv_exec_layer(model, conv, scale)?;
+                // The layer's batch-64 GPU roofline (FLOPs → MACs via /2)
+                // — the same batching formula the Cnn points use, via
+                // LayerCost::roofline_batched.
+                let traffic_scale = fmt.bits() as f64 / 32.0;
+                let (flops, bytes) = layer.roofline_batched(64.0);
+                let pair = (flops, bytes * traffic_scale);
+                let tp = match self.mode {
+                    GpuMode::Experimental => rl.workload_flops(&[pair], dtype) / 2.0,
+                    GpuMode::Theoretical => rl.peak(dtype) / 2.0,
+                };
+                (
+                    tp,
+                    None,
+                    Json::obj(vec![
+                        ("dtype", Json::s(dtype_name(dtype))),
+                        ("layer", Json::s(layer.name.clone())),
+                        ("layer_flops_b64", Json::n(pair.0)),
+                        ("layer_bytes_b64", Json::n(pair.1)),
+                    ]),
+                )
+            }
+            WorkloadSpec::Decode { seq } => {
+                anyhow::ensure!(seq > 0, "decode context length must be positive");
+                let w = decode_workload(DecodeConfig::llama7b(seq));
+                // Per-token decode is unbatched matvec work: batch-1
+                // roofline, no tensor cores.
+                let tp = match self.mode {
+                    GpuMode::Experimental => {
+                        rl.workload_flops(&w.roofline_layers(), dtype) / w.total_flops()
+                    }
+                    GpuMode::Theoretical => rl.peak(dtype) / w.total_flops(),
+                };
+                (
+                    tp,
+                    Some(w.total_bytes()),
+                    Json::obj(vec![
+                        ("dtype", Json::s(dtype_name(dtype))),
+                        ("total_flops", Json::n(w.total_flops())),
+                    ]),
+                )
+            }
+        };
+        Ok(Estimate {
+            backend: self.id.clone(),
+            workload: workload.name(),
+            format: fmt.name(),
+            unit: workload.unit().to_string(),
+            throughput,
+            per_watt: rl.per_watt(throughput),
+            power_w: rl.spec.max_power_w,
+            cc: None,
+            bytes_per_unit,
+            notes,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pim::fixed::FixedOp;
+    use crate::pim::softfloat::Format;
+    use crate::sweep::campaign::CnnModel;
+
+    #[test]
+    fn derived_dtype_follows_the_historical_rule() {
+        let cnn = WorkloadSpec::Cnn {
+            model: CnnModel::AlexNet,
+            training: false,
+        };
+        let mm = WorkloadSpec::Matmul(64);
+        let fp16 = NumFmt::Float(Format::FP16);
+        let fp32 = NumFmt::Float(Format::FP32);
+        assert_eq!(GpuRoofline::derived_dtype(&cnn, fp16), GpuDtype::F16Tensor);
+        assert_eq!(GpuRoofline::derived_dtype(&mm, fp16), GpuDtype::F16);
+        assert_eq!(GpuRoofline::derived_dtype(&cnn, fp32), GpuDtype::F32);
+        assert_eq!(
+            GpuRoofline::derived_dtype(&WorkloadSpec::Elementwise(FixedOp::Add), NumFmt::Fixed(8)),
+            GpuDtype::F16
+        );
+    }
+
+    #[test]
+    fn elementwise_matches_the_roofline_directly() {
+        let rl = Roofline::new(GpuSpec::a6000());
+        let b = GpuRoofline::new(GpuSpec::a6000(), GpuMode::Experimental, None);
+        let fmt = NumFmt::Fixed(32);
+        let e = b
+            .evaluate(&WorkloadSpec::Elementwise(FixedOp::Add), fmt)
+            .unwrap();
+        let io = metrics::io_bits(FixedOp::Add, fmt);
+        assert_eq!(e.throughput, rl.membound_ops(io as f64 / 8.0));
+        assert_eq!(e.per_watt, rl.per_watt(e.throughput));
+        assert_eq!(e.bytes_per_unit, Some(12.0));
+    }
+
+    #[test]
+    fn theoretical_dominates_experimental() {
+        let exp = GpuRoofline::new(GpuSpec::a6000(), GpuMode::Experimental, None);
+        let theo = GpuRoofline::new(GpuSpec::a6000(), GpuMode::Theoretical, None);
+        let fmt = NumFmt::Float(Format::FP32);
+        for name in ["elementwise-mul", "matmul-n64", "cnn-resnet50", "decode-s2048"] {
+            let w = WorkloadSpec::from_name(name).unwrap();
+            let a = exp.evaluate(&w, fmt).unwrap().throughput;
+            let b = theo.evaluate(&w, fmt).unwrap().throughput;
+            assert!(b >= a, "{name}: theoretical {b} < experimental {a}");
+        }
+    }
+
+    #[test]
+    fn explicit_dtype_overrides_derivation() {
+        let auto = GpuRoofline::new(GpuSpec::a100(), GpuMode::Theoretical, None);
+        let forced = GpuRoofline::new(GpuSpec::a100(), GpuMode::Theoretical, Some(GpuDtype::F32));
+        let w = WorkloadSpec::from_name("cnn-alexnet").unwrap();
+        let fp16 = NumFmt::Float(Format::FP16);
+        // auto → tensor cores; forced fp32 → the (much lower) fp32 peak.
+        let a = auto.evaluate(&w, fp16).unwrap().throughput;
+        let f = forced.evaluate(&w, fp16).unwrap().throughput;
+        assert!(a > 3.0 * f, "auto {a} vs forced-fp32 {f}");
+        assert_eq!(forced.id(), "gpu:a100:theoretical:fp32");
+    }
+}

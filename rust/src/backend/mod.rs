@@ -1,0 +1,381 @@
+//! First-class evaluation backends: one `evaluate` API over every
+//! hardware model in the repo.
+//!
+//! The paper's whole contribution is a *comparison* — digital PIM vs GPU
+//! across workloads — and real-PIM benchmarking efforts (Gómez-Luna et
+//! al. 2021; Ghose et al. 2019) organize exactly this kind of study as a
+//! *workload × platform* matrix. This module promotes the platform to a
+//! first-class value:
+//!
+//! * [`Backend`] — the platform trait: `id()`, `describe()`,
+//!   `supports(&WorkloadSpec)`, and
+//!   `evaluate(&WorkloadSpec, NumFmt) -> Estimate`;
+//! * [`Estimate`] — the flat result record every backend produces:
+//!   throughput in the workload's unit, throughput/W, the normalization
+//!   power, compute complexity and bytes-moved where defined, and
+//!   backend-specific notes as JSON;
+//! * [`AnalyticPim`] — the paper's architecture-scale digital-PIM model
+//!   ([`crate::pim::arch::PimArch`] + compiled microcode costs, including
+//!   the [`crate::pim::matpim::CnnPimModel`] /
+//!   [`crate::pim::matpim::MatmulModel`] schedule paths);
+//! * [`ExecutedCrossbar`] — *executed* evaluation on the bit-exact
+//!   crossbar simulator ([`crate::pim::conv`]): deterministic seeded
+//!   operands, measured cycles/gates, enforced agreement with the
+//!   analytic model and bit-exactness against a host reference;
+//! * [`GpuRoofline`] — the datasheet × roofline GPU baselines
+//!   (experimental memory-bound / theoretical compute peak) over
+//!   [`crate::gpumodel`];
+//! * [`parse`] — the string-keyed registry
+//!   (`pim:memristive`, `pim-exec:dram`, `gpu:a6000:experimental:fp32`,
+//!   …) behind `convpim compare --backends` and the campaign `backends`
+//!   axis.
+//!
+//! The pre-existing evaluation paths — [`crate::metrics::cc_point`] and
+//! [`crate::sweep::SweepPoint::eval`] — are thin adapters over these
+//! backends: they compute the **same floating-point expressions in the
+//! same order**, so their outputs are byte-identical to the pre-backend
+//! code (pinned by `tests/service_equivalence.rs`, the golden snapshots,
+//! and `tests/backend_parity.rs`).
+//!
+//! ```
+//! use convpim::backend::{self, Backend as _};
+//! use convpim::pim::matpim::NumFmt;
+//! use convpim::sweep::WorkloadSpec;
+//!
+//! let pim = backend::parse("pim:memristive").unwrap();
+//! let gpu = backend::parse("gpu:a6000:experimental").unwrap();
+//! let w = WorkloadSpec::from_name("cnn-alexnet").unwrap();
+//! let fmt = NumFmt::Float(convpim::pim::softfloat::Format::FP32);
+//! let p = pim.evaluate(&w, fmt).unwrap();
+//! let g = gpu.evaluate(&w, fmt).unwrap();
+//! assert_eq!(p.unit, "img/s");
+//! assert!(p.throughput > 0.0 && g.throughput > 0.0);
+//! ```
+
+pub mod analytic;
+pub mod executed;
+pub mod gpu;
+
+use anyhow::Result;
+
+pub use analytic::AnalyticPim;
+pub use executed::{ExecutedCrossbar, CONV_EXEC_SEED};
+pub use gpu::GpuRoofline;
+
+use crate::gpumodel::{GpuDtype, GpuSpec};
+use crate::pim::gates::GateSet;
+use crate::pim::matpim::NumFmt;
+use crate::sweep::campaign::{ArchSpec, CnnModel, GpuMode, WorkloadSpec};
+use crate::util::json::Json;
+use crate::workloads::{ConvSpec, LayerCost};
+
+/// One evaluation platform: a hardware model that can judge workloads.
+///
+/// Implementations are cheap to construct and hold no mutable state —
+/// `evaluate` is a pure function of `(workload, fmt)` (the executed
+/// backend uses a fixed operand seed, [`CONV_EXEC_SEED`], precisely so
+/// this holds), which is what lets backend results share the
+/// content-addressed result cache.
+pub trait Backend: Send + Sync {
+    /// Canonical registry id (parseable by [`parse`], e.g.
+    /// `pim:memristive`, `gpu:a6000:experimental`).
+    fn id(&self) -> String;
+
+    /// One-line human description (shown by `convpim list`).
+    fn describe(&self) -> String;
+
+    /// Whether [`Backend::evaluate`] can judge this workload.
+    fn supports(&self, workload: &WorkloadSpec) -> bool;
+
+    /// Evaluate a workload at a number format into an [`Estimate`].
+    fn evaluate(&self, workload: &WorkloadSpec, fmt: NumFmt) -> Result<Estimate>;
+}
+
+/// The flat result record of one `(backend, workload, format)` cell.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Estimate {
+    /// The producing backend's canonical id.
+    pub backend: String,
+    /// Workload name ([`WorkloadSpec::name`]).
+    pub workload: String,
+    /// Number-format name (`fixed32`, `fp16`, …).
+    pub format: String,
+    /// Unit of `throughput` (`ops/s`, `matmul/s`, `img/s`, `tok/s`,
+    /// `mac/s` — [`WorkloadSpec::unit`]).
+    pub unit: String,
+    /// Throughput in `unit`.
+    pub throughput: f64,
+    /// Throughput per watt (the paper's energy-efficiency metric, using
+    /// the max-power normalization of §2.2).
+    pub per_watt: f64,
+    /// The normalization power in watts (`throughput / per_watt`).
+    pub power_w: f64,
+    /// Compute complexity in gates/bit, where defined (elementwise
+    /// arithmetic on PIM backends).
+    pub cc: Option<f64>,
+    /// Bytes moved per `unit` of work on this platform, where the model
+    /// tracks it (GPU rooflines; PIM computes in place and charges
+    /// movement only in the executed backend's notes).
+    pub bytes_per_unit: Option<f64>,
+    /// Backend-specific details (compiled program costs, executed
+    /// measured-vs-analytic records, roofline inputs).
+    pub notes: Json,
+}
+
+impl Estimate {
+    /// Machine-readable record (one cell of a `compare` response).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("backend", Json::s(self.backend.clone())),
+            ("workload", Json::s(self.workload.clone())),
+            ("format", Json::s(self.format.clone())),
+            ("unit", Json::s(self.unit.clone())),
+            ("throughput", Json::n(self.throughput)),
+            ("per_watt", Json::n(self.per_watt)),
+            ("power_w", Json::n(self.power_w)),
+            ("cc", self.cc.map(Json::n).unwrap_or(Json::Null)),
+            (
+                "bytes_per_unit",
+                self.bytes_per_unit.map(Json::n).unwrap_or(Json::Null),
+            ),
+            ("notes", self.notes.clone()),
+        ])
+    }
+}
+
+/// The grammar `parse` accepts (also the error-message help text).
+pub const ID_GRAMMAR: &str = "pim:SET[@RxC] | pim-exec:SET[@RxC] | gpu:NAME[:MODE[:DTYPE]] \
+     (SET: memristive|dram; NAME: a6000|a100|v100|rtx3090; \
+     MODE: experimental|theoretical; DTYPE: auto|fp32|fp16|fp16-tensor)";
+
+/// Parse a backend id into a backend instance.
+///
+/// Ids are case-sensitive except the GPU name. Omitted GPU fields take
+/// defaults (`experimental` mode, `auto` dtype — derived from the
+/// workload and format the way the sweep engine always has). The
+/// returned backend's [`Backend::id`] is the *canonical* spelling
+/// (defaults made explicit), so distinct spellings of one platform
+/// canonicalize to one cache identity wherever ids are canonicalized
+/// before caching (the campaign `backends` axis does this).
+pub fn parse(id: &str) -> Result<Box<dyn Backend>> {
+    let (kind, rest) = id.split_once(':').ok_or_else(|| {
+        anyhow::anyhow!("backend id `{id}` needs a `kind:...` form; known: {ID_GRAMMAR}")
+    })?;
+    match kind {
+        "pim" => Ok(Box::new(AnalyticPim::new(parse_arch(rest)?))),
+        "pim-exec" => Ok(Box::new(ExecutedCrossbar::new(parse_arch(rest)?))),
+        "gpu" => parse_gpu(rest),
+        other => anyhow::bail!("unknown backend kind `{other}`; known: {ID_GRAMMAR}"),
+    }
+}
+
+/// Parse the `SET[@RxC]` architecture part of a PIM backend id.
+fn parse_arch(s: &str) -> Result<ArchSpec> {
+    let (set_name, dims) = match s.split_once('@') {
+        None => (s, None),
+        Some((n, d)) => (n, Some(d)),
+    };
+    let set = match set_name {
+        "memristive" => GateSet::MemristiveNor,
+        "dram" => GateSet::DramMaj,
+        other => anyhow::bail!("backend gate set must be `memristive` or `dram`, got `{other}`"),
+    };
+    match dims {
+        None => Ok(ArchSpec::paper(set)),
+        Some(d) => {
+            let (r, c) = d.split_once('x').ok_or_else(|| {
+                anyhow::anyhow!("backend crossbar dims must be `ROWSxCOLS`, got `@{d}`")
+            })?;
+            let parse_dim = |v: &str| -> Result<u64> {
+                v.parse().map_err(|_| {
+                    anyhow::anyhow!("backend crossbar dims must be `ROWSxCOLS`, got `@{d}`")
+                })
+            };
+            let (r, c) = (parse_dim(r)?, parse_dim(c)?);
+            anyhow::ensure!(r > 0 && c > 0, "backend crossbar dims must be positive (got {r}x{c})");
+            Ok(ArchSpec::with_dims(set, r, c))
+        }
+    }
+}
+
+/// Parse the `NAME[:MODE[:DTYPE]]` part of a GPU backend id.
+fn parse_gpu(rest: &str) -> Result<Box<dyn Backend>> {
+    let mut parts = rest.split(':');
+    let name = parts.next().unwrap_or("");
+    let spec = GpuSpec::by_name(name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown gpu `{name}`; available: {}",
+            GpuSpec::all()
+                .iter()
+                .map(|s| s.name.to_ascii_lowercase())
+                .collect::<Vec<_>>()
+                .join(", ")
+        )
+    })?;
+    let mode = match parts.next() {
+        None | Some("experimental") | Some("exp") => GpuMode::Experimental,
+        Some("theoretical") | Some("theo") => GpuMode::Theoretical,
+        Some(other) => anyhow::bail!(
+            "gpu backend mode must be `experimental` or `theoretical`, got `{other}`"
+        ),
+    };
+    let dtype = match parts.next() {
+        None | Some("auto") => None,
+        Some("fp32") => Some(GpuDtype::F32),
+        Some("fp16") => Some(GpuDtype::F16),
+        Some("fp16-tensor") => Some(GpuDtype::F16Tensor),
+        Some(other) => anyhow::bail!(
+            "gpu backend dtype must be auto|fp32|fp16|fp16-tensor, got `{other}`"
+        ),
+    };
+    if let Some(extra) = parts.next() {
+        anyhow::bail!("trailing backend id segment `:{extra}`; grammar: {ID_GRAMMAR}");
+    }
+    Ok(Box::new(GpuRoofline::new(spec, mode, dtype)))
+}
+
+/// Resolve a `conv-exec` workload's layer: bounds-check the 1-based
+/// `conv` index against the model's executable conv layers and return
+/// the full layer cost (the GPU baseline charges the full layer) plus
+/// the down-scaled executable spec (what the PIM backends predict /
+/// execute). One shared lookup so the three backends cannot drift on
+/// the bounds rule or error text.
+pub(crate) fn conv_exec_layer(
+    model: CnnModel,
+    conv: u32,
+    scale: u32,
+) -> Result<(LayerCost, ConvSpec)> {
+    let w = model.workload();
+    let convs = w.conv_layers();
+    anyhow::ensure!(
+        conv >= 1 && (conv as usize) <= convs.len(),
+        "{} has {} executable conv layers; `conv` index {conv} is out of range",
+        w.name,
+        convs.len()
+    );
+    let (layer, full) = convs[conv as usize - 1];
+    Ok((layer.clone(), full.scaled(scale)))
+}
+
+/// Parse a JSON array of backend-id strings; `ctx` names the owning
+/// document for error messages. With `canonicalize`, every id is
+/// resolved through the registry and replaced by its canonical spelling
+/// (defaults made explicit) — the campaign `backends` axis does this so
+/// two spellings of one platform share cache entries; wire surfaces
+/// that echo the request verbatim keep the raw spelling.
+pub(crate) fn ids_from_json(v: &Json, ctx: &str, canonicalize: bool) -> Result<Vec<String>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow::anyhow!("{ctx} `backends` must be an array of backend ids"))?
+        .iter()
+        .map(|b| {
+            let id = b
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("{ctx} `backends` entries must be strings"))?;
+            if canonicalize {
+                Ok(parse(id)?.id())
+            } else {
+                Ok(id.to_string())
+            }
+        })
+        .collect()
+}
+
+/// The default backend inventory (`convpim list`): both PIM technologies
+/// analytic and executed at Table 1 dimensions, plus every GPU in the
+/// datasheet database in both roofline modes.
+pub fn builtin() -> Vec<Box<dyn Backend>> {
+    let mut out: Vec<Box<dyn Backend>> = Vec::new();
+    for set in GateSet::all() {
+        out.push(Box::new(AnalyticPim::new(ArchSpec::paper(set))));
+    }
+    for set in GateSet::all() {
+        out.push(Box::new(ExecutedCrossbar::new(ArchSpec::paper(set))));
+    }
+    for spec in GpuSpec::all() {
+        for mode in [GpuMode::Experimental, GpuMode::Theoretical] {
+            out.push(Box::new(GpuRoofline::new(spec, mode, None)));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_canonicalizes_and_round_trips() {
+        // Canonical ids parse back to themselves.
+        for id in [
+            "pim:memristive",
+            "pim:dram",
+            "pim:memristive@1024x512",
+            "pim-exec:dram",
+            "gpu:a6000:experimental",
+            "gpu:a100:theoretical",
+            "gpu:v100:experimental:fp16",
+            "gpu:rtx3090:theoretical:fp16-tensor",
+        ] {
+            let b = parse(id).unwrap_or_else(|e| panic!("{id}: {e:#}"));
+            assert_eq!(b.id(), id, "canonical ids are fixed points");
+            assert_eq!(parse(&b.id()).unwrap().id(), b.id());
+        }
+        // Defaults are made explicit in the canonical id.
+        assert_eq!(parse("gpu:a6000").unwrap().id(), "gpu:a6000:experimental");
+        assert_eq!(parse("gpu:A6000:exp").unwrap().id(), "gpu:a6000:experimental");
+        assert_eq!(parse("gpu:a100:theo").unwrap().id(), "gpu:a100:theoretical");
+        assert_eq!(
+            parse("gpu:a6000:experimental:auto").unwrap().id(),
+            "gpu:a6000:experimental"
+        );
+    }
+
+    #[test]
+    fn parse_rejects_malformed_ids() {
+        for bad in [
+            "pim",
+            "pim:cmos",
+            "pim:memristive@8",
+            "pim:memristive@0x1024",
+            "pim:memristive@8xbig",
+            "pim-exec:analog",
+            "gpu:h100",
+            "gpu:a6000:overclocked",
+            "gpu:a6000:experimental:int8",
+            "gpu:a6000:experimental:fp32:extra",
+            "tpu:v4",
+            "",
+        ] {
+            assert!(parse(bad).is_err(), "`{bad}` must not parse");
+        }
+    }
+
+    #[test]
+    fn builtin_inventory_is_parseable_and_described() {
+        let inventory = builtin();
+        assert!(inventory.len() >= 12);
+        for b in &inventory {
+            assert_eq!(parse(&b.id()).unwrap().id(), b.id(), "{}", b.id());
+            assert!(!b.describe().is_empty(), "{}", b.id());
+        }
+        // No duplicate ids.
+        let mut ids: Vec<String> = inventory.iter().map(|b| b.id()).collect();
+        let n = ids.len();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "duplicate backend ids in the inventory");
+    }
+
+    #[test]
+    fn estimate_json_carries_every_field() {
+        let b = parse("pim:memristive").unwrap();
+        let w = WorkloadSpec::from_name("elementwise-add").unwrap();
+        let e = b.evaluate(&w, NumFmt::Fixed(32)).unwrap();
+        let j = e.to_json();
+        assert_eq!(j.get("backend").unwrap().as_str(), Some("pim:memristive"));
+        assert_eq!(j.get("unit").unwrap().as_str(), Some("ops/s"));
+        assert!(j.get("throughput").unwrap().as_f64().unwrap() > 0.0);
+        assert!(j.get("cc").unwrap().as_f64().unwrap() > 0.0);
+        assert!(j.get("notes").unwrap().get("gates").is_some());
+    }
+}

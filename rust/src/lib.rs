@@ -29,6 +29,14 @@
 //!   the LLM attention-decode workload from the paper's discussion.
 //! * [`metrics`] — the paper's analysis metrics: compute complexity
 //!   (gates/bit), data reuse, throughput, and energy efficiency.
+//! * [`backend`] — the first-class evaluation platforms: one
+//!   [`Backend`](backend::Backend) trait (`evaluate(workload, fmt) →
+//!   Estimate`) implemented by the analytic PIM model, the executed
+//!   crossbar simulator and the GPU rooflines, behind a string-keyed
+//!   registry (`pim:memristive`, `pim-exec:dram`,
+//!   `gpu:a6000:experimental`, …). `metrics::cc_point` and the sweep
+//!   engine's point evaluator are thin adapters over it, and
+//!   `convpim compare` puts N backends side by side on one workload.
 //! * [`coordinator`] — the experiment registry and runner that regenerates
 //!   every table and figure of the paper, and the report generator.
 //! * [`sweep`] — the declarative sweep-campaign engine: grids over
@@ -89,6 +97,7 @@
 //! println!("memristive fixed32 add: {:.1} TOPS", arch.throughput(&prog) / 1e12);
 //! ```
 
+pub mod backend;
 pub mod coordinator;
 pub mod gpumodel;
 pub mod metrics;

@@ -18,6 +18,9 @@
 //!   model-zoo conv layer bit-exactly on the crossbar via im2col and
 //!   cross-check the measured per-MAC cost against the analytic CNN
 //!   model.
+//! * `compare --workload NAME --backends ID[,ID...]` — evaluate one
+//!   workload across N evaluation backends ([`convpim::backend`]) side
+//!   by side: analytic PIM, executed crossbar, GPU rooflines.
 //! * `validate [--rows N] [--seed S]` — bit-exact validation sweep of the
 //!   arithmetic microcode on the crossbar simulator.
 //! * `serve [--jobs N]` — long-running JSONL daemon: one request per
@@ -36,7 +39,7 @@ use convpim::service::{
     self, resolve_jobs, ConvExecSpec, EvalRequest, EvalResponse, EvalService, ResultCache, SetSel,
 };
 use convpim::sweep::campaign::fmt_from_name;
-use convpim::sweep::{Campaign, OutputFormat, Streamer};
+use convpim::sweep::{Campaign, OutputFormat, Streamer, WorkloadSpec};
 use convpim::util::cli::Args;
 
 const USAGE: &str = "\
@@ -50,6 +53,8 @@ USAGE:
                 [--no-cache] [--cache-dir DIR] [--out FILE]
   convpim exec-conv --layer MODEL:SEL [--scale N] [--fmt FMT] [--set memristive|dram|both]
                     [--seed N] [--rows N] [--no-cache] [--cache-dir DIR]
+  convpim compare --workload NAME --backends ID[,ID...] [--fmt FMT]
+                  [--no-cache] [--cache-dir DIR]
   convpim validate [--rows N] [--seed N]
   convpim serve [--jobs N] [--no-cache] [--cache-dir DIR]
   convpim info
@@ -86,6 +91,17 @@ N-th conv layer), a layer name, or a name prefix. FMT is fixed8|fixed16|
 fixed32|fp16|fp32|fp64 (default: fixed8 and fp32). Exits nonzero if any
 executed cell deviates from the model. See docs/EXPERIMENTS.md CONV.
 
+`compare` evaluates ONE workload across N evaluation backends side by
+side — the paper's workload x platform matrix as one command. Backends
+are named by registry id: pim:SET[@RxC] (the analytic architecture
+model), pim-exec:SET[@RxC] (bit-exact seeded execution on the crossbar
+simulator; conv-exec workloads only, fails on any measured-vs-analytic
+deviation), gpu:NAME[:MODE[:DTYPE]] (datasheet rooflines). Workload
+names: elementwise-OP, matmul-nN, cnn-MODEL[-train], decode-sN,
+conv-exec-MODEL-cN-sM. `convpim list` prints the registered backends;
+campaigns can add the same ids as a `backends` axis (EXPERIMENTS.md
+COMPARE/SWEEP).
+
 `serve` reads one request JSON per stdin line and answers one response
 JSON per stdout line, in input order, while executing concurrently —
 pipelined clients share one warm cache and one pool. A malformed line
@@ -94,6 +110,8 @@ docs/EXPERIMENTS.md SERVE.
 
 EXPERIMENTS: table1 fig3 fig4 fig5 fig6 fig7 fig8 sens-gpu sens-fp16 sens-dims conv-exec
 SWEEP CAMPAIGNS (builtin): fig4 fig5 sens-dims conv-exec
+BACKENDS: pim:memristive pim:dram pim-exec:memristive pim-exec:dram
+          gpu:{a6000,a100,v100,rtx3090}:{experimental,theoretical}[:fp32|fp16|fp16-tensor]
 ";
 
 fn main() -> ExitCode {
@@ -112,6 +130,7 @@ fn main() -> ExitCode {
         "run" => cmd_run(&args),
         "sweep" => cmd_sweep(&args),
         "exec-conv" => cmd_exec_conv(&args),
+        "compare" => cmd_compare(&args),
         "validate" => cmd_validate(&args),
         "serve" => cmd_serve(&args),
         "info" => cmd_info(),
@@ -386,6 +405,61 @@ fn cmd_exec_conv(args: &Args) -> anyhow::Result<()> {
     }
     // On a deviation the table still prints (that is the diagnostic)
     // before the nonzero exit.
+    print!("{}", resp.stdout);
+    match resp.meta.ok {
+        true => Ok(()),
+        false => Err(response_error(&resp)),
+    }
+}
+
+/// Evaluate one workload across N evaluation backends side by side (the
+/// workload × platform matrix as one command).
+fn cmd_compare(args: &Args) -> anyhow::Result<()> {
+    const WORKLOAD_GRAMMAR: &str =
+        "elementwise-OP | matmul-nN | cnn-MODEL[-train] | decode-sN | conv-exec-MODEL-cN-sM";
+    let workload_name = args.flag_opt("workload").ok_or_else(|| {
+        anyhow::Error::msg(format!(
+            "compare needs --workload NAME (e.g. --workload cnn-alexnet; names: {WORKLOAD_GRAMMAR})"
+        ))
+    })?;
+    let workload = WorkloadSpec::from_name(workload_name).ok_or_else(|| {
+        anyhow::Error::msg(format!(
+            "unknown workload `{workload_name}` (names: {WORKLOAD_GRAMMAR})"
+        ))
+    })?;
+    let fmt_name = args.flag("fmt", "fp32");
+    let fmt = fmt_from_name(fmt_name).ok_or_else(|| {
+        anyhow::Error::msg(format!(
+            "unknown format `{fmt_name}` (use fixed8|fixed16|fixed32|fp16|fp32|fp64)"
+        ))
+    })?;
+    let backends_arg = args.flag_opt("backends").ok_or_else(|| {
+        anyhow::Error::msg(
+            "compare needs --backends ID[,ID...] (e.g. --backends \
+             pim:memristive,gpu:a6000:experimental; `convpim list` shows registered ids)",
+        )
+    })?;
+    let backends: Vec<String> = backends_arg
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    anyhow::ensure!(!backends.is_empty(), "--backends needs at least one backend id");
+
+    let service = service_from(args)?;
+    let resp = service.submit(&EvalRequest::Compare {
+        workload,
+        fmt,
+        backends,
+    });
+    // Like exec-conv: a replayed verdict must never look like a fresh
+    // evaluation (pim-exec rows execute the simulator when computed).
+    if resp.meta.cache == convpim::service::CacheStatus::Hit {
+        eprintln!(
+            "compare: served from the result cache (no evaluation this run); \
+             pass --no-cache to re-evaluate"
+        );
+    }
     print!("{}", resp.stdout);
     match resp.meta.ok {
         true => Ok(()),

@@ -12,6 +12,7 @@
 //! * **Figure 8 criteria** — the qualitative quadrant map: PIM is
 //!   indicated when CC is low *or* GPU-side reuse is low.
 
+use crate::backend::{AnalyticPim, Backend as _, GpuRoofline};
 use crate::gpumodel::Roofline;
 use crate::pim::arch::PimArch;
 use crate::pim::conv::ConvRun;
@@ -19,6 +20,7 @@ use crate::pim::fixed::FixedOp;
 use crate::pim::gates::GateSet;
 use crate::pim::isa::Program;
 use crate::pim::matpim::{CnnPimModel, NumFmt};
+use crate::sweep::campaign::{GpuMode, WorkloadSpec};
 
 /// Compute complexity of a compiled routine: gates per I/O bit.
 pub fn compute_complexity(prog: &Program, io_bits: u64) -> f64 {
@@ -61,6 +63,12 @@ impl CcPoint {
 /// [`cc_sweep`] and the sweep engine's elementwise points
 /// ([`crate::sweep`]) go through it, which is what guarantees
 /// `convpim sweep fig4` reproduces the registry numbers exactly.
+///
+/// Since the backend redesign this is a thin adapter over
+/// [`crate::backend`]: the PIM side comes from [`AnalyticPim`], the GPU
+/// side from an experimental-mode [`GpuRoofline`] — the same expressions
+/// in the same order, so the numbers are unchanged to the last bit
+/// (asserted by `tests/backend_parity.rs`).
 pub fn cc_point(
     set: GateSet,
     arch: &PimArch,
@@ -68,15 +76,24 @@ pub fn cc_point(
     fmt: NumFmt,
     op: FixedOp,
 ) -> CcPoint {
-    let prog = fmt.program(op, set);
-    let io = io_bits(op, fmt);
+    let workload = WorkloadSpec::Elementwise(op);
+    // Honor the explicit `set` parameter (historically the program was
+    // compiled for `set`, the throughput scaled by `arch`).
+    let mut pim_arch = *arch;
+    pim_arch.set = set;
+    let pim = AnalyticPim::from_arch(pim_arch)
+        .evaluate(&workload, fmt)
+        .expect("elementwise analytic evaluation is infallible");
+    let gpu_est = GpuRoofline::from_roofline(*gpu, GpuMode::Experimental, None)
+        .evaluate(&workload, fmt)
+        .expect("elementwise roofline evaluation is infallible");
     CcPoint {
         op,
         fmt,
-        cc: compute_complexity(&prog, io),
-        pim_ops: arch.throughput(&prog),
+        cc: pim.cc.expect("elementwise estimates carry CC"),
+        pim_ops: pim.throughput,
         // GPU memory traffic: I/O bits in bytes.
-        gpu_ops: gpu.membound_ops(io as f64 / 8.0),
+        gpu_ops: gpu_est.throughput,
     }
 }
 

@@ -189,7 +189,12 @@ mod tests {
         assert_eq!(small.total_rows(), big.total_rows());
         let narrow = PimArch::with_dims(GateSet::MemristiveNor, 1024, 512);
         let wide = PimArch::with_dims(GateSet::MemristiveNor, 1024, 2048);
-        assert_eq!(narrow.total_rows(), 2 * PimArch::paper(GateSet::MemristiveNor).total_rows() / 1);
+        assert_eq!(
+            narrow.total_rows(),
+            2 * PimArch::paper(GateSet::MemristiveNor).total_rows(),
+            "halving the column width (1024 -> 512) at fixed memory size must exactly \
+             double total row parallelism (R = mem_bits / cols)"
+        );
         assert!(narrow.total_rows() > wide.total_rows());
     }
 

@@ -62,6 +62,7 @@ pub use request::{CampaignRef, ConvExecSpec, EvalRequest, SetSel, REQUEST_SCHEMA
 pub use response::{CacheStatus, EvalMeta, EvalResponse};
 pub use serve::{serve, ServeSummary};
 
+use crate::backend::{self, Backend as _};
 use crate::coordinator::{run_experiment, Ctx, Section};
 use crate::metrics;
 use crate::pim::arch::PimArch;
@@ -73,10 +74,11 @@ use crate::pim::matpim::NumFmt;
 use crate::pim::softfloat::{self, Format};
 use crate::pim::xbar::Crossbar;
 use crate::runtime::Engine;
-use crate::sweep::{self, Campaign, CnnModel, PointResult, SweepOutcome, SweepPoint};
+use crate::sweep::{self, Campaign, CnnModel, PointResult, SweepOutcome, SweepPoint, WorkloadSpec};
 use crate::util::json::Json;
 use crate::util::pool::Pool;
 use crate::util::rng::Rng;
+use crate::util::si;
 use crate::util::table::Table;
 use response::{error_response, error_text};
 
@@ -181,6 +183,11 @@ impl EvalService {
             EvalRequest::SweepPoint { config } => self.handle_sweep_point(config),
             EvalRequest::Campaign { campaign } => self.handle_campaign(campaign),
             EvalRequest::ConvExec(spec) => self.handle_conv_exec(req, spec),
+            EvalRequest::Compare {
+                workload,
+                fmt,
+                backends,
+            } => self.handle_compare(req, workload, *fmt, backends),
             EvalRequest::Validate { rows, seed } => self.handle_validate(req, *rows, *seed),
             EvalRequest::Info => self.handle_info(),
             EvalRequest::List => self.handle_list(),
@@ -625,6 +632,110 @@ impl EvalService {
         })
     }
 
+    fn handle_compare(
+        &self,
+        req: &EvalRequest,
+        workload: &WorkloadSpec,
+        fmt: NumFmt,
+        backends: &[String],
+    ) -> EvalResponse {
+        let config = req.cache_config();
+        if let Some(cfg) = &config {
+            if let Some(resp) = self.load_response(cfg) {
+                return resp;
+            }
+        }
+        match self.eval_compare(workload, fmt, backends) {
+            Ok(resp) => {
+                if resp.meta.ok {
+                    if let Some(cfg) = &config {
+                        self.store_response(cfg, &resp);
+                    }
+                }
+                resp
+            }
+            Err(e) => error_response("compare", workload.name(), &e),
+        }
+    }
+
+    /// The N-way backend comparison: evaluate one workload on every
+    /// requested backend (in request order — evaluation is serial and
+    /// cheap, so output is trivially `--jobs`-independent) and render one
+    /// row per backend. All throughputs share the workload's unit; the
+    /// `vs first` column normalizes against the first backend listed.
+    fn eval_compare(
+        &self,
+        workload: &WorkloadSpec,
+        fmt: NumFmt,
+        ids: &[String],
+    ) -> Result<EvalResponse> {
+        anyhow::ensure!(!ids.is_empty(), "compare needs at least one backend");
+        let mut estimates = Vec::with_capacity(ids.len());
+        for id in ids {
+            let b = backend::parse(id)?;
+            anyhow::ensure!(
+                b.supports(workload),
+                "backend `{}` does not support workload `{}` (`convpim list` shows \
+                 registered backends)",
+                b.id(),
+                workload.name()
+            );
+            estimates.push(b.evaluate(workload, fmt)?);
+        }
+        let base = estimates[0].throughput;
+        let mut t = Table::new(&[
+            "backend",
+            "unit",
+            "CC",
+            "throughput",
+            "per-watt",
+            "vs first",
+        ]);
+        for e in &estimates {
+            t.row(vec![
+                e.backend.clone(),
+                e.unit.clone(),
+                e.cc.map(|c| format!("{c:.1}")).unwrap_or_default(),
+                si(e.throughput),
+                si(e.per_watt),
+                format!("{:.3}x", e.throughput / base),
+            ]);
+        }
+        let note = "every backend judges the same workload in the same unit; `vs first` \
+             normalizes against the first backend listed. pim-exec rows are backed by a \
+             bit-exact seeded execution on the crossbar simulator (evaluation fails on any \
+             measured-vs-analytic deviation); pim rows are the paper's analytic upper bound; \
+             gpu rows are the experimental/theoretical rooflines.";
+        Ok(EvalResponse {
+            kind: "compare".into(),
+            id: workload.name(),
+            title: format!(
+                "{} {} across {} backend(s)",
+                workload.name(),
+                fmt.name(),
+                estimates.len()
+            ),
+            stdout: format!("{}\n{note}\n", t.text()),
+            sections: vec![Section {
+                caption: String::new(),
+                table: t,
+            }],
+            notes: vec![note.to_string()],
+            payload: Json::obj(vec![
+                ("workload", workload.to_json()),
+                ("format", Json::s(fmt.name())),
+                (
+                    "estimates",
+                    Json::arr(estimates.iter().map(|e| e.to_json()).collect()),
+                ),
+            ]),
+            meta: EvalMeta {
+                cache: self.computed_status(),
+                ..EvalMeta::computed()
+            },
+        })
+    }
+
     fn handle_validate(&self, req: &EvalRequest, rows: usize, seed: u64) -> EvalResponse {
         let config = req.cache_config();
         if let Some(cfg) = &config {
@@ -816,6 +927,10 @@ impl EvalService {
     fn handle_list(&self) -> EvalResponse {
         let experiments: Vec<&str> = crate::coordinator::all_ids();
         let campaigns = Campaign::builtin_names();
+        let backends: Vec<(String, String)> = backend::builtin()
+            .iter()
+            .map(|b| (b.id(), b.describe()))
+            .collect();
         let mut out = String::new();
         for id in &experiments {
             out.push_str(id);
@@ -824,10 +939,13 @@ impl EvalService {
         for name in campaigns {
             out.push_str(&format!("sweep:{name}\n"));
         }
+        for (id, describe) in &backends {
+            out.push_str(&format!("backend:{id} — {describe}\n"));
+        }
         EvalResponse {
             kind: "list".into(),
             id: "list".into(),
-            title: "available experiments and campaigns".into(),
+            title: "available experiments, campaigns and backends".into(),
             stdout: out,
             sections: Vec::new(),
             notes: Vec::new(),
@@ -839,6 +957,20 @@ impl EvalService {
                 (
                     "campaigns",
                     Json::arr(campaigns.iter().map(|s| Json::s(*s)).collect()),
+                ),
+                (
+                    "backends",
+                    Json::arr(
+                        backends
+                            .iter()
+                            .map(|(id, describe)| {
+                                Json::obj(vec![
+                                    ("id", Json::s(id.clone())),
+                                    ("describe", Json::s(describe.clone())),
+                                ])
+                            })
+                            .collect(),
+                    ),
                 ),
             ]),
             meta: EvalMeta {
@@ -959,6 +1091,79 @@ mod tests {
         assert!(list.meta.ok);
         assert!(list.stdout.contains("fig4"));
         assert!(list.stdout.contains("sweep:fig5"));
+        // The backend registry is listed with describe lines and carried
+        // in the machine payload.
+        assert!(list.stdout.contains("backend:pim:memristive — "));
+        assert!(list.stdout.contains("backend:pim-exec:dram — "));
+        assert!(list.stdout.contains("backend:gpu:a6000:experimental — "));
+        let ids: Vec<&str> = list
+            .payload
+            .get("backends")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|b| b.get("id").unwrap().as_str().unwrap())
+            .collect();
+        assert!(ids.contains(&"pim-exec:memristive"));
+        assert!(ids.contains(&"gpu:a100:theoretical"));
+    }
+
+    #[test]
+    fn compare_caches_and_replays_byte_identically() {
+        let cache = temp_cache("cmp");
+        let dir = cache.dir().to_path_buf();
+        let service = EvalService::new().with_cache(Some(cache));
+        let req = EvalRequest::Compare {
+            workload: WorkloadSpec::from_name("cnn-alexnet").unwrap(),
+            fmt: crate::pim::matpim::NumFmt::Float(crate::pim::softfloat::Format::FP32),
+            backends: vec![
+                "pim:memristive".into(),
+                "pim:dram".into(),
+                "gpu:a6000:experimental".into(),
+                "gpu:a6000:theoretical".into(),
+            ],
+        };
+        let cold = service.submit(&req);
+        assert!(cold.meta.ok, "{:?}", cold.meta.error);
+        assert_eq!(cold.meta.cache, CacheStatus::Computed);
+        assert_eq!(
+            cold.payload.get("estimates").unwrap().as_arr().unwrap().len(),
+            4
+        );
+        // The first row normalizes to itself.
+        assert!(cold.stdout.contains("1.000x"));
+        let warm = service.submit(&req);
+        assert_eq!(warm.meta.cache, CacheStatus::Hit);
+        assert_eq!(warm.stdout, cold.stdout, "cache replay must be byte-identical");
+        assert_eq!(warm.payload, cold.payload);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compare_errors_are_structured() {
+        let service = EvalService::new().with_cache(None);
+        let unknown = service.submit(&EvalRequest::Compare {
+            workload: WorkloadSpec::from_name("matmul-n8").unwrap(),
+            fmt: crate::pim::matpim::NumFmt::Float(crate::pim::softfloat::Format::FP32),
+            backends: vec!["tpu:v4".into()],
+        });
+        assert!(!unknown.meta.ok);
+        assert!(unknown.meta.error.as_deref().unwrap().contains("tpu"));
+        // A backend that cannot judge the workload is an explicit error,
+        // not a silently skipped row.
+        let unsupported = service.submit(&EvalRequest::Compare {
+            workload: WorkloadSpec::from_name("matmul-n8").unwrap(),
+            fmt: crate::pim::matpim::NumFmt::Float(crate::pim::softfloat::Format::FP32),
+            backends: vec!["pim-exec:memristive".into()],
+        });
+        assert!(!unsupported.meta.ok);
+        assert!(unsupported
+            .meta
+            .error
+            .as_deref()
+            .unwrap()
+            .contains("does not support"));
     }
 
     #[test]

@@ -19,6 +19,8 @@
 //! {"kind": "campaign", "spec": { ...Campaign::to_json()... }}
 //! {"kind": "conv-exec", "layer": "alexnet:conv2", "scale": 8, "fmt": "fixed8",
 //!  "set": "both", "seed": 49374, "rows": 0}
+//! {"kind": "compare", "workload": "cnn-alexnet", "format": "fp32",
+//!  "backends": ["pim:memristive", "pim-exec:memristive", "gpu:a6000:experimental"]}
 //! {"kind": "validate", "rows": 512, "seed": 7}
 //! {"kind": "info"}
 //! {"kind": "list"}
@@ -30,8 +32,10 @@
 
 use anyhow::Result;
 
+use crate::backend::Backend as _;
 use crate::pim::matpim::NumFmt;
-use crate::sweep::campaign::fmt_from_name;
+use crate::pim::softfloat::Format;
+use crate::sweep::campaign::{fmt_from_name, WorkloadSpec};
 use crate::util::json::Json;
 
 /// Schema version folded into every *service-level* cache identity
@@ -166,6 +170,18 @@ pub enum EvalRequest {
     /// Execute one model-zoo conv layer bit-exactly and cross-check it
     /// against the analytic CNN model.
     ConvExec(ConvExecSpec),
+    /// Evaluate one workload across N evaluation backends
+    /// ([`crate::backend`]) side by side — the paper's workload ×
+    /// platform matrix as one request.
+    Compare {
+        /// The workload every backend judges.
+        workload: WorkloadSpec,
+        /// Number format (CLI default: fp32).
+        fmt: NumFmt,
+        /// Backend ids ([`crate::backend::parse`] grammar), in report
+        /// order; at least one.
+        backends: Vec<String>,
+    },
     /// Bit-exact validation sweep of the arithmetic microcode.
     Validate {
         /// Crossbar rows (vector elements) per check.
@@ -187,6 +203,7 @@ impl EvalRequest {
             EvalRequest::SweepPoint { .. } => "sweep-point",
             EvalRequest::Campaign { .. } => "campaign",
             EvalRequest::ConvExec(_) => "conv-exec",
+            EvalRequest::Compare { .. } => "compare",
             EvalRequest::Validate { .. } => "validate",
             EvalRequest::Info => "info",
             EvalRequest::List => "list",
@@ -206,6 +223,7 @@ impl EvalRequest {
                 ),
             },
             EvalRequest::ConvExec(spec) => format!("conv-exec {}", spec.layer),
+            EvalRequest::Compare { workload, .. } => format!("compare {}", workload.name()),
             EvalRequest::Validate { .. } => "validate".into(),
             EvalRequest::Info => "info".into(),
             EvalRequest::List => "list".into(),
@@ -253,6 +271,19 @@ impl EvalRequest {
                 ("set", Json::s(spec.set.name())),
                 ("seed", Json::i(spec.seed as i64)),
                 ("rows", Json::i(spec.rows as i64)),
+            ]),
+            EvalRequest::Compare {
+                workload,
+                fmt,
+                backends,
+            } => Json::obj(vec![
+                ("kind", Json::s("compare")),
+                ("workload", workload.to_json()),
+                ("format", Json::s(fmt.name())),
+                (
+                    "backends",
+                    Json::arr(backends.iter().map(|b| Json::s(b.clone())).collect()),
+                ),
             ]),
             EvalRequest::Validate { rows, seed } => Json::obj(vec![
                 ("kind", Json::s("validate")),
@@ -370,6 +401,53 @@ impl EvalRequest {
                     rows: u64_field("rows", 0)? as usize,
                 }))
             }
+            "compare" => {
+                let workload = match doc.get("workload") {
+                    None | Some(Json::Null) => anyhow::bail!(
+                        "compare request needs a `workload` (a name like `cnn-alexnet` or a \
+                         workload object as in campaign JSON)"
+                    ),
+                    Some(v) => match v.as_str() {
+                        Some(name) => WorkloadSpec::from_name(name).ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "unknown workload name `{name}` (use elementwise-OP|matmul-nN|\
+                                 cnn-MODEL[-train]|decode-sN|conv-exec-MODEL-cN-sM)"
+                            )
+                        })?,
+                        None => WorkloadSpec::from_json(v)?,
+                    },
+                };
+                let fmt = match doc.get("format").or_else(|| doc.get("fmt")) {
+                    None | Some(Json::Null) => NumFmt::Float(Format::FP32),
+                    Some(v) => {
+                        let name = v.as_str().ok_or_else(|| {
+                            anyhow::anyhow!("compare `format` must be a format name")
+                        })?;
+                        fmt_from_name(name).ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "unknown format `{name}` (use fixed8|fixed16|fixed32|fp16|fp32|fp64)"
+                            )
+                        })?
+                    }
+                };
+                let backends = match doc.get("backends") {
+                    None | Some(Json::Null) => anyhow::bail!(
+                        "compare request needs a `backends` array of backend ids"
+                    ),
+                    // Raw spelling (wire round-trip fidelity); the cache
+                    // identity canonicalizes separately in cache_config.
+                    Some(v) => crate::backend::ids_from_json(v, "compare", false)?,
+                };
+                anyhow::ensure!(
+                    !backends.is_empty(),
+                    "compare request needs at least one backend"
+                );
+                Ok(EvalRequest::Compare {
+                    workload,
+                    fmt,
+                    backends,
+                })
+            }
             "validate" => Ok(EvalRequest::Validate {
                 rows: u64_field("rows", DEFAULT_VALIDATE_ROWS as u64)? as usize,
                 seed: u64_field("seed", DEFAULT_VALIDATE_SEED)?,
@@ -378,7 +456,7 @@ impl EvalRequest {
             "list" => Ok(EvalRequest::List),
             other => anyhow::bail!(
                 "unknown request kind `{other}` (use experiment|sweep-point|campaign|\
-                 conv-exec|validate|info|list)"
+                 conv-exec|compare|validate|info|list)"
             ),
         }
     }
@@ -401,6 +479,12 @@ impl EvalRequest {
     /// (an analytic context always runs fast) and the seed; whether the
     /// response may actually be cached additionally requires the measured
     /// engine to be absent — the service checks that at evaluation time.
+    /// `compare` responses are cached whole (backend evaluations are
+    /// analytic or fixed-seed executions — pure functions of the
+    /// request), keyed by the canonical workload document, the format
+    /// and the *canonicalized* backend id list — `gpu:a6000` and
+    /// `gpu:a6000:experimental` share one entry; an unparseable id
+    /// makes the request uncacheable (evaluation reports the error).
     pub fn cache_config(&self) -> Option<Json> {
         // Exact-integer guard for the JSON number model.
         let exact = |v: u64| -> Option<Json> {
@@ -432,6 +516,41 @@ impl EvalRequest {
                 ("seed", exact(spec.seed)?),
                 ("rows", exact(spec.rows as u64)?),
             ])),
+            EvalRequest::Compare {
+                workload,
+                fmt,
+                backends,
+            } => {
+                // Compare evaluations are deterministic (analytic models
+                // and fixed-seed executions only), but the workload's
+                // large integers must be exactly representable in the
+                // JSON number model for the key to be injective.
+                match workload {
+                    WorkloadSpec::Matmul(n) => {
+                        exact(*n)?;
+                    }
+                    WorkloadSpec::Decode { seq } => {
+                        exact(*seq)?;
+                    }
+                    _ => {}
+                }
+                // Canonicalize ids so `gpu:a6000` and
+                // `gpu:a6000:experimental` share one cache entry (the
+                // same rule the campaign `backends` axis applies at
+                // parse time). An unparseable id makes the request
+                // uncacheable; evaluation then reports the error.
+                let canonical = backends
+                    .iter()
+                    .map(|b| Some(Json::s(crate::backend::parse(b).ok()?.id())))
+                    .collect::<Option<Vec<_>>>()?;
+                Some(Json::obj(vec![
+                    ("v", Json::i(REQUEST_SCHEMA)),
+                    ("kind", Json::s("compare")),
+                    ("workload", workload.to_json()),
+                    ("format", Json::s(fmt.name())),
+                    ("backends", Json::arr(canonical)),
+                ]))
+            }
             EvalRequest::Validate { rows, seed } => Some(Json::obj(vec![
                 ("v", Json::i(REQUEST_SCHEMA)),
                 ("kind", Json::s("validate")),
@@ -472,6 +591,11 @@ mod tests {
                 ),
             },
             EvalRequest::ConvExec(ConvExecSpec::new("alexnet:conv2")),
+            EvalRequest::Compare {
+                workload: WorkloadSpec::from_name("cnn-alexnet").unwrap(),
+                fmt: NumFmt::Float(Format::FP32),
+                backends: vec!["pim:memristive".into(), "gpu:a6000:experimental".into()],
+            },
             EvalRequest::Validate { rows: 64, seed: 3 },
             EvalRequest::Info,
             EvalRequest::List,
@@ -531,6 +655,13 @@ mod tests {
             r#"{"kind": "conv-exec", "layer": "alexnet:conv2", "set": "cmos"}"#,
             r#"{"kind": "experiment", "id": "fig4", "seed": -1}"#,
             r#"{"kind": "experiment", "id": "fig4", "fast": "yes"}"#,
+            r#"{"kind": "compare"}"#,
+            r#"{"kind": "compare", "workload": "cnn-alexnet"}"#,
+            r#"{"kind": "compare", "workload": "cnn-alexnet", "backends": []}"#,
+            r#"{"kind": "compare", "workload": "warp", "backends": ["pim:memristive"]}"#,
+            r#"{"kind": "compare", "workload": "cnn-alexnet", "format": "fp8",
+                "backends": ["pim:memristive"]}"#,
+            r#"{"kind": "compare", "workload": "cnn-alexnet", "backends": [7]}"#,
         ];
         for text in bad {
             let doc = Json::parse(text).unwrap();
@@ -580,5 +711,54 @@ mod tests {
         }
         .cache_config()
         .is_none());
+    }
+
+    #[test]
+    fn compare_requests_accept_names_and_objects_and_cache() {
+        // A string workload name and the equivalent object parse to the
+        // same request (and therefore the same cache identity).
+        let by_name = EvalRequest::from_json(
+            &Json::parse(
+                r#"{"kind": "compare", "workload": "matmul-n64",
+                    "backends": ["pim:memristive", "gpu:a6000"]}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let by_object = EvalRequest::from_json(
+            &Json::parse(
+                r#"{"kind": "compare", "workload": {"kind": "matmul", "n": 64},
+                    "backends": ["pim:memristive", "gpu:a6000"]}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(by_name, by_object);
+        let cfg = by_name.cache_config().unwrap();
+        assert_eq!(cfg.get("kind").unwrap().as_str(), Some("compare"));
+        assert_eq!(cfg.get("format").unwrap().as_str(), Some("fp32"));
+        // Backend ids canonicalize in the cache identity, so two
+        // spellings of one platform share an entry.
+        let explicit = EvalRequest::Compare {
+            workload: WorkloadSpec::from_name("matmul-n64").unwrap(),
+            fmt: NumFmt::Float(Format::FP32),
+            backends: vec!["pim:memristive".into(), "gpu:a6000:experimental".into()],
+        };
+        assert_eq!(by_name.cache_config(), explicit.cache_config());
+        // An unparseable id is uncacheable rather than a poisoned key.
+        let bad = EvalRequest::Compare {
+            workload: WorkloadSpec::from_name("matmul-n64").unwrap(),
+            fmt: NumFmt::Float(Format::FP32),
+            backends: vec!["tpu:v4".into()],
+        };
+        assert!(bad.cache_config().is_none());
+        // A matmul dimension past 2^53 is not exactly representable —
+        // uncacheable instead of colliding.
+        let huge = EvalRequest::Compare {
+            workload: WorkloadSpec::Matmul((1u64 << 53) + 1),
+            fmt: NumFmt::Float(Format::FP32),
+            backends: vec!["pim:memristive".into()],
+        };
+        assert!(huge.cache_config().is_none());
     }
 }

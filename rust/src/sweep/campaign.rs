@@ -22,6 +22,7 @@
 use anyhow::Result;
 
 use super::point::SweepPoint;
+use crate::backend::Backend as _;
 use crate::gpumodel::GpuSpec;
 use crate::pim::arch::PimArch;
 use crate::pim::fixed::FixedOp;
@@ -326,6 +327,45 @@ impl WorkloadSpec {
         }
     }
 
+    /// Inverse of [`WorkloadSpec::name`] — the grammar `convpim compare
+    /// --workload` and string-form `compare` requests accept:
+    /// `elementwise-OP`, `matmul-nN`, `cnn-MODEL[-train]`, `decode-sN`,
+    /// `conv-exec-MODEL-cN-sM`.
+    pub fn from_name(name: &str) -> Option<WorkloadSpec> {
+        if let Some(op_name) = name.strip_prefix("elementwise-") {
+            let op = FixedOp::all().into_iter().find(|o| o.name() == op_name)?;
+            return Some(WorkloadSpec::Elementwise(op));
+        }
+        if let Some(n) = name.strip_prefix("matmul-n") {
+            return n.parse().ok().filter(|&n| n > 0).map(WorkloadSpec::Matmul);
+        }
+        if let Some(seq) = name.strip_prefix("decode-s") {
+            return seq
+                .parse()
+                .ok()
+                .filter(|&s| s > 0)
+                .map(|seq| WorkloadSpec::Decode { seq });
+        }
+        if let Some(rest) = name.strip_prefix("conv-exec-") {
+            // conv-exec-{model}-c{N}-s{M}; model names carry no `-c`.
+            let (model_name, tail) = rest.rsplit_once("-c")?;
+            let (conv, scale) = tail.split_once("-s")?;
+            let model = CnnModel::from_name(model_name)?;
+            let conv: u32 = conv.parse().ok().filter(|&c| c >= 1)?;
+            let scale: u32 = scale.parse().ok().filter(|&s| s >= 1)?;
+            return Some(WorkloadSpec::ConvExec { model, conv, scale });
+        }
+        if let Some(rest) = name.strip_prefix("cnn-") {
+            let (model_name, training) = match rest.strip_suffix("-train") {
+                Some(m) => (m, true),
+                None => (rest, false),
+            };
+            let model = CnnModel::from_name(model_name)?;
+            return Some(WorkloadSpec::Cnn { model, training });
+        }
+        None
+    }
+
     pub(crate) fn from_json(j: &Json) -> Result<WorkloadSpec> {
         match j.get("kind").and_then(Json::as_str) {
             Some("elementwise") => {
@@ -448,6 +488,12 @@ pub struct Campaign {
     pub workloads: Vec<WorkloadSpec>,
     /// GPU-baseline axis.
     pub gpus: Vec<GpuBaseline>,
+    /// Optional extra backend columns (canonical [`crate::backend`] ids)
+    /// evaluated for *every* point alongside the standard PIM/GPU pair.
+    /// Unlike the four grid axes this does not multiply the point count —
+    /// it widens each [`PointResult`](super::PointResult) with
+    /// [`extras`](super::PointResult::extras) columns.
+    pub backends: Vec<String>,
 }
 
 impl Campaign {
@@ -474,6 +520,7 @@ impl Campaign {
                             fmt,
                             workload,
                             gpu,
+                            backends: self.backends.clone(),
                         });
                     }
                 }
@@ -523,19 +570,28 @@ impl Campaign {
             .iter()
             .map(GpuBaseline::from_json)
             .collect::<Result<Vec<_>>>()?;
+        // Optional extra-backend axis: each id is validated through the
+        // registry and stored canonicalized (defaults made explicit), so
+        // two spellings of one platform share cache entries.
+        let backends = match doc.get("backends") {
+            None => Vec::new(),
+            Some(v) => crate::backend::ids_from_json(v, "campaign", true)?,
+        };
         Ok(Campaign {
             name,
             archs,
             formats,
             workloads,
             gpus,
+            backends,
         })
     }
 
     /// Canonical JSON form of the whole campaign (round-trips through
-    /// [`Campaign::from_json_text`]).
+    /// [`Campaign::from_json_text`]; the `backends` key appears only
+    /// when the axis is non-empty).
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("name", Json::s(self.name.clone())),
             (
                 "archs",
@@ -553,7 +609,14 @@ impl Campaign {
                 "gpus",
                 Json::arr(self.gpus.iter().map(GpuBaseline::to_json).collect()),
             ),
-        ])
+        ];
+        if !self.backends.is_empty() {
+            pairs.push((
+                "backends",
+                Json::arr(self.backends.iter().map(|b| Json::s(b.clone())).collect()),
+            ));
+        }
+        Json::obj(pairs)
     }
 
     /// The builtin campaigns: the paper's sweep figures as degenerate
@@ -581,6 +644,7 @@ impl Campaign {
                     gpu: GpuSpec::a6000(),
                     mode: GpuMode::Experimental,
                 }],
+                backends: Vec::new(),
             }),
             "fig5" => Some(Campaign {
                 name: "fig5".into(),
@@ -603,6 +667,7 @@ impl Campaign {
                         mode: GpuMode::Theoretical,
                     },
                 ],
+                backends: Vec::new(),
             }),
             "sens-dims" | "s3" => Some(Campaign {
                 name: "sens-dims".into(),
@@ -629,6 +694,7 @@ impl Campaign {
                     gpu: GpuSpec::a6000(),
                     mode: GpuMode::Experimental,
                 }],
+                backends: Vec::new(),
             }),
             "conv-exec" => Some(Campaign {
                 name: "conv-exec".into(),
@@ -646,6 +712,7 @@ impl Campaign {
                     gpu: GpuSpec::a6000(),
                     mode: GpuMode::Experimental,
                 }],
+                backends: Vec::new(),
             }),
             _ => None,
         }
@@ -775,6 +842,66 @@ mod tests {
                 "gpus": [{"gpu": "a6000"}]}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn backends_axis_parses_canonicalizes_and_round_trips() {
+        let c = Campaign::from_json_text(
+            r#"{"archs": [{"set": "memristive"}], "formats": ["fp32"],
+                "workloads": [{"kind": "matmul", "n": 8}],
+                "gpus": [{"gpu": "a6000"}],
+                "backends": ["gpu:a100", "pim:dram"]}"#,
+        )
+        .unwrap();
+        // Ids are canonicalized at parse (defaults made explicit) and the
+        // axis widens the points without multiplying them.
+        assert_eq!(c.backends, vec!["gpu:a100:experimental", "pim:dram"]);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.points()[0].backends, c.backends);
+        // Round trip through the canonical JSON form.
+        let back = Campaign::from_json_text(&c.to_json().pretty()).unwrap();
+        assert_eq!(back.backends, c.backends);
+        assert_eq!(
+            back.points()[0].config_json(),
+            c.points()[0].config_json()
+        );
+        // Unknown backend ids are rejected at parse time.
+        assert!(Campaign::from_json_text(
+            r#"{"archs": [{"set": "memristive"}], "formats": ["fp32"],
+                "workloads": [{"kind": "matmul", "n": 8}],
+                "gpus": [{"gpu": "a6000"}], "backends": ["tpu:v4"]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn workload_names_invert() {
+        // Every expressible workload name parses back to itself.
+        let specs = [
+            WorkloadSpec::Elementwise(FixedOp::Div),
+            WorkloadSpec::Matmul(64),
+            WorkloadSpec::Cnn { model: CnnModel::ResNet50, training: false },
+            WorkloadSpec::Cnn { model: CnnModel::MobileNetV1, training: true },
+            WorkloadSpec::Decode { seq: 2048 },
+            WorkloadSpec::ConvExec { model: CnnModel::AlexNet, conv: 2, scale: 16 },
+        ];
+        for spec in specs {
+            let name = spec.name();
+            assert_eq!(WorkloadSpec::from_name(&name), Some(spec), "{name}");
+        }
+        for bad in [
+            "elementwise-xor",
+            "matmul-n0",
+            "matmul-64",
+            "cnn-lenet",
+            "decode-s0",
+            "conv-exec-alexnet-c0-s8",
+            "conv-exec-alexnet-c2",
+            "resnet50",
+            "",
+        ] {
+            assert_eq!(WorkloadSpec::from_name(bad), None, "`{bad}` must not parse");
+        }
     }
 
     #[test]

@@ -55,5 +55,5 @@ pub mod report;
 pub use crate::service::cache::ResultCache;
 pub use campaign::{ArchSpec, Campaign, CnnModel, GpuBaseline, GpuMode, WorkloadSpec};
 pub use exec::{eval_point_cached, is_canceled, run_points, SweepOutcome, CANCELED};
-pub use point::{PointResult, SweepPoint};
+pub use point::{BackendCol, PointResult, SweepPoint};
 pub use report::{OutputFormat, Streamer};

@@ -2,26 +2,25 @@
 //! ([`PointResult`]).
 //!
 //! A point is pure configuration: evaluating it ([`SweepPoint::eval`])
-//! runs the *analytic* models — microcode compilation, the
-//! architecture-scale PIM model and the GPU roofline — plus, for
+//! dispatches to the evaluation backends ([`crate::backend`]) — the
+//! analytic PIM model, the GPU roofline of the point's mode, and, for
 //! `conv-exec` points, a deterministic seeded *bit-exact execution* on the
-//! crossbar simulator. Neither involves wall-clock measurement (never the
-//! measured PJRT series), so a point's result is a deterministic function
-//! of its [`SweepPoint::config_json`]. That is what makes the
-//! content-addressed result cache ([`super::ResultCache`]) sound.
+//! crossbar simulator ([`crate::backend::ExecutedCrossbar`]). None of it
+//! involves wall-clock measurement (never the measured PJRT series), so a
+//! point's result is a deterministic function of its
+//! [`SweepPoint::config_json`]. That is what makes the content-addressed
+//! result cache ([`super::ResultCache`]) sound.
 
 use anyhow::Result;
 
-use super::campaign::{ArchSpec, GpuBaseline, GpuMode, WorkloadSpec};
-use crate::gpumodel::{GpuDtype, Roofline};
-use crate::metrics;
-use crate::pim::conv;
-use crate::pim::matpim::{CnnPimModel, MatmulModel, NumFmt};
+use super::campaign::{ArchSpec, GpuBaseline, WorkloadSpec};
+use crate::backend::{self, AnalyticPim, Backend, ExecutedCrossbar, GpuRoofline};
+use crate::pim::matpim::NumFmt;
 use crate::util::json::Json;
-use crate::workloads::attention::{decode_workload, DecodeConfig};
 
 /// One point of a sweep campaign: a fully specified (architecture,
-/// format, workload, GPU baseline) combination.
+/// format, workload, GPU baseline) combination, plus any extra backend
+/// columns the campaign's optional `backends` axis adds.
 ///
 /// ```
 /// use convpim::sweep::Campaign;
@@ -30,7 +29,7 @@ use crate::workloads::attention::{decode_workload, DecodeConfig};
 /// assert_eq!(r.unit, "ops/s");
 /// assert!(r.improvement() > 100.0); // low-CC ops are PIM's best case
 /// ```
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct SweepPoint {
     /// Position in the campaign's expansion order (not part of the cache
     /// identity — reordering a campaign must still hit).
@@ -43,6 +42,10 @@ pub struct SweepPoint {
     pub workload: WorkloadSpec,
     /// GPU baseline.
     pub gpu: GpuBaseline,
+    /// Extra backend columns (canonical [`crate::backend`] ids) evaluated
+    /// alongside the standard PIM/GPU pair; usually empty. Part of the
+    /// cache identity when present.
+    pub backends: Vec<String>,
 }
 
 /// Schema version folded into every point's cache identity. Bump it when
@@ -50,23 +53,27 @@ pub struct SweepPoint {
 /// models) so stale cache entries miss instead of parsing wrong.
 pub const CONFIG_SCHEMA: i64 = 1;
 
-/// Fixed operand seed for `conv-exec` points: the executed result must be
-/// a pure function of the point's config (cache soundness), so the seed
-/// is a constant, not an input.
-const CONV_EXEC_SEED: u64 = 0xC0DE_C04E;
-
 impl SweepPoint {
     /// The canonical configuration document — the cache-key input. Two
     /// points with equal `config_json` are the same experiment by
-    /// definition and may share a cached result.
+    /// definition and may share a cached result. The `backends` key is
+    /// omitted when the axis is empty, so every pre-backends cache entry
+    /// keeps its identity (warm caches stay warm).
     pub fn config_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("v", Json::i(CONFIG_SCHEMA)),
             ("arch", self.arch.to_json()),
             ("format", Json::s(self.fmt.name())),
             ("workload", self.workload.to_json()),
             ("gpu", self.gpu.to_json()),
-        ])
+        ];
+        if !self.backends.is_empty() {
+            pairs.push((
+                "backends",
+                Json::arr(self.backends.iter().map(|b| Json::s(b.clone())).collect()),
+            ));
+        }
+        Json::obj(pairs)
     }
 
     /// Parse a point back from its canonical [`SweepPoint::config_json`]
@@ -107,12 +114,20 @@ impl SweepPoint {
                 .get("gpu")
                 .ok_or_else(|| anyhow::anyhow!("sweep-point config needs a `gpu`"))?,
         )?;
+        let backends = match config.get("backends") {
+            None => Vec::new(),
+            // Raw spelling: the reconstructed point's config_json must be
+            // byte-identical to the input (cache-key fidelity); campaigns
+            // already canonicalized at parse time.
+            Some(v) => crate::backend::ids_from_json(v, "sweep-point", false)?,
+        };
         Ok(SweepPoint {
             index: 0,
             arch,
             fmt,
             workload,
             gpu,
+            backends,
         })
     }
 
@@ -128,21 +143,15 @@ impl SweepPoint {
         )
     }
 
-    /// GPU precision used for this point's roofline lookups: half rates
-    /// for ≤16-bit formats (tensor cores for the matmul-shaped CNN work,
-    /// the CUDA-core path otherwise), fp32 rates above.
-    fn gpu_dtype(&self) -> GpuDtype {
-        let half = self.fmt.bits() <= 16;
-        match self.workload {
-            WorkloadSpec::Cnn { .. } | WorkloadSpec::ConvExec { .. } if half => {
-                GpuDtype::F16Tensor
-            }
-            _ if half => GpuDtype::F16,
-            _ => GpuDtype::F32,
-        }
-    }
-
-    /// Evaluate the point through the analytic models.
+    /// Evaluate the point through the evaluation backends
+    /// ([`crate::backend`]): the PIM column comes from [`AnalyticPim`]
+    /// (or [`ExecutedCrossbar`] for `conv-exec` workloads — evaluation
+    /// then *executes* the layer and fails unless measured == analytic
+    /// and the output is bit-exact), the GPU column from a [`GpuRoofline`]
+    /// in the point's mode, and any `backends`-axis ids become extra
+    /// columns. The backends compute the exact expressions the
+    /// pre-backend match arms inlined here, so results are byte-identical
+    /// (asserted by `tests/backend_parity.rs` and the golden snapshots).
     pub fn eval(&self) -> Result<PointResult> {
         // Guard before PimArch::with_dims: a zero dimension would divide
         // by zero in the row-parallelism derivation (a panic would take
@@ -154,133 +163,29 @@ impl SweepPoint {
             );
         }
         let arch = self.arch.arch();
-        let rl = Roofline::new(self.gpu.gpu);
-        let dtype = self.gpu_dtype();
-        let (cc, pim, gpu_tp, pim_per_watt) = match self.workload {
-            WorkloadSpec::Elementwise(op) => {
-                // Shared with the registry's Fig. 4 path (metrics::cc_sweep)
-                // so the sweep engine reproduces those numbers bit-for-bit.
-                let p = metrics::cc_point(self.arch.set, &arch, &rl, self.fmt, op);
-                let gpu_tp = match self.gpu.mode {
-                    GpuMode::Experimental => p.gpu_ops,
-                    GpuMode::Theoretical => rl.peak(dtype),
-                };
-                (
-                    Some(p.cc),
-                    p.pim_ops,
-                    gpu_tp,
-                    p.pim_ops / arch.max_power_w,
-                )
-            }
-            WorkloadSpec::Matmul(n) => {
-                anyhow::ensure!(n > 0, "matmul dimension must be positive");
-                let mm = MatmulModel::new(n, self.fmt, self.arch.set, arch.cols);
-                let gpu_tp = match self.gpu.mode {
-                    GpuMode::Experimental => rl.matmul_throughput(n, dtype),
-                    GpuMode::Theoretical => rl.matmul_throughput_peak(n, dtype),
-                };
-                (
-                    None,
-                    mm.throughput(&arch),
-                    gpu_tp,
-                    mm.throughput_per_watt(&arch),
-                )
-            }
-            WorkloadSpec::Cnn { model, training } => {
-                let base = model.workload();
-                let w = if training { base.training() } else { base };
-                let macs = w.total_macs();
-                let pim_model = CnnPimModel::new(self.fmt, self.arch.set, macs);
-                // Batch-64 roofline with traffic scaled by element width —
-                // the Fig. 6/7 experimental-GPU model (fp32 scale = 1).
-                let scale = self.fmt.bits() as f64 / 32.0;
-                let layers: Vec<(f64, f64)> = w
-                    .roofline_layers_batched(64.0)
-                    .iter()
-                    .map(|&(f, b)| (f, b * scale))
-                    .collect();
-                let gpu_tp = match self.gpu.mode {
-                    GpuMode::Experimental => {
-                        rl.workload_flops(&layers, dtype) / w.total_flops()
-                    }
-                    GpuMode::Theoretical => rl.peak(dtype) / w.total_flops(),
-                };
-                (
-                    None,
-                    pim_model.throughput(&arch),
-                    gpu_tp,
-                    pim_model.throughput_per_watt(&arch),
-                )
-            }
-            WorkloadSpec::ConvExec { model, conv, scale } => {
-                let w = model.workload();
-                let convs = w.conv_layers();
-                anyhow::ensure!(
-                    conv >= 1 && (conv as usize) <= convs.len(),
-                    "{} has {} executable conv layers; `conv` index {conv} is out of range",
-                    w.name,
-                    convs.len()
-                );
-                let (layer, full) = convs[conv as usize - 1];
-                let spec = full.scaled(scale);
-                // Deterministic seeded operands: the executed result must
-                // stay a pure function of the point's config (cache
-                // soundness), so the seed is a fixed constant.
-                let (input, weights) = conv::seeded_operands(&spec, self.fmt, CONV_EXEC_SEED);
-                let run = conv::execute_conv(
-                    &spec,
-                    self.fmt,
-                    self.arch.set,
-                    &input,
-                    &weights,
-                    arch.rows as usize,
-                )?;
-                let reference = conv::reference_conv(&spec, self.fmt, &input, &weights);
-                let check = metrics::conv_exec_check(&run, &reference);
-                anyhow::ensure!(
-                    check.passes(),
-                    "executed conv deviates from the analytic model / host reference: {} \
-                     (measured {} vs analytic {} cycles/MAC, bit_exact={})",
-                    check.label,
-                    check.measured_mac_cycles,
-                    check.analytic_mac_cycles,
-                    check.bit_exact
-                );
-                // Validated: report the architecture-scale MAC throughput
-                // (one MAC per row per mac_cycles) against the layer's
-                // batch-64 GPU roofline (FLOPs → MACs via /2) — the same
-                // batching formula the Cnn points use, via
-                // LayerCost::roofline_batched.
-                let pim = arch.throughput_ops(check.analytic_mac_cycles);
-                let traffic_scale = self.fmt.bits() as f64 / 32.0;
-                let (flops, bytes) = layer.roofline_batched(64.0);
-                let pair = (flops, bytes * traffic_scale);
-                let gpu_tp = match self.gpu.mode {
-                    GpuMode::Experimental => rl.workload_flops(&[pair], dtype) / 2.0,
-                    GpuMode::Theoretical => rl.peak(dtype) / 2.0,
-                };
-                (None, pim, gpu_tp, pim / arch.max_power_w)
-            }
-            WorkloadSpec::Decode { seq } => {
-                anyhow::ensure!(seq > 0, "decode context length must be positive");
-                let w = decode_workload(DecodeConfig::llama7b(seq));
-                let pim_model = CnnPimModel::new(self.fmt, self.arch.set, w.total_macs());
-                // Per-token decode is unbatched matvec work: batch-1
-                // roofline, no tensor cores.
-                let gpu_tp = match self.gpu.mode {
-                    GpuMode::Experimental => {
-                        rl.workload_flops(&w.roofline_layers(), dtype) / w.total_flops()
-                    }
-                    GpuMode::Theoretical => rl.peak(dtype) / w.total_flops(),
-                };
-                (
-                    None,
-                    pim_model.throughput(&arch),
-                    gpu_tp,
-                    pim_model.throughput_per_watt(&arch),
-                )
-            }
+        let pim_backend: Box<dyn Backend> = match self.workload {
+            WorkloadSpec::ConvExec { .. } => Box::new(ExecutedCrossbar::new(self.arch)),
+            _ => Box::new(AnalyticPim::new(self.arch)),
         };
+        let gpu_backend = GpuRoofline::new(self.gpu.gpu, self.gpu.mode, None);
+        let pim_est = pim_backend.evaluate(&self.workload, self.fmt)?;
+        let gpu_est = gpu_backend.evaluate(&self.workload, self.fmt)?;
+        let mut extras = Vec::with_capacity(self.backends.len());
+        for id in &self.backends {
+            let b = backend::parse(id)?;
+            anyhow::ensure!(
+                b.supports(&self.workload),
+                "backend `{}` does not support workload `{}`",
+                b.id(),
+                self.workload.name()
+            );
+            let est = b.evaluate(&self.workload, self.fmt)?;
+            extras.push(BackendCol {
+                backend: b.id(),
+                throughput: est.throughput,
+                per_watt: est.per_watt,
+            });
+        }
         Ok(PointResult {
             label: self.label(),
             arch: self.arch.name(),
@@ -291,11 +196,12 @@ impl SweepPoint {
             gpu: self.gpu.gpu.name.to_string(),
             gpu_mode: self.gpu.mode.name().to_string(),
             unit: self.workload.unit().to_string(),
-            cc,
-            pim,
-            gpu_tp,
-            pim_per_watt,
-            gpu_per_watt: rl.per_watt(gpu_tp),
+            cc: pim_est.cc,
+            pim: pim_est.throughput,
+            gpu_tp: gpu_est.throughput,
+            pim_per_watt: pim_est.per_watt,
+            gpu_per_watt: gpu_est.per_watt,
+            extras,
         })
     }
 }
@@ -332,6 +238,22 @@ pub struct PointResult {
     pub pim_per_watt: f64,
     /// GPU throughput per watt.
     pub gpu_per_watt: f64,
+    /// Extra backend columns from the campaign's `backends` axis, in
+    /// axis order; empty for plain campaigns. Carried in the JSONL/table
+    /// renderings and the cache entry; the fixed-schema CSV stream omits
+    /// them (documented in EXPERIMENTS.md §SWEEP).
+    pub extras: Vec<BackendCol>,
+}
+
+/// One extra backend column of a [`PointResult`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct BackendCol {
+    /// Canonical backend id (`pim-exec:dram`, `gpu:a100:theoretical`, …).
+    pub backend: String,
+    /// Throughput in the point's unit.
+    pub throughput: f64,
+    /// Throughput per watt.
+    pub per_watt: f64,
 }
 
 impl PointResult {
@@ -340,9 +262,11 @@ impl PointResult {
         self.pim / self.gpu_tp
     }
 
-    /// Machine-readable JSON record (one JSONL line per point).
+    /// Machine-readable JSON record (one JSONL line per point). The
+    /// `extras` key appears only when the campaign had a `backends`
+    /// axis, so plain campaigns keep their historical bytes.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("point", Json::s(self.label.clone())),
             ("arch", Json::s(self.arch.clone())),
             ("rows", Json::i(self.rows as i64)),
@@ -358,7 +282,25 @@ impl PointResult {
             ("improvement", Json::n(self.improvement())),
             ("pim_per_watt", Json::n(self.pim_per_watt)),
             ("gpu_per_watt", Json::n(self.gpu_per_watt)),
-        ])
+        ];
+        if !self.extras.is_empty() {
+            pairs.push((
+                "extras",
+                Json::arr(
+                    self.extras
+                        .iter()
+                        .map(|e| {
+                            Json::obj(vec![
+                                ("backend", Json::s(e.backend.clone())),
+                                ("throughput", Json::n(e.throughput)),
+                                ("per_watt", Json::n(e.per_watt)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        Json::obj(pairs)
     }
 
     /// Rebuild a result from its [`PointResult::to_json`] form (cache
@@ -371,6 +313,20 @@ impl PointResult {
         let cc = match j.get("cc") {
             None | Some(Json::Null) => None,
             Some(v) => Some(v.as_f64()?),
+        };
+        let extras = match j.get("extras") {
+            None => Vec::new(),
+            Some(v) => v
+                .as_arr()?
+                .iter()
+                .map(|e| {
+                    Some(BackendCol {
+                        backend: e.get("backend")?.as_str()?.to_string(),
+                        throughput: e.get("throughput")?.as_f64()?,
+                        per_watt: e.get("per_watt")?.as_f64()?,
+                    })
+                })
+                .collect::<Option<Vec<_>>>()?,
         };
         Some(PointResult {
             label: s("point")?,
@@ -387,6 +343,7 @@ impl PointResult {
             gpu_tp: f("gpu_throughput")?,
             pim_per_watt: f("pim_per_watt")?,
             gpu_per_watt: f("gpu_per_watt")?,
+            extras,
         })
     }
 }
@@ -400,7 +357,7 @@ mod tests {
     fn config_json_is_stable_and_index_free() {
         let pts = Campaign::builtin("fig4").unwrap().points();
         // Same content at a different index → same config.
-        let mut moved = pts[3];
+        let mut moved = pts[3].clone();
         moved.index = 17;
         assert_eq!(moved.config_json(), pts[3].config_json());
         // Different content → different config.
@@ -456,7 +413,7 @@ mod tests {
     fn zero_dims_error_instead_of_panicking() {
         use crate::pim::gates::GateSet;
         use crate::sweep::ArchSpec;
-        let mut p = Campaign::builtin("fig4").unwrap().points()[0];
+        let mut p = Campaign::builtin("fig4").unwrap().points()[0].clone();
         p.arch = ArchSpec::with_dims(GateSet::MemristiveNor, 0, 1024);
         let err = p.eval().err().expect("zero rows must fail, not panic");
         assert!(format!("{err}").contains("positive"));
@@ -482,7 +439,7 @@ mod tests {
     #[test]
     fn conv_exec_out_of_range_layer_errors() {
         use crate::sweep::{CnnModel, WorkloadSpec};
-        let mut p = Campaign::builtin("conv-exec").unwrap().points()[0];
+        let mut p = Campaign::builtin("conv-exec").unwrap().points()[0].clone();
         p.workload = WorkloadSpec::ConvExec {
             model: CnnModel::AlexNet,
             conv: 99,

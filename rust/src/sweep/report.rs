@@ -43,7 +43,11 @@ impl OutputFormat {
     }
 }
 
-/// Column order of the CSV stream (and the field set of every JSONL row).
+/// Column order of the CSV stream (and the fixed field set of every
+/// JSONL row). The CSV schema is deliberately fixed: extra
+/// `backends`-axis columns appear in the JSONL (`extras` array) and
+/// table renderings but are omitted from CSV, so heterogeneous campaigns
+/// always produce one uniform stream (EXPERIMENTS.md §SWEEP).
 pub const CSV_HEADER: &str = "point,arch,rows,cols,format,workload,gpu,gpu_mode,unit,\
 cc,pim_throughput,gpu_throughput,improvement,pim_per_watt,gpu_per_watt";
 
@@ -82,9 +86,13 @@ pub fn jsonl_row(r: &PointResult) -> String {
     r.to_json().compact()
 }
 
-/// Render buffered results as the human-readable table.
+/// Render buffered results as the human-readable table. Campaigns with a
+/// `backends` axis get one extra `backends` column listing each extra
+/// backend's throughput; plain campaigns keep the historical layout
+/// byte-for-byte.
 pub fn render_table(results: &[PointResult]) -> Table {
-    let mut t = Table::new(&[
+    let has_extras = results.iter().any(|r| !r.extras.is_empty());
+    let mut header = vec![
         "point",
         "unit",
         "CC",
@@ -93,9 +101,13 @@ pub fn render_table(results: &[PointResult]) -> Table {
         "improvement",
         "PIM/W",
         "GPU/W",
-    ]);
+    ];
+    if has_extras {
+        header.push("backends");
+    }
+    let mut t = Table::new(&header);
     for r in results {
-        t.row(vec![
+        let mut row = vec![
             r.label.clone(),
             r.unit.clone(),
             r.cc.map(|c| format!("{c:.1}")).unwrap_or_default(),
@@ -104,7 +116,17 @@ pub fn render_table(results: &[PointResult]) -> Table {
             format!("{:.2}x", r.improvement()),
             si(r.pim_per_watt),
             si(r.gpu_per_watt),
-        ]);
+        ];
+        if has_extras {
+            row.push(
+                r.extras
+                    .iter()
+                    .map(|e| format!("{}={}", e.backend, si(e.throughput)))
+                    .collect::<Vec<_>>()
+                    .join(" "),
+            );
+        }
+        t.row(row);
     }
     t
 }

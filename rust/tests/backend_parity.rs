@@ -1,0 +1,221 @@
+//! Backend-adapter parity: the acceptance bar of the `Backend`
+//! redesign. `metrics::cc_point` and `SweepPoint::eval` are now thin
+//! adapters over `convpim::backend`, and these tests pin the contract
+//! that made the rework safe — the backends reproduce the historical
+//! numbers **exactly** (f64 `==`, not approximately), the executed
+//! backend reproduces `ConvExecCheck`'s measured record, and the new
+//! campaign `backends` axis composes with caching.
+
+use convpim::backend::{self, AnalyticPim, Backend, ExecutedCrossbar, GpuRoofline};
+use convpim::gpumodel::{GpuSpec, Roofline};
+use convpim::metrics;
+use convpim::pim::arch::PimArch;
+use convpim::pim::conv;
+use convpim::pim::fixed::FixedOp;
+use convpim::pim::gates::GateSet;
+use convpim::pim::matpim::NumFmt;
+use convpim::pim::softfloat::Format;
+use convpim::sweep::{ArchSpec, Campaign, CnnModel, GpuMode, WorkloadSpec};
+
+fn all_formats() -> [NumFmt; 6] {
+    [
+        NumFmt::Fixed(8),
+        NumFmt::Fixed(16),
+        NumFmt::Fixed(32),
+        NumFmt::Float(Format::FP16),
+        NumFmt::Float(Format::FP32),
+        NumFmt::Float(Format::FP64),
+    ]
+}
+
+/// The full Figure 4 grid — every gate set × format × op — evaluated via
+/// `Backend::evaluate` equals `metrics::cc_point` exactly: same CC, same
+/// PIM ops/s, same experimental-GPU ops/s, bit for bit.
+#[test]
+fn fig4_grid_via_backend_equals_cc_point_exactly() {
+    for set in GateSet::all() {
+        let arch = PimArch::paper(set);
+        let rl = Roofline::new(GpuSpec::a6000());
+        let pim = AnalyticPim::from_arch(arch);
+        let gpu = GpuRoofline::new(GpuSpec::a6000(), GpuMode::Experimental, None);
+        for fmt in all_formats() {
+            for op in FixedOp::all() {
+                let reference = metrics::cc_point(set, &arch, &rl, fmt, op);
+                let w = WorkloadSpec::Elementwise(op);
+                let p = pim.evaluate(&w, fmt).unwrap();
+                let g = gpu.evaluate(&w, fmt).unwrap();
+                let label = format!("{set:?} {} {}", fmt.name(), op.name());
+                assert_eq!(p.cc, Some(reference.cc), "{label}: cc");
+                assert_eq!(p.throughput, reference.pim_ops, "{label}: pim ops");
+                assert_eq!(g.throughput, reference.gpu_ops, "{label}: gpu ops");
+                // Per-watt columns use the historical normalizations.
+                assert_eq!(p.per_watt, reference.pim_ops / arch.max_power_w, "{label}");
+                assert_eq!(g.per_watt, rl.per_watt(reference.gpu_ops), "{label}");
+            }
+        }
+    }
+}
+
+/// Every builtin-campaign point evaluated through `SweepPoint::eval`
+/// (now backend-dispatched) matches a by-hand pairing of the analytic
+/// PIM backend and the point's GPU roofline backend.
+#[test]
+fn builtin_points_match_direct_backend_pairing() {
+    for name in ["fig4", "fig5", "sens-dims"] {
+        for p in Campaign::builtin(name).unwrap().points() {
+            let r = p.eval().unwrap_or_else(|e| panic!("{}: {e:#}", p.label()));
+            let pim = AnalyticPim::new(p.arch).evaluate(&p.workload, p.fmt).unwrap();
+            let gpu = GpuRoofline::new(p.gpu.gpu, p.gpu.mode, None)
+                .evaluate(&p.workload, p.fmt)
+                .unwrap();
+            assert_eq!(r.pim, pim.throughput, "{}", p.label());
+            assert_eq!(r.gpu_tp, gpu.throughput, "{}", p.label());
+            assert_eq!(r.pim_per_watt, pim.per_watt, "{}", p.label());
+            assert_eq!(r.gpu_per_watt, gpu.per_watt, "{}", p.label());
+            assert_eq!(r.cc, pim.cc, "{}", p.label());
+            assert_eq!(r.unit, pim.unit, "{}", p.label());
+        }
+    }
+}
+
+/// The executed backend reproduces `ConvExecCheck`'s measured record on
+/// the cheap cell: same measured cycles/gates, same bit-exact verdict,
+/// and the reported throughput is the architecture-scale number the
+/// analytic model predicts.
+#[test]
+fn executed_backend_reproduces_conv_exec_check() {
+    let fmt = NumFmt::Fixed(8);
+    let set = GateSet::MemristiveNor;
+    let workload = WorkloadSpec::ConvExec {
+        model: CnnModel::AlexNet,
+        conv: 2,
+        scale: 16,
+    };
+
+    // Independent reference: execute the same scaled layer with the same
+    // fixed seed and run conv_exec_check directly.
+    let arch = PimArch::paper(set);
+    let w = CnnModel::AlexNet.workload();
+    let (_, full) = w.conv_layers()[1];
+    let scaled = full.scaled(16);
+    let (input, weights) = conv::seeded_operands(&scaled, fmt, backend::CONV_EXEC_SEED);
+    let run = conv::execute_conv(&scaled, fmt, set, &input, &weights, arch.rows as usize).unwrap();
+    let reference = conv::reference_conv(&scaled, fmt, &input, &weights);
+    let check = metrics::conv_exec_check(&run, &reference);
+    assert!(check.passes(), "{check:?}");
+
+    let est = ExecutedCrossbar::new(ArchSpec::paper(set))
+        .evaluate(&workload, fmt)
+        .unwrap();
+    let notes = &est.notes;
+    let as_u64 = |key: &str| notes.get(key).and_then(|v| v.as_u64()).unwrap();
+    assert_eq!(as_u64("measured_mac_cycles"), check.measured_mac_cycles);
+    assert_eq!(as_u64("analytic_mac_cycles"), check.analytic_mac_cycles);
+    assert_eq!(as_u64("measured_mac_gates"), check.measured_mac_gates);
+    assert_eq!(as_u64("analytic_mac_gates"), check.analytic_mac_gates);
+    assert_eq!(as_u64("macs"), check.macs);
+    assert_eq!(notes.get("bit_exact").unwrap().as_bool(), Some(true));
+    assert_eq!(notes.get("passes").unwrap().as_bool(), Some(true));
+    assert_eq!(
+        notes.get("move_cycles_per_mac").unwrap().as_f64().unwrap(),
+        check.move_cycles_per_mac
+    );
+    assert_eq!(est.throughput, arch.throughput_ops(check.analytic_mac_cycles));
+
+    // And it equals the conv-exec sweep point's PIM column exactly.
+    let points = Campaign::builtin("conv-exec").unwrap().points();
+    let p = points
+        .iter()
+        .find(|p| p.fmt.name() == "fixed8" && p.arch.name() == "memristive")
+        .unwrap();
+    assert_eq!(p.eval().unwrap().pim, est.throughput);
+}
+
+/// A campaign with a `backends` axis widens every point with extras
+/// columns whose values equal direct backend evaluation, and the widened
+/// result round-trips through its cache JSON exactly.
+#[test]
+fn backends_axis_extras_match_direct_evaluation_and_round_trip() {
+    let c = Campaign::from_json_text(
+        r#"{"name": "widened",
+            "archs": [{"set": "memristive"}],
+            "formats": ["fp32"],
+            "workloads": [{"kind": "matmul", "n": 32}],
+            "gpus": [{"gpu": "a6000", "mode": "experimental"}],
+            "backends": ["pim:dram", "gpu:a100:theoretical"]}"#,
+    )
+    .unwrap();
+    let points = c.points();
+    assert_eq!(points.len(), 1);
+    let r = points[0].eval().unwrap();
+    assert_eq!(r.extras.len(), 2);
+    assert_eq!(r.extras[0].backend, "pim:dram");
+    assert_eq!(r.extras[1].backend, "gpu:a100:theoretical");
+    let w = WorkloadSpec::Matmul(32);
+    let fmt = NumFmt::Float(Format::FP32);
+    let dram = AnalyticPim::new(ArchSpec::paper(GateSet::DramMaj))
+        .evaluate(&w, fmt)
+        .unwrap();
+    let a100 = GpuRoofline::new(GpuSpec::a100(), GpuMode::Theoretical, None)
+        .evaluate(&w, fmt)
+        .unwrap();
+    assert_eq!(r.extras[0].throughput, dram.throughput);
+    assert_eq!(r.extras[0].per_watt, dram.per_watt);
+    assert_eq!(r.extras[1].throughput, a100.throughput);
+    assert_eq!(r.extras[1].per_watt, a100.per_watt);
+
+    // Cache JSON round trip preserves the extras exactly.
+    let json = r.to_json();
+    let back = convpim::sweep::PointResult::from_json(
+        &convpim::util::json::Json::parse(&json.compact()).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(back, r);
+
+    // The widened config is a *different* cache identity than the plain
+    // one (extras are part of what was computed), while a plain campaign
+    // keeps the historical key shape (no `backends` key at all).
+    let plain = Campaign::from_json_text(
+        r#"{"name": "plain",
+            "archs": [{"set": "memristive"}],
+            "formats": ["fp32"],
+            "workloads": [{"kind": "matmul", "n": 32}],
+            "gpus": [{"gpu": "a6000", "mode": "experimental"}]}"#,
+    )
+    .unwrap();
+    let widened_cfg = points[0].config_json();
+    let plain_cfg = plain.points()[0].config_json();
+    assert_ne!(widened_cfg, plain_cfg);
+    assert!(plain_cfg.get("backends").is_none());
+    assert!(widened_cfg.get("backends").is_some());
+
+    // And the widened config round-trips through from_config_json.
+    let rebuilt = convpim::sweep::SweepPoint::from_config_json(&widened_cfg).unwrap();
+    assert_eq!(rebuilt.config_json(), widened_cfg);
+    assert_eq!(rebuilt.backends, points[0].backends);
+}
+
+/// The analytic and executed backends agree exactly on a conv-exec
+/// workload whenever the executed evaluation passes — the measured
+/// per-MAC costs are the analytic ones by construction.
+#[test]
+fn analytic_and_executed_agree_on_conv_exec() {
+    let w = WorkloadSpec::ConvExec {
+        model: CnnModel::AlexNet,
+        conv: 2,
+        scale: 16,
+    };
+    for set in GateSet::all() {
+        let spec = ArchSpec::paper(set);
+        let analytic = AnalyticPim::new(spec).evaluate(&w, NumFmt::Fixed(8)).unwrap();
+        let executed = ExecutedCrossbar::new(spec)
+            .evaluate(&w, NumFmt::Fixed(8))
+            .unwrap();
+        assert_eq!(analytic.throughput, executed.throughput, "{set:?}");
+        assert_eq!(analytic.per_watt, executed.per_watt, "{set:?}");
+        // The estimates disagree only in provenance: one is a prediction,
+        // the other a measurement.
+        assert_eq!(analytic.notes.get("executed").unwrap().as_bool(), Some(false));
+        assert_eq!(executed.notes.get("executed").unwrap().as_bool(), Some(true));
+    }
+}

@@ -191,6 +191,64 @@ fn exec_conv_acceptance_command_matches_service() {
     assert_eq!(cli, resp.stdout);
 }
 
+/// `convpim compare`: CLI stdout is byte-identical to the service
+/// response, cold cache, warm cache and at any `--jobs` level (the
+/// acceptance bar for the N-way comparison surface).
+#[test]
+fn compare_cli_matches_service_cold_warm_and_any_jobs() {
+    use convpim::pim::matpim::NumFmt;
+    use convpim::pim::softfloat::Format;
+    use convpim::sweep::WorkloadSpec;
+
+    let cache_dir = temp_dir("compare_cache");
+    let service = EvalService::new().with_cache(Some(ResultCache::new(&cache_dir)));
+    let req = EvalRequest::Compare {
+        workload: WorkloadSpec::from_name("cnn-alexnet").unwrap(),
+        fmt: NumFmt::Float(Format::FP32),
+        backends: vec![
+            "pim:memristive".into(),
+            "pim:dram".into(),
+            "gpu:a6000:experimental".into(),
+            "gpu:a6000:theoretical".into(),
+        ],
+    };
+    let cold = service.submit(&req);
+    assert!(cold.meta.ok, "{:?}", cold.meta.error);
+    assert_eq!(cold.meta.cache, CacheStatus::Computed);
+    let warm = service.submit(&req);
+    assert_eq!(warm.meta.cache, CacheStatus::Hit);
+    assert_eq!(warm.stdout, cold.stdout);
+
+    let backends = "pim:memristive,pim:dram,gpu:a6000:experimental,gpu:a6000:theoretical";
+    // Warm-cache CLI run hits the entries the service stored.
+    let cli = stdout_of(
+        bin()
+            .args(["compare", "--workload", "cnn-alexnet", "--backends", backends, "--cache-dir"])
+            .arg(&cache_dir)
+            .output()
+            .expect("running convpim"),
+    );
+    assert_eq!(cli, cold.stdout, "CLI stdout != service stdout");
+    // Uncached recompute at a different jobs level: same bytes.
+    let cli_recompute = stdout_of(
+        bin()
+            .args([
+                "compare",
+                "--workload",
+                "cnn-alexnet",
+                "--backends",
+                backends,
+                "--no-cache",
+                "--jobs",
+                "4",
+            ])
+            .output()
+            .expect("running convpim"),
+    );
+    assert_eq!(cli_recompute, cold.stdout, "recompute/--jobs drifted the bytes");
+    let _ = fs::remove_dir_all(&cache_dir);
+}
+
 /// `convpim validate`: the service renders the historical validate
 /// output and the CLI prints it verbatim.
 #[test]
