@@ -23,9 +23,15 @@
 //!   by side: analytic PIM, executed crossbar, GPU rooflines.
 //! * `validate [--rows N] [--seed S]` — bit-exact validation sweep of the
 //!   arithmetic microcode on the crossbar simulator.
-//! * `serve [--jobs N]` — long-running JSONL daemon: one request per
-//!   stdin line, responses streamed in input order while executing
-//!   concurrently on one warm cache (see `docs/EXPERIMENTS.md` SERVE).
+//! * `serve [--jobs N] [--listen ADDR]` — long-running JSONL daemon:
+//!   one request per line, responses streamed in input order while
+//!   executing concurrently on one warm two-tier cache. Default
+//!   transport is stdin/stdout; `--listen` serves N concurrent TCP
+//!   sessions with load-shedding (`--queue`) and a `stats` endpoint
+//!   (see `docs/EXPERIMENTS.md` SERVE).
+//! * `loadgen` — deterministic closed-loop load generator against a
+//!   self-hosted (or `--addr` external) daemon; writes the
+//!   `BENCH_serve.json` throughput/tail-latency artifact.
 //! * `info` — system inventory: Table 1 parameters, artifact manifest,
 //!   PJRT platform.
 //! * `list` — available experiment ids and builtin sweep campaigns.
@@ -56,7 +62,11 @@ USAGE:
   convpim compare --workload NAME --backends ID[,ID...] [--fmt FMT]
                   [--no-cache] [--cache-dir DIR]
   convpim validate [--rows N] [--seed N]
-  convpim serve [--jobs N] [--no-cache] [--cache-dir DIR]
+  convpim serve [--jobs N] [--no-cache] [--cache-dir DIR] [--mem-cache N]
+                [--listen HOST:PORT [--queue N]]
+  convpim loadgen [--addr HOST:PORT] [--clients N,N,...] [--requests N]
+                  [--seed N] [--out FILE] [--jobs N] [--queue N]
+                  [--mem-cache N] [--no-cache] [--cache-dir DIR]
   convpim info
   convpim list
   convpim help
@@ -102,11 +112,28 @@ conv-exec-MODEL-cN-sM. `convpim list` prints the registered backends;
 campaigns can add the same ids as a `backends` axis (EXPERIMENTS.md
 COMPARE/SWEEP).
 
-`serve` reads one request JSON per stdin line and answers one response
-JSON per stdout line, in input order, while executing concurrently —
-pipelined clients share one warm cache and one pool. A malformed line
-gets a structured error response; EOF exits 0. Wire schema:
-docs/EXPERIMENTS.md SERVE.
+`serve` reads one request JSON per line and answers one response JSON
+per line, in input order, while executing concurrently — pipelined
+clients share one warm cache and one pool. A malformed line gets a
+structured error response; EOF exits 0. With --listen HOST:PORT the
+daemon serves N concurrent TCP sessions multiplexed onto one service
+(one two-tier cache: a shared in-memory LRU of --mem-cache entries,
+default 256, in front of the disk cache): per-session ordering holds,
+--queue N bounds admission daemon-wide (overload requests get a
+structured `shed` response with a retry_after_ms hint; TCP default
+32 x jobs, 0 = unbounded), any request may carry "deadline_ms", and
+{"kind": "stats"} snapshots counters and latency percentiles. The TCP
+daemon still exits when stdin closes. Wire schema: docs/EXPERIMENTS.md
+SERVE.
+
+`loadgen` measures the daemon: seeded mixed request classes
+(experiment/sweep-point/compare/conv-exec/list/info) from closed-loop
+clients at each --clients concurrency level, reporting rps, exact
+client-side p50/p95/p99 latency, cache hit rate and shed rate per level
+to --out (default BENCH_serve.json, schema: docs/EXPERIMENTS.md
+LOADGEN). By default it self-hosts a daemon on 127.0.0.1:0 with the
+given --jobs/--queue/cache flags; --addr targets a running daemon
+instead. Exits nonzero (after writing) if any level degenerates.
 
 EXPERIMENTS: table1 fig3 fig4 fig5 fig6 fig7 fig8 sens-gpu sens-fp16 sens-dims conv-exec
 SWEEP CAMPAIGNS (builtin): fig4 fig5 sens-dims conv-exec
@@ -133,6 +160,7 @@ fn main() -> ExitCode {
         "compare" => cmd_compare(&args),
         "validate" => cmd_validate(&args),
         "serve" => cmd_serve(&args),
+        "loadgen" => cmd_loadgen(&args),
         "info" => cmd_info(),
         "list" => cmd_list(),
         other => {
@@ -488,16 +516,113 @@ fn cmd_validate(args: &Args) -> anyhow::Result<()> {
     }
 }
 
-/// Long-running JSONL daemon over stdin/stdout.
+/// Attach the in-memory LRU tier (`--mem-cache N`, default 256 entries,
+/// 0 disables) to the service's disk cache; no-op when `--no-cache`.
+fn attach_mem_cache(service: EvalService, args: &Args) -> anyhow::Result<EvalService> {
+    let mem = args.flag_usize("mem-cache", 256).map_err(anyhow::Error::msg)?;
+    let cache = service.cache().cloned().map(|c| c.with_memory(mem));
+    Ok(service.with_cache(cache))
+}
+
+/// Long-running JSONL daemon: stdin/stdout by default, a concurrent TCP
+/// listener with `--listen HOST:PORT`.
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
-    let service = service_from(args)?;
-    let stdin = std::io::stdin();
+    let service = attach_mem_cache(service_from(args)?, args)?;
+    let Some(listen) = args.flag_opt("listen") else {
+        let stdin = std::io::stdin();
+        let summary =
+            convpim::service::serve(&service, stdin.lock(), std::io::stdout(), service.jobs())?;
+        eprintln!(
+            "serve: {} request(s) — {} ok, {} error(s), {} cache hit(s)",
+            summary.requests, summary.ok, summary.errors, summary.cache_hits
+        );
+        return Ok(());
+    };
+
+    let listener = std::net::TcpListener::bind(listen)
+        .with_context(|| format!("binding --listen {listen}"))?;
+    let local = listener.local_addr().context("reading bound address")?;
+    // TCP admission defaults to bounded (32 in-system evaluations per
+    // worker) so an unattended daemon sheds instead of queueing without
+    // limit; --queue 0 opts back into unbounded.
+    let queue = match args.flag_opt("queue") {
+        Some(_) => args.flag_usize("queue", 0).map_err(anyhow::Error::msg)?,
+        None => 32 * resolve_jobs(service.jobs(), None),
+    };
+    // The first stderr line is machine-parsable so scripts (and the TCP
+    // integration tests) can discover the port behind `--listen :0`.
+    eprintln!("serve: listening on {local} (queue {queue})");
+
+    // The TCP daemon ends the way the pipe daemon does: when stdin
+    // closes. A watcher thread turns that EOF into stop + listener wake.
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    {
+        let stop = std::sync::Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut stdin = std::io::stdin().lock();
+            let mut buf = [0u8; 4096];
+            while matches!(std::io::Read::read(&mut stdin, &mut buf), Ok(n) if n > 0) {}
+            stop.store(true, std::sync::atomic::Ordering::SeqCst);
+            convpim::service::wake_listener(local);
+        });
+    }
+
     let summary =
-        convpim::service::serve(&service, stdin.lock(), std::io::stdout(), service.jobs())?;
+        convpim::service::serve_tcp(&service, listener, service.jobs(), queue, &stop)?;
     eprintln!(
-        "serve: {} request(s) — {} ok, {} error(s), {} cache hit(s)",
-        summary.requests, summary.ok, summary.errors, summary.cache_hits
+        "serve: {} session(s) — {} request(s), {} ok, {} error(s), {} shed, {} cache hit(s)",
+        summary.sessions,
+        summary.totals.requests,
+        summary.totals.ok,
+        summary.totals.errors,
+        summary.totals.shed,
+        summary.totals.cache_hits
     );
+    Ok(())
+}
+
+/// Deterministic load generator: measure a (self-hosted or `--addr`)
+/// daemon at fixed concurrency levels and write `BENCH_serve.json`.
+fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
+    let clients_arg = args.flag("clients", "4,16");
+    let levels: Vec<usize> = clients_arg
+        .split(',')
+        .map(|s| s.trim())
+        .filter(|s| !s.is_empty())
+        .map(|s| {
+            s.parse::<usize>().map_err(|_| {
+                anyhow::Error::msg(format!(
+                    "--clients must be a comma-separated list of counts, got `{s}`"
+                ))
+            })
+        })
+        .collect::<anyhow::Result<_>>()?;
+    anyhow::ensure!(!levels.is_empty(), "--clients needs at least one level");
+    let requests = args.flag_usize("requests", 256).map_err(anyhow::Error::msg)?;
+    let seed = args.flag_usize("seed", 0xBEEF).map_err(anyhow::Error::msg)? as u64;
+    let jobs = args.flag_usize("jobs", 0).map_err(anyhow::Error::msg)?;
+    let queue = args.flag_usize("queue", 0).map_err(anyhow::Error::msg)?;
+    let mem = args.flag_usize("mem-cache", 256).map_err(anyhow::Error::msg)?;
+    let cache = if args.switch("no-cache") {
+        None
+    } else {
+        Some(
+            ResultCache::new(args.flag("cache-dir", service::DEFAULT_CACHE_DIR))
+                .with_memory(mem),
+        )
+    };
+    let cfg = convpim::service::LoadgenConfig {
+        addr: args.flag_opt("addr").map(|s| s.to_string()),
+        levels,
+        requests,
+        seed,
+        jobs,
+        queue,
+        cache,
+        out: Some(args.flag("out", "BENCH_serve.json").into()),
+    };
+    let doc = convpim::service::run_loadgen(&cfg)?;
+    println!("{}", doc.pretty());
     Ok(())
 }
 

@@ -13,6 +13,20 @@
 //! against the requested one, so a hash collision (or a manually edited
 //! file) degrades to a recompute instead of serving the wrong numbers.
 //!
+//! ## The in-memory LRU tier
+//!
+//! [`ResultCache::with_memory`] layers a capacity-bounded, LRU-evicting
+//! in-memory tier ([`MemTier`], shared via `Arc` across clones) in front
+//! of the disk directory, so a hot request under `convpim serve` never
+//! touches disk: [`ResultCache::load`] checks memory first, falls back to
+//! disk and *promotes* disk hits into memory; [`ResultCache::store`]
+//! writes both tiers. Entries are the same `{config, result}` documents
+//! the disk files hold — including the stored-config equality guard — so
+//! a memory-served response replays byte-identically to a disk-served or
+//! freshly computed one. Hit/miss/insertion/eviction counters are exact
+//! (maintained under the tier's one mutex) and surface on the serve
+//! daemon's `stats` wire output.
+//!
 //! Key derivation is deterministic and content-addressed:
 //!
 //! ```
@@ -26,9 +40,11 @@
 //! assert_eq!(k0.len(), 16); // 64-bit hex
 //! ```
 
+use std::collections::BTreeMap;
 use std::fs;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context as _, Result};
 
@@ -46,17 +62,218 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
     h
 }
 
-/// A directory of `<key>.json` files, one per cached evaluation.
+/// Exact counters for one [`LruCache`] (and thus one [`MemTier`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LruCounters {
+    /// `get` calls that found a live entry.
+    pub hits: u64,
+    /// `get` calls that found nothing.
+    pub misses: u64,
+    /// `insert` calls (replacements of an existing key included).
+    pub insertions: u64,
+    /// Entries dropped to respect the capacity bound.
+    pub evictions: u64,
+}
+
+/// A strict least-recently-used map from cache key to JSON entry.
+///
+/// std-only: a `BTreeMap<key, (tick, value)>` plus a `BTreeMap<tick, key>`
+/// recency index ordered by a monotone logical clock — `O(log n)` per
+/// operation, no linked lists, no unsafe. Both `get` and `insert` touch
+/// the entry; `insert` past capacity evicts the least-recently-used key.
+/// Counters are exact (every transition happens under the owner's lock),
+/// which the LRU property test checks against a reference model.
+#[derive(Debug)]
+pub struct LruCache {
+    capacity: usize,
+    clock: u64,
+    by_key: BTreeMap<String, (u64, Json)>,
+    by_age: BTreeMap<u64, String>,
+    counters: LruCounters,
+}
+
+impl LruCache {
+    /// An empty cache holding at most `capacity` entries (min 1).
+    pub fn new(capacity: usize) -> LruCache {
+        LruCache {
+            capacity: capacity.max(1),
+            clock: 0,
+            by_key: BTreeMap::new(),
+            by_age: BTreeMap::new(),
+            counters: LruCounters::default(),
+        }
+    }
+
+    fn touch(&mut self, key: &str) {
+        if let Some((tick, _)) = self.by_key.get(key) {
+            let old = *tick;
+            self.by_age.remove(&old);
+            self.clock += 1;
+            self.by_age.insert(self.clock, key.to_string());
+            self.by_key.get_mut(key).unwrap().0 = self.clock;
+        }
+    }
+
+    /// Look up `key`, marking it most-recently-used on a hit.
+    pub fn get(&mut self, key: &str) -> Option<Json> {
+        if self.by_key.contains_key(key) {
+            self.counters.hits += 1;
+            self.touch(key);
+            Some(self.by_key[key].1.clone())
+        } else {
+            self.counters.misses += 1;
+            None
+        }
+    }
+
+    /// Insert (or replace) `key`, evicting the LRU entry when the cache
+    /// is full and `key` is new.
+    pub fn insert(&mut self, key: String, value: Json) {
+        self.counters.insertions += 1;
+        if self.by_key.contains_key(&key) {
+            self.by_key.get_mut(&key).unwrap().1 = value;
+            self.touch(&key);
+            return;
+        }
+        if self.by_key.len() >= self.capacity {
+            // The smallest tick in the recency index is the LRU entry.
+            let (&oldest, _) = self.by_age.iter().next().expect("non-empty at capacity");
+            let victim = self.by_age.remove(&oldest).unwrap();
+            self.by_key.remove(&victim);
+            self.counters.evictions += 1;
+        }
+        self.clock += 1;
+        self.by_age.insert(self.clock, key.clone());
+        self.by_key.insert(key, (self.clock, value));
+    }
+
+    /// Live entries (always `<= capacity()`).
+    pub fn len(&self) -> usize {
+        self.by_key.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_key.is_empty()
+    }
+
+    /// The capacity bound.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Exact operation counters.
+    pub fn counters(&self) -> LruCounters {
+        self.counters
+    }
+
+    /// Keys from least- to most-recently used (test/diagnostic aid).
+    pub fn keys_lru_order(&self) -> Vec<String> {
+        self.by_age.values().cloned().collect()
+    }
+}
+
+/// Point-in-time view of a [`MemTier`] for the `stats` wire output.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MemSnapshot {
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+    pub entries: u64,
+    pub capacity: u64,
+    /// Disk hits promoted into the memory tier (memory misses that the
+    /// disk tier answered).
+    pub disk_promotions: u64,
+}
+
+impl MemSnapshot {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("hits", Json::i(self.hits as i64)),
+            ("misses", Json::i(self.misses as i64)),
+            ("insertions", Json::i(self.insertions as i64)),
+            ("evictions", Json::i(self.evictions as i64)),
+            ("entries", Json::i(self.entries as i64)),
+            ("capacity", Json::i(self.capacity as i64)),
+            ("disk_promotions", Json::i(self.disk_promotions as i64)),
+        ])
+    }
+}
+
+/// The shared in-memory tier: one [`LruCache`] behind a mutex, shared by
+/// every clone of the owning [`ResultCache`] (the serve daemon clones
+/// the service's cache into each session; `Arc` keeps the tier — and its
+/// counters — global to the daemon).
+#[derive(Debug)]
+pub struct MemTier {
+    lru: Mutex<LruCache>,
+    disk_promotions: AtomicU64,
+}
+
+impl MemTier {
+    fn new(capacity: usize) -> MemTier {
+        MemTier {
+            lru: Mutex::new(LruCache::new(capacity)),
+            disk_promotions: AtomicU64::new(0),
+        }
+    }
+
+    fn get(&self, key: &str) -> Option<Json> {
+        self.lru.lock().unwrap().get(key)
+    }
+
+    fn insert(&self, key: String, entry: Json) {
+        self.lru.lock().unwrap().insert(key, entry);
+    }
+
+    /// Exact counters + occupancy at this instant.
+    pub fn snapshot(&self) -> MemSnapshot {
+        let lru = self.lru.lock().unwrap();
+        let c = lru.counters();
+        MemSnapshot {
+            hits: c.hits,
+            misses: c.misses,
+            insertions: c.insertions,
+            evictions: c.evictions,
+            entries: lru.len() as u64,
+            capacity: lru.capacity() as u64,
+            disk_promotions: self.disk_promotions.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A directory of `<key>.json` files, one per cached evaluation, with an
+/// optional shared in-memory LRU tier in front (see the module docs).
 #[derive(Clone, Debug)]
 pub struct ResultCache {
     dir: PathBuf,
+    mem: Option<Arc<MemTier>>,
 }
 
 impl ResultCache {
     /// Open (without creating) a cache rooted at `dir`. The directory is
     /// created lazily on the first [`ResultCache::store`].
     pub fn new(dir: impl Into<PathBuf>) -> ResultCache {
-        ResultCache { dir: dir.into() }
+        ResultCache {
+            dir: dir.into(),
+            mem: None,
+        }
+    }
+
+    /// Attach an in-memory LRU tier holding up to `capacity` entries
+    /// (`0` detaches the tier). The tier is shared across clones.
+    pub fn with_memory(mut self, capacity: usize) -> ResultCache {
+        self.mem = if capacity == 0 {
+            None
+        } else {
+            Some(Arc::new(MemTier::new(capacity)))
+        };
+        self
+    }
+
+    /// The in-memory tier, when attached.
+    pub fn memory(&self) -> Option<&MemTier> {
+        self.mem.as_deref()
     }
 
     /// The cache directory.
@@ -74,29 +291,48 @@ impl ResultCache {
         self.dir.join(format!("{}.json", Self::key(config)))
     }
 
-    /// Look up the stored result payload for `config`. Returns `None` on
-    /// a miss, an unparsable entry, or a stored config that does not
-    /// match (hash collision / stale schema) — all of which mean
-    /// "recompute".
+    /// Look up the stored result payload for `config`: the in-memory
+    /// tier first (when attached), then disk — promoting disk hits into
+    /// memory. Returns `None` on a miss, an unparsable entry, or a
+    /// stored config that does not match (hash collision / stale
+    /// schema) — all of which mean "recompute".
     pub fn load(&self, config: &Json) -> Option<Json> {
-        let text = fs::read_to_string(self.path_for(config)).ok()?;
+        let key = Self::key(config);
+        if let Some(mem) = &self.mem {
+            if let Some(entry) = mem.get(&key) {
+                // Same collision guard as the disk tier: a key hit with a
+                // different stored config degrades to a (disk) lookup.
+                if entry.get("config") == Some(config) {
+                    return entry.get("result").cloned();
+                }
+            }
+        }
+        let text = fs::read_to_string(self.dir.join(format!("{key}.json"))).ok()?;
         let doc = Json::parse(&text)?;
         if doc.get("config")? != config {
             return None;
         }
-        doc.get("result").cloned()
+        let result = doc.get("result").cloned()?;
+        if let Some(mem) = &self.mem {
+            mem.disk_promotions.fetch_add(1, Ordering::Relaxed);
+            mem.insert(key, doc);
+        }
+        Some(result)
     }
 
-    /// Persist a result payload under its config's key. Writes to a
-    /// temporary sibling and renames, so concurrent readers never observe
-    /// a torn entry.
+    /// Persist a result payload under its config's key, in both tiers.
+    /// Disk writes go to a temporary sibling and rename, so concurrent
+    /// readers never observe a torn entry.
     pub fn store(&self, config: &Json, result: &Json) -> Result<()> {
-        fs::create_dir_all(&self.dir)
-            .with_context(|| format!("creating result cache dir {:?}", self.dir))?;
         let entry = Json::obj(vec![
             ("config", config.clone()),
             ("result", result.clone()),
         ]);
+        if let Some(mem) = &self.mem {
+            mem.insert(Self::key(config), entry.clone());
+        }
+        fs::create_dir_all(&self.dir)
+            .with_context(|| format!("creating result cache dir {:?}", self.dir))?;
         let path = self.path_for(config);
         // Unique-enough temp name: pid + a process-wide counter, so two
         // threads storing the same key never share a temp file.
@@ -181,6 +417,103 @@ mod tests {
         fs::write(&path, "{ not json").unwrap();
         assert!(cache.load(&config).is_none());
         let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lru_basic_eviction_order_and_counters() {
+        let mut lru = LruCache::new(2);
+        lru.insert("a".into(), Json::i(1));
+        lru.insert("b".into(), Json::i(2));
+        // Touch `a` → `b` becomes LRU; inserting `c` evicts `b`.
+        assert_eq!(lru.get("a"), Some(Json::i(1)));
+        lru.insert("c".into(), Json::i(3));
+        assert_eq!(lru.len(), 2);
+        assert_eq!(lru.get("b"), None);
+        assert_eq!(lru.get("a"), Some(Json::i(1)));
+        assert_eq!(lru.get("c"), Some(Json::i(3)));
+        assert_eq!(
+            lru.counters(),
+            LruCounters {
+                hits: 3,
+                misses: 1,
+                insertions: 3,
+                evictions: 1
+            }
+        );
+        assert_eq!(lru.keys_lru_order(), vec!["a".to_string(), "c".to_string()]);
+    }
+
+    #[test]
+    fn lru_replacing_existing_key_does_not_evict() {
+        let mut lru = LruCache::new(2);
+        lru.insert("a".into(), Json::i(1));
+        lru.insert("b".into(), Json::i(2));
+        lru.insert("a".into(), Json::i(10)); // replace, not grow
+        assert_eq!(lru.len(), 2);
+        assert_eq!(lru.counters().evictions, 0);
+        assert_eq!(lru.get("a"), Some(Json::i(10)));
+        assert_eq!(lru.get("b"), Some(Json::i(2)));
+    }
+
+    #[test]
+    fn memory_tier_serves_hot_entries_and_promotes_disk_hits() {
+        let dir = temp_dir("memtier");
+        let points = Campaign::builtin("fig4").unwrap().points();
+        let config = points[0].config_json();
+        let result = points[0].eval().unwrap().to_json();
+
+        // Warm the disk through a tier-less handle (simulates an earlier
+        // process), then read through a cold-memory handle.
+        ResultCache::new(&dir).store(&config, &result).unwrap();
+        let cache = ResultCache::new(&dir).with_memory(4);
+        assert_eq!(cache.load(&config), Some(result.clone()));
+        let snap = cache.memory().unwrap().snapshot();
+        assert_eq!(snap.misses, 1, "cold memory must miss first");
+        assert_eq!(snap.disk_promotions, 1, "disk hit must promote");
+        assert_eq!(snap.entries, 1);
+
+        // Hot path: second load is a pure memory hit, byte-identical.
+        assert_eq!(cache.load(&config), Some(result.clone()));
+        let snap = cache.memory().unwrap().snapshot();
+        assert_eq!(snap.hits, 1);
+        assert_eq!(snap.disk_promotions, 1, "no second disk read");
+
+        // A clone shares the tier (and its counters).
+        let clone = cache.clone();
+        assert_eq!(clone.load(&config), Some(result.clone()));
+        assert_eq!(cache.memory().unwrap().snapshot().hits, 2);
+
+        // Memory-only availability: delete the disk entry; the tier
+        // still answers (the serve daemon's hot-request guarantee).
+        fs::remove_dir_all(&dir).unwrap();
+        assert_eq!(cache.load(&config), Some(result));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn store_populates_both_tiers() {
+        let dir = temp_dir("bothtiers");
+        let cache = ResultCache::new(&dir).with_memory(4);
+        let config = Json::obj(vec![("k", Json::s("demo"))]);
+        let result = Json::obj(vec![("x", Json::n(1.5))]);
+        cache.store(&config, &result).unwrap();
+        let snap = cache.memory().unwrap().snapshot();
+        assert_eq!(snap.insertions, 1);
+        // Memory answers without the disk file...
+        fs::remove_dir_all(&dir).unwrap();
+        assert_eq!(cache.load(&config), Some(result.clone()));
+        // ...and a fresh tier-less handle would have found the disk copy
+        // before deletion (spot-check the write actually happened by
+        // re-storing and reading through a new handle).
+        cache.store(&config, &result).unwrap();
+        assert_eq!(ResultCache::new(&dir).load(&config), Some(result));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn with_memory_zero_detaches_the_tier() {
+        let cache = ResultCache::new("x").with_memory(8).with_memory(0);
+        assert!(cache.memory().is_none());
     }
 
     #[test]

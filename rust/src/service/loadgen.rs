@@ -1,0 +1,457 @@
+//! `convpim loadgen` — a deterministic load generator for the serve
+//! daemon, and the first entry in the repo's per-PR perf trajectory
+//! (`BENCH_serve.json`).
+//!
+//! Methodology (following the PIM benchmarking literature's insistence
+//! on mixed workload classes and tail-latency reporting rather than
+//! one-shot runs — PrIM, arXiv:2105.03814; DAMOV/ML, arXiv:2205.14647):
+//!
+//! * **Mixed request classes**: a seeded mix of `experiment`,
+//!   `sweep-point`, `compare`, `conv-exec`, `list` and `info` requests —
+//!   the request *sequence* is a pure function of `(seed, level,
+//!   client)`, so two runs replay byte-identical request streams (the
+//!   latencies differ; that is the measurement).
+//! * **Closed-loop clients at fixed concurrency levels**: each level
+//!   spawns N client connections that send one request and wait for its
+//!   response before sending the next; per-request wall-clock is the
+//!   client-observed round trip.
+//! * **Tail latency**: exact p50/p95/p99 over the level's collected
+//!   client-side latencies (the daemon's own histogram-bucketed view is
+//!   attached under `daemon` from a `stats` request per level).
+//!
+//! Output schema (`BENCH_serve.json`, see docs/EXPERIMENTS.md LOADGEN):
+//!
+//! ```text
+//! {"bench": "serve", "schema": 1, "seed": S, "requests_per_level": N,
+//!  "levels": [{"clients": C, "requests": N, "wall_ms": W, "rps": R,
+//!              "p50_ms": ..., "p95_ms": ..., "p99_ms": ...,
+//!              "ok": n, "errors": n, "shed": n, "cache_hits": n,
+//!              "hit_rate": h, "shed_rate": s, "daemon": {stats payload}}]}
+//! ```
+//!
+//! `hit_rate` is cache hits over *answered* (non-shed) requests;
+//! `shed_rate` is shed responses over all requests. The run fails
+//! (nonzero exit) when any level degenerates — `rps == 0` or
+//! `shed_rate == 1` — after writing the JSON, so CI can both gate on and
+//! inspect the artifact.
+//!
+//! By default the generator self-hosts: it binds `127.0.0.1:0`, runs
+//! [`serve_tcp`] in-process with its own service/cache configuration,
+//! and tears it down afterwards. `--addr HOST:PORT` targets an external
+//! daemon instead (its `--jobs`/`--queue`/cache settings then apply).
+
+use std::io::{BufRead as _, BufReader, Write as _};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs as _};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+use anyhow::{Context as _, Result};
+
+use super::net::{serve_tcp, wake_listener};
+use super::{EvalService, ResultCache};
+use crate::sweep::Campaign;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Load-generator configuration (built by the CLI from flags).
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Target an external daemon instead of self-hosting.
+    pub addr: Option<String>,
+    /// Concurrency levels (client counts), one measurement per level.
+    pub levels: Vec<usize>,
+    /// Requests per level, split across the level's clients.
+    pub requests: usize,
+    /// Mix seed: the request stream is a pure function of
+    /// `(seed, level, client)`.
+    pub seed: u64,
+    /// Self-hosted daemon: per-session workers (0 = pool-sized).
+    pub jobs: usize,
+    /// Self-hosted daemon: admission capacity (0 = no shedding).
+    pub queue: usize,
+    /// Self-hosted daemon: result cache (with any memory tier attached).
+    pub cache: Option<ResultCache>,
+    /// Where to write `BENCH_serve.json` (`None` = stdout only).
+    pub out: Option<PathBuf>,
+}
+
+/// Per-client measurement tally.
+#[derive(Clone, Debug, Default)]
+struct Tally {
+    latencies_ms: Vec<f64>,
+    ok: usize,
+    errors: usize,
+    shed: usize,
+    cache_hits: usize,
+}
+
+impl Tally {
+    fn absorb(&mut self, other: Tally) {
+        self.latencies_ms.extend(other.latencies_ms);
+        self.ok += other.ok;
+        self.errors += other.errors;
+        self.shed += other.shed;
+        self.cache_hits += other.cache_hits;
+    }
+}
+
+/// Exact percentile over a sorted sample (nearest-rank).
+fn percentile(sorted_ms: &[f64], q: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let rank = ((q * sorted_ms.len() as f64).ceil() as usize).clamp(1, sorted_ms.len());
+    sorted_ms[rank - 1]
+}
+
+/// One seeded request line from the mixed-class distribution.
+fn mix_request(rng: &mut Rng, points: &[String]) -> String {
+    match rng.below(100) {
+        // 35% registry experiments (analytic+fast: deterministic, cacheable).
+        0..=34 => {
+            let ids = ["table1", "fig3", "fig4", "fig5", "fig8"];
+            format!(
+                "{{\"kind\": \"experiment\", \"id\": \"{}\", \"analytic\": true, \
+                 \"fast\": true}}",
+                ids[rng.index(ids.len())]
+            )
+        }
+        // 30% sweep points from the paper's fig4 campaign.
+        35..=64 => format!(
+            "{{\"kind\": \"sweep-point\", \"config\": {}}}",
+            points[rng.index(points.len())]
+        ),
+        // 15% backend comparisons.
+        65..=79 => {
+            let workloads = ["matmul-n64", "cnn-alexnet"];
+            format!(
+                "{{\"kind\": \"compare\", \"workload\": \"{}\", \"backends\": \
+                 [\"pim:memristive\", \"pim:dram\", \"gpu:a6000:experimental\"]}}",
+                workloads[rng.index(workloads.len())]
+            )
+        }
+        // 5% bit-exact conv executions (heavily down-scaled: the class
+        // matters for the mix, not the layer size).
+        80..=84 => "{\"kind\": \"conv-exec\", \"layer\": \"alexnet:conv2\", \"scale\": 64, \
+                    \"set\": \"memristive\", \"fmt\": \"fixed8\"}"
+            .to_string(),
+        // 10% inventory, 5% system info (cheap control-plane traffic).
+        85..=94 => "{\"kind\": \"list\"}".to_string(),
+        _ => "{\"kind\": \"info\"}".to_string(),
+    }
+}
+
+/// One closed-loop client: `n` request/response round trips on one
+/// connection, classifying and timing each response.
+fn run_client(addr: SocketAddr, seed: u64, n: usize, points: &[String]) -> Result<Tally> {
+    let conn = TcpStream::connect(addr)
+        .with_context(|| format!("loadgen client connecting to {addr}"))?;
+    let mut writer = conn.try_clone().context("cloning client stream")?;
+    let mut reader = BufReader::new(conn);
+    let mut rng = Rng::new(seed);
+    let mut tally = Tally::default();
+    let mut line = String::new();
+    for _ in 0..n {
+        let req = mix_request(&mut rng, points);
+        let t0 = Instant::now();
+        writer
+            .write_all(req.as_bytes())
+            .and_then(|_| writer.write_all(b"\n"))
+            .context("writing request")?;
+        line.clear();
+        let read = reader.read_line(&mut line).context("reading response")?;
+        anyhow::ensure!(read > 0, "daemon closed the connection mid-run");
+        tally.latencies_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        let doc = Json::parse(&line)
+            .ok_or_else(|| anyhow::anyhow!("response is not JSON: {line}"))?;
+        if doc.get("kind").and_then(Json::as_str) == Some("shed") {
+            tally.shed += 1;
+        } else if doc
+            .get("meta")
+            .and_then(|m| m.get("ok"))
+            .and_then(Json::as_bool)
+            == Some(true)
+        {
+            tally.ok += 1;
+            if doc
+                .get("meta")
+                .and_then(|m| m.get("cache"))
+                .and_then(Json::as_str)
+                == Some("hit")
+            {
+                tally.cache_hits += 1;
+            }
+        } else {
+            tally.errors += 1;
+        }
+    }
+    Ok(tally)
+}
+
+/// Snapshot the daemon's own counters (`{"kind": "stats"}` over a fresh
+/// connection). Best-effort: `null` when the daemon does not answer.
+fn daemon_stats(addr: SocketAddr) -> Json {
+    let snapshot = || -> Result<Json> {
+        let conn = TcpStream::connect(addr)?;
+        let mut writer = conn.try_clone()?;
+        let mut reader = BufReader::new(conn);
+        writer.write_all(b"{\"kind\": \"stats\"}\n")?;
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let doc = Json::parse(&line).ok_or_else(|| anyhow::anyhow!("bad stats line"))?;
+        Ok(doc.get("payload").cloned().unwrap_or(Json::Null))
+    };
+    snapshot().unwrap_or(Json::Null)
+}
+
+/// Run one concurrency level against a live daemon.
+fn run_level(
+    cfg: &LoadgenConfig,
+    addr: SocketAddr,
+    level_idx: usize,
+    clients: usize,
+) -> Result<Json> {
+    let clients = clients.max(1);
+    let total = cfg.requests.max(clients);
+    let points: Vec<String> = Campaign::builtin("fig4")
+        .expect("builtin fig4 campaign exists")
+        .points()
+        .iter()
+        .map(|p| p.config_json().compact())
+        .collect();
+
+    let t0 = Instant::now();
+    let tallies: Result<Vec<Tally>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let share = total / clients + usize::from(c < total % clients);
+                // Decorrelate the per-client streams; splitmix64 seeding
+                // in `Rng::new` whitens the structured combination.
+                let seed = cfg
+                    .seed
+                    .wrapping_add((level_idx as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+                    .wrapping_add(c as u64 + 1);
+                let points = &points;
+                scope.spawn(move || run_client(addr, seed, share, points))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("loadgen client panicked"))
+            .collect()
+    });
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let mut tally = Tally::default();
+    for t in tallies? {
+        tally.absorb(t);
+    }
+    tally
+        .latencies_ms
+        .sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+
+    let answered = tally.ok + tally.errors;
+    let rps = total as f64 / (wall_ms / 1e3).max(1e-9);
+    let hit_rate = tally.cache_hits as f64 / answered.max(1) as f64;
+    let shed_rate = tally.shed as f64 / total.max(1) as f64;
+    let (p50, p95, p99) = (
+        percentile(&tally.latencies_ms, 0.50),
+        percentile(&tally.latencies_ms, 0.95),
+        percentile(&tally.latencies_ms, 0.99),
+    );
+    eprintln!(
+        "loadgen: {clients} client(s) × {total} request(s): {rps:.1} rps, \
+         p50 {p50:.2} ms, p95 {p95:.2} ms, p99 {p99:.2} ms, \
+         hit_rate {hit_rate:.2}, shed_rate {shed_rate:.2}"
+    );
+    Ok(Json::obj(vec![
+        ("clients", Json::i(clients as i64)),
+        ("requests", Json::i(total as i64)),
+        ("wall_ms", Json::n(wall_ms)),
+        ("rps", Json::n(rps)),
+        ("p50_ms", Json::n(p50)),
+        ("p95_ms", Json::n(p95)),
+        ("p99_ms", Json::n(p99)),
+        ("ok", Json::i(tally.ok as i64)),
+        ("errors", Json::i(tally.errors as i64)),
+        ("shed", Json::i(tally.shed as i64)),
+        ("cache_hits", Json::i(tally.cache_hits as i64)),
+        ("hit_rate", Json::n(hit_rate)),
+        ("shed_rate", Json::n(shed_rate)),
+        ("daemon", daemon_stats(addr)),
+    ]))
+}
+
+/// Drive every level against the daemon at `addr` and assemble the
+/// `BENCH_serve.json` document.
+fn drive(cfg: &LoadgenConfig, addr: SocketAddr) -> Result<Json> {
+    anyhow::ensure!(!cfg.levels.is_empty(), "loadgen needs at least one concurrency level");
+    anyhow::ensure!(cfg.requests > 0, "loadgen needs --requests >= 1");
+    let mut levels = Vec::new();
+    for (li, &clients) in cfg.levels.iter().enumerate() {
+        levels.push(run_level(cfg, addr, li, clients)?);
+    }
+    Ok(Json::obj(vec![
+        ("bench", Json::s("serve")),
+        ("schema", Json::i(1)),
+        ("seed", Json::i(cfg.seed as i64)),
+        ("requests_per_level", Json::i(cfg.requests as i64)),
+        ("levels", Json::arr(levels)),
+    ]))
+}
+
+/// Run the load generator: self-host a TCP daemon (or target
+/// `cfg.addr`), measure every level, write `cfg.out`, and fail on a
+/// degenerate result (rps 0 or 100% shed) — after writing, so the
+/// artifact is always inspectable.
+pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<Json> {
+    let doc = match &cfg.addr {
+        Some(spec) => {
+            let addr = spec
+                .to_socket_addrs()
+                .with_context(|| format!("resolving --addr {spec}"))?
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("--addr {spec} resolved to nothing"))?;
+            drive(cfg, addr)?
+        }
+        None => {
+            let listener = TcpListener::bind("127.0.0.1:0").context("binding loadgen daemon")?;
+            let addr = listener.local_addr()?;
+            eprintln!(
+                "loadgen: self-hosting daemon on {addr} (jobs {}, queue {}, cache {})",
+                cfg.jobs,
+                cfg.queue,
+                match &cfg.cache {
+                    Some(c) => format!("{}", c.dir().display()),
+                    None => "disabled".to_string(),
+                }
+            );
+            let service = EvalService::new().with_cache(cfg.cache.clone()).with_jobs(cfg.jobs);
+            let stop = AtomicBool::new(false);
+            let mut result: Result<Json> = Err(anyhow::anyhow!("loadgen did not run"));
+            std::thread::scope(|scope| {
+                let daemon =
+                    scope.spawn(|| serve_tcp(&service, listener, cfg.jobs, cfg.queue, &stop));
+                result = drive(cfg, addr);
+                stop.store(true, Ordering::SeqCst);
+                wake_listener(addr);
+                match daemon.join().expect("daemon thread panicked") {
+                    Ok(summary) => eprintln!(
+                        "loadgen: daemon served {} session(s), {} request(s)",
+                        summary.sessions, summary.totals.requests
+                    ),
+                    Err(e) => eprintln!("loadgen: daemon error: {e:#}"),
+                }
+            });
+            result?
+        }
+    };
+
+    if let Some(path) = &cfg.out {
+        std::fs::write(path, format!("{}\n", doc.pretty()))
+            .with_context(|| format!("writing {}", path.display()))?;
+        eprintln!("loadgen: wrote {}", path.display());
+    }
+
+    // Gate after writing: a degenerate level fails the run, but the
+    // artifact stays on disk for the post-mortem.
+    for level in doc.get("levels").and_then(Json::as_arr).unwrap_or(&[]) {
+        let rps = level.get("rps").and_then(Json::as_f64).unwrap_or(0.0);
+        let shed_rate = level.get("shed_rate").and_then(Json::as_f64).unwrap_or(0.0);
+        anyhow::ensure!(
+            rps > 0.0,
+            "degenerate level (rps == 0): {}",
+            level.compact()
+        );
+        anyhow::ensure!(
+            shed_rate < 1.0,
+            "degenerate level (everything shed): {}",
+            level.compact()
+        );
+    }
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let s = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0];
+        assert_eq!(percentile(&s, 0.5), 5.0);
+        assert_eq!(percentile(&s, 0.95), 10.0);
+        assert_eq!(percentile(&s, 1.0), 10.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn request_mix_is_deterministic_and_valid() {
+        let points: Vec<String> = Campaign::builtin("fig4")
+            .unwrap()
+            .points()
+            .iter()
+            .map(|p| p.config_json().compact())
+            .collect();
+        let gen = |seed: u64| -> Vec<String> {
+            let mut rng = Rng::new(seed);
+            (0..64).map(|_| mix_request(&mut rng, &points)).collect()
+        };
+        assert_eq!(gen(7), gen(7), "the mix must be a pure function of the seed");
+        assert_ne!(gen(7), gen(8));
+        // Every generated line is a parsable request of a known kind.
+        let mut kinds = std::collections::BTreeSet::new();
+        for line in gen(7) {
+            let doc = Json::parse(&line).expect("mix lines are JSON");
+            let req = crate::service::EvalRequest::from_json(&doc).expect("mix lines parse");
+            kinds.insert(req.kind().to_string());
+        }
+        assert!(kinds.contains("experiment") && kinds.contains("sweep-point"));
+    }
+
+    /// A tiny end-to-end run: self-hosted daemon, two levels, schema
+    /// checks on the written artifact.
+    #[test]
+    fn loadgen_end_to_end_writes_schema_compliant_bench() {
+        let dir = std::env::temp_dir().join(format!("convpim_loadgen_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let out = dir.join("BENCH_serve.json");
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = LoadgenConfig {
+            addr: None,
+            levels: vec![1, 2],
+            requests: 6,
+            seed: 1,
+            jobs: 2,
+            queue: 0,
+            cache: Some(ResultCache::new(dir.join("cache")).with_memory(64)),
+            out: Some(out.clone()),
+        };
+        let doc = run_loadgen(&cfg).unwrap();
+        assert_eq!(doc.get("bench").unwrap().as_str(), Some("serve"));
+        let levels = doc.get("levels").unwrap().as_arr().unwrap();
+        assert_eq!(levels.len(), 2);
+        for level in levels {
+            for key in [
+                "clients", "requests", "rps", "p50_ms", "p95_ms", "p99_ms", "hit_rate",
+                "shed_rate",
+            ] {
+                assert!(level.get(key).is_some(), "missing {key}: {}", level.compact());
+            }
+            let n = level.get("requests").unwrap().as_u64().unwrap();
+            let ok = level.get("ok").unwrap().as_u64().unwrap();
+            let errors = level.get("errors").unwrap().as_u64().unwrap();
+            let shed = level.get("shed").unwrap().as_u64().unwrap();
+            assert_eq!(ok + errors + shed, n, "every request is accounted for");
+            assert_eq!(errors, 0, "the healthy mix must not error: {}", level.compact());
+            assert!(level.get("rps").unwrap().as_f64().unwrap() > 0.0);
+            // The daemon snapshot rode along.
+            assert!(level.get("daemon").unwrap().get("accepted").is_some());
+        }
+        // The artifact on disk parses back to the same document.
+        let text = std::fs::read_to_string(&out).unwrap();
+        assert_eq!(Json::parse(&text).unwrap(), doc);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

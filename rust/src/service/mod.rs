@@ -23,8 +23,16 @@
 //!   worker-count policy; evaluation fans out on the process-wide thread
 //!   pool ([`crate::util::pool`]);
 //! * [`serve`](mod@serve) — the `convpim serve` JSONL daemon: one
-//!   request per stdin line, responses streamed in input order while
-//!   executing concurrently.
+//!   request per line, responses streamed in input order while
+//!   executing concurrently — plus the shared-state layer (admission
+//!   gate, stats, per-request `deadline_ms`) behind [`ServeShared`];
+//! * [`net`](mod@net) — the TCP transport (`serve --listen ADDR`):
+//!   N concurrent client sessions multiplexed onto one service, one
+//!   cache, one admission gate;
+//! * [`stats`](mod@stats) — daemon observability: atomic counters and
+//!   the fixed-bucket latency histogram behind `{"kind": "stats"}`;
+//! * [`loadgen`](mod@loadgen) — the deterministic closed-loop load
+//!   generator (`convpim loadgen`) that writes `BENCH_serve.json`.
 //!
 //! Every CLI subcommand is a thin adapter over this module: it builds an
 //! [`EvalRequest`], submits it, and prints [`EvalResponse::stdout`]
@@ -49,18 +57,24 @@
 //! ```
 
 pub mod cache;
+pub mod loadgen;
+pub mod net;
 pub mod request;
 pub mod response;
 pub mod serve;
+pub mod stats;
 
 use std::time::Instant;
 
 use anyhow::Result;
 
-pub use cache::ResultCache;
+pub use cache::{LruCache, LruCounters, MemSnapshot, MemTier, ResultCache};
+pub use loadgen::{run_loadgen, LoadgenConfig};
+pub use net::{serve_tcp, wake_listener, TcpSummary};
 pub use request::{CampaignRef, ConvExecSpec, EvalRequest, SetSel, REQUEST_SCHEMA};
 pub use response::{CacheStatus, EvalMeta, EvalResponse};
-pub use serve::{serve, ServeSummary};
+pub use serve::{run_session, serve, ServeShared, ServeSummary, DEFAULT_MAX_LINE_BYTES};
+pub use stats::{Histogram, ServeStats};
 
 use crate::backend::{self, Backend as _};
 use crate::coordinator::{run_experiment, Ctx, Section};

@@ -1,0 +1,202 @@
+//! TCP transport for the serve daemon: `convpim serve --listen ADDR`.
+//!
+//! A std-only listener (no async runtime, no socket crates): the accept
+//! loop runs on the caller's thread inside a [`std::thread::scope`]; each
+//! accepted connection gets one scoped session thread running the exact
+//! same session loop as the stdin daemon ([`run_session`]) over a
+//! `BufReader`/`BufWriter` pair on the stream. All sessions share one
+//! [`ServeShared`] — one [`EvalService`] (one warm two-tier cache), one
+//! stats registry, one admission gate — so N pipelining clients
+//! multiplex onto the same worker budget and observe each other through
+//! `{"kind": "stats"}`.
+//!
+//! ## Shutdown
+//!
+//! The daemon stops when `stop` is set (the CLI sets it at stdin EOF —
+//! `convpim serve --listen` still ends like the pipe daemon does, so
+//! scripted runs and tests tear it down by closing stdin). `accept` is
+//! blocking; whoever sets `stop` must also poke the listener with a
+//! throwaway connection ([`wake_listener`]) to unblock it. The accept
+//! loop then half-closes every registered session socket, which pops
+//! blocked session readers out of `read` — a slow-loris client that
+//! never finishes its line cannot hold the daemon open — and the scope
+//! joins every session before returning.
+//!
+//! ## Fault isolation
+//!
+//! A session that dies on transport errors (half-closed socket, reset)
+//! ends that session only; its summary is logged to stderr and the
+//! accept loop keeps serving. Session bodies are additionally wrapped in
+//! `catch_unwind` so a panicking session (a bug, not a protocol event)
+//! is contained and reported instead of tearing down the scope — the
+//! fault-injection suite (`tests/serve_faults.rs`) leans on all of this.
+
+use std::io::{BufReader, BufWriter};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use super::serve::{run_session, ServeShared, ServeSummary};
+use super::EvalService;
+
+/// What the whole TCP daemon did across every session.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TcpSummary {
+    /// Sessions accepted (including ones that ended in transport errors).
+    pub sessions: usize,
+    /// Sum of the per-session [`ServeSummary`]s that completed normally.
+    pub totals: ServeSummary,
+}
+
+/// Unblock a daemon whose accept loop is parked in `accept(2)`: connect
+/// and immediately drop. Call after setting the stop flag.
+pub fn wake_listener(addr: SocketAddr) {
+    let _ = TcpStream::connect(addr);
+}
+
+/// Run the TCP daemon on an already-bound listener until `stop` is set
+/// (and the listener is woken). `jobs` is the per-session worker count
+/// (0 = size to the global pool); `queue` the shared admission capacity
+/// (0 = no shedding). Returns the cross-session summary; individual
+/// session transport errors are logged, not fatal.
+pub fn serve_tcp(
+    service: &EvalService,
+    listener: TcpListener,
+    jobs: usize,
+    queue: usize,
+    stop: &AtomicBool,
+) -> Result<TcpSummary> {
+    let shared = ServeShared::new(service, queue);
+    // Write halves of every live session, so shutdown can pop blocked
+    // session readers out of `read`. Entries are never removed — a
+    // daemon's lifetime connection count is small and `shutdown` on an
+    // already-closed socket is a harmless error.
+    let conns: Mutex<Vec<TcpStream>> = Mutex::new(Vec::new());
+    let summary: Mutex<TcpSummary> = Mutex::new(TcpSummary::default());
+    let mut accept_err: Option<std::io::Error> = None;
+
+    std::thread::scope(|scope| {
+        loop {
+            let (stream, peer) = match listener.accept() {
+                Ok(pair) => pair,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::Interrupted | std::io::ErrorKind::ConnectionAborted
+                    ) =>
+                {
+                    continue
+                }
+                Err(e) => {
+                    if !stop.load(Ordering::SeqCst) {
+                        accept_err = Some(e);
+                    }
+                    break;
+                }
+            };
+            if stop.load(Ordering::SeqCst) {
+                // The wake-up connection (or a client racing shutdown).
+                drop(stream);
+                break;
+            }
+            let (Ok(write_half), Ok(closer)) = (stream.try_clone(), stream.try_clone()) else {
+                eprintln!("serve: {peer}: could not clone stream; dropping connection");
+                continue;
+            };
+            if let Ok(registry_half) = stream.try_clone() {
+                conns.lock().unwrap().push(registry_half);
+            }
+            summary.lock().unwrap().sessions += 1;
+            let shared = &shared;
+            let summary = &summary;
+            scope.spawn(move || {
+                let reader = BufReader::new(stream);
+                let writer = BufWriter::new(write_half);
+                let result = catch_unwind(AssertUnwindSafe(|| {
+                    run_session(shared, reader, writer, jobs, Some(stop))
+                }));
+                match result {
+                    Ok(Ok(s)) => {
+                        eprintln!(
+                            "serve: session {peer}: {} request(s) — {} ok, {} error(s), \
+                             {} shed, {} cache hit(s)",
+                            s.requests, s.ok, s.errors, s.shed, s.cache_hits
+                        );
+                        summary.lock().unwrap().totals.absorb(s);
+                    }
+                    Ok(Err(e)) => {
+                        eprintln!("serve: session {peer}: transport error: {e:#}");
+                    }
+                    Err(_) => {
+                        eprintln!(
+                            "serve: session {peer}: panicked (session isolated; daemon continues)"
+                        );
+                    }
+                }
+                // Send FIN now that the session is done: the registry
+                // above holds a dup of this socket for the daemon's
+                // lifetime, so without an explicit shutdown a client
+                // draining responses to EOF would wait forever.
+                let _ = closer.shutdown(Shutdown::Both);
+            });
+        }
+        // Stop: pop every session reader out of its blocking read so the
+        // scope can join. Already-dead sockets error harmlessly.
+        for conn in conns.lock().unwrap().iter() {
+            let _ = conn.shutdown(Shutdown::Both);
+        }
+    });
+
+    if let Some(e) = accept_err {
+        return Err(anyhow::Error::from(e).context("accepting serve connections"));
+    }
+    Ok(summary.into_inner().unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+    use std::io::{BufRead as _, Write as _};
+    use std::sync::atomic::AtomicBool;
+
+    /// In-process end-to-end: bind, serve on a thread, run two client
+    /// sessions, shut down via stop+wake, join cleanly.
+    #[test]
+    fn tcp_daemon_round_trip_and_clean_shutdown() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = AtomicBool::new(false);
+        let service = EvalService::new().with_cache(None);
+
+        std::thread::scope(|scope| {
+            let handle = scope.spawn(|| serve_tcp(&service, listener, 2, 0, &stop).unwrap());
+
+            for _ in 0..2 {
+                let mut conn = TcpStream::connect(addr).unwrap();
+                conn.write_all(b"{\"kind\": \"list\"}\n{\"kind\": \"stats\"}\n")
+                    .unwrap();
+                conn.shutdown(Shutdown::Write).unwrap();
+                let reader = BufReader::new(conn);
+                let docs: Vec<Json> = reader
+                    .lines()
+                    .map(|l| Json::parse(&l.unwrap()).unwrap())
+                    .collect();
+                assert_eq!(docs.len(), 2);
+                assert_eq!(docs[0].get("kind").unwrap().as_str(), Some("list"));
+                assert_eq!(docs[0].get("seq").unwrap().as_u64(), Some(0));
+                assert_eq!(docs[1].get("kind").unwrap().as_str(), Some("stats"));
+            }
+
+            stop.store(true, Ordering::SeqCst);
+            wake_listener(addr);
+            let summary = handle.join().unwrap();
+            assert_eq!(summary.sessions, 2);
+            assert_eq!(summary.totals.requests, 4);
+            assert_eq!(summary.totals.ok, 4);
+        });
+    }
+}

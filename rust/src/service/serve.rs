@@ -1,41 +1,71 @@
 //! `convpim serve` — a long-running JSONL evaluation daemon over the
 //! service layer.
 //!
-//! Protocol: one [`EvalRequest`] JSON document per stdin line; one JSON
-//! response per line on stdout, **in input order**, each the
+//! Protocol: one [`EvalRequest`] JSON document per input line; one JSON
+//! response per output line, **in input order**, each the
 //! [`EvalResponse::to_json`] envelope plus a `seq` field echoing the
-//! 0-based request index. Blank lines are ignored. A malformed line
-//! produces a structured error response (`meta.ok == false`) in its slot
-//! — the daemon never exits on bad input. EOF on stdin drains the
-//! in-flight work and exits 0.
+//! 0-based request index. Blank lines are ignored. A malformed or
+//! oversized line produces a structured error response (`meta.ok ==
+//! false`) in its slot — the daemon never exits on bad input. EOF on the
+//! input drains the in-flight work and ends the session.
+//!
+//! The same session loop runs two transports:
+//!
+//! * **stdin/stdout** ([`serve`]): the original single-session daemon,
+//!   byte-compatible with the pre-TCP protocol. Backpressure is
+//!   *blocking*: the reader waits when the bounded read-ahead queue is
+//!   full (a shell pipeline's natural flow control).
+//! * **TCP** ([`super::net::serve_tcp`]): N concurrent sessions share
+//!   one [`ServeShared`] — one service (one warm cache), one
+//!   [`ServeStats`], and one global admission gate. A TCP reader never
+//!   blocks on backpressure; past the admission capacity it **sheds**:
+//!   the request is answered immediately with a structured
+//!   `{ok: false, error: "shed", retry_after_ms}` response instead of
+//!   queueing unboundedly.
+//!
+//! Three wire extensions over the PR-4 protocol, all optional and
+//! backward-compatible (unknown request fields were already ignored):
+//!
+//! * `deadline_ms` on any request line: if the request waited longer
+//!   than its deadline before a worker picked it up, it is answered
+//!   with a structured error instead of being evaluated (admission
+//!   control, not mid-evaluation cancellation).
+//! * `{"kind": "stats"}`: answered inline by the session reader —
+//!   bypassing the admission gate, so an overloaded daemon stays
+//!   observable — with counters, queue/in-flight gauges, per-tier cache
+//!   counters and p50/p95/p99 latency from a fixed-bucket histogram
+//!   (see [`ServeStats`]).
+//! * shed responses (TCP mode only, above).
 //!
 //! Concurrency reuses the sweep engine's ordering discipline
 //! ([`crate::sweep::exec`]): requests execute concurrently on `jobs`
-//! workers, every request owns a slot, and the contiguous *prefix* of
-//! finished slots is flushed as it completes — so many pipelined clients
-//! share one warm cache and one pool while each still sees its answers
-//! in the order it asked. Responses are flushed per line, so a client
-//! that pipelines N requests starts reading answers while later ones are
-//! still executing.
+//! workers per session, every request owns a slot, and the contiguous
+//! *prefix* of finished slots is flushed as it completes — so many
+//! pipelined clients share one warm cache and one pool while each still
+//! sees its answers in the order it asked.
 //!
-//! If stdout closes (client went away), already-read requests are
-//! drained with cheap cancellation markers and nothing further is
-//! evaluated — a dead pipe must not keep the CPUs busy. The process
-//! itself still ends at stdin EOF: in a shell pipeline the consumer's
-//! death tears the whole pipe down (the producer gets SIGPIPE and
-//! closes our stdin), but a client that closes its read end while
-//! deliberately holding stdin open keeps an idle daemon around until it
-//! finishes.
+//! If the session output closes (client went away), already-read
+//! requests are drained with cheap cancellation markers and nothing
+//! further is evaluated — a dead pipe must not keep the CPUs busy.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::io::{BufRead, Write};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
+use std::time::Instant;
 
 use anyhow::Result;
 
-use super::{resolve_jobs, CacheStatus, EvalRequest, EvalResponse, EvalService};
+use super::stats::{gauge_dec, ServeStats};
+use super::{resolve_jobs, CacheStatus, EvalMeta, EvalRequest, EvalResponse, EvalService};
+use crate::coordinator::Section;
 use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// Default cap on one request line. A line past the cap is drained and
+/// answered with a structured error — an adversarial client cannot make
+/// the daemon buffer an unbounded "line".
+pub const DEFAULT_MAX_LINE_BYTES: usize = 1 << 20;
 
 /// What one serve session did (reported on stderr at exit).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -44,15 +74,200 @@ pub struct ServeSummary {
     pub requests: usize,
     /// Responses with `meta.ok == true`.
     pub ok: usize,
-    /// Error responses (evaluation failures and unparsable lines).
+    /// Error responses (evaluation failures, unparsable/oversized lines,
+    /// expired deadlines, cancellations).
     pub errors: usize,
+    /// Requests refused at admission with a shed response.
+    pub shed: usize,
     /// Responses served from the result cache.
     pub cache_hits: usize,
 }
 
-/// Reader/worker hand-off: a bounded queue of `(seq, line)` pairs.
+impl ServeSummary {
+    /// Fold another session's summary into this one (the TCP listener
+    /// aggregates across sessions).
+    pub fn absorb(&mut self, other: ServeSummary) {
+        self.requests += other.requests;
+        self.ok += other.ok;
+        self.errors += other.errors;
+        self.shed += other.shed;
+        self.cache_hits += other.cache_hits;
+    }
+}
+
+/// The bounded admission gate: at most `capacity` genuine evaluations in
+/// the system (queued + in flight) across all sessions. `try_admit` is a
+/// CAS loop, so two session readers racing for the last slot never
+/// over-admit.
+#[derive(Debug)]
+struct Admission {
+    capacity: usize,
+    in_system: AtomicUsize,
+}
+
+impl Admission {
+    fn try_admit(&self) -> bool {
+        let mut cur = self.in_system.load(Ordering::SeqCst);
+        loop {
+            if cur >= self.capacity {
+                return false;
+            }
+            match self.in_system.compare_exchange(
+                cur,
+                cur + 1,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => return true,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    fn release(&self) {
+        self.in_system.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Daemon-wide state shared by every session: the service (one warm
+/// cache), the stats registry, the admission gate and the line-size cap.
+#[derive(Debug)]
+pub struct ServeShared<'s> {
+    service: &'s EvalService,
+    stats: ServeStats,
+    admission: Option<Admission>,
+    max_line_bytes: usize,
+}
+
+impl<'s> ServeShared<'s> {
+    /// `queue` is the admission capacity: the maximum number of genuine
+    /// evaluations in the system before readers shed. `0` disables
+    /// shedding (stdin mode: blocking backpressure instead).
+    pub fn new(service: &'s EvalService, queue: usize) -> ServeShared<'s> {
+        ServeShared {
+            service,
+            stats: ServeStats::new(),
+            admission: if queue == 0 {
+                None
+            } else {
+                Some(Admission {
+                    capacity: queue,
+                    in_system: AtomicUsize::new(0),
+                })
+            },
+            max_line_bytes: DEFAULT_MAX_LINE_BYTES,
+        }
+    }
+
+    /// Override the per-line byte cap (tests use tiny caps).
+    pub fn with_max_line_bytes(mut self, max: usize) -> ServeShared<'s> {
+        self.max_line_bytes = max.max(1);
+        self
+    }
+
+    /// The shared statistics registry.
+    pub fn stats(&self) -> &ServeStats {
+        &self.stats
+    }
+
+    /// The underlying service.
+    pub fn service(&self) -> &EvalService {
+        self.service
+    }
+
+    /// Admission capacity, when shedding is enabled.
+    pub fn queue_capacity(&self) -> Option<usize> {
+        self.admission.as_ref().map(|a| a.capacity)
+    }
+
+    /// Build the `stats` response: the current counter snapshot as
+    /// payload, a small metric table as human output. Sampled when the
+    /// request is *read* (it bypasses the worker queue by design).
+    pub fn stats_response(&self) -> EvalResponse {
+        let payload = self.stats.to_json(self.service.cache());
+        let scalar = |key: &str| {
+            payload
+                .get(key)
+                .and_then(Json::as_u64)
+                .unwrap_or(0)
+                .to_string()
+        };
+        let mut table = Table::new(&["metric", "value"]);
+        for key in [
+            "accepted",
+            "ok",
+            "errors",
+            "shed",
+            "deadline_expired",
+            "in_flight",
+            "queue_depth",
+        ] {
+            table.row(vec![key.to_string(), scalar(key)]);
+        }
+        if let Some(lat) = payload.get("latency_ms") {
+            for q in ["p50", "p95", "p99"] {
+                let v = lat.get(q).and_then(Json::as_f64).unwrap_or(0.0);
+                table.row(vec![format!("latency {q} (ms)"), format!("{v:.3}")]);
+            }
+        }
+        let stdout = format!("{}\n", table.text());
+        EvalResponse {
+            kind: "stats".into(),
+            id: "stats".into(),
+            title: "serve daemon statistics".into(),
+            stdout,
+            sections: vec![Section {
+                caption: String::new(),
+                table,
+            }],
+            notes: vec![
+                "counters are daemon-wide and sampled when the stats request is read"
+                    .to_string(),
+            ],
+            payload,
+            meta: EvalMeta {
+                ok: true,
+                error: None,
+                cache: CacheStatus::Uncacheable,
+                hits: 0,
+                computed: 0,
+                elapsed_ms: 0.0,
+            },
+        }
+    }
+
+    /// Estimate how long a shed client should wait before retrying:
+    /// roughly the backlog drained at one p50 per worker, clamped to
+    /// [1 ms, 30 s]; 50 ms before any latency samples exist.
+    fn retry_after_ms(&self, jobs: usize) -> f64 {
+        let backlog = (self.stats.queued.load(Ordering::Relaxed)
+            + self.stats.in_flight.load(Ordering::Relaxed)) as f64;
+        let p50 = self.stats.latency.quantile(0.5);
+        let est = if p50 > 0.0 {
+            p50 * (backlog / jobs.max(1) as f64).max(1.0)
+        } else {
+            50.0
+        };
+        est.clamp(1.0, 30_000.0)
+    }
+}
+
+/// One accepted request travelling from the session reader to a worker.
+struct Item {
+    seq: usize,
+    /// The parsed request, or the structured error text to answer with.
+    work: Result<EvalRequest, String>,
+    /// When the line was read (deadline + latency reference point).
+    arrival: Instant,
+    /// Optional `deadline_ms` wire field.
+    deadline_ms: Option<f64>,
+    /// Holds an admission slot that must be released on completion.
+    admitted: bool,
+}
+
+/// Reader/worker hand-off: a queue of accepted items.
 struct Queue {
-    pending: VecDeque<(usize, String)>,
+    pending: VecDeque<Item>,
     /// Reader reached EOF (or aborted): workers drain and exit.
     closed: bool,
 }
@@ -87,36 +302,165 @@ impl<W: Write> Emit<W> {
     }
 }
 
-/// Evaluate one request line (or explain why it cannot be evaluated).
-fn process(service: &EvalService, line: &str, canceled: bool) -> EvalResponse {
-    if canceled {
-        return EvalResponse::error("error", "", "canceled: output closed".into());
+/// Fill a response slot: attach `seq` (and any top-level extras, e.g.
+/// the shed schema) and flush the contiguous prefix.
+fn emit_response<W: Write>(
+    emit: &Mutex<Emit<W>>,
+    stop: &AtomicBool,
+    seq: usize,
+    resp: &EvalResponse,
+    extras: &[(&str, Json)],
+) {
+    let mut doc = resp.to_json();
+    if let Json::Obj(m) = &mut doc {
+        m.insert("seq".into(), Json::i(seq as i64));
+        for (k, v) in extras {
+            m.insert((*k).to_string(), v.clone());
+        }
     }
-    let Some(doc) = Json::parse(line) else {
-        return EvalResponse::error("error", "", "request line is not valid JSON".into());
-    };
-    match EvalRequest::from_json(&doc) {
-        Ok(req) => service.submit(&req),
-        Err(e) => EvalResponse::error("error", "", format!("{e:#}")),
+    let mut e = emit.lock().unwrap();
+    e.done.insert(seq, doc);
+    e.flush_prefix(stop);
+}
+
+/// One bounded line read. `Oversized` means the line exceeded `max` and
+/// was drained through the next newline (the byte count is what was
+/// dropped).
+enum LineRead {
+    Eof,
+    Line(String),
+    Oversized(usize),
+}
+
+/// Read one `\n`-terminated line of at most `max` bytes without ever
+/// buffering more than `max` + one BufRead chunk. Strips a trailing
+/// `\r`; a final unterminated line is still a line (matching
+/// `BufRead::lines`). Non-UTF-8 bytes are replaced lossily — the result
+/// then fails JSON parsing and gets the standard structured error.
+fn read_request_line<R: BufRead>(input: &mut R, max: usize) -> std::io::Result<LineRead> {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        // (bytes to consume, line terminated?, cap overflowed?)
+        let (consume_n, terminated, overflow) = {
+            let chunk = input.fill_buf()?;
+            if chunk.is_empty() {
+                if buf.is_empty() {
+                    return Ok(LineRead::Eof);
+                }
+                (0usize, true, false)
+            } else {
+                match chunk.iter().position(|&b| b == b'\n') {
+                    Some(pos) => {
+                        if buf.len() + pos > max {
+                            (pos + 1, true, true)
+                        } else {
+                            buf.extend_from_slice(&chunk[..pos]);
+                            (pos + 1, true, false)
+                        }
+                    }
+                    None => {
+                        if buf.len() + chunk.len() > max {
+                            (chunk.len(), false, true)
+                        } else {
+                            buf.extend_from_slice(chunk);
+                            (chunk.len(), false, false)
+                        }
+                    }
+                }
+            }
+        };
+        input.consume(consume_n);
+        if overflow {
+            let mut dropped = buf.len() + consume_n;
+            if terminated {
+                return Ok(LineRead::Oversized(dropped));
+            }
+            // Drain the oversized line to its newline (or EOF) without
+            // buffering it.
+            loop {
+                let (n, done) = {
+                    let chunk = input.fill_buf()?;
+                    if chunk.is_empty() {
+                        (0usize, true)
+                    } else {
+                        match chunk.iter().position(|&b| b == b'\n') {
+                            Some(pos) => (pos + 1, true),
+                            None => (chunk.len(), false),
+                        }
+                    }
+                };
+                dropped += n;
+                input.consume(n);
+                if done {
+                    return Ok(LineRead::Oversized(dropped));
+                }
+            }
+        }
+        if terminated {
+            if buf.last() == Some(&b'\r') {
+                buf.pop();
+            }
+            return Ok(LineRead::Line(String::from_utf8_lossy(&buf).into_owned()));
+        }
     }
 }
 
-/// Run the daemon loop: read requests from `input`, answer on `output`,
-/// executing up to `jobs` requests concurrently (0 = size to the global
-/// pool). Returns when `input` reaches EOF and all accepted requests are
-/// answered. Only transport-level *read* failures return `Err`;
-/// evaluation failures and unparsable lines are per-request error
-/// responses.
-pub fn serve<R: BufRead, W: Write + Send>(
-    service: &EvalService,
-    input: R,
+/// How a worker disposed of an item (drives the stats subtype counters).
+enum Disp {
+    /// Genuinely answered (evaluated, or a cheap structured error for a
+    /// malformed line) — counts toward the latency histogram.
+    Answered,
+    /// `deadline_ms` expired before a worker picked the request up.
+    Deadline,
+}
+
+/// Answer one item on a worker.
+fn answer(shared: &ServeShared<'_>, item: &Item) -> (EvalResponse, Disp) {
+    if let Some(d) = item.deadline_ms {
+        let waited_ms = item.arrival.elapsed().as_secs_f64() * 1e3;
+        if waited_ms >= d {
+            return (
+                EvalResponse::error(
+                    "error",
+                    "",
+                    format!(
+                        "deadline_ms {d} expired before evaluation began \
+                         ({waited_ms:.1} ms since arrival)"
+                    ),
+                ),
+                Disp::Deadline,
+            );
+        }
+    }
+    match &item.work {
+        Err(msg) => (EvalResponse::error("error", "", msg.clone()), Disp::Answered),
+        Ok(req) => (shared.service.submit(req), Disp::Answered),
+    }
+}
+
+/// Run one session: read requests from `input`, answer on `output`, in
+/// input order, executing up to `jobs` requests concurrently (0 = size
+/// to the global pool). Returns when `input` reaches EOF — or
+/// `external_stop` is set and the current read completes — and all
+/// accepted requests are answered. Only transport-level *read* failures
+/// return `Err`; evaluation failures and unparsable lines are
+/// per-request error responses.
+pub fn run_session<R: BufRead, W: Write + Send>(
+    shared: &ServeShared<'_>,
+    mut input: R,
     output: W,
     jobs: usize,
+    external_stop: Option<&AtomicBool>,
 ) -> Result<ServeSummary> {
     let jobs = resolve_jobs(jobs, None);
-    // Bounded read-ahead: enough to keep every worker fed and a warm
-    // backlog, without slurping an unbounded request stream into memory.
+    // Blocking-backpressure bound (stdin mode, no admission gate):
+    // enough read-ahead to keep every worker fed and a warm backlog,
+    // without slurping an unbounded request stream into memory. With an
+    // admission gate the gate itself bounds the backlog.
     let capacity = jobs * 32;
+
+    shared.stats.sessions_total.fetch_add(1, Ordering::Relaxed);
+    shared.stats.sessions_active.fetch_add(1, Ordering::Relaxed);
 
     let queue = Mutex::new(Queue {
         pending: VecDeque::new(),
@@ -130,7 +474,8 @@ pub fn serve<R: BufRead, W: Write + Send>(
         dead: false,
     });
     let stop = AtomicBool::new(false);
-    let (n_ok, n_err, n_hit) = (
+    let (n_ok, n_err, n_hit, n_shed) = (
+        AtomicUsize::new(0),
         AtomicUsize::new(0),
         AtomicUsize::new(0),
         AtomicUsize::new(0),
@@ -157,33 +502,82 @@ pub fn serve<R: BufRead, W: Write + Send>(
                         q = turn.wait(q).unwrap();
                     }
                 };
-                let Some((seq, line)) = item else { return };
-                let resp = process(service, &line, stop.load(Ordering::SeqCst));
+                let Some(item) = item else { return };
+                gauge_dec(&shared.stats.queued);
+                let canceled = stop.load(Ordering::SeqCst);
+                let (resp, disp) = if canceled {
+                    (
+                        EvalResponse::error("error", "", "canceled: output closed".into()),
+                        None,
+                    )
+                } else {
+                    shared.stats.in_flight.fetch_add(1, Ordering::Relaxed);
+                    let out = answer(shared, &item);
+                    gauge_dec(&shared.stats.in_flight);
+                    (out.0, Some(out.1))
+                };
+                if item.admitted {
+                    if let Some(adm) = &shared.admission {
+                        adm.release();
+                    }
+                }
                 if resp.meta.ok {
                     n_ok.fetch_add(1, Ordering::Relaxed);
+                    shared.stats.ok.fetch_add(1, Ordering::Relaxed);
                 } else {
                     n_err.fetch_add(1, Ordering::Relaxed);
+                    shared.stats.errors.fetch_add(1, Ordering::Relaxed);
                 }
-                if resp.meta.cache == CacheStatus::Hit {
-                    n_hit.fetch_add(1, Ordering::Relaxed);
+                match disp {
+                    Some(Disp::Answered) => {
+                        shared
+                            .stats
+                            .latency
+                            .record(item.arrival.elapsed().as_secs_f64() * 1e3);
+                        if resp.meta.cache == CacheStatus::Hit {
+                            n_hit.fetch_add(1, Ordering::Relaxed);
+                            shared.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    Some(Disp::Deadline) => {
+                        shared.stats.deadline_expired.fetch_add(1, Ordering::Relaxed);
+                    }
+                    None => {
+                        shared.stats.canceled.fetch_add(1, Ordering::Relaxed);
+                    }
                 }
-                let mut doc = resp.to_json();
-                if let Json::Obj(m) = &mut doc {
-                    m.insert("seq".into(), Json::i(seq as i64));
-                }
-                let mut e = emit.lock().unwrap();
-                e.done.insert(seq, doc);
-                e.flush_prefix(&stop);
+                emit_response(&emit, &stop, item.seq, &resp, &[]);
             });
         }
 
         // The reader runs on the caller's thread inside the scope.
-        for line in input.lines() {
+        loop {
             if stop.load(Ordering::SeqCst) {
                 break;
             }
-            let line = match line {
-                Ok(line) => line,
+            if external_stop.map(|s| s.load(Ordering::SeqCst)).unwrap_or(false) {
+                break;
+            }
+            let line = match read_request_line(&mut input, shared.max_line_bytes) {
+                Ok(LineRead::Eof) => break,
+                Ok(LineRead::Oversized(dropped)) => {
+                    let seq = requests;
+                    requests += 1;
+                    shared.stats.accepted.fetch_add(1, Ordering::Relaxed);
+                    n_err.fetch_add(1, Ordering::Relaxed);
+                    shared.stats.errors.fetch_add(1, Ordering::Relaxed);
+                    let resp = EvalResponse::error(
+                        "error",
+                        "",
+                        format!(
+                            "request line exceeds the {}-byte cap ({dropped} bytes dropped)",
+                            shared.max_line_bytes
+                        ),
+                    );
+                    emit_response(&emit, &stop, seq, &resp, &[]);
+                    continue;
+                }
+                Ok(LineRead::Line(l)) => l,
                 Err(e) => {
                     read_err = Some(e);
                     break;
@@ -192,18 +586,91 @@ pub fn serve<R: BufRead, W: Write + Send>(
             if line.trim().is_empty() {
                 continue;
             }
-            let mut q = queue.lock().unwrap();
-            while q.pending.len() >= capacity && !stop.load(Ordering::SeqCst) {
-                q = turn.wait(q).unwrap();
-            }
-            q.pending.push_back((requests, line));
+            let seq = requests;
             requests += 1;
+            shared.stats.accepted.fetch_add(1, Ordering::Relaxed);
+            let arrival = Instant::now();
+
+            let parsed = Json::parse(&line);
+
+            // `stats` is answered inline by the reader: it bypasses the
+            // admission gate and the worker queue, so an overloaded
+            // daemon stays observable.
+            if let Some(doc) = &parsed {
+                if doc.get("kind").and_then(Json::as_str) == Some("stats") {
+                    let resp = shared.stats_response();
+                    n_ok.fetch_add(1, Ordering::Relaxed);
+                    shared.stats.ok.fetch_add(1, Ordering::Relaxed);
+                    emit_response(&emit, &stop, seq, &resp, &[]);
+                    continue;
+                }
+            }
+
+            let work: Result<EvalRequest, String> = match &parsed {
+                None => Err("request line is not valid JSON".into()),
+                Some(doc) => EvalRequest::from_json(doc).map_err(|e| format!("{e:#}")),
+            };
+            let deadline: Result<Option<f64>, String> =
+                match parsed.as_ref().and_then(|d| d.get("deadline_ms")) {
+                    None | Some(Json::Null) => Ok(None),
+                    Some(Json::Num(x)) if *x >= 0.0 => Ok(Some(*x)),
+                    Some(_) => Err("deadline_ms must be a non-negative number".into()),
+                };
+            let (work, deadline_ms) = match (work, deadline) {
+                (Ok(req), Ok(d)) => (Ok(req), d),
+                (Err(e), _) => (Err(e), None),
+                (Ok(_), Err(e)) => (Err(e), None),
+            };
+
+            // Admission: only genuine evaluations contend for the gate
+            // (structured errors are cheap and always answered).
+            let admitted = match (&work, &shared.admission) {
+                (Ok(_), Some(adm)) => {
+                    if !adm.try_admit() {
+                        n_shed.fetch_add(1, Ordering::Relaxed);
+                        shared.stats.shed.fetch_add(1, Ordering::Relaxed);
+                        let retry = shared.retry_after_ms(jobs);
+                        let resp = EvalResponse::error("shed", "", "shed".into());
+                        emit_response(
+                            &emit,
+                            &stop,
+                            seq,
+                            &resp,
+                            &[
+                                ("ok", Json::Bool(false)),
+                                ("error", Json::s("shed")),
+                                ("retry_after_ms", Json::n(retry)),
+                            ],
+                        );
+                        continue;
+                    }
+                    true
+                }
+                _ => false,
+            };
+
+            let mut q = queue.lock().unwrap();
+            if shared.admission.is_none() {
+                while q.pending.len() >= capacity && !stop.load(Ordering::SeqCst) {
+                    q = turn.wait(q).unwrap();
+                }
+            }
+            shared.stats.queued.fetch_add(1, Ordering::Relaxed);
+            q.pending.push_back(Item {
+                seq,
+                work,
+                arrival,
+                deadline_ms,
+                admitted,
+            });
             turn.notify_all();
         }
         let mut q = queue.lock().unwrap();
         q.closed = true;
         turn.notify_all();
     });
+
+    gauge_dec(&shared.stats.sessions_active);
 
     if let Some(e) = read_err {
         return Err(anyhow::Error::from(e).context("reading serve requests"));
@@ -217,8 +684,22 @@ pub fn serve<R: BufRead, W: Write + Send>(
         requests,
         ok: n_ok.load(Ordering::Relaxed),
         errors: n_err.load(Ordering::Relaxed),
+        shed: n_shed.load(Ordering::Relaxed),
         cache_hits: n_hit.load(Ordering::Relaxed),
     })
+}
+
+/// Run the single-session stdin/stdout daemon loop (the PR-4 surface,
+/// byte-compatible): no admission gate — backpressure blocks the reader
+/// — and one private stats registry. See [`run_session`].
+pub fn serve<R: BufRead, W: Write + Send>(
+    service: &EvalService,
+    input: R,
+    output: W,
+    jobs: usize,
+) -> Result<ServeSummary> {
+    let shared = ServeShared::new(service, 0);
+    run_session(&shared, input, output, jobs, None)
 }
 
 #[cfg(test)]
@@ -235,12 +716,27 @@ mod tests {
     fn run_lines(service: &EvalService, lines: &str, jobs: usize) -> (Vec<Json>, ServeSummary) {
         let mut out: Vec<u8> = Vec::new();
         let summary = serve(service, Cursor::new(lines.as_bytes()), &mut out, jobs).unwrap();
-        let text = String::from_utf8(out).unwrap();
-        let docs = text
+        let docs = parse_docs(&out);
+        (docs, summary)
+    }
+
+    fn parse_docs(out: &[u8]) -> Vec<Json> {
+        String::from_utf8(out.to_vec())
+            .unwrap()
             .lines()
             .map(|l| Json::parse(l).unwrap_or_else(|| panic!("bad response line: {l}")))
-            .collect();
-        (docs, summary)
+            .collect()
+    }
+
+    fn run_session_lines(
+        shared: &ServeShared<'_>,
+        lines: &str,
+        jobs: usize,
+    ) -> (Vec<Json>, ServeSummary) {
+        let mut out: Vec<u8> = Vec::new();
+        let summary =
+            run_session(shared, Cursor::new(lines.as_bytes()), &mut out, jobs, None).unwrap();
+        (parse_docs(&out), summary)
     }
 
     #[test]
@@ -328,5 +824,112 @@ mod tests {
         let (docs, summary) = run_lines(&service, "", 3);
         assert!(docs.is_empty());
         assert_eq!(summary, ServeSummary::default());
+    }
+
+    #[test]
+    fn stats_kind_is_answered_inline_with_the_snapshot() {
+        let service = service_with(None);
+        let lines = "\
+            {\"kind\": \"list\"}\n\
+            {\"kind\": \"stats\"}\n";
+        let (docs, summary) = run_lines(&service, lines, 1);
+        assert_eq!(docs.len(), 2);
+        assert_eq!(summary.ok, 2);
+        let stats = &docs[1];
+        assert_eq!(stats.get("kind").unwrap().as_str(), Some("stats"));
+        assert_eq!(stats.get("seq").unwrap().as_u64(), Some(1));
+        let payload = stats.get("payload").unwrap();
+        // Sampled at read time: both lines were accepted by then.
+        assert_eq!(payload.get("accepted").unwrap().as_u64(), Some(2));
+        assert_eq!(payload.get("cache"), Some(&Json::Null));
+        let lat = payload.get("latency_ms").unwrap();
+        assert!(lat.get("p50").is_some() && lat.get("p99").is_some());
+        assert!(stats
+            .get("stdout")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("accepted"));
+    }
+
+    #[test]
+    fn expired_deadline_is_a_structured_error_not_an_evaluation() {
+        let service = service_with(None);
+        // deadline_ms 0 has always already expired by pickup time.
+        let lines = "{\"kind\": \"list\", \"deadline_ms\": 0}\n{\"kind\": \"list\"}\n";
+        let (docs, summary) = run_lines(&service, lines, 1);
+        assert_eq!(docs.len(), 2);
+        assert_eq!(summary.ok, 1);
+        assert_eq!(summary.errors, 1);
+        let err = docs[0].get("meta").unwrap().get("error").unwrap().as_str().unwrap();
+        assert!(err.contains("deadline_ms"), "got: {err}");
+        assert!(docs[1].get("meta").unwrap().get("ok").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn malformed_deadline_is_a_structured_error() {
+        let service = service_with(None);
+        let lines = "{\"kind\": \"list\", \"deadline_ms\": \"soon\"}\n";
+        let (docs, summary) = run_lines(&service, lines, 1);
+        assert_eq!(summary.errors, 1);
+        let err = docs[0].get("meta").unwrap().get("error").unwrap().as_str().unwrap();
+        assert!(err.contains("non-negative number"), "got: {err}");
+    }
+
+    #[test]
+    fn oversized_line_is_drained_and_answered_with_an_error() {
+        let service = service_with(None);
+        let shared = ServeShared::new(&service, 0).with_max_line_bytes(64);
+        let big = format!("{{\"kind\": \"list\", \"pad\": \"{}\"}}", "x".repeat(256));
+        let lines = format!("{big}\n{{\"kind\": \"list\"}}\n");
+        let (docs, summary) = run_session_lines(&shared, &lines, 1);
+        assert_eq!(docs.len(), 2);
+        assert_eq!(summary.errors, 1);
+        assert_eq!(summary.ok, 1);
+        let err = docs[0].get("meta").unwrap().get("error").unwrap().as_str().unwrap();
+        assert!(err.contains("byte cap"), "got: {err}");
+        // The healthy request after the monster line still works.
+        assert_eq!(docs[1].get("kind").unwrap().as_str(), Some("list"));
+        assert!(docs[1].get("meta").unwrap().get("ok").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn admission_overflow_sheds_with_the_structured_schema() {
+        let service = service_with(None);
+        // Capacity 1: the slow validate occupies the only slot for its
+        // whole (long) execution, so every later line — read within
+        // microseconds — must shed deterministically.
+        let shared = ServeShared::new(&service, 1);
+        let mut lines = String::from("{\"kind\": \"validate\", \"rows\": 64, \"seed\": 7}\n");
+        let flood = 12;
+        for _ in 0..flood {
+            lines.push_str("{\"kind\": \"list\"}\n");
+        }
+        let (docs, summary) = run_session_lines(&shared, &lines, 1);
+        assert_eq!(docs.len(), 1 + flood);
+        assert_eq!(summary.shed, flood, "every flooded request must shed");
+        assert_eq!(summary.ok, 1, "the admitted validate still succeeds");
+        for doc in &docs[1..] {
+            assert_eq!(doc.get("kind").unwrap().as_str(), Some("shed"));
+            assert_eq!(doc.get("ok").unwrap().as_bool(), Some(false));
+            assert_eq!(doc.get("error").unwrap().as_str(), Some("shed"));
+            let retry = doc.get("retry_after_ms").unwrap().as_f64().unwrap();
+            assert!(retry >= 1.0, "retry_after_ms must be positive, got {retry}");
+            assert!(!doc.get("meta").unwrap().get("ok").unwrap().as_bool().unwrap());
+        }
+        // Shed responses never contend for workers: stats agree.
+        assert_eq!(
+            shared.stats().shed.load(std::sync::atomic::Ordering::Relaxed),
+            flood as u64
+        );
+    }
+
+    #[test]
+    fn crlf_and_unterminated_final_lines_parse() {
+        let service = service_with(None);
+        let lines = "{\"kind\": \"list\"}\r\n{\"kind\": \"list\"}"; // no trailing \n
+        let (docs, summary) = run_lines(&service, lines, 1);
+        assert_eq!(docs.len(), 2);
+        assert_eq!(summary.ok, 2);
     }
 }

@@ -1,0 +1,318 @@
+//! Serve-daemon observability: lock-free counters, gauges and a
+//! fixed-bucket latency histogram behind the `stats` request kind.
+//!
+//! Everything here is plain `std::sync::atomic` — the daemon updates
+//! counters from N session readers and M pool workers concurrently, and
+//! a `{"kind": "stats"}` request snapshots them without stopping the
+//! world. The snapshot is therefore *approximate across fields* (each
+//! field is individually exact, but the set is not read under one lock);
+//! that is the standard contract for production metrics endpoints and is
+//! documented on the wire schema (docs/EXPERIMENTS.md SERVE).
+//!
+//! Latency quantiles come from a **fixed-bucket** histogram rather than a
+//! reservoir: 26 log-spaced buckets (upper bounds 0.25 ms, 0.5 ms, …,
+//! doubling per bucket, last bucket ≈ 2.3 h acts as overflow). Recording
+//! is one relaxed `fetch_add`; a quantile is the upper bound of the
+//! bucket holding the requested rank, so reported p50/p95/p99 are
+//! conservative (never under-report) and bounded by the bucket
+//! resolution. The same histogram feeds the shed path's
+//! `retry_after_ms` estimate.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Json;
+
+use super::cache::ResultCache;
+
+/// Number of latency buckets (fixed at construction; the wire schema
+/// exposes the bounds, so consumers never hard-code this).
+pub const LATENCY_BUCKETS: usize = 26;
+
+/// A log-spaced fixed-bucket histogram over milliseconds.
+///
+/// Bucket `i` covers `(bounds[i-1], bounds[i]]` with
+/// `bounds[i] = 0.25 * 2^i` ms; the last bucket absorbs overflow.
+#[derive(Debug)]
+pub struct Histogram {
+    bounds_ms: Vec<f64>,
+    counts: Vec<AtomicU64>,
+}
+
+impl Histogram {
+    /// The daemon's latency histogram (26 buckets, 0.25 ms … ≈2.3 h).
+    pub fn latency() -> Histogram {
+        let bounds_ms: Vec<f64> = (0..LATENCY_BUCKETS)
+            .map(|i| 0.25 * (1u64 << i) as f64)
+            .collect();
+        let counts = (0..LATENCY_BUCKETS).map(|_| AtomicU64::new(0)).collect();
+        Histogram { bounds_ms, counts }
+    }
+
+    /// Record one observation (milliseconds). Negative and NaN values
+    /// land in the first bucket — they only arise from clock weirdness
+    /// and must not panic a worker.
+    pub fn record(&self, ms: f64) {
+        let i = self
+            .bounds_ms
+            .iter()
+            .position(|&b| ms <= b)
+            .unwrap_or(self.bounds_ms.len() - 1);
+        self.counts[i].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total observations recorded.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// The `q`-quantile (`0 < q <= 1`) as the upper bound of the bucket
+    /// holding that rank; `0.0` when empty. Conservative by
+    /// construction: the true quantile is never above the returned value
+    /// by more than one bucket width.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let snapshot: Vec<u64> = self
+            .counts
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect();
+        let total: u64 = snapshot.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, &c) in snapshot.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return self.bounds_ms[i];
+            }
+        }
+        *self.bounds_ms.last().unwrap()
+    }
+
+    /// Wire form: `{bounds_ms: [...], counts: [...]}` (parallel arrays).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "bounds_ms",
+                Json::arr(self.bounds_ms.iter().map(|&b| Json::n(b)).collect()),
+            ),
+            (
+                "counts",
+                Json::arr(
+                    self.counts
+                        .iter()
+                        .map(|c| Json::i(c.load(Ordering::Relaxed) as i64))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Shared daemon-wide counters and gauges. One instance per daemon
+/// (stdin session or TCP listener), updated by every session and
+/// snapshotted by the `stats` request kind.
+#[derive(Debug)]
+pub struct ServeStats {
+    /// Request lines accepted (blank lines excluded; includes lines that
+    /// become error/shed responses — every accepted line owns a `seq`).
+    pub accepted: AtomicU64,
+    /// Responses with `meta.ok == true` (includes `stats` responses).
+    pub ok: AtomicU64,
+    /// Error responses: evaluation failures, unparsable lines, expired
+    /// deadlines, oversized lines, cancellations.
+    pub errors: AtomicU64,
+    /// Requests refused at admission (subset of neither `ok` nor
+    /// `errors`; a shed response is its own disposition).
+    pub shed: AtomicU64,
+    /// Requests whose `deadline_ms` expired before evaluation began
+    /// (subset of `errors`).
+    pub deadline_expired: AtomicU64,
+    /// Requests answered with a cancellation marker because the session
+    /// output died (subset of `errors`).
+    pub canceled: AtomicU64,
+    /// Responses served from the result cache (any tier).
+    pub cache_hits: AtomicU64,
+    /// Gauge: admitted requests waiting for a worker.
+    pub queued: AtomicU64,
+    /// Gauge: requests currently evaluating on a worker.
+    pub in_flight: AtomicU64,
+    /// Gauge: sessions currently connected.
+    pub sessions_active: AtomicU64,
+    /// Sessions ever started.
+    pub sessions_total: AtomicU64,
+    /// Evaluation latency (line arrival → response ready), milliseconds.
+    /// Shed / deadline-expired / canceled requests are not recorded —
+    /// the histogram measures served work.
+    pub latency: Histogram,
+}
+
+impl ServeStats {
+    pub fn new() -> ServeStats {
+        ServeStats {
+            accepted: AtomicU64::new(0),
+            ok: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            deadline_expired: AtomicU64::new(0),
+            canceled: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            queued: AtomicU64::new(0),
+            in_flight: AtomicU64::new(0),
+            sessions_active: AtomicU64::new(0),
+            sessions_total: AtomicU64::new(0),
+            latency: Histogram::latency(),
+        }
+    }
+
+    /// Snapshot as the `stats` response payload. `cache` is the service's
+    /// cache handle (for per-tier counters); `None` renders `cache: null`.
+    pub fn to_json(&self, cache: Option<&ResultCache>) -> Json {
+        let g = |a: &AtomicU64| Json::i(a.load(Ordering::Relaxed) as i64);
+        let responded = self.ok.load(Ordering::Relaxed)
+            + self.errors.load(Ordering::Relaxed)
+            + self.shed.load(Ordering::Relaxed);
+        let cache_json = match cache {
+            None => Json::Null,
+            Some(c) => Json::obj(vec![
+                ("response_hits", g(&self.cache_hits)),
+                (
+                    "mem",
+                    c.memory()
+                        .map(|m| m.snapshot().to_json())
+                        .unwrap_or(Json::Null),
+                ),
+            ]),
+        };
+        Json::obj(vec![
+            ("schema", Json::i(1)),
+            ("accepted", g(&self.accepted)),
+            ("responded", Json::i(responded as i64)),
+            ("ok", g(&self.ok)),
+            ("errors", g(&self.errors)),
+            ("shed", g(&self.shed)),
+            ("deadline_expired", g(&self.deadline_expired)),
+            ("canceled", g(&self.canceled)),
+            ("in_flight", g(&self.in_flight)),
+            ("queue_depth", g(&self.queued)),
+            (
+                "sessions",
+                Json::obj(vec![
+                    ("active", g(&self.sessions_active)),
+                    ("total", g(&self.sessions_total)),
+                ]),
+            ),
+            ("cache", cache_json),
+            (
+                "latency_ms",
+                Json::obj(vec![
+                    ("count", Json::i(self.latency.count() as i64)),
+                    ("p50", Json::n(self.latency.quantile(0.50))),
+                    ("p95", Json::n(self.latency.quantile(0.95))),
+                    ("p99", Json::n(self.latency.quantile(0.99))),
+                    ("buckets", self.latency.to_json()),
+                ]),
+            ),
+        ])
+    }
+}
+
+impl Default for ServeStats {
+    fn default() -> Self {
+        ServeStats::new()
+    }
+}
+
+/// Saturating decrement helper for gauges (a gauge must never wrap to
+/// u64::MAX on a double-release bug; clamp and keep serving).
+pub(crate) fn gauge_dec(gauge: &AtomicU64) {
+    let mut cur = gauge.load(Ordering::Relaxed);
+    while cur > 0 {
+        match gauge.compare_exchange_weak(cur, cur - 1, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_reports_zero() {
+        let h = Histogram::latency();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.quantile(0.99), 0.0);
+    }
+
+    #[test]
+    fn quantiles_are_bucket_upper_bounds() {
+        let h = Histogram::latency();
+        // 90 fast (≤0.25ms bucket), 10 slow (~100ms → 128ms bucket).
+        for _ in 0..90 {
+            h.record(0.1);
+        }
+        for _ in 0..10 {
+            h.record(100.0);
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.quantile(0.5), 0.25);
+        assert_eq!(h.quantile(0.90), 0.25);
+        assert_eq!(h.quantile(0.95), 128.0);
+        assert_eq!(h.quantile(0.99), 128.0);
+        assert_eq!(h.quantile(1.0), 128.0);
+    }
+
+    #[test]
+    fn overflow_and_garbage_observations_never_panic() {
+        let h = Histogram::latency();
+        h.record(f64::NAN);
+        h.record(-5.0);
+        h.record(1e18); // beyond the last bound → overflow bucket
+        assert_eq!(h.count(), 3);
+        assert!(h.quantile(1.0) > 0.0);
+    }
+
+    #[test]
+    fn quantile_monotone_in_q() {
+        let h = Histogram::latency();
+        for i in 0..1000 {
+            h.record(i as f64 / 10.0);
+        }
+        let (p50, p95, p99) = (h.quantile(0.5), h.quantile(0.95), h.quantile(0.99));
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+    }
+
+    #[test]
+    fn stats_snapshot_wire_shape() {
+        let s = ServeStats::new();
+        s.accepted.fetch_add(3, Ordering::Relaxed);
+        s.ok.fetch_add(2, Ordering::Relaxed);
+        s.shed.fetch_add(1, Ordering::Relaxed);
+        s.latency.record(1.0);
+        let j = s.to_json(None);
+        assert_eq!(j.get("accepted").unwrap().as_u64(), Some(3));
+        assert_eq!(j.get("responded").unwrap().as_u64(), Some(3));
+        assert_eq!(j.get("shed").unwrap().as_u64(), Some(1));
+        assert_eq!(j.get("cache"), Some(&Json::Null));
+        let lat = j.get("latency_ms").unwrap();
+        assert_eq!(lat.get("count").unwrap().as_u64(), Some(1));
+        assert!(lat.get("p50").unwrap().as_f64().unwrap() > 0.0);
+        let buckets = lat.get("buckets").unwrap();
+        assert_eq!(
+            buckets.get("bounds_ms").unwrap().as_arr().unwrap().len(),
+            LATENCY_BUCKETS
+        );
+    }
+
+    #[test]
+    fn gauge_dec_saturates_at_zero() {
+        let g = AtomicU64::new(1);
+        gauge_dec(&g);
+        gauge_dec(&g); // would wrap; must clamp
+        assert_eq!(g.load(Ordering::Relaxed), 0);
+    }
+}

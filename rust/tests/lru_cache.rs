@@ -1,0 +1,218 @@
+//! The in-memory LRU tier, checked three ways: a seeded-random property
+//! test against a reference model (capacity bound, eviction order,
+//! exact counters), agreement between the tier's counters and the
+//! `stats` wire output, and byte-identical replay through a warm-disk /
+//! cold-memory cache versus an uncached evaluation.
+
+use std::io::Cursor;
+
+use convpim::service::{
+    run_session, EvalRequest, EvalService, LruCache, ResultCache, ServeShared,
+};
+use convpim::sweep::Campaign;
+use convpim::util::json::Json;
+use convpim::util::rng::Rng;
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("convpim_lru_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Reference LRU: a recency-ordered list (least-recent first), the
+/// obviously-correct O(n) model the real two-BTreeMap implementation
+/// must agree with, operation by operation.
+struct ModelLru {
+    capacity: usize,
+    entries: Vec<(String, Json)>,
+    hits: u64,
+    misses: u64,
+    insertions: u64,
+    evictions: u64,
+}
+
+impl ModelLru {
+    fn new(capacity: usize) -> ModelLru {
+        ModelLru {
+            capacity: capacity.max(1),
+            entries: Vec::new(),
+            hits: 0,
+            misses: 0,
+            insertions: 0,
+            evictions: 0,
+        }
+    }
+
+    fn get(&mut self, key: &str) -> Option<Json> {
+        match self.entries.iter().position(|(k, _)| k == key) {
+            Some(i) => {
+                self.hits += 1;
+                let entry = self.entries.remove(i);
+                let value = entry.1.clone();
+                self.entries.push(entry);
+                Some(value)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    fn insert(&mut self, key: String, value: Json) {
+        self.insertions += 1;
+        if let Some(i) = self.entries.iter().position(|(k, _)| *k == key) {
+            self.entries.remove(i);
+            self.entries.push((key, value));
+            return;
+        }
+        if self.entries.len() >= self.capacity {
+            self.entries.remove(0);
+            self.evictions += 1;
+        }
+        self.entries.push((key, value));
+    }
+
+    fn keys_lru_order(&self) -> Vec<String> {
+        self.entries.iter().map(|(k, _)| k.clone()).collect()
+    }
+}
+
+/// 2000 seeded operations over a 40-key space against a capacity-16
+/// cache: after every operation the real cache agrees with the model on
+/// lookup results, occupancy, the capacity bound, exact counters and
+/// full LRU ordering.
+#[test]
+fn seeded_property_test_against_the_reference_model() {
+    const CAPACITY: usize = 16;
+    const KEYS: u64 = 40;
+    const OPS: usize = 2000;
+
+    let mut rng = Rng::new(0x1517_CACE);
+    let mut real = LruCache::new(CAPACITY);
+    let mut model = ModelLru::new(CAPACITY);
+
+    for op in 0..OPS {
+        let key = format!("k{:02}", rng.below(KEYS));
+        if rng.below(100) < 60 {
+            let got_real = real.get(&key);
+            let got_model = model.get(&key);
+            assert_eq!(got_real, got_model, "op {op}: get({key}) disagrees");
+        } else {
+            let value = Json::i(op as i64);
+            real.insert(key.clone(), value.clone());
+            model.insert(key, value);
+        }
+
+        assert!(real.len() <= real.capacity(), "op {op}: capacity exceeded");
+        assert_eq!(real.len(), model.entries.len(), "op {op}: occupancy disagrees");
+        let c = real.counters();
+        assert_eq!(
+            (c.hits, c.misses, c.insertions, c.evictions),
+            (model.hits, model.misses, model.insertions, model.evictions),
+            "op {op}: counters disagree"
+        );
+        assert_eq!(
+            real.keys_lru_order(),
+            model.keys_lru_order(),
+            "op {op}: LRU order disagrees"
+        );
+    }
+
+    // The workload actually exercised every transition.
+    let c = real.counters();
+    assert!(c.hits > 0 && c.misses > 0 && c.insertions > 0 && c.evictions > 0);
+    assert_eq!(real.len(), CAPACITY, "a 40-key workload keeps a 16-entry cache full");
+}
+
+/// The `stats` wire output reports exactly what the tier's own counters
+/// say, through a real serve session: a duplicated sweep point is one
+/// memory miss (computed, inserted) then one memory hit.
+#[test]
+fn stats_wire_output_matches_the_tier_counters() {
+    let dir = temp_dir("wire");
+    let cache = ResultCache::new(dir.join("cache")).with_memory(8);
+    let service = EvalService::new().with_cache(Some(cache)).with_jobs(1);
+
+    let point = Campaign::builtin("fig4").unwrap().points()[0]
+        .config_json()
+        .compact();
+    let line = format!("{{\"kind\": \"sweep-point\", \"config\": {point}}}\n");
+    let input = format!("{line}{line}");
+    let mut output: Vec<u8> = Vec::new();
+    let shared = ServeShared::new(&service, 0);
+    let summary = run_session(&shared, Cursor::new(input), &mut output, 1, None).unwrap();
+    assert_eq!(summary.requests, 2);
+    assert_eq!(summary.cache_hits, 1);
+
+    // The snapshot the wire would report…
+    let mem = service.cache().unwrap().memory().unwrap().snapshot();
+    assert_eq!(mem.hits, 1, "second lookup is the memory hit");
+    assert_eq!(mem.misses, 1, "first lookup is the memory miss");
+    assert_eq!(mem.insertions, 1, "the computed result was inserted once");
+    assert_eq!(mem.evictions, 0);
+    assert_eq!(mem.entries, 1);
+    assert_eq!(mem.disk_promotions, 0, "nothing was on disk to promote");
+
+    // …is what the wire reports: a follow-up stats session agrees.
+    let mut stats_out: Vec<u8> = Vec::new();
+    run_session(
+        &shared,
+        Cursor::new("{\"kind\": \"stats\"}\n".to_string()),
+        &mut stats_out,
+        1,
+        None,
+    )
+    .unwrap();
+    let doc = Json::parse(String::from_utf8(stats_out).unwrap().trim()).unwrap();
+    let wire = doc.get("payload").unwrap().get("cache").unwrap().get("mem").unwrap();
+    assert_eq!(wire, &mem.to_json(), "wire snapshot must equal the tier snapshot");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Warm disk + cold memory (a daemon restart) replays byte-identically
+/// to an uncached evaluation, and the replay is recorded as a disk
+/// promotion into the memory tier.
+#[test]
+fn warm_disk_cold_memory_replay_is_byte_identical_to_no_cache() {
+    let dir = temp_dir("replay");
+    let point = &Campaign::builtin("fig4").unwrap().points()[1];
+    let req = EvalRequest::SweepPoint {
+        config: point.config_json(),
+    };
+
+    // Ground truth: no cache anywhere.
+    let uncached = EvalService::new().with_cache(None).submit(&req);
+    assert!(uncached.meta.ok);
+
+    // First process: computes and stores to disk (and its memory tier).
+    let warm = EvalService::new()
+        .with_cache(Some(ResultCache::new(dir.join("cache")).with_memory(8)))
+        .submit(&req);
+    assert!(warm.meta.ok);
+
+    // "Restarted" process: same disk, fresh (cold) memory tier.
+    let cold_cache = ResultCache::new(dir.join("cache")).with_memory(8);
+    let service = EvalService::new().with_cache(Some(cold_cache));
+    let replay = service.submit(&req);
+    assert_eq!(replay.meta.cache, convpim::service::CacheStatus::Hit);
+
+    // Byte-identical everywhere outside meta (elapsed_ms is wall clock).
+    assert_eq!(replay.stdout, uncached.stdout, "stdout must replay byte-identically");
+    assert_eq!(replay.payload.compact(), uncached.payload.compact());
+    assert_eq!(replay.notes, uncached.notes);
+
+    // The disk hit was promoted into the cold memory tier.
+    let mem = service.cache().unwrap().memory().unwrap().snapshot();
+    assert_eq!(mem.disk_promotions, 1);
+    assert_eq!(mem.misses, 1);
+    assert_eq!(mem.entries, 1);
+
+    // A second lookup in the same process now hits memory.
+    let again = service.submit(&req);
+    assert_eq!(again.meta.cache, convpim::service::CacheStatus::Hit);
+    assert_eq!(again.stdout, uncached.stdout);
+    let mem = service.cache().unwrap().memory().unwrap().snapshot();
+    assert_eq!(mem.hits, 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}

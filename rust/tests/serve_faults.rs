@@ -1,0 +1,271 @@
+//! Fault injection against the real `convpim serve --listen` daemon:
+//! overload floods, abruptly dropped connections, slow-loris partial
+//! lines, oversized lines and expired deadlines. In every scenario the
+//! daemon answers structurally (or sheds), never panics, never wedges a
+//! worker, and keeps serving healthy follow-up traffic.
+
+use std::io::{BufRead as _, BufReader, Read as _, Write as _};
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::process::{Child, ChildStdin, Command, ExitStatus, Stdio};
+use std::time::{Duration, Instant};
+
+use convpim::util::json::Json;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_convpim"))
+}
+
+fn wait_timeout(child: &mut Child, secs: u64) -> Option<ExitStatus> {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    loop {
+        if let Some(status) = child.try_wait().expect("polling daemon") {
+            return Some(status);
+        }
+        if Instant::now() >= deadline {
+            return None;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+struct Daemon {
+    child: Child,
+    stdin: Option<ChildStdin>,
+    addr: SocketAddr,
+    stderr: Option<std::thread::JoinHandle<String>>,
+}
+
+impl Daemon {
+    fn spawn(extra: &[&str]) -> Daemon {
+        let mut child = bin()
+            .args(["serve", "--listen", "127.0.0.1:0"])
+            .args(extra)
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::piped())
+            .spawn()
+            .expect("spawning convpim serve --listen");
+        let mut stderr = BufReader::new(child.stderr.take().unwrap());
+        let mut first = String::new();
+        stderr.read_line(&mut first).expect("reading the listen banner");
+        let addr: SocketAddr = first
+            .strip_prefix("serve: listening on ")
+            .and_then(|rest| rest.split_whitespace().next())
+            .unwrap_or_else(|| panic!("unexpected first stderr line: {first:?}"))
+            .parse()
+            .unwrap_or_else(|e| panic!("unparsable listen address in {first:?}: {e}"));
+        let drain = std::thread::spawn(move || {
+            let mut rest = String::new();
+            let _ = stderr.read_to_string(&mut rest);
+            rest
+        });
+        let stdin = child.stdin.take().unwrap();
+        Daemon { child, stdin: Some(stdin), addr, stderr: Some(drain) }
+    }
+
+    fn shutdown(mut self) -> String {
+        drop(self.stdin.take());
+        let status = match wait_timeout(&mut self.child, 120) {
+            Some(s) => s,
+            None => {
+                let _ = self.child.kill();
+                panic!("daemon did not exit within 120 s of stdin closing");
+            }
+        };
+        let stderr = self.stderr.take().unwrap().join().unwrap();
+        assert!(status.success(), "daemon must exit 0 (stderr: {stderr})");
+        stderr
+    }
+}
+
+fn client_session(addr: SocketAddr, lines: &[String]) -> Vec<Json> {
+    let mut conn = TcpStream::connect(addr).expect("connecting to daemon");
+    conn.write_all((lines.join("\n") + "\n").as_bytes()).expect("writing requests");
+    conn.shutdown(Shutdown::Write).expect("half-closing");
+    BufReader::new(conn)
+        .lines()
+        .map(|l| {
+            let l = l.expect("reading response line");
+            Json::parse(&l).unwrap_or_else(|| panic!("response is not JSON: {l}"))
+        })
+        .collect()
+}
+
+fn meta_ok(doc: &Json) -> bool {
+    doc.get("meta").unwrap().get("ok").unwrap().as_bool().unwrap()
+}
+
+fn healthy_roundtrip(addr: SocketAddr) {
+    let docs = client_session(addr, &["{\"kind\": \"list\"}".to_string()]);
+    assert_eq!(docs.len(), 1);
+    assert!(meta_ok(&docs[0]), "follow-up request must succeed: {}", docs[0].compact());
+}
+
+/// Flooding past the admission queue sheds with the structured schema
+/// (`ok:false, error:"shed", retry_after_ms`) while the first admitted
+/// request still completes — and a follow-up session is served normally.
+#[test]
+fn overload_sheds_structurally_and_the_daemon_recovers() {
+    let daemon = Daemon::spawn(&["--jobs", "1", "--queue", "1", "--no-cache"]);
+    let addr = daemon.addr;
+
+    // One slow request fills the 1-deep admission budget; the reader
+    // drains the 12-line flood in microseconds while it evaluates.
+    let mut lines = vec!["{\"kind\": \"validate\", \"rows\": 64, \"seed\": 7}".to_string()];
+    for _ in 0..12 {
+        lines.push("{\"kind\": \"list\"}".to_string());
+    }
+    let docs = client_session(addr, &lines);
+    assert_eq!(docs.len(), lines.len(), "every request gets a response, shed or not");
+    for (i, doc) in docs.iter().enumerate() {
+        assert_eq!(doc.get("seq").unwrap().as_u64(), Some(i as u64));
+    }
+    assert_eq!(docs[0].get("kind").unwrap().as_str(), Some("validate"));
+    assert!(meta_ok(&docs[0]), "the admitted request must complete");
+
+    let sheds: Vec<&Json> = docs[1..]
+        .iter()
+        .filter(|d| d.get("kind").and_then(Json::as_str) == Some("shed"))
+        .collect();
+    assert!(!sheds.is_empty(), "a flood past a 1-deep queue must shed");
+    for doc in &sheds {
+        assert_eq!(doc.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(doc.get("error").and_then(Json::as_str), Some("shed"));
+        assert!(!meta_ok(doc));
+        let retry = doc.get("retry_after_ms").and_then(Json::as_f64).unwrap_or_else(|| {
+            panic!("shed without retry_after_ms: {}", doc.compact())
+        });
+        assert!(retry >= 1.0, "retry_after_ms must be a positive hint, got {retry}");
+    }
+    // Anything not shed was admitted after the slow request released —
+    // it must then have succeeded.
+    for doc in docs[1..].iter().filter(|d| d.get("kind").and_then(Json::as_str) != Some("shed")) {
+        assert!(meta_ok(doc));
+    }
+
+    // The daemon keeps serving, and its stats account for the sheds.
+    healthy_roundtrip(addr);
+    let stats = client_session(addr, &["{\"kind\": \"stats\"}".to_string()]);
+    let shed_count = stats[0]
+        .get("payload")
+        .unwrap()
+        .get("shed")
+        .unwrap()
+        .as_u64()
+        .unwrap();
+    assert!(
+        shed_count >= sheds.len() as u64,
+        "stats must record the sheds ({shed_count} < {})",
+        sheds.len()
+    );
+    daemon.shutdown();
+}
+
+/// Clients that vanish — half-closed sockets, connections dropped
+/// without reading their responses — end their own session only.
+#[test]
+fn abruptly_dropped_connections_do_not_wedge_the_daemon() {
+    let daemon = Daemon::spawn(&["--jobs", "2", "--no-cache"]);
+    let addr = daemon.addr;
+
+    for _ in 0..3 {
+        // Write a request and hang up without reading the response.
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.write_all(b"{\"kind\": \"list\"}\n").unwrap();
+        drop(conn);
+
+        // Half-close both directions mid-session.
+        let conn = TcpStream::connect(addr).unwrap();
+        conn.shutdown(Shutdown::Both).unwrap();
+        drop(conn);
+
+        healthy_roundtrip(addr);
+    }
+    daemon.shutdown();
+}
+
+/// A slow-loris client — a partial JSON line held open forever — neither
+/// blocks other sessions nor holds the daemon's shutdown hostage (the
+/// stop path half-closes registered sockets to pop blocked readers).
+#[test]
+fn slow_loris_partial_line_blocks_neither_service_nor_shutdown() {
+    let daemon = Daemon::spawn(&["--jobs", "2", "--no-cache"]);
+    let addr = daemon.addr;
+
+    let mut loris = TcpStream::connect(addr).unwrap();
+    loris.write_all(b"{\"kind\": ").unwrap(); // never finishes the line
+
+    // Other sessions are served while the loris stalls.
+    healthy_roundtrip(addr);
+    healthy_roundtrip(addr);
+
+    // Shutdown completes even though the loris socket is still open
+    // (Daemon::shutdown enforces the 120 s bound and exit code 0).
+    let stderr = daemon.shutdown();
+    assert!(stderr.contains("session"), "sessions were served: {stderr}");
+    drop(loris);
+}
+
+/// A request line past the byte cap is drained and answered with a
+/// structured error; the same connection then serves the next request.
+#[test]
+fn oversized_line_is_an_error_and_the_session_survives() {
+    let daemon = Daemon::spawn(&["--jobs", "1", "--no-cache"]);
+    // > DEFAULT_MAX_LINE_BYTES (1 MiB) of valid-looking JSON.
+    let pad = "x".repeat(2 * convpim::service::DEFAULT_MAX_LINE_BYTES);
+    let lines = vec![
+        format!("{{\"kind\": \"list\", \"pad\": \"{pad}\"}}"),
+        "{\"kind\": \"list\"}".to_string(),
+    ];
+    let docs = client_session(daemon.addr, &lines);
+    assert_eq!(docs.len(), 2);
+    assert!(!meta_ok(&docs[0]));
+    let err = docs[0]
+        .get("meta")
+        .unwrap()
+        .get("error")
+        .and_then(Json::as_str)
+        .unwrap_or("");
+    assert!(err.contains("exceeds") && err.contains("cap"), "got: {err}");
+    assert!(meta_ok(&docs[1]), "the session must survive the oversized line");
+    daemon.shutdown();
+}
+
+/// `deadline_ms: 0` has always expired by pickup time: the request is
+/// answered with a structured deadline error, never evaluated, and the
+/// session continues.
+#[test]
+fn expired_deadline_is_a_structured_error_not_an_evaluation() {
+    let daemon = Daemon::spawn(&["--jobs", "1", "--no-cache"]);
+    let lines = vec![
+        "{\"kind\": \"list\", \"deadline_ms\": 0}".to_string(),
+        "{\"kind\": \"list\"}".to_string(),
+    ];
+    let docs = client_session(daemon.addr, &lines);
+    assert_eq!(docs.len(), 2);
+    assert!(!meta_ok(&docs[0]));
+    let err = docs[0]
+        .get("meta")
+        .unwrap()
+        .get("error")
+        .and_then(Json::as_str)
+        .unwrap_or("");
+    assert!(
+        err.contains("deadline_ms") && err.contains("expired"),
+        "got: {err}"
+    );
+    assert!(meta_ok(&docs[1]));
+
+    // The daemon's stats classify it.
+    let stats = client_session(daemon.addr, &["{\"kind\": \"stats\"}".to_string()]);
+    assert_eq!(
+        stats[0]
+            .get("payload")
+            .unwrap()
+            .get("deadline_expired")
+            .unwrap()
+            .as_u64(),
+        Some(1)
+    );
+    daemon.shutdown();
+}

@@ -1,0 +1,303 @@
+//! End-to-end tests of `convpim serve --listen` through the real binary:
+//! N concurrent TCP client sessions pipelining against one daemon,
+//! per-session response ordering, byte-compatibility with the
+//! stdin/stdout transport, and clean shutdown when stdin closes.
+
+use std::io::{BufRead as _, BufReader, Read as _, Write as _};
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, ChildStdin, Command, ExitStatus, Stdio};
+use std::time::{Duration, Instant};
+
+use convpim::sweep::Campaign;
+use convpim::util::json::Json;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_convpim"))
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("convpim_tcp_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn wait_timeout(child: &mut Child, secs: u64) -> Option<ExitStatus> {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    loop {
+        if let Some(status) = child.try_wait().expect("polling daemon") {
+            return Some(status);
+        }
+        if Instant::now() >= deadline {
+            return None;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+/// A `convpim serve --listen 127.0.0.1:0` daemon under test. The bound
+/// port is parsed from the machine-readable first stderr line; stderr is
+/// then drained on a thread (so session summaries never fill the pipe),
+/// and the daemon is shut down by closing its stdin.
+struct Daemon {
+    child: Child,
+    stdin: Option<ChildStdin>,
+    addr: SocketAddr,
+    stderr: Option<std::thread::JoinHandle<String>>,
+}
+
+impl Daemon {
+    fn spawn(extra: &[&str]) -> Daemon {
+        let mut child = bin()
+            .args(["serve", "--listen", "127.0.0.1:0"])
+            .args(extra)
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::piped())
+            .spawn()
+            .expect("spawning convpim serve --listen");
+        let mut stderr = BufReader::new(child.stderr.take().unwrap());
+        let mut first = String::new();
+        stderr.read_line(&mut first).expect("reading the listen banner");
+        let addr: SocketAddr = first
+            .strip_prefix("serve: listening on ")
+            .and_then(|rest| rest.split_whitespace().next())
+            .unwrap_or_else(|| panic!("unexpected first stderr line: {first:?}"))
+            .parse()
+            .unwrap_or_else(|e| panic!("unparsable listen address in {first:?}: {e}"));
+        let drain = std::thread::spawn(move || {
+            let mut rest = String::new();
+            let _ = stderr.read_to_string(&mut rest);
+            rest
+        });
+        let stdin = child.stdin.take().unwrap();
+        Daemon { child, stdin: Some(stdin), addr, stderr: Some(drain) }
+    }
+
+    /// Close stdin (the daemon's shutdown signal), wait for a clean
+    /// exit, and return the drained stderr.
+    fn shutdown(mut self) -> String {
+        drop(self.stdin.take());
+        let status = match wait_timeout(&mut self.child, 120) {
+            Some(s) => s,
+            None => {
+                let _ = self.child.kill();
+                panic!("daemon did not exit within 120 s of stdin closing");
+            }
+        };
+        let stderr = self.stderr.take().unwrap().join().unwrap();
+        assert!(status.success(), "daemon must exit 0 (stderr: {stderr})");
+        stderr
+    }
+}
+
+/// One pipelined client session: write every request line up front,
+/// half-close, collect the raw response lines.
+fn client_session(addr: SocketAddr, lines: &[String]) -> Vec<String> {
+    let mut conn = TcpStream::connect(addr).expect("connecting to daemon");
+    conn.write_all((lines.join("\n") + "\n").as_bytes()).expect("writing requests");
+    conn.shutdown(Shutdown::Write).expect("half-closing");
+    BufReader::new(conn)
+        .lines()
+        .map(|l| l.expect("reading response line"))
+        .collect()
+}
+
+fn parse_all(lines: &[String]) -> Vec<Json> {
+    lines
+        .iter()
+        .map(|l| Json::parse(l).unwrap_or_else(|| panic!("response is not JSON: {l}")))
+        .collect()
+}
+
+fn meta_ok(doc: &Json) -> bool {
+    doc.get("meta").unwrap().get("ok").unwrap().as_bool().unwrap()
+}
+
+/// The acceptance scenario: ≥ 8 clients pipelining concurrently against
+/// one daemon, every session getting its own responses in its own input
+/// order (seq 0..n, kinds echoing the requests), the stats endpoint
+/// answering inline, and a clean exit once stdin closes.
+#[test]
+fn eight_concurrent_sessions_keep_per_session_order() {
+    let dir = temp_dir("order");
+    let daemon = Daemon::spawn(&["--jobs", "2", "--cache-dir", dir.to_str().unwrap()]);
+    let addr = daemon.addr;
+
+    std::thread::scope(|scope| {
+        for c in 0..8usize {
+            scope.spawn(move || {
+                // Per-client request mixes differ so sessions interleave
+                // differently on the shared pool.
+                let mut lines = vec!["{\"kind\": \"list\"}".to_string()];
+                if c % 2 == 0 {
+                    lines.push(
+                        "{\"kind\": \"experiment\", \"id\": \"table1\", \
+                         \"analytic\": true, \"fast\": true}"
+                            .to_string(),
+                    );
+                }
+                lines.push("this is not json".to_string());
+                lines.push("{\"kind\": \"info\"}".to_string());
+                lines.push("{\"kind\": \"stats\"}".to_string());
+                let expected_kinds: Vec<&str> = lines
+                    .iter()
+                    .map(|l| match Json::parse(l) {
+                        None => "error",
+                        Some(d) => match d.get("kind").and_then(Json::as_str) {
+                            Some("list") => "list",
+                            Some("experiment") => "experiment",
+                            Some("info") => "info",
+                            Some("stats") => "stats",
+                            other => panic!("unexpected kind {other:?}"),
+                        },
+                    })
+                    .collect();
+
+                let docs = parse_all(&client_session(addr, &lines));
+                assert_eq!(docs.len(), lines.len(), "one response per request");
+                for (i, doc) in docs.iter().enumerate() {
+                    assert_eq!(
+                        doc.get("seq").unwrap().as_u64(),
+                        Some(i as u64),
+                        "client {c}: responses must arrive in this session's input order"
+                    );
+                    assert_eq!(
+                        doc.get("kind").unwrap().as_str(),
+                        Some(expected_kinds[i]),
+                        "client {c} request {i}"
+                    );
+                    if expected_kinds[i] != "error" {
+                        assert!(meta_ok(doc), "client {c} request {i} failed");
+                    }
+                }
+            });
+        }
+    });
+
+    let stderr = daemon.shutdown();
+    assert!(
+        stderr.contains("8 session(s)"),
+        "the daemon summary must count all sessions (stderr: {stderr})"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The TCP transport answers with the same bytes as the stdin/stdout
+/// transport for the same request lines (modulo `meta`, whose
+/// `elapsed_ms` is a wall-clock measurement).
+#[test]
+fn tcp_and_stdin_transports_agree_byte_for_byte_modulo_meta() {
+    fn strip_meta(mut doc: Json) -> Json {
+        if let Json::Obj(map) = &mut doc {
+            map.remove("meta");
+        }
+        doc
+    }
+
+    let points = Campaign::builtin("fig4").unwrap().points();
+    let lines: Vec<String> = vec![
+        "{\"kind\": \"list\"}".to_string(),
+        "{\"kind\": \"experiment\", \"id\": \"table1\", \"analytic\": true, \"fast\": true}"
+            .to_string(),
+        format!(
+            "{{\"kind\": \"sweep-point\", \"config\": {}}}",
+            points[0].config_json().compact()
+        ),
+        "definitely not json".to_string(),
+        "{\"kind\": \"info\"}".to_string(),
+    ];
+    let input = lines.join("\n") + "\n";
+
+    // Reference: the stdin/stdout daemon (uncached, so both transports
+    // compute rather than replay).
+    let stdin_out = bin()
+        .args(["serve", "--jobs", "1", "--no-cache"])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .map(|mut child| {
+            child.stdin.take().unwrap().write_all(input.as_bytes()).unwrap();
+            child.wait_with_output().unwrap()
+        })
+        .expect("running stdin serve");
+    assert!(stdin_out.status.success());
+    let stdin_docs: Vec<Json> = String::from_utf8(stdin_out.stdout)
+        .unwrap()
+        .lines()
+        .map(|l| Json::parse(l).unwrap())
+        .collect();
+
+    let daemon = Daemon::spawn(&["--jobs", "1", "--no-cache"]);
+    let tcp_docs = parse_all(&client_session(daemon.addr, &lines));
+    daemon.shutdown();
+
+    assert_eq!(stdin_docs.len(), lines.len());
+    assert_eq!(tcp_docs.len(), lines.len());
+    for (i, (a, b)) in stdin_docs.into_iter().zip(tcp_docs).enumerate() {
+        assert_eq!(
+            strip_meta(a).compact(),
+            strip_meta(b).compact(),
+            "request {i}: transports must agree byte-for-byte outside meta"
+        );
+    }
+}
+
+/// Sessions share one daemon-wide service: a sweep point computed by one
+/// client is a cache hit for the next client, served from the in-memory
+/// tier, and the `stats` snapshot accounts for both sessions.
+#[test]
+fn sessions_share_the_two_tier_cache_and_the_stats_registry() {
+    let dir = temp_dir("shared");
+    let daemon = Daemon::spawn(&["--jobs", "1", "--cache-dir", dir.to_str().unwrap()]);
+    let addr = daemon.addr;
+    let points = Campaign::builtin("fig4").unwrap().points();
+    let point_line = format!(
+        "{{\"kind\": \"sweep-point\", \"config\": {}}}",
+        points[0].config_json().compact()
+    );
+
+    let first = parse_all(&client_session(addr, std::slice::from_ref(&point_line)));
+    assert_eq!(
+        first[0].get("meta").unwrap().get("cache").and_then(Json::as_str),
+        Some("computed")
+    );
+
+    let second = parse_all(&client_session(addr, std::slice::from_ref(&point_line)));
+    assert_eq!(
+        second[0].get("meta").unwrap().get("cache").and_then(Json::as_str),
+        Some("hit"),
+        "a later session must hit the entry an earlier session stored"
+    );
+    assert_eq!(second[0].get("payload"), first[0].get("payload"));
+
+    // Stats ride a third session so the snapshot postdates both
+    // evaluations (the reader answers `stats` inline, so an in-session
+    // snapshot could race the duplicate lookup).
+    let third = parse_all(&client_session(addr, &["{\"kind\": \"stats\"}".to_string()]));
+    let stats = third[0].get("payload").unwrap();
+    assert_eq!(stats.get("accepted").unwrap().as_u64(), Some(3));
+    assert_eq!(stats.get("sessions").unwrap().get("total").unwrap().as_u64(), Some(3));
+    let mem = stats.get("cache").unwrap().get("mem").unwrap();
+    assert!(
+        mem.get("hits").unwrap().as_u64().unwrap() >= 1,
+        "the second lookup must be an in-memory hit: {}",
+        mem.compact()
+    );
+
+    daemon.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A daemon with no traffic still exits promptly and cleanly when its
+/// stdin closes (the listener wake-up path).
+#[test]
+fn idle_daemon_exits_cleanly_when_stdin_closes() {
+    let daemon = Daemon::spawn(&["--jobs", "1", "--no-cache"]);
+    let stderr = daemon.shutdown();
+    assert!(
+        stderr.contains("0 session(s)"),
+        "idle daemon summary expected (stderr: {stderr})"
+    );
+}
