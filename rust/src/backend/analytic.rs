@@ -153,6 +153,35 @@ impl Backend for AnalyticPim {
                     ]),
                 )
             }
+            WorkloadSpec::NetExec { model, scale } => {
+                let graph = crate::pim::netexec::NetGraph::model(model.name(), scale)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "net-exec has no executable graph for `{}`; available: {}",
+                            model.name(),
+                            crate::pim::netexec::NetGraph::model_names().join(", ")
+                        )
+                    })?;
+                let macs: u64 = graph.layers.iter().map(|l| l.macs()).sum();
+                let pim_model = CnnPimModel::new(fmt, arch.set, macs as f64);
+                // The analytic *upper bound* for the executed network: MAC
+                // work only, no pooling/ReLU microcode, no staging — the
+                // §5 idealization. The executed backend reports the real
+                // number including those buckets, so this one dominates it.
+                let tp = arch.throughput_ops(pim_model.mac_cycles() * macs.max(1));
+                (
+                    tp,
+                    tp / arch.max_power_w,
+                    None,
+                    Json::obj(vec![
+                        ("graph", Json::s(graph.name.clone())),
+                        ("macs", Json::i(macs as i64)),
+                        ("mac_cycles", Json::i(pim_model.mac_cycles() as i64)),
+                        ("mac_gates", Json::i(pim_model.mac_gates() as i64)),
+                        ("executed", Json::Bool(false)),
+                    ]),
+                )
+            }
             WorkloadSpec::Decode { seq } => {
                 anyhow::ensure!(seq > 0, "decode context length must be positive");
                 let w = decode_workload(DecodeConfig::llama7b(seq));

@@ -24,7 +24,8 @@ use anyhow::Result;
 use super::{Backend, Estimate};
 use crate::metrics;
 use crate::pim::conv;
-use crate::pim::matpim::NumFmt;
+use crate::pim::matpim::{CnnPimModel, NumFmt};
+use crate::pim::netexec::{self, NetExecOpts, NetGraph};
 use crate::sweep::campaign::{ArchSpec, WorkloadSpec};
 use crate::util::json::Json;
 
@@ -127,6 +128,149 @@ impl Backend for ExecutedCrossbar {
     }
 }
 
+/// The executed full-network backend (`pim-exec-net:SET[@RxC]`).
+///
+/// Where [`ExecutedCrossbar`] runs one conv layer, this backend runs a
+/// whole layer graph — conv, pooling, ReLU and FC — end to end through
+/// [`crate::pim::netexec`] with deterministic seeded operands
+/// ([`CONV_EXEC_SEED`]), and fails evaluation unless (a) the final
+/// output of the network is bit-identical to the host nested-loop
+/// reference and (b) every MAC layer's executed per-MAC cycles/gates
+/// equal the analytic [`CnnPimModel`] exactly. The estimate's notes
+/// carry the per-layer cost records with inter-layer data movement as
+/// its own bucket (`stage_bits`), which the single-layer surfaces never
+/// see.
+#[derive(Clone, Debug)]
+pub struct ExecutedNet {
+    spec: ArchSpec,
+    id: String,
+}
+
+impl ExecutedNet {
+    /// Wrap an architecture axis value.
+    pub fn new(spec: ArchSpec) -> ExecutedNet {
+        ExecutedNet {
+            spec,
+            id: format!("pim-exec-net:{}", spec.name()),
+        }
+    }
+}
+
+impl Backend for ExecutedNet {
+    fn id(&self) -> String {
+        self.id.clone()
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "executed full-network inference: {:?} gates, conv/pool/relu/fc layer graph, \
+             pipelined tiles, bit-exact vs host reference (net-exec workloads)",
+            self.spec.set
+        )
+    }
+
+    fn supports(&self, workload: &WorkloadSpec) -> bool {
+        matches!(workload, WorkloadSpec::NetExec { .. })
+    }
+
+    fn evaluate(&self, workload: &WorkloadSpec, fmt: NumFmt) -> Result<Estimate> {
+        let WorkloadSpec::NetExec { model, scale } = *workload else {
+            anyhow::bail!(
+                "backend `{}` executes net-exec workloads only (got `{}`); \
+                 use pim-exec:... for single conv layers",
+                self.id,
+                workload.name()
+            );
+        };
+        if let Some((r, c)) = self.spec.dims {
+            anyhow::ensure!(r > 0 && c > 0, "crossbar dims must be positive (got {r}x{c})");
+        }
+        let arch = self.spec.arch();
+        let graph = NetGraph::model(model.name(), scale).ok_or_else(|| {
+            anyhow::anyhow!(
+                "net-exec has no executable graph for `{}`; available: {}",
+                model.name(),
+                NetGraph::model_names().join(", ")
+            )
+        })?;
+        // Deterministic seeded operands (cache soundness: evaluate stays a
+        // pure function of the workload config).
+        let (inputs, weights) = netexec::seeded_net_operands(&graph, fmt, CONV_EXEC_SEED, 1);
+        let opts = NetExecOpts {
+            xbar_rows: arch.rows as usize,
+            ..NetExecOpts::default()
+        };
+        let run = netexec::execute_net(&graph, fmt, self.spec.set, &inputs, &weights, &opts)?;
+        // Gate 1: the whole network's output must be bit-identical to the
+        // host reference.
+        let reference = netexec::reference_net(&graph, fmt, &inputs[0], &weights);
+        anyhow::ensure!(
+            run.outputs[0] == reference,
+            "executed network output deviates from the host reference ({})",
+            graph.name
+        );
+        // Gate 2: every MAC layer's executed per-MAC costs must equal the
+        // analytic CnnPimModel prediction exactly (the cross-validation
+        // the single-layer backend does, here for every layer).
+        for lr in run.layers.iter().filter(|l| l.macs > 0) {
+            let model = CnnPimModel::new(fmt, self.spec.set, lr.macs as f64);
+            anyhow::ensure!(
+                lr.mac_cycles == model.mac_cycles() && lr.mac_gates == model.mac_gates(),
+                "layer {}: executed {} cycles / {} gates per MAC != analytic {} / {}",
+                lr.name,
+                lr.mac_cycles,
+                lr.mac_gates,
+                model.mac_cycles(),
+                model.mac_gates()
+            );
+        }
+        // Validated: one inference per row-pipeline, total row-cycles per
+        // image = op + intra-row staging work across all layers.
+        let throughput = arch.throughput_ops(run.total_cycles());
+        let layers: Vec<Json> = run
+            .layers
+            .iter()
+            .map(|l| {
+                Json::obj(vec![
+                    ("layer", Json::s(l.name.clone())),
+                    ("kind", Json::s(l.kind)),
+                    ("tiles", Json::i(l.tiles as i64)),
+                    ("macs", Json::i(l.macs as i64)),
+                    ("op_cycles", Json::i(l.op_cycles as i64)),
+                    ("move_cycles", Json::i(l.move_cycles as i64)),
+                    ("stage_bits", Json::i(l.stage_bits as i64)),
+                ])
+            })
+            .collect();
+        let notes = Json::obj(vec![
+            ("graph", Json::s(run.name.clone())),
+            ("macs", Json::i(run.macs() as i64)),
+            ("tasks", Json::i(run.tasks as i64)),
+            ("op_cycles", Json::i(run.op_cycles() as i64)),
+            ("move_cycles", Json::i(run.move_cycles() as i64)),
+            ("stage_bits", Json::i(run.stage_bits() as i64)),
+            ("move_fraction", Json::n(run.move_fraction())),
+            ("bit_exact", Json::Bool(true)),
+            ("executed", Json::Bool(true)),
+            ("layers", Json::arr(layers)),
+        ]);
+        Ok(Estimate {
+            backend: self.id.clone(),
+            workload: workload.name(),
+            format: fmt.name(),
+            unit: workload.unit().to_string(),
+            throughput,
+            per_watt: throughput / arch.max_power_w,
+            power_w: arch.max_power_w,
+            cc: None,
+            // Inter-layer movement, the cost the analytic upper bound
+            // ignores, reported per inference.
+            bytes_per_unit: Some(run.stage_bits() as f64 / 8.0),
+            notes,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -165,5 +309,43 @@ mod tests {
             .unwrap();
         assert_eq!(e.throughput, analytic.throughput);
         assert_eq!(e.per_watt, analytic.per_watt);
+    }
+
+    #[test]
+    fn net_backend_rejects_non_net_workloads() {
+        let b = ExecutedNet::new(ArchSpec::paper(GateSet::MemristiveNor));
+        let w = WorkloadSpec::from_name("cnn-alexnet").unwrap();
+        assert!(!b.supports(&w));
+        let err = b.evaluate(&w, NumFmt::Fixed(8)).err().unwrap();
+        assert!(format!("{err}").contains("net-exec workloads only"));
+    }
+
+    #[test]
+    fn net_backend_executes_alexnet_and_reports_movement() {
+        // The cheap cell: fixed8, dram, alexnet at 1/32 scale.
+        let b = ExecutedNet::new(ArchSpec::paper(GateSet::DramMaj));
+        let w = WorkloadSpec::NetExec {
+            model: CnnModel::AlexNet,
+            scale: 32,
+        };
+        let e = b.evaluate(&w, NumFmt::Fixed(8)).unwrap();
+        assert_eq!(e.unit, "img/s");
+        assert!(e.throughput > 0.0);
+        assert_eq!(e.notes.get("bit_exact").unwrap().as_bool(), Some(true));
+        assert_eq!(e.notes.get("executed").unwrap().as_bool(), Some(true));
+        // Movement is a separate, visible bucket.
+        assert!(e.notes.get("stage_bits").unwrap().as_f64().unwrap() > 0.0);
+        assert!(e.bytes_per_unit.unwrap() > 0.0);
+        let layers = e.notes.get("layers").unwrap().as_arr().unwrap();
+        assert_eq!(layers.len(), 19, "alexnet graph has 19 layers");
+        // Every layer kind appears in the executed record.
+        for kind in ["conv", "pool", "relu", "fc"] {
+            assert!(
+                layers
+                    .iter()
+                    .any(|l| l.get("kind").unwrap().as_str() == Some(kind)),
+                "missing layer kind {kind}"
+            );
+        }
     }
 }

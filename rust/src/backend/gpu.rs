@@ -64,7 +64,11 @@ impl GpuRoofline {
     pub fn derived_dtype(workload: &WorkloadSpec, fmt: NumFmt) -> GpuDtype {
         let half = fmt.bits() <= 16;
         match workload {
-            WorkloadSpec::Cnn { .. } | WorkloadSpec::ConvExec { .. } if half => {
+            WorkloadSpec::Cnn { .. }
+            | WorkloadSpec::ConvExec { .. }
+            | WorkloadSpec::NetExec { .. }
+                if half =>
+            {
                 GpuDtype::F16Tensor
             }
             _ if half => GpuDtype::F16,
@@ -180,6 +184,33 @@ impl Backend for GpuRoofline {
                         ("layer", Json::s(layer.name.clone())),
                         ("layer_flops_b64", Json::n(pair.0)),
                         ("layer_bytes_b64", Json::n(pair.1)),
+                    ]),
+                )
+            }
+            // The GPU baseline charges the *full-size* network regardless
+            // of the PIM side's down-scale factor — the same rule the
+            // conv-exec points use, at whole-model granularity (identical
+            // to the Cnn inference arm).
+            WorkloadSpec::NetExec { model, scale: _ } => {
+                let w = model.workload();
+                let scale = fmt.bits() as f64 / 32.0;
+                let layers: Vec<(f64, f64)> = w
+                    .roofline_layers_batched(64.0)
+                    .iter()
+                    .map(|&(f, b)| (f, b * scale))
+                    .collect();
+                let tp = match self.mode {
+                    GpuMode::Experimental => rl.workload_flops(&layers, dtype) / w.total_flops(),
+                    GpuMode::Theoretical => rl.peak(dtype) / w.total_flops(),
+                };
+                let batch_bytes: f64 = layers.iter().map(|l| l.1).sum();
+                (
+                    tp,
+                    Some(batch_bytes / 64.0),
+                    Json::obj(vec![
+                        ("dtype", Json::s(dtype_name(dtype))),
+                        ("batch", Json::i(64)),
+                        ("total_flops", Json::n(w.total_flops())),
                     ]),
                 )
             }

@@ -22,6 +22,11 @@
 //!   crossbar simulator ([`crate::pim::conv`]): deterministic seeded
 //!   operands, measured cycles/gates, enforced agreement with the
 //!   analytic model and bit-exactness against a host reference;
+//! * [`ExecutedNet`] — *executed* full-network inference
+//!   ([`crate::pim::netexec`]): a whole conv/pool/relu/fc layer graph
+//!   run end to end with pipelined tiles, per-layer analytic
+//!   cross-validation, and inter-layer data movement reported as its
+//!   own cost bucket;
 //! * [`GpuRoofline`] — the datasheet × roofline GPU baselines
 //!   (experimental memory-bound / theoretical compute peak) over
 //!   [`crate::gpumodel`];
@@ -59,7 +64,7 @@ pub mod gpu;
 use anyhow::Result;
 
 pub use analytic::AnalyticPim;
-pub use executed::{ExecutedCrossbar, CONV_EXEC_SEED};
+pub use executed::{ExecutedCrossbar, ExecutedNet, CONV_EXEC_SEED};
 pub use gpu::GpuRoofline;
 
 use crate::gpumodel::{GpuDtype, GpuSpec};
@@ -144,7 +149,8 @@ impl Estimate {
 }
 
 /// The grammar `parse` accepts (also the error-message help text).
-pub const ID_GRAMMAR: &str = "pim:SET[@RxC] | pim-exec:SET[@RxC] | gpu:NAME[:MODE[:DTYPE]] \
+pub const ID_GRAMMAR: &str = "pim:SET[@RxC] | pim-exec:SET[@RxC] | pim-exec-net:SET[@RxC] | \
+     gpu:NAME[:MODE[:DTYPE]] \
      (SET: memristive|dram; NAME: a6000|a100|v100|rtx3090; \
      MODE: experimental|theoretical; DTYPE: auto|fp32|fp16|fp16-tensor)";
 
@@ -164,6 +170,7 @@ pub fn parse(id: &str) -> Result<Box<dyn Backend>> {
     match kind {
         "pim" => Ok(Box::new(AnalyticPim::new(parse_arch(rest)?))),
         "pim-exec" => Ok(Box::new(ExecutedCrossbar::new(parse_arch(rest)?))),
+        "pim-exec-net" => Ok(Box::new(ExecutedNet::new(parse_arch(rest)?))),
         "gpu" => parse_gpu(rest),
         other => anyhow::bail!("unknown backend kind `{other}`; known: {ID_GRAMMAR}"),
     }
@@ -291,6 +298,9 @@ pub fn builtin() -> Vec<Box<dyn Backend>> {
     for set in GateSet::all() {
         out.push(Box::new(ExecutedCrossbar::new(ArchSpec::paper(set))));
     }
+    for set in GateSet::all() {
+        out.push(Box::new(ExecutedNet::new(ArchSpec::paper(set))));
+    }
     for spec in GpuSpec::all() {
         for mode in [GpuMode::Experimental, GpuMode::Theoretical] {
             out.push(Box::new(GpuRoofline::new(spec, mode, None)));
@@ -311,6 +321,8 @@ mod tests {
             "pim:dram",
             "pim:memristive@1024x512",
             "pim-exec:dram",
+            "pim-exec-net:memristive",
+            "pim-exec-net:dram@512x1024",
             "gpu:a6000:experimental",
             "gpu:a100:theoretical",
             "gpu:v100:experimental:fp16",
@@ -339,6 +351,7 @@ mod tests {
             "pim:memristive@0x1024",
             "pim:memristive@8xbig",
             "pim-exec:analog",
+            "pim-exec-net:cmos",
             "gpu:h100",
             "gpu:a6000:overclocked",
             "gpu:a6000:experimental:int8",

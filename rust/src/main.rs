@@ -11,13 +11,17 @@
 //!   experiments (paper tables/figures + sensitivity studies) and write
 //!   reports.
 //! * `sweep <campaign.json|builtin>` — expand a declarative sweep
-//!   campaign (builtin `fig4`/`fig5`/`sens-dims`/`conv-exec` or a JSON
+//!   campaign (builtin `fig4`/`fig5`/`sens-dims`/`conv-exec`/`net-exec` or a JSON
 //!   grid file) into points, execute them concurrently with
 //!   content-addressed result caching, and stream table/CSV/JSONL output.
 //! * `exec-conv --layer model:sel [--scale N]` — execute a down-scaled
 //!   model-zoo conv layer bit-exactly on the crossbar via im2col and
 //!   cross-check the measured per-MAC cost against the analytic CNN
 //!   model.
+//! * `exec-net --model alexnet [--scale N] [--batch N]` — execute a whole
+//!   down-scaled network end to end on the crossbar (conv/fc/pool/relu),
+//!   verify every output bit-exactly, and report inter-layer data
+//!   movement as its own cost bucket.
 //! * `compare --workload NAME --backends ID[,ID...]` — evaluate one
 //!   workload across N evaluation backends ([`convpim::backend`]) side
 //!   by side: analytic PIM, executed crossbar, GPU rooflines.
@@ -42,7 +46,8 @@ use std::process::ExitCode;
 use anyhow::Context as _;
 use convpim::coordinator::report;
 use convpim::service::{
-    self, resolve_jobs, ConvExecSpec, EvalRequest, EvalResponse, EvalService, ResultCache, SetSel,
+    self, resolve_jobs, ConvExecSpec, EvalRequest, EvalResponse, EvalService, NetExecSpec,
+    ResultCache, SetSel,
 };
 use convpim::sweep::campaign::fmt_from_name;
 use convpim::sweep::{Campaign, OutputFormat, Streamer, WorkloadSpec};
@@ -59,6 +64,9 @@ USAGE:
                 [--no-cache] [--cache-dir DIR] [--out FILE]
   convpim exec-conv --layer MODEL:SEL [--scale N] [--fmt FMT] [--set memristive|dram|both]
                     [--seed N] [--rows N] [--no-cache] [--cache-dir DIR]
+  convpim exec-net --model MODEL [--scale N] [--batch N] [--fmt FMT]
+                   [--set memristive|dram|both] [--seed N] [--rows N]
+                   [--no-cache] [--cache-dir DIR]
   convpim compare --workload NAME --backends ID[,ID...] [--fmt FMT]
                   [--no-cache] [--cache-dir DIR]
   convpim validate [--rows N] [--seed N]
@@ -101,6 +109,17 @@ N-th conv layer), a layer name, or a name prefix. FMT is fixed8|fixed16|
 fixed32|fp16|fp32|fp64 (default: fixed8 and fp32). Exits nonzero if any
 executed cell deviates from the model. See docs/EXPERIMENTS.md CONV.
 
+`exec-net` executes a whole network end to end on the crossbar simulator
+(down-scaled by --scale, default 16): conv and fc layers via the im2col
+MAC microcode, pooling and ReLU as column-parallel compare/select
+programs. Tiles are pipelined across layers and batch samples on the
+thread pool — outputs are byte-identical at any worker count. Every
+output is verified bit-exactly against a host reference, per-layer MAC
+costs are cross-checked against the analytic CNN model, and inter-layer
+data movement (staging cycles and bits) is reported as its own cost
+bucket next to compute. MODEL is currently alexnet. Exits nonzero if any
+cell fails verification. See docs/EXPERIMENTS.md NET-EXEC.
+
 `compare` evaluates ONE workload across N evaluation backends side by
 side — the paper's workload x platform matrix as one command. Backends
 are named by registry id: pim:SET[@RxC] (the analytic architecture
@@ -108,7 +127,8 @@ model), pim-exec:SET[@RxC] (bit-exact seeded execution on the crossbar
 simulator; conv-exec workloads only, fails on any measured-vs-analytic
 deviation), gpu:NAME[:MODE[:DTYPE]] (datasheet rooflines). Workload
 names: elementwise-OP, matmul-nN, cnn-MODEL[-train], decode-sN,
-conv-exec-MODEL-cN-sM. `convpim list` prints the registered backends;
+conv-exec-MODEL-cN-sM, net-exec-MODEL-sN. `convpim list` prints the
+registered backends;
 campaigns can add the same ids as a `backends` axis (EXPERIMENTS.md
 COMPARE/SWEEP).
 
@@ -136,8 +156,9 @@ given --jobs/--queue/cache flags; --addr targets a running daemon
 instead. Exits nonzero (after writing) if any level degenerates.
 
 EXPERIMENTS: table1 fig3 fig4 fig5 fig6 fig7 fig8 sens-gpu sens-fp16 sens-dims conv-exec
-SWEEP CAMPAIGNS (builtin): fig4 fig5 sens-dims conv-exec
+SWEEP CAMPAIGNS (builtin): fig4 fig5 sens-dims conv-exec net-exec
 BACKENDS: pim:memristive pim:dram pim-exec:memristive pim-exec:dram
+          pim-exec-net:memristive pim-exec-net:dram
           gpu:{a6000,a100,v100,rtx3090}:{experimental,theoretical}[:fp32|fp16|fp16-tensor]
 ";
 
@@ -157,6 +178,7 @@ fn main() -> ExitCode {
         "run" => cmd_run(&args),
         "sweep" => cmd_sweep(&args),
         "exec-conv" => cmd_exec_conv(&args),
+        "exec-net" => cmd_exec_net(&args),
         "compare" => cmd_compare(&args),
         "validate" => cmd_validate(&args),
         "serve" => cmd_serve(&args),
@@ -440,11 +462,75 @@ fn cmd_exec_conv(args: &Args) -> anyhow::Result<()> {
     }
 }
 
+/// Execute a whole down-scaled network end to end on the crossbar and
+/// report compute vs inter-layer movement, verified bit-exactly.
+fn cmd_exec_net(args: &Args) -> anyhow::Result<()> {
+    let model = args.flag_opt("model").ok_or_else(|| {
+        anyhow::Error::msg("exec-net needs --model MODEL (e.g. --model alexnet)")
+    })?;
+    let scale = args.flag_usize("scale", 16).map_err(anyhow::Error::msg)?;
+    // Like exec-conv: scale 0 would silently execute the full-size
+    // network (effectively a hang), so reject it up front.
+    let scale = u32::try_from(scale)
+        .ok()
+        .filter(|&s| s >= 1)
+        .ok_or_else(|| {
+            anyhow::Error::msg(format!("--scale must be in 1..=u32::MAX, got {scale}"))
+        })?;
+    let batch = args.flag_usize("batch", 1).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(
+        (1..=1024).contains(&batch),
+        "--batch must be in 1..=1024, got {batch}"
+    );
+    let seed = args.flag_usize("seed", 0xC0DE).map_err(anyhow::Error::msg)? as u64;
+    let rows = args.flag_usize("rows", 0).map_err(anyhow::Error::msg)?;
+    let set_name = args.flag("set", "both");
+    let set = SetSel::from_name(set_name).ok_or_else(|| {
+        anyhow::Error::msg(format!(
+            "--set must be memristive|dram|both, got `{set_name}`"
+        ))
+    })?;
+    let fmt = match args.flag_opt("fmt") {
+        None => None,
+        Some(name) => Some(fmt_from_name(name).ok_or_else(|| {
+            anyhow::Error::msg(format!(
+                "unknown format `{name}` (use fixed8|fixed16|fixed32|fp16|fp32|fp64)"
+            ))
+        })?),
+    };
+
+    let service = service_from(args)?;
+    let resp = service.submit(&EvalRequest::NetExec(NetExecSpec {
+        model: model.to_string(),
+        scale,
+        batch,
+        fmt,
+        set,
+        seed,
+        rows,
+    }));
+    // A replayed verdict must never look like a fresh execution.
+    if resp.meta.cache == convpim::service::CacheStatus::Hit {
+        eprintln!(
+            "exec-net: verdict served from the result cache (no execution this run); \
+             pass --no-cache to re-execute, e.g. after engine changes"
+        );
+    }
+    // On a verification failure the table still prints (that is the
+    // diagnostic) before the nonzero exit.
+    print!("{}", resp.stdout);
+    match resp.meta.ok {
+        true => Ok(()),
+        false => Err(response_error(&resp)),
+    }
+}
+
 /// Evaluate one workload across N evaluation backends side by side (the
 /// workload × platform matrix as one command).
 fn cmd_compare(args: &Args) -> anyhow::Result<()> {
     const WORKLOAD_GRAMMAR: &str =
-        "elementwise-OP | matmul-nN | cnn-MODEL[-train] | decode-sN | conv-exec-MODEL-cN-sM";
+        "elementwise-OP | matmul-nN | cnn-MODEL[-train] | decode-sN | conv-exec-MODEL-cN-sM \
+         | net-exec-MODEL-sN";
     let workload_name = args.flag_opt("workload").ok_or_else(|| {
         anyhow::Error::msg(format!(
             "compare needs --workload NAME (e.g. --workload cnn-alexnet; names: {WORKLOAD_GRAMMAR})"

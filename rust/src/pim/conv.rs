@@ -177,7 +177,7 @@ impl ConvProgram {
 /// Copy one column into another through the layout's scratch column:
 /// two NOTs on the NOR set (stateful logic has no native copy), one AAP
 /// `Copy` on DRAM.
-fn emit_move(prog: &mut Program, set: GateSet, tmp: Col, src: Col, dst: Col) {
+pub(crate) fn emit_move(prog: &mut Program, set: GateSet, tmp: Col, src: Col, dst: Col) {
     debug_assert!(src != dst && src != tmp && dst != tmp);
     match set {
         GateSet::MemristiveNor => {
@@ -253,7 +253,7 @@ pub fn conv_program(fmt: NumFmt, l: usize, set: GateSet) -> ConvProgram {
 /// im2col gather: patch element `t` of flattened output position `pos`,
 /// zero for padding. Reduction order is channel-major:
 /// `t = (c·K + ky)·K + kx`.
-fn patch_value(spec: &ConvSpec, input: &[u64], wo: u32, pos: usize, t: usize) -> u64 {
+pub(crate) fn patch_value(spec: &ConvSpec, input: &[u64], wo: u32, pos: usize, t: usize) -> u64 {
     let k = spec.k as usize;
     let c = t / (k * k);
     let ky = (t / k) % k;

@@ -101,6 +101,75 @@ pub fn max_fixed_program(n: u32, set: GateSet) -> Program {
     b.finish()
 }
 
+/// Vectored **signed** two's-complement maximum `z = max(u, v)`
+/// (three-field layout). Signed compare is unsigned compare of the
+/// *biased* keys (sign bit flipped), then a mux of the originals — the
+/// pooling primitive of the executed network path
+/// ([`crate::pim::netexec`]), consistent with the signed semantics of
+/// [`relu_fixed_program`].
+pub fn max_signed_program(n: u32, set: GateSet) -> Program {
+    let lay = FixedLayout::new(FixedOp::Add, n);
+    let mut b = Builder::new(set, lay.reserved());
+    let u = lay.u_cols();
+    let v = lay.v_cols();
+    let nn = n as usize;
+    // Flip the sign bits: ku >= kv (unsigned) <=> u >= v (signed).
+    let su = b.not(u[nn - 1]);
+    let sv = b.not(v[nn - 1]);
+    let mut ku = u.clone();
+    ku[nn - 1] = su;
+    let mut kv = v.clone();
+    kv[nn - 1] = sv;
+    let (diff, geq) = b.sub_words(&ku, &kv, None);
+    b.free_word(&diff);
+    b.free(su);
+    b.free(sv);
+    let z = b.mux_word(geq, &u, &v);
+    for (k, &c) in z.iter().enumerate() {
+        b.copy_into(c, lay.z + k as Col);
+    }
+    b.free_word(&z);
+    b.free(geq);
+    b.finish()
+}
+
+/// Vectored IEEE-754 maximum `z = max(u, v)` under the total order of the
+/// sign-magnitude encoding (three-field layout).
+///
+/// Each operand is mapped to a monotone unsigned key — `k = bits ^ sign`
+/// on the low `N−1` bits with `!sign` as the top key bit (the classic
+/// radix-sortable float transform) — then compared unsigned and the
+/// *original* operands muxed. Under this order `-Inf < -x < ±0 < x <
+/// +Inf < +NaN` and `-NaN` sorts below `-Inf`; for the finite operands
+/// the executed network path feeds it, this is exactly IEEE `max`.
+pub fn max_float_program(fmt: Format, set: GateSet) -> Program {
+    let n = fmt.bits();
+    let lay = FixedLayout::new(FixedOp::Add, n);
+    let mut b = Builder::new(set, lay.reserved());
+    let u = lay.u_cols();
+    let v = lay.v_cols();
+    let nn = n as usize;
+    let key = |b: &mut Builder, w: &[Col]| -> Vec<Col> {
+        let s = w[nn - 1];
+        let mut k: Vec<Col> = (0..nn - 1).map(|i| b.xor(w[i], s)).collect();
+        k.push(b.not(s));
+        k
+    };
+    let ku = key(&mut b, &u);
+    let kv = key(&mut b, &v);
+    let (diff, geq) = b.sub_words(&ku, &kv, None); // geq <=> key(u) >= key(v)
+    b.free_word(&diff);
+    b.free_word(&ku);
+    b.free_word(&kv);
+    let z = b.mux_word(geq, &u, &v);
+    for (k, &c) in z.iter().enumerate() {
+        b.copy_into(c, lay.z + k as Col);
+    }
+    b.free_word(&z);
+    b.free(geq);
+    b.finish()
+}
+
 /// Vectored unsigned comparison `z = (u < v) ? 1 : 0` (z is 1 bit wide,
 /// written to the first z column of the standard layout).
 pub fn lt_fixed_program(n: u32, set: GateSet) -> Program {
@@ -258,6 +327,96 @@ mod tests {
             let z = x.read_field(lay.z, 1, 100);
             for i in 0..100 {
                 assert_eq!(z[i] == 1, u[i] < v[i], "lt set={set:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn max_signed_semantics() {
+        let mut rng = Rng::new(66);
+        for set in GateSet::all() {
+            let n = 10;
+            let prog = max_signed_program(n, set);
+            prog.validate_for(set).unwrap();
+            let mut u = rng.vec_bits(120, n);
+            let mut v = rng.vec_bits(120, n);
+            // Pin the edges: most-negative vs most-positive, equal values,
+            // and ±0-adjacent pairs.
+            let edges = [
+                (1u64 << (n - 1), (1 << (n - 1)) - 1),
+                (0, mask(n)),
+                (5, 5),
+                (mask(n), 1),
+            ];
+            for (i, &(a, b)) in edges.iter().enumerate() {
+                u[i] = a;
+                v[i] = b;
+            }
+            let lay = FixedLayout::new(FixedOp::Add, n);
+            let mut x = Crossbar::new(120, prog.width() as usize);
+            fixed::load_operands(&mut x, &lay, &u, &v);
+            x.execute(&prog);
+            let z = x.read_field(lay.z, n, 120);
+            for i in 0..120 {
+                let expect = if sext(u[i], n) >= sext(v[i], n) { u[i] } else { v[i] };
+                assert_eq!(
+                    z[i], expect,
+                    "set={set:?} max({}, {})",
+                    sext(u[i], n),
+                    sext(v[i], n)
+                );
+            }
+        }
+    }
+
+    /// Host-side mirror of the float max total-order key: monotone
+    /// unsigned image of the sign-magnitude encoding.
+    fn float_key(v: u64, n: u32) -> u64 {
+        if v >> (n - 1) & 1 == 1 {
+            !v & mask(n)
+        } else {
+            v | 1 << (n - 1)
+        }
+    }
+
+    #[test]
+    fn max_float_total_order() {
+        let mut rng = Rng::new(67);
+        for set in GateSet::all() {
+            let fmt = Format::FP16;
+            let n = fmt.bits();
+            let prog = max_float_program(fmt, set);
+            prog.validate_for(set).unwrap();
+            let mut u: Vec<u64> = (0..200).map(|_| rng.float_pattern(5, 10)).collect();
+            let mut v: Vec<u64> = (0..200).map(|_| rng.float_pattern(5, 10)).collect();
+            // ±0, ±Inf, NaN vs +Inf, equal operands.
+            let edges = [
+                (0u64, 1u64 << (n - 1)),          // +0 vs -0
+                (fmt.inf(false), fmt.qnan()),     // +Inf vs +NaN
+                (fmt.inf(true), 1 << (n - 1)),    // -Inf vs -0
+                (42, 42),
+            ];
+            for (i, &(a, b)) in edges.iter().enumerate() {
+                u[i] = a;
+                v[i] = b;
+            }
+            let lay = FixedLayout::new(FixedOp::Add, n);
+            let mut x = Crossbar::new(200, prog.width() as usize);
+            fixed::load_operands(&mut x, &lay, &u, &v);
+            x.execute(&prog);
+            let z = x.read_field(lay.z, n, 200);
+            for i in 0..200 {
+                let expect = if float_key(u[i], n) >= float_key(v[i], n) {
+                    u[i]
+                } else {
+                    v[i]
+                };
+                assert_eq!(z[i], expect, "set={set:?} {:#x} vs {:#x}", u[i], v[i]);
+                // For finite pairs this is IEEE max.
+                let (fu, fv) = (fmt.to_f64(u[i]), fmt.to_f64(v[i]));
+                if fu.is_finite() && fv.is_finite() && fu != fv {
+                    assert_eq!(fmt.to_f64(z[i]), fu.max(fv), "ieee max");
+                }
             }
         }
     }

@@ -34,6 +34,10 @@
 //! * [`conv`] — the *executed* im2col convolution engine: model-zoo conv
 //!   layers run bit-exactly on the crossbar, with per-MAC costs tied to
 //!   the analytic [`matpim::CnnPimModel`] by construction.
+//! * [`netexec`] — the layer-graph executor: whole networks (conv, pool,
+//!   ReLU, FC) run end to end on the crossbar with tiles pipelined
+//!   across layers and inter-layer data movement tracked as a separate
+//!   cost bucket.
 //! * [`arch`] — memory-scale architecture model (48 GB of crossbars):
 //!   throughput, power, and energy-per-operation.
 
@@ -46,6 +50,7 @@ pub mod float;
 pub mod gates;
 pub mod isa;
 pub mod matpim;
+pub mod netexec;
 pub mod oracle;
 pub mod softfloat;
 pub mod tile;

@@ -1,0 +1,1382 @@
+//! End-to-end executed network inference on the bit-exact crossbar.
+//!
+//! [`crate::pim::conv`] executes *one* conv layer; the paper's headline
+//! numbers (fig6 inference, fig7 training) are *whole networks*. This
+//! module closes that gap: a [`NetGraph`] is a linear chain of executable
+//! layers — conv, max-pool, ReLU, and fully-connected (an FC layer **is**
+//! a 1×1 convolution over the flattened input, so it reuses the im2col
+//! MAC schedule verbatim) — and [`execute_net`] runs the chain end to end
+//! on simulated crossbars, bit-identically to a nested-loop host
+//! reference ([`reference_net`]).
+//!
+//! ## Per-layer microcode
+//!
+//! * **conv / fc** — [`conv_program`]: per-MAC compute cycles/gates equal
+//!   the analytic [`CnnPimModel`]'s *by construction* (the cross-check the
+//!   backend and the fig6 experiment enforce per layer).
+//! * **pool** — [`pool_program`]: an accumulator fold over the `K×K`
+//!   window through an embedded, column-relocated copy of the signed
+//!   (fixed) / total-order (float) max-select program
+//!   ([`crate::pim::elementwise`]); op cost is exactly
+//!   `(K² − 1) × max.cycles()` per output, the rest is staging.
+//! * **relu** — the vectored ReLU programs, one output element per row.
+//!
+//! ## Cost buckets
+//!
+//! Every layer reports three separate buckets, all in row-parallel units
+//! (one row executing one cycle = one row-cycle of work):
+//!
+//! 1. **op** — the arithmetic itself (what the paper's upper bound
+//!    counts);
+//! 2. **move** — intra-row operand staging inside the microcode (copies
+//!    between bit-fields);
+//! 3. **stage bits** — *inter-layer* data movement: every bit written
+//!    into a crossbar operand field or read back out between layers. This
+//!    is the bucket the paper's analytic model ignores entirely, and the
+//!    quantity this module exists to measure.
+//!
+//! ## Pipelined tiles
+//!
+//! Layers are tiled exactly like single-layer conv execution
+//! ([`crate::pim::tile`]); tile tasks form a dependency DAG (a tile of
+//! layer N+1 depends only on the producer tiles of layer N whose output
+//! range it reads), and self-scheduling workers on the process-wide pool
+//! drain the DAG — so layer N+1 starts on finished tiles of layer N
+//! before layer N is complete, and independent batch samples interleave
+//! freely. Outputs and cost totals are **byte-identical at any worker
+//! count**: each output element is produced by exactly one deterministic
+//! tile program, and cost accounting is integer arithmetic derived from
+//! the plan, not from timing.
+//!
+//! Long evaluations poll a cooperative [`Deadline`] between tiles, so a
+//! served `exec-net` request can expire mid-evaluation with a structured
+//! error instead of holding a session hostage.
+//!
+//! [`CnnPimModel`]: crate::pim::matpim::CnnPimModel
+
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+
+use anyhow::Result;
+
+use super::conv::{conv_program, emit_move, patch_value, ConvProgram};
+use super::elementwise::{
+    max_float_program, max_signed_program, relu_fixed_program, relu_float_program, UnaryLayout,
+};
+use super::gates::GateSet;
+use super::isa::{Col, Program};
+use super::matpim::NumFmt;
+use super::tile::Tiling;
+use super::xbar::Crossbar;
+use crate::util::deadline::Deadline;
+use crate::util::pool::Pool;
+use crate::util::rng::Rng;
+use crate::workloads::ConvSpec;
+
+/// One executable layer kind. Tensors are flat `[c][y][x]` bit-pattern
+/// vectors throughout, so each layer's output is directly the next
+/// layer's input.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NetOp {
+    /// Dense 2D convolution (im2col MAC schedule).
+    Conv(ConvSpec),
+    /// Fully connected — *resolved* at graph-build time to the equivalent
+    /// 1×1 convolution over the flattened input (`cin = C·H·W`, `h = w =
+    /// k = 1`), so it reuses the conv microcode and analytic model
+    /// unchanged. Kept distinct for reporting.
+    Fc(ConvSpec),
+    /// Elementwise ReLU (signed fixed / IEEE float semantics).
+    Relu,
+    /// Max pooling with a square `k` window and `stride`, no padding
+    /// (`k` is pre-clamped to the input by the graph builder).
+    Pool { k: u32, stride: u32 },
+}
+
+/// One layer of a [`NetGraph`], with its resolved input/output shapes.
+#[derive(Clone, Debug)]
+pub struct NetLayer {
+    pub name: String,
+    pub op: NetOp,
+    /// Input (channels, height, width).
+    pub in_shape: (u32, u32, u32),
+    /// Output (channels, height, width).
+    pub out_shape: (u32, u32, u32),
+}
+
+impl NetLayer {
+    /// Reporting label of the layer kind.
+    pub fn kind(&self) -> &'static str {
+        match self.op {
+            NetOp::Conv(_) => "conv",
+            NetOp::Fc(_) => "fc",
+            NetOp::Relu => "relu",
+            NetOp::Pool { .. } => "pool",
+        }
+    }
+
+    /// Flat element count of the layer output.
+    pub fn out_elems(&self) -> usize {
+        let (c, h, w) = self.out_shape;
+        (c * h * w) as usize
+    }
+
+    /// MACs of the layer (0 for relu/pool).
+    pub fn macs(&self) -> u64 {
+        match self.op {
+            NetOp::Conv(s) | NetOp::Fc(s) => s.macs(),
+            _ => 0,
+        }
+    }
+}
+
+/// An executable layer chain: shapes resolved, every layer's geometry
+/// validated at build time.
+#[derive(Clone, Debug)]
+pub struct NetGraph {
+    pub name: String,
+    /// Input (channels, height, width).
+    pub input: (u32, u32, u32),
+    pub layers: Vec<NetLayer>,
+}
+
+impl NetGraph {
+    /// Start a graph at the given input shape.
+    pub fn new(name: &str, c: u32, h: u32, w: u32) -> NetGraph {
+        assert!(c > 0 && h > 0 && w > 0, "empty input shape");
+        NetGraph {
+            name: name.into(),
+            input: (c, h, w),
+            layers: Vec::new(),
+        }
+    }
+
+    /// Current (channels, height, width).
+    pub fn shape(&self) -> (u32, u32, u32) {
+        self.layers.last().map_or(self.input, |l| l.out_shape)
+    }
+
+    /// Flat element count of the graph input.
+    pub fn in_elems(&self) -> usize {
+        let (c, h, w) = self.input;
+        (c * h * w) as usize
+    }
+
+    /// Flat element count of the final output.
+    pub fn out_elems(&self) -> usize {
+        let (c, h, w) = self.shape();
+        (c * h * w) as usize
+    }
+
+    fn push(&mut self, name: &str, op: NetOp, out_shape: (u32, u32, u32)) -> &mut Self {
+        self.layers.push(NetLayer {
+            name: name.into(),
+            op,
+            in_shape: self.shape(),
+            out_shape,
+        });
+        self
+    }
+
+    /// Append a conv layer. The kernel is clamped so it never exceeds the
+    /// padded input — that keeps aggressively down-scaled model-zoo
+    /// graphs valid (the same role as [`ConvSpec::scaled`]'s clamping).
+    pub fn conv(&mut self, name: &str, cout: u32, k: u32, stride: u32, pad: u32) -> &mut Self {
+        assert!(cout > 0 && k > 0 && stride > 0);
+        let (c, h, w) = self.shape();
+        let k = k.min(h + 2 * pad).min(w + 2 * pad);
+        let spec = ConvSpec { cin: c, cout, h, w, k, stride, pad };
+        let (ho, wo) = spec.out_dims();
+        self.push(name, NetOp::Conv(spec), (cout, ho, wo))
+    }
+
+    /// Append a fully connected layer over the flattened current shape —
+    /// stored as its equivalent 1×1 conv.
+    pub fn fc(&mut self, name: &str, out_f: u32) -> &mut Self {
+        assert!(out_f > 0);
+        let (c, h, w) = self.shape();
+        let spec = ConvSpec {
+            cin: c * h * w,
+            cout: out_f,
+            h: 1,
+            w: 1,
+            k: 1,
+            stride: 1,
+            pad: 0,
+        };
+        self.push(name, NetOp::Fc(spec), (out_f, 1, 1))
+    }
+
+    /// Append a ReLU over the current shape.
+    pub fn relu(&mut self, name: &str) -> &mut Self {
+        let shape = self.shape();
+        self.push(name, NetOp::Relu, shape)
+    }
+
+    /// Append a max-pool layer (no padding); `k` is clamped to the input
+    /// so scaled-down graphs stay valid.
+    pub fn pool(&mut self, name: &str, k: u32, stride: u32) -> &mut Self {
+        assert!(k > 0 && stride > 0);
+        let (c, h, w) = self.shape();
+        let k = k.min(h).min(w);
+        let ho = (h - k) / stride + 1;
+        let wo = (w - k) / stride + 1;
+        self.push(name, NetOp::Pool { k, stride }, (c, ho, wo))
+    }
+
+    /// AlexNet, down-scaled by an integer factor (channels `÷ scale`,
+    /// input spatial dims `÷ scale`, kernels clamped where the scaled
+    /// input is smaller than the original window) — the same shrinking
+    /// discipline as [`ConvSpec::scaled`], applied to the whole network
+    /// so it executes on the simulator in seconds.
+    pub fn alexnet(scale: u32) -> NetGraph {
+        let scale = scale.max(1);
+        let ch = |c: u32| (c / scale).max(1);
+        let sp = (224 / scale).max(1);
+        let mut g = NetGraph::new(&format!("alexnet-s{scale}"), ch(3), sp, sp);
+        g.conv("c1", ch(64), 11, 4, 2)
+            .relu("c1.relu")
+            .pool("p1", 3, 2)
+            .conv("c2", ch(192), 5, 1, 2)
+            .relu("c2.relu")
+            .pool("p2", 3, 2)
+            .conv("c3", ch(384), 3, 1, 1)
+            .relu("c3.relu")
+            .conv("c4", ch(256), 3, 1, 1)
+            .relu("c4.relu")
+            .conv("c5", ch(256), 3, 1, 1)
+            .relu("c5.relu")
+            .pool("p5", 3, 2)
+            .fc("fc6", ch(4096))
+            .relu("fc6.relu")
+            .fc("fc7", ch(4096))
+            .relu("fc7.relu")
+            .fc("fc8", ch(1000));
+        g
+    }
+
+    /// Look up a model by name (the CLI/service selector). Only models
+    /// with a full executable layer chain qualify.
+    pub fn model(name: &str, scale: u32) -> Option<NetGraph> {
+        match name {
+            "alexnet" => Some(NetGraph::alexnet(scale)),
+            _ => None,
+        }
+    }
+
+    /// Names accepted by [`NetGraph::model`].
+    pub fn model_names() -> &'static [&'static str] {
+        &["alexnet"]
+    }
+}
+
+/// The compiled max-pool row schedule for one (format, window, gate set):
+/// an accumulator fold through an embedded relocated max-select program.
+/// One crossbar row = one pooled output element; the window field `A`
+/// holds the `K²` window elements.
+#[derive(Clone, Debug)]
+pub struct PoolProgram {
+    pub prog: Program,
+    /// Element width in bits.
+    pub bits: u32,
+    /// Window elements `K²`.
+    pub kk: usize,
+    /// First column of the window field `A`.
+    pub a: Col,
+    /// First column of the accumulator / output field.
+    pub acc: Col,
+    /// Total crossbar width of the schedule.
+    pub width: Col,
+    /// Compute cycles per output: exactly `(K² − 1) × max.cycles()`.
+    pub op_cycles: u64,
+    /// Compute gates per output.
+    pub op_gates: u64,
+    /// Staging cycles per output (field copies around the max program).
+    pub move_cycles: u64,
+    /// Staging gates per output.
+    pub move_gates: u64,
+}
+
+/// Compile the max-pool fold for a `kk`-element window in `fmt` on `set`.
+pub fn pool_program(fmt: NumFmt, kk: usize, set: GateSet) -> PoolProgram {
+    assert!(kk > 0, "empty pool window");
+    let n = fmt.bits();
+    let max = match fmt {
+        NumFmt::Fixed(nb) => max_signed_program(nb, set),
+        NumFmt::Float(f) => max_float_program(f, set),
+    };
+    let a: Col = 0;
+    let acc = kk as Col * n;
+    let tmp = acc + n;
+    let max_base = tmp + 1;
+    let width = max_base + max.width();
+    // The max program's operand/result fields sit at the standard
+    // three-field offsets, relocated to `max_base`.
+    let (op_u, op_v, op_z) = (0 as Col, n, 2 * n);
+    let mut prog = Program::new(set);
+    // acc := A[0]
+    for j in 0..n {
+        emit_move(&mut prog, set, tmp, a + j, acc + j);
+    }
+    for t in 1..kk {
+        for j in 0..n {
+            emit_move(&mut prog, set, tmp, acc + j, max_base + op_u + j);
+            emit_move(&mut prog, set, tmp, a + t as Col * n + j, max_base + op_v + j);
+        }
+        prog.extend_relocated(&max, max_base);
+        for j in 0..n {
+            emit_move(&mut prog, set, tmp, max_base + op_z + j, acc + j);
+        }
+    }
+    debug_assert!(prog.validate_for(set).is_ok());
+    debug_assert!(prog.width() <= width);
+    let op_cycles = (kk as u64 - 1) * max.cycles();
+    let op_gates = (kk as u64 - 1) * max.gates();
+    PoolProgram {
+        move_cycles: prog.cycles() - op_cycles,
+        move_gates: prog.gates() - op_gates,
+        prog,
+        bits: n,
+        kk,
+        a,
+        acc,
+        width,
+        op_cycles,
+        op_gates,
+    }
+}
+
+/// The per-layer record of an executed network run (all quantities per
+/// batch sample; the run is shape-identical across samples).
+#[derive(Clone, Debug)]
+pub struct LayerRun {
+    pub name: String,
+    /// `conv` / `fc` / `relu` / `pool`.
+    pub kind: &'static str,
+    /// Flat output elements.
+    pub out_elems: usize,
+    /// Crossbar tiles the layer was sharded into.
+    pub tiles: usize,
+    /// MACs (conv/fc; 0 otherwise).
+    pub macs: u64,
+    /// Elementwise select/activation ops (pool: `(K²−1)` per output;
+    /// relu: 1 per output; 0 for conv/fc).
+    pub elem_ops: u64,
+    /// Compute cycles of one MAC — equals
+    /// [`CnnPimModel::mac_cycles`](crate::pim::matpim::CnnPimModel::mac_cycles)
+    /// by construction (0 for relu/pool).
+    pub mac_cycles: u64,
+    /// Compute gates of one MAC (0 for relu/pool).
+    pub mac_gates: u64,
+    /// Compute work, row-cycles: the arithmetic the analytic upper bound
+    /// counts.
+    pub op_cycles: u64,
+    /// Compute work, row-gates.
+    pub op_gates: u64,
+    /// Intra-row staging work, row-cycles (operand shuffling inside the
+    /// microcode).
+    pub move_cycles: u64,
+    /// Intra-row staging work, row-gates.
+    pub move_gates: u64,
+    /// **Inter-layer** data movement: bits written into crossbar operand
+    /// fields plus bits read back out — the separate bucket the analytic
+    /// model ignores.
+    pub stage_bits: u64,
+    /// Crossbar columns one row of this layer's schedule occupies.
+    pub program_width: u32,
+}
+
+impl LayerRun {
+    /// Total row-cycles of crossbar work (op + intra-row staging).
+    pub fn total_cycles(&self) -> u64 {
+        self.op_cycles + self.move_cycles
+    }
+}
+
+/// The record of one executed network inference (possibly batched).
+#[derive(Clone, Debug)]
+pub struct NetRun {
+    /// Graph name (e.g. `alexnet-s16`).
+    pub name: String,
+    pub fmt: NumFmt,
+    pub set: GateSet,
+    /// Batch size executed.
+    pub batch: usize,
+    /// Crossbar height tiles were planned against.
+    pub xbar_rows: usize,
+    /// Worker count the tile DAG was drained with (1 = serial).
+    pub jobs: usize,
+    /// Per-layer records (per sample).
+    pub layers: Vec<LayerRun>,
+    /// Final output tensor of every batch sample, flat `[c][y][x]`.
+    pub outputs: Vec<Vec<u64>>,
+    /// Tile tasks executed (batch × Σ tiles).
+    pub tasks: usize,
+    /// Row-gates the simulator actually executed over the whole batch;
+    /// validated against the plan-derived count before returning.
+    pub executed_row_gates: u64,
+}
+
+impl NetRun {
+    /// Total MACs per sample.
+    pub fn macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs).sum()
+    }
+
+    /// Compute work per sample, row-cycles.
+    pub fn op_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.op_cycles).sum()
+    }
+
+    /// Intra-row staging work per sample, row-cycles.
+    pub fn move_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.move_cycles).sum()
+    }
+
+    /// Total crossbar work per sample, row-cycles (op + staging).
+    pub fn total_cycles(&self) -> u64 {
+        self.op_cycles() + self.move_cycles()
+    }
+
+    /// Inter-layer movement per sample, bits.
+    pub fn stage_bits(&self) -> u64 {
+        self.layers.iter().map(|l| l.stage_bits).sum()
+    }
+
+    /// Fraction of total row-cycle work that is staging overhead — what
+    /// the paper's upper bound ignores.
+    pub fn move_fraction(&self) -> f64 {
+        self.move_cycles() as f64 / self.total_cycles().max(1) as f64
+    }
+}
+
+/// Options of [`execute_net`].
+#[derive(Clone, Copy, Debug)]
+pub struct NetExecOpts {
+    /// Rows per crossbar instance (tile height budget).
+    pub xbar_rows: usize,
+    /// Pipeline worker count; 0 = one per pool thread + the caller,
+    /// 1 = fully serial.
+    pub jobs: usize,
+    /// Cooperative deadline polled between tiles.
+    pub deadline: Deadline,
+}
+
+impl Default for NetExecOpts {
+    fn default() -> Self {
+        NetExecOpts {
+            xbar_rows: 1024,
+            jobs: 0,
+            deadline: Deadline::none(),
+        }
+    }
+}
+
+/// Deterministic seeded operands for a whole graph: one input tensor per
+/// batch sample and one weight vector per layer (empty for relu/pool).
+/// Same generator discipline as [`crate::pim::conv::seeded_operands`] —
+/// every cross-validating caller goes through this function so
+/// "bit-exact vs reference" always refers to the same data.
+pub fn seeded_net_operands(
+    graph: &NetGraph,
+    fmt: NumFmt,
+    seed: u64,
+    batch: usize,
+) -> (Vec<Vec<u64>>, Vec<Vec<u64>>) {
+    let gen = |rng: &mut Rng, len: usize| -> Vec<u64> {
+        match fmt {
+            NumFmt::Fixed(nb) => rng.vec_bits(len, nb),
+            NumFmt::Float(f) => (0..len).map(|_| f.from_f64(rng.f64() * 4.0 - 2.0)).collect(),
+        }
+    };
+    let mix = |salt: u64| seed ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let inputs = (0..batch)
+        .map(|b| gen(&mut Rng::new(mix(0x1000 + b as u64)), graph.in_elems()))
+        .collect();
+    let weights = graph
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(li, l)| match l.op {
+            NetOp::Conv(s) | NetOp::Fc(s) => gen(
+                &mut Rng::new(mix(1 + li as u64)),
+                s.cout as usize * s.patch_len(),
+            ),
+            _ => Vec::new(),
+        })
+        .collect();
+    (inputs, weights)
+}
+
+// ---------------------------------------------------------------------------
+// Layer plans: compiled program + tiling + per-tile loaders.
+
+struct MacPlan {
+    spec: ConvSpec,
+    cp: ConvProgram,
+    tiling: Tiling,
+    wo: u32,
+}
+
+struct PoolPlan {
+    c: u32,
+    h: u32,
+    w: u32,
+    k: u32,
+    stride: u32,
+    wo: u32,
+    pp: PoolProgram,
+    tiling: Tiling,
+}
+
+struct ReluPlan {
+    bits: u32,
+    prog: Program,
+    lay: UnaryLayout,
+    /// `(out_start, rows)` chunks of at most `xbar_rows` elements.
+    chunks: Vec<(usize, usize)>,
+}
+
+enum Plan {
+    Mac(MacPlan),
+    Pool(PoolPlan),
+    Relu(ReluPlan),
+}
+
+impl Plan {
+    fn tiles(&self) -> usize {
+        match self {
+            Plan::Mac(p) => p.tiling.len(),
+            Plan::Pool(p) => p.tiling.len(),
+            Plan::Relu(p) => p.chunks.len(),
+        }
+    }
+
+    /// `(out_start, rows)` of tile `t` in the layer's flat output.
+    fn out_range(&self, t: usize) -> (usize, usize) {
+        match self {
+            Plan::Mac(p) => {
+                let tile = p.tiling.tiles[t];
+                (tile.channel as usize * p.tiling.positions + tile.pos0, tile.rows)
+            }
+            Plan::Pool(p) => {
+                let tile = p.tiling.tiles[t];
+                (tile.channel as usize * p.tiling.positions + tile.pos0, tile.rows)
+            }
+            Plan::Relu(p) => p.chunks[t],
+        }
+    }
+
+    /// Conservative `[min, max]` range of *input* flat indices tile `t`
+    /// reads — drives the tile-level dependency DAG. Over-approximation
+    /// only adds dependencies (safe).
+    fn in_range(&self, t: usize) -> (usize, usize) {
+        match self {
+            Plan::Mac(p) => {
+                let s = &p.spec;
+                let tile = p.tiling.tiles[t];
+                let (h, w) = (s.h as usize, s.w as usize);
+                let wo = p.wo as usize;
+                let oh0 = tile.pos0 / wo;
+                let oh1 = (tile.pos0 + tile.rows - 1) / wo;
+                let iy0 = (oh0 * s.stride as usize).saturating_sub(s.pad as usize).min(h - 1);
+                let iy1 = (oh1 * s.stride as usize + s.k as usize - 1)
+                    .saturating_sub(s.pad as usize)
+                    .min(h - 1);
+                // Patches span every input channel.
+                let lo = iy0 * w;
+                let hi = (s.cin as usize - 1) * h * w + iy1 * w + (w - 1);
+                (lo, hi)
+            }
+            Plan::Pool(p) => {
+                let tile = p.tiling.tiles[t];
+                let (h, w) = (p.h as usize, p.w as usize);
+                let wo = p.wo as usize;
+                let base = tile.channel as usize * h * w;
+                let oh0 = tile.pos0 / wo;
+                let oh1 = (tile.pos0 + tile.rows - 1) / wo;
+                let iy0 = (oh0 * p.stride as usize).min(h - 1);
+                let iy1 = (oh1 * p.stride as usize + p.k as usize - 1).min(h - 1);
+                (base + iy0 * w, base + iy1 * w + (w - 1))
+            }
+            Plan::Relu(p) => {
+                let (start, rows) = p.chunks[t];
+                (start, start + rows - 1)
+            }
+        }
+    }
+
+    /// Execute tile `t` on a fresh crossbar: load operand fields from
+    /// `input` (and `weights` for MAC layers), run the compiled program
+    /// serially (tile-level parallelism is the executor's job), write the
+    /// results into `out` (the tile's disjoint output slice), and return
+    /// the row-gates the simulator executed.
+    fn exec_tile(&self, t: usize, input: &[u64], weights: &[u64], out: &mut [u64]) -> u64 {
+        match self {
+            Plan::Mac(p) => {
+                let tile = p.tiling.tiles[t];
+                let n = p.cp.lay.bits;
+                let l = p.spec.patch_len();
+                let mut x = Crossbar::new(tile.rows, p.cp.lay.width as usize);
+                let mut vals = vec![0u64; tile.rows];
+                for e in 0..l {
+                    for (r, v) in vals.iter_mut().enumerate() {
+                        *v = patch_value(&p.spec, input, p.wo, tile.pos0 + r, e);
+                    }
+                    x.write_field(p.cp.lay.a_col(e, 0), n, &vals);
+                }
+                for e in 0..l {
+                    let wv = weights[tile.channel as usize * l + e];
+                    vals.iter_mut().for_each(|v| *v = wv);
+                    x.write_field(p.cp.lay.w_col(e, 0), n, &vals);
+                }
+                x.execute_serial(&p.cp.prog);
+                out.copy_from_slice(&x.read_field(p.cp.lay.acc, n, tile.rows));
+                x.row_gates()
+            }
+            Plan::Pool(p) => {
+                let tile = p.tiling.tiles[t];
+                let n = p.pp.bits;
+                let (h, w, k) = (p.h as usize, p.w as usize, p.k as usize);
+                let (wo, stride) = (p.wo as usize, p.stride as usize);
+                let base = tile.channel as usize * h * w;
+                let mut x = Crossbar::new(tile.rows, p.pp.width as usize);
+                let mut vals = vec![0u64; tile.rows];
+                for e in 0..p.pp.kk {
+                    let (ky, kx) = (e / k, e % k);
+                    for (r, v) in vals.iter_mut().enumerate() {
+                        let pos = tile.pos0 + r;
+                        let (oh, ow) = (pos / wo, pos % wo);
+                        *v = input[base + (oh * stride + ky) * w + ow * stride + kx];
+                    }
+                    x.write_field(p.pp.a + e as Col * n, n, &vals);
+                }
+                x.execute_serial(&p.pp.prog);
+                out.copy_from_slice(&x.read_field(p.pp.acc, n, tile.rows));
+                x.row_gates()
+            }
+            Plan::Relu(p) => {
+                let (start, rows) = p.chunks[t];
+                let mut x = Crossbar::new(rows, p.prog.width() as usize);
+                x.write_field(p.lay.u, p.bits, &input[start..start + rows]);
+                x.execute_serial(&p.prog);
+                out.copy_from_slice(&x.read_field(p.lay.z, p.bits, rows));
+                x.row_gates()
+            }
+        }
+    }
+}
+
+fn build_plan(layer: &NetLayer, fmt: NumFmt, set: GateSet, xbar_rows: usize) -> Plan {
+    match layer.op {
+        NetOp::Conv(spec) | NetOp::Fc(spec) => {
+            let cp = conv_program(fmt, spec.patch_len(), set);
+            let tiling = Tiling::plan(spec.positions(), spec.cout, xbar_rows);
+            let (_, wo) = spec.out_dims();
+            Plan::Mac(MacPlan { spec, cp, tiling, wo })
+        }
+        NetOp::Pool { k, stride } => {
+            let (c, h, w) = layer.in_shape;
+            let (_, ho, wo) = layer.out_shape;
+            let pp = pool_program(fmt, (k * k) as usize, set);
+            let tiling = Tiling::plan((ho * wo) as usize, c, xbar_rows);
+            Plan::Pool(PoolPlan { c, h, w, k, stride, wo, pp, tiling })
+        }
+        NetOp::Relu => {
+            let elems = layer.out_elems();
+            let (prog, bits) = match fmt {
+                NumFmt::Fixed(nb) => (relu_fixed_program(nb, set), nb),
+                NumFmt::Float(f) => (relu_float_program(f, set), f.bits()),
+            };
+            let lay = UnaryLayout::new(bits);
+            let mut chunks = Vec::new();
+            let mut start = 0;
+            while start < elems {
+                let rows = (elems - start).min(xbar_rows);
+                chunks.push((start, rows));
+                start += rows;
+            }
+            Plan::Relu(ReluPlan { bits, prog, lay, chunks })
+        }
+    }
+}
+
+/// The plan-derived per-sample cost record of one layer (see
+/// [`LayerRun`] field docs for bucket definitions).
+fn layer_run(layer: &NetLayer, plan: &Plan, fmt: NumFmt) -> LayerRun {
+    let n = fmt.bits() as u64;
+    let out_elems = layer.out_elems();
+    let oe = out_elems as u64;
+    match plan {
+        Plan::Mac(p) => {
+            let l = p.spec.patch_len() as u64;
+            let macs = p.spec.macs();
+            LayerRun {
+                name: layer.name.clone(),
+                kind: layer.kind(),
+                out_elems,
+                tiles: p.tiling.len(),
+                macs,
+                elem_ops: 0,
+                mac_cycles: p.cp.mac_cycles,
+                mac_gates: p.cp.mac_gates,
+                op_cycles: macs * p.cp.mac_cycles,
+                op_gates: macs * p.cp.mac_gates,
+                move_cycles: oe * p.cp.move_cycles,
+                move_gates: oe * p.cp.move_gates,
+                // Per output row: L patch elements in, L broadcast weights
+                // in, one result out.
+                stage_bits: oe * n * (2 * l + 1),
+                program_width: p.cp.lay.width,
+            }
+        }
+        Plan::Pool(p) => {
+            let kk = p.pp.kk as u64;
+            LayerRun {
+                name: layer.name.clone(),
+                kind: layer.kind(),
+                out_elems,
+                tiles: p.tiling.len(),
+                macs: 0,
+                elem_ops: oe * (kk - 1),
+                mac_cycles: 0,
+                mac_gates: 0,
+                op_cycles: oe * p.pp.op_cycles,
+                op_gates: oe * p.pp.op_gates,
+                move_cycles: oe * p.pp.move_cycles,
+                move_gates: oe * p.pp.move_gates,
+                stage_bits: oe * n * (kk + 1),
+                program_width: p.pp.width,
+            }
+        }
+        Plan::Relu(p) => LayerRun {
+            name: layer.name.clone(),
+            kind: layer.kind(),
+            out_elems,
+            tiles: p.chunks.len(),
+            macs: 0,
+            elem_ops: oe,
+            mac_cycles: 0,
+            mac_gates: 0,
+            op_cycles: oe * p.prog.cycles(),
+            op_gates: oe * p.prog.gates(),
+            move_cycles: 0,
+            move_gates: 0,
+            stage_bits: oe * n * 2,
+            program_width: p.prog.width(),
+        },
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The pipelined executor.
+
+/// All layer tensors of all batch samples in one flat allocation,
+/// accessed by raw pointer from concurrently running tile tasks. Safety
+/// contract: every task writes only its own disjoint output range, and
+/// reads only ranges whose producer tasks completed before this task was
+/// scheduled (the scheduler's mutex provides the happens-before edge).
+struct Arena {
+    ptr: *mut u64,
+    len: usize,
+}
+
+unsafe impl Send for Arena {}
+unsafe impl Sync for Arena {}
+
+impl Arena {
+    /// Copy `len` elements starting at `off` out of the arena.
+    ///
+    /// # Safety
+    /// Every element in the range must have been fully written by tasks
+    /// that happened-before this call.
+    unsafe fn read_range(&self, off: usize, len: usize) -> Vec<u64> {
+        debug_assert!(off + len <= self.len);
+        (0..len).map(|i| unsafe { self.ptr.add(off + i).read() }).collect()
+    }
+
+    /// Exclusive slice of `[off, off+len)`.
+    ///
+    /// # Safety
+    /// The range must be disjoint from every other concurrently accessed
+    /// range.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn slice_mut(&self, off: usize, len: usize) -> &mut [u64] {
+        debug_assert!(off + len <= self.len);
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(off), len) }
+    }
+}
+
+/// Scheduler state of the tile-task DAG.
+struct DagState {
+    /// Unmet dependency count per task.
+    pending: Vec<u32>,
+    /// Tasks ready to run.
+    ready: Vec<u32>,
+    /// Tasks not yet finished (ready + running + blocked).
+    unfinished: usize,
+    /// First failure (deadline expiry); aborts the drain.
+    failed: Option<String>,
+}
+
+/// Execute a whole layer graph bit-exactly on simulated crossbars.
+///
+/// `inputs` holds one flat `[c][y][x]` tensor per batch sample; `weights`
+/// holds one vector per layer (`cout × K²·cin` patterns for conv/fc,
+/// empty otherwise — the shape [`seeded_net_operands`] produces). Tiles
+/// are pipelined across layers and batch samples on the process-wide
+/// pool; outputs and cost records are byte-identical at any `jobs` count.
+pub fn execute_net(
+    graph: &NetGraph,
+    fmt: NumFmt,
+    set: GateSet,
+    inputs: &[Vec<u64>],
+    weights: &[Vec<u64>],
+    opts: &NetExecOpts,
+) -> Result<NetRun> {
+    anyhow::ensure!(!graph.layers.is_empty(), "graph {} has no layers", graph.name);
+    anyhow::ensure!(!inputs.is_empty(), "empty batch");
+    anyhow::ensure!(opts.xbar_rows > 0, "crossbar must have rows");
+    if let NumFmt::Fixed(n) = fmt {
+        anyhow::ensure!((1..=32).contains(&n), "fixed width {n} not executable (1..=32)");
+    }
+    for (b, input) in inputs.iter().enumerate() {
+        anyhow::ensure!(
+            input.len() == graph.in_elems(),
+            "input[{b}] length {} != c*h*w = {}",
+            input.len(),
+            graph.in_elems()
+        );
+    }
+    anyhow::ensure!(
+        weights.len() == graph.layers.len(),
+        "weights: {} layers expected, got {}",
+        graph.layers.len(),
+        weights.len()
+    );
+    for (li, layer) in graph.layers.iter().enumerate() {
+        let want = match layer.op {
+            NetOp::Conv(s) | NetOp::Fc(s) => s.cout as usize * s.patch_len(),
+            _ => 0,
+        };
+        anyhow::ensure!(
+            weights[li].len() == want,
+            "weights[{li}] ({}) length {} != {want}",
+            layer.name,
+            weights[li].len()
+        );
+    }
+
+    let batch = inputs.len();
+    let nl = graph.layers.len();
+    let plans: Vec<Plan> = graph
+        .layers
+        .iter()
+        .map(|l| build_plan(l, fmt, set, opts.xbar_rows))
+        .collect();
+    let runs: Vec<LayerRun> = graph
+        .layers
+        .iter()
+        .zip(&plans)
+        .map(|(l, p)| layer_run(l, p, fmt))
+        .collect();
+
+    // One flat arena holding every (sample, layer) output tensor.
+    let mut offsets = vec![0usize; batch * nl];
+    let mut total = 0usize;
+    for b in 0..batch {
+        for (li, r) in runs.iter().enumerate() {
+            offsets[b * nl + li] = total;
+            total += r.out_elems;
+        }
+    }
+    let mut arena_buf = vec![0u64; total];
+
+    // Flat task table: (sample, layer, tile), sample-major.
+    let tiles_per_layer: Vec<usize> = plans.iter().map(Plan::tiles).collect();
+    let mut layer_base = vec![0usize; nl + 1];
+    for li in 0..nl {
+        layer_base[li + 1] = layer_base[li] + tiles_per_layer[li];
+    }
+    let tiles_per_sample = layer_base[nl];
+    let n_tasks = batch * tiles_per_sample;
+    let task_of = |b: usize, li: usize, ti: usize| b * tiles_per_sample + layer_base[li] + ti;
+
+    // Dependency DAG: a tile depends on the previous layer's producer
+    // tiles overlapping its input range. Tile output ranges are
+    // contiguous and ordered, so overlap resolves by binary search over
+    // the start offsets.
+    let starts_per_layer: Vec<Vec<usize>> = plans
+        .iter()
+        .map(|p| (0..p.tiles()).map(|t| p.out_range(t).0).collect())
+        .collect();
+    let mut pending = vec![0u32; n_tasks];
+    let mut dependents: Vec<Vec<u32>> = vec![Vec::new(); n_tasks];
+    for b in 0..batch {
+        for li in 1..nl {
+            let starts = &starts_per_layer[li - 1];
+            for ti in 0..tiles_per_layer[li] {
+                let (lo, hi) = plans[li].in_range(ti);
+                let first = starts.partition_point(|&s| s <= lo).saturating_sub(1);
+                let last = starts.partition_point(|&s| s <= hi).saturating_sub(1);
+                let id = task_of(b, li, ti);
+                pending[id] = (last - first + 1) as u32;
+                for pt in first..=last {
+                    dependents[task_of(b, li - 1, pt)].push(id as u32);
+                }
+            }
+        }
+    }
+
+    let jobs = if opts.jobs == 0 {
+        Pool::global().threads() + 1
+    } else {
+        opts.jobs
+    };
+    let jobs = jobs.min(n_tasks).max(1);
+    let executed_gates = AtomicU64::new(0);
+
+    // Task body, shared by both drain strategies. `input` is a snapshot
+    // of the producer tensor (or the batch input for layer 0).
+    let decode = |id: usize| {
+        let b = id / tiles_per_sample;
+        let rest = id % tiles_per_sample;
+        let li = layer_base.partition_point(|&s| s <= rest) - 1;
+        (b, li, rest - layer_base[li])
+    };
+
+    if jobs <= 1 {
+        // Serial drain in task order — the reference schedule.
+        for id in 0..n_tasks {
+            opts.deadline.check("exec-net evaluation")?;
+            let (b, li, ti) = decode(id);
+            let (start, rows) = plans[li].out_range(ti);
+            let off = offsets[b * nl + li] + start;
+            let input: Vec<u64>;
+            let input_ref: &[u64] = if li == 0 {
+                &inputs[b]
+            } else {
+                let prev = offsets[b * nl + li - 1];
+                input = arena_buf[prev..prev + runs[li - 1].out_elems].to_vec();
+                &input
+            };
+            // Recompute the output slice per task (borrow-safe: serial).
+            let out = &mut arena_buf[off..off + rows];
+            let gates = plans[li].exec_tile(ti, input_ref, &weights[li], out);
+            executed_gates.fetch_add(gates, Ordering::Relaxed);
+        }
+    } else {
+        let arena = Arena {
+            ptr: arena_buf.as_mut_ptr(),
+            len: arena_buf.len(),
+        };
+        let state = Mutex::new(DagState {
+            ready: (0..n_tasks as u32)
+                .filter(|&id| pending[id as usize] == 0)
+                .collect(),
+            pending,
+            unfinished: n_tasks,
+            failed: None,
+        });
+        let cv = Condvar::new();
+        let deadline = opts.deadline;
+        let worker = || {
+            loop {
+                let id = {
+                    let mut st = state.lock().unwrap();
+                    loop {
+                        if st.failed.is_some() || st.unfinished == 0 {
+                            return;
+                        }
+                        if let Some(id) = st.ready.pop() {
+                            break id as usize;
+                        }
+                        st = cv.wait(st).unwrap();
+                    }
+                };
+                if let Err(e) = deadline.check("exec-net evaluation") {
+                    let mut st = state.lock().unwrap();
+                    st.failed.get_or_insert(e.to_string());
+                    cv.notify_all();
+                    return;
+                }
+                let (b, li, ti) = decode(id);
+                let run = || {
+                    let (start, rows) = plans[li].out_range(ti);
+                    let off = offsets[b * nl + li] + start;
+                    let input: Vec<u64>;
+                    let input_ref: &[u64] = if li == 0 {
+                        &inputs[b]
+                    } else {
+                        let prev = offsets[b * nl + li - 1];
+                        // SAFETY: all producer tiles of this range
+                        // completed before this task became ready.
+                        input = unsafe { arena.read_range(prev, runs[li - 1].out_elems) };
+                        &input
+                    };
+                    // SAFETY: each task owns a disjoint output range.
+                    let out = unsafe { arena.slice_mut(off, rows) };
+                    plans[li].exec_tile(ti, input_ref, &weights[li], out)
+                };
+                match std::panic::catch_unwind(AssertUnwindSafe(run)) {
+                    Ok(gates) => {
+                        executed_gates.fetch_add(gates, Ordering::Relaxed);
+                        let mut st = state.lock().unwrap();
+                        st.unfinished -= 1;
+                        for &d in &dependents[id] {
+                            st.pending[d as usize] -= 1;
+                            if st.pending[d as usize] == 0 {
+                                st.ready.push(d);
+                            }
+                        }
+                        cv.notify_all();
+                    }
+                    Err(payload) => {
+                        let mut st = state.lock().unwrap();
+                        st.failed.get_or_insert("tile task panicked".into());
+                        cv.notify_all();
+                        drop(st);
+                        std::panic::resume_unwind(payload);
+                    }
+                }
+            }
+        };
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
+            (0..jobs).map(|_| Box::new(worker.clone()) as Box<dyn FnOnce() + Send + '_>).collect();
+        Pool::global().run(tasks);
+        let st = state.into_inner().unwrap();
+        if let Some(msg) = st.failed {
+            anyhow::bail!("{msg}");
+        }
+        debug_assert_eq!(st.unfinished, 0);
+    }
+
+    // The simulator's executed row-gate counter must agree with the
+    // plan-derived count — the same invariant the single-layer path pins.
+    let expected: u64 = runs
+        .iter()
+        .map(|r| r.op_gates + r.move_gates)
+        .sum::<u64>()
+        .wrapping_mul(batch as u64);
+    let executed_row_gates = executed_gates.into_inner();
+    anyhow::ensure!(
+        executed_row_gates == expected,
+        "executed row-gates {executed_row_gates} != plan-derived {expected}"
+    );
+
+    let outputs = (0..batch)
+        .map(|b| {
+            let off = offsets[b * nl + nl - 1];
+            arena_buf[off..off + runs[nl - 1].out_elems].to_vec()
+        })
+        .collect();
+
+    Ok(NetRun {
+        name: graph.name.clone(),
+        fmt,
+        set,
+        batch,
+        xbar_rows: opts.xbar_rows,
+        jobs,
+        layers: runs,
+        outputs,
+        tasks: n_tasks,
+        executed_row_gates,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Host reference.
+
+fn mask(n: u32) -> u64 {
+    if n == 64 {
+        u64::MAX
+    } else {
+        (1u64 << n) - 1
+    }
+}
+
+fn sext(v: u64, n: u32) -> i64 {
+    let m = mask(n);
+    let v = v & m;
+    if v >> (n - 1) & 1 == 1 {
+        (v | !m) as i64
+    } else {
+        v as i64
+    }
+}
+
+/// Monotone unsigned key of the IEEE total order — the host mirror of
+/// [`max_float_program`]'s comparison.
+fn float_key(v: u64, n: u32) -> u64 {
+    if v >> (n - 1) & 1 == 1 {
+        !v & mask(n)
+    } else {
+        v | 1 << (n - 1)
+    }
+}
+
+fn relu_ref(fmt: NumFmt, v: u64) -> u64 {
+    match fmt {
+        NumFmt::Fixed(n) => {
+            if sext(v, n) < 0 {
+                0
+            } else {
+                v
+            }
+        }
+        NumFmt::Float(f) => {
+            let n = f.bits();
+            if v >> (n - 1) & 1 == 1 || f.is_nan(v) {
+                0
+            } else {
+                v
+            }
+        }
+    }
+}
+
+fn max_ref(fmt: NumFmt, a: u64, b: u64) -> u64 {
+    let geq = match fmt {
+        NumFmt::Fixed(n) => sext(a, n) >= sext(b, n),
+        NumFmt::Float(f) => float_key(a, f.bits()) >= float_key(b, f.bits()),
+    };
+    if geq {
+        a
+    } else {
+        b
+    }
+}
+
+/// The independent nested-loop host reference for one batch sample: plain
+/// scalar arithmetic layer by layer, in the exact reduction/window order
+/// the microcode uses. [`execute_net`]'s outputs must match this
+/// bit-for-bit.
+pub fn reference_net(
+    graph: &NetGraph,
+    fmt: NumFmt,
+    input: &[u64],
+    weights: &[Vec<u64>],
+) -> Vec<u64> {
+    assert_eq!(input.len(), graph.in_elems());
+    assert_eq!(weights.len(), graph.layers.len());
+    let mut cur = input.to_vec();
+    for (li, layer) in graph.layers.iter().enumerate() {
+        cur = match layer.op {
+            NetOp::Conv(s) | NetOp::Fc(s) => {
+                super::conv::reference_conv(&s, fmt, &cur, &weights[li])
+            }
+            NetOp::Relu => cur.iter().map(|&v| relu_ref(fmt, v)).collect(),
+            NetOp::Pool { k, stride } => {
+                let (c, h, w) = layer.in_shape;
+                let (_, ho, wo) = layer.out_shape;
+                let (h, w, k, stride) = (h as usize, w as usize, k as usize, stride as usize);
+                let mut out = Vec::with_capacity(layer.out_elems());
+                for ch in 0..c as usize {
+                    let base = ch * h * w;
+                    for oh in 0..ho as usize {
+                        for ow in 0..wo as usize {
+                            let mut acc = 0u64;
+                            for e in 0..k * k {
+                                let (ky, kx) = (e / k, e % k);
+                                let v = cur[base + (oh * stride + ky) * w + ow * stride + kx];
+                                acc = if e == 0 { v } else { max_ref(fmt, acc, v) };
+                            }
+                            out.push(acc);
+                        }
+                    }
+                }
+                out
+            }
+        };
+        debug_assert_eq!(cur.len(), layer.out_elems(), "{}", layer.name);
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pim::matpim::{scalar_costs, CnnPimModel};
+    use crate::pim::softfloat::Format;
+
+    fn tiny_graph() -> NetGraph {
+        let mut g = NetGraph::new("tiny", 2, 6, 6);
+        g.conv("c1", 3, 3, 1, 1)
+            .relu("r1")
+            .pool("p1", 2, 2)
+            .fc("f1", 4);
+        g
+    }
+
+    #[test]
+    fn alexnet_graph_shapes() {
+        // Full-scale graph mirrors the model zoo's shape math.
+        let g = NetGraph::alexnet(1);
+        assert_eq!(g.input, (3, 224, 224));
+        assert_eq!(g.layers[0].out_shape, (64, 55, 55));
+        assert_eq!(g.layers[2].out_shape, (64, 27, 27)); // p1
+        assert_eq!(g.shape(), (1000, 1, 1));
+        // All five convs + three FCs carry MACs.
+        let macs: Vec<&str> = g
+            .layers
+            .iter()
+            .filter(|l| l.macs() > 0)
+            .map(|l| l.kind())
+            .collect();
+        assert_eq!(macs, ["conv", "conv", "conv", "conv", "conv", "fc", "fc", "fc"]);
+        // Scaled graphs stay valid all the way down.
+        for scale in [2, 8, 16, 32, 224, 1000] {
+            let g = NetGraph::alexnet(scale);
+            assert!(g.layers.iter().all(|l| l.out_elems() > 0), "scale {scale}");
+            assert_eq!(g.layers.len(), 19, "scale {scale}");
+        }
+        assert!(NetGraph::model("alexnet", 16).is_some());
+        assert!(NetGraph::model("vgg", 16).is_none());
+    }
+
+    #[test]
+    fn pool_program_cost_split() {
+        for set in GateSet::all() {
+            for fmt in [NumFmt::Fixed(8), NumFmt::Float(Format::FP16)] {
+                let pp = pool_program(fmt, 9, set);
+                pp.prog.validate_for(set).unwrap();
+                assert_eq!(pp.prog.cycles(), pp.op_cycles + pp.move_cycles, "{set:?}");
+                assert_eq!(pp.prog.gates(), pp.op_gates + pp.move_gates, "{set:?}");
+                // Eight folds of the max program, by construction.
+                let max = match fmt {
+                    NumFmt::Fixed(n) => max_signed_program(n, set),
+                    NumFmt::Float(f) => max_float_program(f, set),
+                };
+                assert_eq!(pp.op_cycles, 8 * max.cycles());
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_net_bit_exact_both_sets() {
+        let g = tiny_graph();
+        for set in GateSet::all() {
+            for fmt in [NumFmt::Fixed(8), NumFmt::Fixed(16)] {
+                let (inputs, weights) = seeded_net_operands(&g, fmt, 7, 1);
+                let run = execute_net(&g, fmt, set, &inputs, &weights, &NetExecOpts::default())
+                    .unwrap();
+                let expect = reference_net(&g, fmt, &inputs[0], &weights);
+                assert_eq!(run.outputs[0], expect, "{set:?} {fmt:?}");
+                // Per-layer MAC costs equal the analytic model's exactly.
+                for lr in run.layers.iter().filter(|l| l.macs > 0) {
+                    let m = CnnPimModel { fmt, set, macs: lr.macs as f64 };
+                    assert_eq!(lr.mac_cycles, m.mac_cycles(), "{}", lr.name);
+                    assert_eq!(lr.mac_gates, m.mac_gates(), "{}", lr.name);
+                    let c = scalar_costs(fmt, set);
+                    assert_eq!(lr.mac_cycles, c.mul_cycles + c.add_cycles);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fp32_net_bit_exact() {
+        let g = tiny_graph();
+        let fmt = NumFmt::Float(Format::FP32);
+        let (inputs, weights) = seeded_net_operands(&g, fmt, 11, 1);
+        let run =
+            execute_net(&g, fmt, GateSet::MemristiveNor, &inputs, &weights, &NetExecOpts::default())
+                .unwrap();
+        assert_eq!(run.outputs[0], reference_net(&g, fmt, &inputs[0], &weights));
+    }
+
+    #[test]
+    fn pipelined_equals_serial_any_jobs() {
+        let g = tiny_graph();
+        let fmt = NumFmt::Fixed(8);
+        let (inputs, weights) = seeded_net_operands(&g, fmt, 13, 2);
+        let mk = |jobs: usize, xbar_rows: usize| {
+            let opts = NetExecOpts { xbar_rows, jobs, deadline: Deadline::none() };
+            execute_net(&g, fmt, GateSet::DramMaj, &inputs, &weights, &opts).unwrap()
+        };
+        let serial = mk(1, 7); // small tiles -> real DAG
+        for jobs in [2, 8] {
+            let piped = mk(jobs, 7);
+            assert_eq!(piped.outputs, serial.outputs, "jobs={jobs}");
+            assert_eq!(piped.executed_row_gates, serial.executed_row_gates);
+            for (a, b) in piped.layers.iter().zip(&serial.layers) {
+                assert_eq!(a.op_cycles, b.op_cycles);
+                assert_eq!(a.move_cycles, b.move_cycles);
+                assert_eq!(a.stage_bits, b.stage_bits);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_samples_are_independent() {
+        let g = tiny_graph();
+        let fmt = NumFmt::Fixed(8);
+        let (inputs, weights) = seeded_net_operands(&g, fmt, 17, 3);
+        let run = execute_net(&g, fmt, GateSet::MemristiveNor, &inputs, &weights,
+            &NetExecOpts::default())
+            .unwrap();
+        assert_eq!(run.batch, 3);
+        for (b, input) in inputs.iter().enumerate() {
+            assert_eq!(run.outputs[b], reference_net(&g, fmt, input, &weights), "sample {b}");
+        }
+        // Distinct seeds per sample actually differ.
+        assert_ne!(inputs[0], inputs[1]);
+    }
+
+    #[test]
+    fn expired_deadline_aborts_with_marker() {
+        use crate::util::deadline::DEADLINE_EXPIRED;
+        let g = tiny_graph();
+        let fmt = NumFmt::Fixed(8);
+        let (inputs, weights) = seeded_net_operands(&g, fmt, 19, 1);
+        for jobs in [1, 4] {
+            let opts = NetExecOpts {
+                xbar_rows: 1024,
+                jobs,
+                deadline: Deadline::in_ms(0),
+            };
+            let err = execute_net(&g, fmt, GateSet::MemristiveNor, &inputs, &weights, &opts)
+                .unwrap_err()
+                .to_string();
+            assert!(err.starts_with(DEADLINE_EXPIRED), "jobs={jobs}: {err}");
+        }
+    }
+
+    #[test]
+    fn movement_is_a_separate_nonzero_bucket() {
+        let g = tiny_graph();
+        let fmt = NumFmt::Fixed(8);
+        let (inputs, weights) = seeded_net_operands(&g, fmt, 23, 1);
+        let run = execute_net(&g, fmt, GateSet::MemristiveNor, &inputs, &weights,
+            &NetExecOpts::default())
+            .unwrap();
+        assert!(run.stage_bits() > 0);
+        assert!(run.move_cycles() > 0);
+        assert!(run.op_cycles() > 0);
+        assert_eq!(run.total_cycles(), run.op_cycles() + run.move_cycles());
+        // Layer records cover every layer of the graph, in order.
+        assert_eq!(
+            run.layers.iter().map(|l| l.kind).collect::<Vec<_>>(),
+            ["conv", "relu", "pool", "fc"]
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_operands() {
+        let g = tiny_graph();
+        let fmt = NumFmt::Fixed(8);
+        let (inputs, mut weights) = seeded_net_operands(&g, fmt, 29, 1);
+        let opts = NetExecOpts::default();
+        // Wrong input length.
+        let bad = vec![vec![0u64; 5]];
+        assert!(execute_net(&g, fmt, GateSet::DramMaj, &bad, &weights, &opts).is_err());
+        // Wrong weight length.
+        weights[0].pop();
+        assert!(execute_net(&g, fmt, GateSet::DramMaj, &inputs, &weights, &opts).is_err());
+        // Unsupported fixed width.
+        let g2 = tiny_graph();
+        let (i2, w2) = seeded_net_operands(&g2, NumFmt::Fixed(8), 1, 1);
+        assert!(execute_net(&g2, NumFmt::Fixed(64), GateSet::DramMaj, &i2, &w2, &opts).is_err());
+    }
+}

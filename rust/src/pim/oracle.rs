@@ -350,6 +350,97 @@ mod tests {
     }
 
     #[test]
+    fn pool_suite_bit_identical() {
+        // The netexec max-pool fold (embedded relocated max-select
+        // program) through the scalar oracle, plus a value-level check:
+        // the accumulator field must hold the signed maximum of the
+        // window after execution.
+        use crate::pim::matpim::NumFmt;
+        use crate::pim::netexec::pool_program;
+        let mut rng = Rng::new(108);
+        let rows = 20; // not a multiple of 64
+        for set in GateSet::all() {
+            let pp = pool_program(NumFmt::Fixed(8), 4, set);
+            pp.prog.validate_for(set).unwrap();
+            let window: Vec<Vec<u64>> = (0..pp.kk).map(|_| rng.vec_bits(rows, 8)).collect();
+            let mut packed = Crossbar::new(rows, pp.width as usize);
+            let mut oracle = ScalarCrossbar::new(rows, pp.width as usize);
+            for (t, vals) in window.iter().enumerate() {
+                let base = pp.a + t as Col * pp.bits;
+                packed.write_field(base, pp.bits, vals);
+                oracle.write_field(base, pp.bits, vals);
+            }
+            packed.execute(&pp.prog);
+            oracle.execute(&pp.prog);
+            assert!(oracle.agrees_with(&packed), "{set:?}");
+            assert_eq!(oracle.row_gates(), packed.row_gates(), "{set:?}");
+            let sext8 = |v: u64| ((v << 56) as i64) >> 56;
+            let got = oracle.read_field(pp.acc, pp.bits, rows);
+            for (r, &g) in got.iter().enumerate() {
+                let expect = window
+                    .iter()
+                    .map(|vals| vals[r])
+                    .max_by_key(|&v| sext8(v))
+                    .unwrap();
+                assert_eq!(g, expect, "{set:?} row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_fp16_bit_identical() {
+        // The float pool fold (total-order max-select) through the
+        // oracle — fp16 keeps the per-bool instruction count tractable.
+        use crate::pim::matpim::NumFmt;
+        use crate::pim::netexec::pool_program;
+        let mut rng = Rng::new(109);
+        let rows = 12;
+        let pp = pool_program(NumFmt::Float(Format::FP16), 4, GateSet::MemristiveNor);
+        let fields: Vec<(Col, u32, Vec<u64>)> = (0..pp.kk)
+            .map(|t| {
+                let vals = (0..rows).map(|_| rng.float_pattern(5, 10)).collect();
+                (pp.a + t as Col * pp.bits, pp.bits, vals)
+            })
+            .collect();
+        assert_engines_agree(&pp.prog, rows, &fields);
+    }
+
+    #[test]
+    fn elementwise_relu_float_bit_identical() {
+        // The float ReLU program netexec schedules for float graphs.
+        let mut rng = Rng::new(110);
+        let rows = 66;
+        for set in GateSet::all() {
+            let prog = elementwise::relu_float_program(Format::FP16, set);
+            let vals: Vec<u64> = (0..rows).map(|_| rng.float_pattern(5, 10)).collect();
+            assert_engines_agree(&prog, rows, &[(0, 16, vals)]);
+        }
+    }
+
+    #[test]
+    fn fc_suite_bit_identical() {
+        // FC layers execute as 1×1-im2col convs: the same program family
+        // as conv, exercised at an FC-shaped patch length with per-row
+        // activations and replicated weights (the netexec FC loader's
+        // shape).
+        use crate::pim::conv;
+        use crate::pim::matpim::NumFmt;
+        let mut rng = Rng::new(111);
+        let rows = 20;
+        for set in GateSet::all() {
+            let l = 4; // flattened input features
+            let cp = conv::conv_program(NumFmt::Fixed(8), l, set);
+            cp.prog.validate_for(set).unwrap();
+            let mut fields: Vec<(Col, u32, Vec<u64>)> = Vec::new();
+            for t in 0..l {
+                fields.push((cp.lay.a_col(t, 0), 8, rng.vec_bits(rows, 8)));
+                fields.push((cp.lay.w_col(t, 0), 8, vec![rng.bits(8); rows]));
+            }
+            assert_engines_agree(&cp.prog, rows, &fields);
+        }
+    }
+
+    #[test]
     fn elementwise_relu_bit_identical() {
         let mut rng = Rng::new(104);
         let rows = 130;

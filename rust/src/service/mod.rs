@@ -71,7 +71,7 @@ use anyhow::Result;
 pub use cache::{LruCache, LruCounters, MemSnapshot, MemTier, ResultCache};
 pub use loadgen::{run_loadgen, LoadgenConfig};
 pub use net::{serve_tcp, wake_listener, TcpSummary};
-pub use request::{CampaignRef, ConvExecSpec, EvalRequest, SetSel, REQUEST_SCHEMA};
+pub use request::{CampaignRef, ConvExecSpec, EvalRequest, NetExecSpec, SetSel, REQUEST_SCHEMA};
 pub use response::{CacheStatus, EvalMeta, EvalResponse};
 pub use serve::{run_session, serve, ServeShared, ServeSummary, DEFAULT_MAX_LINE_BYTES};
 pub use stats::{Histogram, ServeStats};
@@ -84,11 +84,13 @@ use crate::pim::conv;
 use crate::pim::fixed::{self, FixedLayout, FixedOp};
 use crate::pim::float::{self, FloatLayout};
 use crate::pim::gates::GateSet;
-use crate::pim::matpim::NumFmt;
+use crate::pim::matpim::{CnnPimModel, NumFmt};
+use crate::pim::netexec::{self, NetExecOpts};
 use crate::pim::softfloat::{self, Format};
 use crate::pim::xbar::Crossbar;
 use crate::runtime::Engine;
 use crate::sweep::{self, Campaign, CnnModel, PointResult, SweepOutcome, SweepPoint, WorkloadSpec};
+use crate::util::deadline::Deadline;
 use crate::util::json::Json;
 use crate::util::pool::Pool;
 use crate::util::rng::Rng;
@@ -186,6 +188,16 @@ impl EvalService {
     /// response with `meta.ok == false` and the `{e:#}`-formatted error
     /// text, so daemon clients always get one response per request.
     pub fn submit(&self, req: &EvalRequest) -> EvalResponse {
+        self.submit_deadline(req, Deadline::none())
+    }
+
+    /// [`submit`](EvalService::submit) with a cooperative evaluation
+    /// deadline. Long-running evaluations (`net-exec`) poll the deadline
+    /// between tiles and abort with a [`crate::util::deadline::DEADLINE_EXPIRED`]
+    /// error once it passes; cheap request kinds ignore it (they finish
+    /// long before any realistic budget). The serve daemon derives the
+    /// deadline from the wire-level `deadline_ms` field.
+    pub fn submit_deadline(&self, req: &EvalRequest, deadline: Deadline) -> EvalResponse {
         let t0 = Instant::now();
         let mut resp = match req {
             EvalRequest::Experiment {
@@ -197,6 +209,7 @@ impl EvalService {
             EvalRequest::SweepPoint { config } => self.handle_sweep_point(config),
             EvalRequest::Campaign { campaign } => self.handle_campaign(campaign),
             EvalRequest::ConvExec(spec) => self.handle_conv_exec(req, spec),
+            EvalRequest::NetExec(spec) => self.handle_net_exec(req, spec, deadline),
             EvalRequest::Compare {
                 workload,
                 fmt,
@@ -632,6 +645,208 @@ impl EvalService {
                 ("scale", Json::i(spec.scale as i64)),
                 ("seed", Json::i(spec.seed as i64)),
                 ("macs", Json::i(scaled.macs() as i64)),
+                ("cells", Json::arr(cells)),
+                ("failures", Json::i(failures as i64)),
+            ]),
+            meta: EvalMeta {
+                ok: failures == 0,
+                error,
+                cache: self.computed_status(),
+                hits: 0,
+                computed: 0,
+                elapsed_ms: 0.0,
+            },
+        })
+    }
+
+    fn handle_net_exec(
+        &self,
+        req: &EvalRequest,
+        spec: &NetExecSpec,
+        deadline: Deadline,
+    ) -> EvalResponse {
+        let config = req.cache_config();
+        if let Some(cfg) = &config {
+            if let Some(resp) = self.load_response(cfg) {
+                return resp;
+            }
+        }
+        match self.eval_net_exec(spec, deadline) {
+            Ok(resp) => {
+                // Only verified-clean runs are cached; a deadline expiry
+                // comes back through the Err arm and is never stored.
+                if resp.meta.ok {
+                    if let Some(cfg) = &config {
+                        self.store_response(cfg, &resp);
+                    }
+                }
+                resp
+            }
+            Err(e) => error_response("net-exec", spec.model.clone(), &e),
+        }
+    }
+
+    /// The executed full-network evaluation (`convpim exec-net`): run the
+    /// whole layer graph — conv/fc MAC microcode plus pool/ReLU
+    /// compare/select programs — for every requested (gate set, format)
+    /// cell, verify outputs bit-exactly against the host reference,
+    /// cross-check per-layer MAC costs against the analytic
+    /// [`CnnPimModel`], and report inter-layer data movement as its own
+    /// cost bucket.
+    fn eval_net_exec(&self, spec: &NetExecSpec, deadline: Deadline) -> Result<EvalResponse> {
+        let graph = netexec::NetGraph::model(&spec.model, spec.scale).ok_or_else(|| {
+            anyhow::anyhow!(
+                "net-exec has no executable graph for `{}`; available: {}",
+                spec.model,
+                netexec::NetGraph::model_names().join(", ")
+            )
+        })?;
+        let sets: Vec<GateSet> = spec.set.sets();
+        let fmts: Vec<NumFmt> = match spec.fmt {
+            None => vec![NumFmt::Fixed(8), NumFmt::Float(Format::FP32)],
+            Some(fmt) => vec![fmt],
+        };
+        let total_macs: u64 = graph.layers.iter().map(|l| l.macs()).sum();
+        eprintln!(
+            "executing {} down-scaled /{}: {} layers, {} MACs/img, batch {}…",
+            graph.name,
+            spec.scale,
+            graph.layers.len(),
+            total_macs,
+            spec.batch
+        );
+
+        let mut t = Table::new(&[
+            "set",
+            "format",
+            "layers",
+            "MACs/img",
+            "op cyc/img",
+            "move cyc/img",
+            "move %",
+            "stage KiB/img",
+            "img/s",
+            "bit-exact",
+            "match",
+        ]);
+        let mut cells = Vec::new();
+        let mut failures = 0usize;
+        for &set in &sets {
+            for &fmt in &fmts {
+                let arch = PimArch::paper(set);
+                let opts = NetExecOpts {
+                    xbar_rows: if spec.rows > 0 {
+                        spec.rows
+                    } else {
+                        arch.rows as usize
+                    },
+                    jobs: 0,
+                    deadline,
+                };
+                let (inputs, weights) =
+                    netexec::seeded_net_operands(&graph, fmt, spec.seed, spec.batch);
+                let run = netexec::execute_net(&graph, fmt, set, &inputs, &weights, &opts)?;
+                let bit_exact = run.outputs.iter().enumerate().all(|(b, out)| {
+                    *out == netexec::reference_net(&graph, fmt, &inputs[b], &weights)
+                });
+                // Per-layer cross-validation: every MAC layer's executed
+                // per-MAC cost must equal the analytic model exactly.
+                let model_match = run.layers.iter().filter(|lr| lr.macs > 0).all(|lr| {
+                    let m = CnnPimModel::new(fmt, set, lr.macs as f64);
+                    lr.mac_cycles == m.mac_cycles() && lr.mac_gates == m.mac_gates()
+                });
+                if !bit_exact || !model_match {
+                    failures += 1;
+                }
+                let tp = arch.throughput_ops(run.total_cycles());
+                eprintln!(
+                    "  {:?}/{}: {} tasks, {} cycles/img ({:.1}% movement)",
+                    set,
+                    fmt.name(),
+                    run.tasks,
+                    run.total_cycles(),
+                    run.move_fraction() * 100.0
+                );
+                t.row(vec![
+                    format!("{set:?}"),
+                    fmt.name(),
+                    run.layers.len().to_string(),
+                    run.macs().to_string(),
+                    run.op_cycles().to_string(),
+                    run.move_cycles().to_string(),
+                    format!("{:.1}", run.move_fraction() * 100.0),
+                    format!("{:.1}", run.stage_bits() as f64 / 8.0 / 1024.0),
+                    si(tp),
+                    bit_exact.to_string(),
+                    if bit_exact && model_match {
+                        "yes".into()
+                    } else {
+                        "NO".into()
+                    },
+                ]);
+                cells.push(Json::obj(vec![
+                    ("set", Json::s(format!("{set:?}"))),
+                    ("format", Json::s(fmt.name())),
+                    ("macs", Json::i(run.macs() as i64)),
+                    ("op_cycles", Json::i(run.op_cycles() as i64)),
+                    ("move_cycles", Json::i(run.move_cycles() as i64)),
+                    ("stage_bits", Json::i(run.stage_bits() as i64)),
+                    ("move_fraction", Json::n(run.move_fraction())),
+                    ("tasks", Json::i(run.tasks as i64)),
+                    ("img_per_s", Json::n(tp)),
+                    ("bit_exact", Json::Bool(bit_exact)),
+                    ("model_match", Json::Bool(model_match)),
+                    (
+                        "layers",
+                        Json::arr(
+                            run.layers
+                                .iter()
+                                .map(|lr| {
+                                    Json::obj(vec![
+                                        ("layer", Json::s(lr.name.clone())),
+                                        ("kind", Json::s(lr.kind)),
+                                        ("tiles", Json::i(lr.tiles as i64)),
+                                        ("macs", Json::i(lr.macs as i64)),
+                                        ("op_cycles", Json::i(lr.op_cycles as i64)),
+                                        ("move_cycles", Json::i(lr.move_cycles as i64)),
+                                        ("stage_bits", Json::i(lr.stage_bits as i64)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ]));
+            }
+        }
+        let note = "every cell executes the whole network bit-exactly on the simulated \
+             crossbar: conv/fc layers as im2col MAC microcode, pooling/ReLU as \
+             column-parallel compare/select programs. `op cyc` is compute per image; \
+             `move cyc` and `stage KiB` are the *inter-layer staging* bucket the paper's \
+             upper-bound model ignores (`move %` is its share of total cycles). Per-layer \
+             executed MAC costs are cross-checked against the analytic CnnPimModel and \
+             outputs against a host nested-loop reference.";
+        let error = (failures > 0)
+            .then(|| format!("{failures} executed cell(s) failed verification"));
+        Ok(EvalResponse {
+            kind: "net-exec".into(),
+            id: spec.model.clone(),
+            title: format!(
+                "executed network {} /{} batch {}",
+                spec.model, spec.scale, spec.batch
+            ),
+            stdout: format!("{}\n{note}\n", t.text()),
+            sections: vec![Section {
+                caption: String::new(),
+                table: t,
+            }],
+            notes: vec![note.to_string()],
+            payload: Json::obj(vec![
+                ("model", Json::s(spec.model.clone())),
+                ("graph", Json::s(graph.name.clone())),
+                ("scale", Json::i(spec.scale as i64)),
+                ("batch", Json::i(spec.batch as i64)),
+                ("seed", Json::i(spec.seed as i64)),
+                ("macs", Json::i(total_macs as i64)),
                 ("cells", Json::arr(cells)),
                 ("failures", Json::i(failures as i64)),
             ]),
@@ -1120,6 +1335,7 @@ mod tests {
             .map(|b| b.get("id").unwrap().as_str().unwrap())
             .collect();
         assert!(ids.contains(&"pim-exec:memristive"));
+        assert!(ids.contains(&"pim-exec-net:memristive"));
         assert!(ids.contains(&"gpu:a100:theoretical"));
     }
 
@@ -1197,6 +1413,77 @@ mod tests {
         // Batch responses match individual submissions byte-for-byte.
         let solo = service.submit(&reqs[2]);
         assert_eq!(solo.stdout, responses[2].stdout);
+    }
+
+    #[test]
+    fn net_exec_executes_caches_and_replays() {
+        let cache = temp_cache("net");
+        let dir = cache.dir().to_path_buf();
+        let service = EvalService::new().with_cache(Some(cache));
+        let mut spec = NetExecSpec::new("alexnet");
+        spec.scale = 32;
+        spec.fmt = Some(NumFmt::Fixed(8));
+        spec.set = SetSel::Dram;
+        let req = EvalRequest::NetExec(spec);
+        let cold = service.submit(&req);
+        assert!(cold.meta.ok, "{:?}", cold.meta.error);
+        assert_eq!(cold.meta.cache, CacheStatus::Computed);
+        assert!(cold.stdout.contains("move cyc/img"));
+        assert!(cold.stdout.contains("yes"));
+        assert_eq!(
+            cold.payload.get("failures").unwrap().as_u64(),
+            Some(0)
+        );
+        let cell = &cold.payload.get("cells").unwrap().as_arr().unwrap()[0];
+        assert_eq!(cell.get("bit_exact").unwrap().as_bool(), Some(true));
+        assert_eq!(cell.get("model_match").unwrap().as_bool(), Some(true));
+        assert_eq!(
+            cell.get("layers").unwrap().as_arr().unwrap().len(),
+            19,
+            "the AlexNet graph runs every layer"
+        );
+        let warm = service.submit(&req);
+        assert_eq!(warm.meta.cache, CacheStatus::Hit);
+        assert_eq!(warm.stdout, cold.stdout, "cache replay must be byte-identical");
+        assert_eq!(warm.payload, cold.payload);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn net_exec_deadline_expires_with_marker_and_is_not_cached() {
+        let cache = temp_cache("netdl");
+        let dir = cache.dir().to_path_buf();
+        let service = EvalService::new().with_cache(Some(cache));
+        let mut spec = NetExecSpec::new("alexnet");
+        spec.scale = 32;
+        spec.fmt = Some(NumFmt::Fixed(8));
+        spec.set = SetSel::Memristive;
+        let req = EvalRequest::NetExec(spec);
+        // An already-expired deadline aborts at the first between-tile
+        // check, before any crossbar work.
+        let resp = service.submit_deadline(&req, Deadline::in_ms(0));
+        assert!(!resp.meta.ok);
+        assert!(resp
+            .meta
+            .error
+            .as_deref()
+            .unwrap()
+            .contains(crate::util::deadline::DEADLINE_EXPIRED));
+        // The expiry was not stored: a fresh submit computes.
+        let clean = service.submit(&req);
+        assert!(clean.meta.ok, "{:?}", clean.meta.error);
+        assert_eq!(clean.meta.cache, CacheStatus::Computed);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn net_exec_unknown_model_is_a_structured_error() {
+        let service = EvalService::new().with_cache(None);
+        let resp = service.submit(&EvalRequest::NetExec(NetExecSpec::new("lenet")));
+        assert!(!resp.meta.ok);
+        let err = resp.meta.error.as_deref().unwrap();
+        assert!(err.contains("no executable graph"), "got: {err}");
+        assert!(err.contains("alexnet"), "got: {err}");
     }
 
     #[test]

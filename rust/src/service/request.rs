@@ -19,6 +19,8 @@
 //! {"kind": "campaign", "spec": { ...Campaign::to_json()... }}
 //! {"kind": "conv-exec", "layer": "alexnet:conv2", "scale": 8, "fmt": "fixed8",
 //!  "set": "both", "seed": 49374, "rows": 0}
+//! {"kind": "net-exec", "model": "alexnet", "scale": 16, "batch": 1,
+//!  "fmt": "fixed8", "set": "both", "seed": 49374, "rows": 0}
 //! {"kind": "compare", "workload": "cnn-alexnet", "format": "fp32",
 //!  "backends": ["pim:memristive", "pim-exec:memristive", "gpu:a6000:experimental"]}
 //! {"kind": "validate", "rows": 512, "seed": 7}
@@ -129,6 +131,42 @@ impl ConvExecSpec {
     }
 }
 
+/// Fully specified executed full-network request (the `exec-net` CLI
+/// surface as data; wire kind `net-exec`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetExecSpec {
+    /// Model name (`alexnet`; see
+    /// [`crate::pim::netexec::NetGraph::model_names`]).
+    pub model: String,
+    /// Down-scale divisor applied to channels and spatial dims (≥ 1).
+    pub scale: u32,
+    /// Batch size (independent samples pipelined together, ≥ 1).
+    pub batch: usize,
+    /// Number format; `None` executes the default fixed8 + fp32 pair.
+    pub fmt: Option<NumFmt>,
+    /// Gate sets to execute.
+    pub set: SetSel,
+    /// Operand seed.
+    pub seed: u64,
+    /// Crossbar row override; 0 uses the architecture's row count.
+    pub rows: usize,
+}
+
+impl NetExecSpec {
+    /// The CLI-default request for a model name.
+    pub fn new(model: impl Into<String>) -> NetExecSpec {
+        NetExecSpec {
+            model: model.into(),
+            scale: 16,
+            batch: 1,
+            fmt: None,
+            set: SetSel::Both,
+            seed: DEFAULT_CONV_SEED,
+            rows: 0,
+        }
+    }
+}
+
 /// How a campaign request names its campaign.
 #[derive(Clone, Debug, PartialEq)]
 pub enum CampaignRef {
@@ -170,6 +208,11 @@ pub enum EvalRequest {
     /// Execute one model-zoo conv layer bit-exactly and cross-check it
     /// against the analytic CNN model.
     ConvExec(ConvExecSpec),
+    /// Execute a whole layer graph (conv + pool + ReLU + FC) end to end
+    /// on the crossbar simulator, per-layer cross-checked against the
+    /// analytic CNN model and bit-exact against the host reference, with
+    /// inter-layer data movement reported as a separate cost column.
+    NetExec(NetExecSpec),
     /// Evaluate one workload across N evaluation backends
     /// ([`crate::backend`]) side by side — the paper's workload ×
     /// platform matrix as one request.
@@ -203,6 +246,7 @@ impl EvalRequest {
             EvalRequest::SweepPoint { .. } => "sweep-point",
             EvalRequest::Campaign { .. } => "campaign",
             EvalRequest::ConvExec(_) => "conv-exec",
+            EvalRequest::NetExec(_) => "net-exec",
             EvalRequest::Compare { .. } => "compare",
             EvalRequest::Validate { .. } => "validate",
             EvalRequest::Info => "info",
@@ -223,6 +267,7 @@ impl EvalRequest {
                 ),
             },
             EvalRequest::ConvExec(spec) => format!("conv-exec {}", spec.layer),
+            EvalRequest::NetExec(spec) => format!("net-exec {}", spec.model),
             EvalRequest::Compare { workload, .. } => format!("compare {}", workload.name()),
             EvalRequest::Validate { .. } => "validate".into(),
             EvalRequest::Info => "info".into(),
@@ -264,6 +309,19 @@ impl EvalRequest {
                 ("kind", Json::s("conv-exec")),
                 ("layer", Json::s(spec.layer.clone())),
                 ("scale", Json::i(spec.scale as i64)),
+                (
+                    "fmt",
+                    spec.fmt.map(|f| Json::s(f.name())).unwrap_or(Json::Null),
+                ),
+                ("set", Json::s(spec.set.name())),
+                ("seed", Json::i(spec.seed as i64)),
+                ("rows", Json::i(spec.rows as i64)),
+            ]),
+            EvalRequest::NetExec(spec) => Json::obj(vec![
+                ("kind", Json::s("net-exec")),
+                ("model", Json::s(spec.model.clone())),
+                ("scale", Json::i(spec.scale as i64)),
+                ("batch", Json::i(spec.batch as i64)),
                 (
                     "fmt",
                     spec.fmt.map(|f| Json::s(f.name())).unwrap_or(Json::Null),
@@ -401,6 +459,60 @@ impl EvalRequest {
                     rows: u64_field("rows", 0)? as usize,
                 }))
             }
+            "net-exec" => {
+                let model = doc
+                    .get("model")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("net-exec request needs a `model` (e.g. alexnet)")
+                    })?
+                    .to_string();
+                let scale = u64_field("scale", 16)?;
+                let scale = u32::try_from(scale)
+                    .ok()
+                    .filter(|&s| s >= 1)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("net-exec `scale` must be in 1..=u32::MAX, got {scale}")
+                    })?;
+                let batch = u64_field("batch", 1)?;
+                anyhow::ensure!(
+                    (1..=1024).contains(&batch),
+                    "net-exec `batch` must be in 1..=1024, got {batch}"
+                );
+                let fmt = match doc.get("fmt") {
+                    None | Some(Json::Null) => None,
+                    Some(v) => {
+                        let name = v.as_str().ok_or_else(|| {
+                            anyhow::anyhow!("net-exec `fmt` must be a format name")
+                        })?;
+                        Some(fmt_from_name(name).ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "unknown format `{name}` (use fixed8|fixed16|fixed32|fp16|fp32|fp64)"
+                            )
+                        })?)
+                    }
+                };
+                let set = match doc.get("set") {
+                    None | Some(Json::Null) => SetSel::Both,
+                    Some(v) => {
+                        let name = v.as_str().unwrap_or("?");
+                        SetSel::from_name(name).ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "net-exec `set` must be memristive|dram|both, got `{name}`"
+                            )
+                        })?
+                    }
+                };
+                Ok(EvalRequest::NetExec(NetExecSpec {
+                    model,
+                    scale,
+                    batch: batch as usize,
+                    fmt,
+                    set,
+                    seed: u64_field("seed", DEFAULT_CONV_SEED)?,
+                    rows: u64_field("rows", 0)? as usize,
+                }))
+            }
             "compare" => {
                 let workload = match doc.get("workload") {
                     None | Some(Json::Null) => anyhow::bail!(
@@ -456,7 +568,7 @@ impl EvalRequest {
             "list" => Ok(EvalRequest::List),
             other => anyhow::bail!(
                 "unknown request kind `{other}` (use experiment|sweep-point|campaign|\
-                 conv-exec|compare|validate|info|list)"
+                 conv-exec|net-exec|compare|validate|info|list)"
             ),
         }
     }
@@ -508,6 +620,20 @@ impl EvalRequest {
                 ("kind", Json::s("conv-exec")),
                 ("layer", Json::s(spec.layer.clone())),
                 ("scale", Json::i(spec.scale as i64)),
+                (
+                    "fmt",
+                    spec.fmt.map(|f| Json::s(f.name())).unwrap_or(Json::Null),
+                ),
+                ("set", Json::s(spec.set.name())),
+                ("seed", exact(spec.seed)?),
+                ("rows", exact(spec.rows as u64)?),
+            ])),
+            EvalRequest::NetExec(spec) => Some(Json::obj(vec![
+                ("v", Json::i(REQUEST_SCHEMA)),
+                ("kind", Json::s("net-exec")),
+                ("model", Json::s(spec.model.clone())),
+                ("scale", Json::i(spec.scale as i64)),
+                ("batch", exact(spec.batch as u64)?),
                 (
                     "fmt",
                     spec.fmt.map(|f| Json::s(f.name())).unwrap_or(Json::Null),
@@ -591,6 +717,16 @@ mod tests {
                 ),
             },
             EvalRequest::ConvExec(ConvExecSpec::new("alexnet:conv2")),
+            EvalRequest::NetExec(NetExecSpec::new("alexnet")),
+            EvalRequest::NetExec(NetExecSpec {
+                model: "alexnet".into(),
+                scale: 32,
+                batch: 3,
+                fmt: Some(NumFmt::Fixed(16)),
+                set: SetSel::Dram,
+                seed: 99,
+                rows: 128,
+            }),
             EvalRequest::Compare {
                 workload: WorkloadSpec::from_name("cnn-alexnet").unwrap(),
                 fmt: NumFmt::Float(Format::FP32),
@@ -629,6 +765,11 @@ mod tests {
         )
         .unwrap();
         assert_eq!(req, EvalRequest::ConvExec(ConvExecSpec::new("alexnet:conv2")));
+        let req = EvalRequest::from_json(
+            &Json::parse(r#"{"kind": "net-exec", "model": "alexnet"}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(req, EvalRequest::NetExec(NetExecSpec::new("alexnet")));
         let req =
             EvalRequest::from_json(&Json::parse(r#"{"kind": "validate"}"#).unwrap()).unwrap();
         assert_eq!(
@@ -653,6 +794,12 @@ mod tests {
             r#"{"kind": "conv-exec", "layer": "alexnet:conv2", "scale": 0}"#,
             r#"{"kind": "conv-exec", "layer": "alexnet:conv2", "fmt": "fp8"}"#,
             r#"{"kind": "conv-exec", "layer": "alexnet:conv2", "set": "cmos"}"#,
+            r#"{"kind": "net-exec"}"#,
+            r#"{"kind": "net-exec", "model": "alexnet", "scale": 0}"#,
+            r#"{"kind": "net-exec", "model": "alexnet", "batch": 0}"#,
+            r#"{"kind": "net-exec", "model": "alexnet", "batch": 2000}"#,
+            r#"{"kind": "net-exec", "model": "alexnet", "fmt": "fp8"}"#,
+            r#"{"kind": "net-exec", "model": "alexnet", "set": "cmos"}"#,
             r#"{"kind": "experiment", "id": "fig4", "seed": -1}"#,
             r#"{"kind": "experiment", "id": "fig4", "fast": "yes"}"#,
             r#"{"kind": "compare"}"#,

@@ -28,8 +28,12 @@
 //!
 //! * `deadline_ms` on any request line: if the request waited longer
 //!   than its deadline before a worker picked it up, it is answered
-//!   with a structured error instead of being evaluated (admission
-//!   control, not mid-evaluation cancellation).
+//!   with a structured error instead of being evaluated. The remaining
+//!   budget is also threaded into the evaluation itself
+//!   ([`EvalService::submit_deadline`]): long-running kinds (`net-exec`)
+//!   poll it cooperatively between tiles, so a request can expire
+//!   *mid-evaluation* with the same structured `deadline` classification
+//!   instead of running arbitrarily far past its budget.
 //! * `{"kind": "stats"}`: answered inline by the session reader —
 //!   bypassing the admission gate, so an overloaded daemon stays
 //!   observable — with counters, queue/in-flight gauges, per-tier cache
@@ -52,13 +56,14 @@ use std::collections::{BTreeMap, VecDeque};
 use std::io::{BufRead, Write};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use super::stats::{gauge_dec, ServeStats};
 use super::{resolve_jobs, CacheStatus, EvalMeta, EvalRequest, EvalResponse, EvalService};
 use crate::coordinator::Section;
+use crate::util::deadline::{Deadline, DEADLINE_EXPIRED};
 use crate::util::json::Json;
 use crate::util::table::Table;
 
@@ -434,7 +439,32 @@ fn answer(shared: &ServeShared<'_>, item: &Item) -> (EvalResponse, Disp) {
     }
     match &item.work {
         Err(msg) => (EvalResponse::error("error", "", msg.clone()), Disp::Answered),
-        Ok(req) => (shared.service.submit(req), Disp::Answered),
+        Ok(req) => {
+            // Thread the remaining budget into the evaluation: a
+            // deadline that survives queue wait can still expire
+            // mid-evaluation (net-exec polls it between tiles).
+            let deadline = match item.deadline_ms {
+                Some(d) => item
+                    .arrival
+                    // Clamp before Duration::from_secs_f64, which panics
+                    // past its representable range.
+                    .checked_add(Duration::from_secs_f64((d / 1e3).min(1e9)))
+                    .map_or_else(Deadline::none, Deadline::at),
+                None => Deadline::none(),
+            };
+            let resp = shared.service.submit_deadline(req, deadline);
+            let disp = if resp
+                .meta
+                .error
+                .as_deref()
+                .is_some_and(|e| e.contains(DEADLINE_EXPIRED))
+            {
+                Disp::Deadline
+            } else {
+                Disp::Answered
+            };
+            (resp, disp)
+        }
     }
 }
 

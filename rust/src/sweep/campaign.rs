@@ -266,6 +266,16 @@ pub enum WorkloadSpec {
         conv: u32,
         scale: u32,
     },
+    /// A whole network *executed* end to end on the crossbar simulator
+    /// (conv + pooling + ReLU + FC layers, see [`crate::pim::netexec`])
+    /// at a down-scaled shape. Evaluation *fails* unless the final
+    /// output is bit-identical to the host reference and every MAC
+    /// layer's executed per-MAC costs equal the analytic
+    /// [`crate::pim::matpim::CnnPimModel`].
+    NetExec {
+        model: CnnModel,
+        scale: u32,
+    },
 }
 
 impl WorkloadSpec {
@@ -284,6 +294,9 @@ impl WorkloadSpec {
             WorkloadSpec::ConvExec { model, conv, scale } => {
                 format!("conv-exec-{}-c{conv}-s{scale}", model.name())
             }
+            WorkloadSpec::NetExec { model, scale } => {
+                format!("net-exec-{}-s{scale}", model.name())
+            }
         }
     }
 
@@ -295,6 +308,7 @@ impl WorkloadSpec {
             WorkloadSpec::Cnn { .. } => "img/s",
             WorkloadSpec::Decode { .. } => "tok/s",
             WorkloadSpec::ConvExec { .. } => "mac/s",
+            WorkloadSpec::NetExec { .. } => "img/s",
         }
     }
 
@@ -322,6 +336,11 @@ impl WorkloadSpec {
                 ("kind", Json::s("conv-exec")),
                 ("model", Json::s(model.name())),
                 ("conv", Json::i(conv as i64)),
+                ("scale", Json::i(scale as i64)),
+            ]),
+            WorkloadSpec::NetExec { model, scale } => Json::obj(vec![
+                ("kind", Json::s("net-exec")),
+                ("model", Json::s(model.name())),
                 ("scale", Json::i(scale as i64)),
             ]),
         }
@@ -354,6 +373,13 @@ impl WorkloadSpec {
             let conv: u32 = conv.parse().ok().filter(|&c| c >= 1)?;
             let scale: u32 = scale.parse().ok().filter(|&s| s >= 1)?;
             return Some(WorkloadSpec::ConvExec { model, conv, scale });
+        }
+        if let Some(rest) = name.strip_prefix("net-exec-") {
+            // net-exec-{model}-s{M}; model names carry no `-s`.
+            let (model_name, scale) = rest.rsplit_once("-s")?;
+            let model = CnnModel::from_name(model_name)?;
+            let scale: u32 = scale.parse().ok().filter(|&s| s >= 1)?;
+            return Some(WorkloadSpec::NetExec { model, scale });
         }
         if let Some(rest) = name.strip_prefix("cnn-") {
             let (model_name, training) = match rest.strip_suffix("-train") {
@@ -445,9 +471,35 @@ impl WorkloadSpec {
                     })?;
                 Ok(WorkloadSpec::ConvExec { model, conv, scale })
             }
+            Some("net-exec") => {
+                let name = j
+                    .get("model")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("net-exec workload needs a `model`"))?;
+                let model = CnnModel::from_name(name).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown cnn model `{name}`; available: {}",
+                        CnnModel::all()
+                            .iter()
+                            .map(|m| m.name())
+                            .collect::<Vec<_>>()
+                            .join(", ")
+                    )
+                })?;
+                let scale = j.get("scale").and_then(Json::as_u64).unwrap_or(16);
+                // Same zero/overflow rule as conv-exec: scale 0 would
+                // silently execute the full-size network.
+                let scale = u32::try_from(scale)
+                    .ok()
+                    .filter(|&s| s >= 1)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("net-exec `scale` must be in 1..=u32::MAX, got {scale}")
+                    })?;
+                Ok(WorkloadSpec::NetExec { model, scale })
+            }
             other => anyhow::bail!(
-                "workload `kind` must be elementwise|matmul|cnn|attention-decode|conv-exec, \
-                 got {other:?}"
+                "workload `kind` must be elementwise|matmul|cnn|attention-decode|conv-exec|\
+                 net-exec, got {other:?}"
             ),
         }
     }
@@ -714,13 +766,30 @@ impl Campaign {
                 }],
                 backends: Vec::new(),
             }),
+            "net-exec" => Some(Campaign {
+                name: "net-exec".into(),
+                archs: vec![
+                    ArchSpec::paper(GateSet::MemristiveNor),
+                    ArchSpec::paper(GateSet::DramMaj),
+                ],
+                formats: vec![NumFmt::Fixed(8), NumFmt::Float(Format::FP32)],
+                workloads: vec![WorkloadSpec::NetExec {
+                    model: CnnModel::AlexNet,
+                    scale: 16,
+                }],
+                gpus: vec![GpuBaseline {
+                    gpu: GpuSpec::a6000(),
+                    mode: GpuMode::Experimental,
+                }],
+                backends: Vec::new(),
+            }),
             _ => None,
         }
     }
 
     /// Names accepted by [`Campaign::builtin`].
     pub fn builtin_names() -> &'static [&'static str] {
-        &["fig4", "fig5", "sens-dims", "conv-exec"]
+        &["fig4", "fig5", "sens-dims", "conv-exec", "net-exec"]
     }
 }
 
@@ -755,7 +824,7 @@ mod tests {
 
     #[test]
     fn campaign_json_round_trips() {
-        for name in ["sens-dims", "conv-exec"] {
+        for name in ["sens-dims", "conv-exec", "net-exec"] {
             let c = Campaign::builtin(name).unwrap();
             let text = c.to_json().pretty();
             let back = Campaign::from_json_text(&text).unwrap();
@@ -884,6 +953,8 @@ mod tests {
             WorkloadSpec::Cnn { model: CnnModel::MobileNetV1, training: true },
             WorkloadSpec::Decode { seq: 2048 },
             WorkloadSpec::ConvExec { model: CnnModel::AlexNet, conv: 2, scale: 16 },
+            WorkloadSpec::NetExec { model: CnnModel::AlexNet, scale: 16 },
+            WorkloadSpec::NetExec { model: CnnModel::MobileNetV1, scale: 32 },
         ];
         for spec in specs {
             let name = spec.name();
@@ -897,6 +968,9 @@ mod tests {
             "decode-s0",
             "conv-exec-alexnet-c0-s8",
             "conv-exec-alexnet-c2",
+            "net-exec-alexnet",
+            "net-exec-alexnet-s0",
+            "net-exec-lenet-s16",
             "resnet50",
             "",
         ] {

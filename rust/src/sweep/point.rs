@@ -14,7 +14,7 @@
 use anyhow::Result;
 
 use super::campaign::{ArchSpec, GpuBaseline, WorkloadSpec};
-use crate::backend::{self, AnalyticPim, Backend, ExecutedCrossbar, GpuRoofline};
+use crate::backend::{self, AnalyticPim, Backend, ExecutedCrossbar, ExecutedNet, GpuRoofline};
 use crate::pim::matpim::NumFmt;
 use crate::util::json::Json;
 
@@ -165,6 +165,7 @@ impl SweepPoint {
         let arch = self.arch.arch();
         let pim_backend: Box<dyn Backend> = match self.workload {
             WorkloadSpec::ConvExec { .. } => Box::new(ExecutedCrossbar::new(self.arch)),
+            WorkloadSpec::NetExec { .. } => Box::new(ExecutedNet::new(self.arch)),
             _ => Box::new(AnalyticPim::new(self.arch)),
         };
         let gpu_backend = GpuRoofline::new(self.gpu.gpu, self.gpu.mode, None);
@@ -374,7 +375,7 @@ mod tests {
         // Every builtin point can be reconstructed from its canonical
         // config — the service's `sweep-point` requests depend on the
         // reconstruction hitting the same cache keys.
-        for name in ["fig4", "fig5", "sens-dims", "conv-exec"] {
+        for name in ["fig4", "fig5", "sens-dims", "conv-exec", "net-exec"] {
             for p in Campaign::builtin(name).unwrap().points() {
                 let config = p.config_json();
                 let back = SweepPoint::from_config_json(&config).unwrap();
@@ -434,6 +435,35 @@ mod tests {
         assert_eq!(r.unit, "mac/s");
         assert!(r.pim > 0.0 && r.gpu_tp > 0.0);
         assert!(r.cc.is_none());
+    }
+
+    #[test]
+    fn net_exec_point_executes_the_whole_network() {
+        // The cheap (fixed8, memristive) cell of the builtin net-exec
+        // campaign: evaluation runs scaled AlexNet end to end on the
+        // simulator and only returns Ok if every layer cross-validates
+        // and the final output is bit-exact.
+        let pts = Campaign::builtin("net-exec").unwrap().points();
+        let p = pts
+            .iter()
+            .find(|p| p.fmt.name() == "fixed8" && p.arch.name() == "memristive")
+            .unwrap();
+        let r = p.eval().unwrap();
+        assert_eq!(r.unit, "img/s");
+        assert!(r.pim > 0.0 && r.gpu_tp > 0.0);
+        assert!(r.cc.is_none());
+    }
+
+    #[test]
+    fn net_exec_unknown_model_errors() {
+        use crate::sweep::{CnnModel, WorkloadSpec};
+        let mut p = Campaign::builtin("net-exec").unwrap().points()[0].clone();
+        p.workload = WorkloadSpec::NetExec {
+            model: CnnModel::Vgg16,
+            scale: 16,
+        };
+        let err = p.eval().err().expect("no executable vgg16 graph yet");
+        assert!(format!("{err}").contains("no executable graph"));
     }
 
     #[test]

@@ -1,0 +1,93 @@
+//! Cooperative evaluation deadlines.
+//!
+//! PR 6's `deadline_ms` only bounded *queue wait*: once a request was
+//! admitted and evaluation began, it ran to completion no matter how far
+//! past its deadline it was. Executed-network requests can run for
+//! seconds, so the net executor ([`crate::pim::netexec`]) now takes a
+//! [`Deadline`] and polls it **between tiles** — the natural preemption
+//! point of crossbar execution (cheap: one `Instant::now()` per tile,
+//! thousands of cycles of simulated work apart). An expired deadline
+//! aborts the evaluation with an error whose message starts with
+//! [`DEADLINE_EXPIRED`], which the serve layer maps to the same
+//! structured `deadline` error class as a queue-wait expiry.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+/// Marker prefix of deadline-expiry errors; the serve layer classifies
+/// evaluation errors whose message starts with this as `deadline` rather
+/// than `eval` failures.
+pub const DEADLINE_EXPIRED: &str = "deadline expired";
+
+/// An optional wall-clock deadline, checked cooperatively.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Deadline {
+    at: Option<Instant>,
+}
+
+impl Deadline {
+    /// No deadline: every check passes.
+    pub fn none() -> Deadline {
+        Deadline { at: None }
+    }
+
+    /// Deadline at an absolute instant.
+    pub fn at(at: Instant) -> Deadline {
+        Deadline { at: Some(at) }
+    }
+
+    /// Deadline `ms` milliseconds from now.
+    pub fn in_ms(ms: u64) -> Deadline {
+        Deadline {
+            at: Instant::now().checked_add(Duration::from_millis(ms)),
+        }
+    }
+
+    /// `in_ms` when a budget is present, `none` otherwise — the shape the
+    /// service layer's optional `deadline_ms` field arrives in.
+    pub fn from_opt_ms(ms: Option<u64>) -> Deadline {
+        ms.map_or_else(Deadline::none, Deadline::in_ms)
+    }
+
+    /// True when a deadline is set and has passed.
+    pub fn expired(&self) -> bool {
+        self.at.is_some_and(|t| Instant::now() >= t)
+    }
+
+    /// Error out (with the [`DEADLINE_EXPIRED`] marker) when expired.
+    pub fn check(&self, during: &str) -> Result<()> {
+        anyhow::ensure!(!self.expired(), "{DEADLINE_EXPIRED} during {during}");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_never_expires() {
+        let d = Deadline::none();
+        assert!(!d.expired());
+        d.check("anything").unwrap();
+        assert!(!Deadline::from_opt_ms(None).expired());
+    }
+
+    #[test]
+    fn past_deadline_expires_with_marker() {
+        let d = Deadline::at(Instant::now() - Duration::from_millis(1));
+        assert!(d.expired());
+        let err = d.check("net evaluation").unwrap_err().to_string();
+        assert!(err.starts_with(DEADLINE_EXPIRED), "{err}");
+        assert!(err.contains("net evaluation"), "{err}");
+    }
+
+    #[test]
+    fn future_deadline_passes() {
+        let d = Deadline::in_ms(60_000);
+        assert!(!d.expired());
+        d.check("x").unwrap();
+        assert!(Deadline::from_opt_ms(Some(60_000)).check("x").is_ok());
+    }
+}

@@ -13,10 +13,13 @@
 //! * [`cli`] — a small subcommand/flag parser for the `convpim` binary.
 //! * [`pool`] — a hand-rolled thread pool (no `rayon`) backing the sharded
 //!   crossbar engine and the parallel experiment runner.
+//! * [`deadline`] — cooperative wall-clock deadlines polled between tiles
+//!   of executed-network evaluation.
 //! * [`stats`] — summary statistics shared by bench and report code.
 
 pub mod bench;
 pub mod cli;
+pub mod deadline;
 pub mod json;
 pub mod pool;
 pub mod rng;

@@ -19,6 +19,8 @@ use std::fs;
 use std::path::PathBuf;
 
 use convpim::coordinator::{run_experiment, Ctx};
+use convpim::pim::matpim::NumFmt;
+use convpim::service::{EvalRequest, EvalService, NetExecSpec};
 use convpim::sweep::{run_points, Campaign, OutputFormat, Streamer};
 
 fn golden_path(name: &str) -> PathBuf {
@@ -87,6 +89,29 @@ fn golden_fig5_table() {
 }
 
 #[test]
+fn golden_fig6_table() {
+    // fig6 now carries the executed full-network section (fast context:
+    // fixed8, AlexNet /32, both gate sets) on top of the analytic CNN
+    // figure — the snapshot locks both halves.
+    golden_check("fig6_table.txt", &experiment_text("fig6"));
+}
+
+#[test]
+fn golden_exec_net_table() {
+    // The `convpim exec-net` verdict table: executed AlexNet /32 in
+    // fixed8 across both gate sets, cache disabled so the bytes come
+    // from a fresh evaluation. The rendering is deterministic (seeded
+    // operands, shortest-round-trip floats).
+    let svc = EvalService::new().with_cache(None);
+    let mut spec = NetExecSpec::new("alexnet");
+    spec.scale = 32;
+    spec.fmt = Some(NumFmt::Fixed(8));
+    let resp = svc.submit(&EvalRequest::NetExec(spec));
+    assert!(resp.meta.ok, "exec-net failed: {:?}", resp.meta.error);
+    golden_check("exec_net_table.txt", &resp.stdout);
+}
+
+#[test]
 fn golden_fig4_csv() {
     golden_check("fig4.csv", &campaign_csv("fig4"));
 }
@@ -94,4 +119,13 @@ fn golden_fig4_csv() {
 #[test]
 fn golden_fig5_csv() {
     golden_check("fig5.csv", &campaign_csv("fig5"));
+}
+
+#[test]
+#[cfg_attr(
+    debug_assertions,
+    ignore = "executes the fp32 network end to end; run with --release"
+)]
+fn golden_net_exec_csv() {
+    golden_check("net_exec.csv", &campaign_csv("net-exec"));
 }

@@ -1,0 +1,403 @@
+//! Property tests for the layer-graph executor: seeded-random layer
+//! graphs (depth 2–6, mixing conv / pool / ReLU / FC) are run end to end
+//! on the bit-exact crossbar simulator and compared against an
+//! *independent* host reference written in this file — plain nested
+//! loops over the layer definitions, not the library's `reference_net`.
+//! Covered: fixed8/fixed16 and softfloat-fp32, both gate sets; per-MAC
+//! executed latency equal to the analytic CNN model's; and
+//! pipelined-vs-serial byte equality at any worker count.
+//!
+//! The heavy sweeps are `#[ignore]`d under debug builds (each graph
+//! executes its full gate-level program chain); CI runs them with
+//! `cargo test --release`, where the whole file takes seconds. A small
+//! smoke subset always runs.
+
+use convpim::pim::gates::GateSet;
+use convpim::pim::matpim::{CnnPimModel, NumFmt};
+use convpim::pim::netexec::{
+    execute_net, seeded_net_operands, NetExecOpts, NetGraph, NetOp,
+};
+use convpim::pim::softfloat::{self, Format};
+use convpim::util::rng::Rng;
+use convpim::workloads::ConvSpec;
+
+// ---------------------------------------------------------------------------
+// Independent host reference. Everything below is written directly
+// against the layer definitions: wrapping modulo-2^bits fixed-point,
+// IEEE-style softfloat via the scalar softfloat ops, max-pool as a
+// plain window maximum, ReLU as a sign test.
+
+/// Nested-loop conv/FC in fixed-point (FC is a 1×1 conv over the
+/// flattened input, so the same loop covers both).
+fn host_conv_fixed(spec: &ConvSpec, bits: u32, input: &[u64], weights: &[u64]) -> Vec<u64> {
+    let mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+    let (ho, wo) = spec.out_dims();
+    let (cin, h, w, k) = (
+        spec.cin as usize,
+        spec.h as usize,
+        spec.w as usize,
+        spec.k as usize,
+    );
+    let mut out = Vec::new();
+    for co in 0..spec.cout as usize {
+        for oh in 0..ho as usize {
+            for ow in 0..wo as usize {
+                let mut acc = 0u64;
+                for c in 0..cin {
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            let iy = (oh * spec.stride as usize + ky) as i64 - spec.pad as i64;
+                            let ix = (ow * spec.stride as usize + kx) as i64 - spec.pad as i64;
+                            let a = if iy < 0 || ix < 0 || iy >= h as i64 || ix >= w as i64 {
+                                0
+                            } else {
+                                input[(c * h + iy as usize) * w + ix as usize]
+                            };
+                            let b = weights[((co * cin + c) * k + ky) * k + kx];
+                            acc = acc.wrapping_add(a.wrapping_mul(b) & mask) & mask;
+                        }
+                    }
+                }
+                out.push(acc);
+            }
+        }
+    }
+    out
+}
+
+/// The same nested loop in softfloat arithmetic, accumulating in the
+/// engine's reduction order (channel-major patch, `acc` starting at +0).
+fn host_conv_float(spec: &ConvSpec, fmt: Format, input: &[u64], weights: &[u64]) -> Vec<u64> {
+    use convpim::pim::fixed::FixedOp;
+    let (ho, wo) = spec.out_dims();
+    let (cin, h, w, k) = (
+        spec.cin as usize,
+        spec.h as usize,
+        spec.w as usize,
+        spec.k as usize,
+    );
+    let mut out = Vec::new();
+    for co in 0..spec.cout as usize {
+        for oh in 0..ho as usize {
+            for ow in 0..wo as usize {
+                let mut acc = 0u64;
+                for c in 0..cin {
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            let iy = (oh * spec.stride as usize + ky) as i64 - spec.pad as i64;
+                            let ix = (ow * spec.stride as usize + kx) as i64 - spec.pad as i64;
+                            let a = if iy < 0 || ix < 0 || iy >= h as i64 || ix >= w as i64 {
+                                0
+                            } else {
+                                input[(c * h + iy as usize) * w + ix as usize]
+                            };
+                            let b = weights[((co * cin + c) * k + ky) * k + kx];
+                            let p = softfloat::apply(fmt, FixedOp::Mul, a, b);
+                            acc = softfloat::apply(fmt, FixedOp::Add, acc, p);
+                        }
+                    }
+                }
+                out.push(acc);
+            }
+        }
+    }
+    out
+}
+
+/// NaN test written from the IEEE layout (exponent all-ones, mantissa
+/// nonzero), with field widths looked up by the format's total width so
+/// no library classification helper is involved.
+fn host_is_nan(n: u32, v: u64) -> bool {
+    let (exp, man) = match n {
+        16 => (5u32, 10u32),
+        32 => (8, 23),
+        64 => (11, 52),
+        other => panic!("unexpected float width {other}"),
+    };
+    let man_mask = (1u64 << man) - 1;
+    let exp_field = (v >> man) & ((1 << exp) - 1);
+    exp_field == (1 << exp) - 1 && v & man_mask != 0
+}
+
+/// ReLU: fixed-point clamps sign-extended negatives to zero; float
+/// clamps negatives (sign bit set) and NaN to +0.
+fn host_relu(fmt: NumFmt, v: u64) -> u64 {
+    let n = fmt.bits();
+    let neg = (v >> (n - 1)) & 1 == 1;
+    match fmt {
+        NumFmt::Fixed(_) => {
+            if neg {
+                0
+            } else {
+                v
+            }
+        }
+        NumFmt::Float(_) => {
+            if neg || host_is_nan(n, v) {
+                0
+            } else {
+                v
+            }
+        }
+    }
+}
+
+/// Two's-complement signed value of an `n`-bit word.
+fn sext(v: u64, n: u32) -> i64 {
+    let shift = 64 - n;
+    ((v << shift) as i64) >> shift
+}
+
+/// Monotone total-order key for an `n`-bit IEEE word: flip all bits of
+/// negatives, set the top bit of non-negatives. Larger key ⇔ larger
+/// value (−0 sorts below +0, NaNs above +∞).
+fn float_key(v: u64, n: u32) -> u64 {
+    let mask = if n == 64 { u64::MAX } else { (1u64 << n) - 1 };
+    if (v >> (n - 1)) & 1 == 1 {
+        !v & mask
+    } else {
+        v | 1 << (n - 1)
+    }
+}
+
+fn host_max(fmt: NumFmt, a: u64, b: u64) -> u64 {
+    let n = fmt.bits();
+    let keep_a = match fmt {
+        NumFmt::Fixed(_) => sext(a, n) >= sext(b, n),
+        NumFmt::Float(_) => float_key(a, n) >= float_key(b, n),
+    };
+    if keep_a {
+        a
+    } else {
+        b
+    }
+}
+
+/// Max-pool over non-padded windows, channel-major. Max under a total
+/// order is fold-order independent, so a plain window scan suffices.
+fn host_pool(
+    fmt: NumFmt,
+    (c, h, w): (u32, u32, u32),
+    k: u32,
+    stride: u32,
+    input: &[u64],
+) -> Vec<u64> {
+    let (c, h, w, k, stride) = (
+        c as usize,
+        h as usize,
+        w as usize,
+        k as usize,
+        stride as usize,
+    );
+    let ho = (h - k) / stride + 1;
+    let wo = (w - k) / stride + 1;
+    let mut out = Vec::with_capacity(c * ho * wo);
+    for ch in 0..c {
+        let base = ch * h * w;
+        for oh in 0..ho {
+            for ow in 0..wo {
+                let mut best = input[base + oh * stride * w + ow * stride];
+                for ky in 0..k {
+                    for kx in 0..k {
+                        let v = input[base + (oh * stride + ky) * w + ow * stride + kx];
+                        best = host_max(fmt, best, v);
+                    }
+                }
+                out.push(best);
+            }
+        }
+    }
+    out
+}
+
+/// Walk the whole graph through the independent layer references.
+fn host_net(graph: &NetGraph, fmt: NumFmt, input: &[u64], weights: &[Vec<u64>]) -> Vec<u64> {
+    let mut cur = input.to_vec();
+    for (li, layer) in graph.layers.iter().enumerate() {
+        cur = match layer.op {
+            NetOp::Conv(s) | NetOp::Fc(s) => match fmt {
+                NumFmt::Fixed(bits) => host_conv_fixed(&s, bits, &cur, &weights[li]),
+                NumFmt::Float(f) => host_conv_float(&s, f, &cur, &weights[li]),
+            },
+            NetOp::Relu => cur.iter().map(|&v| host_relu(fmt, v)).collect(),
+            NetOp::Pool { k, stride } => host_pool(fmt, layer.in_shape, k, stride, &cur),
+        };
+        assert_eq!(cur.len(), layer.out_elems(), "host ref: {}", layer.name);
+    }
+    cur
+}
+
+// ---------------------------------------------------------------------------
+// Random graph generation: depth 2–6, every layer kind reachable, shapes
+// kept small so one graph executes in milliseconds. Once an FC appears
+// the tail stays FC/ReLU (like real classifier heads).
+
+fn random_graph(rng: &mut Rng, gi: usize) -> NetGraph {
+    let c = 1 + rng.index(3) as u32;
+    let sp = 4 + rng.index(5) as u32;
+    let mut g = NetGraph::new(&format!("prop-{gi}"), c, sp, sp);
+    let depth = 2 + rng.index(5);
+    let mut fc_seen = false;
+    for li in 0..depth {
+        let (_, h, w) = g.shape();
+        let choice = if fc_seen {
+            [1, 3][rng.index(2)]
+        } else {
+            rng.index(4)
+        };
+        match choice {
+            0 => {
+                let k = [1u32, 3][rng.index(2)].min(h).min(w);
+                let cout = 1 + rng.index(4) as u32;
+                let stride = 1 + rng.index(2) as u32;
+                let pad = rng.index(2) as u32;
+                g.conv(&format!("conv{li}"), cout, k, stride, pad);
+            }
+            1 => {
+                g.relu(&format!("relu{li}"));
+            }
+            2 => {
+                g.pool(&format!("pool{li}"), 2, 1 + rng.index(2) as u32);
+            }
+            _ => {
+                g.fc(&format!("fc{li}"), 1 + rng.index(6) as u32);
+                fc_seen = true;
+            }
+        }
+    }
+    g
+}
+
+/// Execute `g` on the crossbar and check every acceptance property:
+/// bit-identical outputs vs the in-file host reference for each batch
+/// sample, and per-MAC executed latency equal to the analytic model's.
+fn check_graph(g: &NetGraph, fmt: NumFmt, set: GateSet, seed: u64, batch: usize) {
+    let (inputs, weights) = seeded_net_operands(g, fmt, seed, batch);
+    let opts = NetExecOpts {
+        xbar_rows: 64,
+        jobs: 1,
+        ..NetExecOpts::default()
+    };
+    let run = execute_net(g, fmt, set, &inputs, &weights, &opts)
+        .unwrap_or_else(|e| panic!("{} {fmt:?} {set:?}: {e:#}", g.name));
+    assert_eq!(run.outputs.len(), batch, "{}", g.name);
+    for (b, input) in inputs.iter().enumerate() {
+        assert_eq!(
+            run.outputs[b],
+            host_net(g, fmt, input, &weights),
+            "{} {fmt:?} {set:?} sample {b} deviates from the host reference",
+            g.name
+        );
+    }
+    for lr in run.layers.iter().filter(|l| l.macs > 0) {
+        let model = CnnPimModel::new(fmt, set, lr.macs as f64);
+        assert_eq!(
+            (lr.mac_cycles, lr.mac_gates),
+            (model.mac_cycles(), model.mac_gates()),
+            "{} layer {} per-MAC cost drifts from the analytic model",
+            g.name,
+            lr.name
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Always-on smoke subset.
+
+#[test]
+fn smoke_random_graphs_fixed8() {
+    let mut rng = Rng::new(0x5A0E);
+    for gi in 0..3 {
+        let g = random_graph(&mut rng, gi);
+        let set = if gi % 2 == 0 {
+            GateSet::MemristiveNor
+        } else {
+            GateSet::DramMaj
+        };
+        check_graph(&g, NumFmt::Fixed(8), set, 0xA11CE + gi as u64, 1);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Heavy sweeps — release builds only.
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "slow in debug; run with --release")]
+fn random_graphs_fixed_both_sets() {
+    // 24 graphs alternating fixed8/fixed16 across both gate sets.
+    let mut rng = Rng::new(0x6E45);
+    for gi in 0..24 {
+        let g = random_graph(&mut rng, gi);
+        let bits = if gi % 2 == 0 { 8 } else { 16 };
+        let set = if gi % 4 < 2 {
+            GateSet::MemristiveNor
+        } else {
+            GateSet::DramMaj
+        };
+        check_graph(&g, NumFmt::Fixed(bits), set, 0xF00D + gi as u64, 1 + gi % 2);
+    }
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "slow in debug; run with --release")]
+fn random_graphs_fp32_both_sets() {
+    // 16 graphs in softfloat-fp32 across both gate sets.
+    let mut rng = Rng::new(0xF107);
+    for gi in 0..16 {
+        let g = random_graph(&mut rng, gi);
+        let set = if gi % 2 == 0 {
+            GateSet::MemristiveNor
+        } else {
+            GateSet::DramMaj
+        };
+        check_graph(&g, NumFmt::Float(Format::FP32), set, 0xBEEF + gi as u64, 1);
+    }
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "slow in debug; run with --release")]
+fn pipelined_matches_serial_bytes() {
+    // Small crossbars force many tiles (a real dependency DAG); the
+    // pipelined scheduler must still produce byte-identical outputs and
+    // identical per-layer cost records at every worker count.
+    let mut rng = Rng::new(0x9199);
+    for gi in 0..4 {
+        let g = random_graph(&mut rng, gi);
+        let fmt = if gi % 2 == 0 {
+            NumFmt::Fixed(8)
+        } else {
+            NumFmt::Float(Format::FP32)
+        };
+        let set = if gi % 2 == 0 {
+            GateSet::DramMaj
+        } else {
+            GateSet::MemristiveNor
+        };
+        let (inputs, weights) = seeded_net_operands(&g, fmt, 0x5E71A + gi as u64, 2);
+        let mk = |jobs: usize| {
+            let opts = NetExecOpts {
+                xbar_rows: 7,
+                jobs,
+                ..NetExecOpts::default()
+            };
+            execute_net(&g, fmt, set, &inputs, &weights, &opts)
+                .unwrap_or_else(|e| panic!("{} jobs={jobs}: {e:#}", g.name))
+        };
+        let serial = mk(1);
+        assert_eq!(serial.outputs[0], host_net(&g, fmt, &inputs[0], &weights), "{}", g.name);
+        for jobs in [2, 8] {
+            let piped = mk(jobs);
+            assert_eq!(piped.outputs, serial.outputs, "{} jobs={jobs}", g.name);
+            assert_eq!(piped.executed_row_gates, serial.executed_row_gates, "{}", g.name);
+            for (a, b) in piped.layers.iter().zip(&serial.layers) {
+                assert_eq!(
+                    (a.op_cycles, a.move_cycles, a.stage_bits),
+                    (b.op_cycles, b.move_cycles, b.stage_bits),
+                    "{} layer {} jobs={jobs}",
+                    g.name,
+                    a.name
+                );
+            }
+        }
+    }
+}

@@ -269,3 +269,53 @@ fn expired_deadline_is_a_structured_error_not_an_evaluation() {
     );
     daemon.shutdown();
 }
+
+/// A deadline that is still live at pickup but expires while the
+/// evaluation runs must abort *mid-evaluation*: the executor polls the
+/// deadline between crossbar tiles and returns the structured
+/// mid-evaluation error (previously `deadline_ms` only bounded queue
+/// wait, so a long `net-exec` request ran to completion regardless).
+#[test]
+fn deadline_expires_mid_evaluation_not_only_in_the_queue() {
+    let daemon = Daemon::spawn(&["--jobs", "1", "--no-cache"]);
+    // AlexNet /2 in fixed8 is many seconds of crossbar execution in any
+    // build profile, but the request is picked up from the idle queue in
+    // microseconds — so a 150 ms budget can only expire mid-evaluation.
+    let lines = vec![
+        "{\"kind\": \"net-exec\", \"model\": \"alexnet\", \"scale\": 2, \
+         \"fmt\": \"fixed8\", \"set\": \"memristive\", \"deadline_ms\": 150}"
+            .to_string(),
+        "{\"kind\": \"list\"}".to_string(),
+    ];
+    let docs = client_session(daemon.addr, &lines);
+    assert_eq!(docs.len(), 2);
+    assert!(!meta_ok(&docs[0]), "the evaluation must not run to completion");
+    let err = docs[0]
+        .get("meta")
+        .unwrap()
+        .get("error")
+        .and_then(Json::as_str)
+        .unwrap_or("");
+    assert!(
+        err.contains("deadline expired during"),
+        "expected the mid-evaluation marker, got: {err}"
+    );
+    assert!(
+        !err.contains("before evaluation began"),
+        "queue-wait expiry means the cooperative checks were never exercised: {err}"
+    );
+    assert!(meta_ok(&docs[1]), "the session keeps serving after the abort");
+
+    // Stats classify the mid-evaluation expiry like the queue-wait one.
+    let stats = client_session(daemon.addr, &["{\"kind\": \"stats\"}".to_string()]);
+    assert_eq!(
+        stats[0]
+            .get("payload")
+            .unwrap()
+            .get("deadline_expired")
+            .unwrap()
+            .as_u64(),
+        Some(1)
+    );
+    daemon.shutdown();
+}
