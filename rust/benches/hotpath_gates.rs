@@ -1,14 +1,28 @@
 //! Hot-path microbench: the crossbar column-gate engine (the simulator's
 //! inner loop and the §Perf optimization target). Reports simulated
 //! row-gates per second across crossbar heights and gate mixes, plus the
-//! two headline ratios of the bit-sliced engine rewrite:
+//! headline ratios of the engine rewrite, and — with `--out PATH` —
+//! writes the machine-readable `BENCH_hotpath.json` artifact that starts
+//! the per-PR hotpath perf trajectory (see docs/EXPERIMENTS.md §HOTPATH):
 //!
 //! * **packed vs scalar** — the bit-sliced engine against the retained
 //!   per-row/per-bit `bool` oracle (`pim::oracle::ScalarCrossbar`), same
 //!   program, same rows. Packing alone is worth ~64× (one `u64` word op
 //!   simulates 64 row-gates); the acceptance bar is ≥ 10×.
-//! * **threaded vs serial** — `execute` (sharded across the thread pool)
-//!   against `execute_serial` on a tall crossbar.
+//! * **fused vs unfused** — the lowered micro-op pipeline
+//!   (`execute_fused`: peephole-fused pairs, widened noalias kernels)
+//!   against the retained per-instruction dispatch (`execute_serial`),
+//!   single thread, on the nor2-storm and fp32-mul mixes.
+//! * **sharded vs serial** — `execute` (fused + sharded across the
+//!   thread pool) against the single-thread fused path on a tall
+//!   crossbar.
+//!
+//! Run `cargo bench --bench hotpath_gates -- --out BENCH_hotpath.json`;
+//! set `CONVPIM_BENCH_FAST=1` for the CI smoke profile. Exits nonzero if
+//! the packed-vs-scalar ratio degenerates below the 10× acceptance bar.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
 
 use convpim::pim::fixed::{self, FixedOp};
 use convpim::pim::float;
@@ -18,6 +32,7 @@ use convpim::pim::oracle::ScalarCrossbar;
 use convpim::pim::softfloat::Format;
 use convpim::pim::xbar::Crossbar;
 use convpim::util::bench::{bench, header, report, BenchConfig};
+use convpim::util::json::Json;
 use convpim::util::pool::Pool;
 use convpim::util::rng::Rng;
 
@@ -39,22 +54,79 @@ fn nor_storm(rng: &mut Rng, cols: u32, gates: usize) -> Program {
     prog
 }
 
-fn main() {
+/// One per-mix JSON record: throughput plus the mix's lowering stats.
+fn mix_json(name: &str, rows: usize, prog: &Program, rowgates_per_s: f64) -> Json {
+    Json::obj(vec![
+        ("name", Json::s(name)),
+        ("rows", Json::i(rows as i64)),
+        ("gates", Json::i(prog.gates() as i64)),
+        ("instrs", Json::i(prog.len() as i64)),
+        ("micro_ops", Json::i(prog.lowered().len() as i64)),
+        ("fused_pairs", Json::i(prog.lowered().fused() as i64)),
+        ("rowgates_per_s", Json::n(rowgates_per_s)),
+    ])
+}
+
+/// Measure `execute_serial` (unfused dispatch) vs `execute_fused` (the
+/// lowered pipeline) on one program; returns (ratio, fused rowgates/s).
+fn fused_vs_unfused(
+    label: &str,
+    prog: &Program,
+    rows: usize,
+    cfg: &BenchConfig,
+) -> (f64, f64) {
+    let units = prog.gates() as f64 * rows as f64;
+    let mut x = Crossbar::new(rows, prog.width() as usize);
+    let runf = report(bench(
+        &format!("unfused(serial) {label} rows={rows}"),
+        units,
+        cfg,
+        || x.execute_serial(prog),
+    ));
+    let rfus = report(bench(
+        &format!("fused(lowered)  {label} rows={rows}"),
+        units,
+        cfg,
+        || x.execute_fused(prog),
+    ));
+    let ratio = runf.per_batch_secs.median / rfus.per_batch_secs.median;
+    println!(
+        "fused-pipeline speedup over per-instruction dispatch ({label}): \
+         {ratio:.2}x  ({} of {} instrs fused into pairs)",
+        prog.lowered().fused(),
+        prog.len()
+    );
+    (ratio, rfus.units_per_sec())
+}
+
+fn main() -> ExitCode {
+    // `--out PATH` writes BENCH_hotpath.json; unknown args (e.g. anything
+    // cargo forwards) are ignored.
+    let mut out_path: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        if a == "--out" {
+            out_path = args.next().map(PathBuf::from);
+        }
+    }
+
     let cfg = BenchConfig::from_env();
     header("hotpath: crossbar column-gate engine");
     let mut rng = Rng::new(1);
+    let mut mixes: Vec<Json> = Vec::new();
 
     // Raw NOR storm across crossbar heights (auto-dispatched engine).
     for rows in [1024usize, 16384, 262_144] {
         let prog = nor_storm(&mut rng, 64, 1024);
         let mut x = Crossbar::new(rows, 64);
         let units = prog.gates() as f64 * rows as f64;
-        report(bench(
+        let r = report(bench(
             &format!("nor2_storm rows={rows}"),
             units,
             &cfg,
             || x.execute(&prog),
         ));
+        mixes.push(mix_json("nor2_storm", rows, &prog, r.units_per_sec()));
     }
 
     // Real programs: fixed32 add / fp32 add / fp32 mul.
@@ -67,9 +139,10 @@ fn main() {
         let rows = 65_536;
         let mut x = Crossbar::new(rows, prog.width() as usize);
         let units = prog.gates() as f64 * rows as f64;
-        report(bench(&format!("{name} rows={rows}"), units, &cfg, || {
+        let r = report(bench(&format!("{name} rows={rows}"), units, &cfg, || {
             x.execute(&prog)
         }));
+        mixes.push(mix_json(name, rows, &prog, r.units_per_sec()));
     }
 
     // Bit-sliced engine vs the scalar reference oracle (acceptance: ≥10×).
@@ -80,10 +153,10 @@ fn main() {
     let mut packed = Crossbar::new(rows, 64);
     let mut scalar = ScalarCrossbar::new(rows, 64);
     let rp = report(bench(
-        &format!("packed(serial) nor2_storm rows={rows}"),
+        &format!("packed(fused)  nor2_storm rows={rows}"),
         units,
         &cfg,
-        || packed.execute_serial(&prog),
+        || packed.execute_fused(&prog),
     ));
     let rs = report(bench(
         &format!("scalar-oracle  nor2_storm rows={rows}"),
@@ -91,15 +164,22 @@ fn main() {
         &cfg,
         || scalar.execute(&prog),
     ));
-    let speedup = rs.per_batch_secs.median / rp.per_batch_secs.median;
+    let packed_vs_scalar = rs.per_batch_secs.median / rp.per_batch_secs.median;
     println!(
-        "bit-sliced speedup over scalar reference: {speedup:.1}x \
+        "bit-sliced speedup over scalar reference: {packed_vs_scalar:.1}x \
          (acceptance bar: >= 10x)"
     );
 
-    // Thread-pool sharding vs the serial path on a tall crossbar.
+    // Fused micro-op pipeline vs the retained per-instruction dispatch.
+    header("fused micro-op pipeline vs per-instruction dispatch");
+    let storm = nor_storm(&mut rng, 64, 1024);
+    let (fused_storm, _) = fused_vs_unfused("nor2_storm", &storm, 65_536, &cfg);
+    let fp32_mul = float::program(FixedOp::Mul, Format::FP32, GateSet::MemristiveNor);
+    let (fused_fp32, _) = fused_vs_unfused("fp32_mul", &fp32_mul, 65_536, &cfg);
+
+    // Thread-pool sharding vs the single-thread fused path.
     header(&format!(
-        "sharded execute vs serial (pool: {} threads)",
+        "sharded execute vs single-thread fused (pool: {} threads)",
         Pool::global().threads()
     ));
     let rows = 1 << 20;
@@ -107,10 +187,10 @@ fn main() {
     let units = prog.gates() as f64 * rows as f64;
     let mut x = Crossbar::new(rows, 64);
     let rser = report(bench(
-        &format!("serial   nor2_storm rows={rows}"),
+        &format!("fused    nor2_storm rows={rows}"),
         units,
         &cfg,
-        || x.execute_serial(&prog),
+        || x.execute_fused(&prog),
     ));
     let rpar = report(bench(
         &format!("sharded  nor2_storm rows={rows}"),
@@ -118,8 +198,42 @@ fn main() {
         &cfg,
         || x.execute(&prog),
     ));
-    println!(
-        "thread-pool speedup over serial: {:.2}x",
-        rser.per_batch_secs.median / rpar.per_batch_secs.median
-    );
+    let sharded_vs_serial = rser.per_batch_secs.median / rpar.per_batch_secs.median;
+    println!("thread-pool speedup over single thread: {sharded_vs_serial:.2}x");
+
+    if let Some(path) = &out_path {
+        let doc = Json::obj(vec![
+            ("bench", Json::s("hotpath")),
+            ("schema", Json::i(1)),
+            ("threads", Json::i(Pool::global().threads() as i64)),
+            (
+                "fast",
+                Json::i(i64::from(std::env::var("CONVPIM_BENCH_FAST").is_ok())),
+            ),
+            ("mixes", Json::arr(mixes)),
+            (
+                "ratios",
+                Json::obj(vec![
+                    ("packed_vs_scalar", Json::n(packed_vs_scalar)),
+                    ("fused_vs_unfused_nor2_storm", Json::n(fused_storm)),
+                    ("fused_vs_unfused_fp32_mul", Json::n(fused_fp32)),
+                    ("sharded_vs_serial", Json::n(sharded_vs_serial)),
+                ]),
+            ),
+        ]);
+        if let Err(e) = std::fs::write(path, format!("{}\n", doc.pretty())) {
+            eprintln!("failed to write {}: {e}", path.display());
+            return ExitCode::FAILURE;
+        }
+        println!("\nwrote {}", path.display());
+    }
+
+    if packed_vs_scalar < 10.0 {
+        eprintln!(
+            "DEGENERATE: packed-vs-scalar ratio {packed_vs_scalar:.1}x \
+             below the 10x acceptance bar"
+        );
+        return ExitCode::FAILURE;
+    }
+    ExitCode::SUCCESS
 }

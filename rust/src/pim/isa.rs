@@ -9,7 +9,10 @@
 //! bit-exactly on [`crate::pim::xbar::Crossbar`] (correctness) or *costed*
 //! through [`crate::pim::gates::GateSet`] (architecture-scale performance).
 
+use std::sync::OnceLock;
+
 use super::gates::GateSet;
+use super::lower::{self, Lowered};
 
 /// Index of a crossbar column.
 pub type Col = u32;
@@ -81,38 +84,51 @@ impl Instr {
     /// costs exactly — it is how a compiled scalar program (whose layout
     /// starts at column 0) is embedded at an arbitrary offset inside a
     /// larger program (see [`Program::extend_relocated`]).
+    ///
+    /// # Panics
+    ///
+    /// Panics if any shifted column overflows [`Col`]. Unchecked `u32`
+    /// addition here used to wrap silently in release builds, renaming
+    /// columns into live low-numbered operand fields while the width
+    /// bookkeeping saw a small bogus maximum — a deep `extend_relocated`
+    /// schedule would corrupt the program without any diagnostic.
     #[inline]
     pub fn relocated(self, base: Col) -> Instr {
+        let r = |c: Col| -> Col {
+            c.checked_add(base).unwrap_or_else(|| {
+                panic!(
+                    "relocating {self:?} by base {base}: column {c} + {base} \
+                     overflows Col (u32)"
+                )
+            })
+        };
         match self {
             Instr::Nor2 { a, b, out } => Instr::Nor2 {
-                a: a + base,
-                b: b + base,
-                out: out + base,
+                a: r(a),
+                b: r(b),
+                out: r(out),
             },
             Instr::Nor3 { a, b, c, out } => Instr::Nor3 {
-                a: a + base,
-                b: b + base,
-                c: c + base,
-                out: out + base,
+                a: r(a),
+                b: r(b),
+                c: r(c),
+                out: r(out),
             },
             Instr::Not { a, out } => Instr::Not {
-                a: a + base,
-                out: out + base,
+                a: r(a),
+                out: r(out),
             },
             Instr::Maj3 { a, b, c, out } => Instr::Maj3 {
-                a: a + base,
-                b: b + base,
-                c: c + base,
-                out: out + base,
+                a: r(a),
+                b: r(b),
+                c: r(c),
+                out: r(out),
             },
             Instr::Copy { a, out } => Instr::Copy {
-                a: a + base,
-                out: out + base,
+                a: r(a),
+                out: r(out),
             },
-            Instr::Set { out, bit } => Instr::Set {
-                out: out + base,
-                bit,
-            },
+            Instr::Set { out, bit } => Instr::Set { out: r(out), bit },
         }
     }
 }
@@ -148,6 +164,9 @@ pub struct Program {
     instrs: Vec<Instr>,
     counts: OpCounts,
     width: Col,
+    /// Lazily-computed micro-op pipeline (see [`Program::lowered`]);
+    /// invalidated by `push` so it can never go stale.
+    lowered: OnceLock<Lowered>,
 }
 
 impl Program {
@@ -160,8 +179,17 @@ impl Program {
     }
 
     /// Append an instruction.
+    ///
+    /// # Panics
+    ///
+    /// Panics if any column of `instr` equals `Col::MAX`: the program's
+    /// width (`max column + 1`) would exceed what [`Col`] can represent,
+    /// so no crossbar could ever satisfy `check_width` for it. The
+    /// unchecked `c + 1` this replaces wrapped to a tiny bogus width in
+    /// release builds, silently disarming the engine's width check.
     #[inline]
     pub fn push(&mut self, instr: Instr) {
+        let _ = self.lowered.take();
         match instr {
             Instr::Nor2 { .. } => self.counts.nor2 += 1,
             Instr::Nor3 { .. } => self.counts.nor3 += 1,
@@ -170,11 +198,24 @@ impl Program {
             Instr::Copy { .. } => self.counts.copy += 1,
             Instr::Set { .. } => self.counts.set += 1,
         }
-        self.width = self.width.max(instr.out() + 1);
+        self.track_width(instr, instr.out());
         for c in instr.inputs() {
-            self.width = self.width.max(c + 1);
+            self.track_width(instr, c);
         }
         self.instrs.push(instr);
+    }
+
+    /// Fold column `c` into the width, rejecting widths beyond `Col::MAX`.
+    #[inline]
+    fn track_width(&mut self, instr: Instr, c: Col) {
+        let w = c.checked_add(1).unwrap_or_else(|| {
+            panic!(
+                "column {c} in {instr:?} would make the program width exceed \
+                 Col::MAX ({})",
+                Col::MAX
+            )
+        });
+        self.width = self.width.max(w);
     }
 
     /// The instruction sequence.
@@ -206,6 +247,16 @@ impl Program {
     /// Minimum crossbar width (columns) needed to run this program.
     pub fn width(&self) -> Col {
         self.width
+    }
+
+    /// The program lowered to its fused micro-op pipeline (see
+    /// [`crate::pim::lower`]).
+    ///
+    /// Computed on first use and cached, so tiled executors that replay
+    /// one compiled program across thousands of crossbars lower it once;
+    /// [`Program::push`] invalidates the cache.
+    pub fn lowered(&self) -> &Lowered {
+        self.lowered.get_or_init(|| lower::lower(self))
     }
 
     /// Latency in crossbar cycles under the program's gate-set cost model.
@@ -340,6 +391,37 @@ mod tests {
             Instr::Nor2 { a: 10, b: 11, out: 12 }
         );
         outer.validate_for(GateSet::MemristiveNor).unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows Col")]
+    fn relocation_overflow_panics_instead_of_wrapping() {
+        // Regression: a deep extend_relocated schedule whose base pushes a
+        // column past u32::MAX used to wrap silently in release builds,
+        // renaming the column into a live low-numbered operand slot.
+        let mut inner = Program::new(GateSet::MemristiveNor);
+        inner.push(Instr::Nor2 { a: 0, b: 1, out: 6 });
+        let mut outer = Program::new(GateSet::MemristiveNor);
+        outer.extend_relocated(&inner, Col::MAX - 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceed Col::MAX")]
+    fn push_rejects_width_past_col_max() {
+        let mut p = Program::new(GateSet::MemristiveNor);
+        p.push(Instr::Not { a: 0, out: Col::MAX });
+    }
+
+    #[test]
+    fn push_invalidates_cached_lowering() {
+        let mut p = Program::new(GateSet::MemristiveNor);
+        p.push(Instr::Nor2 { a: 0, b: 1, out: 2 });
+        assert_eq!(p.lowered().len(), 1);
+        // Appending the NOT must re-lower: the pair now fuses.
+        p.push(Instr::Not { a: 2, out: 3 });
+        assert_eq!(p.lowered().len(), 1);
+        assert_eq!(p.lowered().source_len(), 2);
+        assert_eq!(p.lowered().fused(), 1);
     }
 
     #[test]

@@ -1,0 +1,607 @@
+//! Lowering: the precompiled micro-op pipeline behind the packed engine.
+//!
+//! [`crate::pim::xbar::Crossbar::execute`] used to walk a
+//! [`Program`]'s instruction list directly, re-dispatching an opcode
+//! `match` over raw column pointers for every instruction of every cache
+//! block. This module compiles the program **once** into a dense
+//! [`MicroOp`] array that the engine can replay with much less per-step
+//! work:
+//!
+//! * **Peephole fusion.** The microcode compilers in
+//!   [`crate::pim::builder`] emit a handful of dominant adjacent pairs —
+//!   `NOR2→NOT` / `NOR3→NOT` (the OR and OR3 idioms on the memristive
+//!   set), `MAJ3→NOT` (the DRAM NOR idiom), `Set` runs (accumulator
+//!   seeding) and `Set→NOT` (constant init + complement), and adjacent
+//!   independent `NOT`s (the AND idiom's operand complements). Each such
+//!   pair becomes one fused micro-op that writes **both** destination
+//!   columns, so the fused pipeline's final crossbar state is bit-identical
+//!   to per-instruction execution — fusion halves dispatches and input
+//!   reloads without changing a single stored bit.
+//! * **Noalias kernels.** The lowering *rejects* (panics on) instructions
+//!   that read their own output — the structural hazard
+//!   [`Program::validate_for`] reports — and only fuses pairs whose column
+//!   sets are disjoint. Every kernel can therefore address its columns as
+//!   `&[u64]` / `&mut [u64]` slices, which carry LLVM `noalias` metadata
+//!   the old raw-pointer loops could not: the autovectorizer is finally
+//!   allowed to emit SIMD for the word loops.
+//! * **Word widening.** Kernels process [`LANES`] packed words per step
+//!   (explicit load-all-then-store-all bodies), so one step simulates up
+//!   to `64 × LANES` row-gates even before threading.
+//!
+//! Lowering is cached on the [`Program`] (see [`Program::lowered`]) and
+//! invalidated by `push`, so tiled executors that replay one compiled
+//! program across many crossbars pay the lowering cost once.
+//!
+//! The unfused per-instruction path survives as
+//! [`crate::pim::xbar::Crossbar::execute_serial`], the oracle the fused
+//! pipeline is differentially tested against (together with the per-bit
+//! [`crate::pim::oracle::ScalarCrossbar`]).
+
+use super::isa::{Col, Instr, Program};
+
+/// Packed `u64` words processed per widened kernel step (4 words = 256
+/// simulated rows per step).
+pub const LANES: usize = 4;
+
+/// One step of the lowered pipeline: either a single gate instruction or
+/// a fused adjacent pair. Fused variants write *every* column the source
+/// pair wrote (`t` keeps the intermediate), preserving bit-exactness.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MicroOp {
+    /// `out = !(a | b)`.
+    Nor2 { a: Col, b: Col, out: Col },
+    /// `out = !(a | b | c)`.
+    Nor3 { a: Col, b: Col, c: Col, out: Col },
+    /// `out = !a`.
+    Not { a: Col, out: Col },
+    /// `out = maj(a, b, c)`.
+    Maj3 { a: Col, b: Col, c: Col, out: Col },
+    /// `out = a`.
+    Copy { a: Col, out: Col },
+    /// `out = bit`.
+    Set { out: Col, bit: bool },
+    /// `t = !(a | b); out = !t` — the OR idiom.
+    Nor2Not { a: Col, b: Col, t: Col, out: Col },
+    /// `t = !(a | b | c); out = !t` — the OR3 idiom.
+    Nor3Not { a: Col, b: Col, c: Col, t: Col, out: Col },
+    /// `t = maj(a, b, c); out = !t` — the DRAM NOR idiom.
+    Maj3Not { a: Col, b: Col, c: Col, t: Col, out: Col },
+    /// Two independent NOTs (the AND idiom's operand complements).
+    Not2 { a: Col, out_a: Col, b: Col, out_b: Col },
+    /// Two column initializations (accumulator seeding, `Set→NOT`).
+    Set2 { out_a: Col, bit_a: bool, out_b: Col, bit_b: bool },
+}
+
+impl MicroOp {
+    /// True when this micro-op covers two source instructions.
+    pub fn is_fused(&self) -> bool {
+        matches!(
+            self,
+            MicroOp::Nor2Not { .. }
+                | MicroOp::Nor3Not { .. }
+                | MicroOp::Maj3Not { .. }
+                | MicroOp::Not2 { .. }
+                | MicroOp::Set2 { .. }
+        )
+    }
+}
+
+/// A program lowered to its dense micro-op pipeline.
+#[derive(Clone, Debug, Default)]
+pub struct Lowered {
+    ops: Vec<MicroOp>,
+    width: Col,
+    source_len: usize,
+}
+
+impl Lowered {
+    /// The micro-op sequence.
+    #[inline]
+    pub fn ops(&self) -> &[MicroOp] {
+        &self.ops
+    }
+
+    /// Number of micro-ops (≤ source instructions; the gap is fusion).
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// True when the pipeline is empty.
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Number of source instructions this pipeline was lowered from.
+    pub fn source_len(&self) -> usize {
+        self.source_len
+    }
+
+    /// Number of fused micro-ops (each stands for two instructions).
+    pub fn fused(&self) -> usize {
+        self.ops.iter().filter(|op| op.is_fused()).count()
+    }
+
+    /// Minimum crossbar width (columns) needed to run the pipeline.
+    pub fn width(&self) -> Col {
+        self.width
+    }
+}
+
+/// Lower a program into its micro-op pipeline.
+///
+/// # Panics
+///
+/// Panics when an instruction reads its own output column — such a
+/// program is invalid for any stateful-logic hardware (see
+/// [`Program::validate_for`]), and the noalias kernels require the
+/// guarantee unconditionally, not just under `debug_assertions`.
+pub fn lower(prog: &Program) -> Lowered {
+    let instrs = prog.instrs();
+    for (i, instr) in instrs.iter().enumerate() {
+        assert!(
+            !instr.inputs().any(|c| c == instr.out()),
+            "instr {i} ({instr:?}) reads its own output; \
+             run Program::validate_for before executing"
+        );
+    }
+    let mut ops = Vec::with_capacity(instrs.len());
+    let mut i = 0;
+    while i < instrs.len() {
+        if i + 1 < instrs.len() {
+            if let Some(op) = fuse_pair(instrs[i], instrs[i + 1]) {
+                ops.push(op);
+                i += 2;
+                continue;
+            }
+        }
+        ops.push(single(instrs[i]));
+        i += 1;
+    }
+    Lowered {
+        ops,
+        width: prog.width(),
+        source_len: instrs.len(),
+    }
+}
+
+/// 1:1 lowering of one instruction.
+fn single(instr: Instr) -> MicroOp {
+    match instr {
+        Instr::Nor2 { a, b, out } => MicroOp::Nor2 { a, b, out },
+        Instr::Nor3 { a, b, c, out } => MicroOp::Nor3 { a, b, c, out },
+        Instr::Not { a, out } => MicroOp::Not { a, out },
+        Instr::Maj3 { a, b, c, out } => MicroOp::Maj3 { a, b, c, out },
+        Instr::Copy { a, out } => MicroOp::Copy { a, out },
+        Instr::Set { out, bit } => MicroOp::Set { out, bit },
+    }
+}
+
+/// Try to fuse two adjacent instructions into one micro-op.
+///
+/// A fusion is only taken when it is unconditionally bit-exact **and**
+/// keeps every simultaneously-borrowed column distinct (the noalias
+/// requirement): the second op must read exactly the first op's output
+/// (serial fusions) or nothing of it (parallel fusions), and no output
+/// may alias any other named column of the pair.
+fn fuse_pair(first: Instr, second: Instr) -> Option<MicroOp> {
+    use Instr::*;
+    match (first, second) {
+        // Gate → NOT of its result: the OR / OR3 / DRAM-NOR idioms.
+        (Nor2 { a, b, out: t }, Not { a: na, out }) if na == t && out != a && out != b => {
+            Some(MicroOp::Nor2Not { a, b, t, out })
+        }
+        (Nor3 { a, b, c, out: t }, Not { a: na, out })
+            if na == t && out != a && out != b && out != c =>
+        {
+            Some(MicroOp::Nor3Not { a, b, c, t, out })
+        }
+        (Maj3 { a, b, c, out: t }, Not { a: na, out })
+            if na == t && out != a && out != b && out != c =>
+        {
+            Some(MicroOp::Maj3Not { a, b, c, t, out })
+        }
+        // Set → NOT of the constant: both destinations are constants.
+        (Set { out: t, bit }, Not { a: na, out }) if na == t => Some(MicroOp::Set2 {
+            out_a: t,
+            bit_a: bit,
+            out_b: out,
+            bit_b: !bit,
+        }),
+        // Adjacent initializations (accumulator / constant seeding).
+        (Set { out: oa, bit: ba }, Set { out: ob, bit: bb }) if oa != ob => {
+            Some(MicroOp::Set2 {
+                out_a: oa,
+                bit_a: ba,
+                out_b: ob,
+                bit_b: bb,
+            })
+        }
+        // Two independent NOTs (the AND idiom's operand complements).
+        // `b != oa` excludes the dependent NOT→NOT chain; the output
+        // constraints keep the four borrowed columns alias-free.
+        (Not { a, out: oa }, Not { a: b, out: ob })
+            if b != oa && ob != oa && ob != a =>
+        {
+            Some(MicroOp::Not2 { a, out_a: oa, b, out_b: ob })
+        }
+        _ => None,
+    }
+}
+
+// ---- widened kernels ----------------------------------------------------
+
+/// The all-ones / all-zeros word for a constant column.
+#[inline]
+fn splat(bit: bool) -> u64 {
+    if bit {
+        u64::MAX
+    } else {
+        0
+    }
+}
+
+#[inline]
+fn fill(out: &mut [u64], v: u64) {
+    for w in out.iter_mut() {
+        *w = v;
+    }
+}
+
+#[inline]
+fn map1(out: &mut [u64], a: &[u64], f: impl Fn(u64) -> u64) {
+    let n = out.len();
+    let a = &a[..n];
+    let mut i = 0;
+    while i + LANES <= n {
+        let mut v = [0u64; LANES];
+        for k in 0..LANES {
+            v[k] = f(a[i + k]);
+        }
+        out[i..i + LANES].copy_from_slice(&v);
+        i += LANES;
+    }
+    while i < n {
+        out[i] = f(a[i]);
+        i += 1;
+    }
+}
+
+#[inline]
+fn map2(out: &mut [u64], a: &[u64], b: &[u64], f: impl Fn(u64, u64) -> u64) {
+    let n = out.len();
+    let (a, b) = (&a[..n], &b[..n]);
+    let mut i = 0;
+    while i + LANES <= n {
+        let mut v = [0u64; LANES];
+        for k in 0..LANES {
+            v[k] = f(a[i + k], b[i + k]);
+        }
+        out[i..i + LANES].copy_from_slice(&v);
+        i += LANES;
+    }
+    while i < n {
+        out[i] = f(a[i], b[i]);
+        i += 1;
+    }
+}
+
+#[inline]
+fn map3(out: &mut [u64], a: &[u64], b: &[u64], c: &[u64], f: impl Fn(u64, u64, u64) -> u64) {
+    let n = out.len();
+    let (a, b, c) = (&a[..n], &b[..n], &c[..n]);
+    let mut i = 0;
+    while i + LANES <= n {
+        let mut v = [0u64; LANES];
+        for k in 0..LANES {
+            v[k] = f(a[i + k], b[i + k], c[i + k]);
+        }
+        out[i..i + LANES].copy_from_slice(&v);
+        i += LANES;
+    }
+    while i < n {
+        out[i] = f(a[i], b[i], c[i]);
+        i += 1;
+    }
+}
+
+/// Fused two-output kernel: `t = f(a, b)`, `out = !f(a, b)`.
+#[inline]
+fn map2x2(t: &mut [u64], out: &mut [u64], a: &[u64], b: &[u64], f: impl Fn(u64, u64) -> u64) {
+    let n = t.len();
+    let (a, b) = (&a[..n], &b[..n]);
+    let out = &mut out[..n];
+    let mut i = 0;
+    while i + LANES <= n {
+        let mut v = [0u64; LANES];
+        for k in 0..LANES {
+            v[k] = f(a[i + k], b[i + k]);
+        }
+        t[i..i + LANES].copy_from_slice(&v);
+        for k in 0..LANES {
+            v[k] = !v[k];
+        }
+        out[i..i + LANES].copy_from_slice(&v);
+        i += LANES;
+    }
+    while i < n {
+        let v = f(a[i], b[i]);
+        t[i] = v;
+        out[i] = !v;
+        i += 1;
+    }
+}
+
+/// Fused two-output kernel: `t = f(a, b, c)`, `out = !f(a, b, c)`.
+#[inline]
+fn map3x2(
+    t: &mut [u64],
+    out: &mut [u64],
+    a: &[u64],
+    b: &[u64],
+    c: &[u64],
+    f: impl Fn(u64, u64, u64) -> u64,
+) {
+    let n = t.len();
+    let (a, b, c) = (&a[..n], &b[..n], &c[..n]);
+    let out = &mut out[..n];
+    let mut i = 0;
+    while i + LANES <= n {
+        let mut v = [0u64; LANES];
+        for k in 0..LANES {
+            v[k] = f(a[i + k], b[i + k], c[i + k]);
+        }
+        t[i..i + LANES].copy_from_slice(&v);
+        for k in 0..LANES {
+            v[k] = !v[k];
+        }
+        out[i..i + LANES].copy_from_slice(&v);
+        i += LANES;
+    }
+    while i < n {
+        let v = f(a[i], b[i], c[i]);
+        t[i] = v;
+        out[i] = !v;
+        i += 1;
+    }
+}
+
+/// Borrow the word range `[w0, w0+len)` of column `c` as a shared slice.
+///
+/// # Safety
+///
+/// `base` must point to a live column-major allocation at `wpc` words per
+/// column covering column `c`; the range must not be mutably borrowed.
+#[inline]
+unsafe fn rd<'a>(base: *const u64, wpc: usize, c: Col, w0: usize, len: usize) -> &'a [u64] {
+    unsafe { std::slice::from_raw_parts(base.add(c as usize * wpc + w0), len) }
+}
+
+/// Borrow the word range `[w0, w0+len)` of column `c` as a mutable slice.
+///
+/// # Safety
+///
+/// As [`rd`], and the range must not be borrowed at all elsewhere.
+#[inline]
+unsafe fn wr<'a>(base: *mut u64, wpc: usize, c: Col, w0: usize, len: usize) -> &'a mut [u64] {
+    unsafe { std::slice::from_raw_parts_mut(base.add(c as usize * wpc + w0), len) }
+}
+
+impl MicroOp {
+    /// Execute this micro-op over the word range `[w0, w1)` of every
+    /// column it names.
+    ///
+    /// # Safety
+    ///
+    /// * `base` must point to a live column-major allocation covering
+    ///   every column named by `self` at `wpc` words per column;
+    /// * `w0 <= w1 <= wpc`;
+    /// * `self` must come from [`lower`] (its invariants — outputs
+    ///   distinct from inputs and co-outputs — are what make the
+    ///   shared/mutable slice borrows below alias-free);
+    /// * no other thread may concurrently access word indices `[w0, w1)`
+    ///   of any column.
+    pub(crate) unsafe fn apply(self, base: *mut u64, wpc: usize, w0: usize, w1: usize) {
+        let len = w1 - w0;
+        let cbase = base as *const u64;
+        // SAFETY: caller contract plus the lowering invariants: every
+        // `wr` column below is distinct from every `rd` column and from
+        // any co-`wr` column of the same micro-op.
+        unsafe {
+            match self {
+                MicroOp::Nor2 { a, b, out } => map2(
+                    wr(base, wpc, out, w0, len),
+                    rd(cbase, wpc, a, w0, len),
+                    rd(cbase, wpc, b, w0, len),
+                    |x, y| !(x | y),
+                ),
+                MicroOp::Nor3 { a, b, c, out } => map3(
+                    wr(base, wpc, out, w0, len),
+                    rd(cbase, wpc, a, w0, len),
+                    rd(cbase, wpc, b, w0, len),
+                    rd(cbase, wpc, c, w0, len),
+                    |x, y, z| !(x | y | z),
+                ),
+                MicroOp::Not { a, out } => {
+                    map1(wr(base, wpc, out, w0, len), rd(cbase, wpc, a, w0, len), |x| !x)
+                }
+                MicroOp::Maj3 { a, b, c, out } => map3(
+                    wr(base, wpc, out, w0, len),
+                    rd(cbase, wpc, a, w0, len),
+                    rd(cbase, wpc, b, w0, len),
+                    rd(cbase, wpc, c, w0, len),
+                    |x, y, z| (x & y) | (z & (x | y)),
+                ),
+                MicroOp::Copy { a, out } => wr(base, wpc, out, w0, len)
+                    .copy_from_slice(rd(cbase, wpc, a, w0, len)),
+                MicroOp::Set { out, bit } => fill(wr(base, wpc, out, w0, len), splat(bit)),
+                MicroOp::Nor2Not { a, b, t, out } => map2x2(
+                    wr(base, wpc, t, w0, len),
+                    wr(base, wpc, out, w0, len),
+                    rd(cbase, wpc, a, w0, len),
+                    rd(cbase, wpc, b, w0, len),
+                    |x, y| !(x | y),
+                ),
+                MicroOp::Nor3Not { a, b, c, t, out } => map3x2(
+                    wr(base, wpc, t, w0, len),
+                    wr(base, wpc, out, w0, len),
+                    rd(cbase, wpc, a, w0, len),
+                    rd(cbase, wpc, b, w0, len),
+                    rd(cbase, wpc, c, w0, len),
+                    |x, y, z| !(x | y | z),
+                ),
+                MicroOp::Maj3Not { a, b, c, t, out } => map3x2(
+                    wr(base, wpc, t, w0, len),
+                    wr(base, wpc, out, w0, len),
+                    rd(cbase, wpc, a, w0, len),
+                    rd(cbase, wpc, b, w0, len),
+                    rd(cbase, wpc, c, w0, len),
+                    |x, y, z| (x & y) | (z & (x | y)),
+                ),
+                MicroOp::Not2 { a, out_a, b, out_b } => {
+                    map1(wr(base, wpc, out_a, w0, len), rd(cbase, wpc, a, w0, len), |x| !x);
+                    map1(wr(base, wpc, out_b, w0, len), rd(cbase, wpc, b, w0, len), |x| !x);
+                }
+                MicroOp::Set2 { out_a, bit_a, out_b, bit_b } => {
+                    fill(wr(base, wpc, out_a, w0, len), splat(bit_a));
+                    fill(wr(base, wpc, out_b, w0, len), splat(bit_b));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pim::gates::GateSet;
+    use crate::pim::oracle::ScalarCrossbar;
+    use crate::pim::xbar::Crossbar;
+    use crate::util::rng::Rng;
+
+    /// Run `prog` through the fused, unfused and per-bit engines from the
+    /// same seeded state and require bit-identical results everywhere.
+    fn assert_all_engines_agree(prog: &Program, rows: usize, seed: u64) {
+        let cols = prog.width().max(1) as usize;
+        let mut rng = Rng::new(seed);
+        let mut fused = Crossbar::new(rows, cols);
+        let mut serial = Crossbar::new(rows, cols);
+        let mut oracle = ScalarCrossbar::new(rows, cols);
+        for c in 0..cols as Col {
+            for r in 0..rows {
+                let bit = rng.bool();
+                fused.set(r, c, bit);
+                serial.set(r, c, bit);
+                oracle.set(r, c, bit);
+            }
+        }
+        fused.execute_fused(prog);
+        serial.execute_serial(prog);
+        oracle.execute(prog);
+        assert!(oracle.agrees_with(&serial), "serial path vs oracle");
+        assert!(oracle.agrees_with(&fused), "fused path vs oracle");
+        assert_eq!(fused.row_gates(), serial.row_gates(), "gate accounting");
+    }
+
+    #[test]
+    fn or_idiom_fuses_to_one_micro_op() {
+        let mut p = Program::new(GateSet::MemristiveNor);
+        p.push(Instr::Nor2 { a: 0, b: 1, out: 2 });
+        p.push(Instr::Not { a: 2, out: 3 });
+        let low = lower(&p);
+        assert_eq!(low.len(), 1);
+        assert_eq!(
+            low.ops()[0],
+            MicroOp::Nor2Not { a: 0, b: 1, t: 2, out: 3 }
+        );
+        assert_eq!(low.fused(), 1);
+        assert_eq!(low.source_len(), 2);
+        assert_all_engines_agree(&p, 150, 1);
+    }
+
+    #[test]
+    fn set_run_and_set_not_fuse() {
+        let mut p = Program::new(GateSet::MemristiveNor);
+        p.push(Instr::Set { out: 0, bit: false });
+        p.push(Instr::Set { out: 1, bit: true });
+        p.push(Instr::Set { out: 2, bit: true });
+        p.push(Instr::Not { a: 2, out: 3 });
+        let low = lower(&p);
+        assert_eq!(low.len(), 2);
+        assert_eq!(
+            low.ops()[1],
+            MicroOp::Set2 { out_a: 2, bit_a: true, out_b: 3, bit_b: false }
+        );
+        assert_all_engines_agree(&p, 70, 2);
+    }
+
+    #[test]
+    fn and_idiom_complements_fuse_as_not2() {
+        // Builder's AND on the NOR set: NOT a, NOT b, NOR2.
+        let mut p = Program::new(GateSet::MemristiveNor);
+        p.push(Instr::Not { a: 0, out: 2 });
+        p.push(Instr::Not { a: 1, out: 3 });
+        p.push(Instr::Nor2 { a: 2, b: 3, out: 4 });
+        let low = lower(&p);
+        assert_eq!(low.len(), 2);
+        assert_eq!(
+            low.ops()[0],
+            MicroOp::Not2 { a: 0, out_a: 2, b: 1, out_b: 3 }
+        );
+        assert_all_engines_agree(&p, 129, 3);
+    }
+
+    #[test]
+    fn aliasing_pairs_are_not_fused_and_stay_exact() {
+        // NOT output aliases the NOR's input: fusing would violate the
+        // noalias kernel contract, so the pair must stay unfused — and
+        // still execute bit-exactly.
+        let mut p = Program::new(GateSet::MemristiveNor);
+        p.push(Instr::Nor2 { a: 0, b: 1, out: 2 });
+        p.push(Instr::Not { a: 2, out: 0 });
+        let low = lower(&p);
+        assert_eq!(low.len(), 2);
+        assert_eq!(low.fused(), 0);
+        assert_all_engines_agree(&p, 150, 4);
+
+        // Dependent NOT→NOT chain is never fused.
+        let mut p = Program::new(GateSet::MemristiveNor);
+        p.push(Instr::Not { a: 0, out: 1 });
+        p.push(Instr::Not { a: 1, out: 2 });
+        let low = lower(&p);
+        assert_eq!(low.len(), 2);
+        assert_all_engines_agree(&p, 150, 5);
+
+        // Second NOT writing over the first NOT's source reads stale
+        // data if fused with loads hoisted — excluded by the `ob != a`
+        // guard, covered here.
+        let mut p = Program::new(GateSet::MemristiveNor);
+        p.push(Instr::Not { a: 0, out: 1 });
+        p.push(Instr::Not { a: 2, out: 0 });
+        let low = lower(&p);
+        assert_eq!(low.fused(), 0);
+        assert_all_engines_agree(&p, 150, 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "reads its own output")]
+    fn lowering_rejects_in_place_instructions() {
+        let mut p = Program::new(GateSet::MemristiveNor);
+        p.push(Instr::Nor2 { a: 0, b: 2, out: 2 });
+        lower(&p);
+    }
+
+    #[test]
+    fn widened_kernels_cover_remainder_tails() {
+        // Rows chosen so wpc is not a multiple of LANES and the last word
+        // is partial: the tail loops must produce the same bits.
+        for rows in [1usize, 63, 64, 65, 64 * LANES + 7, 64 * (LANES + 1) + 1] {
+            let mut p = Program::new(GateSet::MemristiveNor);
+            p.push(Instr::Nor2 { a: 0, b: 1, out: 2 });
+            p.push(Instr::Not { a: 2, out: 3 });
+            p.push(Instr::Nor3 { a: 0, b: 1, c: 3, out: 4 });
+            p.push(Instr::Maj3 { a: 0, b: 1, c: 4, out: 5 });
+            p.push(Instr::Not { a: 5, out: 6 });
+            assert_all_engines_agree(&p, rows, rows as u64);
+        }
+    }
+}

@@ -15,9 +15,13 @@
 //! * [`gates`] — the two physical gate sets and their per-gate cycle and
 //!   energy cost models: memristive stateful logic (MAGIC-style NOR, with
 //!   the output-initialization cycle) and in-DRAM (SIMDRAM-style MAJ/NOT).
+//! * [`lower`] — the precompiled micro-op pipeline: programs lowered once
+//!   into a dense, peephole-fused op array with widened noalias kernels
+//!   (the form the packed engine actually replays).
 //! * [`xbar`] — the bit-sliced crossbar state and the column-parallel
-//!   execution engine (the simulator's hot path): packed `u64` row-words,
-//!   sharded across the [`crate::util::pool`] thread pool.
+//!   execution engine (the simulator's hot path): packed `u64` row-words
+//!   driven through the lowered pipeline, sharded across the
+//!   [`crate::util::pool`] thread pool.
 //! * [`oracle`] — the retained scalar reference: a per-row, per-bit `bool`
 //!   crossbar the packed engine is proven bit-identical against.
 //! * [`builder`] — a logic-synthesis EDSL over columns (full adders, barrel
@@ -49,6 +53,7 @@ pub mod fixed;
 pub mod float;
 pub mod gates;
 pub mod isa;
+pub mod lower;
 pub mod matpim;
 pub mod netexec;
 pub mod oracle;

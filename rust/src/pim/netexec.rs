@@ -607,10 +607,11 @@ impl Plan {
     }
 
     /// Execute tile `t` on a fresh crossbar: load operand fields from
-    /// `input` (and `weights` for MAC layers), run the compiled program
-    /// serially (tile-level parallelism is the executor's job), write the
-    /// results into `out` (the tile's disjoint output slice), and return
-    /// the row-gates the simulator executed.
+    /// `input` (and `weights` for MAC layers), run the compiled program's
+    /// fused pipeline on the calling thread (tile-level parallelism is
+    /// the executor's job), write the results into `out` (the tile's
+    /// disjoint output slice), and return the row-gates the simulator
+    /// executed.
     fn exec_tile(&self, t: usize, input: &[u64], weights: &[u64], out: &mut [u64]) -> u64 {
         match self {
             Plan::Mac(p) => {
@@ -630,7 +631,7 @@ impl Plan {
                     vals.iter_mut().for_each(|v| *v = wv);
                     x.write_field(p.cp.lay.w_col(e, 0), n, &vals);
                 }
-                x.execute_serial(&p.cp.prog);
+                x.execute_fused(&p.cp.prog);
                 out.copy_from_slice(&x.read_field(p.cp.lay.acc, n, tile.rows));
                 x.row_gates()
             }
@@ -651,7 +652,7 @@ impl Plan {
                     }
                     x.write_field(p.pp.a + e as Col * n, n, &vals);
                 }
-                x.execute_serial(&p.pp.prog);
+                x.execute_fused(&p.pp.prog);
                 out.copy_from_slice(&x.read_field(p.pp.acc, n, tile.rows));
                 x.row_gates()
             }
@@ -659,7 +660,7 @@ impl Plan {
                 let (start, rows) = p.chunks[t];
                 let mut x = Crossbar::new(rows, p.prog.width() as usize);
                 x.write_field(p.lay.u, p.bits, &input[start..start + rows]);
-                x.execute_serial(&p.prog);
+                x.execute_fused(&p.prog);
                 out.copy_from_slice(&x.read_field(p.lay.z, p.bits, rows));
                 x.row_gates()
             }

@@ -110,22 +110,13 @@ impl ScalarCrossbar {
     }
 
     /// Bulk-load one value per row into a bit-field — mirrors
-    /// [`Crossbar::write_field`], including its zeroing of the remaining
-    /// rows of a partially-filled final 64-row block.
+    /// [`Crossbar::write_field`]: exactly rows `[0, values.len())` are
+    /// overwritten, every other row of the field keeps its bits (the
+    /// packed engine read-modify-writes its final partial 64-row word).
     pub fn write_field(&mut self, base: Col, bits: u32, values: &[u64]) {
         assert!(values.len() <= self.rows);
-        for (block, chunk) in values.chunks(64).enumerate() {
-            let lo = block * 64;
-            let hi = (lo + 64).min(self.rows);
-            for k in 0..bits {
-                for r in lo..hi {
-                    let bit = chunk
-                        .get(r - lo)
-                        .map(|&v| (v >> k) & 1 == 1)
-                        .unwrap_or(false);
-                    self.set(r, base + k, bit);
-                }
-            }
+        for (r, &v) in values.iter().enumerate() {
+            self.write_value(r, base, bits, v);
         }
     }
 
@@ -519,8 +510,10 @@ mod tests {
 
     #[test]
     fn field_roundtrip_matches_packed_semantics() {
-        // write_field on a partial final block zeroes the same rows the
-        // packed engine zeroes.
+        // A partial-prefix write_field touches exactly the loaded rows in
+        // both engines: rows 70..100 of the written field — which share
+        // the final 64-row word with the prefix in the packed layout —
+        // keep their bits (they used to be zeroed).
         let mut packed = Crossbar::new(100, 10);
         let mut oracle = ScalarCrossbar::new(100, 10);
         for r in 0..100 {
@@ -532,5 +525,9 @@ mod tests {
         oracle.write_field(0, 8, &vals);
         assert!(oracle.agrees_with(&packed));
         assert_eq!(oracle.read_field(0, 8, 70), vals);
+        for r in 70..100 {
+            assert!(packed.get(r, 3), "row {r} of col 3 must be preserved");
+            assert!(oracle.get(r, 3), "row {r} of col 3 must be preserved");
+        }
     }
 }

@@ -8,15 +8,21 @@
 //! (SIMD-within-a-register). This loop is the simulator's hot path and
 //! the target of the §Perf pass.
 //!
-//! On top of the packing, [`Crossbar::execute`] shards the packed
-//! row-words across the process-wide [`Pool`]: every gate instruction is
-//! row-local, so worker `k` can run the *whole program* over its own
-//! disjoint word range `[w0, w1)` of every column with no synchronization
-//! until the end-of-program barrier. Results are bit-identical to the
-//! serial path ([`Crossbar::execute_serial`]) and to the per-row/per-bit
-//! reference oracle in [`crate::pim::oracle`], regardless of thread count.
+//! On top of the packing, [`Crossbar::execute`] runs the program's
+//! **lowered micro-op pipeline** (see [`crate::pim::lower`]): the
+//! instruction list is compiled once — dominant gate pairs fused, kernels
+//! widened and expressed over noalias slices the autovectorizer can turn
+//! into SIMD — then replayed per cache block. Large executions
+//! additionally shard the packed row-words across the process-wide
+//! [`Pool`]: every gate instruction is row-local, so worker `k` can run
+//! the whole pipeline over its own disjoint word range `[w0, w1)` of
+//! every column with no synchronization until the end-of-program barrier.
+//! All paths are bit-identical to the retained per-instruction path
+//! ([`Crossbar::execute_serial`]) and to the per-row/per-bit reference
+//! oracle in [`crate::pim::oracle`], regardless of thread count.
 
 use super::isa::{Col, Instr, Program};
+use super::lower::Lowered;
 use crate::util::pool::Pool;
 
 /// Minimum packed words a shard must own to be worth dispatching
@@ -187,18 +193,32 @@ impl Crossbar {
     }
 
     /// Bulk-load one value per row into a bit-field (column-transpose).
+    ///
+    /// Exactly rows `[0, values.len())` of columns `[base, base+bits)` are
+    /// overwritten; every other row keeps its bits. In particular, rows
+    /// beyond `values.len()` that share the final partial 64-row word with
+    /// the loaded prefix are preserved (the last word is
+    /// read-modify-written, not clobbered) — this used to zero them.
     pub fn write_field(&mut self, base: Col, bits: u32, values: &[u64]) {
         assert!(values.len() <= self.rows);
         // Transpose in 64-row blocks: gather bit k of 64 values into one
         // word of column base+k.
         for (block, chunk) in values.chunks(64).enumerate() {
+            // Bits of the final partial word owned by rows outside the
+            // loaded prefix; must survive the store.
+            let keep = if chunk.len() == 64 {
+                0
+            } else {
+                !0u64 << chunk.len()
+            };
             for k in 0..bits {
                 let mut word = 0u64;
                 for (i, &v) in chunk.iter().enumerate() {
                     word |= ((v >> k) & 1) << i;
                 }
                 let col = (base + k) as usize;
-                self.data[col * self.wpc + block] = word;
+                let slot = &mut self.data[col * self.wpc + block];
+                *slot = (*slot & keep) | word;
             }
         }
     }
@@ -261,8 +281,8 @@ impl Crossbar {
 
     /// Words per block for a program of `width` live columns.
     #[inline]
-    fn words_per_block(prog: &Program) -> usize {
-        let width = (prog.width() as usize).max(1);
+    fn words_per_block(width: Col) -> usize {
+        let width = (width as usize).max(1);
         (Self::BLOCK_BYTES / (8 * width)).max(8)
     }
 
@@ -276,28 +296,46 @@ impl Crossbar {
         );
     }
 
-    /// Execute a whole program.
+    /// Execute a whole program through its lowered micro-op pipeline.
     ///
     /// Dispatch: large executions (see `should_shard`) shard their packed
     /// row-words across the process-wide thread pool; small ones run the
-    /// serial cache-blocked loop. Both paths produce bit-identical state —
-    /// every instruction is row-local, so partitioning rows (words) is
-    /// semantics-preserving. Set `CONVPIM_THREADS=1` to force serial
-    /// execution globally.
+    /// single-thread cache-blocked fused loop. Both paths produce
+    /// bit-identical state — every micro-op is row-local, so partitioning
+    /// rows (words) is semantics-preserving — and both are bit-identical
+    /// to the retained per-instruction path ([`Crossbar::execute_serial`])
+    /// because fused micro-ops write every column their source pair wrote.
+    /// Set `CONVPIM_THREADS=1` to force single-thread execution globally.
     pub fn execute(&mut self, prog: &Program) {
         self.check_width(prog);
         let pool = Pool::global();
         if self.should_shard(prog, pool) {
             self.execute_sharded(prog, pool);
         } else {
-            self.execute_blocked(prog);
+            self.execute_blocked_lowered(prog.lowered());
         }
         self.row_gates += prog.gates() * self.rows as u64;
     }
 
-    /// Execute a whole program on the calling thread only (the reference
-    /// execution path; `execute` is bit-identical to it by construction
-    /// and by the `sharded_execute_matches_serial` test).
+    /// Execute the fused micro-op pipeline on the calling thread only.
+    ///
+    /// This is the production single-thread path (tile executors that
+    /// already parallelize *across* crossbars use it per tile); it differs
+    /// from [`Crossbar::execute_serial`] only in speed, never in bits.
+    pub fn execute_fused(&mut self, prog: &Program) {
+        self.check_width(prog);
+        self.execute_blocked_lowered(prog.lowered());
+        self.row_gates += prog.gates() * self.rows as u64;
+    }
+
+    /// Execute a whole program on the calling thread with the *unfused*
+    /// per-instruction dispatch (the reference execution path: one opcode
+    /// `match` per instruction per cache block, scalar word loop).
+    ///
+    /// Retained as the oracle the lowered pipeline is differentially
+    /// tested and benchmarked against (`fused_vs_unfused` in
+    /// `benches/hotpath_gates.rs`); `execute`/`execute_fused` are
+    /// bit-identical to it by construction and by test.
     pub fn execute_serial(&mut self, prog: &Program) {
         self.check_width(prog);
         self.execute_blocked(prog);
@@ -319,7 +357,7 @@ impl Crossbar {
     /// resident (all gate ops are row-local, so blocking is semantics-
     /// preserving). Block size targets ~`BLOCK_BYTES` of live columns.
     fn execute_blocked(&mut self, prog: &Program) {
-        let wpb = Self::words_per_block(prog);
+        let wpb = Self::words_per_block(prog.width());
         if self.wpc <= wpb {
             for &instr in prog.instrs() {
                 self.step_full(instr);
@@ -336,21 +374,36 @@ impl Crossbar {
         }
     }
 
+    /// The fused single-thread path: the lowered micro-op pipeline per
+    /// cache block of row words (same blocking policy as
+    /// `execute_blocked`; no gate accounting here).
+    fn execute_blocked_lowered(&mut self, low: &Lowered) {
+        let wpb = Self::words_per_block(low.width());
+        let base = self.data.as_mut_ptr();
+        let wpc = self.wpc;
+        let mut w0 = 0;
+        while w0 < wpc {
+            let w1 = (w0 + wpb).min(wpc);
+            for &op in low.ops() {
+                // SAFETY: `[w0, w1)` ⊆ `[0, wpc)`; columns were validated
+                // by `check_width`; the micro-op comes from `lower`, whose
+                // invariants make the kernel's slice borrows alias-free;
+                // the &mut receiver guarantees exclusive access.
+                unsafe { op.apply(base, wpc, w0, w1) };
+            }
+            w0 = w1;
+        }
+    }
+
     /// The parallel path: contiguous word-range shards, one pool task per
-    /// shard, each running the whole program (cache-blocked) over its own
-    /// range. No gate accounting here (done by `execute`).
+    /// shard, each running the whole lowered pipeline (cache-blocked) over
+    /// its own range. No gate accounting here (done by `execute`).
     fn execute_sharded(&mut self, prog: &Program, pool: &Pool) {
-        // Same structural-hazard check every other execution path carries
-        // (apply_range's safety contract: out differs from every input).
-        debug_assert!(prog
-            .instrs()
-            .iter()
-            .all(|i| !i.inputs().any(|c| c == i.out())));
-        let wpb = Self::words_per_block(prog);
+        let low = prog.lowered();
+        let wpb = Self::words_per_block(low.width());
         let shards = pool.threads().min(self.wpc / MIN_SHARD_WORDS).max(1);
         let per = self.wpc.div_ceil(shards);
         let wpc = self.wpc;
-        let instrs = prog.instrs();
         let base = SendPtr(self.data.as_mut_ptr());
         let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..shards)
             .filter_map(|s| {
@@ -363,15 +416,16 @@ impl Crossbar {
                     let mut b0 = w0;
                     while b0 < w1 {
                         let b1 = (b0 + wpb).min(w1);
-                        for &instr in instrs {
+                        for &op in low.ops() {
                             // SAFETY: shard word-ranges are disjoint across
-                            // tasks; every instruction is row-local, so a
-                            // task only touches its own `[b0, b1)` words of
-                            // each column; columns were validated by
-                            // `check_width` and program construction; the
+                            // tasks; every micro-op is row-local, so a task
+                            // only touches its own `[b0, b1)` words of each
+                            // column; columns were validated by
+                            // `check_width`; `lower`'s invariants make the
+                            // kernel's slice borrows alias-free; the
                             // storage outlives `pool.run` (completion
                             // barrier below).
-                            unsafe { apply_range(base.0, wpc, instr, b0, b1) };
+                            unsafe { op.apply(base.0, wpc, b0, b1) };
                         }
                         b0 = b1;
                     }
@@ -418,6 +472,33 @@ mod tests {
         for (r, &v) in vals.iter().enumerate() {
             assert_eq!(x.read_value(r, 5, 32), v);
         }
+    }
+
+    #[test]
+    fn write_field_preserves_rows_outside_loaded_prefix() {
+        // Regression: the final partial 64-row word used to be stored
+        // wholesale, zeroing sibling rows beyond `values.len()`.
+        let mut rng = Rng::new(42);
+        let rows = 150;
+        let full = rng.vec_bits(rows, 16);
+        let mut x = Crossbar::new(rows, 24);
+        x.write_field(4, 16, &full);
+        // Prefix ends mid-word (70 % 64 != 0): rows 70..127 share word 1.
+        let prefix = rng.vec_bits(70, 16);
+        x.write_field(4, 16, &prefix);
+        for r in 0..rows {
+            let expect = if r < 70 { prefix[r] } else { full[r] };
+            assert_eq!(x.read_value(r, 4, 16), expect, "row {r}");
+        }
+        let bulk = x.read_field(4, 16, rows);
+        for r in 0..rows {
+            let expect = if r < 70 { prefix[r] } else { full[r] };
+            assert_eq!(bulk[r], expect, "bulk row {r}");
+        }
+        // Columns outside the field are untouched throughout.
+        x.set(149, 22, true);
+        x.write_field(4, 16, &prefix);
+        assert!(x.get(149, 22));
     }
 
     #[test]
@@ -503,10 +584,16 @@ mod tests {
         let seed_vals = rng.vec_bits(rows, 32);
         reference.write_field(0, 32, &seed_vals);
         let mut sharded = reference.clone();
+        let mut fused = reference.clone();
         reference.execute_serial(&prog);
         let pool = Pool::new(4);
         sharded.execute_sharded(&prog, &pool);
         assert_eq!(reference.data, sharded.data, "bit-identical across threads");
+
+        // The fused single-thread pipeline agrees bit for bit too.
+        fused.execute_fused(&prog);
+        assert_eq!(reference.data, fused.data, "fused vs per-instruction");
+        assert_eq!(reference.row_gates(), fused.row_gates());
 
         // The public entry point agrees too, whichever path it picks.
         let mut auto = Crossbar::new(rows, cols as usize);

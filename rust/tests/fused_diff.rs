@@ -1,0 +1,276 @@
+//! Differential suites for the lowered/fused execution pipeline, plus the
+//! regression property test for the `write_field` partial-word fix.
+//!
+//! Every suite runs the same program from the same operand state through
+//! three engines and requires full bit-identity:
+//!
+//! * `Crossbar::execute_fused` — the lowered micro-op pipeline (fused
+//!   pairs, widened noalias kernels), single thread;
+//! * `Crossbar::execute_serial` — the retained per-instruction dispatch
+//!   (the unfused packed oracle);
+//! * `ScalarCrossbar::execute` — the per-row/per-bit `bool` reference
+//!   with a deliberately different (row-major) storage layout.
+//!
+//! `Crossbar::execute` (auto dispatch: fused blocked or fused sharded) is
+//! checked as a fourth way on the corpus suites.
+
+use convpim::pim::fixed::{self, FixedLayout, FixedOp};
+use convpim::pim::float::{self, FloatLayout};
+use convpim::pim::gates::GateSet;
+use convpim::pim::oracle::ScalarCrossbar;
+use convpim::pim::softfloat::Format;
+use convpim::pim::{Col, Crossbar, Instr, Program};
+use convpim::util::rng::Rng;
+
+/// Full-state equality of two packed crossbars through the public API.
+fn assert_same_state(a: &Crossbar, b: &Crossbar, what: &str) {
+    assert_eq!(a.rows(), b.rows());
+    assert_eq!(a.cols(), b.cols());
+    for c in 0..a.cols() as Col {
+        assert_eq!(
+            a.read_field(c, 1, a.rows()),
+            b.read_field(c, 1, b.rows()),
+            "{what}: column {c}"
+        );
+    }
+}
+
+/// Run `prog` from identical operand fields through all engines and
+/// require bit-identical final state everywhere.
+fn assert_four_way(prog: &Program, rows: usize, fields: &[(Col, u32, Vec<u64>)], what: &str) {
+    let cols = fields
+        .iter()
+        .map(|(base, bits, _)| base + bits)
+        .max()
+        .unwrap_or(0)
+        .max(prog.width()) as usize;
+    let mut fused = Crossbar::new(rows, cols);
+    let mut oracle = ScalarCrossbar::new(rows, cols);
+    for (base, bits, values) in fields {
+        fused.write_field(*base, *bits, values);
+        oracle.write_field(*base, *bits, values);
+    }
+    assert!(
+        oracle.agrees_with(&fused),
+        "{what}: engines disagree after operand load"
+    );
+    let mut serial = fused.clone();
+    let mut auto = fused.clone();
+    fused.execute_fused(prog);
+    serial.execute_serial(prog);
+    auto.execute(prog);
+    oracle.execute(prog);
+    assert_same_state(&fused, &serial, what);
+    assert_same_state(&fused, &auto, what);
+    assert!(oracle.agrees_with(&fused), "{what}: fused vs scalar oracle");
+    assert_eq!(fused.row_gates(), serial.row_gates(), "{what}: accounting");
+    assert_eq!(fused.row_gates(), auto.row_gates(), "{what}: accounting");
+    assert_eq!(
+        oracle.row_gates(),
+        fused.row_gates(),
+        "{what}: accounting vs oracle"
+    );
+}
+
+/// Random valid program for one gate set, biased toward the adjacent
+/// pairs the peephole fuser targets (gate→NOT, Set runs, NOT pairs).
+fn random_program(rng: &mut Rng, set: GateSet, cols: Col, len: usize) -> Program {
+    let pick = |rng: &mut Rng, avoid: &[Col]| -> Col {
+        loop {
+            let c = rng.below(cols as u64) as Col;
+            if !avoid.contains(&c) {
+                return c;
+            }
+        }
+    };
+    let mut p = Program::new(set);
+    while p.len() < len {
+        let roll = rng.below(10);
+        let a = pick(rng, &[]);
+        let b = pick(rng, &[a]);
+        let c = pick(rng, &[a, b]);
+        let out = pick(rng, &[a, b, c]);
+        match set {
+            GateSet::MemristiveNor => match roll {
+                // Fusable OR idiom: NOR2 then NOT of its result.
+                0 | 1 => {
+                    p.push(Instr::Nor2 { a, b, out: c });
+                    p.push(Instr::Not { a: c, out });
+                }
+                // Fusable OR3 idiom.
+                2 => {
+                    p.push(Instr::Nor3 { a, b, c, out });
+                    let nout = pick(rng, &[out]);
+                    p.push(Instr::Not { a: out, out: nout });
+                }
+                // Adjacent independent NOTs (AND idiom complements).
+                3 => {
+                    p.push(Instr::Not { a, out: c });
+                    p.push(Instr::Not { a: b, out });
+                }
+                // Set runs.
+                4 => {
+                    p.push(Instr::Set { out: a, bit: rng.bool() });
+                    p.push(Instr::Set { out: b, bit: rng.bool() });
+                }
+                5 => p.push(Instr::Set { out, bit: rng.bool() }),
+                6 => p.push(Instr::Not { a, out }),
+                7 => p.push(Instr::Nor3 { a, b, c, out }),
+                _ => p.push(Instr::Nor2 { a, b, out }),
+            },
+            GateSet::DramMaj => match roll {
+                // Fusable DRAM-NOR idiom: MAJ3 then NOT of its result.
+                0 | 1 | 2 => {
+                    p.push(Instr::Maj3 { a, b, c, out });
+                    let nout = pick(rng, &[out]);
+                    p.push(Instr::Not { a: out, out: nout });
+                }
+                3 => {
+                    p.push(Instr::Not { a, out: c });
+                    p.push(Instr::Not { a: b, out });
+                }
+                4 => {
+                    p.push(Instr::Set { out: a, bit: rng.bool() });
+                    p.push(Instr::Set { out: b, bit: rng.bool() });
+                }
+                5 => p.push(Instr::Set { out, bit: rng.bool() }),
+                6 => p.push(Instr::Copy { a, out }),
+                7 => p.push(Instr::Not { a, out }),
+                _ => p.push(Instr::Maj3 { a, b, c, out }),
+            },
+        }
+    }
+    p.validate_for(set).unwrap();
+    p
+}
+
+#[test]
+fn random_programs_fused_matches_serial_and_oracle() {
+    let mut rng = Rng::new(2024);
+    for set in GateSet::all() {
+        for trial in 0..30 {
+            let cols = 18;
+            let prog = random_program(&mut rng, set, cols, 80);
+            // Some fusion must actually happen or the suite tests nothing.
+            assert!(prog.lowered().fused() > 0, "{set:?} trial {trial}");
+            let rows = 64 + (trial * 13) % 200; // straddle word boundaries
+            let seed = rng.vec_bits(rows, cols);
+            assert_four_way(
+                &prog,
+                rows,
+                &[(0, cols, seed)],
+                &format!("{set:?} random trial {trial}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn fixed_corpus_fused_three_way() {
+    let mut rng = Rng::new(2025);
+    let rows = 100; // not a multiple of 64
+    for set in GateSet::all() {
+        for op in [FixedOp::Add, FixedOp::Mul] {
+            for n in [8u32, 16] {
+                let prog = fixed::program(op, n, set);
+                let lay = FixedLayout::new(op, n);
+                let u = rng.vec_bits(rows, n);
+                let v = rng.vec_bits(rows, n);
+                assert_four_way(
+                    &prog,
+                    rows,
+                    &[(lay.u, n, u), (lay.v, n, v)],
+                    &format!("{set:?} fixed{n} {op:?}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fp32_corpus_fused_three_way() {
+    let mut rng = Rng::new(2026);
+    let fmt = Format::FP32;
+    let rows = 10; // keeps the per-bool oracle tractable on fp32 programs
+    let n = fmt.bits();
+    for set in GateSet::all() {
+        for op in [FixedOp::Add, FixedOp::Mul] {
+            let prog = float::program(op, fmt, set);
+            let lay = FloatLayout::new(fmt);
+            let u: Vec<u64> = (0..rows)
+                .map(|_| rng.float_pattern(fmt.exp, fmt.man))
+                .collect();
+            let v: Vec<u64> = (0..rows)
+                .map(|_| rng.float_pattern(fmt.exp, fmt.man))
+                .collect();
+            assert_four_way(
+                &prog,
+                rows,
+                &[(lay.u, n, u), (lay.v, n, v)],
+                &format!("{set:?} fp32 {op:?}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn conv_corpus_fused_three_way() {
+    use convpim::pim::conv;
+    use convpim::pim::matpim::NumFmt;
+    let mut rng = Rng::new(2027);
+    let rows = 20; // not a multiple of 64
+    for set in GateSet::all() {
+        let l = 6;
+        let cp = conv::conv_program(NumFmt::Fixed(8), l, set);
+        let mut fields: Vec<(Col, u32, Vec<u64>)> = Vec::new();
+        for t in 0..l {
+            fields.push((cp.lay.a_col(t, 0), 8, rng.vec_bits(rows, 8)));
+            fields.push((cp.lay.w_col(t, 0), 8, vec![rng.bits(8); rows]));
+        }
+        assert_four_way(&cp.prog, rows, &fields, &format!("{set:?} conv fixed8"));
+    }
+}
+
+#[test]
+fn write_field_partial_prefix_property() {
+    // Regression for the partial-word clobber: after loading a shorter
+    // prefix over a populated field, rows outside the prefix — both rows
+    // *sharing the final partial 64-row word* with the prefix and rows in
+    // later words — keep their bytes, and read_field / read_value agree
+    // with each other and with the scalar oracle.
+    let mut rng = Rng::new(2028);
+    for &(rows, prefix) in &[
+        (150usize, 70usize), // prefix ends mid-word; rows 70..127 share word 1
+        (150, 129),          // prefix ends just past a word boundary
+        (150, 128),          // prefix ends exactly on a word boundary
+        (100, 64),
+        (70, 1),
+        (64, 63),
+        (200, 0),
+    ] {
+        let bits = 16u32;
+        let base = 4 as Col;
+        let full = rng.vec_bits(rows, bits);
+        let mut packed = Crossbar::new(rows, 24);
+        let mut oracle = ScalarCrossbar::new(rows, 24);
+        packed.write_field(base, bits, &full);
+        oracle.write_field(base, bits, &full);
+        let pre = rng.vec_bits(prefix, bits);
+        packed.write_field(base, bits, &pre);
+        oracle.write_field(base, bits, &pre);
+        assert!(
+            oracle.agrees_with(&packed),
+            "rows={rows} prefix={prefix}: engines disagree"
+        );
+        let bulk = packed.read_field(base, bits, rows);
+        for r in 0..rows {
+            let expect = if r < prefix { pre[r] } else { full[r] };
+            assert_eq!(bulk[r], expect, "rows={rows} prefix={prefix} row {r}");
+            assert_eq!(
+                packed.read_value(r, base, bits),
+                expect,
+                "rows={rows} prefix={prefix} row {r} (read_value)"
+            );
+        }
+    }
+}
