@@ -1,0 +1,221 @@
+#!/usr/bin/env python3
+"""Warn-only perf ratchet: diff a fresh bench artifact against the
+committed baseline.
+
+CI regenerates ``BENCH_serve.json`` and ``BENCH_hotpath.json`` on every
+run; this script compares the fresh numbers against the committed
+baseline (read out of git by the workflow, since the fresh run overwrites
+the working-tree file) and emits a ``::warning`` annotation plus a
+``$GITHUB_STEP_SUMMARY`` section when any tracked metric regresses beyond
+the tolerance band. Timing on shared CI machines is noisy, so the default
+band is wide (25%) and the script ALWAYS exits 0 — the ratchet is an
+alarm that fires on every run of a sustained regression, not a gate that
+flakes on one bad scheduler decision.
+
+Tracked metrics:
+
+* ``serve``   — per concurrency level (keyed by ``clients``): ``rps``
+  (higher is better) and ``p95_ms`` (lower is better).
+* ``hotpath`` — per instruction mix (keyed by ``name``):
+  ``rowgates_per_s`` (higher is better), plus every entry of ``ratios``
+  (higher is better).
+
+Usage::
+
+    python3 python/tests/bench_ratchet.py --bench serve \
+        --baseline /tmp/baseline_serve.json --fresh BENCH_serve.json \
+        [--tolerance 0.25] [--summary "$GITHUB_STEP_SUMMARY"]
+
+Run the built-in self-checks with ``--self-test``.
+"""
+
+import argparse
+import json
+import math
+import sys
+
+# Direction tags: metric regresses when it moves this way past tolerance.
+HIGHER = "higher"
+LOWER = "lower"
+
+
+def metrics_serve(doc):
+    """BENCH_serve.json -> {metric name: (value, direction)}."""
+    out = {}
+    for lv in doc.get("levels", []):
+        key = "clients=%s" % lv["clients"]
+        out["%s rps" % key] = (lv["rps"], HIGHER)
+        out["%s p95_ms" % key] = (lv["p95_ms"], LOWER)
+    return out
+
+
+def metrics_hotpath(doc):
+    """BENCH_hotpath.json -> {metric name: (value, direction)}."""
+    out = {}
+    for m in doc.get("mixes", []):
+        out["mix %s rowgates/s" % m["name"]] = (m["rowgates_per_s"], HIGHER)
+    for key, val in sorted(doc.get("ratios", {}).items()):
+        out["ratio %s" % key] = (val, HIGHER)
+    return out
+
+
+EXTRACTORS = {"serve": metrics_serve, "hotpath": metrics_hotpath}
+
+
+def compare(baseline, fresh, tolerance):
+    """Return [(name, base, fresh, signed change fraction, regressed)].
+
+    Metrics present on only one side are skipped (benches grow new mixes
+    and levels over time; the ratchet only judges the intersection).
+    The change fraction is oriented so that negative always means WORSE,
+    regardless of the metric's direction.
+    """
+    rows = []
+    for name, (bval, direction) in sorted(baseline.items()):
+        if name not in fresh:
+            continue
+        fval = fresh[name][0]
+        if not (math.isfinite(bval) and math.isfinite(fval)) or bval <= 0:
+            continue
+        change = (fval - bval) / bval
+        if direction == LOWER:
+            change = -change
+        rows.append((name, bval, fval, change, change < -tolerance))
+    return rows
+
+
+def render_summary(bench, tolerance, regressions):
+    lines = [
+        "## :warning: Bench ratchet: %s regressed" % bench,
+        "",
+        "Fresh `BENCH_%s.json` is worse than the committed baseline by "
+        "more than %d%% on:" % (bench, round(tolerance * 100)),
+        "",
+        "| metric | baseline | fresh | change |",
+        "|---|---|---|---|",
+    ]
+    for name, bval, fval, change, _ in regressions:
+        lines.append(
+            "| %s | %.3g | %.3g | %+.1f%% |" % (name, bval, fval, change * 100)
+        )
+    lines += [
+        "",
+        "Timing data on shared runners is noisy; treat a one-off as noise,",
+        "a repeat on consecutive runs as a real regression.",
+    ]
+    return "\n".join(lines) + "\n"
+
+
+def run(bench, baseline_doc, fresh_doc, tolerance, summary_path=None, out=sys.stdout):
+    """Compare and report; returns the list of regressed rows."""
+    extract = EXTRACTORS[bench]
+    rows = compare(extract(baseline_doc), extract(fresh_doc), tolerance)
+    regressions = [r for r in rows if r[4]]
+    for name, bval, fval, change, regressed in rows:
+        flag = " REGRESSED" if regressed else ""
+        print(
+            "%s: %-40s %10.3g -> %10.3g  %+6.1f%%%s"
+            % (bench, name, bval, fval, change * 100, flag),
+            file=out,
+        )
+    if not rows:
+        print("%s: no overlapping metrics to compare" % bench, file=out)
+    if regressions:
+        names = ", ".join(r[0] for r in regressions)
+        # One log-line annotation GitHub surfaces on the run page...
+        print(
+            "::warning title=Bench ratchet: %s regressed::%d metric(s) worse "
+            "than baseline beyond %d%%: %s"
+            % (bench, len(regressions), round(tolerance * 100), names),
+            file=out,
+        )
+        # ...and a loud table in the step summary.
+        if summary_path:
+            with open(summary_path, "a") as f:
+                f.write(render_summary(bench, tolerance, regressions))
+    return regressions
+
+
+def self_test():
+    base = {
+        "levels": [
+            {"clients": 2, "rps": 100.0, "p95_ms": 10.0},
+            {"clients": 4, "rps": 150.0, "p95_ms": 20.0},
+        ]
+    }
+    # Within band: rps -20%, p95 +20% at tolerance 25%.
+    ok = {
+        "levels": [
+            {"clients": 2, "rps": 80.0, "p95_ms": 12.0},
+            {"clients": 4, "rps": 160.0, "p95_ms": 18.0},
+        ]
+    }
+    rows = compare(metrics_serve(base), metrics_serve(ok), 0.25)
+    assert len(rows) == 4, rows
+    assert not any(r[4] for r in rows), rows
+
+    # Out of band: rps halves on one level; p95 doubles on the other.
+    bad = {
+        "levels": [
+            {"clients": 2, "rps": 50.0, "p95_ms": 10.0},
+            {"clients": 4, "rps": 150.0, "p95_ms": 40.0},
+        ]
+    }
+    rows = compare(metrics_serve(base), metrics_serve(bad), 0.25)
+    regressed = sorted(r[0] for r in rows if r[4])
+    assert regressed == ["clients=2 rps", "clients=4 p95_ms"], rows
+    # Orientation: both regressions report a negative (= worse) change.
+    assert all(r[3] < 0 for r in rows if r[4]), rows
+
+    hb = {
+        "mixes": [{"name": "nor2-storm", "rowgates_per_s": 1e9}],
+        "ratios": {"packed_vs_scalar": 40.0},
+    }
+    hf = {
+        "mixes": [
+            {"name": "nor2-storm", "rowgates_per_s": 5e8},
+            {"name": "brand-new-mix", "rowgates_per_s": 1.0},
+        ],
+        "ratios": {"packed_vs_scalar": 41.0},
+    }
+    rows = compare(metrics_hotpath(hb), metrics_hotpath(hf), 0.25)
+    # New mixes in the fresh doc are ignored; the shared mix regressed.
+    assert [r[0] for r in rows if r[4]] == ["mix nor2-storm rowgates/s"], rows
+
+    # Degenerate baselines (zero, NaN) are skipped, never divided by.
+    zb = {"ratios": {"a": 0.0, "b": float("nan"), "c": 2.0}}
+    zf = {"ratios": {"a": 1.0, "b": 1.0, "c": 2.0}}
+    rows = compare(metrics_hotpath(zb), metrics_hotpath(zf), 0.25)
+    assert [r[0] for r in rows] == ["ratio c"], rows
+
+    print("bench_ratchet self-test ok")
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--bench", choices=sorted(EXTRACTORS))
+    p.add_argument("--baseline", help="committed baseline JSON path")
+    p.add_argument("--fresh", help="freshly generated JSON path")
+    p.add_argument("--tolerance", type=float, default=0.25)
+    p.add_argument("--summary", help="append regression tables here "
+                                     "(pass \"$GITHUB_STEP_SUMMARY\")")
+    p.add_argument("--self-test", action="store_true")
+    args = p.parse_args(argv)
+
+    if args.self_test:
+        self_test()
+        return 0
+    if not (args.bench and args.baseline and args.fresh):
+        p.error("--bench, --baseline and --fresh are required "
+                "(or use --self-test)")
+    with open(args.baseline) as f:
+        baseline_doc = json.load(f)
+    with open(args.fresh) as f:
+        fresh_doc = json.load(f)
+    run(args.bench, baseline_doc, fresh_doc, args.tolerance, args.summary)
+    # Warn-only by design: annotations above, exit status always clean.
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

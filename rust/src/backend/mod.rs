@@ -27,6 +27,10 @@
 //!   run end to end with pipelined tiles, per-layer analytic
 //!   cross-validation, and inter-layer data movement reported as its
 //!   own cost bucket;
+//! * [`OptimizedPim`] — the same analytic model over the
+//!   equality-saturation synthesizer's microcode ([`crate::synth`]):
+//!   `pim-opt:*` vs `pim:*` in one `compare` quantifies how much the
+//!   hand-derived microcode leaves on the table;
 //! * [`GpuRoofline`] — the datasheet × roofline GPU baselines
 //!   (experimental memory-bound / theoretical compute peak) over
 //!   [`crate::gpumodel`];
@@ -60,12 +64,14 @@
 pub mod analytic;
 pub mod executed;
 pub mod gpu;
+pub mod optimized;
 
 use anyhow::Result;
 
 pub use analytic::AnalyticPim;
 pub use executed::{ExecutedCrossbar, ExecutedNet, CONV_EXEC_SEED};
 pub use gpu::GpuRoofline;
+pub use optimized::OptimizedPim;
 
 use crate::gpumodel::{GpuDtype, GpuSpec};
 use crate::pim::gates::GateSet;
@@ -149,8 +155,8 @@ impl Estimate {
 }
 
 /// The grammar `parse` accepts (also the error-message help text).
-pub const ID_GRAMMAR: &str = "pim:SET[@RxC] | pim-exec:SET[@RxC] | pim-exec-net:SET[@RxC] | \
-     gpu:NAME[:MODE[:DTYPE]] \
+pub const ID_GRAMMAR: &str = "pim:SET[@RxC] | pim-opt:SET[@RxC] | pim-exec:SET[@RxC] | \
+     pim-exec-net:SET[@RxC] | gpu:NAME[:MODE[:DTYPE]] \
      (SET: memristive|dram; NAME: a6000|a100|v100|rtx3090; \
      MODE: experimental|theoretical; DTYPE: auto|fp32|fp16|fp16-tensor)";
 
@@ -169,6 +175,7 @@ pub fn parse(id: &str) -> Result<Box<dyn Backend>> {
     })?;
     match kind {
         "pim" => Ok(Box::new(AnalyticPim::new(parse_arch(rest)?))),
+        "pim-opt" => Ok(Box::new(OptimizedPim::new(parse_arch(rest)?))),
         "pim-exec" => Ok(Box::new(ExecutedCrossbar::new(parse_arch(rest)?))),
         "pim-exec-net" => Ok(Box::new(ExecutedNet::new(parse_arch(rest)?))),
         "gpu" => parse_gpu(rest),
@@ -296,6 +303,9 @@ pub fn builtin() -> Vec<Box<dyn Backend>> {
         out.push(Box::new(AnalyticPim::new(ArchSpec::paper(set))));
     }
     for set in GateSet::all() {
+        out.push(Box::new(OptimizedPim::new(ArchSpec::paper(set))));
+    }
+    for set in GateSet::all() {
         out.push(Box::new(ExecutedCrossbar::new(ArchSpec::paper(set))));
     }
     for set in GateSet::all() {
@@ -320,6 +330,8 @@ mod tests {
             "pim:memristive",
             "pim:dram",
             "pim:memristive@1024x512",
+            "pim-opt:memristive",
+            "pim-opt:dram@512x1024",
             "pim-exec:dram",
             "pim-exec-net:memristive",
             "pim-exec-net:dram@512x1024",
@@ -347,6 +359,8 @@ mod tests {
         for bad in [
             "pim",
             "pim:cmos",
+            "pim-opt:cmos",
+            "pim-opt:memristive@0x0",
             "pim:memristive@8",
             "pim:memristive@0x1024",
             "pim:memristive@8xbig",

@@ -1,0 +1,256 @@
+//! [`OptimizedPim`]: the analytic digital-PIM model evaluated over the
+//! *synthesized* microcode (`pim-opt:SET[@RxC]`).
+//!
+//! Identical to [`AnalyticPim`](super::AnalyticPim) arm for arm — same
+//! schedules, same throughput/energy expressions — except every scalar
+//! cost comes from the equality-saturation synthesizer
+//! ([`crate::synth`]) instead of the hand-derived microcode:
+//! elementwise workloads evaluate the optimized `Program` itself, and
+//! the MatPIM/CNN/decode schedules run over
+//! [`optimized_costs`](crate::synth::optimized_costs). Each optimized
+//! program is verified bit-identical to the hand microcode (and the
+//! scalar oracle) before it is used, and is never costlier, so a
+//! `pim-opt` estimate is always ≥ the corresponding `pim` estimate.
+//! Comparing the two ids in `convpim compare` (or the sweep `backends`
+//! axis) is the experiment: how much headroom the paper's hand microcode
+//! leaves on the table.
+
+use anyhow::Result;
+
+use super::{Backend, Estimate};
+use crate::metrics;
+use crate::pim::arch::PimArch;
+use crate::pim::matpim::{CnnPimModel, MatmulModel, NumFmt, ScalarCosts};
+use crate::sweep::campaign::{ArchSpec, WorkloadSpec};
+use crate::synth::{optimized_costs, optimized_op_program};
+use crate::util::json::Json;
+use crate::workloads::attention::{decode_workload, DecodeConfig};
+
+/// The synthesized-microcode digital-PIM backend (`pim-opt:SET[@RxC]`).
+#[derive(Clone, Debug)]
+pub struct OptimizedPim {
+    arch: PimArch,
+    id: String,
+}
+
+impl OptimizedPim {
+    /// Wrap an architecture axis value (dims validated by callers, like
+    /// [`AnalyticPim::new`](super::AnalyticPim::new)).
+    pub fn new(spec: ArchSpec) -> OptimizedPim {
+        OptimizedPim {
+            arch: spec.arch(),
+            id: format!("pim-opt:{}", spec.name()),
+        }
+    }
+
+    /// The wrapped architecture model.
+    pub fn arch(&self) -> &PimArch {
+        &self.arch
+    }
+
+    fn costs(&self, fmt: NumFmt) -> ScalarCosts {
+        optimized_costs(fmt, self.arch.set)
+    }
+}
+
+impl Backend for OptimizedPim {
+    fn id(&self) -> String {
+        self.id.clone()
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "equality-saturated digital-PIM model: {:?} gates, {}x{} crossbars, synthesized microcode (never costlier than pim:*)",
+            self.arch.set, self.arch.rows, self.arch.cols
+        )
+    }
+
+    fn supports(&self, _workload: &WorkloadSpec) -> bool {
+        // Same coverage as the analytic backend: every workload kind
+        // bottoms out in scalar add/mul costs, all synthesizable.
+        true
+    }
+
+    fn evaluate(&self, workload: &WorkloadSpec, fmt: NumFmt) -> Result<Estimate> {
+        let arch = &self.arch;
+        let (throughput, per_watt, cc, notes) = match *workload {
+            WorkloadSpec::Elementwise(op) => {
+                let opt = optimized_op_program(op, fmt, arch.set);
+                let prog = &opt.program;
+                let io = metrics::io_bits(op, fmt);
+                let cc = metrics::compute_complexity(prog, io);
+                let tp = arch.throughput(prog);
+                (
+                    tp,
+                    tp / arch.max_power_w,
+                    Some(cc),
+                    Json::obj(vec![
+                        ("gates", Json::i(prog.gates() as i64)),
+                        ("cycles", Json::i(prog.cycles() as i64)),
+                        ("io_bits", Json::i(io as i64)),
+                        ("baseline_cycles", Json::i(opt.stats.baseline_cycles as i64)),
+                        ("improved", Json::Bool(opt.stats.improved)),
+                    ]),
+                )
+            }
+            WorkloadSpec::Matmul(n) => {
+                anyhow::ensure!(n > 0, "matmul dimension must be positive");
+                let mm = MatmulModel::with_costs(n, fmt, arch.set, arch.cols, self.costs(fmt));
+                (
+                    mm.throughput(arch),
+                    mm.throughput_per_watt(arch),
+                    None,
+                    Json::obj(vec![
+                        ("schedule_cycles", Json::i(mm.cycles as i64)),
+                        ("rows_per_instance", Json::i(mm.rows_per_instance as i64)),
+                    ]),
+                )
+            }
+            WorkloadSpec::Cnn { model, training } => {
+                let base = model.workload();
+                let w = if training { base.training() } else { base };
+                let macs = w.total_macs();
+                let pim_model = CnnPimModel::with_costs(fmt, arch.set, macs, self.costs(fmt));
+                (
+                    pim_model.throughput(arch),
+                    pim_model.throughput_per_watt(arch),
+                    None,
+                    Json::obj(vec![
+                        ("macs", Json::n(macs)),
+                        ("mac_cycles", Json::i(pim_model.mac_cycles() as i64)),
+                    ]),
+                )
+            }
+            WorkloadSpec::ConvExec { model, conv, scale } => {
+                let (_, spec) = super::conv_exec_layer(model, conv, scale)?;
+                let pim_model =
+                    CnnPimModel::with_costs(fmt, arch.set, spec.macs() as f64, self.costs(fmt));
+                let tp = arch.throughput_ops(pim_model.mac_cycles());
+                (
+                    tp,
+                    tp / arch.max_power_w,
+                    None,
+                    Json::obj(vec![
+                        ("layer", Json::s(spec.label())),
+                        ("macs", Json::i(spec.macs() as i64)),
+                        ("mac_cycles", Json::i(pim_model.mac_cycles() as i64)),
+                        ("mac_gates", Json::i(pim_model.mac_gates() as i64)),
+                        ("executed", Json::Bool(false)),
+                    ]),
+                )
+            }
+            WorkloadSpec::NetExec { model, scale } => {
+                let graph = crate::pim::netexec::NetGraph::model(model.name(), scale)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "net-exec has no executable graph for `{}`; available: {}",
+                            model.name(),
+                            crate::pim::netexec::NetGraph::model_names().join(", ")
+                        )
+                    })?;
+                let macs: u64 = graph.layers.iter().map(|l| l.macs()).sum();
+                let pim_model =
+                    CnnPimModel::with_costs(fmt, arch.set, macs as f64, self.costs(fmt));
+                let tp = arch.throughput_ops(pim_model.mac_cycles() * macs.max(1));
+                (
+                    tp,
+                    tp / arch.max_power_w,
+                    None,
+                    Json::obj(vec![
+                        ("graph", Json::s(graph.name.clone())),
+                        ("macs", Json::i(macs as i64)),
+                        ("mac_cycles", Json::i(pim_model.mac_cycles() as i64)),
+                        ("mac_gates", Json::i(pim_model.mac_gates() as i64)),
+                        ("executed", Json::Bool(false)),
+                    ]),
+                )
+            }
+            WorkloadSpec::Decode { seq } => {
+                anyhow::ensure!(seq > 0, "decode context length must be positive");
+                let w = decode_workload(DecodeConfig::llama7b(seq));
+                let pim_model =
+                    CnnPimModel::with_costs(fmt, arch.set, w.total_macs(), self.costs(fmt));
+                (
+                    pim_model.throughput(arch),
+                    pim_model.throughput_per_watt(arch),
+                    None,
+                    Json::obj(vec![
+                        ("macs", Json::n(w.total_macs())),
+                        ("mac_cycles", Json::i(pim_model.mac_cycles() as i64)),
+                    ]),
+                )
+            }
+        };
+        Ok(Estimate {
+            backend: self.id.clone(),
+            workload: workload.name(),
+            format: fmt.name(),
+            unit: workload.unit().to_string(),
+            throughput,
+            per_watt,
+            power_w: arch.max_power_w,
+            cc,
+            bytes_per_unit: None,
+            notes,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::AnalyticPim;
+    use crate::pim::fixed::FixedOp;
+    use crate::pim::gates::GateSet;
+    use crate::sweep::campaign::CnnModel;
+
+    #[test]
+    fn never_slower_than_the_hand_microcode() {
+        for set in GateSet::all() {
+            let opt = OptimizedPim::new(ArchSpec::paper(set));
+            let base = AnalyticPim::new(ArchSpec::paper(set));
+            for w in [
+                WorkloadSpec::Elementwise(FixedOp::Add),
+                WorkloadSpec::Elementwise(FixedOp::Mul),
+                WorkloadSpec::Cnn { model: CnnModel::AlexNet, training: false },
+            ] {
+                let fmt = NumFmt::Fixed(8);
+                let eo = opt.evaluate(&w, fmt).unwrap();
+                let eb = base.evaluate(&w, fmt).unwrap();
+                assert!(
+                    eo.throughput >= eb.throughput,
+                    "{set:?} {}: opt {} < base {}",
+                    w.name(),
+                    eo.throughput,
+                    eb.throughput
+                );
+                assert_eq!(eo.unit, eb.unit);
+            }
+        }
+    }
+
+    #[test]
+    fn nor_add_is_strictly_faster() {
+        // The folded first full adder makes the fixed8 NOR add strictly
+        // cheaper, which must surface as strictly higher throughput.
+        let opt = OptimizedPim::new(ArchSpec::paper(GateSet::MemristiveNor));
+        let base = AnalyticPim::new(ArchSpec::paper(GateSet::MemristiveNor));
+        let w = WorkloadSpec::Elementwise(FixedOp::Add);
+        let eo = opt.evaluate(&w, NumFmt::Fixed(8)).unwrap();
+        let eb = base.evaluate(&w, NumFmt::Fixed(8)).unwrap();
+        assert!(eo.throughput > eb.throughput);
+        assert_eq!(eo.notes.get("improved").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn id_reflects_dims() {
+        assert_eq!(
+            OptimizedPim::new(ArchSpec::paper(GateSet::DramMaj)).id(),
+            "pim-opt:dram"
+        );
+        assert_eq!(
+            OptimizedPim::new(ArchSpec::with_dims(GateSet::MemristiveNor, 512, 256)).id(),
+            "pim-opt:memristive@512x256"
+        );
+    }
+}

@@ -53,6 +53,12 @@
 //!   ([`service::serve`](mod@service::serve)): pipelined requests
 //!   answered in input order while executing concurrently on one warm
 //!   cache and one pool.
+//! * [`synth`] — the equality-saturation microcode synthesizer: a
+//!   hand-rolled e-graph over the gate IR, sound per-gate-set rewrite
+//!   rules, cost extraction against the `Program` cycles/gates
+//!   accounting, and a verified lowering back to microcode. Optimized
+//!   programs surface as `pim-opt:*` backends and the `convpim opt`
+//!   report (`BENCH_microcode.json`).
 //! * [`runtime`] — the PJRT runtime that loads the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) and executes them from Rust; Python
 //!   never runs at experiment time. Needs the `pjrt` cargo feature (and
@@ -105,6 +111,7 @@ pub mod pim;
 pub mod runtime;
 pub mod service;
 pub mod sweep;
+pub mod synth;
 pub mod util;
 pub mod workloads;
 

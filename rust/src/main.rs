@@ -27,6 +27,11 @@
 //!   by side: analytic PIM, executed crossbar, GPU rooflines.
 //! * `validate [--rows N] [--seed S]` — bit-exact validation sweep of the
 //!   arithmetic microcode on the crossbar simulator.
+//! * `opt [--set S] [--ops add,mul] [--formats fixed8,...]` — run the
+//!   equality-saturation microcode synthesizer over each op × format ×
+//!   gate-set cell, print per-cell and cycles-per-MAC deltas against the
+//!   hand-derived microcode, and write the `BENCH_microcode.json`
+//!   artifact.
 //! * `serve [--jobs N] [--listen ADDR]` — long-running JSONL daemon:
 //!   one request per line, responses streamed in input order while
 //!   executing concurrently on one warm two-tier cache. Default
@@ -70,6 +75,8 @@ USAGE:
   convpim compare --workload NAME --backends ID[,ID...] [--fmt FMT]
                   [--no-cache] [--cache-dir DIR]
   convpim validate [--rows N] [--seed N]
+  convpim opt [--set memristive|dram|both] [--ops add,mul]
+              [--formats fixed8,fixed16,fp32] [--out FILE]
   convpim serve [--jobs N] [--no-cache] [--cache-dir DIR] [--mem-cache N]
                 [--listen HOST:PORT [--queue N]]
   convpim loadgen [--addr HOST:PORT] [--clients N,N,...] [--requests N]
@@ -117,7 +124,7 @@ thread pool — outputs are byte-identical at any worker count. Every
 output is verified bit-exactly against a host reference, per-layer MAC
 costs are cross-checked against the analytic CNN model, and inter-layer
 data movement (staging cycles and bits) is reported as its own cost
-bucket next to compute. MODEL is currently alexnet. Exits nonzero if any
+bucket next to compute. MODEL is alexnet or lenet. Exits nonzero if any
 cell fails verification. See docs/EXPERIMENTS.md NET-EXEC.
 
 `compare` evaluates ONE workload across N evaluation backends side by
@@ -131,6 +138,18 @@ conv-exec-MODEL-cN-sM, net-exec-MODEL-sN. `convpim list` prints the
 registered backends;
 campaigns can add the same ids as a `backends` axis (EXPERIMENTS.md
 COMPARE/SWEEP).
+
+`opt` runs the equality-saturation microcode synthesizer (the library's
+`synth` module) over every requested op x format x gate-set cell: each
+hand-derived gate program is abstracted into an e-graph, saturated under
+the gate set's boolean rewrite rules, re-extracted against the
+cycles/gates cost model, lowered back to microcode and proven bit-exact
+on the crossbar simulator before any number is reported. The table
+prints baseline -> optimized cycles and gates per cell (an explicit
+zero-delta line when the hand microcode is already optimal under the
+rule set) plus the derived cycles-per-MAC deltas that drive the
+`pim-opt:*` backends, and writes the BENCH_microcode.json artifact
+(--out; schema: docs/EXPERIMENTS.md OPT).
 
 `serve` reads one request JSON per line and answers one response JSON
 per line, in input order, while executing concurrently — pipelined
@@ -157,7 +176,8 @@ instead. Exits nonzero (after writing) if any level degenerates.
 
 EXPERIMENTS: table1 fig3 fig4 fig5 fig6 fig7 fig8 sens-gpu sens-fp16 sens-dims conv-exec
 SWEEP CAMPAIGNS (builtin): fig4 fig5 sens-dims conv-exec net-exec
-BACKENDS: pim:memristive pim:dram pim-exec:memristive pim-exec:dram
+BACKENDS: pim:memristive pim:dram pim-opt:memristive pim-opt:dram
+          pim-exec:memristive pim-exec:dram
           pim-exec-net:memristive pim-exec-net:dram
           gpu:{a6000,a100,v100,rtx3090}:{experimental,theoretical}[:fp32|fp16|fp16-tensor]
 ";
@@ -181,6 +201,7 @@ fn main() -> ExitCode {
         "exec-net" => cmd_exec_net(&args),
         "compare" => cmd_compare(&args),
         "validate" => cmd_validate(&args),
+        "opt" => cmd_opt(&args),
         "serve" => cmd_serve(&args),
         "loadgen" => cmd_loadgen(&args),
         "info" => cmd_info(),
@@ -600,6 +621,170 @@ fn cmd_validate(args: &Args) -> anyhow::Result<()> {
         true => Ok(()),
         false => Err(response_error(&resp)),
     }
+}
+
+/// Run the equality-saturation microcode synthesizer over each
+/// op × format × gate-set cell, report the per-cell and cycles-per-MAC
+/// deltas against the hand-derived microcode, and write
+/// `BENCH_microcode.json`.
+fn cmd_opt(args: &Args) -> anyhow::Result<()> {
+    use convpim::pim::fixed::FixedOp;
+    use convpim::pim::gates::GateSet;
+    use convpim::pim::matpim::{scalar_costs, NumFmt};
+    use convpim::synth;
+    use convpim::util::json::Json;
+
+    // Short registry-style key ("memristive"/"dram"), distinct from the
+    // display name GateSet::name() returns.
+    fn set_key(set: GateSet) -> &'static str {
+        match set {
+            GateSet::MemristiveNor => "memristive",
+            GateSet::DramMaj => "dram",
+        }
+    }
+
+    let set_name = args.flag("set", "both");
+    let sel = SetSel::from_name(set_name).ok_or_else(|| {
+        anyhow::Error::msg(format!(
+            "--set must be memristive|dram|both, got `{set_name}`"
+        ))
+    })?;
+    let sets = sel.sets();
+
+    let ops_arg = args.flag("ops", "add,mul");
+    let ops: Vec<FixedOp> = ops_arg
+        .split(',')
+        .map(|s| s.trim())
+        .filter(|s| !s.is_empty())
+        .map(|s| {
+            FixedOp::all().into_iter().find(|op| op.name() == s).ok_or_else(|| {
+                anyhow::Error::msg(format!("unknown op `{s}` (use add|sub|mul|div)"))
+            })
+        })
+        .collect::<anyhow::Result<_>>()?;
+    anyhow::ensure!(!ops.is_empty(), "--ops needs at least one op");
+
+    let fmts_arg = args.flag("formats", "fixed8,fixed16,fp32");
+    let fmts: Vec<NumFmt> = fmts_arg
+        .split(',')
+        .map(|s| s.trim())
+        .filter(|s| !s.is_empty())
+        .map(|s| {
+            fmt_from_name(s).ok_or_else(|| {
+                anyhow::Error::msg(format!(
+                    "unknown format `{s}` (use fixed8|fixed16|fixed32|fp16|fp32|fp64)"
+                ))
+            })
+        })
+        .collect::<anyhow::Result<_>>()?;
+    anyhow::ensure!(!fmts.is_empty(), "--formats needs at least one format");
+
+    let out: PathBuf = args.flag("out", "BENCH_microcode.json").into();
+
+    println!(
+        "microcode synthesis — equality saturation over the bit-serial gate programs"
+    );
+    println!();
+    println!(
+        "{:<12} {:<5} {:<8} {:>9} {:>9} {:>9} {:>9}  {}",
+        "set", "op", "format", "cyc base", "cyc opt", "gat base", "gat opt", "delta"
+    );
+    let mut cells = Vec::new();
+    for &set in &sets {
+        for &op in &ops {
+            for &fmt in &fmts {
+                let opt = synth::optimized_op_program(op, fmt, set);
+                let s = &opt.stats;
+                // The acceptance contract: either a strictly positive
+                // improvement or an *explicit* zero-delta line — never a
+                // silently absent cell.
+                let delta = if s.cycles_delta() > 0 {
+                    format!(
+                        "-{} cycles (-{:.1}%)",
+                        s.cycles_delta(),
+                        100.0 * s.cycles_delta() as f64 / s.baseline_cycles as f64
+                    )
+                } else {
+                    "zero delta (hand microcode already optimal under the rule set)"
+                        .to_string()
+                };
+                println!(
+                    "{:<12} {:<5} {:<8} {:>9} {:>9} {:>9} {:>9}  {}",
+                    set_key(set),
+                    op.name(),
+                    fmt.name(),
+                    s.baseline_cycles,
+                    s.optimized_cycles,
+                    s.baseline_gates,
+                    s.optimized_gates,
+                    delta
+                );
+                cells.push(Json::obj(vec![
+                    ("set", Json::s(set_key(set))),
+                    ("op", Json::s(op.name())),
+                    ("fmt", Json::s(fmt.name())),
+                    ("baseline_cycles", Json::i(s.baseline_cycles as i64)),
+                    ("optimized_cycles", Json::i(s.optimized_cycles as i64)),
+                    ("cycles_delta", Json::i(s.cycles_delta() as i64)),
+                    ("baseline_gates", Json::i(s.baseline_gates as i64)),
+                    ("optimized_gates", Json::i(s.optimized_gates as i64)),
+                    ("egraph_nodes", Json::i(s.egraph_nodes as i64)),
+                    ("egraph_classes", Json::i(s.egraph_classes as i64)),
+                    ("peak_scratch", Json::i(s.peak_scratch as i64)),
+                    ("improved", Json::Bool(s.improved)),
+                ]));
+            }
+        }
+    }
+
+    // The MAC cost (one mul + one accumulate-add) is what every matmul /
+    // CNN / decode schedule multiplies by, so its delta is the headline
+    // number. Only meaningful when both constituent ops were requested.
+    let mut macs = Vec::new();
+    if ops.contains(&FixedOp::Add) && ops.contains(&FixedOp::Mul) {
+        println!();
+        println!("cycles per MAC (mul + accumulate add):");
+        for &set in &sets {
+            for &fmt in &fmts {
+                let base = scalar_costs(fmt, set);
+                let opt = synth::optimized_costs(fmt, set);
+                let base_mac = base.add_cycles + base.mul_cycles;
+                let opt_mac = opt.add_cycles + opt.mul_cycles;
+                let saved = base_mac - opt_mac;
+                let delta = if saved > 0 {
+                    format!("-{saved} (-{:.1}%)", 100.0 * saved as f64 / base_mac as f64)
+                } else {
+                    "zero delta".to_string()
+                };
+                println!(
+                    "  {:<12} {:<8} {:>9} -> {:<9} {}",
+                    set_key(set),
+                    fmt.name(),
+                    base_mac,
+                    opt_mac,
+                    delta
+                );
+                macs.push(Json::obj(vec![
+                    ("set", Json::s(set_key(set))),
+                    ("fmt", Json::s(fmt.name())),
+                    ("baseline_mac_cycles", Json::i(base_mac as i64)),
+                    ("optimized_mac_cycles", Json::i(opt_mac as i64)),
+                    ("mac_cycles_delta", Json::i(saved as i64)),
+                ]));
+            }
+        }
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::s("microcode")),
+        ("schema", Json::i(1)),
+        ("cells", Json::arr(cells)),
+        ("mac", Json::arr(macs)),
+    ]);
+    std::fs::write(&out, format!("{}\n", doc.pretty()))
+        .with_context(|| format!("writing {}", out.display()))?;
+    eprintln!("opt: wrote {}", out.display());
+    Ok(())
 }
 
 /// Attach the in-memory LRU tier (`--mem-cache N`, default 256 entries,

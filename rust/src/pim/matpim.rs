@@ -119,7 +119,13 @@ impl MatmulModel {
     /// Build the schedule model for `n×n` matrices of `fmt` on `set`
     /// hardware with `cols`-wide crossbars.
     pub fn new(n: u64, fmt: NumFmt, set: GateSet, cols: u64) -> Self {
-        let c = scalar_costs(fmt, set);
+        Self::with_costs(n, fmt, set, cols, scalar_costs(fmt, set))
+    }
+
+    /// Same schedule, but over caller-supplied scalar costs — how the
+    /// synthesizer's optimized microcode ([`crate::synth`]) reuses the
+    /// Figure 5 schedule without re-deriving it.
+    pub fn with_costs(n: u64, fmt: NumFmt, set: GateSet, cols: u64, c: ScalarCosts) -> Self {
         let bits = fmt.bits() as u64;
         let costs = set.costs();
         // Broadcast of one element: N bit-copies into the working field.
@@ -180,25 +186,31 @@ pub struct CnnPimModel {
     pub set: GateSet,
     /// Multiply-accumulates per inference (or per training step).
     pub macs: f64,
+    /// Scalar add/mul costs the MAC is built from — the hand-derived
+    /// microcode by default, the synthesizer's via [`Self::with_costs`].
+    costs: ScalarCosts,
 }
 
 impl CnnPimModel {
     pub fn new(fmt: NumFmt, set: GateSet, macs: f64) -> Self {
-        CnnPimModel { fmt, set, macs }
+        Self::with_costs(fmt, set, macs, scalar_costs(fmt, set))
+    }
+
+    /// The same upper-bound model over caller-supplied scalar costs.
+    pub fn with_costs(fmt: NumFmt, set: GateSet, macs: f64, costs: ScalarCosts) -> Self {
+        CnnPimModel { fmt, set, macs, costs }
     }
 
     /// Cycles of one MAC (vectored mul + add).
     pub fn mac_cycles(&self) -> u64 {
-        let c = scalar_costs(self.fmt, self.set);
-        c.mul_cycles + c.add_cycles
+        self.costs.mul_cycles + self.costs.add_cycles
     }
 
     /// Logic gates of one MAC (vectored mul + add) — the per-MAC gate
     /// count the executed conv engine ([`crate::pim::conv`]) must
     /// reproduce exactly.
     pub fn mac_gates(&self) -> u64 {
-        let c = scalar_costs(self.fmt, self.set);
-        c.mul_gates + c.add_gates
+        self.costs.mul_gates + self.costs.add_gates
     }
 
     /// Images (inferences / training samples) per second.
@@ -210,8 +222,7 @@ impl CnnPimModel {
 
     /// Energy per image, joules.
     pub fn energy_per_image(&self) -> f64 {
-        let c = scalar_costs(self.fmt, self.set);
-        self.macs * (c.mul_gates + c.add_gates) as f64 * self.set.costs().gate_energy_j
+        self.macs * self.mac_gates() as f64 * self.set.costs().gate_energy_j
     }
 
     /// Images per second per watt.

@@ -255,18 +255,42 @@ impl NetGraph {
         g
     }
 
+    /// LeNet-5 (32×32 grayscale input), down-scaled with the same
+    /// discipline as [`NetGraph::alexnet`]. Small enough to execute at
+    /// scale 1 in CI; the classifier head keeps its 10 classes at every
+    /// scale.
+    pub fn lenet(scale: u32) -> NetGraph {
+        let scale = scale.max(1);
+        let ch = |c: u32| (c / scale).max(1);
+        let sp = (32 / scale).max(1);
+        let mut g = NetGraph::new(&format!("lenet-s{scale}"), 1, sp, sp);
+        g.conv("c1", ch(6), 5, 1, 0)
+            .relu("c1.relu")
+            .pool("p1", 2, 2)
+            .conv("c2", ch(16), 5, 1, 0)
+            .relu("c2.relu")
+            .pool("p2", 2, 2)
+            .fc("f3", ch(120))
+            .relu("f3.relu")
+            .fc("f4", ch(84))
+            .relu("f4.relu")
+            .fc("f5", 10);
+        g
+    }
+
     /// Look up a model by name (the CLI/service selector). Only models
     /// with a full executable layer chain qualify.
     pub fn model(name: &str, scale: u32) -> Option<NetGraph> {
         match name {
             "alexnet" => Some(NetGraph::alexnet(scale)),
+            "lenet" => Some(NetGraph::lenet(scale)),
             _ => None,
         }
     }
 
     /// Names accepted by [`NetGraph::model`].
     pub fn model_names() -> &'static [&'static str] {
-        &["alexnet"]
+        &["alexnet", "lenet"]
     }
 }
 
@@ -1237,6 +1261,51 @@ mod tests {
     }
 
     #[test]
+    fn lenet_graph_shapes() {
+        // Full-scale LeNet-5 mirrors the textbook shape chain.
+        let g = NetGraph::lenet(1);
+        assert_eq!(g.input, (1, 32, 32));
+        assert_eq!(g.layers[0].out_shape, (6, 28, 28)); // c1
+        assert_eq!(g.layers[2].out_shape, (6, 14, 14)); // p1
+        assert_eq!(g.layers[3].out_shape, (16, 10, 10)); // c2
+        assert_eq!(g.layers[5].out_shape, (16, 5, 5)); // p2
+        assert_eq!(g.shape(), (10, 1, 1));
+        let macs: Vec<&str> = g
+            .layers
+            .iter()
+            .filter(|l| l.macs() > 0)
+            .map(|l| l.kind())
+            .collect();
+        assert_eq!(macs, ["conv", "conv", "fc", "fc", "fc"]);
+        // Scaled graphs stay valid all the way down; the head keeps its
+        // 10 classes.
+        for scale in [2, 4, 8, 32, 100] {
+            let g = NetGraph::lenet(scale);
+            assert!(g.layers.iter().all(|l| l.out_elems() > 0), "scale {scale}");
+            assert_eq!(g.layers.len(), 11, "scale {scale}");
+            assert_eq!(g.shape(), (10, 1, 1), "scale {scale}");
+        }
+        assert!(NetGraph::model("lenet", 16).is_some());
+        assert_eq!(NetGraph::model_names(), &["alexnet", "lenet"]);
+    }
+
+    #[test]
+    fn lenet_scaled_bit_exact() {
+        // The zoo entry is executable, not just a shape table: a scaled
+        // LeNet runs end to end on the crossbar bit-identically to the
+        // host reference.
+        let g = NetGraph::lenet(4);
+        for set in GateSet::all() {
+            let fmt = NumFmt::Fixed(8);
+            let (inputs, weights) = seeded_net_operands(&g, fmt, 11, 1);
+            let run =
+                execute_net(&g, fmt, set, &inputs, &weights, &NetExecOpts::default()).unwrap();
+            let expect = reference_net(&g, fmt, &inputs[0], &weights);
+            assert_eq!(run.outputs[0], expect, "{set:?}");
+        }
+    }
+
+    #[test]
     fn pool_program_cost_split() {
         for set in GateSet::all() {
             for fmt in [NumFmt::Fixed(8), NumFmt::Float(Format::FP16)] {
@@ -1266,7 +1335,7 @@ mod tests {
                 assert_eq!(run.outputs[0], expect, "{set:?} {fmt:?}");
                 // Per-layer MAC costs equal the analytic model's exactly.
                 for lr in run.layers.iter().filter(|l| l.macs > 0) {
-                    let m = CnnPimModel { fmt, set, macs: lr.macs as f64 };
+                    let m = CnnPimModel::new(fmt, set, lr.macs as f64);
                     assert_eq!(lr.mac_cycles, m.mac_cycles(), "{}", lr.name);
                     assert_eq!(lr.mac_gates, m.mac_gates(), "{}", lr.name);
                     let c = scalar_costs(fmt, set);

@@ -192,11 +192,12 @@ impl EvalService {
     }
 
     /// [`submit`](EvalService::submit) with a cooperative evaluation
-    /// deadline. Long-running evaluations (`net-exec`) poll the deadline
-    /// between tiles and abort with a [`crate::util::deadline::DEADLINE_EXPIRED`]
-    /// error once it passes; cheap request kinds ignore it (they finish
-    /// long before any realistic budget). The serve daemon derives the
-    /// deadline from the wire-level `deadline_ms` field.
+    /// deadline. Long-running evaluations poll the deadline — `net-exec`
+    /// between tiles, campaigns between sweep points — and abort with a
+    /// [`crate::util::deadline::DEADLINE_EXPIRED`] error once it passes;
+    /// cheap request kinds ignore it (they finish long before any
+    /// realistic budget). The serve daemon derives the deadline from the
+    /// wire-level `deadline_ms` field.
     pub fn submit_deadline(&self, req: &EvalRequest, deadline: Deadline) -> EvalResponse {
         let t0 = Instant::now();
         let mut resp = match req {
@@ -207,7 +208,7 @@ impl EvalService {
                 seed,
             } => self.handle_experiment(req, id, *fast, *analytic, *seed),
             EvalRequest::SweepPoint { config } => self.handle_sweep_point(config),
-            EvalRequest::Campaign { campaign } => self.handle_campaign(campaign),
+            EvalRequest::Campaign { campaign } => self.handle_campaign(campaign, deadline),
             EvalRequest::ConvExec(spec) => self.handle_conv_exec(req, spec),
             EvalRequest::NetExec(spec) => self.handle_net_exec(req, spec, deadline),
             EvalRequest::Compare {
@@ -265,8 +266,21 @@ impl EvalService {
         points: &[SweepPoint],
         on_result: &mut (dyn FnMut(usize, &PointResult) -> bool + Send),
     ) -> SweepOutcome {
+        self.run_campaign_deadline(points, Deadline::none(), on_result)
+    }
+
+    /// [`run_campaign`](EvalService::run_campaign) under a cooperative
+    /// deadline, polled between points (see
+    /// [`sweep::run_points_deadline`]) — how a wire-level `deadline_ms`
+    /// bounds a whole campaign evaluation, not just its queue wait.
+    pub fn run_campaign_deadline(
+        &self,
+        points: &[SweepPoint],
+        deadline: Deadline,
+        on_result: &mut (dyn FnMut(usize, &PointResult) -> bool + Send),
+    ) -> SweepOutcome {
         let jobs = resolve_jobs(self.jobs, Some(points.len()));
-        sweep::run_points(points, jobs, self.cache.as_ref(), on_result)
+        sweep::run_points_deadline(points, jobs, self.cache.as_ref(), deadline, on_result)
     }
 
     /// Try the response cache for a deterministic request; `config` is
@@ -417,7 +431,7 @@ impl EvalService {
         }
     }
 
-    fn handle_campaign(&self, campaign: &CampaignRef) -> EvalResponse {
+    fn handle_campaign(&self, campaign: &CampaignRef, deadline: Deadline) -> EvalResponse {
         let campaign = match campaign {
             CampaignRef::Builtin(name) => match Campaign::builtin(name) {
                 Some(c) => c,
@@ -439,7 +453,7 @@ impl EvalService {
         };
         let points = campaign.points();
         let mut rows: Vec<PointResult> = Vec::with_capacity(points.len());
-        let outcome = self.run_campaign(&points, &mut |_, r| {
+        let outcome = self.run_campaign_deadline(&points, deadline, &mut |_, r| {
             rows.push(r.clone());
             true
         });
@@ -1479,11 +1493,12 @@ mod tests {
     #[test]
     fn net_exec_unknown_model_is_a_structured_error() {
         let service = EvalService::new().with_cache(None);
-        let resp = service.submit(&EvalRequest::NetExec(NetExecSpec::new("lenet")));
+        let resp = service.submit(&EvalRequest::NetExec(NetExecSpec::new("vgg")));
         assert!(!resp.meta.ok);
         let err = resp.meta.error.as_deref().unwrap();
         assert!(err.contains("no executable graph"), "got: {err}");
-        assert!(err.contains("alexnet"), "got: {err}");
+        // The hint lists every executable model.
+        assert!(err.contains("alexnet") && err.contains("lenet"), "got: {err}");
     }
 
     #[test]

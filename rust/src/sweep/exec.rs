@@ -22,6 +22,7 @@ use anyhow::Result;
 
 use super::point::{PointResult, SweepPoint};
 use crate::service::cache::ResultCache;
+use crate::util::deadline::Deadline;
 use crate::util::pool::Pool;
 
 /// Error message marking a point that was *skipped* because the output
@@ -166,6 +167,26 @@ pub fn run_points(
     cache: Option<&ResultCache>,
     on_result: &mut (dyn FnMut(usize, &PointResult) -> bool + Send),
 ) -> SweepOutcome {
+    run_points_deadline(points, jobs, cache, Deadline::none(), on_result)
+}
+
+/// [`run_points`] under a cooperative [`Deadline`], polled between
+/// points — the same preemption granularity the net executor uses
+/// between tiles. Points that have not started when the deadline passes
+/// fail with a [`DEADLINE_EXPIRED`]-marked error (a real failure, not a
+/// [`CANCELED`] skip: the campaign's budget was exceeded and the caller
+/// must see that), while points already evaluating run to completion.
+/// The serve layer classifies such campaign errors as `deadline`, like a
+/// queue-wait expiry.
+///
+/// [`DEADLINE_EXPIRED`]: crate::util::deadline::DEADLINE_EXPIRED
+pub fn run_points_deadline(
+    points: &[SweepPoint],
+    jobs: usize,
+    cache: Option<&ResultCache>,
+    deadline: Deadline,
+    on_result: &mut (dyn FnMut(usize, &PointResult) -> bool + Send),
+) -> SweepOutcome {
     let hits = AtomicUsize::new(0);
     let computed = AtomicUsize::new(0);
     let jobs = jobs.max(1).min(points.len().max(1));
@@ -176,6 +197,10 @@ pub fn run_points(
         for (i, point) in points.iter().enumerate() {
             let r = if stop {
                 Err(anyhow::Error::msg(CANCELED))
+            } else if let Err(e) =
+                deadline.check(&format!("sweep point {}", point.label()))
+            {
+                Err(e)
             } else {
                 eval_one(point, cache, &hits, &computed)
             };
@@ -207,6 +232,10 @@ pub fn run_points(
             Box::new(move || {
                 let r = if emit.lock().unwrap().stop {
                     Err(anyhow::Error::msg(CANCELED))
+                } else if let Err(e) =
+                    deadline.check(&format!("sweep point {}", point.label()))
+                {
+                    Err(e)
                 } else {
                     eval_one(point, cache, hits, computed)
                 };
@@ -273,6 +302,41 @@ mod tests {
             let direct = p.eval().unwrap();
             assert_eq!(r.as_ref().unwrap(), &direct);
         }
+    }
+
+    #[test]
+    fn expired_deadline_fails_points_with_marker() {
+        use crate::util::deadline::DEADLINE_EXPIRED;
+        let points = Campaign::builtin("fig4").unwrap().points();
+        for jobs in [1, 3] {
+            let mut emitted = 0usize;
+            let outcome = run_points_deadline(
+                &points,
+                jobs,
+                None,
+                Deadline::in_ms(0),
+                &mut |_, _| {
+                    emitted += 1;
+                    true
+                },
+            );
+            // Nothing starts once the budget is gone; the errors are real
+            // failures carrying the deadline marker, not canceled skips.
+            assert_eq!(emitted, 0, "jobs {jobs}");
+            assert_eq!(outcome.computed, 0, "jobs {jobs}");
+            assert_eq!(outcome.canceled(), 0, "jobs {jobs}");
+            assert_eq!(outcome.failures(), points.len(), "jobs {jobs}");
+            for r in &outcome.results {
+                let msg = format!("{:#}", r.as_ref().unwrap_err());
+                assert!(msg.contains(DEADLINE_EXPIRED), "{msg}");
+                assert!(msg.contains("sweep point"), "{msg}");
+            }
+        }
+        // A never-expiring deadline is exactly run_points.
+        let outcome =
+            run_points_deadline(&points, 1, None, Deadline::none(), &mut |_, _| true);
+        assert_eq!(outcome.failures(), 0);
+        assert_eq!(outcome.computed, points.len());
     }
 
     #[test]

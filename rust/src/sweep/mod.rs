@@ -54,6 +54,8 @@ pub mod report;
 // redesign; re-exported here because sweep callers predate the move.
 pub use crate::service::cache::ResultCache;
 pub use campaign::{ArchSpec, Campaign, CnnModel, GpuBaseline, GpuMode, WorkloadSpec};
-pub use exec::{eval_point_cached, is_canceled, run_points, SweepOutcome, CANCELED};
+pub use exec::{
+    eval_point_cached, is_canceled, run_points, run_points_deadline, SweepOutcome, CANCELED,
+};
 pub use point::{BackendCol, PointResult, SweepPoint};
 pub use report::{OutputFormat, Streamer};

@@ -1,0 +1,311 @@
+//! A hand-rolled e-graph over the boolean gate IR.
+//!
+//! The offline registry has no `egg`, so this is the classic
+//! hashcons + union-find construction (the same shape
+//! `mikeurbach/egg-netlist-synthesizer` and lime's
+//! `crates/generic/src/egraph/` build on): every [`Node`] is stored once
+//! under its canonical form, [`EGraph::union`] merges equivalence
+//! classes, and [`EGraph::rebuild`] restores congruence closure
+//! (`f(a) ≡ f(b)` whenever `a ≡ b`) after a batch of unions. Everything
+//! iterates in node-insertion order and unions pick the *smaller* class
+//! id as representative, so saturation and extraction are deterministic
+//! across runs — a requirement, because extracted programs feed cycle
+//! counts into cached/golden-pinned reports.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::pim::isa::Col;
+
+/// An e-class id (also the id of the node that created the class).
+pub type Id = u32;
+
+/// One boolean operator node over e-class operands.
+///
+/// The operator set mirrors [`crate::pim::isa::Instr`]'s *logic* subset —
+/// `Copy` is identity (it never enters the graph) and `Set` becomes
+/// [`Node::Const`]. Commutative operands are kept sorted so equal terms
+/// hashcons to one node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Node {
+    /// A constant column (`Set`).
+    Const(bool),
+    /// The initial value of input column `c` (read before any write).
+    Var(Col),
+    /// `!a`.
+    Not(Id),
+    /// `!(a | b)` — memristive MAGIC NOR.
+    Nor2([Id; 2]),
+    /// `!(a | b | c)` — memristive three-input NOR.
+    Nor3([Id; 3]),
+    /// `maj(a, b, c)` — in-DRAM triple-row-activation majority.
+    Maj3([Id; 3]),
+}
+
+impl Node {
+    /// Operand classes, in stored order.
+    pub fn children(&self) -> &[Id] {
+        match self {
+            Node::Const(_) | Node::Var(_) => &[],
+            Node::Not(a) => std::slice::from_ref(a),
+            Node::Nor2(c) => c,
+            Node::Nor3(c) | Node::Maj3(c) => c,
+        }
+    }
+
+    /// True for leaf nodes (no operands).
+    pub fn is_leaf(&self) -> bool {
+        matches!(self, Node::Const(_) | Node::Var(_))
+    }
+}
+
+/// The e-graph: nodes hashconsed under canonical form + a union-find over
+/// class ids.
+#[derive(Clone, Debug, Default)]
+pub struct EGraph {
+    /// Node `i` created class `i`; `nodes[i]` is kept canonical by
+    /// [`EGraph::rebuild`].
+    nodes: Vec<Node>,
+    /// Union-find parent pointers over class ids.
+    uf: Vec<Id>,
+    /// Canonical node → class id.
+    memo: HashMap<Node, Id>,
+}
+
+impl EGraph {
+    pub fn new() -> EGraph {
+        EGraph::default()
+    }
+
+    /// Number of nodes ever added (classes ≤ nodes).
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Number of live (representative) classes.
+    pub fn class_count(&self) -> usize {
+        (0..self.uf.len() as Id).filter(|&i| self.uf[i as usize] == i).count()
+    }
+
+    /// The node that created slot `id` (canonical after a rebuild).
+    pub fn node(&self, id: Id) -> Node {
+        self.nodes[id as usize]
+    }
+
+    /// Representative of `id`'s class (path-halving walk).
+    pub fn find(&self, mut id: Id) -> Id {
+        while self.uf[id as usize] != id {
+            id = self.uf[id as usize];
+        }
+        id
+    }
+
+    fn find_compress(&mut self, mut id: Id) -> Id {
+        while self.uf[id as usize] != id {
+            let gp = self.uf[self.uf[id as usize] as usize];
+            self.uf[id as usize] = gp;
+            id = gp;
+        }
+        id
+    }
+
+    /// The canonical form of a node under the current union-find: children
+    /// replaced by representatives, commutative operands sorted.
+    pub fn canonical(&self, node: Node) -> Node {
+        match node {
+            Node::Const(_) | Node::Var(_) => node,
+            Node::Not(a) => Node::Not(self.find(a)),
+            Node::Nor2(mut c) => {
+                for x in &mut c {
+                    *x = self.find(*x);
+                }
+                c.sort_unstable();
+                Node::Nor2(c)
+            }
+            Node::Nor3(mut c) => {
+                for x in &mut c {
+                    *x = self.find(*x);
+                }
+                c.sort_unstable();
+                Node::Nor3(c)
+            }
+            Node::Maj3(mut c) => {
+                for x in &mut c {
+                    *x = self.find(*x);
+                }
+                c.sort_unstable();
+                Node::Maj3(c)
+            }
+        }
+    }
+
+    /// Insert a node (hashconsed); returns its class representative.
+    pub fn add(&mut self, node: Node) -> Id {
+        let node = self.canonical(node);
+        if let Some(&id) = self.memo.get(&node) {
+            return self.find_compress(id);
+        }
+        let id = self.nodes.len() as Id;
+        assert!(id < Id::MAX, "e-graph exceeded {} nodes", Id::MAX);
+        self.nodes.push(node);
+        self.uf.push(id);
+        self.memo.insert(node, id);
+        id
+    }
+
+    /// Merge two classes. Returns true if they were distinct. The smaller
+    /// id becomes the representative (deterministic across runs).
+    pub fn union(&mut self, a: Id, b: Id) -> bool {
+        let (ra, rb) = (self.find_compress(a), self.find_compress(b));
+        if ra == rb {
+            return false;
+        }
+        let (keep, merge) = if ra < rb { (ra, rb) } else { (rb, ra) };
+        self.uf[merge as usize] = keep;
+        true
+    }
+
+    /// Restore congruence closure after a batch of unions: re-canonicalize
+    /// every node and union classes whose nodes collide, to fixpoint.
+    pub fn rebuild(&mut self) {
+        loop {
+            let mut changed = false;
+            self.memo.clear();
+            for i in 0..self.nodes.len() {
+                let canon = {
+                    let n = self.nodes[i];
+                    self.canonical(n)
+                };
+                self.nodes[i] = canon;
+                let class = self.find_compress(i as Id);
+                match self.memo.get(&canon) {
+                    Some(&prev) => {
+                        let prev = self.find_compress(prev);
+                        if prev != class {
+                            self.union(prev, class);
+                            changed = true;
+                        }
+                        // Keep the memo entry pointing at the (new) root.
+                        let root = self.find_compress(prev);
+                        self.memo.insert(canon, root);
+                    }
+                    None => {
+                        self.memo.insert(canon, class);
+                    }
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+    }
+
+    /// Per-class node lists under the current (rebuilt) union-find, each
+    /// canonical and deduplicated, keyed and ordered by representative id.
+    pub fn class_index(&self) -> ClassIndex {
+        let mut map: BTreeMap<Id, Vec<Node>> = BTreeMap::new();
+        for i in 0..self.nodes.len() {
+            let root = self.find(i as Id);
+            let canon = self.canonical(self.nodes[i]);
+            let entry = map.entry(root).or_default();
+            if !entry.contains(&canon) {
+                entry.push(canon);
+            }
+        }
+        ClassIndex { map }
+    }
+}
+
+/// A per-class view of the graph, built once per saturation iteration.
+#[derive(Clone, Debug)]
+pub struct ClassIndex {
+    map: BTreeMap<Id, Vec<Node>>,
+}
+
+impl ClassIndex {
+    /// The canonical nodes of class `root` (root must be a representative).
+    pub fn nodes(&self, root: Id) -> &[Node] {
+        self.map.get(&root).map_or(&[], |v| v.as_slice())
+    }
+
+    /// The constant value of a class, if it contains one.
+    pub fn const_of(&self, root: Id) -> Option<bool> {
+        self.nodes(root).iter().find_map(|n| match n {
+            Node::Const(b) => Some(*b),
+            _ => None,
+        })
+    }
+
+    /// Classes whose negation lives in class `root`: every `y` with
+    /// `Not(y) ∈ root`.
+    pub fn negated_in(&self, root: Id) -> impl Iterator<Item = Id> + '_ {
+        self.nodes(root).iter().filter_map(|n| match n {
+            Node::Not(y) => Some(*y),
+            _ => None,
+        })
+    }
+
+    /// `Nor2` operand pairs stored in class `root`.
+    pub fn nor2s_in(&self, root: Id) -> impl Iterator<Item = [Id; 2]> + '_ {
+        self.nodes(root).iter().filter_map(|n| match n {
+            Node::Nor2(c) => Some(*c),
+            _ => None,
+        })
+    }
+
+    /// Iterate (representative, nodes) in id order.
+    pub fn iter(&self) -> impl Iterator<Item = (Id, &[Node])> {
+        self.map.iter().map(|(&k, v)| (k, v.as_slice()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hashcons_dedupes_and_sorts_commutative() {
+        let mut g = EGraph::new();
+        let a = g.add(Node::Var(0));
+        let b = g.add(Node::Var(1));
+        let n1 = g.add(Node::Nor2([a, b]));
+        let n2 = g.add(Node::Nor2([b, a]));
+        assert_eq!(n1, n2);
+        assert_eq!(g.len(), 3);
+        assert_eq!(g.add(Node::Var(0)), a);
+    }
+
+    #[test]
+    fn union_prefers_smaller_id_and_rebuild_closes_congruence() {
+        let mut g = EGraph::new();
+        let a = g.add(Node::Var(0));
+        let b = g.add(Node::Var(1));
+        let fa = g.add(Node::Not(a));
+        let fb = g.add(Node::Not(b));
+        assert_ne!(g.find(fa), g.find(fb));
+        assert!(g.union(a, b));
+        g.rebuild();
+        // a ≡ b forces Not(a) ≡ Not(b).
+        assert_eq!(g.find(fa), g.find(fb));
+        assert_eq!(g.find(b), a, "smaller id is the representative");
+        assert!(!g.union(fa, fb), "already merged");
+    }
+
+    #[test]
+    fn class_index_exposes_consts_and_negations() {
+        let mut g = EGraph::new();
+        let a = g.add(Node::Var(0));
+        let t = g.add(Node::Const(true));
+        let na = g.add(Node::Not(a));
+        g.union(na, t); // pretend !a ≡ 1
+        g.rebuild();
+        let idx = g.class_index();
+        let root = g.find(na);
+        assert_eq!(idx.const_of(root), Some(true));
+        assert_eq!(idx.negated_in(root).collect::<Vec<_>>(), vec![g.find(a)]);
+        assert_eq!(idx.const_of(g.find(a)), None);
+    }
+}

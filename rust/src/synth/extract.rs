@@ -1,0 +1,157 @@
+//! Cost extraction: pick the cheapest representative node per e-class.
+//!
+//! Costs mirror the accounting [`crate::pim::isa::Program`] already
+//! tracks — cycles from [`GateSet::costs`] (with `Nor3` charged at the
+//! `nor2` rate, exactly like `Program::cycles_for`) plus a logic-gate
+//! count as tie-break. Illegal opcodes (MAJ on memristive, NOR in DRAM)
+//! carry the same `u64::MAX / 4` sentinel the cost tables use, so a
+//! choice that would not validate can never beat a legal one.
+//!
+//! Extraction is the usual bottom-up fixpoint (the same shape as the
+//! egg-netlist-synthesizer's cell-library extractor): a class's cost is
+//! the cheapest `node cost + Σ child class costs` over its nodes,
+//! relaxed until nothing improves. Iteration is over the deterministic
+//! [`ClassIndex`], so ties resolve identically on every run.
+
+use std::collections::BTreeMap;
+
+use crate::pim::gates::GateSet;
+use crate::synth::egraph::{EGraph, Id, Node};
+
+/// Lexicographic (cycles, logic gates): fewer cycles wins, gates break ties.
+pub type Cost = (u64, u64);
+
+/// Costs at or above this are considered unrealizable for the gate set.
+pub const INFEASIBLE: u64 = u64::MAX / 8;
+
+/// The intrinsic cost of one node (children excluded) under a gate set.
+pub fn node_cost(set: GateSet, node: &Node) -> Cost {
+    let c = set.costs();
+    match node {
+        Node::Const(_) => (c.set, 0),
+        Node::Var(_) => (0, 0),
+        Node::Not(_) => (c.not, 1),
+        // cycles_for charges Nor3 at the nor2 rate: one wide gate.
+        Node::Nor2(_) | Node::Nor3(_) => (c.nor2, 1),
+        Node::Maj3(_) => (c.maj3, 1),
+    }
+}
+
+fn add(a: Cost, b: Cost) -> Cost {
+    (a.0.saturating_add(b.0), a.1.saturating_add(b.1))
+}
+
+/// The per-class choices of a completed extraction.
+#[derive(Clone, Debug)]
+pub struct Extraction {
+    choice: BTreeMap<Id, (Cost, Node)>,
+}
+
+impl Extraction {
+    /// The chosen node for a class (key must be a representative id).
+    pub fn node(&self, class: Id) -> Option<&Node> {
+        self.choice.get(&class).map(|(_, n)| n)
+    }
+
+    /// The accumulated tree cost of a class under the chosen nodes.
+    pub fn cost(&self, class: Id) -> Option<Cost> {
+        self.choice.get(&class).map(|(c, _)| *c)
+    }
+}
+
+/// Extract cheapest implementations for `roots` (and everything they
+/// reach). Returns `None` if any root is unrealizable on this gate set —
+/// the caller falls back to the original program.
+pub fn extract(g: &EGraph, set: GateSet, roots: &[Id]) -> Option<Extraction> {
+    let idx = g.class_index();
+    let mut best: BTreeMap<Id, (Cost, Node)> = BTreeMap::new();
+    loop {
+        let mut changed = false;
+        for (root, nodes) in idx.iter() {
+            for node in nodes {
+                let mut cost = node_cost(set, node);
+                let mut resolved = true;
+                for &child in node.children() {
+                    match best.get(&g.find(child)) {
+                        Some((c, _)) => cost = add(cost, *c),
+                        None => {
+                            resolved = false;
+                            break;
+                        }
+                    }
+                }
+                if !resolved {
+                    continue;
+                }
+                // Strict improvement only: at equal cost the first node
+                // found (class-index order) sticks, deterministically.
+                let improves = best.get(&root).map_or(true, |(c, _)| cost < *c);
+                if improves {
+                    best.insert(root, (cost, *node));
+                    changed = true;
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    for &r in roots {
+        let (cost, _) = best.get(&g.find(r))?;
+        if cost.0 >= INFEASIBLE {
+            return None;
+        }
+    }
+    Some(Extraction { choice: best })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::rules;
+
+    #[test]
+    fn extracts_var_for_double_negation() {
+        let mut g = EGraph::new();
+        let x = g.add(Node::Var(0));
+        let nx = g.add(Node::Not(x));
+        let nnx = g.add(Node::Not(nx));
+        rules::saturate(&mut g, rules::for_set(GateSet::MemristiveNor), 8, 100_000);
+        let ex = extract(&g, GateSet::MemristiveNor, &[nnx]).unwrap();
+        assert_eq!(ex.cost(g.find(nnx)), Some((0, 0)), "!!x is just the input column");
+        assert!(matches!(ex.node(g.find(nnx)), Some(Node::Var(0))));
+    }
+
+    #[test]
+    fn prefers_wide_nor_over_or_chain() {
+        // nor(!nor(a,b), c): 3 gates / 6 cycles as written, 1 gate / 2
+        // cycles once nor3-form has run.
+        let mut g = EGraph::new();
+        let a = g.add(Node::Var(0));
+        let b = g.add(Node::Var(1));
+        let c = g.add(Node::Var(2));
+        let nab = g.add(Node::Nor2([a, b]));
+        let or_ab = g.add(Node::Not(nab));
+        let root = g.add(Node::Nor2([or_ab, c]));
+        rules::saturate(&mut g, rules::for_set(GateSet::MemristiveNor), 8, 100_000);
+        let ex = extract(&g, GateSet::MemristiveNor, &[root]).unwrap();
+        assert_eq!(ex.cost(g.find(root)), Some((2, 1)));
+        assert!(matches!(ex.node(g.find(root)), Some(Node::Nor3(_))));
+    }
+
+    #[test]
+    fn illegal_ops_are_unrealizable() {
+        // A MAJ3 over fresh vars cannot be realized on the NOR set (no
+        // rule rewrites a general majority into NORs).
+        let mut g = EGraph::new();
+        let a = g.add(Node::Var(0));
+        let b = g.add(Node::Var(1));
+        let c = g.add(Node::Var(2));
+        let root = g.add(Node::Maj3([a, b, c]));
+        rules::saturate(&mut g, rules::for_set(GateSet::MemristiveNor), 8, 100_000);
+        assert!(extract(&g, GateSet::MemristiveNor, &[root]).is_none());
+        // ...but it is realizable in DRAM.
+        let ex = extract(&g, GateSet::DramMaj, &[root]).unwrap();
+        assert_eq!(ex.cost(g.find(root)), Some((4, 1)));
+    }
+}

@@ -1,0 +1,27 @@
+//! Equality-saturation microcode synthesizer (ROADMAP item 1).
+//!
+//! Every analytic number in this repo bottoms out in the cycle/gate
+//! counts of the hand-derived bit-serial microcode in
+//! [`crate::pim::fixed`] / [`crate::pim::float`]. This subsystem makes
+//! that per-op cost a *search result* instead of a constant:
+//!
+//! * [`egraph`] — a hand-rolled e-graph (hashcons + union-find +
+//!   congruence-closure rebuild) over the boolean gate IR;
+//! * [`rules`] — sound per-gate-set rewrite rules (NOR identities,
+//!   MAJ/NOT identities, double negation, absorption, constant folding)
+//!   plus the saturation driver; CSE falls out of hashconsing;
+//! * [`extract`] — cheapest-per-class extraction against the same
+//!   cycles/gates accounting [`crate::pim::isa::Program`] tracks;
+//! * [`opt`] — the program-level pipeline: abstract → saturate →
+//!   extract → emit → verify bit-identical on the scalar crossbar →
+//!   never return anything costlier than the input.
+//!
+//! The synthesized programs surface as `pim-opt:SET[@RxC]` backends
+//! (`crate::backend::optimized`) and the `convpim opt` report.
+
+pub mod egraph;
+pub mod extract;
+pub mod opt;
+pub mod rules;
+
+pub use opt::{optimize, optimized_costs, optimized_op_program, op_outputs, verify_equiv, OptStats, Optimized};

@@ -1,0 +1,522 @@
+//! Boolean rewrite rules per gate set, and the saturation driver.
+//!
+//! Each [`Rule`] pattern-matches one canonical [`Node`] (with its class
+//! context via [`ClassIndex`]) and proposes equivalent [`Term`]s; the
+//! driver instantiates every proposal and unions it with the matched
+//! node's class, then rebuilds — classic equality saturation. Rules are
+//! *sound only*: every identity below is exercised against its full
+//! truth table (all assignments of up to 3 variables) in this module's
+//! tests, and whole-program equivalence is re-proven downstream on the
+//! scalar crossbar by [`crate::synth::opt`].
+
+use crate::pim::gates::GateSet;
+use crate::synth::egraph::{ClassIndex, EGraph, Id, Node};
+
+/// A term template produced by a rule: references to existing classes
+/// plus newly built structure around them.
+#[derive(Clone, Debug)]
+pub enum Term {
+    /// An existing e-class.
+    Ref(Id),
+    Const(bool),
+    Not(Box<Term>),
+    Nor2(Box<Term>, Box<Term>),
+    Nor3(Box<Term>, Box<Term>, Box<Term>),
+    Maj3(Box<Term>, Box<Term>, Box<Term>),
+}
+
+impl Term {
+    pub fn not(t: Term) -> Term {
+        Term::Not(Box::new(t))
+    }
+
+    pub fn nor2(a: Term, b: Term) -> Term {
+        Term::Nor2(Box::new(a), Box::new(b))
+    }
+
+    pub fn nor3(a: Term, b: Term, c: Term) -> Term {
+        Term::Nor3(Box::new(a), Box::new(b), Box::new(c))
+    }
+
+    /// Add this term's structure to the graph; returns its class.
+    pub fn instantiate(&self, g: &mut EGraph) -> Id {
+        match self {
+            Term::Ref(id) => g.find(*id),
+            Term::Const(b) => g.add(Node::Const(*b)),
+            Term::Not(a) => {
+                let a = a.instantiate(g);
+                g.add(Node::Not(a))
+            }
+            Term::Nor2(a, b) => {
+                let (a, b) = (a.instantiate(g), b.instantiate(g));
+                g.add(Node::Nor2([a, b]))
+            }
+            Term::Nor3(a, b, c) => {
+                let (a, b, c) = (a.instantiate(g), b.instantiate(g), c.instantiate(g));
+                g.add(Node::Nor3([a, b, c]))
+            }
+            Term::Maj3(a, b, c) => {
+                let (a, b, c) = (a.instantiate(g), b.instantiate(g), c.instantiate(g));
+                g.add(Node::Maj3([a, b, c]))
+            }
+        }
+    }
+}
+
+/// One named rewrite: matched node → equivalent terms.
+pub struct Rule {
+    pub name: &'static str,
+    pub apply: fn(&ClassIndex, &Node) -> Vec<Term>,
+}
+
+/// True when class `a` provably holds the complement of class `b`
+/// (either direction: `Not(b) ∈ a` or `Not(a) ∈ b`).
+fn complementary(idx: &ClassIndex, a: Id, b: Id) -> bool {
+    idx.negated_in(a).any(|y| y == b) || idx.negated_in(b).any(|y| y == a)
+}
+
+fn not_const(idx: &ClassIndex, n: &Node) -> Vec<Term> {
+    match n {
+        Node::Not(a) => idx.const_of(*a).map(|b| Term::Const(!b)).into_iter().collect(),
+        _ => vec![],
+    }
+}
+
+fn not_not(idx: &ClassIndex, n: &Node) -> Vec<Term> {
+    match n {
+        Node::Not(a) => idx.negated_in(*a).map(Term::Ref).collect(),
+        _ => vec![],
+    }
+}
+
+fn nor2_idem(_: &ClassIndex, n: &Node) -> Vec<Term> {
+    match n {
+        Node::Nor2([a, b]) if a == b => vec![Term::not(Term::Ref(*a))],
+        _ => vec![],
+    }
+}
+
+fn nor2_const(idx: &ClassIndex, n: &Node) -> Vec<Term> {
+    let Node::Nor2([a, b]) = n else { return vec![] };
+    let mut out = Vec::new();
+    for (x, other) in [(*a, *b), (*b, *a)] {
+        match idx.const_of(x) {
+            // nor(0, y) = !y
+            Some(false) => out.push(Term::not(Term::Ref(other))),
+            // nor(1, y) = 0
+            Some(true) => out.push(Term::Const(false)),
+            None => {}
+        }
+    }
+    out
+}
+
+fn nor2_comp(idx: &ClassIndex, n: &Node) -> Vec<Term> {
+    match n {
+        // nor(x, !x) = 0
+        Node::Nor2([a, b]) if complementary(idx, *a, *b) => vec![Term::Const(false)],
+        _ => vec![],
+    }
+}
+
+fn nor3_dup(_: &ClassIndex, n: &Node) -> Vec<Term> {
+    let Node::Nor3([a, b, c]) = n else { return vec![] };
+    // nor(x, x, y) = nor(x, y)
+    if a == b {
+        vec![Term::nor2(Term::Ref(*a), Term::Ref(*c))]
+    } else if b == c {
+        vec![Term::nor2(Term::Ref(*a), Term::Ref(*b))]
+    } else {
+        vec![]
+    }
+}
+
+fn nor3_const(idx: &ClassIndex, n: &Node) -> Vec<Term> {
+    let Node::Nor3([a, b, c]) = n else { return vec![] };
+    let mut out = Vec::new();
+    for (x, p, q) in [(*a, *b, *c), (*b, *a, *c), (*c, *a, *b)] {
+        match idx.const_of(x) {
+            // nor(0, y, z) = nor(y, z)
+            Some(false) => out.push(Term::nor2(Term::Ref(p), Term::Ref(q))),
+            // nor(1, y, z) = 0
+            Some(true) => out.push(Term::Const(false)),
+            None => {}
+        }
+    }
+    out
+}
+
+fn nor3_comp(idx: &ClassIndex, n: &Node) -> Vec<Term> {
+    let Node::Nor3([a, b, c]) = n else { return vec![] };
+    // nor(x, !x, y) = 0
+    let pairs = [(*a, *b), (*a, *c), (*b, *c)];
+    if pairs.iter().any(|&(x, y)| complementary(idx, x, y)) {
+        vec![Term::Const(false)]
+    } else {
+        vec![]
+    }
+}
+
+/// nor(!nor(a, b), c) = nor3(a, b, c) — fuses the builder's dominant
+/// OR-then-NOR chain into the wide gate.
+fn nor3_form(idx: &ClassIndex, n: &Node) -> Vec<Term> {
+    let Node::Nor2([a, b]) = n else { return vec![] };
+    let mut out = Vec::new();
+    for (x, other) in [(*a, *b), (*b, *a)] {
+        for w in idx.negated_in(x) {
+            for [p, q] in idx.nor2s_in(w) {
+                out.push(Term::nor3(Term::Ref(p), Term::Ref(q), Term::Ref(other)));
+            }
+        }
+    }
+    out
+}
+
+/// nor(x, nor(x, z)) = nor(x, !z) — absorption; shortens ladders where a
+/// NOR result feeds a sibling NOR sharing an operand.
+fn nor_absorb(idx: &ClassIndex, n: &Node) -> Vec<Term> {
+    let Node::Nor2([a, b]) = n else { return vec![] };
+    let mut out = Vec::new();
+    for (x, y) in [(*a, *b), (*b, *a)] {
+        for [p, q] in idx.nor2s_in(y) {
+            if p == x {
+                out.push(Term::nor2(Term::Ref(x), Term::not(Term::Ref(q))));
+            }
+            if q == x {
+                out.push(Term::nor2(Term::Ref(x), Term::not(Term::Ref(p))));
+            }
+        }
+    }
+    out
+}
+
+fn maj_dup(_: &ClassIndex, n: &Node) -> Vec<Term> {
+    let Node::Maj3([a, b, c]) = n else { return vec![] };
+    // maj(x, x, y) = x  (operands are sorted, so duplicates are adjacent)
+    if a == b {
+        vec![Term::Ref(*a)]
+    } else if b == c {
+        vec![Term::Ref(*b)]
+    } else {
+        vec![]
+    }
+}
+
+fn maj_comp(idx: &ClassIndex, n: &Node) -> Vec<Term> {
+    let Node::Maj3([a, b, c]) = n else { return vec![] };
+    // maj(x, !x, y) = y
+    let mut out = Vec::new();
+    for (x, y, rest) in [(*a, *b, *c), (*a, *c, *b), (*b, *c, *a)] {
+        if complementary(idx, x, y) {
+            out.push(Term::Ref(rest));
+        }
+    }
+    out
+}
+
+fn maj_01(idx: &ClassIndex, n: &Node) -> Vec<Term> {
+    let Node::Maj3([a, b, c]) = n else { return vec![] };
+    // maj(0, 1, y) = y
+    let mut out = Vec::new();
+    for (x, y, rest) in [(*a, *b, *c), (*a, *c, *b), (*b, *c, *a)] {
+        if let (Some(u), Some(v)) = (idx.const_of(x), idx.const_of(y)) {
+            if u != v {
+                out.push(Term::Ref(rest));
+            }
+        }
+    }
+    out
+}
+
+const NOR_RULES: &[Rule] = &[
+    Rule { name: "not-const", apply: not_const },
+    Rule { name: "not-not", apply: not_not },
+    Rule { name: "nor2-idem", apply: nor2_idem },
+    Rule { name: "nor2-const", apply: nor2_const },
+    Rule { name: "nor2-comp", apply: nor2_comp },
+    Rule { name: "nor3-dup", apply: nor3_dup },
+    Rule { name: "nor3-const", apply: nor3_const },
+    Rule { name: "nor3-comp", apply: nor3_comp },
+    Rule { name: "nor3-form", apply: nor3_form },
+    Rule { name: "nor-absorb", apply: nor_absorb },
+];
+
+const MAJ_RULES: &[Rule] = &[
+    Rule { name: "not-const", apply: not_const },
+    Rule { name: "not-not", apply: not_not },
+    Rule { name: "maj-dup", apply: maj_dup },
+    Rule { name: "maj-comp", apply: maj_comp },
+    Rule { name: "maj-01", apply: maj_01 },
+];
+
+/// The rule set legal for a gate set's operator vocabulary.
+pub fn for_set(set: GateSet) -> &'static [Rule] {
+    match set {
+        GateSet::MemristiveNor => NOR_RULES,
+        GateSet::DramMaj => MAJ_RULES,
+    }
+}
+
+/// Run equality saturation: match every rule against every canonical
+/// node, instantiate + union the proposals, rebuild, repeat until no
+/// class merges happen or a limit trips. Returns iterations run.
+pub fn saturate(g: &mut EGraph, rules: &[Rule], max_iters: usize, node_cap: usize) -> usize {
+    let mut iters = 0;
+    while iters < max_iters && g.len() < node_cap {
+        iters += 1;
+        g.rebuild();
+        let idx = g.class_index();
+        // Snapshot matches first so rule application sees one consistent
+        // graph generation.
+        let mut pending: Vec<(Id, Term)> = Vec::new();
+        for (root, nodes) in idx.iter() {
+            for node in nodes {
+                for rule in rules {
+                    for term in (rule.apply)(&idx, node) {
+                        pending.push((root, term));
+                    }
+                }
+            }
+        }
+        let mut changed = false;
+        for (root, term) in pending {
+            let id = term.instantiate(g);
+            changed |= g.union(root, id);
+        }
+        if !changed {
+            break;
+        }
+        g.rebuild();
+    }
+    g.rebuild();
+    iters
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pim::isa::Col;
+
+    fn rule(name: &str) -> &'static Rule {
+        NOR_RULES
+            .iter()
+            .chain(MAJ_RULES)
+            .find(|r| r.name == name)
+            .unwrap_or_else(|| panic!("no rule named {name}"))
+    }
+
+    /// Evaluate a class under `env`. Test graphs perform no unions, so
+    /// every class holds exactly one node and recursion is well-defined.
+    fn eval(g: &EGraph, id: Id, env: &dyn Fn(Col) -> bool) -> bool {
+        match g.node(g.find(id)) {
+            Node::Const(b) => b,
+            Node::Var(c) => env(c),
+            Node::Not(a) => !eval(g, a, env),
+            Node::Nor2([a, b]) => !(eval(g, a, env) | eval(g, b, env)),
+            Node::Nor3([a, b, c]) => !(eval(g, a, env) | eval(g, b, env) | eval(g, c, env)),
+            Node::Maj3([a, b, c]) => {
+                let s = eval(g, a, env) as u8 + eval(g, b, env) as u8 + eval(g, c, env) as u8;
+                s >= 2
+            }
+        }
+    }
+
+    /// Build a pattern, fire one rule on the root's node, and check every
+    /// proposed term against the root over all 2^vars assignments.
+    fn check(name: &str, vars: u32, build: fn(&mut EGraph) -> Id) {
+        let r = rule(name);
+        let mut g = EGraph::new();
+        let root = build(&mut g);
+        g.rebuild();
+        let idx = g.class_index();
+        let node = g.canonical(g.node(root));
+        let terms = (r.apply)(&idx, &node);
+        assert!(!terms.is_empty(), "rule {name} did not fire on its pattern");
+        for term in &terms {
+            let mut g2 = g.clone();
+            let new = term.instantiate(&mut g2);
+            for bits in 0..(1u32 << vars) {
+                let env = move |c: Col| bits >> c & 1 == 1;
+                assert_eq!(
+                    eval(&g2, root, &env),
+                    eval(&g2, new, &env),
+                    "rule {name} broke truth table at assignment {bits:03b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn not_const_folds() {
+        check("not-const", 0, |g| {
+            let f = g.add(Node::Const(false));
+            g.add(Node::Not(f))
+        });
+    }
+
+    #[test]
+    fn double_negation_cancels() {
+        check("not-not", 1, |g| {
+            let x = g.add(Node::Var(0));
+            let nx = g.add(Node::Not(x));
+            g.add(Node::Not(nx))
+        });
+    }
+
+    #[test]
+    fn nor2_idempotence() {
+        check("nor2-idem", 1, |g| {
+            let x = g.add(Node::Var(0));
+            g.add(Node::Nor2([x, x]))
+        });
+    }
+
+    #[test]
+    fn nor2_constant_operands() {
+        check("nor2-const", 1, |g| {
+            let x = g.add(Node::Var(0));
+            let z = g.add(Node::Const(false));
+            g.add(Node::Nor2([x, z]))
+        });
+        check("nor2-const", 1, |g| {
+            let x = g.add(Node::Var(0));
+            let o = g.add(Node::Const(true));
+            g.add(Node::Nor2([x, o]))
+        });
+    }
+
+    #[test]
+    fn nor2_complement_annihilates() {
+        check("nor2-comp", 1, |g| {
+            let x = g.add(Node::Var(0));
+            let nx = g.add(Node::Not(x));
+            g.add(Node::Nor2([x, nx]))
+        });
+    }
+
+    #[test]
+    fn nor3_duplicate_operand() {
+        check("nor3-dup", 2, |g| {
+            let x = g.add(Node::Var(0));
+            let y = g.add(Node::Var(1));
+            g.add(Node::Nor3([x, x, y]))
+        });
+    }
+
+    #[test]
+    fn nor3_constant_operands() {
+        check("nor3-const", 2, |g| {
+            let x = g.add(Node::Var(0));
+            let y = g.add(Node::Var(1));
+            let z = g.add(Node::Const(false));
+            g.add(Node::Nor3([x, y, z]))
+        });
+        check("nor3-const", 2, |g| {
+            let x = g.add(Node::Var(0));
+            let y = g.add(Node::Var(1));
+            let o = g.add(Node::Const(true));
+            g.add(Node::Nor3([x, y, o]))
+        });
+    }
+
+    #[test]
+    fn nor3_complement_annihilates() {
+        check("nor3-comp", 2, |g| {
+            let x = g.add(Node::Var(0));
+            let nx = g.add(Node::Not(x));
+            let y = g.add(Node::Var(1));
+            g.add(Node::Nor3([x, nx, y]))
+        });
+    }
+
+    #[test]
+    fn nor3_formation_from_or_chain() {
+        check("nor3-form", 3, |g| {
+            let a = g.add(Node::Var(0));
+            let b = g.add(Node::Var(1));
+            let c = g.add(Node::Var(2));
+            let nab = g.add(Node::Nor2([a, b]));
+            let or_ab = g.add(Node::Not(nab));
+            g.add(Node::Nor2([or_ab, c]))
+        });
+    }
+
+    #[test]
+    fn nor_absorption() {
+        check("nor-absorb", 2, |g| {
+            let x = g.add(Node::Var(0));
+            let z = g.add(Node::Var(1));
+            let inner = g.add(Node::Nor2([x, z]));
+            g.add(Node::Nor2([x, inner]))
+        });
+    }
+
+    #[test]
+    fn maj_duplicate_operand() {
+        check("maj-dup", 2, |g| {
+            let x = g.add(Node::Var(0));
+            let y = g.add(Node::Var(1));
+            g.add(Node::Maj3([x, x, y]))
+        });
+    }
+
+    #[test]
+    fn maj_complement_selects_third() {
+        check("maj-comp", 2, |g| {
+            let x = g.add(Node::Var(0));
+            let nx = g.add(Node::Not(x));
+            let y = g.add(Node::Var(1));
+            g.add(Node::Maj3([x, nx, y]))
+        });
+    }
+
+    #[test]
+    fn maj_zero_one_selects_third() {
+        check("maj-01", 1, |g| {
+            let z = g.add(Node::Const(false));
+            let o = g.add(Node::Const(true));
+            let y = g.add(Node::Var(0));
+            g.add(Node::Maj3([z, o, y]))
+        });
+    }
+
+    #[test]
+    fn saturation_terminates_and_proves_double_negation() {
+        let mut g = EGraph::new();
+        let x = g.add(Node::Var(0));
+        let nx = g.add(Node::Not(x));
+        let nnx = g.add(Node::Not(nx));
+        let iters = saturate(&mut g, NOR_RULES, 8, 100_000);
+        assert!(iters <= 8);
+        assert_eq!(g.find(x), g.find(nnx), "!!x should merge with x");
+    }
+
+    #[test]
+    fn saturation_folds_constant_ladder() {
+        // nor(nor(x, !x), 0) = nor(0, 0) = 1
+        let mut g = EGraph::new();
+        let x = g.add(Node::Var(0));
+        let nx = g.add(Node::Not(x));
+        let inner = g.add(Node::Nor2([x, nx]));
+        let z = g.add(Node::Const(false));
+        let root = g.add(Node::Nor2([inner, z]));
+        saturate(&mut g, NOR_RULES, 8, 100_000);
+        let idx = g.class_index();
+        assert_eq!(idx.const_of(g.find(root)), Some(true));
+    }
+
+    #[test]
+    fn maj_saturation_collapses_to_var() {
+        // maj(x, !x, w) = w and w = maj(y, y, z) = y, so the root class
+        // must collapse all the way to y.
+        let mut g = EGraph::new();
+        let x = g.add(Node::Var(0));
+        let nx = g.add(Node::Not(x));
+        let y = g.add(Node::Var(1));
+        let z = g.add(Node::Var(2));
+        let w = g.add(Node::Maj3([y, y, z]));
+        let root = g.add(Node::Maj3([x, nx, w]));
+        saturate(&mut g, MAJ_RULES, 8, 100_000);
+        assert_eq!(g.find(root), g.find(y));
+    }
+}

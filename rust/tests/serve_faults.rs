@@ -270,6 +270,38 @@ fn expired_deadline_is_a_structured_error_not_an_evaluation() {
     daemon.shutdown();
 }
 
+/// Campaign evaluation is bounded by the same cooperative deadline:
+/// `sweep::run_points` polls it *between points*, so a `deadline_ms`
+/// carried by a campaign request caps the whole grid, not just its queue
+/// wait (previously campaigns ignored the evaluation deadline entirely
+/// and ran every point to completion). Exercised through
+/// `submit_deadline` — the exact seam the TCP daemon drives with the
+/// wire-level `deadline_ms` field (that plumbing is covered by the
+/// daemon deadline tests above/below) — because builtin campaign points
+/// are microsecond-analytic, so a wall-clock race through a real socket
+/// would be flaky where this is deterministic.
+#[test]
+fn campaign_deadline_bounds_point_evaluation() {
+    use convpim::service::{CampaignRef, EvalRequest, EvalService};
+    use convpim::util::deadline::{Deadline, DEADLINE_EXPIRED};
+
+    let service = EvalService::new().with_cache(None);
+    let req = EvalRequest::Campaign {
+        campaign: CampaignRef::Builtin("fig4".into()),
+    };
+    // An already-expired deadline: every point fails with the marker and
+    // the campaign response surfaces it as a structured error.
+    let resp = service.submit_deadline(&req, Deadline::in_ms(0));
+    assert!(!resp.meta.ok, "campaign must not evaluate past its deadline");
+    let err = resp.meta.error.as_deref().unwrap();
+    assert!(err.contains(DEADLINE_EXPIRED), "got: {err}");
+    assert!(err.contains("sweep point"), "got: {err}");
+
+    // The same request under no deadline still evaluates fully.
+    let resp = service.submit_deadline(&req, Deadline::none());
+    assert!(resp.meta.ok, "got: {:?}", resp.meta.error);
+}
+
 /// A deadline that is still live at pickup but expires while the
 /// evaluation runs must abort *mid-evaluation*: the executor polls the
 /// deadline between crossbar tiles and returns the structured

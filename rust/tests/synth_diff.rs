@@ -1,0 +1,220 @@
+//! Differential proof suites for the equality-saturation microcode
+//! synthesizer ([`convpim::synth`]).
+//!
+//! Every suite holds the synthesizer to the same standard as the
+//! hand-derived microcode: from identical operand state, the optimized
+//! program must leave bit-identical output fields to the unoptimized
+//! program, on both execution engines —
+//!
+//! * `Crossbar::execute` / `execute_fused` — the packed bit-sliced
+//!   engine running the *lowered* micro-op pipeline, proving that
+//!   synthesis composes with the `pim::lower` fuser;
+//! * `ScalarCrossbar::execute` — the per-row/per-bit `bool` oracle.
+//!
+//! Corpora mirror `fused_diff.rs`: random gate soup, the fixed-point
+//! add/mul programs, the fp32 softfloat programs, and the conv MAC
+//! schedule.
+
+use convpim::pim::conv;
+use convpim::pim::fixed::{FixedLayout, FixedOp};
+use convpim::pim::float::FloatLayout;
+use convpim::pim::gates::GateSet;
+use convpim::pim::matpim::NumFmt;
+use convpim::pim::oracle::ScalarCrossbar;
+use convpim::pim::softfloat::Format;
+use convpim::pim::{Col, Crossbar, Instr, Program};
+use convpim::synth;
+use convpim::util::rng::Rng;
+
+/// Execute `prog` from the given operand fields on the packed engine
+/// (auto dispatch *and* the explicit fused pipeline) and the scalar
+/// oracle, require the engines to agree, and return the output columns.
+fn run_all_engines(
+    prog: &Program,
+    rows: usize,
+    cols: usize,
+    fields: &[(Col, u32, Vec<u64>)],
+    outputs: &[Col],
+    what: &str,
+) -> Vec<Vec<u64>> {
+    let mut packed = Crossbar::new(rows, cols);
+    let mut oracle = ScalarCrossbar::new(rows, cols);
+    for (base, bits, values) in fields {
+        packed.write_field(*base, *bits, values);
+        oracle.write_field(*base, *bits, values);
+    }
+    let mut fused = packed.clone();
+    packed.execute(prog);
+    fused.execute_fused(prog);
+    oracle.execute(prog);
+    assert!(oracle.agrees_with(&packed), "{what}: auto dispatch vs oracle");
+    assert!(oracle.agrees_with(&fused), "{what}: fused pipeline vs oracle");
+    outputs.iter().map(|&c| packed.read_field(c, 1, rows)).collect()
+}
+
+/// The differential contract: `opt` must be bit-identical to `base` on
+/// `outputs` from identical operand state, on every engine.
+fn assert_diff(
+    base: &Program,
+    opt: &Program,
+    outputs: &[Col],
+    rows: usize,
+    fields: &[(Col, u32, Vec<u64>)],
+    what: &str,
+) {
+    let cols = fields
+        .iter()
+        .map(|(b, bits, _)| b + bits)
+        .max()
+        .unwrap_or(0)
+        .max(base.width())
+        .max(opt.width()) as usize;
+    let zb = run_all_engines(base, rows, cols, fields, outputs, &format!("{what} (baseline)"));
+    let zo = run_all_engines(opt, rows, cols, fields, outputs, &format!("{what} (optimized)"));
+    assert_eq!(zb, zo, "{what}: optimized program deviates from the baseline on outputs");
+}
+
+#[test]
+fn fixed_corpus_optimized_matches_baseline() {
+    let mut rng = Rng::new(0x51D1);
+    let rows = 96;
+    for set in GateSet::all() {
+        for op in [FixedOp::Add, FixedOp::Mul] {
+            for n in [8u32, 16] {
+                let fmt = NumFmt::Fixed(n);
+                let base = fmt.program(op, set);
+                let o = synth::optimized_op_program(op, fmt, set);
+                let outputs = synth::op_outputs(op, fmt);
+                let lay = FixedLayout::new(op, n);
+                let fields = vec![
+                    (lay.u, n, rng.vec_bits(rows, n)),
+                    (lay.v, n, rng.vec_bits(rows, n)),
+                ];
+                assert_diff(
+                    &base,
+                    &o.program,
+                    &outputs,
+                    rows,
+                    &fields,
+                    &format!("{set:?} fixed{n} {op:?}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fp32_corpus_optimized_matches_baseline() {
+    let mut rng = Rng::new(0x51D2);
+    let fmt = Format::FP32;
+    let rows = 8; // keeps the per-bool oracle tractable on fp32 programs
+    let n = fmt.bits();
+    for set in GateSet::all() {
+        for op in [FixedOp::Add, FixedOp::Mul] {
+            let nf = NumFmt::Float(fmt);
+            let base = nf.program(op, set);
+            let o = synth::optimized_op_program(op, nf, set);
+            let outputs = synth::op_outputs(op, nf);
+            let lay = FloatLayout::new(fmt);
+            let u: Vec<u64> = (0..rows).map(|_| rng.float_pattern(fmt.exp, fmt.man)).collect();
+            let v: Vec<u64> = (0..rows).map(|_| rng.float_pattern(fmt.exp, fmt.man)).collect();
+            let fields = vec![(lay.u, n, u), (lay.v, n, v)];
+            assert_diff(
+                &base,
+                &o.program,
+                &outputs,
+                rows,
+                &fields,
+                &format!("{set:?} fp32 {op:?}"),
+            );
+        }
+    }
+}
+
+/// Random legal gate soup for one set; reads may hit unwritten columns
+/// (those become synthesis inputs), writes never alias their operands.
+fn random_program(rng: &mut Rng, set: GateSet, cols: Col, len: usize) -> Program {
+    let pick = |rng: &mut Rng, avoid: &[Col]| -> Col {
+        loop {
+            let c = rng.below(cols as u64) as Col;
+            if !avoid.contains(&c) {
+                return c;
+            }
+        }
+    };
+    let mut p = Program::new(set);
+    for _ in 0..len {
+        let a = pick(rng, &[]);
+        let b = pick(rng, &[a]);
+        let c = pick(rng, &[a, b]);
+        let out = pick(rng, &[a, b, c]);
+        match (set, rng.below(8)) {
+            (_, 0) => p.push(Instr::Set { out, bit: rng.bool() }),
+            (_, 1 | 2) => p.push(Instr::Not { a, out }),
+            (GateSet::MemristiveNor, 3 | 4) => p.push(Instr::Nor3 { a, b, c, out }),
+            (GateSet::MemristiveNor, _) => p.push(Instr::Nor2 { a, b, out }),
+            (GateSet::DramMaj, 3) => p.push(Instr::Copy { a, out }),
+            (GateSet::DramMaj, _) => p.push(Instr::Maj3 { a, b, c, out }),
+        }
+    }
+    p.validate_for(set).unwrap();
+    p
+}
+
+#[test]
+fn random_corpus_optimized_matches_baseline() {
+    let mut rng = Rng::new(0x51D3);
+    let cols: Col = 14;
+    let rows = 80;
+    for set in GateSet::all() {
+        for trial in 0..8 {
+            let base = random_program(&mut rng, set, cols, 60);
+            // Every written column is an observable output: the optimizer
+            // must preserve all of them, not just a convenient subset.
+            let mut outputs: Vec<Col> = base.instrs().iter().map(|i| i.out()).collect();
+            outputs.sort_unstable();
+            outputs.dedup();
+            let o = synth::optimize(&base, &outputs)
+                .unwrap_or_else(|e| panic!("{set:?} trial {trial}: {e:#}"));
+            let fields = vec![(0, cols, rng.vec_bits(rows, cols))];
+            assert_diff(
+                &base,
+                &o.program,
+                &outputs,
+                rows,
+                &fields,
+                &format!("{set:?} random trial {trial}"),
+            );
+            assert!(
+                o.stats.optimized_cycles <= o.stats.baseline_cycles,
+                "{set:?} trial {trial}: optimizer made the program costlier"
+            );
+        }
+    }
+}
+
+#[test]
+fn conv_corpus_optimized_matches_baseline() {
+    let mut rng = Rng::new(0x51D4);
+    let rows = 24;
+    let l = 4;
+    for set in GateSet::all() {
+        let cp = conv::conv_program(NumFmt::Fixed(8), l, set);
+        let outputs: Vec<Col> = (cp.lay.acc..cp.lay.acc + 8).collect();
+        let o = synth::optimize(&cp.prog, &outputs)
+            .unwrap_or_else(|e| panic!("{set:?} conv: {e:#}"));
+        let mut fields: Vec<(Col, u32, Vec<u64>)> = Vec::new();
+        for t in 0..l {
+            fields.push((cp.lay.a_col(t, 0), 8, rng.vec_bits(rows, 8)));
+            fields.push((cp.lay.w_col(t, 0), 8, rng.vec_bits(rows, 8)));
+        }
+        assert_diff(
+            &cp.prog,
+            &o.program,
+            &outputs,
+            rows,
+            &fields,
+            &format!("{set:?} conv fixed8"),
+        );
+    }
+}
