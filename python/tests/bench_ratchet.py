@@ -1,6 +1,6 @@
 #!/usr/bin/env python3
-"""Warn-only perf ratchet: diff a fresh bench artifact against the
-committed baseline.
+"""Perf ratchet: diff a fresh bench artifact against the committed
+baseline.
 
 CI regenerates ``BENCH_serve.json`` and ``BENCH_hotpath.json`` on every
 run; this script compares the fresh numbers against the committed
@@ -8,23 +8,31 @@ baseline (read out of git by the workflow, since the fresh run overwrites
 the working-tree file) and emits a ``::warning`` annotation plus a
 ``$GITHUB_STEP_SUMMARY`` section when any tracked metric regresses beyond
 the tolerance band. Timing on shared CI machines is noisy, so the default
-band is wide (25%) and the script ALWAYS exits 0 — the ratchet is an
-alarm that fires on every run of a sustained regression, not a gate that
-flakes on one bad scheduler decision.
+band is wide (25%) and by default the script ALWAYS exits 0 — the ratchet
+is an alarm that fires on every run of a sustained regression, not a gate
+that flakes on one bad scheduler decision.
+
+``--strict`` promotes the *timing-stable* subset to a gate: the hotpath
+``ratios`` metrics are ratios of two measurements taken in the same
+process on the same machine, so scheduler noise largely cancels and a
+sustained drop means the packed engine genuinely lost ground against its
+scalar oracle. Under ``--strict`` a regression in any ``ratio *`` metric
+exits 1; wall-clock metrics (``rowgates/s``, everything in ``serve``)
+stay warn-only even there.
 
 Tracked metrics:
 
 * ``serve``   — per concurrency level (keyed by ``clients``): ``rps``
-  (higher is better) and ``p95_ms`` (lower is better).
+  (higher is better) and ``p95_ms`` (lower is better). Never gating.
 * ``hotpath`` — per instruction mix (keyed by ``name``):
-  ``rowgates_per_s`` (higher is better), plus every entry of ``ratios``
-  (higher is better).
+  ``rowgates_per_s`` (higher is better, never gating), plus every entry
+  of ``ratios`` (higher is better, gating under ``--strict``).
 
 Usage::
 
     python3 python/tests/bench_ratchet.py --bench serve \
         --baseline /tmp/baseline_serve.json --fresh BENCH_serve.json \
-        [--tolerance 0.25] [--summary "$GITHUB_STEP_SUMMARY"]
+        [--tolerance 0.25] [--strict] [--summary "$GITHUB_STEP_SUMMARY"]
 
 Run the built-in self-checks with ``--self-test``.
 """
@@ -104,6 +112,12 @@ def render_summary(bench, tolerance, regressions):
         "a repeat on consecutive runs as a real regression.",
     ]
     return "\n".join(lines) + "\n"
+
+
+def is_gating(bench, metric_name):
+    """True when a regression in this metric should fail a --strict run:
+    only the hotpath ratio metrics are stable enough to gate on."""
+    return bench == "hotpath" and metric_name.startswith("ratio ")
 
 
 def run(bench, baseline_doc, fresh_doc, tolerance, summary_path=None, out=sys.stdout):
@@ -188,6 +202,38 @@ def self_test():
     rows = compare(metrics_hotpath(zb), metrics_hotpath(zf), 0.25)
     assert [r[0] for r in rows] == ["ratio c"], rows
 
+    # Gating classification: only hotpath ratios gate under --strict.
+    assert is_gating("hotpath", "ratio packed_vs_scalar")
+    assert not is_gating("hotpath", "mix nor2-storm rowgates/s")
+    assert not is_gating("serve", "clients=2 rps")
+
+    # --strict end-to-end: a ratio regression exits 1, a wall-clock
+    # regression alone stays clean, and without --strict both exit 0.
+    import os
+    import tempfile
+
+    def run_main(base_doc, fresh_doc, extra):
+        with tempfile.TemporaryDirectory() as d:
+            bp, fp = os.path.join(d, "b.json"), os.path.join(d, "f.json")
+            with open(bp, "w") as f:
+                json.dump(base_doc, f)
+            with open(fp, "w") as f:
+                json.dump(fresh_doc, f)
+            return main(["--bench", "hotpath", "--baseline", bp,
+                         "--fresh", fp] + extra)
+
+    ratio_drop = {
+        "mixes": [{"name": "nor2-storm", "rowgates_per_s": 1e9}],
+        "ratios": {"packed_vs_scalar": 10.0},
+    }
+    clock_drop = {
+        "mixes": [{"name": "nor2-storm", "rowgates_per_s": 1e8}],
+        "ratios": {"packed_vs_scalar": 40.0},
+    }
+    assert run_main(hb, ratio_drop, ["--strict"]) == 1
+    assert run_main(hb, clock_drop, ["--strict"]) == 0
+    assert run_main(hb, ratio_drop, []) == 0
+
     print("bench_ratchet self-test ok")
 
 
@@ -197,6 +243,9 @@ def main(argv=None):
     p.add_argument("--baseline", help="committed baseline JSON path")
     p.add_argument("--fresh", help="freshly generated JSON path")
     p.add_argument("--tolerance", type=float, default=0.25)
+    p.add_argument("--strict", action="store_true",
+                   help="exit 1 when a gating (timing-stable) metric "
+                        "regresses; wall-clock metrics stay warn-only")
     p.add_argument("--summary", help="append regression tables here "
                                      "(pass \"$GITHUB_STEP_SUMMARY\")")
     p.add_argument("--self-test", action="store_true")
@@ -212,8 +261,15 @@ def main(argv=None):
         baseline_doc = json.load(f)
     with open(args.fresh) as f:
         fresh_doc = json.load(f)
-    run(args.bench, baseline_doc, fresh_doc, args.tolerance, args.summary)
-    # Warn-only by design: annotations above, exit status always clean.
+    regressions = run(args.bench, baseline_doc, fresh_doc, args.tolerance,
+                      args.summary)
+    gating = [r for r in regressions if is_gating(args.bench, r[0])]
+    if args.strict and gating:
+        names = ", ".join(r[0] for r in gating)
+        print("::error title=Bench ratchet: %s gating regression::%s"
+              % (args.bench, names))
+        return 1
+    # Everything else is warn-only: annotations above, exit status clean.
     return 0
 
 

@@ -1,0 +1,213 @@
+//! JSON (de)serialization for [`ArchDef`] — the `convpim arch --validate
+//! FILE` loading path and the schema documented in EXPERIMENTS.md §ARCH.
+//!
+//! The document carries SI base units exactly as written (`clock_hz`,
+//! `gate_energy_j`), so a serialize→parse round trip is f64-identical
+//! (the writer emits shortest-round-trip floats). The `costs` object
+//! lists *only* the opcodes in the family's vocabulary — out-of-family
+//! opcodes are implied [`ILLEGAL_COST`] and never appear in a document.
+//!
+//! ```json
+//! {
+//!   "name": "felix",
+//!   "display": "FELIX PIM",
+//!   "family": "nor",
+//!   "rows": 1024,
+//!   "cols": 1024,
+//!   "clock_hz": 333000000,
+//!   "gate_energy_j": 4.7e-15,
+//!   "move_energy_j": 4.7e-15,
+//!   "max_power_w": 630.0,            // optional; omitted ⇒ derived
+//!   "costs": { "nor2": 1, "nor3": 2, "not": 1, "copy": 2, "set": 1 },
+//!   "provenance": "FELIX (Gupta et al. ICCAD'18)"
+//! }
+//! ```
+//!
+//! A `maj`-family document's `costs` object carries `maj3`/`not`/`copy`/
+//! `set` instead of the `nor*` keys.
+
+use anyhow::{Context, Result};
+
+use super::ArchDef;
+use crate::pim::gates::{GateCosts, LogicFamily, ILLEGAL_COST};
+use crate::util::json::Json;
+
+impl ArchDef {
+    /// Serialize to the canonical JSON document (also the `register`
+    /// collision-identity representation).
+    pub fn to_json(&self) -> Json {
+        let c = self.costs;
+        let mut cost_pairs: Vec<(&str, Json)> = Vec::new();
+        match self.family {
+            LogicFamily::Nor => {
+                cost_pairs.push(("nor2", Json::i(c.nor2 as i64)));
+                cost_pairs.push(("nor3", Json::i(c.nor3 as i64)));
+            }
+            LogicFamily::Maj => {
+                cost_pairs.push(("maj3", Json::i(c.maj3 as i64)));
+            }
+        }
+        cost_pairs.push(("not", Json::i(c.not as i64)));
+        cost_pairs.push(("copy", Json::i(c.copy as i64)));
+        cost_pairs.push(("set", Json::i(c.set as i64)));
+        let mut pairs = vec![
+            ("name", Json::s(&self.name)),
+            ("display", Json::s(&self.display)),
+            (
+                "family",
+                Json::s(match self.family {
+                    LogicFamily::Nor => "nor",
+                    LogicFamily::Maj => "maj",
+                }),
+            ),
+            ("rows", Json::i(self.rows as i64)),
+            ("cols", Json::i(self.cols as i64)),
+            ("clock_hz", Json::n(self.clock_hz)),
+            ("gate_energy_j", Json::n(c.gate_energy_j)),
+            ("move_energy_j", Json::n(c.move_energy_j)),
+            ("costs", Json::obj(cost_pairs)),
+            ("provenance", Json::s(&self.provenance)),
+        ];
+        if let Some(p) = self.max_power_w {
+            pairs.push(("max_power_w", Json::n(p)));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Deserialize from a parsed document. The result is validated — a
+    /// returned def always passes [`ArchDef::validate`].
+    pub fn from_json(doc: &Json) -> Result<ArchDef> {
+        let str_field = |key: &str| -> Result<String> {
+            Ok(doc
+                .get(key)
+                .and_then(Json::as_str)
+                .with_context(|| format!("arch JSON needs a string `{key}`"))?
+                .to_string())
+        };
+        let u64_field = |key: &str| -> Result<u64> {
+            doc.get(key)
+                .and_then(Json::as_u64)
+                .with_context(|| format!("arch JSON needs a non-negative integer `{key}`"))
+        };
+        let f64_field = |key: &str| -> Result<f64> {
+            doc.get(key)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("arch JSON needs a number `{key}`"))
+        };
+        let name = str_field("name")?;
+        let family = match doc.get("family").and_then(Json::as_str) {
+            Some("nor") => LogicFamily::Nor,
+            Some("maj") => LogicFamily::Maj,
+            other => anyhow::bail!("arch `family` must be `nor` or `maj`, got {other:?}"),
+        };
+        let costs_doc = doc
+            .get("costs")
+            .with_context(|| format!("arch `{name}` JSON needs a `costs` object"))?;
+        let cost = |key: &str| -> Result<u64> {
+            costs_doc.get(key).and_then(Json::as_u64).with_context(|| {
+                format!("arch `{name}` costs object needs a non-negative integer `{key}`")
+            })
+        };
+        let mut costs = GateCosts {
+            nor2: ILLEGAL_COST,
+            nor3: ILLEGAL_COST,
+            not: cost("not")?,
+            maj3: ILLEGAL_COST,
+            copy: cost("copy")?,
+            set: cost("set")?,
+            gate_energy_j: f64_field("gate_energy_j")?,
+            move_energy_j: f64_field("move_energy_j")?,
+        };
+        match family {
+            LogicFamily::Nor => {
+                costs.nor2 = cost("nor2")?;
+                costs.nor3 = cost("nor3")?;
+                anyhow::ensure!(
+                    costs_doc.get("maj3").is_none(),
+                    "arch `{name}` is nor-family: drop `maj3` from `costs`"
+                );
+            }
+            LogicFamily::Maj => {
+                costs.maj3 = cost("maj3")?;
+                anyhow::ensure!(
+                    costs_doc.get("nor2").is_none() && costs_doc.get("nor3").is_none(),
+                    "arch `{name}` is maj-family: drop `nor2`/`nor3` from `costs`"
+                );
+            }
+        }
+        let max_power_w = match doc.get("max_power_w") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(
+                v.as_f64()
+                    .with_context(|| format!("arch `{name}` max_power_w must be a number"))?,
+            ),
+        };
+        let def = ArchDef {
+            display: str_field("display")?,
+            family,
+            rows: u64_field("rows")?,
+            cols: u64_field("cols")?,
+            clock_hz: f64_field("clock_hz")?,
+            costs,
+            max_power_w,
+            provenance: str_field("provenance")?,
+            name,
+        };
+        def.validate()?;
+        Ok(def)
+    }
+
+    /// Parse + deserialize + validate a JSON document text.
+    pub fn from_json_text(text: &str) -> Result<ArchDef> {
+        let doc = Json::parse(text).context("arch definition is not valid JSON")?;
+        ArchDef::from_json(&doc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::archdef::{builtins, def_named};
+
+    #[test]
+    fn builtins_round_trip_exactly() {
+        for def in builtins() {
+            let doc = def.to_json();
+            let back = ArchDef::from_json(&Json::parse(&doc.pretty()).unwrap()).unwrap();
+            assert_eq!(doc.compact(), back.to_json().compact(), "{}", def.name);
+            // f64 fields survive the text round trip bit-exactly.
+            assert_eq!(back.clock_hz, def.clock_hz, "{}", def.name);
+            assert_eq!(back.costs.gate_energy_j, def.costs.gate_energy_j, "{}", def.name);
+            assert_eq!(back.max_power_w, def.max_power_w, "{}", def.name);
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_out_of_family_costs() {
+        let mut text = def_named("felix").unwrap().to_json().compact();
+        text = text.replace("\"costs\":{", "\"costs\":{\"maj3\":4,");
+        assert!(ArchDef::from_json_text(&text).is_err());
+        let mut text = def_named("ambit").unwrap().to_json().compact();
+        text = text.replace("\"costs\":{", "\"costs\":{\"nor2\":2,");
+        assert!(ArchDef::from_json_text(&text).is_err());
+    }
+
+    #[test]
+    fn from_json_reports_missing_fields() {
+        assert!(ArchDef::from_json_text("{}").is_err());
+        assert!(ArchDef::from_json_text("not json").is_err());
+        let text = def_named("plim").unwrap().to_json().compact().replace(",\"set\":1", "");
+        assert!(ArchDef::from_json_text(&text).is_err());
+    }
+
+    #[test]
+    fn null_max_power_means_derived() {
+        let d = def_named("felix").unwrap();
+        assert!(d.max_power_w.is_none());
+        let text = d.to_json().compact();
+        assert!(!text.contains("max_power_w"));
+        let with_null = text.replacen('{', "{\"max_power_w\":null,", 1);
+        let back = ArchDef::from_json_text(&with_null).unwrap();
+        assert_eq!(back.max_power_w, None);
+    }
+}

@@ -157,7 +157,8 @@ impl Estimate {
 /// The grammar `parse` accepts (also the error-message help text).
 pub const ID_GRAMMAR: &str = "pim:SET[@RxC] | pim-opt:SET[@RxC] | pim-exec:SET[@RxC] | \
      pim-exec-net:SET[@RxC] | gpu:NAME[:MODE[:DTYPE]] \
-     (SET: memristive|dram; NAME: a6000|a100|v100|rtx3090; \
+     (SET: memristive|dram or a registered archdef name — ambit|simdram|imply|plim|felix|nor|…, \
+     see `convpim arch`; NAME: a6000|a100|v100|rtx3090; \
      MODE: experimental|theoretical; DTYPE: auto|fp32|fp16|fp16-tensor)";
 
 /// Parse a backend id into a backend instance.
@@ -189,11 +190,12 @@ fn parse_arch(s: &str) -> Result<ArchSpec> {
         None => (s, None),
         Some((n, d)) => (n, Some(d)),
     };
-    let set = match set_name {
-        "memristive" => GateSet::MemristiveNor,
-        "dram" => GateSet::DramMaj,
-        other => anyhow::bail!("backend gate set must be `memristive` or `dram`, got `{other}`"),
-    };
+    let set = crate::archdef::lookup(set_name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "backend gate set must be a registered architecture ({}), got `{set_name}`",
+            crate::archdef::names().join("|")
+        )
+    })?;
     match dims {
         None => Ok(ArchSpec::paper(set)),
         Some(d) => {
@@ -294,21 +296,33 @@ pub(crate) fn ids_from_json(v: &Json, ctx: &str, canonicalize: bool) -> Result<V
         .collect()
 }
 
-/// The default backend inventory (`convpim list`): both PIM technologies
-/// analytic and executed at Table 1 dimensions, plus every GPU in the
-/// datasheet database in both roofline modes.
+/// The default backend inventory (`convpim list`): the paper's two PIM
+/// technologies plus every registered architecture definition — each in
+/// all four PIM evaluation kinds at its native dimensions — and every
+/// GPU in the datasheet database in both roofline modes.
 pub fn builtin() -> Vec<Box<dyn Backend>> {
+    // Legacy pair first (their ids predate the DSL and lead the listing),
+    // then the archdef catalogue; `lookup` maps the legacy names to the
+    // legacy variants, so the registry yields no duplicates.
+    let names = crate::archdef::names();
+    let sets: Vec<GateSet> = GateSet::all()
+        .into_iter()
+        .chain(names.iter().filter_map(|n| match crate::archdef::lookup(n) {
+            Some(set @ GateSet::Arch(_)) => Some(set),
+            _ => None,
+        }))
+        .collect();
     let mut out: Vec<Box<dyn Backend>> = Vec::new();
-    for set in GateSet::all() {
+    for &set in &sets {
         out.push(Box::new(AnalyticPim::new(ArchSpec::paper(set))));
     }
-    for set in GateSet::all() {
+    for &set in &sets {
         out.push(Box::new(OptimizedPim::new(ArchSpec::paper(set))));
     }
-    for set in GateSet::all() {
+    for &set in &sets {
         out.push(Box::new(ExecutedCrossbar::new(ArchSpec::paper(set))));
     }
-    for set in GateSet::all() {
+    for &set in &sets {
         out.push(Box::new(ExecutedNet::new(ArchSpec::paper(set))));
     }
     for spec in GpuSpec::all() {
@@ -335,6 +349,12 @@ mod tests {
             "pim-exec:dram",
             "pim-exec-net:memristive",
             "pim-exec-net:dram@512x1024",
+            "pim:ambit",
+            "pim:nor",
+            "pim:imply@512x1024",
+            "pim-opt:felix",
+            "pim-exec:simdram",
+            "pim-exec-net:plim",
             "gpu:a6000:experimental",
             "gpu:a100:theoretical",
             "gpu:v100:experimental:fp16",
@@ -380,7 +400,8 @@ mod tests {
     #[test]
     fn builtin_inventory_is_parseable_and_described() {
         let inventory = builtin();
-        assert!(inventory.len() >= 12);
+        // 4 PIM kinds × (2 legacy + ≥6 archdef) + 4 GPUs × 2 modes.
+        assert!(inventory.len() >= 40, "inventory has {} backends", inventory.len());
         for b in &inventory {
             assert_eq!(parse(&b.id()).unwrap().id(), b.id(), "{}", b.id());
             assert!(!b.describe().is_empty(), "{}", b.id());

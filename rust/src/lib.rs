@@ -29,6 +29,15 @@
 //!   the LLM attention-decode workload from the paper's discussion.
 //! * [`metrics`] — the paper's analysis metrics: compute complexity
 //!   (gates/bit), data reuse, throughput, and energy efficiency.
+//! * [`archdef`] — the declarative architecture DSL: data-driven
+//!   [`ArchDef`](archdef::ArchDef) definitions (logic family, crossbar
+//!   geometry, per-opcode cycle/energy costs, clock, power) loadable from
+//!   JSON, with builtin definitions spanning the digital-PIM design space
+//!   (`ambit`, `simdram`, `imply`, `plim`, `felix`, …). Every definition
+//!   becomes a [`GateSet`](pim::gates::GateSet) the builder, simulator,
+//!   optimizer, cost model, backends and sweeps all accept; the paper's
+//!   two technologies are shipped as builtin twins proven cost- and
+//!   bit-identical to the hard-coded paths.
 //! * [`backend`] — the first-class evaluation platforms: one
 //!   [`Backend`](backend::Backend) trait (`evaluate(workload, fmt) →
 //!   Estimate`) implemented by the analytic PIM model, the executed
@@ -103,6 +112,7 @@
 //! println!("memristive fixed32 add: {:.1} TOPS", arch.throughput(&prog) / 1e12);
 //! ```
 
+pub mod archdef;
 pub mod backend;
 pub mod coordinator;
 pub mod gpumodel;

@@ -32,6 +32,12 @@
 //!   gate-set cell, print per-cell and cycles-per-MAC deltas against the
 //!   hand-derived microcode, and write the `BENCH_microcode.json`
 //!   artifact.
+//! * `arch [--describe NAME] [--validate FILE] [--validate-builtins]
+//!   [--bench]` — the declarative architecture registry
+//!   ([`convpim::archdef`]): list/describe/validate `ArchDef` JSON
+//!   definitions (builtin catalogue: ambit, simdram, imply, plim, felix,
+//!   plus the Table-1 pair and its DSL twins) and write the
+//!   cross-architecture `BENCH_archspace.json` experiment.
 //! * `serve [--jobs N] [--listen ADDR]` — long-running JSONL daemon:
 //!   one request per line, responses streamed in input order while
 //!   executing concurrently on one warm two-tier cache. Default
@@ -77,6 +83,8 @@ USAGE:
   convpim validate [--rows N] [--seed N]
   convpim opt [--set memristive|dram|both] [--ops add,mul]
               [--formats fixed8,fixed16,fp32] [--out FILE]
+  convpim arch [--describe NAME] [--validate FILE] [--validate-builtins]
+               [--bench] [--out FILE]
   convpim serve [--jobs N] [--no-cache] [--cache-dir DIR] [--mem-cache N]
                 [--listen HOST:PORT [--queue N]]
   convpim loadgen [--addr HOST:PORT] [--clients N,N,...] [--requests N]
@@ -124,7 +132,7 @@ thread pool — outputs are byte-identical at any worker count. Every
 output is verified bit-exactly against a host reference, per-layer MAC
 costs are cross-checked against the analytic CNN model, and inter-layer
 data movement (staging cycles and bits) is reported as its own cost
-bucket next to compute. MODEL is alexnet or lenet. Exits nonzero if any
+bucket next to compute. MODEL is alexnet, lenet or vgg. Exits nonzero if any
 cell fails verification. See docs/EXPERIMENTS.md NET-EXEC.
 
 `compare` evaluates ONE workload across N evaluation backends side by
@@ -151,6 +159,19 @@ rule set) plus the derived cycles-per-MAC deltas that drive the
 `pim-opt:*` backends, and writes the BENCH_microcode.json artifact
 (--out; schema: docs/EXPERIMENTS.md OPT).
 
+`arch` is the declarative architecture registry: with no flags it lists
+every registered ArchDef (the digital-PIM design space the pim:*
+backends accept as SET names); --describe NAME prints one definition as
+canonical JSON plus its derived max-power; --validate FILE parses an
+ArchDef JSON document, checks its opcode vocabulary against its logic
+family, registers it for this process and proves its compiled fixed8
+add/mul microcode bit-exact on the crossbar simulator;
+--validate-builtins runs the same proof over the whole builtin
+catalogue; --bench evaluates every registered architecture analytically
+on cnn-alexnet and writes the per-architecture cycles-per-MAC /
+throughput artifact (--out, default BENCH_archspace.json; JSON schema:
+docs/EXPERIMENTS.md ARCH).
+
 `serve` reads one request JSON per line and answers one response JSON
 per line, in input order, while executing concurrently — pipelined
 clients share one warm cache and one pool. A malformed line gets a
@@ -176,9 +197,9 @@ instead. Exits nonzero (after writing) if any level degenerates.
 
 EXPERIMENTS: table1 fig3 fig4 fig5 fig6 fig7 fig8 sens-gpu sens-fp16 sens-dims conv-exec
 SWEEP CAMPAIGNS (builtin): fig4 fig5 sens-dims conv-exec net-exec
-BACKENDS: pim:memristive pim:dram pim-opt:memristive pim-opt:dram
-          pim-exec:memristive pim-exec:dram
-          pim-exec-net:memristive pim-exec-net:dram
+BACKENDS: {pim,pim-opt,pim-exec,pim-exec-net}:SET[@RxC]
+          SET: memristive dram or any `convpim arch` name
+               (nor simdram ambit imply plim felix ...)
           gpu:{a6000,a100,v100,rtx3090}:{experimental,theoretical}[:fp32|fp16|fp16-tensor]
 ";
 
@@ -202,6 +223,7 @@ fn main() -> ExitCode {
         "compare" => cmd_compare(&args),
         "validate" => cmd_validate(&args),
         "opt" => cmd_opt(&args),
+        "arch" => cmd_arch(&args),
         "serve" => cmd_serve(&args),
         "loadgen" => cmd_loadgen(&args),
         "info" => cmd_info(),
@@ -634,13 +656,10 @@ fn cmd_opt(args: &Args) -> anyhow::Result<()> {
     use convpim::synth;
     use convpim::util::json::Json;
 
-    // Short registry-style key ("memristive"/"dram"), distinct from the
-    // display name GateSet::name() returns.
+    // Short registry-style key ("memristive"/"dram"/an archdef name),
+    // distinct from the display name GateSet::name() returns.
     fn set_key(set: GateSet) -> &'static str {
-        match set {
-            GateSet::MemristiveNor => "memristive",
-            GateSet::DramMaj => "dram",
-        }
+        set.key_name()
     }
 
     let set_name = args.flag("set", "both");
@@ -784,6 +803,197 @@ fn cmd_opt(args: &Args) -> anyhow::Result<()> {
     std::fs::write(&out, format!("{}\n", doc.pretty()))
         .with_context(|| format!("writing {}", out.display()))?;
     eprintln!("opt: wrote {}", out.display());
+    Ok(())
+}
+
+/// The declarative architecture registry: list / describe / validate
+/// `ArchDef` JSON definitions and write the cross-architecture
+/// `BENCH_archspace.json` experiment.
+fn cmd_arch(args: &Args) -> anyhow::Result<()> {
+    use convpim::archdef::{self, ArchDef};
+    use convpim::backend::{self, Backend as _};
+    use convpim::pim::gates::{GateSet, LogicFamily};
+    use convpim::pim::matpim::{scalar_costs, NumFmt};
+    use convpim::util::json::Json;
+
+    // Registered sets in report order: the builtin catalogue first, then
+    // anything registered later this process, alphabetically.
+    fn registered() -> Vec<&'static str> {
+        let mut names: Vec<&'static str> =
+            archdef::builtins().iter().map(|d| d.name.as_str()).collect();
+        for name in archdef::names() {
+            let interned = archdef::def_named(&name).expect("registered name").name.as_str();
+            if !names.contains(&interned) {
+                names.push(interned);
+            }
+        }
+        names
+    }
+
+    fn family_name(family: LogicFamily) -> &'static str {
+        match family {
+            LogicFamily::Nor => "nor",
+            LogicFamily::Maj => "maj",
+        }
+    }
+
+    // Prove a definition's compiled microcode bit-exact on the crossbar
+    // simulator: fixed8 add (wrapping) and mul (full product) against
+    // host arithmetic, over deterministic seeded operands.
+    fn oracle_check(set: GateSet) -> anyhow::Result<()> {
+        use convpim::pim::fixed::{self, FixedLayout, FixedOp};
+        use convpim::pim::xbar::Crossbar;
+        use convpim::util::rng::Rng;
+        let mut rng = Rng::new(0xA12C);
+        let n = 8u32;
+        let rows = 96usize;
+        let u = rng.vec_bits(rows, n);
+        let v = rng.vec_bits(rows, n);
+        for op in [FixedOp::Add, FixedOp::Mul] {
+            let lay = FixedLayout::new(op, n);
+            let prog = fixed::program(op, n, set);
+            prog.validate_for(set)
+                .map_err(|e| anyhow::Error::msg(format!("{}: {e}", set.key_name())))?;
+            let mut x = Crossbar::new(rows, prog.width() as usize);
+            fixed::load_operands(&mut x, &lay, &u, &v);
+            x.execute(&prog);
+            let z = fixed::read_result(&x, &lay, rows);
+            for i in 0..rows {
+                let expect = match op {
+                    FixedOp::Add => u[i].wrapping_add(v[i]) & 0xFF,
+                    _ => u[i] * v[i],
+                };
+                anyhow::ensure!(
+                    z[i] == expect,
+                    "{} {op:?}: row {i} executed {} but host arithmetic says {expect}",
+                    set.key_name(),
+                    z[i]
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn describe(def: &ArchDef) -> String {
+        format!(
+            "{} ({}-family, {}x{} @ {:.1} MHz, {:.1} fJ/gate, {:.0} W{})",
+            def.display,
+            family_name(def.family),
+            def.rows,
+            def.cols,
+            def.clock_hz / 1e6,
+            def.costs.gate_energy_j * 1e15,
+            def.resolved_max_power_w(),
+            if def.max_power_w.is_some() { "" } else { " derived" },
+        )
+    }
+
+    if let Some(name) = args.flag_opt("describe") {
+        let def = archdef::def_named(name).ok_or_else(|| {
+            anyhow::Error::msg(format!(
+                "unknown architecture `{name}` (registered: {})",
+                archdef::names().join(", ")
+            ))
+        })?;
+        println!("{}", def.to_json().pretty());
+        eprintln!("arch {}: {}", def.name, describe(def));
+        return Ok(());
+    }
+
+    if let Some(file) = args.flag_opt("validate") {
+        let text = std::fs::read_to_string(file).with_context(|| format!("reading {file}"))?;
+        let def = ArchDef::from_json_text(&text).with_context(|| format!("validating {file}"))?;
+        let interned = archdef::register(def)?;
+        let set = archdef::lookup(&interned.name).expect("just registered");
+        oracle_check(set)?;
+        println!(
+            "arch {}: valid — {}; fixed8 add/mul bit-exact on the crossbar simulator",
+            interned.name,
+            describe(interned)
+        );
+        return Ok(());
+    }
+
+    if args.switch("validate-builtins") {
+        for name in registered() {
+            let def = archdef::def_named(name).expect("registered");
+            def.validate()
+                .with_context(|| format!("builtin `{name}` failed structural validation"))?;
+            let set = archdef::lookup(name).expect("registered");
+            oracle_check(set)?;
+            println!("arch {name}: valid — {}; fixed8 add/mul bit-exact", describe(def));
+        }
+        return Ok(());
+    }
+
+    if args.switch("bench") {
+        let out: PathBuf = args.flag("out", "BENCH_archspace.json").into();
+        let workload = WorkloadSpec::from_name("cnn-alexnet").expect("builtin workload");
+        let fmts = [NumFmt::Fixed(8), NumFmt::Float(convpim::pim::softfloat::Format::FP32)];
+        println!("architecture design space — analytic cnn-alexnet, per-MAC microcode costs");
+        println!();
+        println!(
+            "{:<12} {:<4} {:<8} {:>10} {:>10} {:>12} {:>12}",
+            "arch", "fam", "fmt", "mac cyc", "mac gates", "img/s", "img/s/W"
+        );
+        let mut rows = Vec::new();
+        for name in registered() {
+            let def = archdef::def_named(name).expect("registered");
+            let set = archdef::lookup(name).expect("registered");
+            let mut fmt_rows = Vec::new();
+            for &fmt in &fmts {
+                let c = scalar_costs(fmt, set);
+                let mac_cycles = c.mul_cycles + c.add_cycles;
+                let mac_gates = c.mul_gates + c.add_gates;
+                let est = backend::parse(&format!("pim:{name}"))?.evaluate(&workload, fmt)?;
+                println!(
+                    "{:<12} {:<4} {:<8} {:>10} {:>10} {:>12.3e} {:>12.3e}",
+                    name,
+                    family_name(def.family),
+                    fmt.name(),
+                    mac_cycles,
+                    mac_gates,
+                    est.throughput,
+                    est.per_watt
+                );
+                fmt_rows.push(Json::obj(vec![
+                    ("fmt", Json::s(fmt.name())),
+                    ("mac_cycles", Json::i(mac_cycles as i64)),
+                    ("mac_gates", Json::i(mac_gates as i64)),
+                    ("throughput", Json::n(est.throughput)),
+                    ("per_watt", Json::n(est.per_watt)),
+                ]));
+            }
+            rows.push(Json::obj(vec![
+                ("arch", Json::s(name)),
+                ("family", Json::s(family_name(def.family))),
+                ("rows", Json::i(def.rows as i64)),
+                ("cols", Json::i(def.cols as i64)),
+                ("clock_hz", Json::n(def.clock_hz)),
+                ("gate_energy_j", Json::n(def.costs.gate_energy_j)),
+                ("max_power_w", Json::n(def.resolved_max_power_w())),
+                ("fmts", Json::arr(fmt_rows)),
+            ]));
+        }
+        let doc = Json::obj(vec![
+            ("bench", Json::s("archspace")),
+            ("schema", Json::i(1)),
+            ("workload", Json::s(workload.name())),
+            ("archs", Json::arr(rows)),
+        ]);
+        std::fs::write(&out, format!("{}\n", doc.pretty()))
+            .with_context(|| format!("writing {}", out.display()))?;
+        eprintln!("arch: wrote {}", out.display());
+        return Ok(());
+    }
+
+    println!("registered architectures (usable as SET in pim:*/pim-opt:*/pim-exec:* ids):");
+    println!();
+    for name in registered() {
+        let def = archdef::def_named(name).expect("registered");
+        println!("  {:<12} {}", name, describe(def));
+        println!("  {:<12}   {}", "", def.provenance);
+    }
     Ok(())
 }
 

@@ -15,7 +15,7 @@
 //! any internal temporaries. Callers free words they no longer need via
 //! [`Builder::free_word`] to keep the live-column footprint small.
 
-use super::gates::GateSet;
+use super::gates::{GateSet, LogicFamily};
 use super::isa::{Col, Instr, Program};
 
 /// Microcode builder for one gate set.
@@ -129,9 +129,9 @@ impl Builder {
     /// Emit `out = !(a | b)` into a fresh column.
     fn raw_nor(&mut self, a: Col, b: Col) -> Col {
         let out = self.alloc();
-        match self.set {
-            GateSet::MemristiveNor => self.prog.push(Instr::Nor2 { a, b, out }),
-            GateSet::DramMaj => {
+        match self.set.family() {
+            LogicFamily::Nor => self.prog.push(Instr::Nor2 { a, b, out }),
+            LogicFamily::Maj => {
                 // or = maj(a, b, 1), then negate.
                 let one = self.one();
                 let t = self.alloc();
@@ -162,14 +162,14 @@ impl Builder {
 
     /// `a | b`.
     pub fn or(&mut self, a: Col, b: Col) -> Col {
-        match self.set {
-            GateSet::MemristiveNor => {
+        match self.set.family() {
+            LogicFamily::Nor => {
                 let t = self.raw_nor(a, b);
                 let out = self.not(t);
                 self.free(t);
                 out
             }
-            GateSet::DramMaj => {
+            LogicFamily::Maj => {
                 let one = self.one();
                 let out = self.alloc();
                 self.prog.push(Instr::Maj3 { a, b, c: one, out });
@@ -180,15 +180,15 @@ impl Builder {
 
     /// `a | b | c`.
     pub fn or3(&mut self, a: Col, b: Col, c: Col) -> Col {
-        match self.set {
-            GateSet::MemristiveNor => {
+        match self.set.family() {
+            LogicFamily::Nor => {
                 let t = self.alloc();
                 self.prog.push(Instr::Nor3 { a, b, c, out: t });
                 let out = self.not(t);
                 self.free(t);
                 out
             }
-            GateSet::DramMaj => {
+            LogicFamily::Maj => {
                 let ab = self.or(a, b);
                 let out = self.or(ab, c);
                 self.free(ab);
@@ -199,8 +199,8 @@ impl Builder {
 
     /// `a & b`.
     pub fn and(&mut self, a: Col, b: Col) -> Col {
-        match self.set {
-            GateSet::MemristiveNor => {
+        match self.set.family() {
+            LogicFamily::Nor => {
                 let na = self.not(a);
                 let nb = self.not(b);
                 let out = self.raw_nor(na, nb);
@@ -208,7 +208,7 @@ impl Builder {
                 self.free(nb);
                 out
             }
-            GateSet::DramMaj => {
+            LogicFamily::Maj => {
                 let zero = self.zero();
                 let out = self.alloc();
                 self.prog.push(Instr::Maj3 { a, b, c: zero, out });
@@ -219,14 +219,14 @@ impl Builder {
 
     /// `a & !b` (common in masking logic; saves one NOT on the NOR set).
     pub fn and_not(&mut self, a: Col, b: Col) -> Col {
-        match self.set {
-            GateSet::MemristiveNor => {
+        match self.set.family() {
+            LogicFamily::Nor => {
                 let na = self.not(a);
                 let out = self.raw_nor(na, b);
                 self.free(na);
                 out
             }
-            GateSet::DramMaj => {
+            LogicFamily::Maj => {
                 let nb = self.not(b);
                 let out = self.and(a, nb);
                 self.free(nb);
@@ -237,8 +237,8 @@ impl Builder {
 
     /// `a ^ b` via the shared-NOR pattern (5 gates on the NOR set).
     pub fn xor(&mut self, a: Col, b: Col) -> Col {
-        match self.set {
-            GateSet::MemristiveNor => {
+        match self.set.family() {
+            LogicFamily::Nor => {
                 let t1 = self.raw_nor(a, b);
                 let t2 = self.raw_nor(a, t1);
                 let t3 = self.raw_nor(b, t1);
@@ -250,7 +250,7 @@ impl Builder {
                 self.free(xnor);
                 out
             }
-            GateSet::DramMaj => {
+            LogicFamily::Maj => {
                 // sum output of a MAJ full adder with carry-in 0:
                 // and = maj(a,b,0); or = maj(a,b,1); xor = or & !and.
                 let andv = self.and(a, b);
@@ -265,8 +265,8 @@ impl Builder {
 
     /// `!(a ^ b)` (4 gates on the NOR set).
     pub fn xnor(&mut self, a: Col, b: Col) -> Col {
-        match self.set {
-            GateSet::MemristiveNor => {
+        match self.set.family() {
+            LogicFamily::Nor => {
                 let t1 = self.raw_nor(a, b);
                 let t2 = self.raw_nor(a, t1);
                 let t3 = self.raw_nor(b, t1);
@@ -276,7 +276,7 @@ impl Builder {
                 self.free(t3);
                 out
             }
-            GateSet::DramMaj => {
+            LogicFamily::Maj => {
                 let x = self.xor(a, b);
                 let out = self.not(x);
                 self.free(x);
@@ -287,13 +287,13 @@ impl Builder {
 
     /// Majority of three.
     pub fn maj(&mut self, a: Col, b: Col, c: Col) -> Col {
-        match self.set {
-            GateSet::DramMaj => {
+        match self.set.family() {
+            LogicFamily::Maj => {
                 let out = self.alloc();
                 self.prog.push(Instr::Maj3 { a, b, c, out });
                 out
             }
-            GateSet::MemristiveNor => {
+            LogicFamily::Nor => {
                 // !maj = nor(nor(a,b), and-ish): maj = (a&b) | c&(a|b);
                 // use the full-adder carry construction: g1 = nor(a,b);
                 // g4 = xnor(a,b); g5 = nor(g4,c); cout = nor(g1,g5).
@@ -312,8 +312,8 @@ impl Builder {
     /// `s ? a : b` given a precomputed `ns = !s` (3 gates on the NOR set:
     /// `nor(nor(s,b), nor(ns,a))`).
     pub fn mux_with_ns(&mut self, s: Col, ns: Col, a: Col, b: Col) -> Col {
-        match self.set {
-            GateSet::MemristiveNor => {
+        match self.set.family() {
+            LogicFamily::Nor => {
                 let t1 = self.raw_nor(s, b); // !s & !b
                 let t2 = self.raw_nor(ns, a); // s & !a
                 let out = self.raw_nor(t1, t2); // (s -> a) & (!s -> b)
@@ -321,7 +321,7 @@ impl Builder {
                 self.free(t2);
                 out
             }
-            GateSet::DramMaj => {
+            LogicFamily::Maj => {
                 let sa = self.and(s, a);
                 let nsb = self.and(ns, b);
                 let out = self.or(sa, nsb);
@@ -378,8 +378,8 @@ impl Builder {
         c: Col,
         sum_into: &mut Option<Col>,
     ) -> (Col, Col) {
-        match self.set {
-            GateSet::MemristiveNor => {
+        match self.set.family() {
+            LogicFamily::Nor => {
                 let g1 = self.raw_nor(a, b);
                 let g2 = self.raw_nor(a, g1);
                 let g3 = self.raw_nor(b, g1);
@@ -404,7 +404,7 @@ impl Builder {
                 self.free(g7);
                 (sum, cout)
             }
-            GateSet::DramMaj => {
+            LogicFamily::Maj => {
                 let cout = self.maj(a, b, c);
                 let nc = self.not(c);
                 let x = self.maj(a, b, nc);
@@ -523,13 +523,13 @@ impl Builder {
     /// Copy a column into an explicit destination (2 NOTs on NOR set, AAP
     /// copy on DRAM).
     pub fn copy_into(&mut self, src: Col, dst: Col) {
-        match self.set {
-            GateSet::MemristiveNor => {
+        match self.set.family() {
+            LogicFamily::Nor => {
                 let t = self.not(src);
                 self.prog.push(Instr::Not { a: t, out: dst });
                 self.free(t);
             }
-            GateSet::DramMaj => {
+            LogicFamily::Maj => {
                 self.prog.push(Instr::Copy { a: src, out: dst });
             }
         }
@@ -544,9 +544,9 @@ impl Builder {
         assert!(n > 0 && m > 0);
         let mut out: Vec<Col> = Vec::with_capacity(n + m);
         // Complement of `a` shared across partial products (NOR set only).
-        let na: Option<Vec<Col>> = match self.set {
-            GateSet::MemristiveNor => Some(a.iter().map(|&c| self.not(c)).collect()),
-            GateSet::DramMaj => None,
+        let na: Option<Vec<Col>> = match self.set.family() {
+            LogicFamily::Nor => Some(a.iter().map(|&c| self.not(c)).collect()),
+            LogicFamily::Maj => None,
         };
         let pp_row = |bld: &mut Builder, bi: Col| -> Vec<Col> {
             match &na {

@@ -68,7 +68,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use anyhow::Result;
 
 use super::fixed::FixedOp;
-use super::gates::GateSet;
+use super::gates::{GateSet, LogicFamily};
 use super::isa::{Col, Instr, Program};
 use super::matpim::NumFmt;
 use super::softfloat;
@@ -179,12 +179,12 @@ impl ConvProgram {
 /// `Copy` on DRAM.
 pub(crate) fn emit_move(prog: &mut Program, set: GateSet, tmp: Col, src: Col, dst: Col) {
     debug_assert!(src != dst && src != tmp && dst != tmp);
-    match set {
-        GateSet::MemristiveNor => {
+    match set.family() {
+        LogicFamily::Nor => {
             prog.push(Instr::Not { a: src, out: tmp });
             prog.push(Instr::Not { a: tmp, out: dst });
         }
-        GateSet::DramMaj => {
+        LogicFamily::Maj => {
             prog.push(Instr::Copy { a: src, out: dst });
         }
     }

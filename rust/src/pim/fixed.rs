@@ -19,7 +19,7 @@
 //! there is no trap path in a PIM array).
 
 use super::builder::Builder;
-use super::gates::GateSet;
+use super::gates::{GateSet, LogicFamily};
 use super::isa::{Col, Program};
 use super::xbar::Crossbar;
 
@@ -148,9 +148,9 @@ pub fn mul_program(n: u32, set: GateSet) -> Program {
     // Partial-product helper: pp_j = u_j & v_i; on the NOR set uses the
     // shared complement of u (precomputed once) and of v_i (once per
     // iteration) so each AND is a single NOR gate.
-    let nu: Option<Vec<Col>> = match set {
-        GateSet::MemristiveNor => Some(u.iter().map(|&c| b.not(c)).collect()),
-        GateSet::DramMaj => None,
+    let nu: Option<Vec<Col>> = match set.family() {
+        LogicFamily::Nor => Some(u.iter().map(|&c| b.not(c)).collect()),
+        LogicFamily::Maj => None,
     };
     let gen_pp = |b: &mut Builder, nu: &Option<Vec<Col>>, vi: Col, j: usize, u: &[Col]| -> Col {
         match nu {
@@ -165,9 +165,9 @@ pub fn mul_program(n: u32, set: GateSet) -> Program {
     // Iteration 0: product bit 0 and the initial accumulator. On the NOR
     // set the per-iteration operand is the *complement* of v_i; on the
     // DRAM set it is v_i itself (no copy needed).
-    let vi0 = match set {
-        GateSet::MemristiveNor => b.not(v[0]),
-        GateSet::DramMaj => v[0],
+    let vi0 = match set.family() {
+        LogicFamily::Nor => b.not(v[0]),
+        LogicFamily::Maj => v[0],
     };
     let mut acc: Vec<Col> = Vec::with_capacity(nn);
     for j in 0..nn {
@@ -179,7 +179,7 @@ pub fn mul_program(n: u32, set: GateSet) -> Program {
             acc.push(pp);
         }
     }
-    if set == GateSet::MemristiveNor {
+    if set.family() == LogicFamily::Nor {
         b.free(vi0);
     }
     // Top accumulator bit is zero after iteration 0.
@@ -189,12 +189,12 @@ pub fn mul_program(n: u32, set: GateSet) -> Program {
 
     // Iterations 1..n: acc(+n bits) += pp; finalized bit i goes to z[i].
     for i in 1..nn {
-        let vi = match set {
-            GateSet::MemristiveNor => b.not(v[i]),
-            GateSet::DramMaj => v[i],
+        let vi = match set.family() {
+            LogicFamily::Nor => b.not(v[i]),
+            LogicFamily::Maj => v[i],
         };
         let pp: Vec<Col> = (0..nn).map(|j| gen_pp(&mut b, &nu, vi, j, &u)).collect();
-        if set == GateSet::MemristiveNor {
+        if set.family() == LogicFamily::Nor {
             b.free(vi);
         }
         let last = i == nn - 1;

@@ -19,14 +19,72 @@
 //! ⇒ 233 TOPS at 48 GB / 333 MHz, matching Figure 3; the DRAM MAJ/NOT
 //! full adder (3 MAJ + 2 NOT) at the costs below lands at the ~575-cycle
 //! 32-bit addition the paper's 0.35 TOPS implies.
+//!
+//! Beyond the paper's pair, [`GateSet::Arch`] points at a declarative
+//! [`crate::archdef::ArchDef`] — the same cost-model surface
+//! (costs/dims/clock/power) backed by data instead of a `match`, which is
+//! how `pim:ambit`, `pim:imply`, `pim:felix`, … enter every downstream
+//! model. Code that shapes *programs* (builder, validator, optimizer
+//! rules) dispatches on [`LogicFamily`], never on the concrete variant,
+//! so any definition compiles and executes bit-exactly.
+
+use crate::archdef::ArchDef;
+
+/// Cycle-cost sentinel for opcodes a gate set cannot execute. Any program
+/// containing one prices beyond [`crate::synth::extract::INFEASIBLE`], so
+/// cost extraction refuses to select it and `validate_for` rejects it.
+pub const ILLEGAL_COST: u64 = u64::MAX / 4;
+
+/// The opcode vocabulary a gate set compiles to. This is what the
+/// microcode builder, program validator, and rewrite-rule selection
+/// dispatch on — two architectures of the same family differ only in
+/// costs, never in which programs are legal.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LogicFamily {
+    /// NOR-complete stateful logic (MAGIC, IMPLY, FELIX, …): NOR2/NOR3/NOT.
+    Nor,
+    /// In-DRAM majority logic (Ambit, SIMDRAM, PLiM, …): MAJ3/NOT/COPY.
+    Maj,
+}
 
 /// Which physical gate set a program targets.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+///
+/// `Eq`/`Hash`/`Debug` are hand-implemented over [`GateSet::key_name`]:
+/// arch definitions are interned (`&'static`), uniquely named, and carry
+/// `f64`s, so the name *is* the identity — which keeps `GateSet` a valid
+/// memoization key for the synth cache and sweep cache paths.
+#[derive(Clone, Copy)]
 pub enum GateSet {
     /// Memristive stateful logic (MAGIC NOR/NOT).
     MemristiveNor,
     /// In-DRAM majority/NOT (SIMDRAM-style).
     DramMaj,
+    /// A declaratively defined architecture (see [`crate::archdef`]).
+    Arch(&'static ArchDef),
+}
+
+impl PartialEq for GateSet {
+    fn eq(&self, other: &Self) -> bool {
+        self.key_name() == other.key_name()
+    }
+}
+
+impl Eq for GateSet {}
+
+impl std::hash::Hash for GateSet {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        self.key_name().hash(state);
+    }
+}
+
+impl std::fmt::Debug for GateSet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GateSet::MemristiveNor => write!(f, "MemristiveNor"),
+            GateSet::DramMaj => write!(f, "DramMaj"),
+            GateSet::Arch(d) => write!(f, "Arch({})", d.name),
+        }
+    }
 }
 
 /// Per-opcode cycle costs and per-row-gate energies for a gate set.
@@ -34,6 +92,10 @@ pub enum GateSet {
 pub struct GateCosts {
     /// Cycles for a two-input NOR (memristive: init + execute).
     pub nor2: u64,
+    /// Cycles for a three-input NOR (MAGIC executes it in the same
+    /// init+execute envelope as NOR2; serial families like IMPLY pay
+    /// extra implication steps).
+    pub nor3: u64,
     /// Cycles for a NOT.
     pub not: u64,
     /// Cycles for a majority-of-three (DRAM: row-copy AAPs + TRA).
@@ -56,8 +118,9 @@ impl GateSet {
             // MAGIC: every gate = 1 output-init cycle + 1 execution cycle.
             GateSet::MemristiveNor => GateCosts {
                 nor2: 2,
+                nor3: 2,
                 not: 2,
-                maj3: u64::MAX / 4, // illegal; validate_for catches it
+                maj3: ILLEGAL_COST, // illegal; validate_for catches it
                 copy: 4,            // built from two NOTs when needed
                 set: 1,
                 gate_energy_j: 6.4e-15,
@@ -67,7 +130,8 @@ impl GateSet {
             // the TRA group + the triple activation); NOT = 3 (AAP to the
             // dual-contact row and back); COPY = 2 (one AAP pair).
             GateSet::DramMaj => GateCosts {
-                nor2: u64::MAX / 4, // illegal
+                nor2: ILLEGAL_COST, // illegal
+                nor3: ILLEGAL_COST,
                 not: 3,
                 maj3: 4,
                 copy: 2,
@@ -75,30 +139,45 @@ impl GateSet {
                 gate_energy_j: 391e-15,
                 move_energy_j: 391e-15,
             },
+            GateSet::Arch(d) => d.costs,
         }
     }
 
-    /// Crossbar geometry (rows, cols) from Table 1.
+    /// The opcode vocabulary this set's programs are built from.
+    pub fn family(self) -> LogicFamily {
+        match self {
+            GateSet::MemristiveNor => LogicFamily::Nor,
+            GateSet::DramMaj => LogicFamily::Maj,
+            GateSet::Arch(d) => d.family,
+        }
+    }
+
+    /// Crossbar geometry (rows, cols) from Table 1 / the arch definition.
     pub fn crossbar_dims(self) -> (u64, u64) {
         match self {
             GateSet::MemristiveNor => (1024, 1024),
             GateSet::DramMaj => (65536, 1024),
+            GateSet::Arch(d) => (d.rows, d.cols),
         }
     }
 
-    /// Clock frequency in Hz from Table 1.
+    /// Clock frequency in Hz from Table 1 / the arch definition.
     pub fn clock_hz(self) -> f64 {
         match self {
             GateSet::MemristiveNor => 333e6,
             GateSet::DramMaj => 0.5e6,
+            GateSet::Arch(d) => d.clock_hz,
         }
     }
 
-    /// Max power in watts from Table 1 (full duty cycle at max parallelism).
+    /// Max power in watts from Table 1 (full duty cycle at max
+    /// parallelism); declarative archs either state it or derive it the
+    /// same way (see [`ArchDef::resolved_max_power_w`]).
     pub fn max_power_w(self) -> f64 {
         match self {
             GateSet::MemristiveNor => 860.0,
             GateSet::DramMaj => 80.0,
+            GateSet::Arch(d) => d.resolved_max_power_w(),
         }
     }
 
@@ -107,10 +186,22 @@ impl GateSet {
         match self {
             GateSet::MemristiveNor => "Memristive PIM",
             GateSet::DramMaj => "DRAM PIM",
+            GateSet::Arch(d) => &d.display,
         }
     }
 
-    /// Both gate sets, for sweeps.
+    /// Machine name: the backend-id segment (`pim:KEY`), the campaign
+    /// `arch.set` key, and the identity `Eq`/`Hash` reduce to. The legacy
+    /// pair keeps its pre-DSL keys; arch defs use their registry name.
+    pub fn key_name(self) -> &'static str {
+        match self {
+            GateSet::MemristiveNor => "memristive",
+            GateSet::DramMaj => "dram",
+            GateSet::Arch(d) => &d.name,
+        }
+    }
+
+    /// The paper's two gate sets, for sweeps over the published tables.
     pub fn all() -> [GateSet; 2] {
         [GateSet::MemristiveNor, GateSet::DramMaj]
     }
@@ -124,6 +215,7 @@ mod tests {
     fn memristive_gate_is_two_cycles() {
         let c = GateSet::MemristiveNor.costs();
         assert_eq!(c.nor2, 2);
+        assert_eq!(c.nor3, 2);
         assert_eq!(c.not, 2);
     }
 
@@ -148,5 +240,32 @@ mod tests {
         assert_eq!(GateSet::DramMaj.max_power_w(), 80.0);
         assert!((GateSet::MemristiveNor.costs().gate_energy_j - 6.4e-15).abs() < 1e-20);
         assert!((GateSet::DramMaj.costs().gate_energy_j - 391e-15).abs() < 1e-18);
+    }
+
+    #[test]
+    fn families_and_key_names() {
+        assert_eq!(GateSet::MemristiveNor.family(), LogicFamily::Nor);
+        assert_eq!(GateSet::DramMaj.family(), LogicFamily::Maj);
+        assert_eq!(GateSet::MemristiveNor.key_name(), "memristive");
+        assert_eq!(GateSet::DramMaj.key_name(), "dram");
+    }
+
+    #[test]
+    fn arch_identity_is_the_name() {
+        use std::collections::hash_map::DefaultHasher;
+        use std::hash::{Hash, Hasher};
+        let felix = crate::archdef::lookup("felix").unwrap();
+        let ambit = crate::archdef::lookup("ambit").unwrap();
+        assert_eq!(felix, crate::archdef::lookup("felix").unwrap());
+        assert_ne!(felix, ambit);
+        assert_ne!(felix, GateSet::MemristiveNor);
+        let h = |s: GateSet| {
+            let mut hasher = DefaultHasher::new();
+            s.hash(&mut hasher);
+            hasher.finish()
+        };
+        assert_eq!(h(felix), h(crate::archdef::lookup("felix").unwrap()));
+        assert_eq!(format!("{felix:?}"), "Arch(felix)");
+        assert_eq!(format!("{:?}", GateSet::DramMaj), "DramMaj");
     }
 }

@@ -11,7 +11,7 @@
 
 use std::sync::OnceLock;
 
-use super::gates::GateSet;
+use super::gates::{GateSet, LogicFamily};
 use super::lower::{self, Lowered};
 
 /// Index of a crossbar column.
@@ -274,7 +274,7 @@ impl Program {
     pub fn cycles_for(&self, gs: GateSet) -> u64 {
         let c = gs.costs();
         self.counts.nor2 * c.nor2
-            + self.counts.nor3 * c.nor2
+            + self.counts.nor3 * c.nor3
             + self.counts.not * c.not
             + self.counts.maj3 * c.maj3
             + self.counts.copy * c.copy
@@ -292,12 +292,16 @@ impl Program {
         rows as f64 * (gate_like * e.gate_energy_j + move_like * e.move_energy_j)
     }
 
-    /// Check that every opcode is legal for the target gate set.
+    /// Check that every opcode is legal for the target gate set. Legality
+    /// is a property of the set's [`LogicFamily`] — NOR-complete stateful
+    /// logic vs in-DRAM majority — so any declaratively defined
+    /// architecture validates exactly like the Table-1 set of its family.
     pub fn validate_for(&self, gs: GateSet) -> Result<(), String> {
+        let family = gs.family();
         for (i, instr) in self.instrs.iter().enumerate() {
             let ok = match instr {
-                Instr::Nor2 { .. } | Instr::Nor3 { .. } => gs == GateSet::MemristiveNor,
-                Instr::Maj3 { .. } | Instr::Copy { .. } => gs == GateSet::DramMaj,
+                Instr::Nor2 { .. } | Instr::Nor3 { .. } => family == LogicFamily::Nor,
+                Instr::Maj3 { .. } | Instr::Copy { .. } => family == LogicFamily::Maj,
                 Instr::Not { .. } | Instr::Set { .. } => true,
             };
             if !ok {

@@ -25,7 +25,7 @@ use std::sync::{Mutex, OnceLock};
 use super::arch::PimArch;
 use super::builder::Builder;
 use super::fixed::FixedOp;
-use super::gates::GateSet;
+use super::gates::{GateSet, LogicFamily};
 use super::isa::{Col, Program};
 use super::softfloat::Format;
 use super::xbar::Crossbar;
@@ -130,9 +130,9 @@ impl MatmulModel {
         let costs = set.costs();
         // Broadcast of one element: N bit-copies into the working field.
         let bcast_cycles = bits * costs.copy;
-        let bcast_gates = match set {
-            GateSet::MemristiveNor => 2 * bits, // copy = two NOTs
-            GateSet::DramMaj => 0,              // AAP copy is not a logic gate
+        let bcast_gates = match set.family() {
+            LogicFamily::Nor => 2 * bits, // copy = two NOTs
+            LogicFamily::Maj => 0,        // AAP copy is not a logic gate
         };
         let steps = n * n;
         let cycles = steps * (bcast_cycles + c.mul_cycles + c.add_cycles);

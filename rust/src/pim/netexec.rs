@@ -278,19 +278,52 @@ impl NetGraph {
         g
     }
 
+    /// VGG-16 (Simonyan & Zisserman's configuration D: thirteen 3×3 conv
+    /// layers in five blocks, five max-pools, three FC layers), down-scaled
+    /// with the same discipline as [`NetGraph::alexnet`]. The deepest
+    /// builtin graph — at scale 1 it carries the full 224×224 input; CI
+    /// executes it at an aggressive scale.
+    pub fn vgg(scale: u32) -> NetGraph {
+        let scale = scale.max(1);
+        let ch = |c: u32| (c / scale).max(1);
+        let sp = (224 / scale).max(1);
+        let mut g = NetGraph::new(&format!("vgg-s{scale}"), ch(3), sp, sp);
+        let blocks: [(&str, u32, u32); 5] = [
+            ("b1", 64, 2),
+            ("b2", 128, 2),
+            ("b3", 256, 3),
+            ("b4", 512, 3),
+            ("b5", 512, 3),
+        ];
+        for (name, cout, convs) in blocks {
+            for i in 1..=convs {
+                let layer = format!("{name}.c{i}");
+                g.conv(&layer, ch(cout), 3, 1, 1).relu(&format!("{layer}.relu"));
+            }
+            g.pool(&format!("{name}.pool"), 2, 2);
+        }
+        g.fc("fc6", ch(4096))
+            .relu("fc6.relu")
+            .fc("fc7", ch(4096))
+            .relu("fc7.relu")
+            .fc("fc8", ch(1000));
+        g
+    }
+
     /// Look up a model by name (the CLI/service selector). Only models
     /// with a full executable layer chain qualify.
     pub fn model(name: &str, scale: u32) -> Option<NetGraph> {
         match name {
             "alexnet" => Some(NetGraph::alexnet(scale)),
             "lenet" => Some(NetGraph::lenet(scale)),
+            "vgg" => Some(NetGraph::vgg(scale)),
             _ => None,
         }
     }
 
     /// Names accepted by [`NetGraph::model`].
     pub fn model_names() -> &'static [&'static str] {
-        &["alexnet", "lenet"]
+        &["alexnet", "lenet", "vgg"]
     }
 }
 
@@ -1254,10 +1287,54 @@ mod tests {
         for scale in [2, 8, 16, 32, 224, 1000] {
             let g = NetGraph::alexnet(scale);
             assert!(g.layers.iter().all(|l| l.out_elems() > 0), "scale {scale}");
-            assert_eq!(g.layers.len(), 19, "scale {scale}");
+            assert_eq!(g.layers.len(), 18, "scale {scale}");
         }
         assert!(NetGraph::model("alexnet", 16).is_some());
-        assert!(NetGraph::model("vgg", 16).is_none());
+        assert!(NetGraph::model("resnet", 16).is_none());
+    }
+
+    #[test]
+    fn vgg_graph_shapes() {
+        // Full-scale configuration D mirrors the paper's shape chain:
+        // five 2×2/s2 pools halve 224 down to 7, channels 64→512.
+        let g = NetGraph::vgg(1);
+        assert_eq!(g.input, (3, 224, 224));
+        assert_eq!(g.layers[0].out_shape, (64, 224, 224)); // b1.c1 (3×3 p1)
+        assert_eq!(g.layers[4].out_shape, (64, 112, 112)); // b1.pool
+        assert_eq!(g.layers[9].out_shape, (128, 56, 56)); // b2.pool
+        assert_eq!(g.layers[16].out_shape, (256, 28, 28)); // b3.pool
+        assert_eq!(g.layers[23].out_shape, (512, 14, 14)); // b4.pool
+        assert_eq!(g.layers[30].out_shape, (512, 7, 7)); // b5.pool
+        assert_eq!(g.shape(), (1000, 1, 1));
+        // Thirteen convs + three FCs carry MACs; 13 conv + 13 relu +
+        // 5 pool + 3 fc + 2 fc-relu = 36 layers.
+        assert_eq!(g.layers.len(), 36);
+        let macs = g.layers.iter().filter(|l| l.macs() > 0).count();
+        assert_eq!(macs, 16);
+        assert_eq!(g.layers.iter().filter(|l| l.kind() == "pool").count(), 5);
+        // Scaled graphs stay valid all the way down.
+        for scale in [2, 8, 16, 32, 224, 1000] {
+            let g = NetGraph::vgg(scale);
+            assert!(g.layers.iter().all(|l| l.out_elems() > 0), "scale {scale}");
+            assert_eq!(g.layers.len(), 36, "scale {scale}");
+        }
+        assert!(NetGraph::model("vgg", 16).is_some());
+    }
+
+    #[test]
+    fn vgg_scaled_bit_exact() {
+        // The deepest zoo entry is executable, not just a shape table: an
+        // aggressively scaled VGG runs end to end on the crossbar
+        // bit-identically to the host reference.
+        let g = NetGraph::vgg(56);
+        for set in GateSet::all() {
+            let fmt = NumFmt::Fixed(8);
+            let (inputs, weights) = seeded_net_operands(&g, fmt, 13, 1);
+            let run =
+                execute_net(&g, fmt, set, &inputs, &weights, &NetExecOpts::default()).unwrap();
+            let expect = reference_net(&g, fmt, &inputs[0], &weights);
+            assert_eq!(run.outputs[0], expect, "{set:?}");
+        }
     }
 
     #[test]
@@ -1286,7 +1363,7 @@ mod tests {
             assert_eq!(g.shape(), (10, 1, 1), "scale {scale}");
         }
         assert!(NetGraph::model("lenet", 16).is_some());
-        assert_eq!(NetGraph::model_names(), &["alexnet", "lenet"]);
+        assert_eq!(NetGraph::model_names(), &["alexnet", "lenet", "vgg"]);
     }
 
     #[test]

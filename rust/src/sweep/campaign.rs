@@ -65,12 +65,10 @@ impl ArchSpec {
         }
     }
 
-    /// Short technology name (`memristive` / `dram`).
+    /// Short technology name (`memristive` / `dram` / an archdef name
+    /// such as `felix`).
     pub fn set_name(set: GateSet) -> &'static str {
-        match set {
-            GateSet::MemristiveNor => "memristive",
-            GateSet::DramMaj => "dram",
-        }
+        set.key_name()
     }
 
     /// Display / lookup name: the technology, plus `@RxC` when explicit
@@ -94,11 +92,13 @@ impl ArchSpec {
 
     pub(crate) fn from_json(j: &Json) -> Result<ArchSpec> {
         let set = match j.get("set").and_then(Json::as_str) {
-            Some("memristive") => GateSet::MemristiveNor,
-            Some("dram") => GateSet::DramMaj,
-            other => anyhow::bail!(
-                "arch `set` must be `memristive` or `dram`, got {other:?}"
-            ),
+            Some(name) => crate::archdef::lookup(name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "arch `set` must be a registered architecture ({}), got {name:?}",
+                    crate::archdef::names().join("|")
+                )
+            })?,
+            None => anyhow::bail!("arch `set` must be a string architecture name"),
         };
         let rows = j.get("rows").map(|v| {
             v.as_u64()

@@ -1,11 +1,11 @@
 //! Cost extraction: pick the cheapest representative node per e-class.
 //!
 //! Costs mirror the accounting [`crate::pim::isa::Program`] already
-//! tracks — cycles from [`GateSet::costs`] (with `Nor3` charged at the
-//! `nor2` rate, exactly like `Program::cycles_for`) plus a logic-gate
-//! count as tie-break. Illegal opcodes (MAJ on memristive, NOR in DRAM)
-//! carry the same `u64::MAX / 4` sentinel the cost tables use, so a
-//! choice that would not validate can never beat a legal one.
+//! tracks — per-opcode cycles from [`GateSet::costs`], exactly like
+//! `Program::cycles_for` — plus a logic-gate count as tie-break. Illegal
+//! opcodes (MAJ in a NOR family, NOR in a MAJ family) carry the same
+//! [`crate::pim::gates::ILLEGAL_COST`] sentinel the cost tables use, so
+//! a choice that would not validate can never beat a legal one.
 //!
 //! Extraction is the usual bottom-up fixpoint (the same shape as the
 //! egg-netlist-synthesizer's cell-library extractor): a class's cost is
@@ -31,8 +31,8 @@ pub fn node_cost(set: GateSet, node: &Node) -> Cost {
         Node::Const(_) => (c.set, 0),
         Node::Var(_) => (0, 0),
         Node::Not(_) => (c.not, 1),
-        // cycles_for charges Nor3 at the nor2 rate: one wide gate.
-        Node::Nor2(_) | Node::Nor3(_) => (c.nor2, 1),
+        Node::Nor2(_) => (c.nor2, 1),
+        Node::Nor3(_) => (c.nor3, 1),
         Node::Maj3(_) => (c.maj3, 1),
     }
 }

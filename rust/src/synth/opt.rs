@@ -30,7 +30,7 @@ use anyhow::{bail, ensure, Result};
 
 use crate::pim::fixed::{FixedLayout, FixedOp};
 use crate::pim::float::FloatLayout;
-use crate::pim::gates::GateSet;
+use crate::pim::gates::{GateSet, LogicFamily};
 use crate::pim::isa::{Col, Instr, Program};
 use crate::pim::matpim::{NumFmt, ScalarCosts};
 use crate::pim::oracle::ScalarCrossbar;
@@ -180,9 +180,9 @@ impl Emitter {
     /// Copy `src` into `dst` with the gate set's legal movement ops
     /// (DRAM has a real row copy; memristive builds one from two NOTs).
     fn emit_copy(&mut self, src: Col, dst: Col) {
-        match self.set {
-            GateSet::DramMaj => self.prog.push(Instr::Copy { a: src, out: dst }),
-            GateSet::MemristiveNor => {
+        match self.set.family() {
+            LogicFamily::Maj => self.prog.push(Instr::Copy { a: src, out: dst }),
+            LogicFamily::Nor => {
                 let tmp = self.alloc();
                 self.prog.push(Instr::Not { a: src, out: tmp });
                 self.prog.push(Instr::Not { a: tmp, out: dst });
@@ -536,14 +536,14 @@ mod tests {
             let a = pick(rng, out);
             let b = pick(rng, out);
             let c = pick(rng, out);
-            match set {
-                GateSet::MemristiveNor => match rng.below(4) {
+            match set.family() {
+                LogicFamily::Nor => match rng.below(4) {
                     0 => p.push(Instr::Not { a, out }),
                     1 => p.push(Instr::Nor2 { a, b, out }),
                     2 => p.push(Instr::Nor3 { a, b, c, out }),
                     _ => p.push(Instr::Set { out, bit: rng.bool() }),
                 },
-                GateSet::DramMaj => match rng.below(4) {
+                LogicFamily::Maj => match rng.below(4) {
                     0 => p.push(Instr::Not { a, out }),
                     1 => p.push(Instr::Maj3 { a, b, c, out }),
                     2 => p.push(Instr::Copy { a, out }),

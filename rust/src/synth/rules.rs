@@ -9,7 +9,7 @@
 //! tests, and whole-program equivalence is re-proven downstream on the
 //! scalar crossbar by [`crate::synth::opt`].
 
-use crate::pim::gates::GateSet;
+use crate::pim::gates::{GateSet, LogicFamily};
 use crate::synth::egraph::{ClassIndex, EGraph, Id, Node};
 
 /// A term template produced by a rule: references to existing classes
@@ -251,9 +251,9 @@ const MAJ_RULES: &[Rule] = &[
 
 /// The rule set legal for a gate set's operator vocabulary.
 pub fn for_set(set: GateSet) -> &'static [Rule] {
-    match set {
-        GateSet::MemristiveNor => NOR_RULES,
-        GateSet::DramMaj => MAJ_RULES,
+    match set.family() {
+        LogicFamily::Nor => NOR_RULES,
+        LogicFamily::Maj => MAJ_RULES,
     }
 }
 

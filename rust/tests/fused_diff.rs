@@ -16,7 +16,7 @@
 
 use convpim::pim::fixed::{self, FixedLayout, FixedOp};
 use convpim::pim::float::{self, FloatLayout};
-use convpim::pim::gates::GateSet;
+use convpim::pim::gates::{GateSet, LogicFamily};
 use convpim::pim::oracle::ScalarCrossbar;
 use convpim::pim::softfloat::Format;
 use convpim::pim::{Col, Crossbar, Instr, Program};
@@ -90,8 +90,8 @@ fn random_program(rng: &mut Rng, set: GateSet, cols: Col, len: usize) -> Program
         let b = pick(rng, &[a]);
         let c = pick(rng, &[a, b]);
         let out = pick(rng, &[a, b, c]);
-        match set {
-            GateSet::MemristiveNor => match roll {
+        match set.family() {
+            LogicFamily::Nor => match roll {
                 // Fusable OR idiom: NOR2 then NOT of its result.
                 0 | 1 => {
                     p.push(Instr::Nor2 { a, b, out: c });
@@ -118,7 +118,7 @@ fn random_program(rng: &mut Rng, set: GateSet, cols: Col, len: usize) -> Program
                 7 => p.push(Instr::Nor3 { a, b, c, out }),
                 _ => p.push(Instr::Nor2 { a, b, out }),
             },
-            GateSet::DramMaj => match roll {
+            LogicFamily::Maj => match roll {
                 // Fusable DRAM-NOR idiom: MAJ3 then NOT of its result.
                 0 | 1 | 2 => {
                     p.push(Instr::Maj3 { a, b, c, out });

@@ -18,7 +18,7 @@
 use convpim::pim::conv;
 use convpim::pim::fixed::{FixedLayout, FixedOp};
 use convpim::pim::float::FloatLayout;
-use convpim::pim::gates::GateSet;
+use convpim::pim::gates::{GateSet, LogicFamily};
 use convpim::pim::matpim::NumFmt;
 use convpim::pim::oracle::ScalarCrossbar;
 use convpim::pim::softfloat::Format;
@@ -148,13 +148,13 @@ fn random_program(rng: &mut Rng, set: GateSet, cols: Col, len: usize) -> Program
         let b = pick(rng, &[a]);
         let c = pick(rng, &[a, b]);
         let out = pick(rng, &[a, b, c]);
-        match (set, rng.below(8)) {
+        match (set.family(), rng.below(8)) {
             (_, 0) => p.push(Instr::Set { out, bit: rng.bool() }),
             (_, 1 | 2) => p.push(Instr::Not { a, out }),
-            (GateSet::MemristiveNor, 3 | 4) => p.push(Instr::Nor3 { a, b, c, out }),
-            (GateSet::MemristiveNor, _) => p.push(Instr::Nor2 { a, b, out }),
-            (GateSet::DramMaj, 3) => p.push(Instr::Copy { a, out }),
-            (GateSet::DramMaj, _) => p.push(Instr::Maj3 { a, b, c, out }),
+            (LogicFamily::Nor, 3 | 4) => p.push(Instr::Nor3 { a, b, c, out }),
+            (LogicFamily::Nor, _) => p.push(Instr::Nor2 { a, b, out }),
+            (LogicFamily::Maj, 3) => p.push(Instr::Copy { a, out }),
+            (LogicFamily::Maj, _) => p.push(Instr::Maj3 { a, b, c, out }),
         }
     }
     p.validate_for(set).unwrap();
